@@ -1,0 +1,87 @@
+//! Pack the full-size quantized ResNet-50 — the paper's largest experiment
+//! (§V, Table IV rows RN50-*): per-SLR inter-layer packing on Alveo,
+//! engine comparison, and the resulting required memory frequency.
+//!
+//! Run: `cargo run --release --example pack_resnet50 -- [generations]`
+
+use fcmp::device::{alveo_u250, alveo_u280};
+use fcmp::memory;
+use fcmp::nn::resnet50;
+use fcmp::packing::{anneal::Anneal, ffd::Ffd, ga, run_packer, Constraints, Packer};
+use fcmp::report::pack_network;
+
+fn main() {
+    let generations: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+
+    let net = resnet50(1);
+    let u250 = alveo_u250();
+    println!(
+        "{}: {} packable conv layers, {:.1}M resblock weights",
+        net.name,
+        net.packable_layers().len(),
+        net.packable_layers().iter().map(|l| l.params()).sum::<u64>() as f64 / 1e6
+    );
+
+    // buffers + column slices with the Fig. 5 SLR floorplan
+    let bufs = memory::weight_buffers(&net, u250.slrs.len());
+    let items = memory::all_columns(&bufs);
+    let baseline = memory::direct_brams(&bufs);
+    println!(
+        "baseline: {} buffers -> {} column slices -> {} BRAM18 (E={:.1}%)",
+        bufs.len(),
+        items.len(),
+        baseline,
+        100.0 * memory::efficiency(memory::total_bits(&bufs), baseline)
+    );
+
+    // engine comparison at H_B = 4 (the paper's preferred setting)
+    let c = Constraints::new(4, true);
+    let engines: Vec<(&str, Box<dyn Packer>)> = vec![
+        ("ffd", Box::new(Ffd::new())),
+        ("anneal", Box::new(Anneal::default())),
+        (
+            "ga[18]",
+            Box::new(ga::Ga::new(ga::GaParams { generations, ..ga::GaParams::rn50() })),
+        ),
+    ];
+    for (name, engine) in &engines {
+        let (_, r) = run_packer(engine.as_ref(), &items, &c);
+        println!(
+            "  {name:>7}: {} BRAM18  E={:.1}%  (max height {}, {:.2?})",
+            r.brams,
+            100.0 * r.efficiency,
+            r.max_height,
+            r.elapsed
+        );
+    }
+
+    // P3 vs P4 trade-off (Table IV + the R_F requirement of Eq. 2)
+    for hb in [3usize, 4] {
+        let ga_engine =
+            ga::Ga::new(ga::GaParams { generations, ..ga::GaParams::rn50() });
+        let out = pack_network(&net, &u250, &ga_engine, hb);
+        println!(
+            "U250 P{hb}: {} BRAM18, E={:.1}%, logic {:.1} kLUT, needs R_F >= {:.1} (F_mem >= {:.0} MHz)",
+            out.report.brams,
+            100.0 * out.report.efficiency,
+            out.logic_kluts,
+            hb as f64 / 2.0,
+            u250.nominal_compute_mhz * hb as f64 / 2.0,
+        );
+    }
+
+    // the U280 port: does P4 fit the smaller card?
+    let u280 = alveo_u280();
+    let ga_engine = ga::Ga::new(ga::GaParams { generations, ..ga::GaParams::rn50() });
+    let out = pack_network(&net, &u280, &ga_engine, 4);
+    println!(
+        "U280 P4: {} BRAM18 of {} available -> {}",
+        out.report.brams,
+        u280.bram18,
+        if out.report.brams <= u280.bram18 { "FITS (the paper's port)" } else { "does not fit" }
+    );
+    println!("pack_resnet50 OK");
+}

@@ -1,0 +1,113 @@
+//! The paper's headline story: port an accelerator to a *smaller* device.
+//!
+//! * CNV-W1A1: Zynq 7020 → 7012S (§V: "we were able to successfully port
+//!   the CNV-W1A1-P4 accelerator to a smaller Zynq device, the 7012S,
+//!   without any loss of throughput").
+//! * RN50-W1A2: Alveo U250 → U280 — FCMP (P4) vs the folding alternative
+//!   (F2); the paper finds FCMP is 38% faster than folding.
+//!
+//! Run: `cargo run --release --example port_device`
+
+use fcmp::device::{alveo_u250, alveo_u280, zynq_7012s, zynq_7020};
+use fcmp::folding::network_resources;
+use fcmp::memory;
+use fcmp::nn::{cnv, resnet50, CnvVariant};
+use fcmp::report::{default_ga, pack_network};
+use fcmp::timing;
+
+fn port_cnv() {
+    println!("--- CNV-W1A1: Zynq 7020 -> 7012S ---");
+    let net = cnv(CnvVariant::W1A1);
+    let (big, small) = (zynq_7020(), zynq_7012s());
+    let r = network_resources(&net, &big);
+
+    // unpacked on the small device: does not fit
+    let unpacked_total = r.total_brams();
+    println!(
+        "unpacked needs {} BRAM18: 7020 has {} (fits), 7012S has {} ({})",
+        unpacked_total,
+        big.bram18,
+        small.bram18,
+        if unpacked_total <= small.bram18 { "fits" } else { "DOES NOT FIT" }
+    );
+
+    // FCMP-packed at H_B=4
+    let out = pack_network(&net, &big, &default_ga(&net), 4);
+    let packed_total = out.report.brams + memory::activation_brams(&net) / 2;
+    println!(
+        "packed (P4) needs {} weight BRAM18 (+{} act/FIFO) -> 7012S {}",
+        out.report.brams,
+        memory::activation_brams(&net) / 2,
+        if packed_total <= small.bram18 { "FITS" } else { "does not fit" }
+    );
+
+    // throughput on the small device
+    let lut_util = r.luts / small.luts as f64;
+    let t = timing::evaluate(&small, lut_util, 100.0, 2.0, 100.0);
+    println!(
+        "7012S implementation: LUT {:.0}%, Fc {:.0} MHz, Fm {:.0} MHz, dFPS {:.0}% (paper: 0%)",
+        100.0 * lut_util,
+        t.fc_mhz,
+        t.fm_mhz,
+        t.delta_fps_pct
+    );
+    assert!(t.delta_fps_pct < 2.0, "port must preserve throughput");
+    assert!(unpacked_total > small.bram18, "unpacked should NOT fit 7012S");
+    assert!(packed_total <= small.bram18, "packed should fit 7012S");
+}
+
+fn port_rn50() {
+    println!("\n--- RN50-W1A2: Alveo U250 -> U280, FCMP vs folding ---");
+    let net = resnet50(1);
+    let (u250, u280) = (alveo_u250(), alveo_u280());
+    let r = network_resources(&net, &u250);
+
+    // NOTE: the paper counts 3870 BRAM18 for the whole unpacked design
+    // (weights + all stream FIFOs), which exceeds the U280; our FIFO model
+    // is thinner (see EXPERIMENTS.md deltas), so the porting pressure here
+    // shows up as the throughput comparison below rather than a hard
+    // capacity wall.
+    println!(
+        "unpacked weights {} BRAM18 (paper: 3870 total incl. FIFOs) vs U280 {}",
+        r.weight_brams, u280.bram18,
+    );
+
+    // option A: FCMP P4 on U280
+    let out = pack_network(&net, &u280, &default_ga(&net), 4);
+    let lut_util_p4 =
+        (r.luts + out.logic_kluts * 1e3 + u280.shell_luts as f64) / u280.luts as f64;
+    let tp4 = timing::evaluate(&u280, lut_util_p4, 200.0, 2.0, 200.0);
+    let fps_p4 = tp4.effective_fc_mhz; // per-cycle work unchanged
+
+    // option B: fold by 2 on U280
+    let f2 = net.fold2();
+    let rf2 = network_resources(&f2, &u280);
+    let lut_util_f2 = (rf2.luts + u280.shell_luts as f64) / u280.luts as f64;
+    let tf2 = timing::evaluate(&u280, lut_util_f2, 200.0, 1.0, 200.0);
+    let fps_f2 = tf2.effective_fc_mhz / 2.0; // half the per-cycle work
+
+    println!(
+        "U280 via FCMP P4 : {} BRAM18 (E {:.1}%), LUT {:.0}%, Fc {:.0} => relative FPS {:.1}",
+        out.report.brams,
+        100.0 * out.report.efficiency,
+        100.0 * lut_util_p4,
+        tp4.fc_mhz,
+        fps_p4,
+    );
+    println!(
+        "U280 via folding : {} BRAM18, LUT {:.0}%, Fc {:.0} => relative FPS {:.1}",
+        rf2.weight_brams,
+        100.0 * lut_util_f2,
+        tf2.fc_mhz,
+        fps_f2,
+    );
+    println!("FCMP / folding speedup: {:.2}x (paper: ~1.38x)", fps_p4 / fps_f2);
+    assert!(out.report.brams <= u280.bram18, "P4 weights must fit U280");
+    assert!(fps_p4 / fps_f2 > 1.2, "FCMP must beat folding on U280");
+}
+
+fn main() {
+    port_cnv();
+    port_rn50();
+    println!("\nport_device OK");
+}

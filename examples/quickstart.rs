@@ -1,0 +1,49 @@
+//! Quickstart: the FCMP flow in ~40 lines.
+//!
+//! Builds the CNV-W1A1 accelerator model, measures its OCM mapping
+//! efficiency, packs the weight buffers with the genetic algorithm of [18]
+//! at bin height 4 (requires R_F = 2, Eq. 2), and checks the throughput
+//! implications with the GALS streamer simulator and the timing model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fcmp::device::zynq_7020;
+use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
+use fcmp::nn::{cnv, CnvVariant};
+use fcmp::report::{default_ga, pack_network};
+use fcmp::timing::evaluate;
+
+fn main() {
+    // 1. the accelerator: BNN-Pynq CNV, binary weights, CIFAR-10
+    let net = cnv(CnvVariant::W1A1);
+    let dev = zynq_7020();
+    println!("network {}: {} weight params", net.name, net.total_params());
+
+    // 2. FCMP packing: up to 4 logical buffers per physical BRAM
+    let ga = default_ga(&net);
+    let out = pack_network(&net, &dev, &ga, 4);
+    println!(
+        "baseline {} BRAM18 at E={:.1}% -> packed {} BRAM18 at E={:.1}% ({:.0}% fewer)",
+        out.baseline_brams,
+        100.0 * out.baseline_eff,
+        out.report.brams,
+        100.0 * out.report.efficiency,
+        100.0 * (1.0 - out.report.brams as f64 / out.baseline_brams as f64),
+    );
+
+    // 3. Eq. 2: H_B = 4 needs R_F = 2 — verify with the cycle simulator
+    let sim = StreamerSim::new(StreamerConfig::fig7a(4, 256, Ratio::two())).run(5_000);
+    println!(
+        "GALS streamer: 4 buffers/BRAM at R_F=2 sustain min rate {:.3} words/cycle",
+        sim.min_rate()
+    );
+
+    // 4. can the memory domain close timing at 2x the compute clock?
+    let t = evaluate(&dev, 0.58, dev.nominal_compute_mhz, 2.0, dev.nominal_compute_mhz);
+    println!(
+        "timing on {}: Fc {:.0} MHz, Fm {:.0} MHz => dFPS {:.1}% (BRAM Fmax cap {:.0} MHz)",
+        dev.name, t.fc_mhz, t.fm_mhz, t.delta_fps_pct, dev.bram_fmax_mhz,
+    );
+    assert!(sim.min_rate() >= 0.98, "packing must not cost throughput");
+    println!("quickstart OK");
+}

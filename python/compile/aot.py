@@ -1,0 +1,194 @@
+"""AOT compile path: lower the L2 JAX models to HLO *text* artifacts.
+
+Run once by ``make artifacts``; python never appears on the request path.
+For every model variant this emits into ``artifacts/``:
+
+  <name>.b<B>.hlo.txt      HLO text per batch size (the interchange format:
+                           jax >= 0.5 serialized HloModuleProto uses 64-bit
+                           instruction ids which xla_extension 0.5.1 rejects;
+                           the text parser reassigns ids and round-trips)
+  weights/<name>/NNN.bin   float32 little-endian parameter tensors, in the
+                           exact argument order of the lowered function
+  golden/<name>.in.bin     one deterministic input batch and the jax-computed
+  golden/<name>.out.bin    output for it -- the rust runtime must match it
+                           bit-for-bit (integer-valued f32 math)
+  <name>.manifest          plain-text manifest the rust runtime parses:
+                           hlo/batch/input/param/output/golden lines
+
+Usage: python -m compile.aot --out ../artifacts [--models cnv_w1a1,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Executable model registry: name -> (builder of (fn, layers, interleaved,
+# input_hw)).  rn50 full-size shapes are handled analytically on the rust
+# side; the lite variant proves the three-layer stack end to end.
+MODELS = {
+    "cnv_w1a1": dict(kind="cnv", wbits=1, abits=1, image=32),
+    "cnv_w2a2": dict(kind="cnv", wbits=2, abits=2, image=32),
+    "rn50_lite_w1a2": dict(kind="rn50", wbits=1, width_scale=0.25, image=32),
+}
+
+BATCHES = {"cnv_w1a1": (1, 4), "cnv_w2a2": (1,), "rn50_lite_w1a2": (1,)}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(name: str):
+    """Return (forward_fn(x, *params), layers, params list) for a model.
+
+    Zero-element parameters (empty threshold tensors of bypass layers) are
+    excluded from the lowered signature — jax prunes unused arguments and a
+    0-element literal is not expressible on the rust side anyway; the
+    forward wrapper re-inserts empty placeholders at the right positions.
+    """
+    cfg = MODELS[name]
+    if cfg["kind"] == "cnv":
+        layers = M.cnv_layers(cfg["wbits"], cfg["abits"])
+        all_params = M.init_params(layers)
+
+        def full_fn(x, ps):
+            return (M.cnv_forward(x, ps, cfg["wbits"], cfg["abits"], full_fold=True),)
+
+    else:
+        layers = M.rn50_param_layers(cfg["wbits"], cfg["width_scale"])
+        all_params = M.init_params(layers, interleaved=True)
+
+        def full_fn(x, ps):
+            return (M.rn50_forward(x, ps, cfg["wbits"], cfg["width_scale"], full_fold=True),)
+
+    keep = [i for i, p in enumerate(all_params) if p.size > 0]
+    shapes = [p.shape for p in all_params]
+
+    def fn(x, *nz):
+        it = iter(nz)
+        full = [
+            next(it) if i in set(keep) else jnp.zeros(shapes[i], jnp.float32)
+            for i in range(len(all_params))
+        ]
+        return full_fn(x, full)
+
+    params = [all_params[i] for i in keep]
+    return fn, layers, params
+
+
+def golden_input(name: str, batch: int) -> np.ndarray:
+    cfg = MODELS[name]
+    rng = np.random.RandomState(hash(name) % (2**31 - 1))
+    img = cfg["image"]
+    # 8-bit input images, as consumed by the first (8-bit-weight) layer
+    return rng.randint(0, 256, (batch, img, img, 3)).astype(np.float32)
+
+
+def emit(name: str, out_dir: str) -> None:
+    fn, _layers, params = build(name)
+    wdir = os.path.join(out_dir, "weights", name)
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(wdir, exist_ok=True)
+    os.makedirs(gdir, exist_ok=True)
+
+    manifest = [f"model {name}"]
+    for i, p in enumerate(params):
+        fname = f"{i:03d}.bin"
+        p.astype("<f4").tofile(os.path.join(wdir, fname))
+        dims = " ".join(str(d) for d in p.shape)
+        manifest.append(f"param weights/{name}/{fname} {dims}")
+
+    jparams = [jnp.array(p) for p in params]
+    for batch in BATCHES[name]:
+        spec = jax.ShapeDtypeStruct(golden_input(name, batch).shape, jnp.float32)
+        pspecs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params]
+        lowered = jax.jit(fn).lower(spec, *pspecs)
+        hlo = to_hlo_text(lowered)
+        hlo_name = f"{name}.b{batch}.hlo.txt"
+        with open(os.path.join(out_dir, hlo_name), "w") as f:
+            f.write(hlo)
+        manifest.append(f"hlo {batch} {hlo_name}")
+        print(f"  {hlo_name}: {len(hlo) / 1e6:.1f} MB text")
+
+    # golden I/O at the smallest batch
+    b0 = BATCHES[name][0]
+    x = golden_input(name, b0)
+    y = np.asarray(fn(jnp.array(x), *jparams)[0])
+    x.astype("<f4").tofile(os.path.join(gdir, f"{name}.in.bin"))
+    y.astype("<f4").tofile(os.path.join(gdir, f"{name}.out.bin"))
+    manifest.append(
+        f"input {b0} " + " ".join(str(d) for d in x.shape[1:])
+    )
+    manifest.append(f"output {b0} " + " ".join(str(d) for d in y.shape[1:]))
+    manifest.append(f"golden golden/{name}.in.bin golden/{name}.out.bin")
+
+    with open(os.path.join(out_dir, f"{name}.manifest"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"  {name}: {len(params)} params, golden out shape {y.shape}")
+
+
+def emit_unit_mvau(out_dir: str) -> None:
+    """A single small MVAU as its own artifact -- the runtime's micro-test
+    (kernel-level golden check without a full network around it)."""
+    from .kernels.mvau import mvau
+    from .kernels.ref import threshold_params
+
+    p, s, c, pe, simd, abits = 8, 36, 16, 4, 6, 2
+    nt, base, step = threshold_params(abits)
+    rng = np.random.RandomState(77)
+    w = rng.choice([-1.0, 1.0], (s, c)).astype(np.float32)
+    t = np.sort(np.round(rng.uniform(-6, 6, (c, nt))), axis=1).astype(np.float32)
+    x = rng.randint(-2, 2, (p, s)).astype(np.float32)
+
+    def fn(xx, ww, tt):
+        return (mvau(xx, ww, tt, pe=pe, simd=simd, base=base, step=step),)
+
+    specs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in (x, w, t)]
+    hlo = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(os.path.join(out_dir, "mvau_unit.hlo.txt"), "w") as f:
+        f.write(hlo)
+    y = np.asarray(fn(jnp.array(x), jnp.array(w), jnp.array(t))[0])
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    for arr, nm in ((x, "x"), (w, "w"), (t, "t"), (y, "y")):
+        arr.astype("<f4").tofile(os.path.join(gdir, f"mvau_unit.{nm}.bin"))
+    with open(os.path.join(out_dir, "mvau_unit.manifest"), "w") as f:
+        f.write(
+            "model mvau_unit\n"
+            f"hlo 1 mvau_unit.hlo.txt\n"
+            f"arg golden/mvau_unit.x.bin {p} {s}\n"
+            f"arg golden/mvau_unit.w.bin {s} {c}\n"
+            f"arg golden/mvau_unit.t.bin {c} {nt}\n"
+            f"expect golden/mvau_unit.y.bin {p} {c}\n"
+        )
+    print(f"  mvau_unit: {len(hlo) / 1e3:.0f} KB text")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    emit_unit_mvau(args.out)
+    for name in args.models.split(","):
+        if name:
+            print(f"lowering {name} ...")
+            emit(name, args.out)
+
+
+if __name__ == "__main__":
+    main()

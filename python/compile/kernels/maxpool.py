@@ -1,0 +1,34 @@
+"""Layer-1 Pallas kernel: 2x2/2 max-pool over NHWC quantized activations.
+
+The FINN pipeline interleaves max-pool units between MVAUs; on quantized
+levels max is order-preserving so the unit is exact.  Grid: one step per
+(batch, row-pair); the BlockSpec stages two input rows and emits one output
+row -- the same line-buffer schedule the FPGA sliding-window unit uses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (1, 2, W, C)
+    pairs = x.reshape(1, 2, x.shape[2] // 2, 2, x.shape[3])
+    o_ref[...] = jnp.max(jnp.max(pairs, axis=3), axis=1, keepdims=True)
+
+
+@jax.jit
+def maxpool2x2(x: jax.Array) -> jax.Array:
+    """(N, H, W, C) -> (N, H//2, W//2, C) max pool; H and W must be even."""
+    n, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"even dims required, got {h}x{w}"
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(n, h // 2),
+        in_specs=[pl.BlockSpec((1, 2, w, c), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, w // 2, c), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h // 2, w // 2, c), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,155 @@
+"""Layer-1 Pallas kernel: the FINN Matrix-Vector-Activation Unit (MVAU).
+
+The MVAU is the compute hot-spot of a FINN-style dataflow accelerator: one
+quantized matrix-vector product (the im2col'd convolution / fully-connected
+layer) followed by a thresholding activation that folds batch-norm + quantized
+activation into integer comparisons (the paper's "streamlining").
+
+FINN folding is expressed directly in the Pallas grid:
+
+  * grid axis 1 -- the *neuron fold* NF = C_out / PE (one tile of PE output
+    channels per step);
+  * grid axis 2 -- the *synapse fold* SF = S / SIMD (accumulation over
+    SIMD-wide input tiles, innermost / sequential);
+  * grid axis 0 -- pixel tiles (rows of the im2col matrix).
+
+Each grid step stages exactly one (SIMD x PE) weight tile -- the same weight
+read schedule the FINN weight streamer performs from BRAM, which is what the
+paper's FCMP technique packs and overclocks.  On TPU this BlockSpec is the
+HBM->VMEM schedule; here we run with ``interpret=True`` (CPU image: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute).
+
+Thresholding uses the uniform-quantization linear form: with T[c, 0..NT-1] the
+per-channel ascending thresholds, ``out = base + step * #{t : acc >= T[c,t]}``.
+``NT = 0`` (empty threshold tensor) bypasses activation and emits the raw
+accumulator (used by the final classifier layer).
+
+All tensors are float32 *value-wise integers* (weights in {-1,+1} or
+{-1,0,+1}, activations at their quantized integer levels): the MXU/ALU math is
+exact for these magnitudes and f32 keeps the artifact runnable on any PJRT
+backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mvau_kernel(x_ref, w_ref, t_ref, o_ref, *, nsf: int, base: float, step: float):
+    """One (pixel-tile, neuron-fold, synapse-fold) grid step.
+
+    x_ref : (BP, SIMD)   activation tile
+    w_ref : (SIMD, PE)   weight tile (the streamer's per-cycle read)
+    t_ref : (PE, NT)     per-channel thresholds (NT may be 0)
+    o_ref : (BP, PE)     output tile; holds the running accumulator until the
+                         last synapse-fold step, then the thresholded levels
+    """
+    sf = pl.program_id(2)
+
+    @pl.when(sf == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    if t_ref is not None:
+
+        @pl.when(sf == nsf - 1)
+        def _activate():
+            acc = o_ref[...]
+            # count thresholds crossed: (BP, PE, NT) >= (PE, NT)
+            crossed = (acc[:, :, None] >= t_ref[...][None, :, :]).astype(jnp.float32)
+            o_ref[...] = base + step * jnp.sum(crossed, axis=2)
+
+
+def _pick_tile(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (folding must divide)."""
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pe", "simd", "base", "step", "pixel_tile")
+)
+def mvau(
+    x: jax.Array,
+    w: jax.Array,
+    t: jax.Array,
+    *,
+    pe: int,
+    simd: int,
+    base: float = 0.0,
+    step: float = 1.0,
+    pixel_tile: int = 128,
+) -> jax.Array:
+    """Folded quantized matvec + thresholding (the FINN MVAU).
+
+    Args:
+      x: (P, S) im2col'd activations (P pixels, S = K*K*C_in synapses).
+      w: (S, C_out) quantized weight matrix.
+      t: (C_out, NT) ascending per-channel thresholds; NT = 0 bypasses
+         activation and returns the raw accumulator.
+      pe: output-channel parallelism (must divide C_out).
+      simd: input parallelism (must divide S).
+      base, step: uniform-quant level mapping ``out = base + step * count``.
+      pixel_tile: im2col row tile size (clamped to a divisor of P).
+
+    Returns:
+      (P, C_out) float32 tensor of quantized activation levels (or raw
+      accumulators when NT = 0).
+    """
+    p, s = x.shape
+    s2, c_out = w.shape
+    assert s == s2, f"synapse dim mismatch: {s} vs {s2}"
+    assert t.shape[0] == c_out, f"threshold channels {t.shape[0]} != {c_out}"
+    assert c_out % pe == 0, f"PE {pe} must divide C_out {c_out}"
+    assert s % simd == 0, f"SIMD {simd} must divide S {s}"
+
+    bp = _pick_tile(p, pixel_tile)
+    nf = c_out // pe
+    nsf = s // simd
+
+    nt = t.shape[1]
+    in_specs = [
+        pl.BlockSpec((bp, simd), lambda i, j, k: (i, k)),
+        pl.BlockSpec((simd, pe), lambda i, j, k: (k, j)),
+    ]
+    operands = [x, w]
+    if nt > 0:
+        in_specs.append(pl.BlockSpec((pe, nt), lambda i, j, k: (j, 0)))
+        operands.append(t)
+        kernel = functools.partial(
+            _mvau_kernel, nsf=nsf, base=float(base), step=float(step)
+        )
+    else:
+        # threshold bypass (raw accumulator out): no threshold operand at all,
+        # since a zero-width BlockSpec is not representable.
+        def kernel(x_ref, w_ref, o_ref):
+            _mvau_kernel(
+                x_ref, w_ref, None, o_ref, nsf=nsf, base=0.0, step=1.0
+            )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(p // bp, nf, nsf),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bp, pe), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, c_out), jnp.float32),
+        interpret=True,
+    )(*operands)
+
+
+def mvau_vmem_bits(pe: int, simd: int, bp: int, nt: int, wbits: int) -> int:
+    """Estimated VMEM footprint (bits) of one grid step -- the TPU analogue of
+    the per-MVAU BRAM budget (see DESIGN.md section Hardware-Adaptation)."""
+    x_bits = bp * simd * 32
+    w_bits = simd * pe * wbits
+    t_bits = pe * nt * 32
+    o_bits = bp * pe * 32
+    return x_bits + w_bits + t_bits + o_bits

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the MVAU kernel (correctness reference).
+
+No Pallas, no folding: a plain dense matmul plus the uniform-quantization
+thresholding map.  ``python/tests/test_kernel.py`` sweeps the Pallas kernel
+against this with hypothesis over shapes / foldings / threshold counts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mvau_ref(
+    x: jax.Array,
+    w: jax.Array,
+    t: jax.Array,
+    *,
+    base: float = 0.0,
+    step: float = 1.0,
+) -> jax.Array:
+    """Reference MVAU: ``out = base + step * #{thresholds crossed}``.
+
+    Shapes as in :func:`compile.kernels.mvau.mvau`; ``t`` with 0 columns
+    bypasses the activation (raw accumulator out).
+    """
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if t.shape[1] == 0:
+        return acc
+    crossed = (acc[:, :, None] >= t[None, :, :]).astype(jnp.float32)
+    return base + step * jnp.sum(crossed, axis=2)
+
+
+def threshold_params(abits: int, signed: bool = True) -> tuple[int, float, float]:
+    """Return (num_thresholds, base, step) for an ``abits``-bit uniform
+    quantizer.
+
+    signed: levels -2^(a-1) .. 2^(a-1)-1 with unit step (paper's 2b/4b
+    activations); unsigned-bipolar 1-bit: levels {-1, +1} with step 2
+    (BNN-Pynq CNV-W1A1 style).
+    """
+    if abits == 1:
+        return 1, -1.0, 2.0
+    nt = (1 << abits) - 1
+    if signed:
+        return nt, -float(1 << (abits - 1)), 1.0
+    return nt, 0.0, 1.0

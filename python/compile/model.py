@@ -1,0 +1,372 @@
+"""Layer-2: streamlined quantized CNN graphs in JAX, built on the L1 MVAU.
+
+Two network families, mirroring the paper's evaluation targets:
+
+* **CNV** -- the BNN-Pynq CIFAR-10 topology (6x conv3x3 VALID + 2x maxpool +
+  3x FC), in W1A1 and W2A2 variants.  This is the paper's embedded-class
+  accelerator (Zynq 7020 / 7012S).
+* **ResNet-50** -- 16 residual blocks (1x1 / 3x3 / 1x1 + optional 1x1
+  downsample branch), channel doubling at 4 block boundaries, W1A2 / W2A2.
+  The *executable* artifact is a channel-scaled "lite" variant (see
+  DESIGN.md substitutions: full-size RN50 shapes drive the analytic rust
+  experiments; the lite variant proves the three-layer stack end to end).
+
+Every convolution is lowered as im2col (``conv_general_dilated_patches``)
+followed by the Pallas MVAU kernel, exactly the FINN decomposition of a
+convolution into a sliding-window generator + matrix-vector unit.  Batch norm
+and quantized activations are already folded into MVAU thresholds
+("streamlining"), so the graph contains only MVAUs, maxpools, the residual
+add/re-quantize, and the final pooling/classifier.
+
+All model functions take the input image batch plus every weight/threshold
+tensor as *arguments* (no giant HLO constants): the rust runtime feeds the
+``.bin`` weight files emitted by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.mvau import mvau
+from .kernels.ref import threshold_params
+
+
+# --------------------------------------------------------------------------
+# Layer descriptors
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MvauLayer:
+    """One streamlined MVAU layer (conv or FC) with its folding."""
+
+    name: str
+    kernel: int  # K (1 for FC / pointwise)
+    c_in: int
+    c_out: int
+    stride: int = 1
+    pad: int = 0
+    wbits: int = 1  # 1 = binary {-1,+1}, 2 = ternary {-1,0,+1}, 8 = int8
+    abits: int = 1  # output activation bits; 0 = bypass (raw accumulator)
+    signed: bool = True  # signed output levels (False => bipolar {-1,+1})
+    pe: int = 1
+    simd: int = 1
+
+    @property
+    def synapses(self) -> int:
+        return self.kernel * self.kernel * self.c_in
+
+    @property
+    def weight_shape(self) -> tuple[int, int]:
+        return (self.synapses, self.c_out)
+
+    @property
+    def num_thresholds(self) -> int:
+        if self.abits == 0:
+            return 0
+        return threshold_params(self.abits, self.signed)[0]
+
+    def level_map(self) -> tuple[float, float]:
+        if self.abits == 0:
+            return 0.0, 1.0
+        _, base, step = threshold_params(self.abits, self.signed)
+        return base, step
+
+
+def im2col(x: jax.Array, k: int, stride: int, pad: int) -> jax.Array:
+    """NHWC image -> (N*H'*W', K*K*C) im2col matrix (FINN sliding window).
+
+    Feature ordering is (ky, kx, c) to match the weight layout produced by
+    :func:`init_layer`.
+    """
+    n, h, w, c = x.shape
+    if k == 1 and stride == 1 and pad == 0:
+        return x.reshape(n * h * w, c)
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(k, k),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # patches feature dim is ordered (c, ky, kx); reorder to (ky, kx, c).
+    nh, nw = patches.shape[1], patches.shape[2]
+    patches = patches.reshape(n, nh, nw, c, k, k)
+    patches = jnp.transpose(patches, (0, 1, 2, 4, 5, 3))
+    return patches.reshape(n * nh * nw, k * k * c)
+
+
+def out_dim(h: int, k: int, stride: int, pad: int) -> int:
+    return (h + 2 * pad - k) // stride + 1
+
+
+def apply_mvau(
+    x: jax.Array, layer: MvauLayer, w: jax.Array, t: jax.Array, h: int, wdim: int
+) -> tuple[jax.Array, int, int]:
+    """Run one MVAU layer on an NHWC tensor; returns (NHWC out, H', W')."""
+    n = x.shape[0]
+    cols = im2col(x, layer.kernel, layer.stride, layer.pad)
+    base, step = layer.level_map()
+    y = mvau(cols, w, t, pe=layer.pe, simd=layer.simd, base=base, step=step)
+    ho = out_dim(h, layer.kernel, layer.stride, layer.pad)
+    wo = out_dim(wdim, layer.kernel, layer.stride, layer.pad)
+    return y.reshape(n, ho, wo, layer.c_out), ho, wo
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 max pool (quantized levels are order-preserving)."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+# --------------------------------------------------------------------------
+# CNV (BNN-Pynq) topology
+# --------------------------------------------------------------------------
+
+
+def cnv_layers(wbits: int, abits: int) -> list[MvauLayer]:
+    """The BNN-Pynq CNV topology: 32x32x3 CIFAR-10 input, 6 conv3x3 VALID,
+    maxpool after conv pairs 2 and 4, three FC layers, 10-class output.
+
+    First layer consumes 8-bit input images (weights still quantized); the
+    final FC emits raw accumulators (no activation), as in FINN.  PE/SIMD
+    folding follows the max-performance BNN-Pynq configuration.  FINN pads
+    the final FC to 16 outputs for folding; the first 10 are the classes.
+    """
+    aspec = dict(abits=abits, signed=abits != 1)
+    return [
+        MvauLayer("conv1", 3, 3, 64, wbits=wbits, pe=16, simd=3, **aspec),
+        MvauLayer("conv2", 3, 64, 64, wbits=wbits, pe=32, simd=32, **aspec),
+        MvauLayer("conv3", 3, 64, 128, wbits=wbits, pe=16, simd=32, **aspec),
+        MvauLayer("conv4", 3, 128, 128, wbits=wbits, pe=16, simd=32, **aspec),
+        MvauLayer("conv5", 3, 128, 256, wbits=wbits, pe=4, simd=32, **aspec),
+        MvauLayer("conv6", 3, 256, 256, wbits=wbits, pe=1, simd=32, **aspec),
+        MvauLayer("fc1", 1, 256, 512, wbits=wbits, pe=1, simd=4, **aspec),
+        MvauLayer("fc2", 1, 512, 512, wbits=wbits, pe=1, simd=8, **aspec),
+        MvauLayer("fc3", 1, 512, 16, wbits=wbits, abits=0, pe=4, simd=1),
+    ]
+
+
+def exec_fold(layer: MvauLayer) -> MvauLayer:
+    """Execution folding for the AOT artifact: full PE/SIMD so the Pallas
+    grid collapses to one step per pixel tile. The FINN folding (the paper's
+    PE/SIMD) is a *schedule*, proven equivalent by the kernel tests; the
+    interpret-mode executable uses the largest tiles for CPU speed while the
+    rust analytic/sim layers keep the true folded schedule."""
+    return dataclasses.replace(layer, pe=layer.c_out, simd=layer.synapses)
+
+
+def cnv_forward(x: jax.Array, params: Sequence[jax.Array], wbits: int, abits: int,
+                full_fold: bool = False):
+    """CNV inference: x (N,32,32,3) -> logits (N,16)."""
+    layers = cnv_layers(wbits, abits)
+    if full_fold:
+        layers = [exec_fold(l) for l in layers]
+    ws, ts = params[: len(layers)], params[len(layers) :]
+    h = wdim = 32
+    pool_after = {"conv2", "conv4"}
+    x_cur = x
+    for i, layer in enumerate(layers[:6]):
+        x_cur, h, wdim = apply_mvau(x_cur, layer, ws[i], ts[i], h, wdim)
+        if layer.name in pool_after:
+            x_cur = maxpool2(x_cur)
+            h //= 2
+            wdim //= 2
+    # conv6 output is 1x1x256 -> flatten through the FC stack
+    n = x_cur.shape[0]
+    x_cur = x_cur.reshape(n, 1, 1, -1)
+    h = wdim = 1
+    for i, layer in enumerate(layers[6:], start=6):
+        x_cur, h, wdim = apply_mvau(x_cur, layer, ws[i], ts[i], h, wdim)
+    return x_cur.reshape(n, -1)
+
+
+# --------------------------------------------------------------------------
+# ResNet-50 topology
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResBlockSpec:
+    """One residual block: conv1x1 (reduce) -> conv3x3 -> conv1x1 (expand),
+    plus an optional 1x1 downsample on the bypass branch (paper Fig. 3)."""
+
+    name: str
+    c_in: int
+    c_mid: int
+    c_out: int
+    stride: int = 1
+    downsample: bool = False  # 4-conv "type A" block vs 3-conv "type B"
+
+
+def resnet50_blocks(width_scale: float = 1.0) -> list[ResBlockSpec]:
+    """The 16 ResBlocks of ResNet-50 v1.5 (stage layout 3/4/6/3); stride-2 in
+    the 3x3 conv of each stage's first block (v1.5 convention)."""
+    blocks: list[ResBlockSpec] = []
+    c_in = int(64 * width_scale)
+    stage_mid = [int(64 * width_scale), int(128 * width_scale),
+                 int(256 * width_scale), int(512 * width_scale)]
+    stage_n = [3, 4, 6, 3]
+    for s, (mid, n) in enumerate(zip(stage_mid, stage_n)):
+        c_out = mid * 4
+        for b in range(n):
+            first = b == 0
+            blocks.append(
+                ResBlockSpec(
+                    name=f"res{s + 2}{'abcdef'[b]}",
+                    c_in=c_in,
+                    c_mid=mid,
+                    c_out=c_out,
+                    stride=2 if (first and s > 0) else 1,
+                    downsample=first,
+                )
+            )
+            c_in = c_out
+    return blocks
+
+
+def resblock_layers(blk: ResBlockSpec, wbits: int, pe: int, simd: int) -> list[MvauLayer]:
+    """MVAU layers of one resblock.  Activations into the elementwise add are
+    4-bit signed; all others 2-bit signed (paper section III.A)."""
+    layers = [
+        MvauLayer(f"{blk.name}_c1", 1, blk.c_in, blk.c_mid, wbits=wbits, abits=2,
+                  pe=pe, simd=simd),
+        MvauLayer(f"{blk.name}_c2", 3, blk.c_mid, blk.c_mid, stride=blk.stride,
+                  pad=1, wbits=wbits, abits=2, pe=pe, simd=simd),
+        MvauLayer(f"{blk.name}_c3", 1, blk.c_mid, blk.c_out, wbits=wbits, abits=4,
+                  pe=pe, simd=simd),
+    ]
+    if blk.downsample:
+        layers.append(
+            MvauLayer(f"{blk.name}_cb", 1, blk.c_in, blk.c_out, stride=blk.stride,
+                      wbits=wbits, abits=4, pe=pe, simd=simd)
+        )
+    return layers
+
+
+def _requant(x: jax.Array, abits: int) -> jax.Array:
+    """Re-quantize the residual sum to ``abits`` signed levels (the
+    stand-alone thresholding unit after the elementwise add)."""
+    lo = -(1 << (abits - 1))
+    hi = (1 << (abits - 1)) - 1
+    return jnp.clip(jnp.round(x / 2.0), lo, hi)
+
+
+def rn50_param_layers(wbits: int, width_scale: float, pe: int = 4, simd: int = 8):
+    """Parameter layer list in the exact order consumed by rn50_forward."""
+    blocks = resnet50_blocks(width_scale)
+    c0 = blocks[0].c_in
+    out: list[MvauLayer] = [
+        MvauLayer("conv_top", 7, 3, c0, stride=2, pad=3, wbits=8, abits=4,
+                  pe=max(1, c0 // 8), simd=3)
+    ]
+    for blk in blocks:
+        out.extend(resblock_layers(blk, wbits, pe, simd))
+    out.append(
+        MvauLayer("fc_out", 1, blocks[-1].c_out, 16, wbits=8, abits=0, pe=1, simd=1)
+    )
+    return out
+
+
+def rn50_forward(
+    x: jax.Array,
+    params: Sequence[jax.Array],
+    wbits: int,
+    width_scale: float,
+    pe: int = 4,
+    simd: int = 8,
+    full_fold: bool = False,
+):
+    """Quantized ResNet-50 inference (lite variant executes end to end).
+
+    x: (N, image, image, 3).  params interleaved [w0, t0, w1, t1, ...] in
+    :func:`rn50_param_layers` order.  Top (7x7 conv + maxpool) and bottom
+    (avgpool + FC) layers use 8-bit weights per the paper and are excluded
+    from memory packing on the rust side.
+    """
+    blocks = resnet50_blocks(width_scale)
+    c0 = blocks[0].c_in
+    top = MvauLayer("conv_top", 7, 3, c0, stride=2, pad=3, wbits=8, abits=4,
+                    pe=max(1, c0 // 8), simd=3)
+    if full_fold:
+        top = exec_fold(top)
+    it = iter(params)
+
+    def nxt():
+        return next(it)
+
+    n, image = x.shape[0], x.shape[1]
+    h = wdim = image
+    x, h, wdim = apply_mvau(x, top, nxt(), nxt(), h, wdim)
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+    )
+    h = (h + 1) // 2
+    wdim = (wdim + 1) // 2
+
+    for blk in blocks:
+        layers = resblock_layers(blk, wbits, pe, simd)
+        if full_fold:
+            layers = [exec_fold(l) for l in layers]
+        bypass = x
+        bh, bw = h, wdim
+        x, h, wdim = apply_mvau(x, layers[0], nxt(), nxt(), h, wdim)
+        x, h, wdim = apply_mvau(x, layers[1], nxt(), nxt(), h, wdim)
+        x, h, wdim = apply_mvau(x, layers[2], nxt(), nxt(), h, wdim)
+        if blk.downsample:
+            bypass, _, _ = apply_mvau(bypass, layers[3], nxt(), nxt(), bh, bw)
+        x = _requant(x + bypass, 2)
+
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    fc_w, fc_t = nxt(), nxt()
+    y = mvau(x, fc_w, fc_t, pe=1, simd=1)
+    return y.reshape(n, -1)
+
+
+# --------------------------------------------------------------------------
+# Deterministic synthetic weights (DESIGN.md substitution: shapes exact,
+# values synthetic; golden I/O pins rust <-> python numerics)
+# --------------------------------------------------------------------------
+
+
+def init_layer(layer: MvauLayer, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic quantized weights + ascending thresholds for one layer."""
+    rng = np.random.RandomState(seed % (2**31 - 1))
+    s, c = layer.weight_shape
+    if layer.wbits == 1:
+        w = rng.choice([-1.0, 1.0], size=(s, c))
+    elif layer.wbits == 2:
+        w = rng.choice([-1.0, 0.0, 1.0], size=(s, c))
+    else:  # int8-ish top/bottom layers
+        w = rng.randint(-8, 9, size=(s, c)).astype(np.float64)
+    nt = layer.num_thresholds
+    # center thresholds on 0 with spread ~ sqrt(fan-in) so output levels vary
+    spread = max(2.0, np.sqrt(s))
+    t = np.sort(rng.uniform(-spread, spread, size=(c, nt)), axis=1)
+    t = np.round(t)  # integer thresholds, exact in f32
+    return w.astype(np.float32), t.astype(np.float32)
+
+
+def init_params(layers: Sequence[MvauLayer], seed: int = 2020, interleaved: bool = False):
+    """Weights/thresholds for a layer list.
+
+    interleaved=True yields [w0, t0, w1, t1, ...] (rn50_forward order);
+    False yields [w0..wn, t0..tn] (cnv_forward order).
+    """
+    ws, ts = [], []
+    for i, layer in enumerate(layers):
+        w, t = init_layer(layer, seed + i * 7919)
+        ws.append(w)
+        ts.append(t)
+    if interleaved:
+        out: list[np.ndarray] = []
+        for w, t in zip(ws, ts):
+            out.extend((w, t))
+        return out
+    return ws + ts

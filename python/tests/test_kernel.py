@@ -1,0 +1,139 @@
+"""Pallas MVAU kernel vs the pure-jnp oracle -- the core L1 correctness
+signal.  hypothesis sweeps shapes, foldings, weight/activation precisions and
+pixel tiling; all outputs are integer-valued f32 so comparisons are exact."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.mvau import mvau, mvau_vmem_bits, _pick_tile
+from compile.kernels.ref import mvau_ref, threshold_params
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def make_case(rng, p, s, c, wbits, abits):
+    if wbits == 1:
+        w = rng.choice([-1.0, 1.0], (s, c))
+    else:
+        w = rng.choice([-1.0, 0.0, 1.0], (s, c))
+    x = rng.randint(-3, 4, (p, s)).astype(np.float64)
+    if abits == 0:
+        t = np.zeros((c, 0))
+        base, step = 0.0, 1.0
+    else:
+        nt, base, step = threshold_params(abits, signed=abits != 1)
+        t = np.sort(np.round(rng.uniform(-s, s, (c, nt))), axis=1)
+    return (
+        jnp.array(x, jnp.float32),
+        jnp.array(w, jnp.float32),
+        jnp.array(t, jnp.float32),
+        base,
+        step,
+    )
+
+
+@st.composite
+def mvau_cases(draw):
+    p = draw(st.integers(1, 48))
+    s_factor = draw(st.sampled_from([1, 2, 3, 4, 6, 9]))
+    c = draw(st.sampled_from([2, 4, 8, 16, 24]))
+    s = s_factor * draw(st.sampled_from([2, 4, 8]))
+    pe = draw(st.sampled_from(_divisors(c)))
+    simd = draw(st.sampled_from(_divisors(s)))
+    wbits = draw(st.sampled_from([1, 2]))
+    abits = draw(st.sampled_from([0, 1, 2, 4]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    tile = draw(st.sampled_from([1, 8, 32, 64]))
+    return p, s, c, pe, simd, wbits, abits, seed, tile
+
+
+@settings(max_examples=60, deadline=None)
+@given(mvau_cases())
+def test_mvau_matches_ref_hypothesis(case):
+    p, s, c, pe, simd, wbits, abits, seed, tile = case
+    rng = np.random.RandomState(seed)
+    x, w, t, base, step = make_case(rng, p, s, c, wbits, abits)
+    out = mvau(x, w, t, pe=pe, simd=simd, base=base, step=step, pixel_tile=tile)
+    ref = mvau_ref(x, w, t, base=base, step=step)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("pe,simd", [(1, 1), (4, 8), (16, 3), (64, 72)])
+def test_mvau_folding_invariance(pe, simd):
+    """Folding (PE, SIMD) is a schedule, not a semantics: all foldings give
+    identical results."""
+    rng = np.random.RandomState(11)
+    x, w, t, base, step = make_case(rng, 20, 72, 64, 1, 2)
+    ref = mvau_ref(x, w, t, base=base, step=step)
+    out = mvau(x, w, t, pe=pe, simd=simd, base=base, step=step)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_mvau_bypass_is_exact_matmul():
+    rng = np.random.RandomState(3)
+    x, w, t, _, _ = make_case(rng, 16, 32, 8, 1, 0)
+    out = mvau(x, w, t, pe=2, simd=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x) @ np.asarray(w))
+
+
+def test_threshold_count_semantics():
+    """out = base + step * #crossed, checked against a hand computation."""
+    x = jnp.array([[2.0, -1.0]])  # acc = 2*1 + (-1)*1 = 1
+    w = jnp.array([[1.0], [1.0]])
+    t = jnp.array([[-1.0, 0.0, 3.0]])  # crossed: -1, 0 => count 2
+    out = mvau(x, w, t, pe=1, simd=1, base=-2.0, step=1.0)
+    assert float(out[0, 0]) == -2.0 + 2.0
+
+
+def test_bipolar_1bit_levels():
+    nt, base, step = threshold_params(1)
+    assert (nt, base, step) == (1, -1.0, 2.0)
+    rng = np.random.RandomState(5)
+    x, w, t, _, _ = make_case(rng, 10, 16, 4, 1, 1)
+    out = np.asarray(mvau(x, w, t, pe=2, simd=4, base=base, step=step))
+    assert set(np.unique(out)).issubset({-1.0, 1.0})
+
+
+def test_signed_2bit_levels():
+    rng = np.random.RandomState(6)
+    x, w, t, base, step = make_case(rng, 32, 36, 8, 1, 2)
+    out = np.asarray(mvau(x, w, t, pe=4, simd=6, base=base, step=step))
+    assert set(np.unique(out)).issubset({-2.0, -1.0, 0.0, 1.0})
+
+
+def test_signed_4bit_levels():
+    rng = np.random.RandomState(7)
+    x, w, t, base, step = make_case(rng, 8, 18, 4, 2, 4)
+    out = np.asarray(mvau(x, w, t, pe=2, simd=3, base=base, step=step))
+    assert out.min() >= -8.0 and out.max() <= 7.0
+
+
+def test_pick_tile_divides():
+    for n in range(1, 200):
+        for target in (1, 7, 32, 200):
+            t = _pick_tile(n, target)
+            assert n % t == 0 and 1 <= t <= min(n, target)
+
+
+def test_fold_constraints_rejected():
+    rng = np.random.RandomState(8)
+    x, w, t, base, step = make_case(rng, 4, 12, 8, 1, 2)
+    with pytest.raises(AssertionError):
+        mvau(x, w, t, pe=3, simd=4, base=base, step=step)  # 3 !| 8
+    with pytest.raises(AssertionError):
+        mvau(x, w, t, pe=2, simd=5, base=base, step=step)  # 5 !| 12
+
+
+def test_vmem_estimate_monotone_in_tiles():
+    """VMEM footprint (the TPU analogue of the BRAM budget) grows with the
+    folding tile sizes -- the knob the perf pass turns."""
+    base = mvau_vmem_bits(pe=4, simd=8, bp=32, nt=3, wbits=1)
+    assert mvau_vmem_bits(pe=8, simd=8, bp=32, nt=3, wbits=1) > base
+    assert mvau_vmem_bits(pe=4, simd=16, bp=32, nt=3, wbits=1) > base
+    assert mvau_vmem_bits(pe=4, simd=8, bp=64, nt=3, wbits=1) > base

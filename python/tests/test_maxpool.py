@@ -1,0 +1,52 @@
+"""Pallas maxpool kernel vs jax.lax.reduce_window oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.maxpool import maxpool2x2
+
+
+def ref_pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(1, 2),
+    st.sampled_from([1, 2, 4]),
+    st.sampled_from([1, 2, 4]),
+    st.sampled_from([1, 4, 8]),
+    st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_reduce_window(n, h2, w2, c, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.array(rng.randint(-4, 4, (n, 2 * h2, 2 * w2, c)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(maxpool2x2(x)), np.asarray(ref_pool(x))
+    )
+
+
+def test_maxpool_cnv_shape():
+    # the CNV pool stages: 28x28x64 -> 14x14x64
+    rng = np.random.RandomState(0)
+    x = jnp.array(rng.choice([-1.0, 1.0], (1, 28, 28, 64)).astype(np.float32))
+    got = maxpool2x2(x)
+    assert got.shape == (1, 14, 14, 64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref_pool(x)))
+
+
+def test_maxpool_preserves_quant_levels():
+    rng = np.random.RandomState(1)
+    x = jnp.array(rng.choice([-2.0, -1.0, 0.0, 1.0], (2, 8, 8, 4)).astype(np.float32))
+    out = np.asarray(maxpool2x2(x))
+    assert set(np.unique(out)).issubset({-2.0, -1.0, 0.0, 1.0})
+
+
+def test_maxpool_rejects_odd_dims():
+    with pytest.raises(AssertionError):
+        maxpool2x2(jnp.zeros((1, 3, 4, 2), jnp.float32))

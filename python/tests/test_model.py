@@ -1,0 +1,157 @@
+"""L2 model-level tests: topology shapes, streamline structure, determinism,
+and the resblock branch/join semantics."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels.ref import mvau_ref
+
+
+# ---------------------------------------------------------------- topology
+
+
+def test_cnv_weight_totals():
+    """CNV parameter count matches the published BNN-Pynq topology
+    (~1.54M weights plus the FINN 16-wide padded final layer)."""
+    layers = M.cnv_layers(1, 1)
+    total = sum(l.synapses * l.c_out for l in layers)
+    # 1,542,848 with a 10-wide final layer; ours is padded to 16 outputs.
+    assert total == 1_542_848 - 512 * 10 + 512 * 16
+
+
+def test_cnv_folding_divides():
+    for l in M.cnv_layers(1, 1):
+        assert l.c_out % l.pe == 0, l.name
+        assert l.synapses % l.simd == 0, l.name
+
+
+def test_resnet50_block_structure():
+    blocks = M.resnet50_blocks()
+    assert len(blocks) == 16
+    assert sum(1 for b in blocks if b.downsample) == 4
+    # channel doubling sequence 256 -> 512 -> 1024 -> 2048
+    outs = sorted({b.c_out for b in blocks})
+    assert outs == [256, 512, 1024, 2048]
+    # stage layout 3/4/6/3
+    assert [b.c_mid for b in blocks].count(64) == 3
+    assert [b.c_mid for b in blocks].count(128) == 4
+    assert [b.c_mid for b in blocks].count(256) == 6
+    assert [b.c_mid for b in blocks].count(512) == 3
+
+
+def test_resnet50_conv_counts():
+    """16 resblocks, 4-conv type A x4 + 3-conv type B x12 = 52 resblock convs
+    (the paper's section III description)."""
+    layers = M.rn50_layers = [
+        l
+        for b in M.resnet50_blocks()
+        for l in M.resblock_layers(b, 1, 4, 8)
+    ]
+    assert len(layers) == 4 * 4 + 12 * 3
+    k3 = [l for l in layers if l.kernel == 3]
+    assert len(k3) == 16  # exactly one 3x3 per resblock
+
+
+def test_resnet50_param_count_full():
+    """Full-size quantized RN50 resblock weights ~= 23.5M (the OCM budget the
+    paper packs; top/bottom 8-bit layers excluded)."""
+    layers = [
+        l for b in M.resnet50_blocks() for l in M.resblock_layers(b, 1, 4, 8)
+    ]
+    total = sum(l.synapses * l.c_out for l in layers)
+    assert 20e6 < total < 27e6
+
+
+def test_width_scale_shrinks():
+    full = M.resnet50_blocks(1.0)
+    lite = M.resnet50_blocks(0.25)
+    assert all(l.c_out == f.c_out // 4 for f, l in zip(full, lite))
+
+
+# ---------------------------------------------------------------- im2col
+
+
+@pytest.mark.parametrize("k,stride,pad", [(3, 1, 0), (3, 1, 1), (3, 2, 1), (7, 2, 3), (1, 1, 0)])
+def test_im2col_matches_conv(k, stride, pad):
+    """im2col + matmul == lax.conv (the FINN sliding-window decomposition)."""
+    rng = np.random.RandomState(9)
+    n, h, c_in, c_out = 2, 8, 3, 5
+    x = jnp.array(rng.randn(n, h, h, c_in).astype(np.float32))
+    w = jnp.array(rng.randn(k, k, c_in, c_out).astype(np.float32))
+    import jax as _jax
+
+    cols = M.im2col(x, k, stride, pad)
+    wmat = w.reshape(k * k * c_in, c_out)
+    got = cols @ wmat
+    want = _jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    ho = M.out_dim(h, k, stride, pad)
+    np.testing.assert_allclose(
+        np.asarray(got).reshape(n, ho, ho, c_out), np.asarray(want),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _cnv_small_forward(wbits, abits):
+    layers = M.cnv_layers(wbits, abits)
+    params = [jnp.array(p) for p in M.init_params(layers, seed=5)]
+    x = jnp.array(
+        np.random.RandomState(0).randint(0, 256, (1, 32, 32, 3)).astype(np.float32)
+    )
+    return M.cnv_forward(x, params, wbits, abits)
+
+
+@pytest.mark.slow
+def test_cnv_w1a1_forward_shape_and_determinism():
+    y1 = np.asarray(_cnv_small_forward(1, 1))
+    y2 = np.asarray(_cnv_small_forward(1, 1))
+    assert y1.shape == (1, 16)
+    np.testing.assert_array_equal(y1, y2)
+    assert np.all(y1 == np.round(y1))  # integer-valued accumulators
+
+
+@pytest.mark.slow
+def test_rn50_lite_forward():
+    layers = M.rn50_param_layers(1, 0.25)
+    params = [jnp.array(p) for p in M.init_params(layers, interleaved=True)]
+    x = jnp.array(
+        np.random.RandomState(1).randint(0, 256, (1, 32, 32, 3)).astype(np.float32)
+    )
+    y = np.asarray(M.rn50_forward(x, params, 1, 0.25))
+    assert y.shape == (1, 16)
+    assert np.all(np.isfinite(y))
+
+
+def test_requant_levels():
+    x = jnp.array([-9.0, -3.0, -0.4, 0.6, 2.0, 9.0])
+    out = np.asarray(M._requant(x, 2))
+    assert set(np.unique(out)).issubset({-2.0, -1.0, 0.0, 1.0})
+    assert out[0] == -2.0 and out[-1] == 1.0
+
+
+def test_init_layer_deterministic_and_quantized():
+    layer = M.MvauLayer("t", 3, 8, 16, wbits=2, abits=2, pe=1, simd=1)
+    w1, t1 = M.init_layer(layer, 42)
+    w2, t2 = M.init_layer(layer, 42)
+    np.testing.assert_array_equal(w1, w2)
+    np.testing.assert_array_equal(t1, t2)
+    assert set(np.unique(w1)).issubset({-1.0, 0.0, 1.0})
+    assert np.all(np.diff(t1, axis=1) >= 0)  # ascending thresholds
+
+
+def test_init_params_order():
+    layers = M.cnv_layers(1, 1)
+    flat = M.init_params(layers)
+    inter = M.init_params(layers, interleaved=True)
+    assert len(flat) == len(inter) == 2 * len(layers)
+    np.testing.assert_array_equal(flat[0], inter[0])  # w0
+    np.testing.assert_array_equal(flat[len(layers)], inter[1])  # t0

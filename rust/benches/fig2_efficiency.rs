@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Fig. 2 — physical RAM mapping efficiency
+//! decreases as compute parallelism scales (1x/2x/4x).
+use fcmp::util::bench::{bench, report, BenchConfig};
+
+fn main() {
+    println!("== Fig 2: efficiency vs parallelism ==");
+    let t = fcmp::report::fig2();
+    println!("{}", t.render());
+    println!("\ncsv:\n{}", t.to_csv());
+    let r = bench("fig2_mapping", BenchConfig::default(), || {
+        std::hint::black_box(fcmp::report::fig2());
+    });
+    report(&r);
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Fig. 4 (per-resblock LUT/BRAM) and the Fig. 5
+//! SLR floorplan column: memory grows towards the output of the network.
+use fcmp::util::bench::{bench, report, BenchConfig};
+
+fn main() {
+    println!("== Fig 4 + Fig 5: RN50 per-resblock resources and floorplan ==");
+    let t = fcmp::report::fig4();
+    println!("{}", t.render());
+    println!("\ncsv:\n{}", t.to_csv());
+    let r = bench("fig4_model_eval", BenchConfig::default(), || {
+        std::hint::black_box(fcmp::report::fig4());
+    });
+    report(&r);
+}

@@ -1,0 +1,53 @@
+//! Bench: the GALS streamer schedules of Fig. 7 — per-stream read rates at
+//! every (N_b, R_F) configuration the paper discusses, plus the adaptive
+//! vs static slot-allocation comparison and simulator speed.
+use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
+use fcmp::util::bench::{bench, report, BenchConfig, Table};
+
+fn main() {
+    let cycles = 20_000;
+    let mut t = Table::new(["config", "min rate", "max rate", "wasted slots", "expected"]);
+    let cases: Vec<(String, StreamerConfig, &str)> = vec![
+        ("7a: Nb=2 RF=1".into(), StreamerConfig::fig7a(2, 128, Ratio::new(1, 1)), "1.0 (dual port)"),
+        ("7a: Nb=4 RF=2".into(), StreamerConfig::fig7a(4, 128, Ratio::two()), "1.0 (2RF/Nb)"),
+        ("7a: Nb=4 RF=1".into(), StreamerConfig::fig7a(4, 128, Ratio::new(1, 1)), "0.5 (2RF/Nb)"),
+        ("7a: Nb=6 RF=3".into(), StreamerConfig::fig7a(6, 128, Ratio::new(3, 1)), "1.0 (2RF/Nb)"),
+        ("7a: Nb=8 RF=2".into(), StreamerConfig::fig7a(8, 128, Ratio::two()), "0.5 (over Eq.2)"),
+        ("7b: Nb=3 RF=1.5 adaptive".into(), StreamerConfig::fig7b(3, 128), "1.0 (redistributed)"),
+        ("7b: Nb=5 RF=2.5 adaptive".into(), StreamerConfig::fig7b(5, 128), "1.0 (redistributed)"),
+        (
+            "7b: Nb=3 RF=1.5 static".into(),
+            {
+                let mut c = StreamerConfig::fig7b(3, 128);
+                c.adaptive = false;
+                c
+            },
+            "0.75 (wasted slots)",
+        ),
+    ];
+    for (name, cfg, expected) in cases {
+        let r = StreamerSim::new(cfg).run(cycles);
+        let max = r.per_stream.iter().map(|s| s.rate).fold(0.0f64, f64::max);
+        t.row([
+            name,
+            format!("{:.3}", r.min_rate()),
+            format!("{max:.3}"),
+            format!("{}", r.wasted_slots),
+            expected.to_string(),
+        ]);
+    }
+    println!("== Fig 7: GALS streamer schedules ({cycles} compute cycles) ==");
+    println!("{}", t.render());
+
+    let r = bench(
+        "gals_sim_100k_cycles_nb4",
+        BenchConfig { warmup_iters: 1, samples: 10, iters_per_sample: 1 },
+        || {
+            let mut sim = StreamerSim::new(StreamerConfig::fig7a(4, 256, Ratio::two()));
+            std::hint::black_box(sim.run(100_000));
+        },
+    );
+    report(&r);
+    let cps = 100_000.0 / r.per_iter_secs.mean;
+    println!("simulator speed: {:.1} M compute-cycles/s", cps / 1e6);
+}

@@ -1,0 +1,75 @@
+//! Bench: packing-engine ablation (paper §II.C landscape) — GA [18] vs
+//! first-fit-decreasing vs simulated annealing (MPack) vs exact
+//! branch-and-bound (MemPacker, small inputs only): solution quality and
+//! runtime on CNV/RN50 workloads plus synthetic heterogeneous sets.
+use fcmp::memory;
+use fcmp::packing::{anneal::Anneal, bnb::Bnb, ffd::Ffd, ga, run_packer, Constraints, Packer};
+use fcmp::util::bench::Table;
+use fcmp::util::rng::Rng;
+
+fn engines(gens: usize) -> Vec<(&'static str, Box<dyn Packer>)> {
+    vec![
+        ("ffd", Box::new(Ffd::new())),
+        ("anneal", Box::new(Anneal::default())),
+        ("ga[18]", Box::new(ga::Ga::new(ga::GaParams { generations: gens, ..ga::GaParams::cnv() }))),
+    ]
+}
+
+fn main() {
+    let mut t = Table::new(["workload", "engine", "BRAM18", "E %", "time"]);
+
+    // real workloads
+    for (name, net, dev) in [
+        ("CNV-W1A1/7020", fcmp::nn::cnv(fcmp::nn::CnvVariant::W1A1), fcmp::device::zynq_7020()),
+        ("RN50-W1A2/U250", fcmp::nn::resnet50(1), fcmp::device::alveo_u250()),
+    ] {
+        let bufs = memory::weight_buffers(&net, dev.slrs.len());
+        let items = memory::all_columns(&bufs);
+        let c = Constraints::new(4, !dev.is_monolithic());
+        for (ename, e) in engines(60) {
+            let (_, r) = run_packer(e.as_ref(), &items, &c);
+            t.row([
+                name.to_string(),
+                ename.to_string(),
+                format!("{}", r.brams),
+                format!("{:.1}", 100.0 * r.efficiency),
+                format!("{:.1?}", r.elapsed),
+            ]);
+        }
+    }
+
+    // synthetic heterogeneous workload where grouping quality matters,
+    // small enough for the exact BnB oracle
+    let mut rng = Rng::new(11);
+    let items: Vec<memory::PackItem> = (0..12)
+        .map(|i| memory::PackItem {
+            id: i,
+            layer: format!("s{i}"),
+            width_bits: 36,
+            depth: 24 + rng.below(480),
+            slr: 0,
+        })
+        .collect();
+    let c = Constraints::new(4, false);
+    for (ename, e) in engines(120) {
+        let (_, r) = run_packer(e.as_ref(), &items, &c);
+        t.row([
+            "synthetic-12".into(),
+            ename.to_string(),
+            format!("{}", r.brams),
+            format!("{:.1}", 100.0 * r.efficiency),
+            format!("{:.1?}", r.elapsed),
+        ]);
+    }
+    let (_, r) = run_packer(&Bnb::default(), &items, &c);
+    t.row([
+        "synthetic-12".into(),
+        "bnb (exact)".into(),
+        format!("{}", r.brams),
+        format!("{:.1}", 100.0 * r.efficiency),
+        format!("{:.1?}", r.elapsed),
+    ]);
+
+    println!("== Packer ablation ==");
+    println!("{}", t.render());
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Table I — BNN-Pynq resource utilization on
+//! Zynq 7020 (BRAM/LUT/DSP percent per CNV variant).
+use fcmp::util::bench::{bench, report, BenchConfig};
+
+fn main() {
+    println!("== Table I: FINN dataflow accelerators on Zynq 7020 ==");
+    println!("{}", fcmp::report::table1().render());
+    let r = bench("table1_model_eval", BenchConfig::default(), || {
+        std::hint::black_box(fcmp::report::table1());
+    });
+    report(&r);
+}

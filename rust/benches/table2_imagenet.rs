@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Table II — ImageNet dataflow accelerator
+//! comparison; our RN50-W1A2 row is produced by the analytic pipeline
+//! model at 195 MHz (published rows included for shape comparison).
+use fcmp::util::bench::{bench, report, BenchConfig};
+
+fn main() {
+    println!("== Table II: ImageNet dataflow accelerators ==");
+    println!("{}", fcmp::report::table2().render());
+    let e = fcmp::sim::estimate(&fcmp::nn::resnet50(1), 195.0);
+    println!(
+        "\nheadline: {:.0} FPS (paper 2703), {:.2} ms latency (paper 1.9), {:.1} TOp/s (paper 18.3)",
+        e.fps, e.latency_ms, e.tops
+    );
+    let r = bench("table2_model_eval", BenchConfig::default(), || {
+        std::hint::black_box(fcmp::report::table2());
+    });
+    report(&r);
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate paper Table IV — packed memory subsystems for every
+//! accelerator/bin-height combination the paper evaluates, using the GA of
+//! [18] with the Table III hyper-parameters.
+use fcmp::util::bench::{bench, report, BenchConfig};
+
+fn main() {
+    let gens = std::env::var("FCMP_GA_GENERATIONS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(80);
+    println!("== Table III: GA hyper-parameters in use ==");
+    println!("CNV : {:?}", fcmp::packing::ga::GaParams::cnv());
+    println!("RN50: {:?}\n", fcmp::packing::ga::GaParams::rn50());
+    println!("== Table IV: packed memory subsystems (GA generations={gens}) ==");
+    println!("{}", fcmp::report::table4(gens).render());
+
+    // time one representative packing run (CNV-W1A1 P4)
+    let net = fcmp::nn::cnv(fcmp::nn::CnvVariant::W1A1);
+    let dev = fcmp::device::zynq_7020();
+    let r = bench(
+        "pack_cnv_w1a1_p4_ga",
+        BenchConfig { warmup_iters: 1, samples: 5, iters_per_sample: 1 },
+        || {
+            let mut ga = fcmp::report::default_ga(&net);
+            ga.params.generations = 40;
+            std::hint::black_box(fcmp::report::pack_network(&net, &dev, &ga, 4));
+        },
+    );
+    report(&r);
+}

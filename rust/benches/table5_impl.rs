@@ -1,0 +1,22 @@
+//! Bench: regenerate paper Table V — packed vs folded implementations
+//! (LUT/BRAM %, achieved clocks, delta FPS) via the calibrated
+//! timing-closure model.
+use fcmp::util::bench::{bench, report, BenchConfig};
+
+fn main() {
+    let gens = std::env::var("FCMP_GA_GENERATIONS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(80);
+    println!("== Table V: packed vs folded accelerators (GA generations={gens}) ==");
+    println!("{}", fcmp::report::table5(gens).render());
+    println!("\nheadline: FCMP on U280 is ~1.4x faster than 2x folding (paper: 1.38x)");
+    let r = bench(
+        "table5_eval",
+        BenchConfig { warmup_iters: 0, samples: 3, iters_per_sample: 1 },
+        || {
+            std::hint::black_box(fcmp::report::table5(20));
+        },
+    );
+    report(&r);
+}

@@ -1,0 +1,262 @@
+//! Minimal TOML-subset configuration parser (serde/toml unavailable
+//! offline — DESIGN.md substitutions). Supports `[table]` headers, string /
+//! integer / float / boolean scalars, flat arrays, comments and blank lines
+//! — enough for experiment configuration files.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config: `table.key -> value` (root table has empty name).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+/// Parse error with line information.
+#[derive(Debug, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn parse_scalar(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    let err = |m: &str| ParseError { line, message: m.to_string() };
+    if s.is_empty() {
+        return Err(err("empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| err("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .and_then(|x| x.strip_suffix(']'))
+            .ok_or_else(|| err("unterminated array"))?;
+        let mut vals = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                vals.push(parse_scalar(part, line)?);
+            }
+        }
+        return Ok(Value::Array(vals));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(&format!("cannot parse value {s:?}")))
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config, ParseError> {
+        let mut cfg = Config::default();
+        let mut table = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = match raw.find('#') {
+                // a # inside a quoted string is kept
+                Some(pos) if !raw[..pos].contains('"') => &raw[..pos],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let name = h
+                    .strip_suffix(']')
+                    .ok_or(ParseError { line: line_no, message: "unterminated table header".into() })?;
+                table = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(ParseError {
+                line: line_no,
+                message: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = if table.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{table}.{}", k.trim())
+            };
+            let value = parse_scalar(v, line_no)?;
+            cfg.values.insert(key, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> crate::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Config::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment configuration
+name = "rn50-u250-p4"
+seed = 2020
+
+[packing]
+engine = "ga"
+bin_height = 4
+population = 75
+p_mut = 0.4
+same_slr = true
+depths = [36, 72, 144]
+
+[timing]
+fc_target = 200.0
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "rn50-u250-p4");
+        assert_eq!(c.int_or("seed", 0), 2020);
+        assert_eq!(c.str_or("packing.engine", ""), "ga");
+        assert_eq!(c.int_or("packing.bin_height", 0), 4);
+        assert_eq!(c.float_or("packing.p_mut", 0.0), 0.4);
+        assert!(c.bool_or("packing.same_slr", false));
+        assert_eq!(c.float_or("timing.fc_target", 0.0), 200.0);
+    }
+
+    #[test]
+    fn arrays() {
+        let c = Config::parse(SAMPLE).unwrap();
+        match c.get("packing.depths") {
+            Some(Value::Array(v)) => {
+                assert_eq!(v, &vec![Value::Int(36), Value::Int(72), Value::Int(144)]);
+            }
+            other => panic!("bad array: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let c = Config::parse("# only a comment\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(c.int_or("x", 0), 1);
+    }
+
+    #[test]
+    fn string_with_hash_preserved() {
+        let c = Config::parse("label = \"a#b\"\n").unwrap();
+        assert_eq!(c.str_or("label", ""), "a#b");
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let e = Config::parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        assert!(Config::parse("x = nope\n").is_err());
+        assert!(Config::parse("x = \"unterminated\n").is_err());
+        assert!(Config::parse("[unclosed\n").is_err());
+    }
+
+    #[test]
+    fn ints_floats_bools() {
+        let c = Config::parse("a = -3\nb = 2.5\nc = false\n").unwrap();
+        assert_eq!(c.int_or("a", 0), -3);
+        assert_eq!(c.float_or("b", 0.0), 2.5);
+        assert!(!c.bool_or("c", true));
+        // int usable as float
+        assert_eq!(c.float_or("a", 0.0), -3.0);
+    }
+
+    #[test]
+    fn empty_array() {
+        let c = Config::parse("xs = []\n").unwrap();
+        assert_eq!(c.get("xs"), Some(&Value::Array(vec![])));
+    }
+}

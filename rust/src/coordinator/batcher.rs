@@ -1,0 +1,110 @@
+//! Dynamic batcher: greedily drains the request queue up to `max_batch`,
+//! waiting at most `max_wait` for stragglers once the first request of a
+//! batch has arrived (the classic size-or-deadline policy).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch (match the engine's largest variant).
+    pub max_batch: usize,
+    /// Maximum time to hold an open batch waiting for more requests.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A formed batch.
+pub struct Batch {
+    pub requests: Vec<Request>,
+    /// When the batch was closed (for queue-latency accounting).
+    pub formed_at: Instant,
+}
+
+/// Drain the next batch from `rx`. Blocks for the first request; then
+/// gathers more until `max_batch` or `max_wait` elapses. Returns `None`
+/// when the channel is closed and empty.
+pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Batch> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + cfg.max_wait;
+    let mut requests = vec![first];
+    while requests.len() < cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => requests.push(r),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(Batch { requests, formed_at: Instant::now() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64) -> Request {
+        Request { id, input: vec![0.0; 4], arrival: Instant::now() }
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b.requests.len(), 4);
+        assert_eq!(b.requests[0].id, 0);
+        let b2 = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b2.requests[0].id, 4);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(0)).unwrap();
+        let cfg = BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(5) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+        drop(tx);
+    }
+
+    #[test]
+    fn closed_empty_channel_yields_none() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(tx);
+        let cfg = BatcherConfig::default();
+        assert!(next_batch(&rx, &cfg).is_none());
+    }
+
+    #[test]
+    fn stragglers_join_within_window() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(0)).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(2));
+            tx.send(req(1)).unwrap();
+        });
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(40) };
+        let b = next_batch(&rx, &cfg).unwrap();
+        handle.join().unwrap();
+        assert!(b.requests.len() >= 2, "straggler missed the batch");
+    }
+}

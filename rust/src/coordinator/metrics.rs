@@ -1,0 +1,102 @@
+//! Serving metrics: latency distribution, throughput, batch-size histogram.
+
+use std::time::Duration;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Collects per-request completions.
+#[derive(Default)]
+pub struct Metrics {
+    latencies_ms: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    started: Option<std::time::Instant>,
+    finished: Option<std::time::Instant>,
+}
+
+/// Final serving summary (the e2e numbers EXPERIMENTS.md records).
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    pub requests: usize,
+    pub wall_s: f64,
+    pub throughput_fps: f64,
+    pub latency_ms: Summary,
+    pub mean_batch: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn start(&mut self) {
+        self.started = Some(std::time::Instant::now());
+    }
+
+    pub fn record(&mut self, latency: Duration, batch_size: usize) {
+        self.latencies_ms.push(latency.as_secs_f64() * 1e3);
+        self.batch_sizes.push(batch_size);
+        self.finished = Some(std::time::Instant::now());
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies_ms.len()
+    }
+
+    pub fn summary(&self) -> ServeSummary {
+        assert!(!self.latencies_ms.is_empty(), "no completions recorded");
+        let wall = match (self.started, self.finished) {
+            (Some(a), Some(b)) => (b - a).as_secs_f64(),
+            _ => 0.0,
+        };
+        ServeSummary {
+            requests: self.latencies_ms.len(),
+            wall_s: wall,
+            throughput_fps: self.latencies_ms.len() as f64 / wall.max(1e-9),
+            latency_ms: summarize(&self.latencies_ms),
+            mean_batch: self.batch_sizes.iter().sum::<usize>() as f64
+                / self.batch_sizes.len() as f64,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} requests in {:.2}s => {:.1} FPS | latency ms: p50 {:.2} p95 {:.2} p99 {:.2} max {:.2} | mean batch {:.2}",
+            self.requests,
+            self.wall_s,
+            self.throughput_fps,
+            self.latency_ms.median,
+            self.latency_ms.p95,
+            self.latency_ms.p99,
+            self.latency_ms.max,
+            self.mean_batch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_math() {
+        let mut m = Metrics::new();
+        m.start();
+        for i in 0..10 {
+            m.record(Duration::from_millis(10 + i), 2);
+        }
+        let s = m.summary();
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.mean_batch, 2.0);
+        assert!(s.latency_ms.median >= 10.0);
+        assert!(s.throughput_fps > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_summary_panics() {
+        Metrics::new().summary();
+    }
+}

@@ -1,0 +1,46 @@
+//! Inference serving coordinator: request router, dynamic batcher, worker
+//! pool and metrics. This is the L3 request path — rust only, python never
+//! runs here (tokio is unavailable offline; std::thread + bounded mpsc
+//! channels provide the async substrate, see DESIGN.md substitutions).
+//!
+//! Architecture (vLLM-router-like, scaled to this paper's serving story):
+//!
+//! ```text
+//!  clients ──> Router (bounded queue, backpressure)
+//!                 │ drain up to max_batch / wait up to max_wait
+//!                 v
+//!              Batcher ──> worker thread (owns the PJRT Engine)
+//!                 │                 │ infer(batch)
+//!                 v                 v
+//!              completions (per-request latency, batch size) ──> Metrics
+//! ```
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod workload;
+
+pub use batcher::{Batch, BatcherConfig};
+pub use metrics::{Metrics, ServeSummary};
+pub use server::{InferBackend, Server, ServerConfig};
+pub use workload::{bursty, poisson, uniform, Trace};
+
+use std::time::Instant;
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    /// Flattened input image (f32, manifest sample element count).
+    pub input: Vec<f32>,
+    pub arrival: Instant,
+}
+
+/// One completed inference.
+pub struct Completion {
+    pub id: u64,
+    pub output: Vec<f32>,
+    /// Queue + batch + execute latency.
+    pub latency: std::time::Duration,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}

@@ -1,0 +1,265 @@
+//! The serving loop: router queue → dynamic batcher → worker thread that
+//! owns the inference backend → completion stream → metrics.
+//!
+//! The backend is a trait so tests can run the full coordination path with
+//! a mock (no PJRT); `examples/serve_cifar.rs` plugs in the real
+//! [`crate::runtime::Engine`].
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{next_batch, BatcherConfig};
+use super::{Completion, Request};
+use crate::Result;
+
+/// Anything that can run a batch of inputs. The backend is constructed
+/// *inside* the worker thread (PJRT handles are not `Send`), so only the
+/// factory closure crosses threads.
+pub trait InferBackend: 'static {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+}
+
+impl InferBackend for crate::runtime::Engine {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.infer(inputs)
+    }
+}
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    /// Router queue bound (backpressure: submit fails when full).
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { batcher: BatcherConfig::default(), queue_depth: 256 }
+    }
+}
+
+/// A running inference server (single worker owning the engine).
+pub struct Server {
+    tx: Option<SyncSender<Request>>,
+    completions: Receiver<Completion>,
+    worker: Option<JoinHandle<()>>,
+}
+
+// completions are unbounded: backpressure belongs on the *request* queue;
+// a bounded completion channel can deadlock shutdown (worker blocks on
+// send while the owner blocks on join without draining)
+type CompletionTx = Sender<Completion>;
+
+impl Server {
+    /// Spawn the worker thread; `make_backend` runs on the worker (PJRT
+    /// engines are thread-affine) and a panic there surfaces on first use.
+    pub fn start<B, F>(make_backend: F, cfg: ServerConfig) -> Server
+    where
+        B: InferBackend,
+        F: FnOnce() -> B + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let (ctx, crx): (CompletionTx, _) = channel();
+        let batcher = cfg.batcher;
+        let worker = std::thread::Builder::new()
+            .name("fcmp-worker".into())
+            .spawn(move || {
+                let backend = make_backend();
+                while let Some(mut batch) = next_batch(&rx, &batcher) {
+                    // move inputs out (no per-request copy on the hot path)
+                    let inputs: Vec<Vec<f32>> = batch
+                        .requests
+                        .iter_mut()
+                        .map(|r| std::mem::take(&mut r.input))
+                        .collect();
+                    match backend.infer_batch(&inputs) {
+                        Ok(outputs) => {
+                            let n = batch.requests.len();
+                            for (req, output) in batch.requests.into_iter().zip(outputs) {
+                                let _ = ctx.send(Completion {
+                                    id: req.id,
+                                    output,
+                                    latency: req.arrival.elapsed(),
+                                    batch_size: n,
+                                });
+                            }
+                        }
+                        Err(e) => {
+                            // failure injection path: drop the batch but keep
+                            // serving; completions for it never appear
+                            eprintln!("worker: batch failed: {e:#}");
+                        }
+                    }
+                }
+            })
+            .expect("spawn worker");
+        Server { tx: Some(tx), completions: crx, worker: Some(worker) }
+    }
+
+    /// Submit a request; `Err` means the queue is full (backpressure) or
+    /// the server is shutting down.
+    pub fn submit(&self, id: u64, input: Vec<f32>) -> std::result::Result<(), Request> {
+        let req = Request { id, input, arrival: Instant::now() };
+        match self.tx.as_ref() {
+            None => Err(req),
+            Some(tx) => match tx.try_send(req) {
+                Ok(()) => Ok(()),
+                Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => Err(r),
+            },
+        }
+    }
+
+    /// Blocking submit (waits for queue space).
+    pub fn submit_blocking(&self, id: u64, input: Vec<f32>) -> Result<()> {
+        let req = Request { id, input, arrival: Instant::now() };
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("server closed"))?
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("worker gone"))
+    }
+
+    /// Receive the next completion (blocks until one arrives or the worker
+    /// exits after shutdown).
+    pub fn next_completion(&self) -> Option<Completion> {
+        self.completions.recv().ok()
+    }
+
+    /// Stop accepting requests; the worker drains the queue and exits.
+    pub fn shutdown(&mut self) {
+        self.tx = None;
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use std::time::Duration;
+
+    /// Mock backend: output = input sum + batch-size marker; optional
+    /// failure injection on a chosen batch index.
+    struct Mock {
+        delay: Duration,
+        fail_every: Option<usize>,
+        calls: std::sync::atomic::AtomicUsize,
+    }
+
+    impl InferBackend for Mock {
+        fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            let call = self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            if let Some(k) = self.fail_every {
+                if k > 0 && (call + 1) % k == 0 {
+                    anyhow::bail!("injected failure on call {call}");
+                }
+            }
+            std::thread::sleep(self.delay);
+            Ok(inputs
+                .iter()
+                .map(|x| vec![x.iter().sum::<f32>(), inputs.len() as f32])
+                .collect())
+        }
+    }
+
+    fn mock(delay_ms: u64, fail_every: Option<usize>) -> Mock {
+        Mock {
+            delay: Duration::from_millis(delay_ms),
+            fail_every,
+            calls: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    #[test]
+    fn end_to_end_all_requests_complete() {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            queue_depth: 64,
+        };
+        let mut srv = Server::start(|| mock(0, None), cfg);
+        let n = 40;
+        for i in 0..n {
+            srv.submit_blocking(i, vec![i as f32, 1.0]).unwrap();
+        }
+        let mut metrics = Metrics::new();
+        metrics.start();
+        let mut seen = vec![false; n as usize];
+        for _ in 0..n {
+            let c = srv.next_completion().unwrap();
+            assert_eq!(c.output[0], c.id as f32 + 1.0);
+            seen[c.id as usize] = true;
+            metrics.record(c.latency, c.batch_size);
+        }
+        assert!(seen.iter().all(|&s| s));
+        let s = metrics.summary();
+        assert!(s.mean_batch >= 1.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batching_actually_batches() {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
+            queue_depth: 64,
+        };
+        let mut srv = Server::start(|| mock(5, None), cfg);
+        for i in 0..16 {
+            srv.submit_blocking(i, vec![1.0]).unwrap();
+        }
+        let mut max_batch = 0usize;
+        for _ in 0..16 {
+            let c = srv.next_completion().unwrap();
+            max_batch = max_batch.max(c.batch_size);
+        }
+        assert!(max_batch >= 4, "expected batching, max batch {max_batch}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn failure_injection_drops_batch_but_server_survives() {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(0) },
+            queue_depth: 64,
+        };
+        let mut srv = Server::start(|| mock(0, Some(3)), cfg);
+        let n = 30;
+        for i in 0..n {
+            srv.submit_blocking(i, vec![1.0]).unwrap();
+        }
+        srv.tx = None; // stop accepting; worker drains
+        let mut got = 0;
+        while let Some(_c) = srv.next_completion() {
+            got += 1;
+        }
+        // every 3rd single-request batch fails: 10 dropped
+        assert_eq!(got, 20, "completions {got}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn backpressure_on_full_queue() {
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(0) },
+            queue_depth: 2,
+        };
+        let srv = Server::start(|| mock(50, None), cfg);
+        // worker is sleeping on the first batch; queue of 2 fills quickly
+        let mut rejected = 0;
+        for i in 0..20 {
+            if srv.submit(i, vec![1.0]).is_err() {
+                rejected += 1;
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+    }
+}

@@ -1,0 +1,114 @@
+//! Workload generators for serving experiments: open-loop Poisson arrivals,
+//! bursty (on/off) traffic, and a closed-loop (fixed-concurrency) driver
+//! model. Deterministic via the crate PRNG.
+
+use crate::util::rng::Rng;
+
+/// An arrival trace: request release times in seconds from t=0.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub arrivals_s: Vec<f64>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.arrivals_s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals_s.is_empty()
+    }
+
+    /// Mean offered rate (req/s) over the trace span.
+    pub fn offered_rate(&self) -> f64 {
+        if self.arrivals_s.len() < 2 {
+            return 0.0;
+        }
+        let span = self.arrivals_s.last().unwrap() - self.arrivals_s[0];
+        (self.arrivals_s.len() - 1) as f64 / span.max(1e-9)
+    }
+}
+
+/// Open-loop Poisson arrivals at `rate` req/s.
+pub fn poisson(n: usize, rate: f64, seed: u64) -> Trace {
+    assert!(rate > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut arrivals = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += rng.exp(rate);
+        arrivals.push(t);
+    }
+    Trace { arrivals_s: arrivals }
+}
+
+/// Bursty on/off traffic: `burst_len` back-to-back requests at `peak_rate`,
+/// then an idle gap so the long-run average is `avg_rate`.
+pub fn bursty(n: usize, avg_rate: f64, peak_rate: f64, burst_len: usize, seed: u64) -> Trace {
+    assert!(peak_rate >= avg_rate && burst_len >= 1);
+    let mut rng = Rng::new(seed);
+    let mut arrivals = Vec::with_capacity(n);
+    let mut t = 0.0;
+    let burst_span = burst_len as f64 / peak_rate;
+    let period = burst_len as f64 / avg_rate;
+    while arrivals.len() < n {
+        let burst_start = t + rng.f64() * 0.1 * period; // jitter
+        for i in 0..burst_len {
+            if arrivals.len() >= n {
+                break;
+            }
+            arrivals.push(burst_start + i as f64 / peak_rate);
+        }
+        t = burst_start + period.max(burst_span);
+    }
+    Trace { arrivals_s: arrivals }
+}
+
+/// Uniform (fixed-interval) arrivals — the closed-form baseline.
+pub fn uniform(n: usize, rate: f64) -> Trace {
+    Trace { arrivals_s: (0..n).map(|i| i as f64 / rate).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_converges() {
+        let t = poisson(20_000, 250.0, 1);
+        assert!((t.offered_rate() - 250.0).abs() / 250.0 < 0.05, "{}", t.offered_rate());
+        // strictly increasing
+        assert!(t.arrivals_s.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn poisson_deterministic_per_seed() {
+        assert_eq!(poisson(100, 10.0, 7).arrivals_s, poisson(100, 10.0, 7).arrivals_s);
+        assert_ne!(poisson(100, 10.0, 7).arrivals_s, poisson(100, 10.0, 8).arrivals_s);
+    }
+
+    #[test]
+    fn bursty_preserves_average_rate() {
+        let t = bursty(5_000, 50.0, 500.0, 20, 3);
+        assert!((t.offered_rate() - 50.0).abs() / 50.0 < 0.2, "{}", t.offered_rate());
+    }
+
+    #[test]
+    fn bursty_has_peaks() {
+        let t = bursty(1_000, 50.0, 500.0, 25, 4);
+        // within a burst, inter-arrival = 1/peak
+        let min_gap = t
+            .arrivals_s
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_gap < 1.5 / 500.0, "min gap {min_gap}");
+    }
+
+    #[test]
+    fn uniform_exact() {
+        let t = uniform(11, 100.0);
+        assert_eq!(t.len(), 11);
+        assert!((t.offered_rate() - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,153 @@
+//! Block RAM primitive shapes and the physical mapping rule.
+//!
+//! Xilinx BRAM18 is a fixed 18 Kib dual-port primitive configurable into a
+//! small set of aspect ratios; an arbitrary (width × depth) logical buffer
+//! is realised as a grid of primitives, and the slack in that grid is
+//! exactly the OCM inefficiency the paper attacks (§II.B, Eq. 1).
+
+use crate::util::ceil_div;
+
+/// Capacity of one BRAM18 primitive in bits (18 Kib).
+pub const BRAM18_BITS: u64 = 18 * 1024;
+
+/// Capacity of one UltraRAM block in bits (288 Kib, fixed 72 × 4096).
+pub const URAM_BITS: u64 = 288 * 1024;
+
+/// One configurable aspect ratio of the BRAM18 primitive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BramMode {
+    pub width: u64,
+    pub depth: u64,
+}
+
+/// The BRAM18 aspect modes (true dual port; the 36-wide mode is
+/// simple-dual-port, which suits weight buffers: written once, read always).
+pub const BRAM18_MODES: [BramMode; 6] = [
+    BramMode { width: 1, depth: 16384 },
+    BramMode { width: 2, depth: 8192 },
+    BramMode { width: 4, depth: 4096 },
+    BramMode { width: 9, depth: 2048 },
+    BramMode { width: 18, depth: 1024 },
+    BramMode { width: 36, depth: 512 },
+];
+
+/// Number of BRAM18 primitives needed for a (width_bits × depth) buffer,
+/// choosing the aspect mode that minimises the count (what a competent RTL
+/// memory generator / Vivado will infer).
+pub fn brams_for(width_bits: u64, depth: u64) -> u64 {
+    if width_bits == 0 || depth == 0 {
+        return 0;
+    }
+    BRAM18_MODES
+        .iter()
+        .map(|m| ceil_div(width_bits, m.width) * ceil_div(depth, m.depth))
+        .min()
+        .unwrap()
+}
+
+/// The aspect mode achieving `brams_for` (for reporting / the packer).
+pub fn best_mode(width_bits: u64, depth: u64) -> BramMode {
+    *BRAM18_MODES
+        .iter()
+        .min_by_key(|m| ceil_div(width_bits, m.width) * ceil_div(depth, m.depth))
+        .unwrap()
+}
+
+/// URAM blocks for a (width_bits × depth) buffer (fixed 72 × 4096 shape).
+pub fn urams_for(width_bits: u64, depth: u64) -> u64 {
+    if width_bits == 0 || depth == 0 {
+        return 0;
+    }
+    ceil_div(width_bits, 72) * ceil_div(depth, 4096)
+}
+
+/// The paper's §II.B.b kernel-size ceiling: a K×K conv weight buffer can
+/// reach at most `K² / 2^ceil(log2(K²))` efficiency from depth quantisation.
+pub fn kernel_efficiency_ceiling(k: u64) -> f64 {
+    let k2 = k * k;
+    let pow2 = (k2 as f64).log2().ceil() as u32;
+    k2 as f64 / (1u64 << pow2) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_capacities() {
+        for m in BRAM18_MODES {
+            let bits = m.width * m.depth;
+            if m.width >= 9 {
+                // parity bits usable at widths 9/18/36 -> full 18 Kib
+                assert_eq!(bits, 18 * 1024, "{m:?}");
+            } else {
+                // narrow modes expose only the 16 Kib data array
+                assert_eq!(bits, 16 * 1024, "{m:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_fits_use_one_bram() {
+        assert_eq!(brams_for(18, 1024), 1);
+        assert_eq!(brams_for(36, 512), 1);
+        assert_eq!(brams_for(1, 16384), 1);
+    }
+
+    #[test]
+    fn wide_shallow_buffers_waste() {
+        // 128 bits wide, 64 deep: needs ceil(128/36)=4 primitives although
+        // only 8 Kib of payload — the Fig. 2 effect.
+        assert_eq!(brams_for(128, 64), 4);
+    }
+
+    #[test]
+    fn deep_narrow_buffers_stack() {
+        assert_eq!(brams_for(18, 2048), 2);
+        assert_eq!(brams_for(9, 2048), 1);
+    }
+
+    #[test]
+    fn zero_cases() {
+        assert_eq!(brams_for(0, 100), 0);
+        assert_eq!(brams_for(100, 0), 0);
+    }
+
+    #[test]
+    fn best_mode_consistent_with_count() {
+        for (w, d) in [(36, 512), (72, 100), (7, 3000), (128, 64)] {
+            let m = best_mode(w, d);
+            assert_eq!(
+                ceil_div(w, m.width) * ceil_div(d, m.depth),
+                brams_for(w, d)
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_ceiling_matches_paper() {
+        // 3x3: 9/16 = 0.5625 — "lowest for the very popular 3x3 kernel"
+        assert!((kernel_efficiency_ceiling(3) - 0.5625).abs() < 1e-12);
+        // 1x1 (pointwise): exactly 1.0 — "highest for the 1x1"
+        assert_eq!(kernel_efficiency_ceiling(1), 1.0);
+        assert!(kernel_efficiency_ceiling(5) == 25.0 / 32.0);
+        assert!(kernel_efficiency_ceiling(3) < kernel_efficiency_ceiling(5));
+    }
+
+    #[test]
+    fn monotone_in_depth_and_width() {
+        for w in [1u64, 9, 18, 40, 100] {
+            for d in [1u64, 100, 1000, 5000] {
+                assert!(brams_for(w, d) <= brams_for(w + 1, d));
+                assert!(brams_for(w, d) <= brams_for(w, d + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn uram_shapes() {
+        assert_eq!(urams_for(72, 4096), 1);
+        assert_eq!(urams_for(73, 4096), 2);
+        assert_eq!(urams_for(72, 4097), 2);
+    }
+}

@@ -1,0 +1,185 @@
+//! SLR floorplanner — the paper's future-work item ("integrating the memory
+//! packing approach into a design space exploration framework to perform
+//! automatic floorplanning"). Assigns pipeline stages to SLRs such that the
+//! dataflow order is preserved (stages map to a monotone SLR sequence — a
+//! daisy-chain crosses each SLR boundary once, Fig. 5) while minimizing the
+//! maximum per-SLR resource pressure.
+//!
+//! With the monotone constraint the problem is a balanced-partition of a
+//! sequence into `k` contiguous runs — solved exactly by binary search on
+//! the bottleneck + greedy feasibility (the classic linear-partition trick).
+
+use super::Device;
+use crate::folding::layer_resources;
+use crate::nn::{Network, Stage};
+
+/// Per-stage resource demand used by the floorplanner.
+#[derive(Clone, Debug)]
+pub struct StageDemand {
+    pub name: String,
+    pub luts: f64,
+    pub bram18: u64,
+}
+
+/// Extract per-stage demands from a network.
+pub fn stage_demands(net: &Network) -> Vec<StageDemand> {
+    net.stages
+        .iter()
+        .map(|s| {
+            let name = match s {
+                Stage::Mvau(l) => l.name.clone(),
+                Stage::MaxPool { name, .. } => name.clone(),
+                Stage::ResBlock { name, .. } => name.clone(),
+            };
+            let luts: f64 = s.layers().iter().map(|l| layer_resources(l).luts).sum();
+            // excluded layers (first conv, classifier) keep weights in
+            // URAM/HBM/DDR per §V and do not pressure the BRAM floorplan
+            let bram: u64 = s
+                .layers()
+                .iter()
+                .filter(|l| !l.exclude_from_packing)
+                .map(|l| crate::memory::WeightBuffer::from_layer(l, 0).brams())
+                .sum();
+            StageDemand { name, luts, bram18: bram }
+        })
+        .collect()
+}
+
+/// A floorplan: stage index -> SLR.
+#[derive(Clone, Debug)]
+pub struct Floorplan {
+    pub assignment: Vec<usize>,
+    /// Max over SLRs of the BRAM pressure (fraction of SLR capacity).
+    pub max_bram_pressure: f64,
+    /// Max over SLRs of the LUT pressure.
+    pub max_lut_pressure: f64,
+    /// Number of SLR boundary crossings (== k-1 for a daisy chain).
+    pub crossings: usize,
+}
+
+/// Can the sequence be split into `k` contiguous runs with every run's BRAM
+/// demand ≤ `limit`? Greedy: extend the current run until it would burst.
+fn feasible(demands: &[StageDemand], k: usize, limit: u64) -> Option<Vec<usize>> {
+    let mut assignment = Vec::with_capacity(demands.len());
+    let mut slr = 0usize;
+    let mut acc = 0u64;
+    for d in demands {
+        if d.bram18 > limit {
+            return None; // single stage exceeds the limit
+        }
+        if acc + d.bram18 > limit {
+            slr += 1;
+            acc = 0;
+            if slr >= k {
+                return None;
+            }
+        }
+        acc += d.bram18;
+        assignment.push(slr);
+    }
+    Some(assignment)
+}
+
+/// Compute the optimal monotone floorplan for `net` on `dev` (bottleneck
+/// BRAM minimized; LUT pressure reported). Returns None if even one stage
+/// exceeds an SLR.
+pub fn floorplan(net: &Network, dev: &Device) -> Option<Floorplan> {
+    let k = dev.slrs.len();
+    let demands = stage_demands(net);
+    let total: u64 = demands.iter().map(|d| d.bram18).sum();
+    let (mut lo, mut hi) = (total / k as u64, total);
+    let mut best: Option<Vec<usize>> = feasible(&demands, k, hi);
+    best.as_ref()?;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        match feasible(&demands, k, mid) {
+            Some(a) => {
+                best = Some(a);
+                hi = mid;
+            }
+            None => lo = mid + 1,
+        }
+    }
+    let assignment = feasible(&demands, k, hi).or(best)?;
+
+    // pressures per SLR
+    let mut bram = vec![0u64; k];
+    let mut luts = vec![0f64; k];
+    for (i, d) in demands.iter().enumerate() {
+        bram[assignment[i]] += d.bram18;
+        luts[assignment[i]] += d.luts;
+    }
+    let max_bram_pressure = bram
+        .iter()
+        .zip(&dev.slrs)
+        .map(|(&b, s)| b as f64 / s.bram18.max(1) as f64)
+        .fold(0.0, f64::max);
+    let max_lut_pressure = luts
+        .iter()
+        .zip(&dev.slrs)
+        .map(|(&l, s)| l / s.luts.max(1) as f64)
+        .fold(0.0, f64::max);
+    let crossings = assignment.windows(2).filter(|w| w[0] != w[1]).count();
+    // infeasible if the best bottleneck still exceeds an SLR's capacity
+    if max_bram_pressure > 1.0 {
+        return None;
+    }
+    Some(Floorplan { assignment, max_bram_pressure, max_lut_pressure, crossings })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{alveo_u250, alveo_u280};
+    use crate::nn::resnet50;
+
+    #[test]
+    fn rn50_u250_floorplan_like_fig5() {
+        let net = resnet50(1);
+        let dev = alveo_u250();
+        let fp = floorplan(&net, &dev).expect("feasible on U250");
+        // monotone daisy-chain with at most k-1 crossings
+        assert!(fp.crossings <= dev.slrs.len() - 1);
+        assert!(fp.assignment.windows(2).all(|w| w[0] <= w[1]));
+        // balanced enough to place
+        assert!(fp.max_bram_pressure < 1.0, "pressure {}", fp.max_bram_pressure);
+    }
+
+    #[test]
+    fn floorplan_beats_naive_bit_balance() {
+        // the optimizer's bottleneck must be <= the memory::weight_buffers
+        // bit-balanced assignment's bottleneck
+        let net = resnet50(1);
+        let dev = alveo_u250();
+        let fp = floorplan(&net, &dev).unwrap();
+        let demands = stage_demands(&net);
+        let k = dev.slrs.len();
+        let naive: Vec<usize> =
+            (0..demands.len()).map(|i| i * k / demands.len()).collect();
+        let mut naive_bram = vec![0u64; k];
+        for (i, d) in demands.iter().enumerate() {
+            naive_bram[naive[i]] += d.bram18;
+        }
+        let naive_max = *naive_bram.iter().max().unwrap() as f64
+            / dev.slrs[0].bram18 as f64;
+        assert!(fp.max_bram_pressure <= naive_max + 1e-9);
+    }
+
+    #[test]
+    fn u280_is_tighter_than_u250() {
+        let net = resnet50(1);
+        let a = floorplan(&net, &alveo_u250()).unwrap();
+        let b = floorplan(&net, &alveo_u280()).unwrap();
+        assert!(b.max_bram_pressure > a.max_bram_pressure);
+    }
+
+    #[test]
+    fn infeasible_when_stage_too_big() {
+        // a tiny fake device cannot host RN50's res5 stages
+        let mut dev = alveo_u250();
+        for s in &mut dev.slrs {
+            s.bram18 = 50;
+        }
+        assert!(floorplan(&resnet50(1), &dev).is_none());
+    }
+}

@@ -1,0 +1,191 @@
+//! FPGA device models (DESIGN.md substitution for real Zynq/Alveo silicon).
+//!
+//! Everything the paper's claims are phrased in — LUT / BRAM18 / URAM / DSP
+//! budgets, SLR (super logic region) geometry for multi-die Alveo parts, and
+//! nominal clock targets — is represented here with the public datasheet
+//! numbers for the four parts the paper evaluates (Zynq 7020 / 7012S, Alveo
+//! U250 / U280).
+
+pub mod bram;
+pub mod floorplan;
+
+pub use bram::{brams_for, BramMode, BRAM18_BITS, BRAM18_MODES, URAM_BITS};
+pub use floorplan::{floorplan, Floorplan};
+
+/// One super logic region (die) of a multi-SLR device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Slr {
+    pub luts: u64,
+    pub bram18: u64,
+    pub uram: u64,
+    pub dsp: u64,
+}
+
+/// An FPGA part.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    pub family: Family,
+    pub luts: u64,
+    pub bram18: u64,
+    pub uram: u64,
+    pub dsp: u64,
+    /// SLR regions; a single entry means a monolithic die.
+    pub slrs: Vec<Slr>,
+    /// Nominal compute-domain clock target for dataflow designs (MHz).
+    pub nominal_compute_mhz: f64,
+    /// Nominal (overclocked) memory-domain clock target (MHz).
+    pub nominal_memory_mhz: f64,
+    /// BRAM primitive specified Fmax (MHz) — the hard ceiling for R_F.
+    pub bram_fmax_mhz: f64,
+    /// LUTs consumed by the static platform shell (Alveo XDMA/HBM shell;
+    /// zero on Zynq where the PS replaces it).
+    pub shell_luts: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Zynq7000,
+    UltraScalePlus,
+}
+
+impl Device {
+    pub fn is_monolithic(&self) -> bool {
+        self.slrs.len() == 1
+    }
+
+    /// Total OCM (BRAM only) in bits.
+    pub fn bram_bits(&self) -> u64 {
+        self.bram18 * BRAM18_BITS
+    }
+
+    /// Uniform split of a monolithic budget into SLR entries.
+    fn split(luts: u64, bram18: u64, uram: u64, dsp: u64, n: u64) -> Vec<Slr> {
+        (0..n)
+            .map(|_| Slr { luts: luts / n, bram18: bram18 / n, uram: uram / n, dsp: dsp / n })
+            .collect()
+    }
+}
+
+/// Zynq-7020 (the BNN-Pynq target, Table I).
+pub fn zynq_7020() -> Device {
+    Device {
+        name: "zynq-7020",
+        family: Family::Zynq7000,
+        luts: 53_200,
+        bram18: 280, // 140 x RAMB36 = 280 x 18Kb
+        uram: 0,
+        dsp: 220,
+        slrs: Device::split(53_200, 280, 0, 220, 1),
+        nominal_compute_mhz: 100.0,
+        nominal_memory_mhz: 200.0,
+        bram_fmax_mhz: 388.0, // -1 speed grade block RAM spec
+        shell_luts: 0,
+    }
+}
+
+/// Zynq-7012S — the smaller part the paper ports CNV-W1A1-P4 onto (Table V).
+pub fn zynq_7012s() -> Device {
+    Device {
+        name: "zynq-7012s",
+        family: Family::Zynq7000,
+        luts: 34_400,
+        bram18: 144, // 72 x RAMB36
+        uram: 0,
+        dsp: 120,
+        slrs: Device::split(34_400, 144, 0, 120, 1),
+        nominal_compute_mhz: 100.0,
+        nominal_memory_mhz: 200.0,
+        bram_fmax_mhz: 388.0,
+        shell_luts: 0,
+    }
+}
+
+/// Alveo U250 — the paper's large RN50 target (4 SLRs).
+pub fn alveo_u250() -> Device {
+    Device {
+        name: "alveo-u250",
+        family: Family::UltraScalePlus,
+        luts: 1_728_000,
+        bram18: 5_376, // 2688 x RAMB36
+        uram: 1_280,
+        dsp: 12_288,
+        slrs: Device::split(1_728_000, 5_376, 1_280, 12_288, 4),
+        nominal_compute_mhz: 200.0,
+        nominal_memory_mhz: 400.0,
+        bram_fmax_mhz: 650.0, // UltraScale+ block RAM spec
+        shell_luts: 100_000,  // XDMA shell
+    }
+}
+
+/// Alveo U280 — the smaller 3-SLR + HBM card (port target, Table V).
+pub fn alveo_u280() -> Device {
+    Device {
+        name: "alveo-u280",
+        family: Family::UltraScalePlus,
+        luts: 1_304_000,
+        bram18: 4_032, // 2016 x RAMB36
+        uram: 960,
+        dsp: 9_024,
+        slrs: Device::split(1_304_000, 4_032, 960, 9_024, 3),
+        nominal_compute_mhz: 200.0,
+        nominal_memory_mhz: 400.0,
+        bram_fmax_mhz: 650.0,
+        shell_luts: 160_000,  // XDMA + HBM shell
+    }
+}
+
+/// Look a device up by name (CLI surface).
+pub fn by_name(name: &str) -> Option<Device> {
+    match name {
+        "zynq-7020" | "7020" => Some(zynq_7020()),
+        "zynq-7012s" | "7012s" => Some(zynq_7012s()),
+        "alveo-u250" | "u250" => Some(alveo_u250()),
+        "alveo-u280" | "u280" => Some(alveo_u280()),
+        _ => None,
+    }
+}
+
+/// All modelled devices.
+pub fn all() -> Vec<Device> {
+    vec![zynq_7020(), zynq_7012s(), alveo_u250(), alveo_u280()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datasheet_sanity() {
+        let d = zynq_7020();
+        assert_eq!(d.bram_bits(), 280 * 18 * 1024);
+        assert!(d.is_monolithic());
+        let u250 = alveo_u250();
+        assert_eq!(u250.slrs.len(), 4);
+        assert_eq!(u250.slrs.iter().map(|s| s.bram18).sum::<u64>(), 5_376);
+    }
+
+    #[test]
+    fn ordering_of_sizes() {
+        // the paper's porting story requires these strict orders
+        assert!(zynq_7012s().bram18 < zynq_7020().bram18);
+        assert!(zynq_7012s().luts < zynq_7020().luts);
+        assert!(alveo_u280().bram18 < alveo_u250().bram18);
+        assert!(alveo_u280().luts < alveo_u250().luts);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("u280").unwrap().name, "alveo-u280");
+        assert_eq!(by_name("7020").unwrap().name, "zynq-7020");
+        assert!(by_name("vu9p").is_none());
+    }
+
+    #[test]
+    fn memory_overclock_within_bram_spec() {
+        for d in all() {
+            assert!(d.nominal_memory_mhz <= d.bram_fmax_mhz,
+                "{}: memory target exceeds BRAM primitive spec", d.name);
+        }
+    }
+}

@@ -1,0 +1,455 @@
+//! Cycle-level simulator of the GALS weight-streamer (paper §IV, Figs 6/7).
+//!
+//! A packed BRAM holds `N_b` co-located weight buffers read through the two
+//! physical ports in round-robin; the memory domain runs at
+//! `R_F = F_mem / F_comp` times the compute clock, so the compute side
+//! perceives `2·R_F` virtual ports (Eq. 2). Words cross the clock-domain
+//! boundary through per-stream asynchronous FIFOs; the compute side consumes
+//! one word per stream per compute cycle.
+//!
+//! Two configurations, matching Fig. 7:
+//! * **7a** — even `N_b`, integer `R_F`: half the streams on port A, half on
+//!   port B; each stream is read `2·R_F/N_b` times per compute cycle.
+//! * **7b** — odd `N_b`, fractional `R_F = N_b/2`: one buffer is split into
+//!   ODD/EVEN address sub-buffers served by *different* ports and re-merged
+//!   by a data-width converter (DWC); the split stream would get
+//!   `2·N_b/(N_b+1) > 1` words per compute cycle, so the compute side
+//!   backpressures it and an *adaptive* streamer redistributes the unused
+//!   slots to the other streams — a static streamer wastes them.
+//!
+//! The simulator advances a base clock of `lcm(mem, comp)` phases and
+//! reproduces these rates cycle-exactly, including FIFO occupancy and
+//! backpressure; tests assert the paper's closed-form rates.
+
+use crate::util::rng::Rng;
+
+/// Frequency ratio `R_F = F_mem / F_comp` as an exact rational num/den.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ratio {
+    pub num: u64,
+    pub den: u64,
+}
+
+impl Ratio {
+    pub fn new(num: u64, den: u64) -> Ratio {
+        assert!(num > 0 && den > 0 && num >= den, "R_F must be >= 1");
+        Ratio { num, den }
+    }
+
+    pub fn as_f64(self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    /// `R_F = 2` (Fig. 7a with N_b = 4).
+    pub fn two() -> Ratio {
+        Ratio::new(2, 1)
+    }
+
+    /// `R_F = 1.5` (Fig. 7b with N_b = 3).
+    pub fn three_halves() -> Ratio {
+        Ratio::new(3, 2)
+    }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 { a } else { gcd(b, a % b) }
+}
+
+/// Streamer configuration.
+#[derive(Clone, Debug)]
+pub struct StreamerConfig {
+    /// Words per logical buffer (readback wraps around — continuous frames).
+    pub buffer_depths: Vec<u64>,
+    /// Memory/compute frequency ratio.
+    pub rf: Ratio,
+    /// Per-stream async FIFO depth (words).
+    pub fifo_depth: usize,
+    /// Index of the buffer split ODD/EVEN across both ports (Fig. 7b).
+    pub split: Option<usize>,
+    /// Adaptive read-slot reallocation under backpressure (Fig. 7b text).
+    pub adaptive: bool,
+}
+
+impl StreamerConfig {
+    /// Fig. 7a: `n` equal buffers, integer ratio, no split.
+    pub fn fig7a(n: usize, depth: u64, rf: Ratio) -> StreamerConfig {
+        StreamerConfig {
+            buffer_depths: vec![depth; n],
+            rf,
+            fifo_depth: 8,
+            split: None,
+            adaptive: true,
+        }
+    }
+
+    /// Fig. 7b: `n` (odd) equal buffers, `R_F = n/2`, buffer 0 split.
+    pub fn fig7b(n: usize, depth: u64) -> StreamerConfig {
+        assert!(n % 2 == 1, "fig7b wants odd N_b");
+        StreamerConfig {
+            buffer_depths: vec![depth; n],
+            rf: Ratio::new(n as u64, 2),
+            fifo_depth: 8,
+            split: Some(0),
+            adaptive: true,
+        }
+    }
+}
+
+/// Per-stream results.
+#[derive(Clone, Debug)]
+pub struct StreamStats {
+    /// Words delivered to the compute domain.
+    pub words: u64,
+    /// Compute cycles in which this stream had no word available (stall).
+    pub stalls: u64,
+    /// Achieved rate in words per compute cycle.
+    pub rate: f64,
+}
+
+/// Whole-run results.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub per_stream: Vec<StreamStats>,
+    pub compute_cycles: u64,
+    pub memory_cycles: u64,
+    /// Port read slots that went unused (idle or blocked by full FIFOs).
+    pub wasted_slots: u64,
+}
+
+impl SimResult {
+    /// Minimum achieved rate over streams — ≥ 1.0 means full throughput
+    /// (every MVAU gets its weight word every compute cycle).
+    pub fn min_rate(&self) -> f64 {
+        self.per_stream.iter().map(|s| s.rate).fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// One port-multiplexed packed-BRAM weight streamer.
+///
+/// Sub-streams: each logical buffer is one stream, except the split buffer
+/// which becomes two sub-streams (ODD/EVEN) merged by the DWC at the
+/// consumer; consumption alternates EVEN, ODD, EVEN, ... (address order).
+pub struct StreamerSim {
+    cfg: StreamerConfig,
+    /// sub-stream -> owning logical stream
+    owner: Vec<usize>,
+    /// sub-stream -> serving port (0 = A, 1 = B)
+    port: Vec<usize>,
+    /// FIFO occupancy per sub-stream
+    fifo: Vec<usize>,
+    /// read pointer per sub-stream (wraps at its depth)
+    rdptr: Vec<u64>,
+    /// round-robin pointer per port
+    rr: [usize; 2],
+    /// DWC phase for the split stream (0 = EVEN next, 1 = ODD next)
+    dwc_phase: usize,
+    /// Precomputed sub-streams per port (hot loop: no per-cycle allocation).
+    port_streams: [Vec<usize>; 2],
+    /// Precomputed logical stream -> (first sub, second sub or usize::MAX).
+    subs: Vec<(usize, usize)>,
+}
+
+impl StreamerSim {
+    pub fn new(cfg: StreamerConfig) -> StreamerSim {
+        let n = cfg.buffer_depths.len();
+        assert!(n >= 1);
+        let mut owner = Vec::new();
+        let mut port = Vec::new();
+        match cfg.split {
+            None => {
+                // Fig 7a: alternate streams across ports
+                for s in 0..n {
+                    owner.push(s);
+                    port.push(s % 2);
+                }
+            }
+            Some(sp) => {
+                assert!(sp < n, "split index in range");
+                // split stream contributes EVEN on port A and ODD on port B;
+                // remaining streams alternate starting opposite the split
+                for s in 0..n {
+                    if s == sp {
+                        owner.push(s); // EVEN half
+                        port.push(0);
+                        owner.push(s); // ODD half
+                        port.push(1);
+                    } else {
+                        owner.push(s);
+                        port.push((s + 1) % 2);
+                    }
+                }
+            }
+        }
+        let m = owner.len();
+        let port_streams = [
+            (0..m).filter(|&s| port[s] == 0).collect::<Vec<_>>(),
+            (0..m).filter(|&s| port[s] == 1).collect::<Vec<_>>(),
+        ];
+        let mut subs = vec![(usize::MAX, usize::MAX); n];
+        for (sub, &o) in owner.iter().enumerate() {
+            if subs[o].0 == usize::MAX {
+                subs[o].0 = sub;
+            } else {
+                subs[o].1 = sub;
+            }
+        }
+        StreamerSim {
+            cfg,
+            owner,
+            port,
+            fifo: vec![0; m],
+            rdptr: vec![0; m],
+            rr: [0, 0],
+            dwc_phase: 0,
+            port_streams,
+            subs,
+        }
+    }
+
+    /// Run for `compute_cycles` compute-domain cycles; returns rates.
+    pub fn run(&mut self, compute_cycles: u64) -> SimResult {
+        let n_logical = self.cfg.buffer_depths.len();
+        let rf = self.cfg.rf;
+        // base clock: comp edge every `num` phases, mem edge every `den`
+        let g = gcd(rf.num, rf.den);
+        let (comp_period, mem_period) = (rf.num / g, rf.den / g);
+        let total_phases = compute_cycles * comp_period;
+
+        let mut words = vec![0u64; n_logical];
+        let mut stalls = vec![0u64; n_logical];
+        let mut mem_cycles = 0u64;
+        let mut wasted = 0u64;
+
+        for phase in 0..total_phases {
+            // memory-domain edge: both ports issue one read each
+            if phase % mem_period == 0 {
+                mem_cycles += 1;
+                for p in 0..2usize {
+                    let on_port = &self.port_streams[p];
+                    let len = on_port.len();
+                    let mut served = false;
+                    if len > 0 {
+                        let start = self.rr[p] % len;
+                        for k in 0..len {
+                            let s = on_port[(start + k) % len];
+                            if self.fifo[s] < self.cfg.fifo_depth {
+                                self.fifo[s] += 1;
+                                let depth = self.cfg.buffer_depths[self.owner[s]];
+                                self.rdptr[s] = (self.rdptr[s] + 1) % depth.max(1);
+                                self.rr[p] = (start + k + 1) % len;
+                                served = true;
+                                break;
+                            }
+                            if !self.cfg.adaptive {
+                                // static streamer: the scheduled slot is lost
+                                self.rr[p] = (start + 1) % len;
+                                break;
+                            }
+                        }
+                    }
+                    if !served {
+                        wasted += 1;
+                    }
+                }
+            }
+            // compute-domain edge: each logical stream consumes one word
+            if phase % comp_period == 0 {
+                for s in 0..n_logical {
+                    if Some(s) == self.cfg.split {
+                        // DWC: alternate EVEN/ODD halves
+                        let (even, odd) = self.subs[s];
+                        let want = if self.dwc_phase == 0 { even } else { odd };
+                        if self.fifo[want] > 0 {
+                            self.fifo[want] -= 1;
+                            words[s] += 1;
+                            self.dwc_phase ^= 1;
+                        } else {
+                            stalls[s] += 1;
+                        }
+                    } else {
+                        let sub = self.subs[s].0;
+                        if self.fifo[sub] > 0 {
+                            self.fifo[sub] -= 1;
+                            words[s] += 1;
+                        } else {
+                            stalls[s] += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        SimResult {
+            per_stream: (0..n_logical)
+                .map(|s| StreamStats {
+                    words: words[s],
+                    stalls: stalls[s],
+                    rate: words[s] as f64 / compute_cycles as f64,
+                })
+                .collect(),
+            compute_cycles,
+            memory_cycles: mem_cycles,
+            wasted_slots: wasted,
+        }
+    }
+}
+
+/// LUT overhead model for a packed memory subsystem (Table IV "Logic"
+/// column): per-stream CDC FIFO + streamer address/mux logic, plus the DWC
+/// for split streams. Calibrated against Table IV (CNV ~4-7 kLUT for ~300
+/// streams, RN50 ~39-66 kLUT for thousands of streams).
+pub fn streamer_lut_overhead(n_streams: usize, n_bins: usize, with_dwc: usize) -> f64 {
+    const LUT_PER_STREAM_FIFO: f64 = 18.0; // async FIFO + CDC sync flops
+    const LUT_PER_BIN_MUX: f64 = 22.0; // round-robin port mux + addressing
+    const LUT_PER_DWC: f64 = 40.0; // odd/even data-width converter
+    n_streams as f64 * LUT_PER_STREAM_FIFO
+        + n_bins as f64 * LUT_PER_BIN_MUX
+        + with_dwc as f64 * LUT_PER_DWC
+}
+
+/// Randomized mixed-traffic experiment: unequal depths at a given H_B and
+/// R_F. Used by property tests and the `gals_throughput` bench.
+pub fn random_config(rng: &mut Rng, nb: usize, rf: Ratio) -> StreamerConfig {
+    StreamerConfig {
+        buffer_depths: (0..nb).map(|_| 16 + rng.below(512)).collect(),
+        rf,
+        fifo_depth: 4 + rng.below(12) as usize,
+        split: None,
+        adaptive: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CYCLES: u64 = 4_000;
+    const TOL: f64 = 0.02;
+
+    fn approx(a: f64, b: f64) -> bool {
+        (a - b).abs() <= TOL * b.max(1e-9)
+    }
+
+    #[test]
+    fn fig7a_four_buffers_rf2_full_throughput() {
+        // N_b = 4, R_F = 2: each stream read 2*R_F/N_b = 1.0 / compute cycle
+        let mut sim = StreamerSim::new(StreamerConfig::fig7a(4, 128, Ratio::two()));
+        let r = sim.run(CYCLES);
+        for s in &r.per_stream {
+            assert!(approx(s.rate, 1.0), "rate {}", s.rate);
+        }
+        assert!(r.min_rate() >= 1.0 - TOL);
+    }
+
+    #[test]
+    fn fig7a_four_buffers_rf1_half_throughput() {
+        // R_F = 1 with 4 buffers on 2 ports: 2*1/4 = 0.5 words/cycle
+        let mut sim = StreamerSim::new(StreamerConfig::fig7a(4, 128, Ratio::new(1, 1)));
+        let r = sim.run(CYCLES);
+        for s in &r.per_stream {
+            assert!(approx(s.rate, 0.5), "rate {}", s.rate);
+        }
+    }
+
+    #[test]
+    fn fig7a_two_buffers_rf1_is_classic_dual_port() {
+        // 2 buffers, 2 ports, same clock: each gets 1.0 (no FCMP needed)
+        let mut sim = StreamerSim::new(StreamerConfig::fig7a(2, 64, Ratio::new(1, 1)));
+        let r = sim.run(CYCLES);
+        assert!(r.min_rate() >= 1.0 - TOL);
+    }
+
+    #[test]
+    fn eq2_boundary_height_equals_two_rf() {
+        // H_B = 2*R_F exactly sustains rate 1.0; H_B = 2*R_F + 2 cannot
+        for (nb, rf) in [(4usize, Ratio::two()), (6, Ratio::new(3, 1)), (2, Ratio::new(1, 1))] {
+            let mut sim = StreamerSim::new(StreamerConfig::fig7a(nb, 96, rf));
+            assert!(
+                sim.run(CYCLES).min_rate() >= 1.0 - TOL,
+                "H_B = 2R_F must sustain (nb={nb})"
+            );
+            let mut over = StreamerSim::new(StreamerConfig::fig7a(nb + 2, 96, rf));
+            let r = over.run(CYCLES);
+            assert!(
+                r.min_rate() < 1.0 - TOL,
+                "H_B > 2R_F must lose throughput (nb={})",
+                nb + 2
+            );
+        }
+    }
+
+    #[test]
+    fn fig7b_three_buffers_rf_1_5_adaptive_full_throughput() {
+        // N_b = 3, R_F = 1.5, buffer 0 split ODD/EVEN: the split stream is
+        // offered 2*N_b/(N_b+1) = 1.5 > 1, compute backpressures it, and the
+        // adaptive streamer redistributes slots so ALL streams sustain 1.0
+        let mut sim = StreamerSim::new(StreamerConfig::fig7b(3, 120));
+        let r = sim.run(CYCLES);
+        for (i, s) in r.per_stream.iter().enumerate() {
+            assert!(approx(s.rate, 1.0), "stream {i} rate {}", s.rate);
+        }
+    }
+
+    #[test]
+    fn fig7b_static_streamer_loses_throughput() {
+        let mut cfg = StreamerConfig::fig7b(3, 120);
+        cfg.adaptive = false;
+        let mut sim = StreamerSim::new(cfg);
+        let r = sim.run(CYCLES);
+        // without slot reallocation the non-split streams only get
+        // 2*R_F/(N_b+1) = 0.75 words per compute cycle
+        assert!(r.min_rate() < 0.87, "static min rate {}", r.min_rate());
+    }
+
+    #[test]
+    fn fig7b_five_buffers_rf_2_5() {
+        let mut sim = StreamerSim::new(StreamerConfig::fig7b(5, 200));
+        let r = sim.run(CYCLES);
+        for s in &r.per_stream {
+            assert!(approx(s.rate, 1.0), "rate {}", s.rate);
+        }
+    }
+
+    #[test]
+    fn deeper_fifo_never_hurts() {
+        let mut shallow = StreamerConfig::fig7a(4, 77, Ratio::two());
+        shallow.fifo_depth = 2;
+        let mut deep = shallow.clone();
+        deep.fifo_depth = 32;
+        let rs = StreamerSim::new(shallow).run(CYCLES).min_rate();
+        let rd = StreamerSim::new(deep).run(CYCLES).min_rate();
+        assert!(rd >= rs - TOL, "deep {rd} vs shallow {rs}");
+    }
+
+    #[test]
+    fn rates_never_exceed_one() {
+        // compute consumes at most one word per stream per cycle
+        for nb in [2usize, 3, 4] {
+            let cfg = if nb % 2 == 0 {
+                StreamerConfig::fig7a(nb, 64, Ratio::new(4, 1))
+            } else {
+                StreamerConfig::fig7b(nb, 64)
+            };
+            let r = StreamerSim::new(cfg).run(CYCLES);
+            for s in &r.per_stream {
+                assert!(s.rate <= 1.0 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn conservation_words_plus_stalls() {
+        let r = StreamerSim::new(StreamerConfig::fig7a(6, 50, Ratio::two())).run(CYCLES);
+        for s in &r.per_stream {
+            assert_eq!(s.words + s.stalls, CYCLES);
+        }
+    }
+
+    #[test]
+    fn lut_overhead_scales_with_streams() {
+        let small = streamer_lut_overhead(300, 100, 0);
+        let big = streamer_lut_overhead(3000, 1400, 60);
+        assert!(small > 3_000.0 && small < 10_000.0, "CNV-class {small}");
+        assert!(big > 30_000.0 && big < 100_000.0, "RN50-class {big}");
+    }
+}

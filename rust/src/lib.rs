@@ -1,0 +1,34 @@
+//! # fcmp — Frequency Compensated Memory Packing
+//!
+//! Reproduction of *"Memory-Efficient Dataflow Inference for Deep CNNs on
+//! FPGA"* (Petrica et al., 2020) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate models FINN-style custom dataflow CNN inference accelerators and
+//! implements the paper's contribution — FCMP: overclocked GALS weight
+//! memories whose dual BRAM ports are round-robin multiplexed to expose
+//! `2·R_F` virtual ports, combined with genetic bin packing of logical weight
+//! buffers into physical BRAMs — plus every substrate needed to evaluate it:
+//! FPGA device models, the CNV / ResNet-50 topology zoo, the FINN folding and
+//! resource model, the physical RAM mapper, four packing engines, a
+//! cycle-level GALS streamer simulator, a timing-closure model, a dataflow
+//! pipeline simulator, and a PJRT-backed inference runtime with a serving
+//! coordinator.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod folding;
+pub mod gals;
+pub mod memory;
+pub mod nn;
+pub mod packing;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod timing;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,311 @@
+//! fcmp — command-line entry point.
+//!
+//! ```text
+//! fcmp pack     --network cnv-w1a1|cnv-w2a2|rn50-w1|rn50-w2 --device 7020|7012s|u250|u280
+//!               [--hb 4] [--engine ga|ffd|anneal] [--generations 120] [--seed 2020]
+//! fcmp report   --table 1|2|4|5|fig2|fig4|all [--generations 120]
+//! fcmp perf     --network ... [--mhz 195]
+//! fcmp gals     [--nb 4] [--rf 2.0] [--depth 128] [--cycles 10000] [--static]
+//! fcmp golden   [--artifacts artifacts] [--model all|cnv_w1a1|cnv_w2a2|rn50_lite_w1a2]
+//! fcmp serve    [--model cnv_w1a1] [--requests 64] [--batch 4] [--rate 50]
+//! fcmp dse      --network ... --device ... [--budget 0.85]
+//! ```
+
+use fcmp::coordinator::{BatcherConfig, Metrics, Server, ServerConfig};
+use fcmp::device;
+use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
+use fcmp::nn::{cnv, resnet50, CnvVariant, Network};
+use fcmp::packing::{anneal::Anneal, ffd::Ffd, Packer};
+use fcmp::util::args::Args;
+use fcmp::util::rng::Rng;
+use fcmp::{folding, report, runtime, sim};
+use std::path::Path;
+
+fn network_by_name(name: &str) -> Option<Network> {
+    match name {
+        "cnv-w1a1" | "cnv_w1a1" => Some(cnv(CnvVariant::W1A1)),
+        "cnv-w1a2" | "cnv_w1a2" => Some(cnv(CnvVariant::W1A2)),
+        "cnv-w2a2" | "cnv_w2a2" => Some(cnv(CnvVariant::W2A2)),
+        "rn50-w1" | "rn50" => Some(resnet50(1)),
+        "rn50-w2" => Some(resnet50(2)),
+        _ => None,
+    }
+}
+
+fn engine_by_name(name: &str, net: &Network, generations: usize, seed: u64) -> Box<dyn Packer> {
+    match name {
+        "ffd" => Box::new(Ffd::new()),
+        "anneal" => Box::new(Anneal { seed, ..Anneal::default() }),
+        _ => {
+            let mut g = report::default_ga(net);
+            g.params.generations = generations;
+            g.params.seed = seed;
+            Box::new(g)
+        }
+    }
+}
+
+fn cmd_pack(a: &Args) -> anyhow::Result<()> {
+    let net = network_by_name(a.get_or("network", "cnv-w1a1"))
+        .ok_or_else(|| anyhow::anyhow!("unknown network"))?;
+    let dev = device::by_name(a.get_or("device", "7020"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+    let hb = a.get_usize("hb", 4);
+    let engine = engine_by_name(
+        a.get_or("engine", "ga"),
+        &net,
+        a.get_usize("generations", 120),
+        a.get_usize("seed", 2020) as u64,
+    );
+    let out = report::pack_network(&net, &dev, engine.as_ref(), hb);
+    println!(
+        "{} on {} (H_B={hb}, R_F>={:.1}):",
+        net.name,
+        dev.name,
+        hb as f64 / 2.0
+    );
+    println!(
+        "  baseline : {:4} BRAM18  E={:5.1}%",
+        out.baseline_brams,
+        100.0 * out.baseline_eff
+    );
+    println!(
+        "  packed   : {:4} BRAM18  E={:5.1}%  ({} bins, logic {:.1} kLUT, {:.2?})",
+        out.report.brams,
+        100.0 * out.report.efficiency,
+        out.packing.bins.len(),
+        out.logic_kluts,
+        out.report.elapsed
+    );
+    println!(
+        "  reduction: {:.1}%",
+        100.0 * (1.0 - out.report.brams as f64 / out.baseline_brams as f64)
+    );
+    Ok(())
+}
+
+fn cmd_report(a: &Args) -> anyhow::Result<()> {
+    let generations = a.get_usize("generations", 120);
+    let which = a.get_or("table", "all");
+    let show = |name: &str, t: fcmp::util::bench::Table| {
+        println!("== {name} ==\n{}\n", t.render());
+    };
+    match which {
+        "1" => show("Table I", report::table1()),
+        "2" => show("Table II", report::table2()),
+        "4" => show("Table IV", report::table4(generations)),
+        "5" => show("Table V", report::table5(generations)),
+        "fig2" => show("Fig 2", report::fig2()),
+        "fig4" => show("Fig 4", report::fig4()),
+        _ => {
+            show("Table I", report::table1());
+            show("Fig 2", report::fig2());
+            show("Table II", report::table2());
+            show("Fig 4", report::fig4());
+            show("Table IV", report::table4(generations));
+            show("Table V", report::table5(generations));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_perf(a: &Args) -> anyhow::Result<()> {
+    let net = network_by_name(a.get_or("network", "rn50-w1"))
+        .ok_or_else(|| anyhow::anyhow!("unknown network"))?;
+    let mhz = a.get_f64("mhz", 195.0);
+    let e = sim::estimate(&net, mhz);
+    println!(
+        "{} @ {mhz} MHz: {:.0} FPS, {:.2} ms latency, {:.1} TOp/s, II {} cycles (bottleneck {})",
+        net.name, e.fps, e.latency_ms, e.tops, e.ii_cycles, e.bottleneck
+    );
+    Ok(())
+}
+
+fn cmd_gals(a: &Args) -> anyhow::Result<()> {
+    let nb = a.get_usize("nb", 4);
+    let rf = a.get_f64("rf", 2.0);
+    let depth = a.get_usize("depth", 128) as u64;
+    let cycles = a.get_usize("cycles", 10_000) as u64;
+    let ratio = if (rf - 1.5).abs() < 1e-9 {
+        Ratio::three_halves()
+    } else {
+        Ratio::new(rf.round() as u64, 1)
+    };
+    let mut cfg = if nb % 2 == 1 && (rf * 2.0).round() as usize == nb {
+        StreamerConfig::fig7b(nb, depth)
+    } else {
+        StreamerConfig::fig7a(nb, depth, ratio)
+    };
+    if a.has_flag("static") {
+        cfg.adaptive = false;
+    }
+    let r = StreamerSim::new(cfg).run(cycles);
+    println!(
+        "N_b={nb} R_F={rf} ({} compute cycles, {} memory cycles, {} wasted slots)",
+        r.compute_cycles, r.memory_cycles, r.wasted_slots
+    );
+    for (i, s) in r.per_stream.iter().enumerate() {
+        println!("  stream {i}: rate {:.3} words/cycle ({} stalls)", s.rate, s.stalls);
+    }
+    println!("  min rate {:.3} (>= 1.0 sustains full throughput)", r.min_rate());
+    Ok(())
+}
+
+fn cmd_golden(a: &Args) -> anyhow::Result<()> {
+    let arts = Path::new(a.get_or("artifacts", "artifacts"));
+    let model = a.get_or("model", "all");
+    runtime::check_mvau_unit(arts)?;
+    println!("mvau_unit: golden OK");
+    for m in ["cnv_w1a1", "cnv_w2a2", "rn50_lite_w1a2"] {
+        if model != "all" && model != m {
+            continue;
+        }
+        let eng = runtime::Engine::load(arts, m)?;
+        eng.check_golden()?;
+        println!("{m}: golden OK (batches {:?})", eng.batch_sizes());
+    }
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> anyhow::Result<()> {
+    let arts = Path::new(a.get_or("artifacts", "artifacts")).to_path_buf();
+    let model = a.get_or("model", "cnv_w1a1").to_string();
+    let n = a.get_usize("requests", 64) as u64;
+    let max_batch = a.get_usize("batch", 4);
+    let rate = a.get_f64("rate", 100.0); // requests/s
+
+    let probe = runtime::Engine::load(&arts, &model)?;
+    let per = probe.manifest.input_elements_per_sample() as usize;
+    drop(probe);
+
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        queue_depth: 512,
+    };
+    let arts2 = arts.clone();
+    let model2 = model.clone();
+    let mut srv = Server::start(
+        move || runtime::Engine::load(&arts2, &model2).expect("engine"),
+        cfg,
+    );
+
+    let mut rng = Rng::new(7);
+    let mut metrics = Metrics::new();
+    metrics.start();
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0u64;
+    let mut received = 0u64;
+    while received < n {
+        // Poisson-ish arrivals at `rate`
+        if submitted < n {
+            let due = submitted as f64 / rate;
+            if t0.elapsed().as_secs_f64() >= due {
+                let input: Vec<f32> =
+                    (0..per).map(|_| (rng.below(256)) as f32).collect();
+                if srv.submit_blocking(submitted, input).is_ok() {
+                    submitted += 1;
+                }
+                continue;
+            }
+        }
+        if let Some(c) = srv.next_completion() {
+            metrics.record(c.latency, c.batch_size);
+            received += 1;
+        } else {
+            break;
+        }
+    }
+    srv.shutdown();
+    println!("serve {model}: {}", metrics.summary());
+    Ok(())
+}
+
+fn cmd_floorplan(a: &Args) -> anyhow::Result<()> {
+    let net = network_by_name(a.get_or("network", "rn50-w1"))
+        .ok_or_else(|| anyhow::anyhow!("unknown network"))?;
+    let dev = device::by_name(a.get_or("device", "u250"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+    match device::floorplan(&net, &dev) {
+        None => println!("{} does not floorplan onto {}", net.name, dev.name),
+        Some(fp) => {
+            println!(
+                "{} on {}: {} SLR crossings, bottleneck BRAM {:.0}%, LUT {:.0}%",
+                net.name,
+                dev.name,
+                fp.crossings,
+                100.0 * fp.max_bram_pressure,
+                100.0 * fp.max_lut_pressure
+            );
+            let demands = device::floorplan::stage_demands(&net);
+            for slr in 0..dev.slrs.len() {
+                let members: Vec<&str> = demands
+                    .iter()
+                    .zip(&fp.assignment)
+                    .filter(|(_, &a)| a == slr)
+                    .map(|(d, _)| d.name.as_str())
+                    .collect();
+                println!("  SLR{slr}: {}", members.join(", "));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_dse(a: &Args) -> anyhow::Result<()> {
+    let net = network_by_name(a.get_or("network", "cnv-w1a1"))
+        .ok_or_else(|| anyhow::anyhow!("unknown network"))?;
+    let dev = device::by_name(a.get_or("device", "7020"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+    let budget = a.get_f64("budget", 0.85);
+    let solved = folding::solve(&net, &dev, budget);
+    let r = folding::network_resources(&solved, &dev);
+    let e = sim::estimate(&solved, dev.nominal_compute_mhz);
+    println!(
+        "{} on {}: {:.0} FPS @ {} MHz | LUT {:.0}% BRAM {:.0}% | II {}",
+        solved.name,
+        dev.name,
+        e.fps,
+        dev.nominal_compute_mhz,
+        r.lut_pct(&dev),
+        r.bram_pct(&dev),
+        e.ii_cycles
+    );
+    Ok(())
+}
+
+const USAGE: &str = "\
+fcmp — Frequency Compensated Memory Packing (paper reproduction)
+subcommands:
+  pack    pack a network's weight buffers into BRAMs (FCMP, paper section IV)
+  report  regenerate the paper's tables/figures (--table 1|2|4|5|fig2|fig4|all)
+  perf    analytic FPS/latency of an accelerator (--network, --mhz)
+  gals    cycle-level GALS streamer simulation (--nb, --rf, --static)
+  golden  verify PJRT runtime against python golden outputs
+  serve   run the CIFAR-10 inference server end to end (--requests, --rate)
+  dse     folding design-space exploration (--network, --device, --budget)
+  floorplan  SLR floorplan of a network on a multi-die device (Fig. 5)";
+
+fn main() {
+    let args = Args::from_env();
+    let r = match args.subcommand.as_deref() {
+        Some("pack") => cmd_pack(&args),
+        Some("report") => cmd_report(&args),
+        Some("perf") => cmd_perf(&args),
+        Some("gals") => cmd_gals(&args),
+        Some("golden") => cmd_golden(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("dse") => cmd_dse(&args),
+        Some("floorplan") => cmd_floorplan(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,211 @@
+//! The BNN-Pynq CNV topology (paper §V "embedded-class" accelerators).
+//!
+//! CNV: CIFAR-10, 32×32×3 input; six 3×3 VALID convolutions with maxpool
+//! after conv pairs 2 and 4; three fully-connected layers (the last padded
+//! to 16 outputs by FINN). Published accuracies: 79.54% (W1A1) and 84.8%
+//! (W2A2) — paper §V.
+//!
+//! PE/SIMD folding follows the max-performance BNN-Pynq build for Zynq 7020
+//! (the Table I configurations).
+
+use super::{Layer, LayerKind, Network, Stage};
+
+/// The two CNV precision variants the paper packs (plus W1A2 used in
+/// BNN-Pynq's Table I row set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CnvVariant {
+    W1A1,
+    W1A2,
+    W2A2,
+}
+
+impl CnvVariant {
+    pub fn wbits(self) -> u64 {
+        match self {
+            CnvVariant::W1A1 | CnvVariant::W1A2 => 1,
+            CnvVariant::W2A2 => 2,
+        }
+    }
+
+    pub fn abits(self) -> u64 {
+        match self {
+            CnvVariant::W1A1 => 1,
+            CnvVariant::W1A2 | CnvVariant::W2A2 => 2,
+        }
+    }
+
+    pub fn suffix(self) -> &'static str {
+        match self {
+            CnvVariant::W1A1 => "W1A1",
+            CnvVariant::W1A2 => "W1A2",
+            CnvVariant::W2A2 => "W2A2",
+        }
+    }
+}
+
+struct ConvSpec {
+    name: &'static str,
+    c_in: u64,
+    c_out: u64,
+    ifm: u64,
+    pe: u64,
+    simd: u64,
+}
+
+struct FcSpec {
+    name: &'static str,
+    c_in: u64,
+    c_out: u64,
+    pe: u64,
+    simd: u64,
+}
+
+/// Build the CNV network for a precision variant.
+///
+/// W2A2 halves the PE parallelism of the wide convolutions: the 2-bit
+/// datapath doubles per-synapse LUT cost, and BNN-Pynq's W2A2 build trades
+/// throughput to stay within the 7020 (its Table IV weight subsystem is
+/// 208 BRAMs at 79.9% efficiency — a deeper, narrower shape than W1A1's).
+pub fn cnv(variant: CnvVariant) -> Network {
+    let wbits = variant.wbits();
+    let abits = variant.abits();
+    let half = |p: u64| if wbits == 2 { (p / 2).max(1) } else { p };
+
+    // (BNN-Pynq cnvW1A1 max-performance folding on Zynq 7020)
+    let convs = [
+        ConvSpec { name: "conv1", c_in: 3, c_out: 64, ifm: 32, pe: 16, simd: 3 },
+        ConvSpec { name: "conv2", c_in: 64, c_out: 64, ifm: 30, pe: half(32), simd: 32 },
+        ConvSpec { name: "conv3", c_in: 64, c_out: 128, ifm: 14, pe: half(16), simd: 32 },
+        ConvSpec { name: "conv4", c_in: 128, c_out: 128, ifm: 12, pe: half(16), simd: 32 },
+        ConvSpec { name: "conv5", c_in: 128, c_out: 256, ifm: 5, pe: half(4), simd: 32 },
+        ConvSpec { name: "conv6", c_in: 256, c_out: 256, ifm: 3, pe: 1, simd: 32 },
+    ];
+    let fcs = [
+        FcSpec { name: "fc1", c_in: 256, c_out: 512, pe: 1, simd: 4 },
+        FcSpec { name: "fc2", c_in: 512, c_out: 512, pe: 1, simd: 8 },
+        FcSpec { name: "fc3", c_in: 512, c_out: 16, pe: 4, simd: 1 },
+    ];
+
+    let mut stages = Vec::new();
+    for (i, c) in convs.iter().enumerate() {
+        stages.push(Stage::Mvau(Layer {
+            name: c.name.into(),
+            kind: LayerKind::Conv,
+            k: 3,
+            c_in: c.c_in,
+            c_out: c.c_out,
+            stride: 1,
+            pad: 0,
+            ifm: c.ifm,
+            wbits,
+            abits,
+            pe: c.pe,
+            simd: c.simd,
+            // paper §V: first layer excluded (small, 8-bit input path)
+            exclude_from_packing: i == 0,
+        }));
+        if c.name == "conv2" || c.name == "conv4" {
+            let ofm = c.ifm - 2;
+            stages.push(Stage::MaxPool {
+                name: format!("pool_{}", c.name),
+                window: 2,
+                stride: 2,
+                ifm: ofm,
+                channels: c.c_out,
+            });
+        }
+    }
+    for (i, f) in fcs.iter().enumerate() {
+        stages.push(Stage::Mvau(Layer {
+            name: f.name.into(),
+            kind: LayerKind::FullyConnected,
+            k: 1,
+            c_in: f.c_in,
+            c_out: f.c_out,
+            stride: 1,
+            pad: 0,
+            ifm: 1,
+            wbits,
+            abits: if i == 2 { 0 } else { abits },
+            pe: f.pe,
+            simd: f.simd,
+            // last FC weights live in URAM/DDR per §V
+            exclude_from_packing: i == 2,
+        }));
+    }
+
+    let (top1, top5) = match variant {
+        CnvVariant::W1A1 => (79.54, 94.0),
+        CnvVariant::W1A2 => (82.7, 95.0),
+        CnvVariant::W2A2 => (84.80, 96.0),
+    };
+    Network {
+        name: format!("CNV-{}", variant.suffix()),
+        stages,
+        image: 32,
+        top1_pct: top1,
+        top5_pct: top5,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_total_matches_bnn_pynq() {
+        let n = cnv(CnvVariant::W1A1);
+        // published CNV total is 1,542,848 with a 10-wide final layer; FINN
+        // pads fc3 to 16 outputs: +512*6
+        assert_eq!(n.total_params(), 1_542_848 + 512 * 6);
+    }
+
+    #[test]
+    fn feature_map_chain_consistent() {
+        let n = cnv(CnvVariant::W1A1);
+        // conv1 32->30, conv2 30->28, pool ->14, conv3 ->12, conv4 ->10,
+        // pool ->5, conv5 ->3, conv6 ->1
+        let dims: Vec<u64> = n
+            .layers()
+            .iter()
+            .filter(|l| l.kind == LayerKind::Conv)
+            .map(|l| l.ofm())
+            .collect();
+        assert_eq!(dims, vec![30, 28, 12, 10, 3, 1]);
+    }
+
+    #[test]
+    fn foldings_are_valid() {
+        for v in [CnvVariant::W1A1, CnvVariant::W1A2, CnvVariant::W2A2] {
+            for l in cnv(v).layers() {
+                assert!(l.folding_valid(), "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn w2a2_doubles_weight_bits() {
+        assert_eq!(
+            cnv(CnvVariant::W2A2).total_weight_bits(),
+            2 * cnv(CnvVariant::W1A1).total_weight_bits()
+        );
+    }
+
+    #[test]
+    fn packing_exclusions() {
+        let n = cnv(CnvVariant::W1A1);
+        let pk = n.packable_layers();
+        assert_eq!(pk.len(), n.layers().len() - 2);
+        assert!(pk.iter().all(|l| l.name != "conv1" && l.name != "fc3"));
+    }
+
+    #[test]
+    fn ii_dominated_by_a_conv() {
+        let n = cnv(CnvVariant::W1A1);
+        let ii = n.initiation_interval();
+        assert!(ii > 0);
+        // at 100 MHz the BNN-Pynq CNV reaches O(10^2..10^4) FPS
+        let fps = n.fps(100.0);
+        assert!(fps > 100.0 && fps < 50_000.0, "fps {fps}");
+    }
+}

@@ -1,0 +1,104 @@
+//! The BNN-Pynq MLP accelerators (SFC / LFC) — the remaining rows of the
+//! paper's Table I. Three binarized fully-connected hidden layers on MNIST
+//! (28×28 → 3×(256|1024) → 10, padded to 16/64 for folding).
+
+use super::{Layer, LayerKind, Network, Stage};
+
+/// Largest divisor of `n` that is <= `target` (folding must divide).
+fn largest_divisor_leq(n: u64, target: u64) -> u64 {
+    let mut v = target.min(n).max(1);
+    while n % v != 0 {
+        v -= 1;
+    }
+    v
+}
+
+/// Build SFC (hidden width 256) or LFC (hidden width 1024) at a weight
+/// precision. Folding follows the max-performance BNN-Pynq builds.
+pub fn mlp(name: &str, hidden: u64, wbits: u64, abits: u64, pe: u64, simd: u64) -> Network {
+    let dims = [(784u64, hidden), (hidden, hidden), (hidden, hidden), (hidden, 16)];
+    let mut stages = Vec::new();
+    for (i, &(c_in, c_out)) in dims.iter().enumerate() {
+        let last = i == dims.len() - 1;
+        stages.push(Stage::Mvau(Layer {
+            name: format!("fc{}", i + 1),
+            kind: LayerKind::FullyConnected,
+            k: 1,
+            c_in,
+            c_out,
+            stride: 1,
+            pad: 0,
+            ifm: 1,
+            wbits,
+            abits: if last { 0 } else { abits },
+            pe: largest_divisor_leq(c_out, pe),
+            simd: largest_divisor_leq(c_in, simd),
+            // first layer consumes 8-bit images, last layer classifier
+            exclude_from_packing: i == 0 || last,
+        }));
+    }
+    Network {
+        name: name.to_string(),
+        stages,
+        image: 28,
+        top1_pct: if hidden >= 1024 { 98.4 } else { 98.0 }, // published MNIST
+        top5_pct: 100.0,
+    }
+}
+
+/// SFC-W1A1: small MLP, 256-wide hidden layers.
+pub fn sfc_w1a1() -> Network {
+    mlp("SFC-W1A1", 256, 1, 1, 16, 16)
+}
+
+/// LFC-W1A1: large MLP, 1024-wide hidden layers (the Table I row with the
+/// highest BRAM pressure).
+pub fn lfc_w1a1() -> Network {
+    mlp("LFC-W1A1", 1024, 1, 1, 32, 32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::folding::network_resources;
+
+    #[test]
+    fn parameter_counts() {
+        // LFC: 784*1024 + 2*1024^2 + 1024*16 = 2,916,352
+        assert_eq!(lfc_w1a1().total_params(), 784 * 1024 + 2 * 1024 * 1024 + 1024 * 16);
+        assert_eq!(sfc_w1a1().total_params(), 784 * 256 + 2 * 256 * 256 + 256 * 16);
+    }
+
+    #[test]
+    fn lfc_is_bram_bound_on_7020() {
+        // Table I: the MLP rows show BRAM as the binding resource
+        let dev = crate::device::zynq_7020();
+        let r = network_resources(&lfc_w1a1(), &dev);
+        assert!(r.bram_pct(&dev) > r.lut_pct(&dev) / 2.0);
+        assert!(r.bram_pct(&dev) > 50.0, "bram {}%", r.bram_pct(&dev));
+    }
+
+    #[test]
+    fn foldings_valid() {
+        for n in [sfc_w1a1(), lfc_w1a1()] {
+            for l in n.layers() {
+                assert!(l.folding_valid(), "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn mlps_pack_like_convs() {
+        let net = lfc_w1a1();
+        let bufs = crate::memory::weight_buffers(&net, 1);
+        let items = crate::memory::all_columns(&bufs);
+        let c = crate::packing::Constraints::new(4, false);
+        let (p, r) = crate::packing::run_packer(
+            &crate::packing::ffd::Ffd::new(),
+            &items,
+            &c,
+        );
+        p.validate(&items, &c).unwrap();
+        assert!(r.brams <= crate::memory::direct_brams(&bufs));
+    }
+}

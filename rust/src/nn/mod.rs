@@ -1,0 +1,349 @@
+//! CNN topology zoo: the networks the paper evaluates, as streamlined MVAU
+//! graphs with exact tensor shapes (the quantity every OCM/throughput claim
+//! depends on).
+//!
+//! * [`cnv`] — the BNN-Pynq CIFAR-10 topology (Zynq class, Tables I/IV/V);
+//! * [`resnet50`] — quantized ResNet-50 v1.5, 16 resblocks (Alveo class,
+//!   Tables II/IV/V, Figs 4/5).
+//!
+//! A [`Network`] is a list of [`Stage`]s; resblocks keep their branch/join
+//! structure (needed by the pipeline simulator for bypass-FIFO sizing).
+
+pub mod cnv;
+pub mod mlp;
+pub mod resnet;
+
+pub use cnv::{cnv, CnvVariant};
+pub use mlp::{lfc_w1a1, sfc_w1a1};
+pub use resnet::{resnet50, resnet50_scaled};
+
+/// Quantized-layer kind, for resource modelling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    FullyConnected,
+}
+
+/// One streamlined MVAU layer (conv or FC) with folding and geometry.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Convolution kernel size K (1 for FC / pointwise).
+    pub k: u64,
+    pub c_in: u64,
+    pub c_out: u64,
+    pub stride: u64,
+    pub pad: u64,
+    /// Input feature-map height/width (square maps, as in both topologies).
+    pub ifm: u64,
+    /// Weight precision in bits (1 binary, 2 ternary, 8 int8).
+    pub wbits: u64,
+    /// Output activation precision in bits (0 = none / raw accumulator).
+    pub abits: u64,
+    /// Neuron (output channel) parallelism.
+    pub pe: u64,
+    /// Synapse (input) parallelism.
+    pub simd: u64,
+    /// Excluded from OCM packing (paper §V: first layer small, last layer
+    /// in URAM/HBM/DDR).
+    pub exclude_from_packing: bool,
+}
+
+impl Layer {
+    /// Output feature-map dimension.
+    pub fn ofm(&self) -> u64 {
+        (self.ifm + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Rows of the weight matrix: synapses per neuron.
+    pub fn synapses(&self) -> u64 {
+        self.k * self.k * self.c_in
+    }
+
+    /// Total weight parameters.
+    pub fn params(&self) -> u64 {
+        self.synapses() * self.c_out
+    }
+
+    /// Total weight bits.
+    pub fn weight_bits(&self) -> u64 {
+        self.params() * self.wbits
+    }
+
+    /// Weight buffer width in bits as read per compute cycle (PE·SIMD·W).
+    pub fn buffer_width_bits(&self) -> u64 {
+        self.pe * self.simd * self.wbits
+    }
+
+    /// Weight buffer depth in words (total folds).
+    pub fn buffer_depth(&self) -> u64 {
+        debug_assert_eq!(self.synapses() % self.simd, 0, "{}: SIMD|S", self.name);
+        debug_assert_eq!(self.c_out % self.pe, 0, "{}: PE|C", self.name);
+        (self.synapses() / self.simd) * (self.c_out / self.pe)
+    }
+
+    /// Compute cycles per frame: folds × output pixels (the FINN II model).
+    pub fn cycles_per_frame(&self) -> u64 {
+        self.buffer_depth() * self.ofm() * self.ofm()
+    }
+
+    /// Multiply-accumulate ops per frame (for TOp/s accounting; ×2 for MAC).
+    pub fn ops_per_frame(&self) -> u64 {
+        2 * self.params() * self.ofm() * self.ofm()
+    }
+
+    /// Halve the parallelism (the paper's "additional folding" alternative,
+    /// e.g. RN50-W1A2-U280-F2). Prefers halving PE, then SIMD.
+    pub fn fold2(&self) -> Layer {
+        let mut l = self.clone();
+        if l.pe % 2 == 0 {
+            l.pe /= 2;
+        } else if l.simd % 2 == 0 {
+            l.simd /= 2;
+        }
+        l
+    }
+
+    /// Check that the folding parameters divide the layer geometry.
+    pub fn folding_valid(&self) -> bool {
+        self.pe >= 1
+            && self.simd >= 1
+            && self.c_out % self.pe == 0
+            && self.synapses() % self.simd == 0
+    }
+
+    /// Choose the *minimal* PE·SIMD folding that meets a target initiation
+    /// interval (cycles/frame). Minimal parallelism keeps weight buffers
+    /// deep and narrow, which is exactly what physical RAM mapping
+    /// efficiency wants (Fig. 2 read backwards). Ties prefer larger SIMD
+    /// (fewer accumulators -> fewer LUTs).
+    pub fn fold_to_target(&mut self, target_cycles: u64) {
+        let s = self.synapses();
+        let pixels = self.ofm() * self.ofm();
+        let mut best: Option<(u64, u64, u64)> = None; // (product, pe, simd)
+        let mut pe = 1;
+        while pe <= self.c_out {
+            if self.c_out % pe == 0 {
+                let mut simd = 1;
+                while simd <= s {
+                    if s % simd == 0 {
+                        let cycles = (s / simd) * (self.c_out / pe) * pixels;
+                        if cycles <= target_cycles {
+                            let prod = pe * simd;
+                            let better = match best {
+                                None => true,
+                                Some((bp, _, bs)) => {
+                                    prod < bp || (prod == bp && simd > bs)
+                                }
+                            };
+                            if better {
+                                best = Some((prod, pe, simd));
+                            }
+                            break; // larger simd only raises the product
+                        }
+                    }
+                    simd += 1;
+                }
+            }
+            pe += 1;
+        }
+        // infeasible target: fall back to max parallelism
+        let (_, pe, simd) = best.unwrap_or((s * self.c_out, self.c_out, s));
+        self.pe = pe;
+        self.simd = simd;
+    }
+}
+
+/// Pipeline-fill contribution of one layer (see [`Network::latency_s`]).
+fn stage_fill_cycles(l: &Layer) -> f64 {
+    let frac = ((l.k + 1) as f64 / l.ofm() as f64).min(1.0);
+    l.cycles_per_frame() as f64 * frac
+}
+
+/// A pipeline stage: a plain layer, a pooling stage, or a residual block.
+#[derive(Clone, Debug)]
+pub enum Stage {
+    Mvau(Layer),
+    /// Max-pool window/stride (no weights; negligible OCM).
+    MaxPool { name: String, window: u64, stride: u64, ifm: u64, channels: u64 },
+    /// Residual block: main branch layers + optional bypass conv + join.
+    ResBlock { name: String, branch: Vec<Layer>, bypass: Option<Layer> },
+}
+
+impl Stage {
+    /// All weight-bearing layers in the stage.
+    pub fn layers(&self) -> Vec<&Layer> {
+        match self {
+            Stage::Mvau(l) => vec![l],
+            Stage::MaxPool { .. } => vec![],
+            Stage::ResBlock { branch, bypass, .. } => {
+                let mut v: Vec<&Layer> = branch.iter().collect();
+                if let Some(b) = bypass {
+                    v.push(b);
+                }
+                v
+            }
+        }
+    }
+
+    /// Initiation interval of the stage (max over its layers).
+    pub fn cycles_per_frame(&self) -> u64 {
+        self.layers().iter().map(|l| l.cycles_per_frame()).max().unwrap_or(0)
+    }
+}
+
+/// A streamlined network.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub stages: Vec<Stage>,
+    /// Input image height/width.
+    pub image: u64,
+    /// Published classification accuracy (metadata from the paper; training
+    /// is out of scope — see DESIGN.md substitutions).
+    pub top1_pct: f64,
+    pub top5_pct: f64,
+}
+
+impl Network {
+    pub fn layers(&self) -> Vec<&Layer> {
+        self.stages.iter().flat_map(|s| s.layers()).collect()
+    }
+
+    /// Layers that participate in OCM packing (paper §V exclusions).
+    pub fn packable_layers(&self) -> Vec<&Layer> {
+        self.layers().into_iter().filter(|l| !l.exclude_from_packing).collect()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers().iter().map(|l| l.params()).sum()
+    }
+
+    pub fn total_weight_bits(&self) -> u64 {
+        self.layers().iter().map(|l| l.weight_bits()).sum()
+    }
+
+    /// Total ops per frame (TOp/s numerator of Table II).
+    pub fn ops_per_frame(&self) -> u64 {
+        self.layers().iter().map(|l| l.ops_per_frame()).sum()
+    }
+
+    /// Pipeline initiation interval: slowest stage, in compute cycles.
+    pub fn initiation_interval(&self) -> u64 {
+        self.stages.iter().map(|s| s.cycles_per_frame()).max().unwrap_or(0)
+    }
+
+    /// Frames/s at a compute clock (MHz), steady state.
+    pub fn fps(&self, compute_mhz: f64) -> f64 {
+        compute_mhz * 1e6 / self.initiation_interval() as f64
+    }
+
+    /// Single-frame latency (s): pipeline fill time. A streaming conv stage
+    /// starts emitting after ~(K+1) input rows, so it contributes
+    /// `II · min(1, (K+1)/OFM)` to the fill; an FC stage needs its whole
+    /// input (full II).
+    pub fn latency_s(&self, compute_mhz: f64) -> f64 {
+        let mut cycles = 0.0f64;
+        for s in &self.stages {
+            match s {
+                Stage::MaxPool { .. } => {}
+                Stage::Mvau(l) => cycles += stage_fill_cycles(l),
+                Stage::ResBlock { branch, .. } => {
+                    cycles += branch.iter().map(|l| stage_fill_cycles(l)).sum::<f64>();
+                }
+            }
+        }
+        cycles / (compute_mhz * 1e6)
+    }
+
+    /// Apply ×2 folding to every layer (the paper's F2 variants).
+    pub fn fold2(&self) -> Network {
+        let mut n = self.clone();
+        n.name = format!("{}-F2", self.name);
+        for s in &mut n.stages {
+            match s {
+                Stage::Mvau(l) => *l = l.fold2(),
+                Stage::ResBlock { branch, bypass, .. } => {
+                    for l in branch.iter_mut() {
+                        *l = l.fold2();
+                    }
+                    if let Some(b) = bypass {
+                        *b = b.fold2();
+                    }
+                }
+                Stage::MaxPool { .. } => {}
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(pe: u64, simd: u64) -> Layer {
+        Layer {
+            name: "t".into(),
+            kind: LayerKind::Conv,
+            k: 3,
+            c_in: 64,
+            c_out: 128,
+            stride: 1,
+            pad: 1,
+            ifm: 16,
+            wbits: 1,
+            abits: 2,
+            pe,
+            simd,
+            exclude_from_packing: false,
+        }
+    }
+
+    #[test]
+    fn geometry() {
+        let l = layer(4, 8);
+        assert_eq!(l.ofm(), 16);
+        assert_eq!(l.synapses(), 576);
+        assert_eq!(l.params(), 576 * 128);
+        assert_eq!(l.buffer_width_bits(), 32);
+        assert_eq!(l.buffer_depth(), (576 / 8) * (128 / 4));
+        assert!(l.folding_valid());
+    }
+
+    #[test]
+    fn buffer_conservation() {
+        // folding never changes total weight bits, only the shape
+        for (pe, simd) in [(1, 1), (4, 8), (128, 576)] {
+            let l = layer(pe, simd);
+            assert_eq!(
+                l.buffer_width_bits() * l.buffer_depth(),
+                l.weight_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn parallelism_cuts_cycles() {
+        assert_eq!(
+            layer(1, 1).cycles_per_frame(),
+            32 * layer(4, 8).cycles_per_frame()
+        );
+    }
+
+    #[test]
+    fn fold2_halves_parallelism() {
+        let l = layer(4, 8).fold2();
+        assert_eq!((l.pe, l.simd), (2, 8));
+        let l1 = layer(1, 8).fold2();
+        assert_eq!((l1.pe, l1.simd), (1, 4));
+    }
+
+    #[test]
+    fn stride_reduces_ofm() {
+        let mut l = layer(1, 1);
+        l.stride = 2;
+        assert_eq!(l.ofm(), 8);
+    }
+}

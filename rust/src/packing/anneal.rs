@@ -1,0 +1,143 @@
+//! Simulated-annealing packer — the MPack approach (Vasiljevic & Chow,
+//! FPL'14; paper §II.C). Starts from the FFD solution and explores
+//! move/swap neighbourhoods under a geometric cooling schedule.
+
+use super::{bin_brams, Bin, Constraints, Packer, Packing};
+use crate::memory::PackItem;
+use crate::util::rng::Rng;
+
+/// Simulated-annealing packer.
+#[derive(Clone, Copy, Debug)]
+pub struct Anneal {
+    pub iterations: usize,
+    pub t0: f64,
+    pub cooling: f64,
+    pub seed: u64,
+}
+
+impl Default for Anneal {
+    fn default() -> Self {
+        Anneal { iterations: 20_000, t0: 4.0, cooling: 0.9995, seed: 2020 }
+    }
+}
+
+fn hard_ok(items: &[PackItem], bin: &Bin, item: usize, c: &Constraints) -> bool {
+    if bin.items.len() >= c.max_bin_height {
+        return false;
+    }
+    let head = bin.items[0];
+    if c.same_slr && items[head].slr != items[item].slr {
+        return false;
+    }
+    true
+}
+
+impl Packer for Anneal {
+    fn name(&self) -> &'static str {
+        "anneal"
+    }
+
+    fn pack(&self, items: &[PackItem], c: &Constraints) -> Packing {
+        if items.is_empty() {
+            return Packing::default();
+        }
+        let mut rng = Rng::new(self.seed);
+        let mut cur = super::ffd::Ffd::new().pack(items, c).bins;
+        let mut cur_cost: i64 = cur.iter().map(|b| bin_brams(items, &b.items) as i64).sum();
+        let mut best = cur.clone();
+        let mut best_cost = cur_cost;
+        let mut t = self.t0;
+
+        for _ in 0..self.iterations {
+            t *= self.cooling;
+            if cur.is_empty() {
+                break;
+            }
+            // propose: move one random item to another bin (or a new bin)
+            let from = rng.range(0, cur.len());
+            let idx_in = rng.range(0, cur[from].items.len());
+            let item = cur[from].items[idx_in];
+            let to_new = rng.chance(0.15);
+            let to = if to_new { usize::MAX } else { rng.range(0, cur.len()) };
+            if !to_new && (to == from || !hard_ok(items, &cur[to], item, c)) {
+                continue;
+            }
+
+            let old_from = bin_brams(items, &cur[from].items) as i64;
+            let old_to = if to_new { 0 } else { bin_brams(items, &cur[to].items) as i64 };
+
+            // apply tentatively
+            cur[from].items.swap_remove(idx_in);
+            let new_from = bin_brams(items, &cur[from].items) as i64;
+            let new_to = if to_new {
+                bin_brams(items, &[item]) as i64
+            } else {
+                let mut m = cur[to].items.clone();
+                m.push(item);
+                bin_brams(items, &m) as i64
+            };
+            let delta = (new_from + new_to) - (old_from + old_to);
+            let accept = delta <= 0 || rng.f64() < (-(delta as f64) / t.max(1e-9)).exp();
+            if accept {
+                if to_new {
+                    cur.push(Bin { items: vec![item] });
+                } else {
+                    cur[to].items.push(item);
+                }
+                if cur[from].items.is_empty() {
+                    cur.swap_remove(from);
+                }
+                cur_cost += delta;
+                if cur_cost < best_cost {
+                    best = cur.clone();
+                    best_cost = cur_cost;
+                }
+            } else {
+                // revert
+                cur[from].items.push(item);
+            }
+        }
+        Packing { bins: best }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::{run_packer, test_items};
+
+    #[test]
+    fn anneal_never_worse_than_ffd() {
+        let depths = [36u64, 72, 144, 288, 36, 450, 100, 260, 36, 512, 90, 64];
+        let specs: Vec<(u64, u64)> = depths.iter().map(|&d| (36, d)).collect();
+        let items = test_items(&specs);
+        let c = Constraints::new(4, false);
+        let (_, sa) = run_packer(&Anneal::default(), &items, &c);
+        let (_, ffd) = run_packer(&super::super::ffd::Ffd::new(), &items, &c);
+        assert!(sa.brams <= ffd.brams, "sa {} vs ffd {}", sa.brams, ffd.brams);
+    }
+
+    #[test]
+    fn anneal_respects_constraints() {
+        let mut items = test_items(&[(36, 100); 10]);
+        for (k, it) in items.iter_mut().enumerate() {
+            it.slr = k % 2;
+        }
+        let c = Constraints::new(3, true);
+        let (p, _) = run_packer(&Anneal::default(), &items, &c);
+        assert!(p.max_height() <= 3);
+        for b in &p.bins {
+            let s0 = items[b.items[0]].slr;
+            assert!(b.items.iter().all(|&i| items[i].slr == s0));
+        }
+    }
+
+    #[test]
+    fn anneal_deterministic_for_seed() {
+        let items = test_items(&[(36, 77), (36, 400), (18, 123), (36, 333), (9, 999)]);
+        let c = Constraints::new(4, false);
+        let (_, a) = run_packer(&Anneal::default(), &items, &c);
+        let (_, b) = run_packer(&Anneal::default(), &items, &c);
+        assert_eq!(a.brams, b.brams);
+    }
+}

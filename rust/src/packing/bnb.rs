@@ -1,0 +1,172 @@
+//! Branch-and-bound packer — the MemPacker approach (Karchmer & Rose,
+//! ICCAD'94; paper §II.C notes its "high worst-case time complexity").
+//! Exact optimum; use only for small item sets (≲ 14) and as the ground
+//! truth oracle in packing tests.
+
+use super::{bin_brams, Bin, Constraints, Packer, Packing};
+use crate::device::bram::BRAM18_BITS;
+use crate::memory::PackItem;
+use crate::util::ceil_div;
+
+/// Exact branch-and-bound packer.
+#[derive(Clone, Copy, Debug)]
+pub struct Bnb {
+    /// Safety cap on explored nodes (guards accidental large inputs).
+    pub node_limit: u64,
+}
+
+impl Default for Bnb {
+    fn default() -> Self {
+        Bnb { node_limit: 20_000_000 }
+    }
+}
+
+struct Search<'a> {
+    items: &'a [PackItem],
+    c: &'a Constraints,
+    best: Vec<Bin>,
+    best_cost: u64,
+    nodes: u64,
+    node_limit: u64,
+}
+
+impl<'a> Search<'a> {
+    /// Lower bound on the *additional* cost of placing `rest`: their total
+    /// bits minus the slack still available in open bins (items may slot
+    /// into existing BRAMs for free), over BRAM capacity.
+    fn lower_bound(&self, rest: &[usize], bins: &[Bin]) -> u64 {
+        let bits: u64 = rest.iter().map(|&i| self.items[i].bits()).sum();
+        let slack: u64 = bins
+            .iter()
+            .filter(|b| b.items.len() < self.c.max_bin_height)
+            .map(|b| {
+                let used: u64 = b.items.iter().map(|&i| self.items[i].bits()).sum();
+                (bin_brams(self.items, &b.items) * BRAM18_BITS).saturating_sub(used)
+            })
+            .sum();
+        ceil_div(bits.saturating_sub(slack), BRAM18_BITS)
+    }
+
+    fn dfs(&mut self, rest: &[usize], bins: &mut Vec<Bin>, cost: u64) {
+        self.nodes += 1;
+        if self.nodes > self.node_limit {
+            return;
+        }
+        if rest.is_empty() {
+            if cost < self.best_cost {
+                self.best_cost = cost;
+                self.best = bins.clone();
+            }
+            return;
+        }
+        if cost + self.lower_bound(rest, bins) >= self.best_cost {
+            return; // prune
+        }
+        let item = rest[0];
+        let tail = &rest[1..];
+
+        // place into each existing bin (dedup identical bins by shape)
+        let mut tried: Vec<(u64, u64, usize)> = Vec::new();
+        for bi in 0..bins.len() {
+            let b = &bins[bi];
+            if b.items.len() >= self.c.max_bin_height {
+                continue;
+            }
+            if self.c.same_slr && self.items[b.items[0]].slr != self.items[item].slr {
+                continue;
+            }
+            let (w, d) = super::bin_shape(self.items, &b.items);
+            if tried.iter().any(|&(tw, td, th)| tw == w && td == d && th == b.items.len()) {
+                continue; // symmetric bin, same subtree
+            }
+            tried.push((w, d, b.items.len()));
+
+            let old = bin_brams(self.items, &bins[bi].items);
+            bins[bi].items.push(item);
+            let new = bin_brams(self.items, &bins[bi].items);
+            self.dfs(tail, bins, cost - old + new);
+            bins[bi].items.pop();
+        }
+        // open a new bin
+        let solo = bin_brams(self.items, &[item]);
+        bins.push(Bin { items: vec![item] });
+        self.dfs(tail, bins, cost + solo);
+        bins.pop();
+    }
+}
+
+impl Packer for Bnb {
+    fn name(&self) -> &'static str {
+        "bnb"
+    }
+
+    fn pack(&self, items: &[PackItem], c: &Constraints) -> Packing {
+        if items.is_empty() {
+            return Packing::default();
+        }
+        // order deepest-first: better early bounds
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(items[i].depth));
+
+        let ffd = super::ffd::Ffd::new().pack(items, c);
+        let ffd_cost = ffd.total_brams(items);
+        let mut s = Search {
+            items,
+            c,
+            best: ffd.bins,
+            best_cost: ffd_cost,
+            nodes: 0,
+            node_limit: self.node_limit,
+        };
+        let mut bins = Vec::new();
+        s.dfs(&order, &mut bins, 0);
+        Packing { bins: s.best }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::{run_packer, test_items, Packer as _};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bnb_optimal_on_known_case() {
+        // 4x 36x128 + 2x 36x256: optimum is 36x512 bins => 2 BRAMs
+        let items = test_items(&[(36, 128), (36, 128), (36, 128), (36, 128), (36, 256), (36, 256)]);
+        let c = Constraints::new(4, false);
+        let (_, r) = run_packer(&Bnb::default(), &items, &c);
+        assert_eq!(r.brams, 2);
+    }
+
+    #[test]
+    fn bnb_at_least_as_good_as_ffd_and_ga_random() {
+        let mut rng = Rng::new(99);
+        for trial in 0..6 {
+            let n = 6 + (trial % 4);
+            let specs: Vec<(u64, u64)> = (0..n)
+                .map(|_| (36, 32 + rng.below(600)))
+                .collect();
+            let items = test_items(&specs);
+            let c = Constraints::new(4, false);
+            let (_, exact) = run_packer(&Bnb::default(), &items, &c);
+            let (_, ffd) = run_packer(&super::super::ffd::Ffd::new(), &items, &c);
+            assert!(exact.brams <= ffd.brams, "trial {trial}");
+            let ga = super::super::ga::Ga::new(super::super::ga::GaParams {
+                generations: 60,
+                ..super::super::ga::GaParams::cnv()
+            });
+            let gp = ga.pack(&items, &c);
+            assert!(exact.brams <= gp.total_brams(&items), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn bnb_respects_height() {
+        let items = test_items(&[(36, 64); 8]);
+        let c = Constraints::new(2, false);
+        let (p, r) = run_packer(&Bnb::default(), &items, &c);
+        assert!(p.max_height() <= 2);
+        assert_eq!(r.brams, 4);
+    }
+}

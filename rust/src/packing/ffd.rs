@@ -1,0 +1,152 @@
+//! First-fit-decreasing / best-fit-decreasing packing baseline.
+//!
+//! Deterministic and fast: sort slices by depth descending, then place each
+//! into the existing bin whose BRAM cost grows least (best-fit), opening a
+//! new bin when no placement beats a singleton. This is the "reasonable
+//! hand-rolled allocator" the GA of [18] must beat.
+
+use super::{bin_brams, Bin, Constraints, Packer, Packing};
+use crate::memory::PackItem;
+
+/// Best-fit-decreasing packer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ffd {
+    /// Only co-locate slices of equal width (avoids max-width waste;
+    /// mirrors the GA's `P_adm_w = 0` setting in Table III).
+    pub match_width: bool,
+}
+
+impl Ffd {
+    pub fn new() -> Ffd {
+        Ffd { match_width: true }
+    }
+}
+
+impl Packer for Ffd {
+    fn name(&self) -> &'static str {
+        "ffd"
+    }
+
+    fn pack(&self, items: &[PackItem], c: &Constraints) -> Packing {
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse((items[i].depth, items[i].width_bits)));
+
+        let mut bins: Vec<Bin> = Vec::new();
+        // cached cost per bin to avoid recomputation
+        let mut costs: Vec<u64> = Vec::new();
+
+        for i in order {
+            let solo = bin_brams(items, &[i]);
+            let mut best: Option<(usize, u64)> = None; // (bin, delta)
+            for (bi, b) in bins.iter().enumerate() {
+                if b.items.len() >= c.max_bin_height {
+                    continue;
+                }
+                if c.same_slr && items[b.items[0]].slr != items[i].slr {
+                    continue;
+                }
+                if self.match_width
+                    && items[b.items[0]].width_bits != items[i].width_bits
+                {
+                    continue;
+                }
+                let mut members = b.items.clone();
+                members.push(i);
+                let new_cost = bin_brams(items, &members);
+                let delta = new_cost.saturating_sub(costs[bi]);
+                if delta < solo && best.map_or(true, |(_, d)| delta < d) {
+                    best = Some((bi, delta));
+                }
+            }
+            match best {
+                Some((bi, _)) => {
+                    bins[bi].items.push(i);
+                    costs[bi] = bin_brams(items, &bins[bi].items);
+                }
+                None => {
+                    bins.push(Bin { items: vec![i] });
+                    costs.push(solo);
+                }
+            }
+        }
+        Packing { bins }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::{run_packer, test_items, Packing};
+
+    #[test]
+    fn ffd_coalesces_shallow_slices() {
+        // 8 slices of 36x100: singletons cost 8, optimal is 2 bins of 4
+        // (36x400 each) = 2 BRAMs at H_B=4
+        let items = test_items(&[(36, 100); 8]);
+        let c = Constraints::new(4, false);
+        let (p, r) = run_packer(&Ffd::new(), &items, &c);
+        assert_eq!(r.brams, 2, "{p:?}");
+    }
+
+    #[test]
+    fn ffd_respects_height() {
+        let items = test_items(&[(36, 10); 9]);
+        let c = Constraints::new(3, false);
+        let (p, _) = run_packer(&Ffd::new(), &items, &c);
+        assert!(p.max_height() <= 3);
+        assert_eq!(p.total_brams(&items), 3);
+    }
+
+    #[test]
+    fn ffd_never_worse_than_singletons() {
+        let items = test_items(&[
+            (36, 700),
+            (36, 100),
+            (18, 300),
+            (18, 900),
+            (36, 50),
+            (9, 2000),
+            (36, 512),
+            (4, 128),
+        ]);
+        let c = Constraints::new(4, false);
+        let (p, r) = run_packer(&Ffd::new(), &items, &c);
+        let single = Packing::singletons(items.len()).total_brams(&items);
+        assert!(r.brams <= single, "{} > {}", r.brams, single);
+        assert!(p.validate(&items, &c).is_ok());
+    }
+
+    #[test]
+    fn width_matching_respected() {
+        let items = test_items(&[(36, 100), (4, 100), (36, 100), (4, 100)]);
+        let c = Constraints::new(4, false);
+        let (p, _) = run_packer(&Ffd::new(), &items, &c);
+        for b in &p.bins {
+            let w0 = items[b.items[0]].width_bits;
+            assert!(b.items.iter().all(|&i| items[i].width_bits == w0));
+        }
+    }
+
+    #[test]
+    fn slr_locality_respected() {
+        let mut items = test_items(&[(36, 100); 6]);
+        for (k, it) in items.iter_mut().enumerate() {
+            it.slr = k % 2;
+        }
+        let c = Constraints::new(4, true);
+        let (p, _) = run_packer(&Ffd::new(), &items, &c);
+        for b in &p.bins {
+            let s0 = items[b.items[0]].slr;
+            assert!(b.items.iter().all(|&i| items[i].slr == s0));
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let items = test_items(&[]);
+        let c = Constraints::new(4, false);
+        let (p, r) = run_packer(&Ffd::new(), &items, &c);
+        assert_eq!(p.bins.len(), 0);
+        assert_eq!(r.brams, 0);
+    }
+}

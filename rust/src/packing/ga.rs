@@ -1,0 +1,362 @@
+//! Grouping genetic algorithm packer — the engine of [18] (Kroes et al.,
+//! GECCO'20) that the paper uses for FCMP (§IV, Table III hyper-parameters).
+//!
+//! Representation: Falkenauer-style *grouping* GA. An individual is a bin
+//! assignment; crossover inherits whole bins from both parents (bins are the
+//! meaningful building blocks, not item positions) and repairs the rest with
+//! randomized first-fit; mutation dissolves random bins and re-inserts.
+//!
+//! The admission probabilities of Table III steer insertion:
+//! * `p_adm_w` — probability of admitting an item into a bin of different
+//!   column width (max-width cost: usually wasteful, 0 for both networks);
+//! * `p_adm_h` — probability of admitting an item into a bin whose combined
+//!   depth spills past the current BRAM row boundary (occasionally useful:
+//!   the spill may be absorbed by a deeper aspect mode).
+
+use super::{bin_brams, Bin, Constraints, Packer, Packing};
+use crate::memory::PackItem;
+use crate::util::rng::Rng;
+
+/// GA hyper-parameters (paper Table III).
+#[derive(Clone, Copy, Debug)]
+pub struct GaParams {
+    /// Population size N_p.
+    pub population: usize,
+    /// Tournament selection group size N_t.
+    pub tournament: usize,
+    /// Per-individual mutation probability P_mut.
+    pub p_mut: f64,
+    /// Width-mismatch admission probability P_adm^w.
+    pub p_adm_w: f64,
+    /// Depth-spill admission probability P_adm^h.
+    pub p_adm_h: f64,
+    /// Generations to run.
+    pub generations: usize,
+    /// PRNG seed (deterministic runs).
+    pub seed: u64,
+}
+
+impl GaParams {
+    /// Table III row "CNV": N_p=50, N_t=5, P_adm_w=0, P_adm_h=0.1, P_mut=0.3.
+    pub fn cnv() -> GaParams {
+        GaParams {
+            population: 50,
+            tournament: 5,
+            p_mut: 0.3,
+            p_adm_w: 0.0,
+            p_adm_h: 0.1,
+            generations: 120,
+            seed: 2020,
+        }
+    }
+
+    /// Table III row "RN50": N_p=75, N_t=5, P_adm_w=0, P_adm_h=0.1, P_mut=0.4.
+    pub fn rn50() -> GaParams {
+        GaParams {
+            population: 75,
+            tournament: 5,
+            p_mut: 0.4,
+            p_adm_w: 0.0,
+            p_adm_h: 0.1,
+            generations: 120,
+            seed: 2020,
+        }
+    }
+}
+
+/// The GA packer.
+#[derive(Clone, Copy, Debug)]
+pub struct Ga {
+    pub params: GaParams,
+}
+
+impl Ga {
+    pub fn new(params: GaParams) -> Ga {
+        Ga { params }
+    }
+}
+
+/// One individual: a packing plus per-bin cached costs (the fitness
+/// evaluation is the GA hot path; recomputing every bin's BRAM cost per
+/// offspring dominated the profile before caching).
+#[derive(Clone)]
+struct Indiv {
+    bins: Vec<Bin>,
+    bin_costs: Vec<u64>,
+    cost: u64,
+}
+
+impl Indiv {
+    fn from_bins(items: &[PackItem], bins: Vec<Bin>) -> Indiv {
+        let bin_costs: Vec<u64> =
+            bins.iter().map(|b| bin_brams(items, &b.items)).collect();
+        let cost = bin_costs.iter().sum();
+        Indiv { bins, bin_costs, cost }
+    }
+}
+
+fn total_cost(items: &[PackItem], bins: &[Bin]) -> u64 {
+    bins.iter().map(|b| bin_brams(items, &b.items)).sum()
+}
+
+/// Can `item` join `bin` under hard constraints + stochastic admission?
+fn admits(
+    items: &[PackItem],
+    bin: &Bin,
+    item: usize,
+    c: &Constraints,
+    p: &GaParams,
+    rng: &mut Rng,
+) -> bool {
+    if bin.items.len() >= c.max_bin_height {
+        return false;
+    }
+    let head = bin.items[0];
+    if c.same_slr && items[head].slr != items[item].slr {
+        return false;
+    }
+    if items[head].width_bits != items[item].width_bits && !rng.chance(p.p_adm_w) {
+        return false;
+    }
+    // depth spill: combined depth crossing the next 512-word row boundary
+    let depth: u64 = bin.items.iter().map(|&i| items[i].depth).sum();
+    let spills = (depth % 512 != 0) && (depth % 512 + items[item].depth > 512);
+    if spills && !rng.chance(p.p_adm_h) {
+        return false;
+    }
+    true
+}
+
+/// Randomized first-fit insertion used by construction, repair and mutation.
+/// Touched bins are tracked so callers can refresh only their cached costs.
+fn insert_all(
+    items: &[PackItem],
+    bins: &mut Vec<Bin>,
+    mut todo: Vec<usize>,
+    c: &Constraints,
+    p: &GaParams,
+    rng: &mut Rng,
+    touched: &mut Vec<usize>,
+) {
+    rng.shuffle(&mut todo);
+    for item in todo {
+        let start = if bins.is_empty() { 0 } else { rng.range(0, bins.len()) };
+        let n = bins.len();
+        let mut placed = false;
+        for k in 0..n {
+            let bi = (start + k) % n;
+            if admits(items, &bins[bi], item, c, p, rng) {
+                bins[bi].items.push(item);
+                touched.push(bi);
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            bins.push(Bin { items: vec![item] });
+            touched.push(bins.len() - 1);
+        }
+    }
+}
+
+fn random_individual(
+    items: &[PackItem],
+    c: &Constraints,
+    p: &GaParams,
+    rng: &mut Rng,
+) -> Indiv {
+    let mut bins = Vec::new();
+    let mut touched = Vec::new();
+    insert_all(items, &mut bins, (0..items.len()).collect(), c, p, rng, &mut touched);
+    Indiv::from_bins(items, bins)
+}
+
+/// Grouping crossover: child inherits a random subset of parent A's bins,
+/// then parent B's bins filtered of used items, then first-fit repair.
+fn crossover(
+    items: &[PackItem],
+    a: &Indiv,
+    b: &Indiv,
+    c: &Constraints,
+    p: &GaParams,
+    rng: &mut Rng,
+) -> Indiv {
+    let mut used = vec![false; items.len()];
+    let mut bins: Vec<Bin> = Vec::new();
+    let mut bin_costs: Vec<u64> = Vec::new();
+    for (bi, bin) in a.bins.iter().enumerate() {
+        if rng.chance(0.5) {
+            for &i in &bin.items {
+                used[i] = true;
+            }
+            bins.push(bin.clone());
+            bin_costs.push(a.bin_costs[bi]); // inherited bins keep costs
+        }
+    }
+    for (bi, bin) in b.bins.iter().enumerate() {
+        let free: Vec<usize> =
+            bin.items.iter().copied().filter(|&i| !used[i]).collect();
+        if free.len() == bin.items.len() {
+            for &i in &free {
+                used[i] = true;
+            }
+            bins.push(Bin { items: free });
+            bin_costs.push(b.bin_costs[bi]);
+        }
+    }
+    let todo: Vec<usize> = (0..items.len()).filter(|&i| !used[i]).collect();
+    let mut touched = Vec::new();
+    insert_all(items, &mut bins, todo, c, p, rng, &mut touched);
+    bin_costs.resize(bins.len(), 0);
+    touched.sort_unstable();
+    touched.dedup();
+    for bi in touched {
+        bin_costs[bi] = bin_brams(items, &bins[bi].items);
+    }
+    let cost = bin_costs.iter().sum();
+    Indiv { bins, bin_costs, cost }
+}
+
+/// Mutation: dissolve a few random bins and re-insert their items.
+fn mutate(items: &[PackItem], ind: &mut Indiv, c: &Constraints, p: &GaParams, rng: &mut Rng) {
+    if ind.bins.is_empty() {
+        return;
+    }
+    let n_dissolve = 1 + rng.range(0, (ind.bins.len() / 8).max(1));
+    let mut todo = Vec::new();
+    for _ in 0..n_dissolve {
+        if ind.bins.is_empty() {
+            break;
+        }
+        let bi = rng.range(0, ind.bins.len());
+        todo.extend(ind.bins.swap_remove(bi).items);
+        ind.bin_costs.swap_remove(bi);
+    }
+    let mut touched = Vec::new();
+    insert_all(items, &mut ind.bins, todo, c, p, rng, &mut touched);
+    ind.bin_costs.resize(ind.bins.len(), 0);
+    touched.sort_unstable();
+    touched.dedup();
+    for bi in touched {
+        ind.bin_costs[bi] = bin_brams(items, &ind.bins[bi].items);
+    }
+    ind.cost = ind.bin_costs.iter().sum();
+}
+
+fn tournament<'a>(pop: &'a [Indiv], k: usize, rng: &mut Rng) -> &'a Indiv {
+    let mut best = &pop[rng.range(0, pop.len())];
+    for _ in 1..k {
+        let cand = &pop[rng.range(0, pop.len())];
+        if cand.cost < best.cost {
+            best = cand;
+        }
+    }
+    best
+}
+
+impl Packer for Ga {
+    fn name(&self) -> &'static str {
+        "ga"
+    }
+
+    fn pack(&self, items: &[PackItem], c: &Constraints) -> Packing {
+        if items.is_empty() {
+            return Packing::default();
+        }
+        let p = &self.params;
+        let mut rng = Rng::new(p.seed);
+
+        // seed the population with randomized constructions plus one
+        // deterministic FFD solution (never start worse than the baseline)
+        let mut pop: Vec<Indiv> = (0..p.population.max(2) - 1)
+            .map(|_| random_individual(items, c, p, &mut rng))
+            .collect();
+        let ffd = super::ffd::Ffd::new().pack(items, c);
+        debug_assert_eq!(total_cost(items, &ffd.bins), Indiv::from_bins(items, ffd.bins.clone()).cost);
+        pop.push(Indiv::from_bins(items, ffd.bins));
+
+        let mut best = pop.iter().min_by_key(|i| i.cost).unwrap().clone();
+        for _gen in 0..p.generations {
+            let mut next = Vec::with_capacity(pop.len());
+            next.push(best.clone()); // elitism
+            while next.len() < pop.len() {
+                let a = tournament(&pop, p.tournament, &mut rng);
+                let b = tournament(&pop, p.tournament, &mut rng);
+                let mut child = crossover(items, a, b, c, p, &mut rng);
+                if rng.chance(p.p_mut) {
+                    mutate(items, &mut child, c, p, &mut rng);
+                }
+                next.push(child);
+            }
+            pop = next;
+            let gen_best = pop.iter().min_by_key(|i| i.cost).unwrap();
+            if gen_best.cost < best.cost {
+                best = gen_best.clone();
+            }
+        }
+        Packing { bins: best.bins }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::{run_packer, test_items};
+
+    fn quick(seed: u64) -> GaParams {
+        GaParams { generations: 40, seed, ..GaParams::cnv() }
+    }
+
+    #[test]
+    fn ga_finds_optimal_on_uniform_slices() {
+        let items = test_items(&[(36, 128); 16]);
+        let c = Constraints::new(4, false);
+        let (_, r) = run_packer(&Ga::new(quick(1)), &items, &c);
+        assert_eq!(r.brams, 4); // 16 slices, 4 per bin, 512 deep = 1 BRAM each
+        assert!((r.efficiency - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ga_beats_or_matches_ffd() {
+        // heterogeneous depths: grouping matters
+        let depths = [36u64, 72, 144, 288, 36, 72, 450, 100, 260, 36, 512, 90];
+        let specs: Vec<(u64, u64)> = depths.iter().map(|&d| (36, d)).collect();
+        let items = test_items(&specs);
+        let c = Constraints::new(4, false);
+        let (_, ga) = run_packer(&Ga::new(quick(2)), &items, &c);
+        let (_, ffd) = run_packer(&super::super::ffd::Ffd::new(), &items, &c);
+        assert!(ga.brams <= ffd.brams, "ga {} vs ffd {}", ga.brams, ffd.brams);
+    }
+
+    #[test]
+    fn ga_is_deterministic_for_seed() {
+        let items = test_items(&[(36, 100), (36, 412), (18, 300), (36, 80), (9, 950)]);
+        let c = Constraints::new(3, false);
+        let (_, a) = run_packer(&Ga::new(quick(7)), &items, &c);
+        let (_, b) = run_packer(&Ga::new(quick(7)), &items, &c);
+        assert_eq!(a.brams, b.brams);
+    }
+
+    #[test]
+    fn ga_respects_h3() {
+        let items = test_items(&[(36, 128); 9]);
+        let c = Constraints::new(3, false);
+        let (p, r) = run_packer(&Ga::new(quick(3)), &items, &c);
+        assert!(p.max_height() <= 3);
+        assert_eq!(r.brams, 3);
+    }
+
+    #[test]
+    fn width_admission_zero_keeps_bins_uniform() {
+        let items = test_items(&[(36, 60), (4, 60), (36, 60), (4, 60), (36, 60), (4, 60)]);
+        let c = Constraints::new(4, false);
+        let (p, _) = run_packer(&Ga::new(quick(4)), &items, &c);
+        for b in &p.bins {
+            let w0 = items[b.items[0]].width_bits;
+            assert!(
+                b.items.iter().all(|&i| items[i].width_bits == w0),
+                "P_adm_w=0 must keep widths uniform: {b:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Buffer-to-BRAM bin packing (paper §II.C, §IV and [18]).
+//!
+//! Items are the ≤36-bit column slices of the MVAU weight buffers
+//! ([`crate::memory::PackItem`]). A *bin* is one physical BRAM structure
+//! holding up to `H_B` co-located slices stacked in depth (Fig. 7); its cost
+//! is the BRAM18 count of the combined (max-width × Σdepth) shape. `H_B` is
+//! bounded by the virtual ports the GALS streamer exposes: `H_B ≤ 2·R_F`
+//! (Eq. 2).
+//!
+//! Four engines, matching the paper's §II.C landscape:
+//! * [`ffd`]    — first-fit-decreasing (fast deterministic baseline);
+//! * [`anneal`] — simulated annealing (MPack, Vasiljevic & Chow);
+//! * [`bnb`]    — branch-and-bound (MemPacker, Karchmer & Rose; exact,
+//!                exponential — small inputs only);
+//! * [`ga`]     — the grouping genetic algorithm of [18] (Kroes et al.),
+//!                with the Table III hyper-parameters as defaults.
+
+pub mod anneal;
+pub mod bnb;
+pub mod ffd;
+pub mod ga;
+
+use crate::device::bram::brams_for;
+use crate::memory::PackItem;
+
+/// Packing constraints (paper §IV / §V).
+#[derive(Clone, Copy, Debug)]
+pub struct Constraints {
+    /// Max logical buffers per BRAM (`H_B ≤ 2·R_F`, Eq. 2).
+    pub max_bin_height: usize,
+    /// Inter-layer packing only within one SLR (Alveo floorplanning, §V).
+    pub same_slr: bool,
+}
+
+impl Constraints {
+    pub fn new(max_bin_height: usize, same_slr: bool) -> Constraints {
+        Constraints { max_bin_height, same_slr }
+    }
+
+    /// The memory/compute frequency ratio this bin height requires (Eq. 2).
+    pub fn required_rf(&self) -> f64 {
+        self.max_bin_height as f64 / 2.0
+    }
+}
+
+/// One physical BRAM structure holding co-located item slices.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Bin {
+    /// Indices into the packing's item slice.
+    pub items: Vec<usize>,
+}
+
+/// Cost/shape of a bin over a set of items.
+pub fn bin_shape(items: &[PackItem], members: &[usize]) -> (u64, u64) {
+    let width = members.iter().map(|&i| items[i].width_bits).max().unwrap_or(0);
+    let depth = members.iter().map(|&i| items[i].depth).sum();
+    (width, depth)
+}
+
+/// BRAM18 count of a bin (combined max-width × Σdepth shape).
+pub fn bin_brams(items: &[PackItem], members: &[usize]) -> u64 {
+    let (w, d) = bin_shape(items, members);
+    brams_for(w, d)
+}
+
+/// A complete packing solution.
+#[derive(Clone, Debug, Default)]
+pub struct Packing {
+    pub bins: Vec<Bin>,
+}
+
+impl Packing {
+    /// Trivial solution: one item per bin (the unpacked baseline).
+    pub fn singletons(n: usize) -> Packing {
+        Packing { bins: (0..n).map(|i| Bin { items: vec![i] }).collect() }
+    }
+
+    pub fn total_brams(&self, items: &[PackItem]) -> u64 {
+        self.bins.iter().map(|b| bin_brams(items, &b.items)).sum()
+    }
+
+    /// Eq. 1 efficiency of the packed subsystem.
+    pub fn efficiency(&self, items: &[PackItem]) -> f64 {
+        let bits: u64 = items.iter().map(|i| i.bits()).sum();
+        crate::memory::efficiency(bits, self.total_brams(items))
+    }
+
+    /// Tallest bin (drives the required R_F).
+    pub fn max_height(&self) -> usize {
+        self.bins.iter().map(|b| b.items.len()).max().unwrap_or(0)
+    }
+
+    /// Validate structural invariants: every item in exactly one bin,
+    /// heights within H_B, SLR-locality if required.
+    pub fn validate(&self, items: &[PackItem], c: &Constraints) -> Result<(), String> {
+        let mut seen = vec![false; items.len()];
+        for (bi, b) in self.bins.iter().enumerate() {
+            if b.items.is_empty() {
+                return Err(format!("bin {bi} is empty"));
+            }
+            if b.items.len() > c.max_bin_height {
+                return Err(format!(
+                    "bin {bi} height {} > H_B {}",
+                    b.items.len(),
+                    c.max_bin_height
+                ));
+            }
+            if c.same_slr {
+                let slr = items[b.items[0]].slr;
+                if b.items.iter().any(|&i| items[i].slr != slr) {
+                    return Err(format!("bin {bi} crosses SLRs"));
+                }
+            }
+            for &i in &b.items {
+                if i >= items.len() {
+                    return Err(format!("bin {bi} references item {i} out of range"));
+                }
+                if seen[i] {
+                    return Err(format!("item {i} placed twice"));
+                }
+                seen[i] = true;
+            }
+        }
+        if let Some(missing) = seen.iter().position(|&s| !s) {
+            return Err(format!("item {missing} not placed"));
+        }
+        Ok(())
+    }
+}
+
+/// A packing engine.
+pub trait Packer {
+    fn name(&self) -> &'static str;
+    fn pack(&self, items: &[PackItem], constraints: &Constraints) -> Packing;
+}
+
+/// Summary of a packing run (for Table IV and the ablation bench).
+#[derive(Clone, Debug)]
+pub struct PackReport {
+    pub engine: &'static str,
+    pub brams: u64,
+    pub efficiency: f64,
+    pub max_height: usize,
+    pub elapsed: std::time::Duration,
+}
+
+/// Run a packer and summarise.
+pub fn run_packer(
+    p: &dyn Packer,
+    items: &[PackItem],
+    c: &Constraints,
+) -> (Packing, PackReport) {
+    let t0 = std::time::Instant::now();
+    let packing = p.pack(items, c);
+    let elapsed = t0.elapsed();
+    packing
+        .validate(items, c)
+        .unwrap_or_else(|e| panic!("{} produced invalid packing: {e}", p.name()));
+    let report = PackReport {
+        engine: p.name(),
+        brams: packing.total_brams(items),
+        efficiency: packing.efficiency(items),
+        max_height: packing.max_height(),
+        elapsed,
+    };
+    (packing, report)
+}
+
+#[cfg(test)]
+pub(crate) fn test_items(specs: &[(u64, u64)]) -> Vec<PackItem> {
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, &(w, d))| PackItem {
+            id: i,
+            layer: format!("l{i}"),
+            width_bits: w,
+            depth: d,
+            slr: 0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singleton_packing_is_direct_mapping() {
+        let items = test_items(&[(36, 100), (18, 600), (36, 512)]);
+        let p = Packing::singletons(3);
+        assert_eq!(p.total_brams(&items), 1 + 1 + 1);
+        p.validate(&items, &Constraints::new(4, false)).unwrap();
+    }
+
+    #[test]
+    fn coalescing_shallow_buffers_saves_brams() {
+        // four 36x100 slices: solo 4 BRAMs; packed in one bin: 36x400 -> 1
+        let items = test_items(&[(36, 100); 4]);
+        let packed = Packing { bins: vec![Bin { items: vec![0, 1, 2, 3] }] };
+        assert_eq!(packed.total_brams(&items), 1);
+        assert_eq!(Packing::singletons(4).total_brams(&items), 4);
+        assert!(packed.efficiency(&items) > 0.7);
+    }
+
+    #[test]
+    fn validate_catches_height_violation() {
+        let items = test_items(&[(36, 10); 5]);
+        let p = Packing { bins: vec![Bin { items: vec![0, 1, 2, 3, 4] }] };
+        assert!(p.validate(&items, &Constraints::new(4, false)).is_err());
+        assert!(p.validate(&items, &Constraints::new(5, false)).is_ok());
+    }
+
+    #[test]
+    fn validate_catches_duplicates_and_missing() {
+        let items = test_items(&[(36, 10), (36, 20)]);
+        let dup = Packing { bins: vec![Bin { items: vec![0, 0] }, Bin { items: vec![1] }] };
+        assert!(dup.validate(&items, &Constraints::new(4, false)).is_err());
+        let missing = Packing { bins: vec![Bin { items: vec![0] }] };
+        assert!(missing.validate(&items, &Constraints::new(4, false)).is_err());
+    }
+
+    #[test]
+    fn validate_catches_slr_crossing() {
+        let mut items = test_items(&[(36, 10), (36, 20)]);
+        items[1].slr = 1;
+        let p = Packing { bins: vec![Bin { items: vec![0, 1] }] };
+        assert!(p.validate(&items, &Constraints::new(4, true)).is_err());
+        assert!(p.validate(&items, &Constraints::new(4, false)).is_ok());
+    }
+
+    #[test]
+    fn required_rf_follows_eq2() {
+        assert_eq!(Constraints::new(4, false).required_rf(), 2.0);
+        assert_eq!(Constraints::new(3, false).required_rf(), 1.5);
+        assert_eq!(Constraints::new(2, false).required_rf(), 1.0);
+    }
+
+    #[test]
+    fn mixed_width_bin_pays_max_width() {
+        // (36 x 800) = 2 BRAMs; separate: 1 + 1 = 2 — co-locating a narrow
+        // slice under a wide one gains nothing (the narrow words are padded
+        // to the bin width), which is why Table III sets P_adm_w = 0
+        let items = test_items(&[(36, 400), (4, 400)]);
+        let together = Packing { bins: vec![Bin { items: vec![0, 1] }] };
+        assert_eq!(together.total_brams(&items), 2);
+        assert!(together.efficiency(&items) <= Packing::singletons(2).efficiency(&items));
+        // same-width slices DO gain: 2 BRAMs -> 1
+        let same = test_items(&[(36, 256), (36, 256)]);
+        let t2 = Packing { bins: vec![Bin { items: vec![0, 1] }] };
+        assert!(t2.total_brams(&same) < Packing::singletons(2).total_brams(&same));
+    }
+}

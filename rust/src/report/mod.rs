@@ -1,0 +1,328 @@
+//! Report layer: regenerates the paper's tables/figures as text/CSV.
+//!
+//! Each `table_*` / `fig_*` function assembles the full experiment from the
+//! underlying modules and returns a [`crate::util::bench::Table`] whose rows
+//! mirror the paper's rows, annotated with our measured values. The bench
+//! binaries print these; EXPERIMENTS.md records paper-vs-measured.
+
+use crate::device::{self, Device};
+use crate::folding::{self, network_resources};
+use crate::gals;
+use crate::memory;
+use crate::nn::{cnv, resnet50, CnvVariant, Network};
+use crate::packing::{self, Constraints, Packer};
+use crate::sim;
+use crate::timing;
+use crate::util::bench::Table;
+
+/// Result of running the FCMP packing flow on one network/device pair.
+pub struct PackOutcome {
+    pub items: Vec<memory::PackItem>,
+    pub packing: packing::Packing,
+    pub report: packing::PackReport,
+    pub baseline_brams: u64,
+    pub baseline_eff: f64,
+    /// Streamer + CDC logic overhead (kLUT), Table IV's "Logic" column.
+    pub logic_kluts: f64,
+}
+
+/// Run the FCMP packing flow (paper §IV) on a network/device pair.
+pub fn pack_network(
+    net: &Network,
+    dev: &Device,
+    engine: &dyn Packer,
+    bin_height: usize,
+) -> PackOutcome {
+    let bufs = memory::weight_buffers(net, dev.slrs.len());
+    let items = memory::all_columns(&bufs);
+    let c = Constraints::new(bin_height, !dev.is_monolithic());
+    let (packing, report) = packing::run_packer(engine, &items, &c);
+    let baseline_brams = memory::direct_brams(&bufs);
+    let baseline_eff = memory::efficiency(memory::total_bits(&bufs), baseline_brams);
+    // streams = column slices; DWCs appear for full odd-height bins (Fig 7b)
+    let with_dwc = packing
+        .bins
+        .iter()
+        .filter(|b| b.items.len() == bin_height && bin_height % 2 == 1)
+        .count();
+    let logic_kluts =
+        gals::streamer_lut_overhead(items.len(), packing.bins.len(), with_dwc) / 1e3;
+    PackOutcome { items, packing, report, baseline_brams, baseline_eff, logic_kluts }
+}
+
+/// Default GA engine for a network (Table III hyper-parameters).
+pub fn default_ga(net: &Network) -> packing::ga::Ga {
+    if net.name.starts_with("CNV") {
+        packing::ga::Ga::new(packing::ga::GaParams::cnv())
+    } else {
+        packing::ga::Ga::new(packing::ga::GaParams::rn50())
+    }
+}
+
+/// Table I — resource utilization of FINN accelerators on Zynq 7020.
+pub fn table1() -> Table {
+    let dev = device::zynq_7020();
+    let mut t = Table::new(["accelerator", "BRAM %", "LUT %", "DSP %", "paper (BRAM/LUT/DSP)"]);
+    // paper Table I has five unlabeled BNN-Pynq rows; we regenerate the
+    // full suite (MLPs + CNVs) against the published row values
+    let rows: Vec<(Network, &str)> = vec![
+        (crate::nn::sfc_w1a1(), "78 / 53 / 2"),
+        (crate::nn::lfc_w1a1(), "88 / 49 / 11"),
+        (cnv(CnvVariant::W1A1), "94 / 76 / 12"),
+        (cnv(CnvVariant::W1A2), "100 / 70 / 15"),
+        (cnv(CnvVariant::W2A2), "79 / 92 / 2"),
+    ];
+    for (net, paper) in rows {
+        let r = network_resources(&net, &dev);
+        t.row([
+            net.name.clone(),
+            format!("{:.0}", r.bram_pct(&dev)),
+            format!("{:.0}", r.lut_pct(&dev)),
+            format!("{:.0}", 100.0 * r.dsps / dev.dsp as f64),
+            paper.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 2 — mapping efficiency decreases with parallelism.
+pub fn fig2() -> Table {
+    let mut t = Table::new(["parallelism", "buffer (w x d)", "BRAM18", "E %"]);
+    // one conv layer (256 -> 256 channels, 3x3) at 1x / 2x / 4x compute
+    for (mult, pe, simd) in [(1u64, 4u64, 32u64), (2, 8, 32), (4, 16, 32)] {
+        let l = crate::nn::Layer {
+            name: format!("conv-x{mult}"),
+            kind: crate::nn::LayerKind::Conv,
+            k: 3,
+            c_in: 256,
+            c_out: 256,
+            stride: 1,
+            pad: 1,
+            ifm: 14,
+            wbits: 1,
+            abits: 2,
+            pe,
+            simd,
+            exclude_from_packing: false,
+        };
+        let b = memory::WeightBuffer::from_layer(&l, 0);
+        let brams = b.brams();
+        t.row([
+            format!("x{mult} (PE={pe} SIMD={simd})"),
+            format!("{}x{}", b.width_bits, b.depth),
+            format!("{brams}"),
+            format!("{:.1}", 100.0 * memory::efficiency(b.bits(), brams)),
+        ]);
+    }
+    t
+}
+
+/// Table II — ImageNet dataflow accelerator comparison (our RN50 row).
+pub fn table2() -> Table {
+    let mut t = Table::new([
+        "accelerator", "Top-1 %", "TOp/s", "platform", "Fmax", "kLUT", "BRAM18", "FPS", "lat ms",
+    ]);
+    // published rows (Table II) for side-by-side shape comparison
+    t.row(["DoReFaNet-DF [9]", "50", "11.4", "AWS F1", "155", "477", "1332", "5241", "-"]);
+    t.row(["ReBNet Arch3 [13]", "41", "-", "VCU108", "200", "188", "3125", "170-520", "-"]);
+    t.row(["ShuffleNetV2 [16]", "70.8", "2.42", "AWS F1", "300", "274", "2746", "3321", "-"]);
+    t.row(["RN50-W1A2 (paper)", "67.3", "18.3", "U250", "195", "1027", "3870", "2703", "1.9"]);
+
+    let dev = device::alveo_u250();
+    let net = resnet50(1);
+    let r = network_resources(&net, &dev);
+    let perf = sim::estimate(&net, 195.0);
+    let bufs = memory::weight_buffers(&net, dev.slrs.len());
+    // total BRAM: weights + CDC/stream FIFOs (activations live in URAM)
+    let total_brams = memory::direct_brams(&bufs) + 2 * net.stages.len() as u64;
+    t.row([
+        "RN50-W1A2 (ours)".to_string(),
+        format!("{:.1}", net.top1_pct),
+        format!("{:.1}", perf.tops),
+        "U250 model".to_string(),
+        "195".to_string(),
+        format!("{:.0}", r.luts / 1e3),
+        format!("{total_brams}"),
+        format!("{:.0}", perf.fps),
+        format!("{:.1}", perf.latency_ms),
+    ]);
+    t
+}
+
+/// Fig. 4 — per-resblock LUT and BRAM utilization of RN50 (+ Fig. 5 SLR).
+pub fn fig4() -> Table {
+    let net = resnet50(1);
+    let mut t = Table::new(["resblock", "kLUT", "BRAM18 (weights)", "SLR"]);
+    let bufs = memory::weight_buffers(&net, 4);
+    for stage in &net.stages {
+        if let crate::nn::Stage::ResBlock { name, branch, bypass } = stage {
+            let luts: f64 = branch
+                .iter()
+                .chain(bypass.iter())
+                .map(|l| folding::layer_resources(l).luts)
+                .sum::<f64>()
+                + folding::cost::LUT_PER_RESBLOCK;
+            let brams: u64 = branch
+                .iter()
+                .chain(bypass.iter())
+                .map(|l| memory::WeightBuffer::from_layer(l, 0).brams())
+                .sum();
+            let slr = bufs
+                .iter()
+                .find(|b| b.layer.starts_with(name.as_str()))
+                .map(|b| b.slr)
+                .unwrap_or(0);
+            t.row([
+                name.clone(),
+                format!("{:.1}", luts / 1e3),
+                format!("{brams}"),
+                format!("{slr}"),
+            ]);
+        }
+    }
+    t
+}
+
+/// Table IV — packed memory subsystems.
+pub fn table4(generations: usize) -> Table {
+    let mut t = Table::new([
+        "accelerator", "logic kLUT", "BRAM18", "E %", "paper BRAM18", "paper E %",
+    ]);
+    let mut add = |name: &str, net: &Network, dev: &Device, hb: usize, paper_brams: &str, paper_e: &str| {
+        let mut ga = default_ga(net);
+        ga.params.generations = generations;
+        if hb == 0 {
+            let bufs = memory::weight_buffers(net, dev.slrs.len());
+            let brams = memory::direct_brams(&bufs);
+            let eff = memory::efficiency(memory::total_bits(&bufs), brams);
+            t.row([
+                name.to_string(),
+                "-".into(),
+                format!("{brams}"),
+                format!("{:.1}", 100.0 * eff),
+                paper_brams.to_string(),
+                paper_e.to_string(),
+            ]);
+        } else {
+            let out = pack_network(net, dev, &ga, hb);
+            t.row([
+                name.to_string(),
+                format!("{:.1}", out.logic_kluts),
+                format!("{}", out.report.brams),
+                format!("{:.1}", 100.0 * out.report.efficiency),
+                paper_brams.to_string(),
+                paper_e.to_string(),
+            ]);
+        }
+    };
+    let z = device::zynq_7020();
+    let u250 = device::alveo_u250();
+    let u280 = device::alveo_u280();
+    let cnv1 = cnv(CnvVariant::W1A1);
+    let cnv2 = cnv(CnvVariant::W2A2);
+    let rn1 = resnet50(1);
+    let rn2 = resnet50(2);
+    add("CNV-W1A1", &cnv1, &z, 0, "126", "67.6");
+    add("CNV-W1A1-P3", &cnv1, &z, 3, "108", "78.8");
+    add("CNV-W1A1-P4", &cnv1, &z, 4, "96", "88.7");
+    add("CNV-W2A2", &cnv2, &z, 0, "208", "79.9");
+    add("CNV-W2A2-P3", &cnv2, &z, 3, "194", "85.6");
+    add("CNV-W2A2-P4", &cnv2, &z, 4, "188", "88.4");
+    add("RN50-W1A2-U250", &rn1, &u250, 0, "2320", "52.9");
+    add("RN50-W1A2-U250-P3", &rn1, &u250, 3, "1804", "68.0");
+    add("RN50-W1A2-U250-P4", &rn1, &u250, 4, "1632", "75.3");
+    add("RN50-W1A2-U280-P4", &rn1, &u280, 4, "1327", "92.6");
+    add("RN50-W2A2-U250-P4", &rn2, &u250, 4, "2642", "92.6");
+    t
+}
+
+/// Table V — packed vs folded implementations.
+pub fn table5(generations: usize) -> Table {
+    let mut t = Table::new([
+        "accelerator", "LUT %", "BRAM %", "Fc MHz", "Fm MHz", "dFPS %", "paper (Fc/Fm/dFPS)",
+    ]);
+    struct Row {
+        name: &'static str,
+        net: Network,
+        dev: Device,
+        hb: usize,
+        folded: bool,
+        paper: &'static str,
+    }
+    let rows = vec![
+        Row { name: "CNV-W1A1-7020-P4", net: cnv(CnvVariant::W1A1), dev: device::zynq_7020(), hb: 4, folded: false, paper: "100/200/0" },
+        Row { name: "CNV-W1A1-7012S-P4", net: cnv(CnvVariant::W1A1), dev: device::zynq_7012s(), hb: 4, folded: false, paper: "100/200/0" },
+        Row { name: "RN50-W1A2-U250-P4", net: resnet50(1), dev: device::alveo_u250(), hb: 4, folded: false, paper: "183/363/12" },
+        Row { name: "RN50-W1A2-U280-P4", net: resnet50(1), dev: device::alveo_u280(), hb: 4, folded: false, paper: "138/373/32" },
+        Row { name: "RN50-W1A2-U280-F2", net: resnet50(1).fold2(), dev: device::alveo_u280(), hb: 0, folded: true, paper: "191/-/51" },
+    ];
+    for r in rows {
+        let fc_target = r.dev.nominal_compute_mhz;
+        let baseline = fc_target;
+        let res = network_resources(&r.net, &r.dev);
+        let (brams, logic_kluts, rf) = if r.hb > 0 {
+            let mut ga = default_ga(&r.net);
+            ga.params.generations = generations;
+            let out = pack_network(&r.net, &r.dev, &ga, r.hb);
+            let fifo_brams = 2 * r.net.stages.len() as u64;
+            (out.report.brams + fifo_brams, out.logic_kluts, r.hb as f64 / 2.0)
+        } else {
+            (res.total_brams(), 0.0, 1.0)
+        };
+        let lut_util =
+            (res.luts + logic_kluts * 1e3 + r.dev.shell_luts as f64) / r.dev.luts as f64;
+        let timing = timing::evaluate(&r.dev, lut_util, fc_target, rf, baseline);
+        // folded designs do half the per-cycle work
+        let delta = if r.folded {
+            100.0 * (1.0 - timing.effective_fc_mhz / 2.0 / baseline)
+        } else {
+            timing.delta_fps_pct
+        };
+        t.row([
+            r.name.to_string(),
+            format!("{:.0}", 100.0 * lut_util),
+            format!("{:.0}", 100.0 * brams as f64 / r.dev.bram18 as f64),
+            format!("{:.0}", timing.fc_mhz),
+            if rf > 1.0 { format!("{:.0}", timing.fm_mhz) } else { "-".into() },
+            format!("{:.0}", delta),
+            r.paper.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_three_rows() {
+        let t = table1();
+        let s = t.render();
+        assert!(s.contains("CNV-W1A1") && s.contains("CNV-W2A2"));
+    }
+
+    #[test]
+    fn fig2_efficiency_decreases() {
+        let t = fig2();
+        let csv = t.to_csv();
+        let effs: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.rsplit(',').next().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(effs.len(), 3);
+        assert!(effs[0] > effs[1] && effs[1] > effs[2], "{effs:?}");
+    }
+
+    #[test]
+    fn pack_network_cnv_p4_reduces_brams() {
+        let net = cnv(CnvVariant::W1A1);
+        let dev = device::zynq_7020();
+        let mut ga = default_ga(&net);
+        ga.params.generations = 30;
+        let out = pack_network(&net, &dev, &ga, 4);
+        assert!(out.report.brams < out.baseline_brams);
+        assert!(out.report.efficiency > out.baseline_eff);
+    }
+}

@@ -1,0 +1,179 @@
+//! Parser for the plain-text artifact manifests emitted by `aot.py`.
+//!
+//! Format (one record per line):
+//! ```text
+//! model <name>
+//! hlo <batch> <file>
+//! param <file> <dim>...
+//! arg <file> <dim>...          # micro-artifacts only
+//! expect <file> <dim>...       # micro-artifacts only
+//! input <batch> <dim>...
+//! output <batch> <dim>...
+//! golden <input-file> <output-file>
+//! ```
+
+use std::path::Path;
+
+use crate::Result;
+use anyhow::{anyhow, Context};
+
+/// A tensor file reference with dims.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub file: String,
+    pub dims: Vec<u64>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> u64 {
+        self.dims.iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub model: String,
+    /// (batch, hlo file) pairs.
+    pub hlo: Vec<(usize, String)>,
+    pub params: Vec<TensorSpec>,
+    pub args: Vec<TensorSpec>,
+    pub expect: Option<TensorSpec>,
+    /// Input dims including batch (dims[0] = smallest golden batch).
+    pub input_dims: Vec<u64>,
+    pub output_dims: Vec<u64>,
+    pub golden: Option<(String, String)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let tag = it.next().unwrap();
+            let rest: Vec<&str> = it.collect();
+            let dims = |xs: &[&str]| -> Result<Vec<u64>> {
+                xs.iter()
+                    .map(|x| x.parse::<u64>().with_context(|| format!("line {}: {x:?}", no + 1)))
+                    .collect()
+            };
+            match tag {
+                "model" => m.model = rest.first().unwrap_or(&"").to_string(),
+                "hlo" => {
+                    let batch: usize = rest
+                        .first()
+                        .ok_or_else(|| anyhow!("line {}: hlo wants batch", no + 1))?
+                        .parse()?;
+                    let file = rest.get(1).ok_or_else(|| anyhow!("line {}: hlo wants file", no + 1))?;
+                    m.hlo.push((batch, file.to_string()));
+                }
+                "param" | "arg" | "expect" => {
+                    let file = rest
+                        .first()
+                        .ok_or_else(|| anyhow!("line {}: {tag} wants file", no + 1))?
+                        .to_string();
+                    let spec = TensorSpec { file, dims: dims(&rest[1..])? };
+                    match tag {
+                        "param" => m.params.push(spec),
+                        "arg" => m.args.push(spec),
+                        _ => m.expect = Some(spec),
+                    }
+                }
+                "input" => m.input_dims = dims(&rest)?,
+                "output" => m.output_dims = dims(&rest)?,
+                "golden" => {
+                    if rest.len() != 2 {
+                        return Err(anyhow!("line {}: golden wants 2 files", no + 1));
+                    }
+                    m.golden = Some((rest[0].to_string(), rest[1].to_string()));
+                }
+                other => return Err(anyhow!("line {}: unknown tag {other:?}", no + 1)),
+            }
+        }
+        if m.model.is_empty() {
+            return Err(anyhow!("manifest has no model line"));
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Manifest::parse(&text)
+    }
+
+    /// Elements per sample (input dims without the batch dimension).
+    pub fn input_elements_per_sample(&self) -> u64 {
+        self.input_dims.iter().skip(1).product()
+    }
+
+    pub fn output_elements_per_sample(&self) -> u64 {
+        self.output_dims.iter().skip(1).product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model cnv_w1a1
+param weights/cnv_w1a1/000.bin 27 64
+param weights/cnv_w1a1/001.bin 576 64
+hlo 1 cnv_w1a1.b1.hlo.txt
+hlo 4 cnv_w1a1.b4.hlo.txt
+input 1 32 32 3
+output 1 16
+golden golden/cnv_w1a1.in.bin golden/cnv_w1a1.out.bin
+";
+
+    #[test]
+    fn parses_model_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model, "cnv_w1a1");
+        assert_eq!(m.hlo, vec![(1, "cnv_w1a1.b1.hlo.txt".into()), (4, "cnv_w1a1.b4.hlo.txt".into())]);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].elements(), 27 * 64);
+        assert_eq!(m.input_elements_per_sample(), 32 * 32 * 3);
+        assert_eq!(m.output_elements_per_sample(), 16);
+        assert!(m.golden.is_some());
+    }
+
+    #[test]
+    fn parses_micro_manifest() {
+        let text = "\
+model mvau_unit
+hlo 1 mvau_unit.hlo.txt
+arg golden/x.bin 8 36
+arg golden/w.bin 36 16
+expect golden/y.bin 8 16
+";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.args.len(), 2);
+        assert_eq!(m.expect.as_ref().unwrap().elements(), 128);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line here\n").is_err());
+        assert!(Manifest::parse("param only-file-no-dims\nmodel x\n").is_ok());
+        assert!(Manifest::parse("hlo notanumber file\nmodel x\n").is_err());
+        assert!(Manifest::parse("").is_err()); // no model
+    }
+
+    #[test]
+    fn real_artifacts_parse_when_present() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        for name in ["cnv_w1a1", "cnv_w2a2", "rn50_lite_w1a2", "mvau_unit"] {
+            let p = root.join(format!("{name}.manifest"));
+            if p.exists() {
+                let m = Manifest::load(&p).unwrap();
+                assert_eq!(m.model, name);
+                assert!(!m.hlo.is_empty());
+            }
+        }
+    }
+}

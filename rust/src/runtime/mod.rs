@@ -1,0 +1,228 @@
+//! PJRT inference runtime: loads the AOT artifacts emitted by
+//! `python/compile/aot.py` (HLO *text* + weight `.bin`s + golden I/O) and
+//! executes them on the CPU PJRT client via the `xla` crate.
+//!
+//! Python never runs here — the artifacts are the entire python↔rust
+//! interface (see DESIGN.md: the three-layer architecture). HLO text is the
+//! interchange format: jax ≥ 0.5 serialized protos carry 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod manifest;
+
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+use anyhow::{anyhow, Context};
+pub use manifest::{Manifest, TensorSpec};
+
+/// Read a little-endian f32 `.bin` tensor file.
+pub fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("{path:?}: length {} not a multiple of 4", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// One compiled model variant (a specific batch size).
+pub struct CompiledModel {
+    pub batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The inference engine: a PJRT client plus the loaded model(s) and their
+/// parameter literals (uploaded once; only the input varies per request).
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    models: Vec<CompiledModel>,
+    params: Vec<xla::Literal>,
+    root: PathBuf,
+}
+
+impl Engine {
+    /// Load a model by name from the artifacts directory.
+    pub fn load(artifacts: &Path, model: &str) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts.join(format!("{model}.manifest")))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+
+        let mut models = Vec::new();
+        for (batch, hlo_file) in &manifest.hlo {
+            let path = artifacts.join(hlo_file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e}"))?;
+            models.push(CompiledModel { batch: *batch, exe });
+        }
+        if models.is_empty() {
+            return Err(anyhow!("{model}: no hlo variants in manifest"));
+        }
+
+        let mut params = Vec::new();
+        for spec in &manifest.params {
+            let data = read_f32_bin(&artifacts.join(&spec.file))?;
+            if data.len() as u64 != spec.elements() {
+                return Err(anyhow!(
+                    "{}: file has {} elements, manifest says {}",
+                    spec.file,
+                    data.len(),
+                    spec.elements()
+                ));
+            }
+            params.push(literal_from_f32(&data, &spec.dims)?);
+        }
+
+        Ok(Engine { manifest, client, models, params, root: artifacts.to_path_buf() })
+    }
+
+    /// Supported batch sizes, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.models.iter().map(|m| m.batch).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The smallest variant that fits `n` inputs (or the largest available).
+    fn variant_for(&self, n: usize) -> &CompiledModel {
+        self.models
+            .iter()
+            .filter(|m| m.batch >= n)
+            .min_by_key(|m| m.batch)
+            .unwrap_or_else(|| self.models.iter().max_by_key(|m| m.batch).unwrap())
+    }
+
+    /// Run a batch of inputs (row-major images, each of the manifest's
+    /// input element count). Short batches are padded to the variant size;
+    /// outputs are truncated back to `inputs.len()` rows.
+    pub fn infer(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.is_empty() {
+            return Ok(vec![]);
+        }
+        let per = self.manifest.input_elements_per_sample();
+        for (i, x) in inputs.iter().enumerate() {
+            if x.len() as u64 != per {
+                return Err(anyhow!("input {i}: {} elements, want {per}", x.len()));
+            }
+        }
+        let m = self.variant_for(inputs.len());
+        let eff = inputs.len().min(m.batch);
+
+        // assemble (pad by repeating the last sample)
+        let mut flat = Vec::with_capacity(m.batch * per as usize);
+        for i in 0..m.batch {
+            flat.extend_from_slice(&inputs[i.min(inputs.len() - 1)]);
+        }
+        let mut dims = self.manifest.input_dims.clone();
+        dims[0] = m.batch as u64;
+        let input_lit = literal_from_f32(&flat, &dims)?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.params.len());
+        args.push(&input_lit);
+        args.extend(self.params.iter());
+
+        let result = m
+            .exe
+            .execute(&args)
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        let vals = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+
+        let out_per = self.manifest.output_elements_per_sample() as usize;
+        Ok(vals.chunks_exact(out_per).take(eff).map(|c| c.to_vec()).collect())
+    }
+
+    /// Verify the engine against the golden I/O emitted at AOT time.
+    /// All math is integer-valued f32, so the comparison is exact.
+    pub fn check_golden(&self) -> Result<()> {
+        let (gin, gout) = self
+            .manifest
+            .golden
+            .as_ref()
+            .ok_or_else(|| anyhow!("{}: no golden files", self.manifest.model))?;
+        let x = read_f32_bin(&self.root.join(gin))?;
+        let want = read_f32_bin(&self.root.join(gout))?;
+        let per = self.manifest.input_elements_per_sample() as usize;
+        let inputs: Vec<Vec<f32>> = x.chunks_exact(per).map(|c| c.to_vec()).collect();
+        let got = self.infer(&inputs)?;
+        let flat: Vec<f32> = got.into_iter().flatten().collect();
+        if flat.len() != want.len() {
+            return Err(anyhow!("golden length {} vs {}", flat.len(), want.len()));
+        }
+        for (i, (a, b)) in flat.iter().zip(want.iter()).enumerate() {
+            if (a - b).abs() > 1e-4 {
+                return Err(anyhow!("golden mismatch at {i}: got {a}, want {b}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Platform description (for logs).
+    pub fn platform(&self) -> String {
+        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+    }
+}
+
+fn literal_from_f32(data: &[f32], dims: &[u64]) -> Result<xla::Literal> {
+    let n: u64 = dims.iter().product();
+    if n != data.len() as u64 {
+        return Err(anyhow!("literal shape {dims:?} wants {n} elements, got {}", data.len()));
+    }
+    let lit = xla::Literal::vec1(data);
+    let idims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&idims).map_err(|e| anyhow!("reshape {dims:?}: {e}"))
+}
+
+/// Run the stand-alone MVAU micro artifact (kernel-level golden check
+/// without a full network): returns Ok(()) iff the kernel output matches
+/// python exactly.
+pub fn check_mvau_unit(artifacts: &Path) -> Result<()> {
+    let manifest = Manifest::load(&artifacts.join("mvau_unit.manifest"))?;
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+    let (_, hlo_file) = manifest
+        .hlo
+        .first()
+        .ok_or_else(|| anyhow!("mvau_unit: no hlo"))?;
+    let proto = xla::HloModuleProto::from_text_file(
+        artifacts.join(hlo_file).to_str().unwrap(),
+    )
+    .map_err(|e| anyhow!("parse: {e}"))?;
+    let exe = client
+        .compile(&xla::XlaComputation::from_proto(&proto))
+        .map_err(|e| anyhow!("compile: {e}"))?;
+
+    let mut lits = Vec::new();
+    for spec in &manifest.args {
+        let data = read_f32_bin(&artifacts.join(&spec.file))?;
+        lits.push(literal_from_f32(&data, &spec.dims)?);
+    }
+    let expect_spec = manifest
+        .expect
+        .as_ref()
+        .ok_or_else(|| anyhow!("mvau_unit: no expect"))?;
+    let want = read_f32_bin(&artifacts.join(&expect_spec.file))?;
+
+    let refs: Vec<&xla::Literal> = lits.iter().collect();
+    let out = exe.execute(&refs).map_err(|e| anyhow!("execute: {e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch: {e}"))?
+        .to_tuple1()
+        .map_err(|e| anyhow!("untuple: {e}"))?;
+    let got = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+    if got.len() != want.len() {
+        return Err(anyhow!("mvau_unit: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+        if (a - b).abs() > 1e-5 {
+            return Err(anyhow!("mvau_unit mismatch at {i}: {a} vs {b}"));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,193 @@
+//! Dataflow pipeline simulator: frame-level throughput/latency plus a
+//! discrete-time stream simulation of the resblock branch/join (the paper's
+//! "relatively deep FIFO on the bypass path", §III.B).
+//!
+//! The analytic model (initiation interval = slowest stage) matches FINN-R;
+//! the stream simulation validates it and sizes the bypass FIFOs: with a
+//! too-shallow FIFO the join stalls the whole pipeline and throughput drops
+//! below the analytic bound.
+
+pub mod pipeline;
+
+pub use pipeline::{simulate_network, PipelineResult};
+
+use crate::nn::{Network, Stage};
+
+/// Analytic performance summary (the Table II quantities).
+#[derive(Clone, Debug)]
+pub struct PerfEstimate {
+    pub fps: f64,
+    pub latency_ms: f64,
+    pub tops: f64,
+    pub ii_cycles: u64,
+    pub bottleneck: String,
+}
+
+/// Analytic FPS / latency / TOp/s at a compute clock.
+pub fn estimate(net: &Network, compute_mhz: f64) -> PerfEstimate {
+    let ii = net.initiation_interval();
+    let fps = net.fps(compute_mhz);
+    let bottleneck = net
+        .stages
+        .iter()
+        .max_by_key(|s| s.cycles_per_frame())
+        .map(|s| match s {
+            Stage::Mvau(l) => l.name.clone(),
+            Stage::MaxPool { name, .. } => name.clone(),
+            Stage::ResBlock { name, branch, bypass } => {
+                let mut worst = ("", 0u64);
+                for l in branch.iter().chain(bypass.iter()) {
+                    if l.cycles_per_frame() > worst.1 {
+                        worst = (&l.name, l.cycles_per_frame());
+                    }
+                }
+                format!("{name}/{}", worst.0)
+            }
+        })
+        .unwrap_or_default();
+    PerfEstimate {
+        fps,
+        latency_ms: net.latency_s(compute_mhz) * 1e3,
+        tops: net.ops_per_frame() as f64 * fps / 1e12,
+        ii_cycles: ii,
+        bottleneck,
+    }
+}
+
+/// Bypass FIFO depth (in pixels) required for a resblock to run stall-free:
+/// the branch pipeline holds `latency(branch) - latency(bypass)` pixels in
+/// flight that the join must buffer on the bypass side.
+pub fn bypass_fifo_pixels(branch_cycles: &[u64], bypass_cycles: u64, ii: u64) -> u64 {
+    let branch_total: u64 = branch_cycles.iter().sum();
+    (branch_total.saturating_sub(bypass_cycles)) / ii.max(1) + 1
+}
+
+/// Discrete-time simulation of one branch/join structure.
+///
+/// Tokens (pixel groups) enter at rate 1/`ii` cycles; the branch path is a
+/// chain of stages each with the given per-token service cycles and
+/// single-token buffers between them; the bypass path is a FIFO of
+/// `fifo_depth` tokens. The join fires when both sides present a token.
+/// Returns achieved throughput relative to the ideal 1/`ii`.
+pub fn simulate_resblock_join(
+    branch_stage_cycles: &[u64],
+    fifo_depth: usize,
+    ii: u64,
+    tokens: u64,
+) -> f64 {
+    #[derive(Clone, Copy)]
+    struct InFlight {
+        done_at: u64,
+    }
+
+    let n_stages = branch_stage_cycles.len();
+    let mut t: u64 = 0;
+    let mut produced: u64 = 0; // tokens emitted by source
+    let mut joined: u64 = 0;
+    // branch: at most one token per stage (II-bound stages)
+    let mut branch: Vec<Option<InFlight>> = vec![None; n_stages];
+    let mut branch_out: u64 = 0; // tokens waiting at join from branch
+    let mut bypass_fifo: u64 = 0; // tokens waiting in bypass FIFO
+    let mut next_emit: u64 = 0;
+    let horizon = tokens * ii * (n_stages as u64 + 4) + 10_000;
+
+    while joined < tokens && t < horizon {
+        // stage completions, last stage first (frees upstream slots)
+        for s in (0..n_stages).rev() {
+            if let Some(f) = branch[s] {
+                if f.done_at <= t {
+                    if s + 1 < n_stages {
+                        if branch[s + 1].is_none() {
+                            branch[s + 1] = Some(InFlight {
+                                done_at: t + branch_stage_cycles[s + 1],
+                            });
+                            branch[s] = None;
+                        }
+                    } else {
+                        branch_out += 1;
+                        branch[s] = None;
+                    }
+                }
+            }
+        }
+        // source emission: needs a free first stage AND bypass FIFO space
+        if produced < tokens
+            && t >= next_emit
+            && branch[0].is_none()
+            && (bypass_fifo as usize) < fifo_depth
+        {
+            branch[0] = Some(InFlight { done_at: t + branch_stage_cycles[0] });
+            bypass_fifo += 1;
+            produced += 1;
+            next_emit = t + ii;
+        }
+        // join
+        if branch_out > 0 && bypass_fifo > 0 {
+            branch_out -= 1;
+            bypass_fifo -= 1;
+            joined += 1;
+        }
+        t += 1;
+    }
+    let ideal_cycles = tokens * ii + branch_stage_cycles.iter().sum::<u64>();
+    ideal_cycles as f64 / t.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{cnv, resnet50, CnvVariant};
+
+    #[test]
+    fn rn50_estimate_matches_table_ii_shape() {
+        // Table II: RN50-W1A2 on U250 @195 MHz: 2703 FPS, 1.9 ms, 18.3 TOp/s
+        let net = resnet50(1);
+        let e = estimate(&net, 195.0);
+        assert!((e.fps - 2703.0).abs() / 2703.0 < 0.15, "fps {}", e.fps);
+        assert!(e.latency_ms > 0.5 && e.latency_ms < 4.0, "lat {}", e.latency_ms);
+        assert!(e.tops > 10.0 && e.tops < 30.0, "tops {}", e.tops);
+    }
+
+    #[test]
+    fn cnv_estimate_reasonable() {
+        let e = estimate(&cnv(CnvVariant::W1A1), 100.0);
+        assert!(e.fps > 1_000.0 && e.fps < 10_000.0, "fps {}", e.fps);
+        assert!(!e.bottleneck.is_empty());
+    }
+
+    #[test]
+    fn deep_fifo_reaches_analytic_throughput() {
+        // branch of 3 stages, each II-bound, with ample FIFO: ~full rate
+        let th = simulate_resblock_join(&[100, 100, 100], 16, 100, 200);
+        assert!(th > 0.95, "throughput {th}");
+    }
+
+    #[test]
+    fn shallow_fifo_stalls_pipeline() {
+        let deep = simulate_resblock_join(&[100, 100, 100], 16, 100, 200);
+        let shallow = simulate_resblock_join(&[100, 100, 100], 1, 100, 200);
+        assert!(
+            shallow < deep - 0.1,
+            "shallow {shallow} should stall vs deep {deep}"
+        );
+    }
+
+    #[test]
+    fn fifo_sizing_rule_is_sufficient() {
+        let stages = [250u64, 400, 130];
+        let ii = 400;
+        let depth = bypass_fifo_pixels(&stages, 0, ii) as usize;
+        let th = simulate_resblock_join(&stages, depth, ii, 150);
+        assert!(th > 0.93, "sized-FIFO throughput {th} (depth {depth})");
+    }
+
+    #[test]
+    fn folding_by_two_halves_fps() {
+        let net = resnet50(1);
+        let f2 = net.fold2();
+        let base = estimate(&net, 195.0).fps;
+        let folded = estimate(&f2, 195.0).fps;
+        let ratio = base / folded;
+        assert!((1.7..2.4).contains(&ratio), "F2 ratio {ratio}");
+    }
+}

@@ -1,0 +1,225 @@
+//! Whole-network streaming pipeline simulator.
+//!
+//! Discrete-time, frame-granular with fractional progress: every stage is a
+//! server with service time = its initiation interval (cycles/frame);
+//! stages are connected by bounded FIFOs (frames); resblocks fork into a
+//! branch chain and a bypass FIFO that re-join (§III.B). The simulator
+//! validates the analytic model (steady-state FPS = F_c / max II) and
+//! exposes what the analytic model cannot: warm-up transients, FIFO
+//! occupancy high-water marks (FIFO sizing), and the slowdown from
+//! under-provisioned bypass FIFOs.
+
+use crate::nn::{Network, Stage};
+
+/// One simulated pipeline stage.
+#[derive(Clone, Debug)]
+struct SimStage {
+    name: String,
+    /// Service time in compute cycles per frame.
+    ii: u64,
+    /// Completion time of the frame currently in service (None = idle).
+    busy_until: Option<u64>,
+    /// Frames waiting at the input.
+    queue: u64,
+    queue_cap: u64,
+    /// High-water mark of the input queue.
+    hwm: u64,
+    /// Frames completed.
+    done: u64,
+}
+
+impl SimStage {
+    fn new(name: String, ii: u64, queue_cap: u64) -> SimStage {
+        SimStage { name, ii: ii.max(1), busy_until: None, queue: 0, queue_cap, hwm: 0, done: 0 }
+    }
+
+    fn can_accept(&self) -> bool {
+        self.queue < self.queue_cap
+    }
+
+    fn push(&mut self, _t: u64) {
+        self.queue += 1;
+        self.hwm = self.hwm.max(self.queue);
+    }
+}
+
+/// Simulation result.
+#[derive(Clone, Debug)]
+pub struct PipelineResult {
+    /// Steady-state throughput in frames per kilocycle.
+    pub frames_per_kcycle: f64,
+    /// Cycles from first injection to first output (fill latency).
+    pub first_out_cycles: u64,
+    /// Total cycles to drain all frames.
+    pub total_cycles: u64,
+    /// Per-stage input-queue high-water marks.
+    pub queue_hwm: Vec<(String, u64)>,
+    /// Throughput relative to the analytic bound (1.0 = matches).
+    pub vs_analytic: f64,
+}
+
+/// Flatten the network into a serial chain (resblock branches are serial in
+/// time — the bypass FIFO is modelled by a larger queue at the join).
+fn flatten(net: &Network, bypass_cap: u64) -> Vec<SimStage> {
+    let mut out = Vec::new();
+    for s in &net.stages {
+        match s {
+            Stage::Mvau(l) => {
+                out.push(SimStage::new(l.name.clone(), l.cycles_per_frame(), 2))
+            }
+            Stage::MaxPool { name, .. } => out.push(SimStage::new(name.clone(), 1, 2)),
+            Stage::ResBlock { name, branch, .. } => {
+                for l in branch {
+                    out.push(SimStage::new(l.name.clone(), l.cycles_per_frame(), 2));
+                }
+                // the join: service = instantaneous, but its queue models
+                // the bypass FIFO capacity
+                out.push(SimStage::new(format!("{name}_join"), 1, bypass_cap));
+            }
+        }
+    }
+    out
+}
+
+/// Run `frames` frames through the network; `bypass_cap` is the per-join
+/// bypass FIFO capacity in frames (the paper's deep-FIFO knob).
+pub fn simulate_network(net: &Network, frames: u64, bypass_cap: u64) -> PipelineResult {
+    let mut stages = flatten(net, bypass_cap);
+    let n = stages.len();
+    assert!(n > 0 && frames > 0);
+    let max_ii = stages.iter().map(|s| s.ii).max().unwrap();
+
+    // event-driven over completion times, advancing in II-sized hops
+    let mut t: u64 = 0;
+    let mut injected = 0u64;
+    let mut first_out = None;
+    let mut last_out = 0u64;
+    let horizon = frames * max_ii * 4 + stages.iter().map(|s| s.ii).sum::<u64>() * 2;
+
+    while stages[n - 1].done < frames && t < horizon {
+        // 1. retire completions back-to-front, push downstream if space
+        for i in (0..n).rev() {
+            if let Some(done_at) = stages[i].busy_until {
+                if done_at <= t {
+                    let can = i + 1 >= n || stages[i + 1].can_accept();
+                    if can {
+                        stages[i].busy_until = None;
+                        stages[i].done += 1;
+                        if i + 1 < n {
+                            stages[i + 1].push(t);
+                        } else {
+                            if first_out.is_none() {
+                                first_out = Some(t);
+                            }
+                            last_out = t;
+                        }
+                    }
+                }
+            }
+        }
+        // 2. start service where idle and queued
+        for i in 0..n {
+            if stages[i].busy_until.is_none() && stages[i].queue > 0 {
+                stages[i].queue -= 1;
+                let ii = stages[i].ii;
+                stages[i].busy_until = Some(t + ii);
+            }
+        }
+        // 3. inject at the source
+        if injected < frames && stages[0].can_accept() {
+            stages[0].push(t);
+            injected += 1;
+        }
+        // 4. advance to the next interesting time
+        let next = stages
+            .iter()
+            .filter_map(|s| s.busy_until)
+            .filter(|&d| d > t)
+            .min()
+            .unwrap_or(t + 1);
+        t = next.max(t + 1);
+    }
+
+    let total = t;
+    // steady-state throughput: measured between the first and last output
+    // so the pipeline-fill transient does not dilute it
+    let first = first_out.unwrap_or(0);
+    let steady_cycles = last_out.saturating_sub(first).max(1);
+    let fpk = if frames > 1 {
+        (frames - 1) as f64 / (steady_cycles as f64 / 1000.0)
+    } else {
+        frames as f64 / (total as f64 / 1000.0)
+    };
+    let analytic_fpk = 1000.0 / max_ii as f64;
+    PipelineResult {
+        frames_per_kcycle: fpk,
+        first_out_cycles: first_out.unwrap_or(total),
+        total_cycles: total,
+        queue_hwm: stages.iter().map(|s| (s.name.clone(), s.hwm)).collect(),
+        vs_analytic: fpk / analytic_fpk,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{cnv, resnet50, CnvVariant};
+
+    #[test]
+    fn cnv_pipeline_matches_analytic_ii() {
+        let net = cnv(CnvVariant::W1A1);
+        let r = simulate_network(&net, 40, 8);
+        assert!(
+            (0.9..=1.02).contains(&r.vs_analytic),
+            "throughput {} of analytic",
+            r.vs_analytic
+        );
+    }
+
+    #[test]
+    fn rn50_pipeline_matches_analytic_ii() {
+        let net = resnet50(1);
+        let r = simulate_network(&net, 25, 8);
+        assert!(
+            (0.85..=1.02).contains(&r.vs_analytic),
+            "throughput {} of analytic",
+            r.vs_analytic
+        );
+    }
+
+    #[test]
+    fn fill_latency_below_sum_of_iis() {
+        let net = cnv(CnvVariant::W1A1);
+        let r = simulate_network(&net, 10, 8);
+        let sum_ii: u64 = net.stages.iter().map(|s| s.cycles_per_frame()).sum();
+        assert!(r.first_out_cycles <= sum_ii * 2);
+        assert!(r.first_out_cycles > net.initiation_interval());
+    }
+
+    #[test]
+    fn throughput_scales_with_frame_count() {
+        // steady state: doubling frames should not halve frames/kcycle
+        let net = cnv(CnvVariant::W1A1);
+        let a = simulate_network(&net, 20, 8).frames_per_kcycle;
+        let b = simulate_network(&net, 40, 8).frames_per_kcycle;
+        assert!((b / a - 1.0).abs() < 0.2, "a={a} b={b}");
+    }
+
+    #[test]
+    fn queue_hwm_bounded_by_capacity() {
+        let net = resnet50(1);
+        let r = simulate_network(&net, 15, 6);
+        for (name, hwm) in &r.queue_hwm {
+            let cap = if name.ends_with("_join") { 6 } else { 2 };
+            assert!(*hwm <= cap, "{name}: hwm {hwm} > cap {cap}");
+        }
+    }
+
+    #[test]
+    fn single_stage_network_degenerate() {
+        let mut net = cnv(CnvVariant::W1A1);
+        net.stages.truncate(1);
+        let r = simulate_network(&net, 5, 4);
+        assert!(r.vs_analytic > 0.9);
+    }
+}

@@ -1,0 +1,204 @@
+//! Timing-closure model and the paper's δFPS calculus (Table V).
+//!
+//! DESIGN.md substitution: Vivado place & route is replaced by an empirical
+//! frequency-degradation model — achieved frequency is the nominal target
+//! scaled by a monotone penalty in LUT utilization density, with multi-die
+//! (SLR-crossing) devices degrading much faster. The curves interpolate the
+//! five (utilization → achieved-frequency) points the paper publishes:
+//!
+//! | design                | device | LUT% | Fc/target | Fm/target |
+//! |-----------------------|--------|------|-----------|-----------|
+//! | CNV-W1A1-P4           | 7020   | 58   | 1.00      | 1.00      |
+//! | CNV-W1A1-P4           | 7012S  | 90   | 1.00      | 1.00      |
+//! | RN50-W1A2-U250-P4     | U250   | 63   | 0.915     | 0.9075    |
+//! | RN50-W1A2-U280-P4     | U280   | 99   | 0.69      | 0.9325    |
+//! | RN50-W1A2-U280-F2     | U280   | 61   | 0.955     | —         |
+
+use crate::device::Device;
+
+/// Which clock domain a frequency estimate is for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    /// The compute (LUT-dominated) domain: sensitive to density.
+    Compute,
+    /// The overclocked memory domain: BRAM-primitive-dominated, mostly
+    /// insensitive to LUT density but pays a routing tax on multi-die parts.
+    Memory,
+}
+
+/// Piecewise-linear interpolation over (x, y) knots (x ascending).
+fn interp(knots: &[(f64, f64)], x: f64) -> f64 {
+    if x <= knots[0].0 {
+        return knots[0].1;
+    }
+    for w in knots.windows(2) {
+        let ((x0, y0), (x1, y1)) = (w[0], w[1]);
+        if x <= x1 {
+            return y0 + (y1 - y0) * (x - x0) / (x1 - x0);
+        }
+    }
+    knots.last().unwrap().1
+}
+
+/// Fraction of the nominal target the design achieves after P&R.
+pub fn closure_factor(domain: Domain, dev: &Device, lut_util: f64) -> f64 {
+    let u = lut_util.clamp(0.0, 1.2);
+    if dev.is_monolithic() {
+        // paper: "in practice it is easier than initially expected,
+        // especially for monolithic FPGA devices" — CNV closes at 90% util
+        match domain {
+            Domain::Compute => interp(&[(0.0, 1.0), (0.92, 1.0), (1.05, 0.85)], u),
+            Domain::Memory => interp(&[(0.0, 1.0), (0.95, 1.0), (1.05, 0.9)], u),
+        }
+    } else {
+        match domain {
+            // multi-die compute: calibrated on U250/U280 P4 + U280 F2 rows
+            Domain::Compute => interp(
+                &[(0.0, 1.0), (0.50, 1.0), (0.61, 0.955), (0.63, 0.915), (0.99, 0.69), (1.1, 0.60)],
+                u,
+            ),
+            // multi-die memory: flat ~8% routing tax once the die is busy
+            Domain::Memory => interp(&[(0.0, 1.0), (0.40, 1.0), (0.63, 0.9075), (0.99, 0.9325)], u),
+        }
+    }
+}
+
+/// Achieved frequency (MHz) for a target in a domain.
+pub fn achieved_mhz(domain: Domain, dev: &Device, lut_util: f64, target_mhz: f64) -> f64 {
+    let f = target_mhz * closure_factor(domain, dev, lut_util);
+    // the memory domain can never exceed the BRAM primitive spec
+    if domain == Domain::Memory {
+        f.min(dev.bram_fmax_mhz)
+    } else {
+        f
+    }
+}
+
+/// Implementation outcome of a (packed) accelerator on a device.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    pub fc_mhz: f64,
+    pub fm_mhz: f64,
+    /// The effective compute clock after memory-side throttling:
+    /// `min(F_c, F_m / R_F^req)` (Table V's δFPS definition).
+    pub effective_fc_mhz: f64,
+    /// Relative throughput reduction vs the baseline compute clock.
+    pub delta_fps_pct: f64,
+}
+
+/// Evaluate a packed design: `rf_required = H_B / 2` (Eq. 2),
+/// `fc_baseline_mhz` is the original non-packed accelerator's compute clock.
+pub fn evaluate(
+    dev: &Device,
+    lut_util: f64,
+    fc_target_mhz: f64,
+    rf_required: f64,
+    fc_baseline_mhz: f64,
+) -> TimingReport {
+    let fc = achieved_mhz(Domain::Compute, dev, lut_util, fc_target_mhz);
+    // rf <= 1: no overclocked memory domain exists (unpacked / folded
+    // designs read weights in the compute clock; Table V prints "Fm = -")
+    let (fm, effective) = if rf_required <= 1.0 {
+        (fc, fc)
+    } else {
+        let fm = achieved_mhz(Domain::Memory, dev, lut_util, fc_target_mhz * rf_required);
+        (fm, fc.min(fm / rf_required))
+    };
+    TimingReport {
+        fc_mhz: fc,
+        fm_mhz: fm,
+        effective_fc_mhz: effective,
+        delta_fps_pct: 100.0 * (1.0 - effective / fc_baseline_mhz),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{alveo_u250, alveo_u280, zynq_7012s, zynq_7020};
+
+    #[test]
+    fn monolithic_closes_at_high_density() {
+        // CNV on 7020 (58%) and 7012S (90%): both meet 100/200 MHz
+        for (dev, util) in [(zynq_7020(), 0.58), (zynq_7012s(), 0.90)] {
+            let r = evaluate(&dev, util, 100.0, 2.0, 100.0);
+            assert!((r.fc_mhz - 100.0).abs() < 1e-9, "{}", dev.name);
+            assert!((r.fm_mhz - 200.0).abs() < 1e-9);
+            assert!(r.delta_fps_pct.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn u250_p4_row_of_table_v() {
+        // paper: both clocks miss by ~12% => Fc 183, Fm 363, delta 12%
+        let r = evaluate(&alveo_u250(), 0.63, 200.0, 2.0, 200.0);
+        assert!((r.fc_mhz - 183.0).abs() < 3.0, "Fc {}", r.fc_mhz);
+        assert!((r.fm_mhz - 363.0).abs() < 4.0, "Fm {}", r.fm_mhz);
+        // from the published clocks min(183, 363/2)=181.5 => 9.25%; the
+        // paper rounds "both clocks ~12% off" into dFPS = 12
+        assert!((8.0..13.0).contains(&r.delta_fps_pct), "dFPS {}", r.delta_fps_pct);
+    }
+
+    #[test]
+    fn u280_p4_row_of_table_v() {
+        // paper: Fc 138 (-32%), Fm 373; memory no longer binding
+        let r = evaluate(&alveo_u280(), 0.99, 200.0, 2.0, 200.0);
+        assert!((r.fc_mhz - 138.0).abs() < 3.0, "Fc {}", r.fc_mhz);
+        assert!((r.fm_mhz - 373.0).abs() < 4.0, "Fm {}", r.fm_mhz);
+        assert!((r.delta_fps_pct - 32.0).abs() < 2.5, "dFPS {}", r.delta_fps_pct);
+        // compute-bound: effective clock set by Fc, not Fm/RF
+        assert!(r.effective_fc_mhz == r.fc_mhz);
+    }
+
+    #[test]
+    fn u280_f2_beats_nothing_but_closes_timing() {
+        // folded design at 61% closes near target (191 MHz) but halves
+        // per-cycle work: delta = 1 - (191/2)/200 = 52%
+        let r = evaluate(&alveo_u280(), 0.61, 200.0, 1.0, 200.0);
+        assert!((r.fc_mhz - 191.0).abs() < 3.0, "Fc {}", r.fc_mhz);
+        let folded_delta = 100.0 * (1.0 - r.effective_fc_mhz / 2.0 / 200.0);
+        assert!((folded_delta - 51.0).abs() < 3.0, "delta {folded_delta}");
+    }
+
+    #[test]
+    fn fcmp_beats_folding_on_u280() {
+        // the paper's headline: P4 (-32%) is ~38% faster than F2 (-51%)
+        let p4 = evaluate(&alveo_u280(), 0.99, 200.0, 2.0, 200.0);
+        let f2 = evaluate(&alveo_u280(), 0.61, 200.0, 1.0, 200.0);
+        let p4_fps = p4.effective_fc_mhz; // per-cycle work identical to baseline
+        let f2_fps = f2.effective_fc_mhz / 2.0; // half parallelism
+        let speedup = p4_fps / f2_fps;
+        assert!(
+            (1.25..1.55).contains(&speedup),
+            "P4 vs F2 speedup {speedup} (paper: 1.38)"
+        );
+    }
+
+    #[test]
+    fn memory_domain_capped_by_bram_spec() {
+        let dev = zynq_7020(); // bram_fmax 388
+        let f = achieved_mhz(Domain::Memory, &dev, 0.3, 500.0);
+        assert!(f <= 388.0);
+    }
+
+    #[test]
+    fn closure_factor_monotone_in_density() {
+        let dev = alveo_u250();
+        let mut prev = f64::INFINITY;
+        for u in [0.0, 0.2, 0.4, 0.6, 0.8, 1.0] {
+            let f = closure_factor(Domain::Compute, &dev, u);
+            assert!(f <= prev + 1e-12, "not monotone at {u}");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn rf_15_is_easier_than_rf_2() {
+        // P3 (R_F=1.5) demands a 25% lower memory clock than P4 (R_F=2)
+        let dev = alveo_u250();
+        let p3 = evaluate(&dev, 0.63, 200.0, 1.5, 200.0);
+        let p4 = evaluate(&dev, 0.63, 200.0, 2.0, 200.0);
+        assert!(p3.fm_mhz < p4.fm_mhz);
+        assert!(p3.effective_fc_mhz >= p4.effective_fc_mhz - 1e-9);
+    }
+}

@@ -1,0 +1,121 @@
+//! Minimal subcommand + flag argument parser (clap is unavailable offline).
+//!
+//! Grammar: `fcmp <subcommand> [--key value]... [--flag]... [positional]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value or --key value or boolean --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("pack --network rn50 --device u250 --hb 4");
+        assert_eq!(a.subcommand.as_deref(), Some("pack"));
+        assert_eq!(a.get("network"), Some("rn50"));
+        assert_eq!(a.get_usize("hb", 0), 4);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        // NOTE grammar caveat: a bare `--flag` followed by a non-dash token
+        // is parsed as an option (`--key value`); put positionals before
+        // flags or use `--key=value` to disambiguate.
+        let a = parse("serve --batch=8 file.txt --verbose");
+        assert_eq!(a.get_usize("batch", 0), 8);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["file.txt"]);
+    }
+
+    #[test]
+    fn flag_before_option_value_not_swallowed() {
+        let a = parse("run --dry-run --seed 9");
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get_usize("seed", 0), 9);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("bench");
+        assert_eq!(a.get_or("device", "u250"), "u250");
+        assert_eq!(a.get_f64("ratio", 1.5), 1.5);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn no_subcommand_when_leading_flag() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has_flag("help"));
+    }
+}

@@ -1,0 +1,163 @@
+//! Benchmark harness (criterion is unavailable offline): warmup, repeated
+//! timed samples, summary statistics, and aligned table output shared by all
+//! `rust/benches/*` targets.
+
+use std::time::Instant;
+
+use super::stats::{summarize, Summary};
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// Iterations batched inside one timed sample (for very fast bodies).
+    pub iters_per_sample: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, samples: 10, iters_per_sample: 1 }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub per_iter_secs: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.per_iter_secs.mean * 1e3
+    }
+}
+
+/// Time `f`, returning per-iteration seconds statistics.
+pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..cfg.iters_per_sample {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / cfg.iters_per_sample as f64);
+    }
+    BenchResult { name: name.to_string(), per_iter_secs: summarize(&samples) }
+}
+
+/// Print a standard bench summary line.
+pub fn report(r: &BenchResult) {
+    let s = &r.per_iter_secs;
+    println!(
+        "bench {:<40} mean {:>10.3} ms  median {:>10.3} ms  sd {:>8.3} ms  (n={})",
+        r.name,
+        s.mean * 1e3,
+        s.median * 1e3,
+        s.stddev * 1e3,
+        s.n
+    );
+}
+
+/// Fixed-width text table (markdown-flavoured) used by every bench binary to
+/// print the paper's tables next to our measured values.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(headers: I) -> Table {
+        Table { headers: headers.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        for r in &self.rows {
+            out.push('\n');
+            out.push_str(&line(r));
+        }
+        out
+    }
+
+    /// Render as CSV (for EXPERIMENTS.md attachments / plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        for r in &self.rows {
+            out.push('\n');
+            out.push_str(&r.join(","));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let r = bench(
+            "spin",
+            BenchConfig { warmup_iters: 1, samples: 3, iters_per_sample: 2 },
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+        );
+        assert!(r.per_iter_secs.mean > 0.0);
+        assert_eq!(r.per_iter_secs.n, 3);
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let mut t = Table::new(["name", "value"]);
+        t.row(["a", "1"]);
+        t.row(["longer-name", "2345"]);
+        let s = t.render();
+        assert!(s.contains("| name        | value |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new(["x", "y"]);
+        t.row(["1", "2"]);
+        assert_eq!(t.to_csv(), "x,y\n1,2");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+}

@@ -1,0 +1,30 @@
+//! Small self-contained substrates (offline image: no rand / clap /
+//! criterion / proptest crates — see DESIGN.md "Offline-dependency
+//! substitutions"). Each is a real implementation with its own tests, not a
+//! stub.
+
+pub mod args;
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Integer ceiling division (used throughout the BRAM shape calculus).
+#[inline]
+pub const fn ceil_div(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(8, 4), 2);
+    }
+}

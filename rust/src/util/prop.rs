@@ -1,0 +1,138 @@
+//! Property-test mini-framework (proptest is unavailable offline).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it retries with halved inputs via
+//! the case's [`Shrink`] implementation (when provided) and reports the
+//! minimal failing case together with the seed needed to replay it.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose smaller versions of themselves for shrinking.
+pub trait Shrink: Sized {
+    /// Candidate smaller cases, roughly ordered most-aggressive first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // drop halves
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        // shrink one element
+        for (i, x) in self.iter().enumerate().take(4) {
+            for sx in x.shrink() {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs. Panics with the (shrunk)
+/// counterexample and replay seed on failure.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Debug + Clone + Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink
+            let mut best = (input.clone(), msg.clone());
+            let mut frontier = input.shrink();
+            let mut budget = 300;
+            while !frontier.is_empty() {
+                let cand = frontier.remove(0); // most-aggressive first
+                if budget == 0 {
+                    break;
+                }
+                budget -= 1;
+                if let Err(m) = prop(&cand) {
+                    frontier = cand.shrink();
+                    best = (cand, m);
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case {case_idx}/{cases}):\n  \
+                 counterexample: {:?}\n  reason: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 100"))
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            check(2, 100, |r| r.below(1000) + 50, |&x| {
+                if x < 50 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| format!("{err:?}"));
+        // shrinker must reach the boundary case 50
+        assert!(msg.contains("counterexample: 50"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_len() {
+        let v = vec![1usize, 2, 3, 4];
+        assert!(v.shrink().iter().any(|s| s.len() < v.len()));
+    }
+}

@@ -1,0 +1,205 @@
+//! Cross-module integration tests: the full FCMP flow (network -> buffers
+//! -> packing -> streamer feasibility -> timing -> throughput), the DSE
+//! path, and the report layer that regenerates the paper's tables.
+
+use fcmp::device;
+use fcmp::folding;
+use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
+use fcmp::memory;
+use fcmp::nn::{cnv, resnet50, CnvVariant};
+use fcmp::packing::{ga, run_packer, Constraints};
+use fcmp::report;
+use fcmp::timing;
+
+fn quick_ga(seed: u64) -> ga::Ga {
+    ga::Ga::new(ga::GaParams { generations: 40, seed, ..ga::GaParams::cnv() })
+}
+
+#[test]
+fn full_fcmp_flow_cnv_to_7012s() {
+    // the paper's embedded-class port, end to end through the modules
+    let net = cnv(CnvVariant::W1A1);
+    let big = device::zynq_7020();
+    let small = device::zynq_7012s();
+
+    // 1. unpacked does not fit the small device
+    let r = folding::network_resources(&net, &big);
+    assert!(r.total_brams() > small.bram18);
+
+    // 2. pack at H_B = 4
+    let out = report::pack_network(&net, &big, &quick_ga(1), 4);
+    assert!(out.report.brams < out.baseline_brams);
+    assert!(out.report.efficiency > 0.8);
+
+    // 3. the packed memory subsystem fits the small device
+    assert!(out.report.brams + memory::activation_brams(&net) / 2 <= small.bram18);
+
+    // 4. H_B=4 wants R_F=2; the streamer sustains it cycle-exactly
+    let sim = StreamerSim::new(StreamerConfig::fig7a(4, 64, Ratio::two())).run(3_000);
+    assert!(sim.min_rate() > 0.99);
+
+    // 5. timing closes at 100/200 MHz on the monolithic part: dFPS = 0
+    let t = timing::evaluate(&small, 0.9, 100.0, 2.0, 100.0);
+    assert!(t.delta_fps_pct.abs() < 1e-9);
+}
+
+#[test]
+fn full_fcmp_flow_rn50_u280_beats_folding() {
+    let net = resnet50(1);
+    let u280 = device::alveo_u280();
+    let res = folding::network_resources(&net, &u280);
+
+    let mut ga = report::default_ga(&net);
+    ga.params.generations = 30;
+    let out = report::pack_network(&net, &u280, &ga, 4);
+    let lut_p4 = (res.luts + out.logic_kluts * 1e3 + u280.shell_luts as f64) / u280.luts as f64;
+    let p4 = timing::evaluate(&u280, lut_p4, 200.0, 2.0, 200.0);
+
+    let f2net = net.fold2();
+    let rf2 = folding::network_resources(&f2net, &u280);
+    let lut_f2 = (rf2.luts + u280.shell_luts as f64) / u280.luts as f64;
+    let f2 = timing::evaluate(&u280, lut_f2, 200.0, 1.0, 200.0);
+
+    let speedup = p4.effective_fc_mhz / (f2.effective_fc_mhz / 2.0);
+    assert!((1.2..1.7).contains(&speedup), "speedup {speedup} (paper 1.38)");
+}
+
+#[test]
+fn dse_then_pack_composes() {
+    // start from a deliberately under-folded CNV, solve folding for the
+    // 7020, then pack the solved design — packing must still validate
+    let mut slow = cnv(CnvVariant::W1A1);
+    for s in &mut slow.stages {
+        if let fcmp::nn::Stage::Mvau(l) = s {
+            l.pe = 1;
+            l.simd = 1;
+        }
+    }
+    let dev = device::zynq_7020();
+    let solved = folding::solve(&slow, &dev, 0.7);
+    let bufs = memory::weight_buffers(&solved, 1);
+    let items = memory::all_columns(&bufs);
+    let c = Constraints::new(4, false);
+    let (p, r) = run_packer(&quick_ga(3), &items, &c);
+    p.validate(&items, &c).unwrap();
+    assert!(r.brams <= memory::direct_brams(&bufs));
+}
+
+#[test]
+fn packed_weights_bits_conserved() {
+    // packing moves buffers around but the payload bits are invariant
+    let net = cnv(CnvVariant::W2A2);
+    let bufs = memory::weight_buffers(&net, 1);
+    let items = memory::all_columns(&bufs);
+    let c = Constraints::new(3, false);
+    let (p, _) = run_packer(&quick_ga(4), &items, &c);
+    let packed_bits: u64 = p
+        .bins
+        .iter()
+        .flat_map(|b| b.items.iter())
+        .map(|&i| items[i].bits())
+        .sum();
+    assert_eq!(packed_bits, memory::total_bits(&bufs));
+}
+
+#[test]
+fn report_tables_well_formed() {
+    for t in [report::table1(), report::fig2(), report::table2(), report::fig4()] {
+        let rendered = t.render();
+        assert!(rendered.lines().count() >= 3, "{rendered}");
+        let csv = t.to_csv();
+        let cols = csv.lines().next().unwrap().split(',').count();
+        for line in csv.lines() {
+            assert_eq!(line.split(',').count(), cols);
+        }
+    }
+}
+
+#[test]
+fn table4_reproduces_packing_gains() {
+    let t = report::table4(25);
+    let csv = t.to_csv();
+    // CNV-W1A1 baseline row and P4 row: efficiency must increase
+    let eff = |name: &str| -> f64 {
+        csv.lines()
+            .find(|l| l.starts_with(name) && !l.starts_with(&format!("{name}-")))
+            .unwrap()
+            .split(',')
+            .nth(3)
+            .unwrap()
+            .parse()
+            .unwrap()
+    };
+    assert!(eff("CNV-W1A1-P4") > eff("CNV-W1A1"));
+    assert!(eff("RN50-W1A2-U250-P4") > eff("RN50-W1A2-U250"));
+    // paper: P4 denser than P3
+    assert!(eff("CNV-W1A1-P4") >= eff("CNV-W1A1-P3"));
+}
+
+#[test]
+fn table5_dfps_ordering_matches_paper() {
+    let t = report::table5(25);
+    let csv = t.to_csv();
+    let dfps = |name: &str| -> f64 {
+        csv.lines()
+            .find(|l| l.starts_with(name))
+            .unwrap()
+            .split(',')
+            .nth(5)
+            .unwrap()
+            .parse()
+            .unwrap()
+    };
+    // the paper's ordering: CNV 0 <= U250-P4 (~12) <= U280-P4 (~32) < F2 (~51)
+    assert!(dfps("CNV-W1A1-7020-P4") <= 1.0);
+    assert!(dfps("CNV-W1A1-7012S-P4") <= 1.0);
+    let u250 = dfps("RN50-W1A2-U250-P4");
+    let u280 = dfps("RN50-W1A2-U280-P4");
+    let f2 = dfps("RN50-W1A2-U280-F2");
+    assert!(u250 < u280, "{u250} < {u280}");
+    assert!(u280 < f2, "{u280} < {f2}");
+    assert!((5.0..20.0).contains(&u250));
+    assert!((25.0..40.0).contains(&u280));
+    assert!((45.0..60.0).contains(&f2));
+}
+
+#[test]
+fn bypass_fifo_integration_with_rn50_blocks() {
+    // size the bypass FIFO from the analytic rule for a real resblock and
+    // verify the join sim reaches full rate
+    let net = resnet50(1);
+    let block = net
+        .stages
+        .iter()
+        .find_map(|s| match s {
+            fcmp::nn::Stage::ResBlock { branch, .. } => Some(branch.clone()),
+            _ => None,
+        })
+        .unwrap();
+    let cycles: Vec<u64> = block.iter().map(|l| l.cycles_per_frame() / 1000).collect();
+    let ii = *cycles.iter().max().unwrap();
+    let depth = fcmp::sim::bypass_fifo_pixels(&cycles, 0, ii) as usize;
+    let th = fcmp::sim::simulate_resblock_join(&cycles, depth + 1, ii, 60);
+    assert!(th > 0.9, "resblock join throughput {th}");
+}
+
+#[test]
+fn config_drives_packing() {
+    // experiment configs parse and select engine parameters
+    let cfg = fcmp::config::Config::parse(
+        "[packing]\nbin_height = 3\npopulation = 50\np_mut = 0.3\ngenerations = 20\n",
+    )
+    .unwrap();
+    let params = ga::GaParams {
+        population: cfg.int_or("packing.population", 75) as usize,
+        p_mut: cfg.float_or("packing.p_mut", 0.4),
+        generations: cfg.int_or("packing.generations", 120) as usize,
+        ..ga::GaParams::cnv()
+    };
+    let net = cnv(CnvVariant::W1A1);
+    let bufs = memory::weight_buffers(&net, 1);
+    let items = memory::all_columns(&bufs);
+    let c = Constraints::new(cfg.int_or("packing.bin_height", 4) as usize, false);
+    let (p, _) = run_packer(&ga::Ga::new(params), &items, &c);
+    assert!(p.max_height() <= 3);
+}

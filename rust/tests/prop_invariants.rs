@@ -1,0 +1,257 @@
+//! Property-based invariant tests (via util::prop, our offline proptest
+//! substitute) across the packing engines, the GALS streamer, the BRAM
+//! mapper and the folding calculus.
+
+use fcmp::device::bram::{brams_for, BRAM18_BITS};
+use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
+use fcmp::memory::PackItem;
+use fcmp::packing::{anneal::Anneal, ffd::Ffd, ga, run_packer, Constraints, Packer, Packing};
+use fcmp::util::prop::{check, Shrink};
+use fcmp::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+struct ItemSet(Vec<(u64, u64)>); // (width, depth)
+
+impl Shrink for ItemSet {
+    fn shrink(&self) -> Vec<ItemSet> {
+        let v = &self.0;
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(ItemSet(v[..v.len() / 2].to_vec()));
+            out.push(ItemSet(v[v.len() / 2..].to_vec()));
+        }
+        out
+    }
+}
+
+fn to_items(set: &ItemSet) -> Vec<PackItem> {
+    set.0
+        .iter()
+        .enumerate()
+        .map(|(i, &(w, d))| PackItem {
+            id: i,
+            layer: format!("l{i}"),
+            width_bits: w,
+            depth: d,
+            slr: i % 2,
+        })
+        .collect()
+}
+
+fn gen_items(rng: &mut Rng) -> ItemSet {
+    let n = 1 + rng.below(24) as usize;
+    ItemSet(
+        (0..n)
+            .map(|_| {
+                let w = [4u64, 9, 18, 32, 36][rng.range(0, 5)];
+                let d = 8 + rng.below(1200);
+                (w, d)
+            })
+            .collect(),
+    )
+}
+
+/// Every engine on every input: valid packing, never worse than singletons,
+/// capacity lower bound respected.
+#[test]
+fn prop_engines_sound_and_bounded() {
+    check(42, 25, gen_items, |set| {
+        let items = to_items(set);
+        let engines: Vec<(&str, Box<dyn Packer>)> = vec![
+            ("ffd", Box::new(Ffd::new())),
+            ("anneal", Box::new(Anneal { iterations: 3000, ..Anneal::default() })),
+            (
+                "ga",
+                Box::new(ga::Ga::new(ga::GaParams {
+                    generations: 15,
+                    population: 20,
+                    ..ga::GaParams::cnv()
+                })),
+            ),
+        ];
+        for hb in [2usize, 3, 4] {
+            for same_slr in [false, true] {
+                let c = Constraints::new(hb, same_slr);
+                let single = Packing::singletons(items.len()).total_brams(&items);
+                let lb = fcmp::util::ceil_div(
+                    items.iter().map(|i| i.bits()).sum::<u64>(),
+                    BRAM18_BITS,
+                );
+                for (name, e) in &engines {
+                    let (p, r) = run_packer(e.as_ref(), &items, &c);
+                    if let Err(err) = p.validate(&items, &c) {
+                        return Err(format!("{name} hb={hb} slr={same_slr}: {err}"));
+                    }
+                    if r.brams > single {
+                        return Err(format!(
+                            "{name} hb={hb}: {} > singletons {single}",
+                            r.brams
+                        ));
+                    }
+                    if r.brams < lb {
+                        return Err(format!(
+                            "{name} hb={hb}: {} below capacity bound {lb}",
+                            r.brams
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Larger H_B never hurts the GA solution (more freedom).
+#[test]
+fn prop_bin_height_monotone() {
+    check(7, 15, gen_items, |set| {
+        let items = to_items(set);
+        let pack = |hb: usize| {
+            let e = ga::Ga::new(ga::GaParams {
+                generations: 20,
+                population: 24,
+                ..ga::GaParams::cnv()
+            });
+            run_packer(&e, &items, &Constraints::new(hb, false)).1.brams
+        };
+        let (h2, h4) = (pack(2), pack(4));
+        if h4 > h2 {
+            return Err(format!("H_B=4 ({h4}) worse than H_B=2 ({h2})"));
+        }
+        Ok(())
+    });
+}
+
+/// brams_for respects the information-capacity lower bound and is monotone
+/// in both width and depth.
+///
+/// NOTE a tempting stronger property — "splitting a buffer in depth never
+/// reduces the total BRAM count" — is FALSE on the real aspect-mode
+/// lattice: e.g. 19x2058 costs 5 BRAMs (36x512 mode), but 19x142 + 19x1916
+/// costs 1 + 3 (the tail fits the 9x2048 mode three columns wide) = 4.
+/// The depth-stacking packer exploits exactly this kind of regrouping.
+#[test]
+fn prop_bram_mapper_bounds_and_monotonicity() {
+    check(9, 300, |r| {
+        let w = 1 + r.below(40);
+        let d = 2 + r.below(4000);
+        let cut = 1 + r.below(d - 1);
+        vec![w, d, cut]
+    }, |v| {
+        if v.len() < 3 {
+            return Ok(()); // shrunk vectors degenerate harmlessly
+        }
+        let (w, d, dw) = (v[0], v[1], v[2]);
+        let n = brams_for(w, d);
+        // capacity bound: a BRAM18 stores at most 18 Kib
+        let lb = fcmp::util::ceil_div(w * d, BRAM18_BITS);
+        if n < lb {
+            return Err(format!("{w}x{d}: {n} below capacity bound {lb}"));
+        }
+        // monotone in both dimensions
+        if brams_for(w + 1, d) < n || brams_for(w, d + dw.max(1)) < n {
+            return Err(format!("{w}x{d}: not monotone"));
+        }
+        Ok(())
+    });
+}
+
+/// GALS: min rate equals min(1, 2*R_F / N_b) for even N_b (Fig. 7a law),
+/// for arbitrary depths and FIFO sizes.
+#[test]
+fn prop_streamer_rate_law() {
+    check(13, 20, |r| {
+        let nb = 2 * (1 + r.below(4)) as usize; // 2,4,6,8
+        let rf = 1 + r.below(3); // 1..3
+        let depth = 8 + r.below(500);
+        let fifo = 2 + r.below(14) as usize;
+        vec![nb as u64, rf, depth, fifo as u64]
+    }, |v| {
+        if v.len() < 4 || v[0] < 2 || v[1] == 0 || v[2] == 0 || v[3] == 0 {
+            return Ok(());
+        }
+        let (nb, rf, depth, fifo) = (v[0] as usize, v[1], v[2], v[3] as usize);
+        let mut cfg = StreamerConfig::fig7a(nb, depth, Ratio::new(rf, 1));
+        cfg.fifo_depth = fifo;
+        let r = StreamerSim::new(cfg).run(3_000);
+        let expect = (2.0 * rf as f64 / nb as f64).min(1.0);
+        let got = r.min_rate();
+        if (got - expect).abs() > 0.05 * expect.max(0.1) {
+            return Err(format!("nb={nb} rf={rf}: rate {got} != {expect}"));
+        }
+        Ok(())
+    });
+}
+
+/// Folding: fold_to_target always meets the target when feasible, and the
+/// buffer bits are invariant under any folding.
+#[test]
+fn prop_fold_to_target() {
+    check(21, 60, |r| {
+        let c_in = 1 + r.below(256);
+        let c_out = [16u64, 32, 64, 128, 256][r.range(0, 5)];
+        let k = [1u64, 3][r.range(0, 2)];
+        let ifm = 4 + r.below(60);
+        let target = 1_000 + r.below(2_000_000);
+        vec![c_in, c_out, k, ifm, target]
+    }, |v| {
+        if v.len() < 5 || v[..4].iter().any(|&x| x == 0) {
+            return Ok(());
+        }
+        let (c_in, c_out, k, ifm, target) = (v[0], v[1], v[2], v[3], v[4]);
+        let mut l = fcmp::nn::Layer {
+            name: "p".into(),
+            kind: fcmp::nn::LayerKind::Conv,
+            k,
+            c_in,
+            c_out,
+            stride: 1,
+            pad: 0,
+            ifm: ifm + k, // ensure ofm >= 1
+            wbits: 1,
+            abits: 2,
+            pe: 1,
+            simd: 1,
+            exclude_from_packing: false,
+        };
+        let bits_before = l.weight_bits();
+        l.fold_to_target(target);
+        if !l.folding_valid() {
+            return Err(format!("invalid folding pe={} simd={}", l.pe, l.simd));
+        }
+        if l.buffer_width_bits() * l.buffer_depth() != bits_before {
+            return Err("folding changed total bits".into());
+        }
+        // feasibility: the fully parallel fold is the floor
+        let min_cycles = l.ofm() * l.ofm();
+        if min_cycles <= target && l.cycles_per_frame() > target {
+            return Err(format!(
+                "target {target} feasible (floor {min_cycles}) but got {}",
+                l.cycles_per_frame()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Timing: delta-FPS is monotone in LUT utilization on multi-die parts.
+#[test]
+fn prop_timing_monotone_in_density() {
+    check(31, 200, |r| vec![r.below(1000), r.below(1000)], |v| {
+        if v.len() < 2 {
+            return Ok(());
+        }
+        let (a, b) = (v[0] as f64 / 1000.0, v[1] as f64 / 1000.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let dev = fcmp::device::alveo_u250();
+        let ta = fcmp::timing::evaluate(&dev, lo, 200.0, 2.0, 200.0);
+        let tb = fcmp::timing::evaluate(&dev, hi, 200.0, 2.0, 200.0);
+        if tb.effective_fc_mhz > ta.effective_fc_mhz + 1e-9 {
+            return Err(format!(
+                "effective clock rose with density: {lo}->{} {hi}->{}",
+                ta.effective_fc_mhz, tb.effective_fc_mhz
+            ));
+        }
+        Ok(())
+    });
+}

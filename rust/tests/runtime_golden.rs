@@ -1,0 +1,118 @@
+//! Runtime golden tests: the rust PJRT engine must reproduce the python/jax
+//! outputs bit-for-bit (integer-valued f32 math), across every artifact and
+//! batch variant, plus error-path coverage. Requires `make artifacts`.
+
+use fcmp::runtime::{read_f32_bin, Engine, Manifest};
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("mvau_unit.manifest").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn mvau_unit_kernel_matches_python() {
+    let Some(arts) = artifacts() else { return };
+    fcmp::runtime::check_mvau_unit(&arts).unwrap();
+}
+
+#[test]
+fn cnv_w1a1_golden_exact() {
+    let Some(arts) = artifacts() else { return };
+    let eng = Engine::load(&arts, "cnv_w1a1").unwrap();
+    eng.check_golden().unwrap();
+}
+
+#[test]
+fn cnv_w2a2_golden_exact() {
+    let Some(arts) = artifacts() else { return };
+    Engine::load(&arts, "cnv_w2a2").unwrap().check_golden().unwrap();
+}
+
+#[test]
+fn rn50_lite_golden_exact() {
+    let Some(arts) = artifacts() else { return };
+    Engine::load(&arts, "rn50_lite_w1a2").unwrap().check_golden().unwrap();
+}
+
+#[test]
+fn batch_variants_agree_with_each_other() {
+    // the b1 and b4 executables must give identical per-sample outputs
+    let Some(arts) = artifacts() else { return };
+    let eng = Engine::load(&arts, "cnv_w1a1").unwrap();
+    assert_eq!(eng.batch_sizes(), vec![1, 4]);
+    let per = eng.manifest.input_elements_per_sample() as usize;
+    let mk = |seed: u64| -> Vec<f32> {
+        let mut rng = fcmp::util::rng::Rng::new(seed);
+        (0..per).map(|_| rng.below(256) as f32).collect()
+    };
+    let inputs: Vec<Vec<f32>> = (0..4).map(|i| mk(100 + i)).collect();
+    // batch-of-4 path
+    let batched = eng.infer(&inputs).unwrap();
+    assert_eq!(batched.len(), 4);
+    // one-at-a-time path
+    for (i, x) in inputs.iter().enumerate() {
+        let single = eng.infer(std::slice::from_ref(x)).unwrap();
+        assert_eq!(single[0], batched[i], "sample {i} differs across variants");
+    }
+}
+
+#[test]
+fn outputs_are_integer_valued() {
+    // the whole network is integer math in f32: outputs must be integers
+    let Some(arts) = artifacts() else { return };
+    let eng = Engine::load(&arts, "cnv_w1a1").unwrap();
+    let per = eng.manifest.input_elements_per_sample() as usize;
+    let x: Vec<f32> = (0..per).map(|i| (i % 256) as f32).collect();
+    let y = eng.infer(&[x]).unwrap();
+    for v in &y[0] {
+        assert_eq!(*v, v.round(), "non-integer output {v}");
+        assert!(v.abs() < 1e6, "implausible magnitude {v}");
+    }
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let Some(arts) = artifacts() else { return };
+    let eng = Engine::load(&arts, "cnv_w2a2").unwrap();
+    let per = eng.manifest.input_elements_per_sample() as usize;
+    let x: Vec<f32> = (0..per).map(|i| ((i * 7) % 256) as f32).collect();
+    let a = eng.infer(&[x.clone()]).unwrap();
+    let b = eng.infer(&[x]).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn wrong_input_size_is_error_not_crash() {
+    let Some(arts) = artifacts() else { return };
+    let eng = Engine::load(&arts, "cnv_w1a1").unwrap();
+    assert!(eng.infer(&[vec![1.0; 10]]).is_err());
+    assert!(eng.infer(&[]).unwrap().is_empty());
+}
+
+#[test]
+fn missing_model_is_error() {
+    let Some(arts) = artifacts() else { return };
+    assert!(Engine::load(&arts, "no_such_model").is_err());
+}
+
+#[test]
+fn weight_files_match_manifest_shapes() {
+    let Some(arts) = artifacts() else { return };
+    for name in ["cnv_w1a1", "cnv_w2a2", "rn50_lite_w1a2"] {
+        let m = Manifest::load(&arts.join(format!("{name}.manifest"))).unwrap();
+        for spec in &m.params {
+            let data = read_f32_bin(&arts.join(&spec.file)).unwrap();
+            assert_eq!(data.len() as u64, spec.elements(), "{name}/{}", spec.file);
+            // quantized values only (plus integer thresholds)
+            for v in data.iter().take(256) {
+                assert_eq!(*v, v.round(), "{name}/{}: non-integer {v}", spec.file);
+            }
+        }
+    }
+}
