@@ -8,7 +8,11 @@ fn main() {
     let cycles = 20_000;
     let mut t = Table::new(["config", "min rate", "max rate", "wasted slots", "expected"]);
     let cases: Vec<(String, StreamerConfig, &str)> = vec![
-        ("7a: Nb=2 RF=1".into(), StreamerConfig::fig7a(2, 128, Ratio::new(1, 1)), "1.0 (dual port)"),
+        (
+            "7a: Nb=2 RF=1".into(),
+            StreamerConfig::fig7a(2, 128, Ratio::new(1, 1)),
+            "1.0 (dual port)",
+        ),
         ("7a: Nb=4 RF=2".into(), StreamerConfig::fig7a(4, 128, Ratio::two()), "1.0 (2RF/Nb)"),
         ("7a: Nb=4 RF=1".into(), StreamerConfig::fig7a(4, 128, Ratio::new(1, 1)), "0.5 (2RF/Nb)"),
         ("7a: Nb=6 RF=3".into(), StreamerConfig::fig7a(6, 128, Ratio::new(3, 1)), "1.0 (2RF/Nb)"),

@@ -2,46 +2,77 @@
 //! first-fit-decreasing vs simulated annealing (MPack) vs exact
 //! branch-and-bound (MemPacker, small inputs only): solution quality and
 //! runtime on CNV/RN50 workloads plus synthetic heterogeneous sets.
+//!
+//! The second half ablates the island-model GA engine itself on the
+//! RN50-sized item set: legacy full-refit fitness vs incremental delta-cost
+//! fitness, one island vs eight, one worker thread vs eight, plus a
+//! microbench of the memoized vs uncached `brams_for` mode search — and
+//! verifies the determinism contract (identical packings for identical
+//! `(seed, islands)` across runs and thread counts) on every row.
+//!
+//! Flags: `--smoke` shrinks generations/samples for CI; `--json` writes the
+//! timing rows to `BENCH_packing.json` (the perf-trajectory artifact).
+
+use std::path::Path;
+
+use fcmp::device::bram::{brams_for, brams_for_uncached};
 use fcmp::memory;
 use fcmp::packing::{anneal::Anneal, bnb::Bnb, ffd::Ffd, ga, run_packer, Constraints, Packer};
-use fcmp::util::bench::Table;
+use fcmp::util::args::Args;
+use fcmp::util::bench::{bench, write_json, BenchConfig, BenchResult, Table};
 use fcmp::util::rng::Rng;
 
-fn engines(gens: usize) -> Vec<(&'static str, Box<dyn Packer>)> {
-    vec![
-        ("ffd", Box::new(Ffd::new())),
-        ("anneal", Box::new(Anneal::default())),
-        ("ga[18]", Box::new(ga::Ga::new(ga::GaParams { generations: gens, ..ga::GaParams::cnv() }))),
-    ]
+fn ga_engine(gens: usize, islands: usize, threads: usize, full_recompute: bool) -> ga::Ga {
+    let params = ga::GaParams { generations: gens, full_recompute, ..ga::GaParams::rn50() }
+        .with_islands(islands);
+    ga::Ga::new(params).with_threads(threads)
+}
+
+fn quality_row(
+    t: &mut Table,
+    workload: &str,
+    engine: &str,
+    items: &[memory::PackItem],
+    c: &Constraints,
+    e: &dyn Packer,
+) {
+    let (_, r) = run_packer(e, items, c);
+    t.row([
+        workload.to_string(),
+        engine.to_string(),
+        format!("{}", r.brams),
+        format!("{:.1}", 100.0 * r.efficiency),
+        format!("{:.1?}", r.elapsed),
+    ]);
 }
 
 fn main() {
-    let mut t = Table::new(["workload", "engine", "BRAM18", "E %", "time"]);
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    let gens = if smoke { 10 } else { 60 };
 
-    // real workloads
+    // ---- solution quality across engines --------------------------------
+    let mut t = Table::new(["workload", "engine", "BRAM18", "E %", "time"]);
     for (name, net, dev) in [
         ("CNV-W1A1/7020", fcmp::nn::cnv(fcmp::nn::CnvVariant::W1A1), fcmp::device::zynq_7020()),
         ("RN50-W1A2/U250", fcmp::nn::resnet50(1), fcmp::device::alveo_u250()),
     ] {
+        if smoke && name.starts_with("RN50") {
+            continue; // CI smoke: CNV + synthetic only
+        }
         let bufs = memory::weight_buffers(&net, dev.slrs.len());
         let items = memory::all_columns(&bufs);
         let c = Constraints::new(4, !dev.is_monolithic());
-        for (ename, e) in engines(60) {
-            let (_, r) = run_packer(e.as_ref(), &items, &c);
-            t.row([
-                name.to_string(),
-                ename.to_string(),
-                format!("{}", r.brams),
-                format!("{:.1}", 100.0 * r.efficiency),
-                format!("{:.1?}", r.elapsed),
-            ]);
-        }
+        quality_row(&mut t, name, "ffd", &items, &c, &Ffd::new());
+        quality_row(&mut t, name, "anneal", &items, &c, &Anneal::default());
+        quality_row(&mut t, name, "ga[18] seq", &items, &c, &ga_engine(gens, 1, 1, false));
+        quality_row(&mut t, name, "ga[18] isl=8", &items, &c, &ga_engine(gens, 8, 0, false));
     }
 
     // synthetic heterogeneous workload where grouping quality matters,
     // small enough for the exact BnB oracle
     let mut rng = Rng::new(11);
-    let items: Vec<memory::PackItem> = (0..12)
+    let items12: Vec<memory::PackItem> = (0..12)
         .map(|i| memory::PackItem {
             id: i,
             layer: format!("s{i}"),
@@ -50,26 +81,103 @@ fn main() {
             slr: 0,
         })
         .collect();
-    let c = Constraints::new(4, false);
-    for (ename, e) in engines(120) {
-        let (_, r) = run_packer(e.as_ref(), &items, &c);
-        t.row([
-            "synthetic-12".into(),
-            ename.to_string(),
-            format!("{}", r.brams),
-            format!("{:.1}", 100.0 * r.efficiency),
-            format!("{:.1?}", r.elapsed),
-        ]);
-    }
-    let (_, r) = run_packer(&Bnb::default(), &items, &c);
-    t.row([
-        "synthetic-12".into(),
-        "bnb (exact)".into(),
-        format!("{}", r.brams),
-        format!("{:.1}", 100.0 * r.efficiency),
-        format!("{:.1?}", r.elapsed),
-    ]);
+    let c12 = Constraints::new(4, false);
+    quality_row(&mut t, "synthetic-12", "ffd", &items12, &c12, &Ffd::new());
+    quality_row(&mut t, "synthetic-12", "anneal", &items12, &c12, &Anneal::default());
+    let ga_seq = ga_engine(120, 1, 1, false);
+    quality_row(&mut t, "synthetic-12", "ga[18] seq", &items12, &c12, &ga_seq);
+    let ga_isl4 = ga_engine(120, 4, 0, false);
+    quality_row(&mut t, "synthetic-12", "ga[18] isl=4", &items12, &c12, &ga_isl4);
+    quality_row(&mut t, "synthetic-12", "bnb (exact)", &items12, &c12, &Bnb::default());
 
-    println!("== Packer ablation ==");
+    println!("== Packer ablation: solution quality ==");
     println!("{}", t.render());
+
+    // ---- island-model / incremental-fitness ablation --------------------
+    // RN50-sized item set (the CI smoke uses CNV to stay fast)
+    let (abl_name, net, dev) = if smoke {
+        ("CNV-W1A1/7020", fcmp::nn::cnv(fcmp::nn::CnvVariant::W1A1), fcmp::device::zynq_7020())
+    } else {
+        ("RN50-W1A2/U250", fcmp::nn::resnet50(1), fcmp::device::alveo_u250())
+    };
+    let bufs = memory::weight_buffers(&net, dev.slrs.len());
+    let items = memory::all_columns(&bufs);
+    let c = Constraints::new(4, !dev.is_monolithic());
+    let abl_gens = if smoke { 6 } else { 24 };
+    let cfg = BenchConfig {
+        warmup_iters: if smoke { 0 } else { 1 },
+        samples: if smoke { 2 } else { 3 },
+        iters_per_sample: 1,
+    };
+
+    let arms: Vec<(&str, ga::Ga)> = vec![
+        ("ga-seed-full-seq", ga_engine(abl_gens, 1, 1, true)),
+        ("ga-incremental-seq", ga_engine(abl_gens, 1, 1, false)),
+        ("ga-isl8-thr1", ga_engine(abl_gens, 8, 1, false)),
+        ("ga-isl8-thr8", ga_engine(abl_gens, 8, 8, false)),
+    ];
+    println!("== Island-model ablation on {abl_name} ({} items) ==", items.len());
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut packings: Vec<fcmp::packing::Packing> = Vec::new();
+    for (name, e) in &arms {
+        // keep the last timed packing: its cost feeds the quality columns
+        // and the determinism check without re-running the engine
+        let mut last = fcmp::packing::Packing::default();
+        let r = bench(&format!("{abl_name}/{name}"), cfg, || {
+            last = e.pack(&items, &c);
+        });
+        fcmp::util::bench::report(&r);
+        results.push(r);
+        packings.push(last);
+    }
+    let seed_ms = results[0].mean_ms();
+    let isl8_ms = results[results.len() - 1].mean_ms();
+    let seed_cost = packings[0].total_brams(&items);
+    let isl8_cost = packings[packings.len() - 1].total_brams(&items);
+    println!(
+        "island GA (8 islands, 8 threads) vs seed sequential GA: {:.2}x wall-clock, \
+         BRAM18 {} vs {} ({})",
+        seed_ms / isl8_ms,
+        isl8_cost,
+        seed_cost,
+        if isl8_cost <= seed_cost { "equal-or-better" } else { "WORSE" }
+    );
+
+    // determinism contract: identical (seed, islands) => identical packing
+    // across thread counts — the isl8-thr1 and isl8-thr8 arms already ran
+    // the same params, so their packings must be byte-identical
+    assert_eq!(
+        packings[2], packings[3],
+        "island GA output depends on thread count"
+    );
+    println!("determinism: OK (isl=8 identical at 1 and 8 threads)");
+
+    // ---- brams_for memoization microbench -------------------------------
+    let shapes: Vec<(u64, u64)> =
+        items.iter().map(|i| (i.width_bits, i.depth)).take(512).collect();
+    let micro_cfg = BenchConfig { warmup_iters: 1, samples: 5, iters_per_sample: 50 };
+    let memo = bench("brams_for/memoized", micro_cfg, || {
+        let mut acc = 0u64;
+        for &(w, d) in &shapes {
+            acc = acc.wrapping_add(brams_for(w, d));
+        }
+        std::hint::black_box(acc);
+    });
+    let raw = bench("brams_for/uncached", micro_cfg, || {
+        let mut acc = 0u64;
+        for &(w, d) in &shapes {
+            acc = acc.wrapping_add(brams_for_uncached(w, d));
+        }
+        std::hint::black_box(acc);
+    });
+    fcmp::util::bench::report(&memo);
+    fcmp::util::bench::report(&raw);
+    results.push(memo);
+    results.push(raw);
+
+    if args.has_flag("json") {
+        let path = Path::new("BENCH_packing.json");
+        write_json(path, &results).expect("writing BENCH_packing.json");
+        println!("wrote {} ({} rows)", path.display(), results.len());
+    }
 }

@@ -123,9 +123,10 @@ impl Config {
                 continue;
             }
             if let Some(h) = line.strip_prefix('[') {
-                let name = h
-                    .strip_suffix(']')
-                    .ok_or(ParseError { line: line_no, message: "unterminated table header".into() })?;
+                let name = h.strip_suffix(']').ok_or(ParseError {
+                    line: line_no,
+                    message: "unterminated table header".into(),
+                })?;
                 table = name.trim().to_string();
                 continue;
             }

@@ -33,8 +33,10 @@ pub const BRAM18_MODES: [BramMode; 6] = [
 
 /// Number of BRAM18 primitives needed for a (width_bits × depth) buffer,
 /// choosing the aspect mode that minimises the count (what a competent RTL
-/// memory generator / Vivado will infer).
-pub fn brams_for(width_bits: u64, depth: u64) -> u64 {
+/// memory generator / Vivado will infer). Uncached mode search; prefer
+/// [`brams_for`], which memoizes — the packers evaluate millions of bins
+/// drawn from a handful of distinct shapes.
+pub fn brams_for_uncached(width_bits: u64, depth: u64) -> u64 {
     if width_bits == 0 || depth == 0 {
         return 0;
     }
@@ -43,6 +45,44 @@ pub fn brams_for(width_bits: u64, depth: u64) -> u64 {
         .map(|m| ceil_div(width_bits, m.width) * ceil_div(depth, m.depth))
         .min()
         .unwrap()
+}
+
+/// Entries in the per-thread direct-mapped shape cache (power of two).
+const CACHE_SLOTS: usize = 1024;
+
+thread_local! {
+    /// (width, depth, count) keyed by a mixed hash of the shape. Direct
+    /// mapped: a colliding shape simply overwrites the slot, so the cache
+    /// is bounded and never needs invalidation. Thread-local so the island
+    /// GA workers share nothing.
+    static SHAPE_CACHE: std::cell::RefCell<[(u64, u64, u64); CACHE_SLOTS]> =
+        std::cell::RefCell::new([(u64::MAX, u64::MAX, 0); CACHE_SLOTS]);
+}
+
+/// Memoized [`brams_for_uncached`]: the packing engines call this on every
+/// bin admission probe and fitness update, but the distinct (width, depth)
+/// shapes number in the hundreds, so a small per-thread table absorbs
+/// nearly all of the mode searches.
+pub fn brams_for(width_bits: u64, depth: u64) -> u64 {
+    if width_bits == 0 || depth == 0 {
+        return 0;
+    }
+    // splitmix-style mix of the two coordinates
+    let h = width_bits
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(depth)
+        .wrapping_mul(0xBF58476D1CE4E5B9);
+    let slot = (h >> 32) as usize & (CACHE_SLOTS - 1);
+    SHAPE_CACHE.with(|cache| {
+        let mut cache = cache.borrow_mut();
+        let entry = &mut cache[slot];
+        if entry.0 == width_bits && entry.1 == depth {
+            return entry.2;
+        }
+        let n = brams_for_uncached(width_bits, depth);
+        *entry = (width_bits, depth, n);
+        n
+    })
 }
 
 /// The aspect mode achieving `brams_for` (for reporting / the packer).
@@ -111,6 +151,24 @@ mod tests {
     fn zero_cases() {
         assert_eq!(brams_for(0, 100), 0);
         assert_eq!(brams_for(100, 0), 0);
+        assert_eq!(brams_for_uncached(0, 100), 0);
+        assert_eq!(brams_for_uncached(100, 0), 0);
+    }
+
+    #[test]
+    fn memoized_matches_uncached_over_a_dense_sweep() {
+        // far more shapes than cache slots, so hits, misses and slot
+        // evictions are all exercised
+        for w in 1..=80u64 {
+            for d in (1..=4096u64).step_by(37) {
+                assert_eq!(brams_for(w, d), brams_for_uncached(w, d), "{w}x{d}");
+            }
+        }
+        // repeated queries (the hit path) stay consistent
+        for _ in 0..3 {
+            assert_eq!(brams_for(36, 512), 1);
+            assert_eq!(brams_for(19, 2058), 5);
+        }
     }
 
     #[test]

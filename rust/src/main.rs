@@ -3,6 +3,7 @@
 //! ```text
 //! fcmp pack     --network cnv-w1a1|cnv-w2a2|rn50-w1|rn50-w2 --device 7020|7012s|u250|u280
 //!               [--hb 4] [--engine ga|ffd|anneal] [--generations 120] [--seed 2020]
+//!               [--islands 1] [--threads 0 (auto)] [--migrate 10]
 //! fcmp report   --table 1|2|4|5|fig2|fig4|all [--generations 120]
 //! fcmp perf     --network ... [--mhz 195]
 //! fcmp gals     [--nb 4] [--rf 2.0] [--depth 128] [--cycles 10000] [--static]
@@ -32,7 +33,22 @@ fn network_by_name(name: &str) -> Option<Network> {
     }
 }
 
-fn engine_by_name(name: &str, net: &Network, generations: usize, seed: u64) -> Box<dyn Packer> {
+/// Island-model execution knobs for the GA engine (CLI surface of the
+/// parallel packer; see `packing::ga` for the determinism contract).
+#[derive(Clone, Copy, Debug)]
+struct GaTopology {
+    islands: usize,
+    threads: usize,
+    migration_interval: usize,
+}
+
+fn engine_by_name(
+    name: &str,
+    net: &Network,
+    generations: usize,
+    seed: u64,
+    topo: GaTopology,
+) -> Box<dyn Packer> {
     match name {
         "ffd" => Box::new(Ffd::new()),
         "anneal" => Box::new(Anneal { seed, ..Anneal::default() }),
@@ -40,6 +56,9 @@ fn engine_by_name(name: &str, net: &Network, generations: usize, seed: u64) -> B
             let mut g = report::default_ga(net);
             g.params.generations = generations;
             g.params.seed = seed;
+            g.params.islands = topo.islands.max(1);
+            g.params.migration_interval = topo.migration_interval.max(1);
+            g.threads = topo.threads;
             Box::new(g)
         }
     }
@@ -51,15 +70,32 @@ fn cmd_pack(a: &Args) -> anyhow::Result<()> {
     let dev = device::by_name(a.get_or("device", "7020"))
         .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
     let hb = a.get_usize("hb", 4);
+    let topo = GaTopology {
+        islands: a.get_usize("islands", 1),
+        threads: a.get_usize("threads", 0),
+        migration_interval: a.get_usize("migrate", 10),
+    };
+    let engine_name = a.get_or("engine", "ga");
     let engine = engine_by_name(
-        a.get_or("engine", "ga"),
+        engine_name,
         &net,
         a.get_usize("generations", 120),
         a.get_usize("seed", 2020) as u64,
+        topo,
     );
+    // only the GA engine has island/thread knobs
+    let topo_note = if matches!(engine_name, "ffd" | "anneal") {
+        String::new()
+    } else {
+        format!(
+            ", islands={}, threads={}",
+            topo.islands.max(1),
+            if topo.threads == 0 { "auto".to_string() } else { topo.threads.to_string() }
+        )
+    };
     let out = report::pack_network(&net, &dev, engine.as_ref(), hb);
     println!(
-        "{} on {} (H_B={hb}, R_F>={:.1}):",
+        "{} on {} (H_B={hb}, R_F>={:.1}{topo_note}):",
         net.name,
         dev.name,
         hb as f64 / 2.0
@@ -279,7 +315,8 @@ fn cmd_dse(a: &Args) -> anyhow::Result<()> {
 const USAGE: &str = "\
 fcmp — Frequency Compensated Memory Packing (paper reproduction)
 subcommands:
-  pack    pack a network's weight buffers into BRAMs (FCMP, paper section IV)
+  pack    pack a network's weight buffers into BRAMs (FCMP, paper section IV;
+          --islands N --threads T runs the parallel island-model GA)
   report  regenerate the paper's tables/figures (--table 1|2|4|5|fig2|fig4|all)
   perf    analytic FPS/latency of an accelerator (--network, --mhz)
   gals    cycle-level GALS streamer simulation (--nb, --rf, --static)

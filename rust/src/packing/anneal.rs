@@ -2,7 +2,8 @@
 //! FPL'14; paper §II.C). Starts from the FFD solution and explores
 //! move/swap neighbourhoods under a geometric cooling schedule.
 
-use super::{bin_brams, Bin, Constraints, Packer, Packing};
+use super::{bin_brams, bin_shape, Bin, Constraints, Packer, Packing};
+use crate::device::bram::brams_for;
 use crate::memory::PackItem;
 use crate::util::rng::Rng;
 
@@ -64,18 +65,20 @@ impl Packer for Anneal {
             }
 
             let old_from = bin_brams(items, &cur[from].items) as i64;
-            let old_to = if to_new { 0 } else { bin_brams(items, &cur[to].items) as i64 };
+            // destination cost before/after from its cached shape — no
+            // member-list clone on the proposal path
+            let (old_to, new_to) = if to_new {
+                (0, items[item].solo_brams() as i64)
+            } else {
+                let (w, d) = bin_shape(items, &cur[to].items);
+                let grown =
+                    brams_for(w.max(items[item].width_bits), d + items[item].depth);
+                (brams_for(w, d) as i64, grown as i64)
+            };
 
             // apply tentatively
             cur[from].items.swap_remove(idx_in);
             let new_from = bin_brams(items, &cur[from].items) as i64;
-            let new_to = if to_new {
-                bin_brams(items, &[item]) as i64
-            } else {
-                let mut m = cur[to].items.clone();
-                m.push(item);
-                bin_brams(items, &m) as i64
-            };
             let delta = (new_from + new_to) - (old_from + old_to);
             let accept = delta <= 0 || rng.f64() < (-(delta as f64) / t.max(1e-9)).exp();
             if accept {

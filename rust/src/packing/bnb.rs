@@ -4,7 +4,7 @@
 //! truth oracle in packing tests.
 
 use super::{bin_brams, Bin, Constraints, Packer, Packing};
-use crate::device::bram::BRAM18_BITS;
+use crate::device::bram::{brams_for, BRAM18_BITS};
 use crate::memory::PackItem;
 use crate::util::ceil_div;
 
@@ -81,9 +81,12 @@ impl<'a> Search<'a> {
             }
             tried.push((w, d, b.items.len()));
 
-            let old = bin_brams(self.items, &bins[bi].items);
+            // cost the placement from the shape already derived for the
+            // symmetry check — no second member-list walk
+            let it = &self.items[item];
+            let old = brams_for(w, d);
+            let new = brams_for(w.max(it.width_bits), d + it.depth);
             bins[bi].items.push(item);
-            let new = bin_brams(self.items, &bins[bi].items);
             self.dfs(tail, bins, cost - old + new);
             bins[bi].items.pop();
         }

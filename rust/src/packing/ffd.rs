@@ -5,7 +5,8 @@
 //! new bin when no placement beats a singleton. This is the "reasonable
 //! hand-rolled allocator" the GA of [18] must beat.
 
-use super::{bin_brams, Bin, Constraints, Packer, Packing};
+use super::{Bin, Constraints, Packer, Packing};
+use crate::device::bram::brams_for;
 use crate::memory::PackItem;
 
 /// Best-fit-decreasing packer.
@@ -32,40 +33,44 @@ impl Packer for Ffd {
         order.sort_by_key(|&i| std::cmp::Reverse((items[i].depth, items[i].width_bits)));
 
         let mut bins: Vec<Bin> = Vec::new();
-        // cached cost per bin to avoid recomputation
-        let mut costs: Vec<u64> = Vec::new();
+        // cached (max-width, Σdepth, cost) per bin: candidate costs come
+        // from one memoized brams_for lookup instead of cloning the member
+        // list and re-deriving its shape
+        let mut shapes: Vec<(u64, u64, u64)> = Vec::new();
 
         for i in order {
-            let solo = bin_brams(items, &[i]);
+            let it = &items[i];
+            let solo = it.solo_brams();
             let mut best: Option<(usize, u64)> = None; // (bin, delta)
             for (bi, b) in bins.iter().enumerate() {
                 if b.items.len() >= c.max_bin_height {
                     continue;
                 }
-                if c.same_slr && items[b.items[0]].slr != items[i].slr {
+                if c.same_slr && items[b.items[0]].slr != it.slr {
                     continue;
                 }
                 if self.match_width
-                    && items[b.items[0]].width_bits != items[i].width_bits
+                    && items[b.items[0]].width_bits != it.width_bits
                 {
                     continue;
                 }
-                let mut members = b.items.clone();
-                members.push(i);
-                let new_cost = bin_brams(items, &members);
-                let delta = new_cost.saturating_sub(costs[bi]);
-                if delta < solo && best.map_or(true, |(_, d)| delta < d) {
+                let (w, d, cost) = shapes[bi];
+                let new_cost = brams_for(w.max(it.width_bits), d + it.depth);
+                let delta = new_cost.saturating_sub(cost);
+                if delta < solo && best.map_or(true, |(_, best_d)| delta < best_d) {
                     best = Some((bi, delta));
                 }
             }
             match best {
                 Some((bi, _)) => {
                     bins[bi].items.push(i);
-                    costs[bi] = bin_brams(items, &bins[bi].items);
+                    let (w, d, _) = shapes[bi];
+                    let (nw, nd) = (w.max(it.width_bits), d + it.depth);
+                    shapes[bi] = (nw, nd, brams_for(nw, nd));
                 }
                 None => {
                     bins.push(Bin { items: vec![i] });
-                    costs.push(solo);
+                    shapes.push((it.width_bits, it.depth, solo));
                 }
             }
         }

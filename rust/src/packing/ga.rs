@@ -1,5 +1,6 @@
 //! Grouping genetic algorithm packer — the engine of [18] (Kroes et al.,
-//! GECCO'20) that the paper uses for FCMP (§IV, Table III hyper-parameters).
+//! GECCO'20) that the paper uses for FCMP (§IV, Table III hyper-parameters),
+//! extended to a parallel island model with incremental delta-cost fitness.
 //!
 //! Representation: Falkenauer-style *grouping* GA. An individual is a bin
 //! assignment; crossover inherits whole bins from both parents (bins are the
@@ -12,15 +13,38 @@
 //! * `p_adm_h` — probability of admitting an item into a bin whose combined
 //!   depth spills past the current BRAM row boundary (occasionally useful:
 //!   the spill may be absorbed by a deeper aspect mode).
+//!
+//! # Island model
+//!
+//! With `islands > 1` the population is split into that many demes, each
+//! evolving independently on its own [`Rng::for_stream`] stream. Every
+//! `migration_interval` generations the demes synchronize and exchange
+//! elites along a fixed ring (deme *i* receives the best of deme *i−1*,
+//! replacing its current worst). Because the demes are data-independent
+//! between migrations, epochs can run on scoped worker threads
+//! ([`std::thread::scope`]) and the result is **bit-identical** for a fixed
+//! `(seed, islands)` regardless of the thread count — the determinism
+//! contract DESIGN.md documents and `tests/prop_invariants.rs` enforces.
+//!
+//! # Incremental fitness
+//!
+//! Each bin carries its (max-width, Σdepth, BRAM18 cost) alongside the
+//! member list, so admission probes compare against the cached depth instead
+//! of re-summing members, insertions update one bin's cost with a single
+//! memoized [`brams_for`] lookup, and crossover inherits untouched bins —
+//! costs included — without ever re-deriving them. `full_recompute` restores
+//! the legacy whole-individual re-evaluation as an ablation arm for
+//! `benches/packer_ablation.rs`.
 
-use super::{bin_brams, Bin, Constraints, Packer, Packing};
+use super::{Bin, Constraints, Packer, Packing};
+use crate::device::bram::brams_for;
 use crate::memory::PackItem;
 use crate::util::rng::Rng;
 
-/// GA hyper-parameters (paper Table III).
+/// GA hyper-parameters (paper Table III plus the island-model extensions).
 #[derive(Clone, Copy, Debug)]
 pub struct GaParams {
-    /// Population size N_p.
+    /// Population size N_p (split across islands when `islands > 1`).
     pub population: usize,
     /// Tournament selection group size N_t.
     pub tournament: usize,
@@ -34,6 +58,13 @@ pub struct GaParams {
     pub generations: usize,
     /// PRNG seed (deterministic runs).
     pub seed: u64,
+    /// Independently evolving demes (1 = the classic sequential GA).
+    pub islands: usize,
+    /// Generations between elite migrations along the ring.
+    pub migration_interval: usize,
+    /// Ablation arm: re-evaluate every bin of every offspring from scratch
+    /// (the pre-incremental fitness path). Only the ablation bench sets it.
+    pub full_recompute: bool,
 }
 
 impl GaParams {
@@ -47,6 +78,9 @@ impl GaParams {
             p_adm_h: 0.1,
             generations: 120,
             seed: 2020,
+            islands: 1,
+            migration_interval: 10,
+            full_recompute: false,
         }
     }
 
@@ -60,7 +94,16 @@ impl GaParams {
             p_adm_h: 0.1,
             generations: 120,
             seed: 2020,
+            islands: 1,
+            migration_interval: 10,
+            full_recompute: false,
         }
+    }
+
+    /// Island-model variant: split the population across `islands` demes.
+    pub fn with_islands(mut self, islands: usize) -> GaParams {
+        self.islands = islands.max(1);
+        self
     }
 }
 
@@ -68,41 +111,106 @@ impl GaParams {
 #[derive(Clone, Copy, Debug)]
 pub struct Ga {
     pub params: GaParams,
+    /// Worker threads for island epochs; 0 = `available_parallelism`.
+    /// Purely an execution knob — the packing is a function of
+    /// `(params, items, constraints)` only, never of `threads`.
+    pub threads: usize,
 }
 
 impl Ga {
     pub fn new(params: GaParams) -> Ga {
-        Ga { params }
+        Ga { params, threads: 0 }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Ga {
+        self.threads = threads;
+        self
+    }
+
+    fn worker_count(&self, islands: usize) -> usize {
+        let t = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        t.min(islands).max(1)
     }
 }
 
-/// One individual: a packing plus per-bin cached costs (the fitness
-/// evaluation is the GA hot path; recomputing every bin's BRAM cost per
-/// offspring dominated the profile before caching).
+/// One bin plus its cached shape and cost. `width`/`depth` are maintained
+/// incrementally on insertion, so admission checks and cost updates are O(1)
+/// in the bin height instead of re-summing the member list.
+#[derive(Clone, Debug)]
+struct BinState {
+    items: Vec<usize>,
+    width: u64,
+    depth: u64,
+    cost: u64,
+}
+
+impl BinState {
+    fn singleton(items: &[PackItem], i: usize) -> BinState {
+        let it = &items[i];
+        BinState {
+            items: vec![i],
+            width: it.width_bits,
+            depth: it.depth,
+            cost: brams_for(it.width_bits, it.depth),
+        }
+    }
+
+    fn from_members(items: &[PackItem], members: Vec<usize>) -> BinState {
+        let (width, depth) = super::bin_shape(items, &members);
+        BinState { items: members, width, depth, cost: brams_for(width, depth) }
+    }
+
+    /// Admit `i`, updating shape and cost in place (one memoized lookup).
+    fn push(&mut self, items: &[PackItem], i: usize) {
+        let it = &items[i];
+        self.items.push(i);
+        self.width = self.width.max(it.width_bits);
+        self.depth += it.depth;
+        self.cost = brams_for(self.width, self.depth);
+    }
+}
+
+/// One individual: bins with cached per-bin costs plus the cached total.
 #[derive(Clone)]
 struct Indiv {
-    bins: Vec<Bin>,
-    bin_costs: Vec<u64>,
+    bins: Vec<BinState>,
     cost: u64,
 }
 
 impl Indiv {
-    fn from_bins(items: &[PackItem], bins: Vec<Bin>) -> Indiv {
-        let bin_costs: Vec<u64> =
-            bins.iter().map(|b| bin_brams(items, &b.items)).collect();
-        let cost = bin_costs.iter().sum();
-        Indiv { bins, bin_costs, cost }
+    fn from_packing(items: &[PackItem], bins: Vec<Bin>) -> Indiv {
+        let bins: Vec<BinState> =
+            bins.into_iter().map(|b| BinState::from_members(items, b.items)).collect();
+        let cost = bins.iter().map(|b| b.cost).sum();
+        Indiv { bins, cost }
     }
 }
 
-fn total_cost(items: &[PackItem], bins: &[Bin]) -> u64 {
-    bins.iter().map(|b| bin_brams(items, &b.items)).sum()
+/// Full re-derivation of the total cost (debug cross-checks + the
+/// `full_recompute` ablation arm).
+fn total_cost(items: &[PackItem], bins: &[BinState]) -> u64 {
+    bins.iter().map(|b| super::bin_brams(items, &b.items)).sum()
+}
+
+/// Legacy whole-individual re-evaluation (ablation arm only).
+fn refit_full(items: &[PackItem], ind: &mut Indiv) {
+    let mut cost = 0;
+    for b in &mut ind.bins {
+        *b = BinState::from_members(items, std::mem::take(&mut b.items));
+        cost += b.cost;
+    }
+    ind.cost = cost;
 }
 
 /// Can `item` join `bin` under hard constraints + stochastic admission?
+/// Uses the bin's cached depth — no member re-summation on the probe path.
 fn admits(
     items: &[PackItem],
-    bin: &Bin,
+    bin: &BinState,
     item: usize,
     c: &Constraints,
     p: &GaParams,
@@ -118,8 +226,13 @@ fn admits(
     if items[head].width_bits != items[item].width_bits && !rng.chance(p.p_adm_w) {
         return false;
     }
-    // depth spill: combined depth crossing the next 512-word row boundary
-    let depth: u64 = bin.items.iter().map(|&i| items[i].depth).sum();
+    // depth spill: combined depth crossing the next 512-word row boundary.
+    // The legacy arm re-sums the member depths like the original code did.
+    let depth = if p.full_recompute {
+        bin.items.iter().map(|&i| items[i].depth).sum()
+    } else {
+        bin.depth
+    };
     let spills = (depth % 512 != 0) && (depth % 512 + items[item].depth > 512);
     if spills && !rng.chance(p.p_adm_h) {
         return false;
@@ -128,15 +241,16 @@ fn admits(
 }
 
 /// Randomized first-fit insertion used by construction, repair and mutation.
-/// Touched bins are tracked so callers can refresh only their cached costs.
+/// Every touched bin's cached cost is updated in place and the running total
+/// in `cost` is kept consistent — callers never re-sum.
 fn insert_all(
     items: &[PackItem],
-    bins: &mut Vec<Bin>,
+    bins: &mut Vec<BinState>,
     mut todo: Vec<usize>,
     c: &Constraints,
     p: &GaParams,
     rng: &mut Rng,
-    touched: &mut Vec<usize>,
+    cost: &mut u64,
 ) {
     rng.shuffle(&mut todo);
     for item in todo {
@@ -146,15 +260,17 @@ fn insert_all(
         for k in 0..n {
             let bi = (start + k) % n;
             if admits(items, &bins[bi], item, c, p, rng) {
-                bins[bi].items.push(item);
-                touched.push(bi);
+                *cost -= bins[bi].cost;
+                bins[bi].push(items, item);
+                *cost += bins[bi].cost;
                 placed = true;
                 break;
             }
         }
         if !placed {
-            bins.push(Bin { items: vec![item] });
-            touched.push(bins.len() - 1);
+            let b = BinState::singleton(items, item);
+            *cost += b.cost;
+            bins.push(b);
         }
     }
 }
@@ -166,13 +282,15 @@ fn random_individual(
     rng: &mut Rng,
 ) -> Indiv {
     let mut bins = Vec::new();
-    let mut touched = Vec::new();
-    insert_all(items, &mut bins, (0..items.len()).collect(), c, p, rng, &mut touched);
-    Indiv::from_bins(items, bins)
+    let mut cost = 0;
+    insert_all(items, &mut bins, (0..items.len()).collect(), c, p, rng, &mut cost);
+    Indiv { bins, cost }
 }
 
 /// Grouping crossover: child inherits a random subset of parent A's bins,
-/// then parent B's bins filtered of used items, then first-fit repair.
+/// then parent B's bins whose items are all still free, then first-fit
+/// repair. Inherited bins keep their cached shape and cost — `bin_brams` is
+/// never called on them.
 fn crossover(
     items: &[PackItem],
     a: &Indiv,
@@ -182,39 +300,29 @@ fn crossover(
     rng: &mut Rng,
 ) -> Indiv {
     let mut used = vec![false; items.len()];
-    let mut bins: Vec<Bin> = Vec::new();
-    let mut bin_costs: Vec<u64> = Vec::new();
-    for (bi, bin) in a.bins.iter().enumerate() {
+    let mut bins: Vec<BinState> = Vec::new();
+    let mut cost = 0u64;
+    for bin in &a.bins {
         if rng.chance(0.5) {
             for &i in &bin.items {
                 used[i] = true;
             }
+            cost += bin.cost;
             bins.push(bin.clone());
-            bin_costs.push(a.bin_costs[bi]); // inherited bins keep costs
         }
     }
-    for (bi, bin) in b.bins.iter().enumerate() {
-        let free: Vec<usize> =
-            bin.items.iter().copied().filter(|&i| !used[i]).collect();
-        if free.len() == bin.items.len() {
-            for &i in &free {
+    for bin in &b.bins {
+        if bin.items.iter().all(|&i| !used[i]) {
+            for &i in &bin.items {
                 used[i] = true;
             }
-            bins.push(Bin { items: free });
-            bin_costs.push(b.bin_costs[bi]);
+            cost += bin.cost;
+            bins.push(bin.clone());
         }
     }
     let todo: Vec<usize> = (0..items.len()).filter(|&i| !used[i]).collect();
-    let mut touched = Vec::new();
-    insert_all(items, &mut bins, todo, c, p, rng, &mut touched);
-    bin_costs.resize(bins.len(), 0);
-    touched.sort_unstable();
-    touched.dedup();
-    for bi in touched {
-        bin_costs[bi] = bin_brams(items, &bins[bi].items);
-    }
-    let cost = bin_costs.iter().sum();
-    Indiv { bins, bin_costs, cost }
+    insert_all(items, &mut bins, todo, c, p, rng, &mut cost);
+    Indiv { bins, cost }
 }
 
 /// Mutation: dissolve a few random bins and re-insert their items.
@@ -229,18 +337,11 @@ fn mutate(items: &[PackItem], ind: &mut Indiv, c: &Constraints, p: &GaParams, rn
             break;
         }
         let bi = rng.range(0, ind.bins.len());
-        todo.extend(ind.bins.swap_remove(bi).items);
-        ind.bin_costs.swap_remove(bi);
+        let b = ind.bins.swap_remove(bi);
+        ind.cost -= b.cost;
+        todo.extend(b.items);
     }
-    let mut touched = Vec::new();
-    insert_all(items, &mut ind.bins, todo, c, p, rng, &mut touched);
-    ind.bin_costs.resize(ind.bins.len(), 0);
-    touched.sort_unstable();
-    touched.dedup();
-    for bi in touched {
-        ind.bin_costs[bi] = bin_brams(items, &ind.bins[bi].items);
-    }
-    ind.cost = ind.bin_costs.iter().sum();
+    insert_all(items, &mut ind.bins, todo, c, p, rng, &mut ind.cost);
 }
 
 fn tournament<'a>(pop: &'a [Indiv], k: usize, rng: &mut Rng) -> &'a Indiv {
@@ -254,6 +355,97 @@ fn tournament<'a>(pop: &'a [Indiv], k: usize, rng: &mut Rng) -> &'a Indiv {
     best
 }
 
+/// One deme of the island model: its own population, elite and RNG stream.
+struct Island {
+    pop: Vec<Indiv>,
+    best: Indiv,
+    rng: Rng,
+}
+
+fn init_island(
+    items: &[PackItem],
+    c: &Constraints,
+    p: &GaParams,
+    island_pop: usize,
+    ffd: &Indiv,
+    isl: &mut Island,
+) {
+    // randomized constructions plus one deterministic FFD solution per deme
+    // (no deme ever starts worse than the baseline)
+    isl.pop = (0..island_pop.max(2) - 1)
+        .map(|_| random_individual(items, c, p, &mut isl.rng))
+        .collect();
+    isl.pop.push(ffd.clone());
+    let bi = (0..isl.pop.len()).min_by_key(|&i| isl.pop[i].cost).unwrap();
+    isl.best = isl.pop[bi].clone();
+}
+
+fn evolve(items: &[PackItem], c: &Constraints, p: &GaParams, isl: &mut Island, gens: usize) {
+    for _gen in 0..gens {
+        let mut next = Vec::with_capacity(isl.pop.len());
+        next.push(isl.best.clone()); // elitism
+        while next.len() < isl.pop.len() {
+            let a = tournament(&isl.pop, p.tournament, &mut isl.rng);
+            let b = tournament(&isl.pop, p.tournament, &mut isl.rng);
+            let mut child = crossover(items, a, b, c, p, &mut isl.rng);
+            if isl.rng.chance(p.p_mut) {
+                mutate(items, &mut child, c, p, &mut isl.rng);
+            }
+            if p.full_recompute {
+                refit_full(items, &mut child);
+            }
+            next.push(child);
+        }
+        isl.pop = next;
+        let gi = (0..isl.pop.len()).min_by_key(|&i| isl.pop[i].cost).unwrap();
+        if isl.pop[gi].cost < isl.best.cost {
+            isl.best = isl.pop[gi].clone();
+        }
+    }
+}
+
+/// Deterministic ring migration: deme `i` receives the elite of deme `i−1`
+/// (mod N), replacing its current worst individual.
+fn migrate(islands: &mut [Island]) {
+    let elites: Vec<Indiv> = islands.iter().map(|isl| isl.best.clone()).collect();
+    let n = islands.len();
+    for (i, isl) in islands.iter_mut().enumerate() {
+        let migrant = &elites[(i + n - 1) % n];
+        if let Some(wi) = (0..isl.pop.len()).max_by_key(|&j| isl.pop[j].cost) {
+            isl.pop[wi] = migrant.clone();
+        }
+        if migrant.cost < isl.best.cost {
+            isl.best = migrant.clone();
+        }
+    }
+}
+
+/// Apply `f` to every island, fanning out across at most `threads` scoped
+/// workers. Demes are data-independent, so the schedule cannot affect the
+/// result — only the wall clock.
+fn for_each_island<F>(islands: &mut [Island], threads: usize, f: F)
+where
+    F: Fn(&mut Island) + Sync,
+{
+    if threads <= 1 || islands.len() <= 1 {
+        for isl in islands.iter_mut() {
+            f(isl);
+        }
+        return;
+    }
+    let chunk = (islands.len() + threads - 1) / threads;
+    let fr = &f;
+    std::thread::scope(|s| {
+        for part in islands.chunks_mut(chunk) {
+            s.spawn(move || {
+                for isl in part {
+                    fr(isl);
+                }
+            });
+        }
+    });
+}
+
 impl Packer for Ga {
     fn name(&self) -> &'static str {
         "ga"
@@ -263,38 +455,51 @@ impl Packer for Ga {
         if items.is_empty() {
             return Packing::default();
         }
-        let p = &self.params;
-        let mut rng = Rng::new(p.seed);
+        let p = self.params;
+        let n_islands = p.islands.max(1);
+        let epoch = p.migration_interval.max(1);
+        // demes share the Table III population budget (Kroes-style split);
+        // a floor keeps tournament selection meaningful in small demes
+        let island_pop = if n_islands == 1 {
+            p.population.max(2)
+        } else {
+            (p.population / n_islands).max(8)
+        };
+        let threads = self.worker_count(n_islands);
 
-        // seed the population with randomized constructions plus one
-        // deterministic FFD solution (never start worse than the baseline)
-        let mut pop: Vec<Indiv> = (0..p.population.max(2) - 1)
-            .map(|_| random_individual(items, c, p, &mut rng))
-            .collect();
         let ffd = super::ffd::Ffd::new().pack(items, c);
-        debug_assert_eq!(total_cost(items, &ffd.bins), Indiv::from_bins(items, ffd.bins.clone()).cost);
-        pop.push(Indiv::from_bins(items, ffd.bins));
+        let ffd_ind = Indiv::from_packing(items, ffd.bins);
+        // the cached-cost path must agree with a from-scratch re-derivation
+        debug_assert_eq!(ffd_ind.cost, total_cost(items, &ffd_ind.bins));
 
-        let mut best = pop.iter().min_by_key(|i| i.cost).unwrap().clone();
-        for _gen in 0..p.generations {
-            let mut next = Vec::with_capacity(pop.len());
-            next.push(best.clone()); // elitism
-            while next.len() < pop.len() {
-                let a = tournament(&pop, p.tournament, &mut rng);
-                let b = tournament(&pop, p.tournament, &mut rng);
-                let mut child = crossover(items, a, b, c, p, &mut rng);
-                if rng.chance(p.p_mut) {
-                    mutate(items, &mut child, c, p, &mut rng);
-                }
-                next.push(child);
-            }
-            pop = next;
-            let gen_best = pop.iter().min_by_key(|i| i.cost).unwrap();
-            if gen_best.cost < best.cost {
-                best = gen_best.clone();
+        let mut islands: Vec<Island> = (0..n_islands)
+            .map(|i| Island {
+                pop: Vec::new(),
+                best: ffd_ind.clone(),
+                rng: Rng::for_stream(p.seed, i as u64),
+            })
+            .collect();
+
+        let ffd_ref = &ffd_ind;
+        for_each_island(&mut islands, threads, |isl| {
+            init_island(items, c, &p, island_pop, ffd_ref, isl)
+        });
+
+        let mut done = 0;
+        while done < p.generations {
+            let gens = epoch.min(p.generations - done);
+            for_each_island(&mut islands, threads, |isl| evolve(items, c, &p, isl, gens));
+            done += gens;
+            if done < p.generations && n_islands > 1 {
+                migrate(&mut islands);
             }
         }
-        Packing { bins: best.bins }
+
+        let best = islands.iter().map(|isl| &isl.best).min_by_key(|b| b.cost).unwrap();
+        debug_assert_eq!(best.cost, total_cost(items, &best.bins));
+        Packing {
+            bins: best.bins.iter().map(|b| Bin { items: b.items.clone() }).collect(),
+        }
     }
 }
 
@@ -357,6 +562,59 @@ mod tests {
                 b.items.iter().all(|&i| items[i].width_bits == w0),
                 "P_adm_w=0 must keep widths uniform: {b:?}"
             );
+        }
+    }
+
+    #[test]
+    fn island_ga_beats_or_matches_ffd() {
+        let depths = [36u64, 72, 144, 288, 36, 72, 450, 100, 260, 36, 512, 90, 64, 200];
+        let specs: Vec<(u64, u64)> = depths.iter().map(|&d| (36, d)).collect();
+        let items = test_items(&specs);
+        let c = Constraints::new(4, false);
+        let params = quick(5).with_islands(4);
+        let (p, r) = run_packer(&Ga::new(params), &items, &c);
+        let (_, ffd) = run_packer(&super::super::ffd::Ffd::new(), &items, &c);
+        assert!(r.brams <= ffd.brams, "island ga {} vs ffd {}", r.brams, ffd.brams);
+        assert!(p.validate(&items, &c).is_ok());
+    }
+
+    #[test]
+    fn island_ga_identical_across_thread_counts() {
+        let items = test_items(&[
+            (36, 100),
+            (36, 412),
+            (18, 300),
+            (36, 80),
+            (9, 950),
+            (36, 220),
+            (18, 64),
+            (36, 500),
+        ]);
+        let c = Constraints::new(4, false);
+        let params = GaParams { generations: 24, seed: 9, ..GaParams::cnv() }.with_islands(3);
+        let a = Ga::new(params).with_threads(1).pack(&items, &c);
+        let b = Ga::new(params).with_threads(2).pack(&items, &c);
+        let d = Ga::new(params).with_threads(8).pack(&items, &c);
+        assert_eq!(a, b, "1 vs 2 threads diverged");
+        assert_eq!(b, d, "2 vs 8 threads diverged");
+    }
+
+    #[test]
+    fn full_recompute_arm_matches_incremental_cost_quality() {
+        // the ablation arm changes how fitness is computed, not what it is:
+        // both paths must report costs that re-derive exactly
+        let items = test_items(&[(36, 90), (36, 320), (18, 700), (36, 128), (9, 1800), (36, 40)]);
+        let c = Constraints::new(3, false);
+        for full in [false, true] {
+            let params = GaParams {
+                generations: 20,
+                population: 16,
+                full_recompute: full,
+                ..GaParams::cnv()
+            };
+            let (p, r) = run_packer(&Ga::new(params), &items, &c);
+            assert_eq!(p.total_brams(&items), r.brams, "full={full}");
+            assert!(p.validate(&items, &c).is_ok(), "full={full}");
         }
     }
 }

@@ -13,7 +13,16 @@
 //! * [`bnb`]    — branch-and-bound (MemPacker, Karchmer & Rose; exact,
 //!                exponential — small inputs only);
 //! * [`ga`]     — the grouping genetic algorithm of [18] (Kroes et al.),
-//!                with the Table III hyper-parameters as defaults.
+//!                with the Table III hyper-parameters as defaults, extended
+//!                to a parallel island model (`GaParams::islands` demes on
+//!                scoped worker threads, deterministic ring migration) with
+//!                incremental delta-cost fitness. See the module docs for
+//!                the determinism contract.
+//!
+//! All engines cost bins through the memoized
+//! [`crate::device::bram::brams_for`] shape table and run behind the same
+//! [`Packer`]/[`run_packer`] interface, so sweeps over (topology × H_B ×
+//! device) points swap engines freely.
 
 pub mod anneal;
 pub mod bnb;
@@ -44,7 +53,7 @@ impl Constraints {
 }
 
 /// One physical BRAM structure holding co-located item slices.
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Bin {
     /// Indices into the packing's item slice.
     pub items: Vec<usize>,
@@ -63,8 +72,10 @@ pub fn bin_brams(items: &[PackItem], members: &[usize]) -> u64 {
     brams_for(w, d)
 }
 
-/// A complete packing solution.
-#[derive(Clone, Debug, Default)]
+/// A complete packing solution. Equality is structural (bin-by-bin, in
+/// order), which is what the island-GA determinism contract asserts on:
+/// identical `(seed, islands)` must yield *byte-identical* packings.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Packing {
     pub bins: Vec<Bin>,
 }

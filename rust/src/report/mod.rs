@@ -59,6 +59,21 @@ pub fn default_ga(net: &Network) -> packing::ga::Ga {
     }
 }
 
+/// Island-parallel default engine: same Table III parameters, split across
+/// `islands` demes evolved on up to `threads` workers (0 = all cores). The
+/// packing depends only on `(params, islands)` — never on `threads` — so
+/// report tables stay reproducible across machines.
+pub fn default_ga_parallel(net: &Network, islands: usize, threads: usize) -> packing::ga::Ga {
+    let mut g = default_ga(net);
+    g.params = g.params.with_islands(islands);
+    g.threads = threads;
+    g
+}
+
+/// Islands used by the report tables: fixed (for reproducibility of the
+/// table values), sized so RN50-class sweeps saturate a small desktop.
+pub const REPORT_ISLANDS: usize = 4;
+
 /// Table I — resource utilization of FINN accelerators on Zynq 7020.
 pub fn table1() -> Table {
     let dev = device::zynq_7020();
@@ -188,33 +203,34 @@ pub fn table4(generations: usize) -> Table {
     let mut t = Table::new([
         "accelerator", "logic kLUT", "BRAM18", "E %", "paper BRAM18", "paper E %",
     ]);
-    let mut add = |name: &str, net: &Network, dev: &Device, hb: usize, paper_brams: &str, paper_e: &str| {
-        let mut ga = default_ga(net);
-        ga.params.generations = generations;
-        if hb == 0 {
-            let bufs = memory::weight_buffers(net, dev.slrs.len());
-            let brams = memory::direct_brams(&bufs);
-            let eff = memory::efficiency(memory::total_bits(&bufs), brams);
-            t.row([
-                name.to_string(),
-                "-".into(),
-                format!("{brams}"),
-                format!("{:.1}", 100.0 * eff),
-                paper_brams.to_string(),
-                paper_e.to_string(),
-            ]);
-        } else {
-            let out = pack_network(net, dev, &ga, hb);
-            t.row([
-                name.to_string(),
-                format!("{:.1}", out.logic_kluts),
-                format!("{}", out.report.brams),
-                format!("{:.1}", 100.0 * out.report.efficiency),
-                paper_brams.to_string(),
-                paper_e.to_string(),
-            ]);
-        }
-    };
+    let mut add =
+        |name: &str, net: &Network, dev: &Device, hb: usize, paper_brams: &str, paper_e: &str| {
+            let mut ga = default_ga_parallel(net, REPORT_ISLANDS, 0);
+            ga.params.generations = generations;
+            if hb == 0 {
+                let bufs = memory::weight_buffers(net, dev.slrs.len());
+                let brams = memory::direct_brams(&bufs);
+                let eff = memory::efficiency(memory::total_bits(&bufs), brams);
+                t.row([
+                    name.to_string(),
+                    "-".into(),
+                    format!("{brams}"),
+                    format!("{:.1}", 100.0 * eff),
+                    paper_brams.to_string(),
+                    paper_e.to_string(),
+                ]);
+            } else {
+                let out = pack_network(net, dev, &ga, hb);
+                t.row([
+                    name.to_string(),
+                    format!("{:.1}", out.logic_kluts),
+                    format!("{}", out.report.brams),
+                    format!("{:.1}", 100.0 * out.report.efficiency),
+                    paper_brams.to_string(),
+                    paper_e.to_string(),
+                ]);
+            }
+        };
     let z = device::zynq_7020();
     let u250 = device::alveo_u250();
     let u280 = device::alveo_u280();
@@ -250,18 +266,53 @@ pub fn table5(generations: usize) -> Table {
         paper: &'static str,
     }
     let rows = vec![
-        Row { name: "CNV-W1A1-7020-P4", net: cnv(CnvVariant::W1A1), dev: device::zynq_7020(), hb: 4, folded: false, paper: "100/200/0" },
-        Row { name: "CNV-W1A1-7012S-P4", net: cnv(CnvVariant::W1A1), dev: device::zynq_7012s(), hb: 4, folded: false, paper: "100/200/0" },
-        Row { name: "RN50-W1A2-U250-P4", net: resnet50(1), dev: device::alveo_u250(), hb: 4, folded: false, paper: "183/363/12" },
-        Row { name: "RN50-W1A2-U280-P4", net: resnet50(1), dev: device::alveo_u280(), hb: 4, folded: false, paper: "138/373/32" },
-        Row { name: "RN50-W1A2-U280-F2", net: resnet50(1).fold2(), dev: device::alveo_u280(), hb: 0, folded: true, paper: "191/-/51" },
+        Row {
+            name: "CNV-W1A1-7020-P4",
+            net: cnv(CnvVariant::W1A1),
+            dev: device::zynq_7020(),
+            hb: 4,
+            folded: false,
+            paper: "100/200/0",
+        },
+        Row {
+            name: "CNV-W1A1-7012S-P4",
+            net: cnv(CnvVariant::W1A1),
+            dev: device::zynq_7012s(),
+            hb: 4,
+            folded: false,
+            paper: "100/200/0",
+        },
+        Row {
+            name: "RN50-W1A2-U250-P4",
+            net: resnet50(1),
+            dev: device::alveo_u250(),
+            hb: 4,
+            folded: false,
+            paper: "183/363/12",
+        },
+        Row {
+            name: "RN50-W1A2-U280-P4",
+            net: resnet50(1),
+            dev: device::alveo_u280(),
+            hb: 4,
+            folded: false,
+            paper: "138/373/32",
+        },
+        Row {
+            name: "RN50-W1A2-U280-F2",
+            net: resnet50(1).fold2(),
+            dev: device::alveo_u280(),
+            hb: 0,
+            folded: true,
+            paper: "191/-/51",
+        },
     ];
     for r in rows {
         let fc_target = r.dev.nominal_compute_mhz;
         let baseline = fc_target;
         let res = network_resources(&r.net, &r.dev);
         let (brams, logic_kluts, rf) = if r.hb > 0 {
-            let mut ga = default_ga(&r.net);
+            let mut ga = default_ga_parallel(&r.net, REPORT_ISLANDS, 0);
             ga.params.generations = generations;
             let out = pack_network(&r.net, &r.dev, &ga, r.hb);
             let fifo_brams = 2 * r.net.stages.len() as u64;
@@ -324,5 +375,21 @@ mod tests {
         let out = pack_network(&net, &dev, &ga, 4);
         assert!(out.report.brams < out.baseline_brams);
         assert!(out.report.efficiency > out.baseline_eff);
+    }
+
+    #[test]
+    fn default_ga_parallel_is_thread_invariant() {
+        // the report tables must print the same numbers on a laptop and a
+        // 128-core box: worker count is an execution knob, not a parameter
+        let net = cnv(CnvVariant::W1A1);
+        let dev = device::zynq_7020();
+        let mut a = default_ga_parallel(&net, REPORT_ISLANDS, 1);
+        a.params.generations = 10;
+        let mut b = default_ga_parallel(&net, REPORT_ISLANDS, 2);
+        b.params.generations = 10;
+        let oa = pack_network(&net, &dev, &a, 4);
+        let ob = pack_network(&net, &dev, &b, 4);
+        assert_eq!(oa.packing, ob.packing);
+        assert_eq!(oa.report.brams, ob.report.brams);
     }
 }

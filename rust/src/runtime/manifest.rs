@@ -68,7 +68,9 @@ impl Manifest {
                         .first()
                         .ok_or_else(|| anyhow!("line {}: hlo wants batch", no + 1))?
                         .parse()?;
-                    let file = rest.get(1).ok_or_else(|| anyhow!("line {}: hlo wants file", no + 1))?;
+                    let file = rest
+                        .get(1)
+                        .ok_or_else(|| anyhow!("line {}: hlo wants file", no + 1))?;
                     m.hlo.push((batch, file.to_string()));
                 }
                 "param" | "arg" | "expect" => {
@@ -134,7 +136,10 @@ golden golden/cnv_w1a1.in.bin golden/cnv_w1a1.out.bin
     fn parses_model_manifest() {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert_eq!(m.model, "cnv_w1a1");
-        assert_eq!(m.hlo, vec![(1, "cnv_w1a1.b1.hlo.txt".into()), (4, "cnv_w1a1.b4.hlo.txt".into())]);
+        assert_eq!(
+            m.hlo,
+            vec![(1, "cnv_w1a1.b1.hlo.txt".into()), (4, "cnv_w1a1.b4.hlo.txt".into())]
+        );
         assert_eq!(m.params.len(), 2);
         assert_eq!(m.params[0].elements(), 27 * 64);
         assert_eq!(m.input_elements_per_sample(), 32 * 32 * 3);

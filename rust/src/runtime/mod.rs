@@ -8,12 +8,16 @@
 //! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
 
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
 use std::path::{Path, PathBuf};
 
 use crate::Result;
 use anyhow::{anyhow, Context};
 pub use manifest::{Manifest, TensorSpec};
+#[cfg(not(feature = "pjrt"))]
+use stub as xla;
 
 /// Read a little-endian f32 `.bin` tensor file.
 pub fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {

@@ -50,6 +50,37 @@ pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult 
     BenchResult { name: name.to_string(), per_iter_secs: summarize(&samples) }
 }
 
+/// Serialize bench results as a JSON array (serde is unavailable offline;
+/// the fields are flat floats/ints, so hand-rolling is safe). `{:?}` on the
+/// name produces a quoted, escaped string — valid JSON for any name.
+pub fn to_json(results: &[BenchResult]) -> String {
+    let mut out = String::from("[");
+    for (k, r) in results.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        let s = &r.per_iter_secs;
+        out.push_str(&format!(
+            "{{\"name\":{:?},\"mean_ms\":{:.6},\"median_ms\":{:.6},\"stddev_ms\":{:.6},\"min_ms\":{:.6},\"max_ms\":{:.6},\"samples\":{}}}",
+            r.name,
+            s.mean * 1e3,
+            s.median * 1e3,
+            s.stddev * 1e3,
+            s.min * 1e3,
+            s.max * 1e3,
+            s.n
+        ));
+    }
+    out.push(']');
+    out
+}
+
+/// Write bench results as JSON (the CI perf-trajectory artifact, e.g.
+/// `BENCH_packing.json` from `benches/packer_ablation.rs`).
+pub fn write_json(path: &std::path::Path, results: &[BenchResult]) -> std::io::Result<()> {
+    std::fs::write(path, to_json(results))
+}
+
 /// Print a standard bench summary line.
 pub fn report(r: &BenchResult) {
     let s = &r.per_iter_secs;
@@ -145,6 +176,22 @@ mod tests {
         let s = t.render();
         assert!(s.contains("| name        | value |"));
         assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn json_output_is_well_formed() {
+        let r = bench(
+            "js\"on", // name needing escaping
+            BenchConfig { warmup_iters: 0, samples: 2, iters_per_sample: 1 },
+            || {
+                std::hint::black_box(1 + 1);
+            },
+        );
+        let j = to_json(&[r.clone(), r]);
+        assert!(j.starts_with('[') && j.ends_with(']'));
+        assert!(j.contains("\"mean_ms\":"));
+        assert!(j.contains("js\\\"on"), "{j}");
+        assert_eq!(j.matches("\"samples\":2").count(), 2);
     }
 
     #[test]

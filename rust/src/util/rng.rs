@@ -37,6 +37,17 @@ impl Rng {
         Rng::new(self.next_u64())
     }
 
+    /// Deterministic generator for stream `stream` of `seed`, independent of
+    /// any other stream. Unlike [`Rng::split`] there is no sequential
+    /// dependency between streams, so parallel workers (the island GA demes)
+    /// can each construct their own generator from (seed, index) and the
+    /// result is identical no matter how work is scheduled onto threads.
+    pub fn for_stream(seed: u64, stream: u64) -> Rng {
+        let mut sm = seed;
+        let base = splitmix64(&mut sm);
+        Rng::new(base ^ stream.wrapping_add(1).wrapping_mul(0xD1B54A32D192ED03))
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -178,5 +189,24 @@ mod tests {
         let mut a = root.split();
         let mut b = root.split();
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn for_stream_is_deterministic_and_distinct() {
+        let mut a = Rng::for_stream(2020, 3);
+        let mut b = Rng::for_stream(2020, 3);
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let firsts: Vec<u64> =
+            (0..8).map(|s| Rng::for_stream(2020, s).next_u64()).collect();
+        let mut uniq = firsts.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), firsts.len(), "streams collide: {firsts:?}");
+        assert_ne!(
+            Rng::for_stream(2020, 0).next_u64(),
+            Rng::for_stream(2021, 0).next_u64()
+        );
     }
 }

@@ -101,6 +101,46 @@ fn prop_engines_sound_and_bounded() {
     });
 }
 
+/// Island-model GA determinism contract: for a fixed `(seed, islands)` the
+/// packing is byte-identical across repeated runs AND across worker-thread
+/// counts, and always structurally valid, under H_B ∈ {2,3,4} with and
+/// without SLR locality.
+#[test]
+fn prop_island_ga_deterministic_and_valid() {
+    check(17, 8, gen_items, |set| {
+        let items = to_items(set);
+        for hb in [2usize, 3, 4] {
+            for same_slr in [false, true] {
+                let c = Constraints::new(hb, same_slr);
+                let params = ga::GaParams {
+                    generations: 12,
+                    population: 24,
+                    migration_interval: 4,
+                    ..ga::GaParams::cnv()
+                }
+                .with_islands(3);
+                let a = ga::Ga::new(params).with_threads(1).pack(&items, &c);
+                let b = ga::Ga::new(params).with_threads(2).pack(&items, &c);
+                let b2 = ga::Ga::new(params).with_threads(2).pack(&items, &c);
+                if a != b {
+                    return Err(format!(
+                        "hb={hb} slr={same_slr}: 1-thread and 2-thread packings differ"
+                    ));
+                }
+                if b != b2 {
+                    return Err(format!(
+                        "hb={hb} slr={same_slr}: repeated 2-thread runs differ"
+                    ));
+                }
+                if let Err(e) = a.validate(&items, &c) {
+                    return Err(format!("hb={hb} slr={same_slr}: invalid: {e}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Larger H_B never hurts the GA solution (more freedom).
 #[test]
 fn prop_bin_height_monotone() {
