@@ -1,6 +1,8 @@
-//! Dynamic batcher: greedily drains the request queue up to `max_batch`,
-//! waiting at most `max_wait` for stragglers once the first request of a
-//! batch has arrived (the classic size-or-deadline policy).
+//! Dynamic batcher: greedily drains a replica's request queue up to
+//! `max_batch`, waiting at most `max_wait` for stragglers once the first
+//! request of a batch has arrived (the classic size-or-deadline policy).
+//! Every replica of the fleet runs its own batcher over its own bounded
+//! queue, so batch formation never crosses replicas.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};

@@ -1,0 +1,126 @@
+//! Analytic per-replica capacity estimates for heterogeneous fleets.
+//!
+//! The paper's headline result is porting one accelerator across devices by
+//! trading throughput for OCM (FCMP), so a realistic deployment is a fleet
+//! of replicas with *different* per-device throughput: a U250 replica at 63%
+//! LUT density closes timing near target while the same design squeezed onto
+//! a U280 at 99% density gives up ~32% of its clock (Table V). This module
+//! turns each replica's deployment point into a requests/s capacity via the
+//! analytic [`crate::timing`] closure model and [`crate::sim`] pipeline
+//! estimate, and those capacities become the weights of the
+//! throughput-weighted scheduling policy
+//! ([`crate::coordinator::policy::Policy::Weighted`]).
+
+use crate::device::Device;
+use crate::nn::Network;
+use crate::{sim, timing};
+
+/// One replica's deployment configuration: the device it runs on and the
+/// FCMP operating point reached on that device.
+#[derive(Clone, Debug)]
+pub struct ReplicaSpec {
+    /// The FPGA part hosting this replica.
+    pub device: Device,
+    /// Required memory/compute frequency ratio `R_F = H_B / 2` (Eq. 2);
+    /// 1.0 means the unpacked design with no overclocked memory domain.
+    pub rf: f64,
+    /// Post-P&R LUT utilization density driving the timing-closure model.
+    pub lut_util: f64,
+}
+
+impl ReplicaSpec {
+    /// The paper's Table V operating point for a device: H_B = 4 packing
+    /// (`R_F = 2`) at the published post-P&R LUT density of the FCMP design
+    /// evaluated on that part (58% on the 7020, 90% on the 7012S, 63% on
+    /// the U250, 99% on the U280; 70% for unknown parts).
+    pub fn paper_point(device: Device) -> ReplicaSpec {
+        let lut_util = match device.name {
+            "zynq-7020" => 0.58,
+            "zynq-7012s" => 0.90,
+            "alveo-u250" => 0.63,
+            "alveo-u280" => 0.99,
+            _ => 0.70,
+        };
+        ReplicaSpec { device, rf: 2.0, lut_util }
+    }
+}
+
+/// Analytic throughput (frames/s) of `net` deployed at `spec`: the timing
+/// model yields the effective compute clock after memory-side throttling
+/// (`min(F_c, F_m / R_F)`), and the pipeline model converts clock to FPS.
+pub fn replica_fps(net: &Network, spec: &ReplicaSpec) -> f64 {
+    let target = spec.device.nominal_compute_mhz;
+    let t = timing::evaluate(&spec.device, spec.lut_util, target, spec.rf, target);
+    sim::estimate(net, t.effective_fc_mhz).fps
+}
+
+/// Capacity weights for a heterogeneous fleet, mean-normalized to 1.0 so
+/// the weighted policy's credit arithmetic stays well-conditioned no matter
+/// how large the absolute FPS numbers are.
+pub fn fleet_weights(net: &Network, specs: &[ReplicaSpec]) -> Vec<f64> {
+    if specs.is_empty() {
+        return Vec::new();
+    }
+    let fps: Vec<f64> = specs.iter().map(|s| replica_fps(net, s)).collect();
+    let mean = fps.iter().sum::<f64>() / fps.len() as f64;
+    fps.iter().map(|f| f / mean.max(1e-12)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{alveo_u250, alveo_u280, zynq_7012s, zynq_7020};
+    use crate::nn::{cnv, resnet50, CnvVariant};
+
+    #[test]
+    fn dense_u280_port_is_slower_than_u250() {
+        // Table V: U250 P4 loses ~9-12% of its clock, U280 P4 loses ~32%
+        let net = resnet50(1);
+        let specs = [
+            ReplicaSpec::paper_point(alveo_u250()),
+            ReplicaSpec::paper_point(alveo_u280()),
+        ];
+        let w = fleet_weights(&net, &specs);
+        assert!(w[0] > w[1], "U250 {} should out-weigh U280 {}", w[0], w[1]);
+        let mean: f64 = w.iter().sum::<f64>() / w.len() as f64;
+        assert!((mean - 1.0).abs() < 1e-9, "weights must be mean-normalized");
+    }
+
+    #[test]
+    fn embedded_ports_close_timing_and_match() {
+        // both Zynq parts close at 100/200 MHz => identical capacity
+        let net = cnv(CnvVariant::W1A1);
+        let a = replica_fps(&net, &ReplicaSpec::paper_point(zynq_7020()));
+        let b = replica_fps(&net, &ReplicaSpec::paper_point(zynq_7012s()));
+        assert!(a > 0.0);
+        assert!((a - b).abs() < 1e-6, "7020 {a} vs 7012s {b}");
+    }
+
+    #[test]
+    fn capacity_is_deterministic_and_positive() {
+        let net = cnv(CnvVariant::W2A2);
+        for dev in crate::device::all() {
+            let spec = ReplicaSpec::paper_point(dev);
+            let a = replica_fps(&net, &spec);
+            let b = replica_fps(&net, &spec);
+            assert!(a > 0.0, "{}: fps {a}", spec.device.name);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn unpacked_rf1_never_slower_than_packed_rf2() {
+        // dropping the overclocked memory domain can only relax the clock
+        let net = resnet50(1);
+        for dev in [alveo_u250(), alveo_u280()] {
+            let packed = ReplicaSpec { device: dev.clone(), rf: 2.0, lut_util: 0.63 };
+            let unpacked = ReplicaSpec { device: dev, rf: 1.0, lut_util: 0.63 };
+            assert!(replica_fps(&net, &unpacked) >= replica_fps(&net, &packed) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_fleet_has_no_weights() {
+        assert!(fleet_weights(&cnv(CnvVariant::W1A1), &[]).is_empty());
+    }
+}

@@ -1,10 +1,14 @@
-//! Serving metrics: latency distribution, throughput, batch-size histogram.
+//! Serving metrics: latency percentiles, throughput and batch-size
+//! statistics — per replica and fleet-wide — plus the admission-control
+//! counters (submitted / shed) the overload experiments report.
 
 use std::time::Duration;
 
+use super::Completion;
 use crate::util::stats::{summarize, Summary};
 
-/// Collects per-request completions.
+/// Collects per-request completions for one stream (one replica, or the
+/// whole fleet when driven through [`FleetMetrics`]).
 #[derive(Default)]
 pub struct Metrics {
     latencies_ms: Vec<f64>,
@@ -13,35 +17,48 @@ pub struct Metrics {
     finished: Option<std::time::Instant>,
 }
 
-/// Final serving summary (the e2e numbers EXPERIMENTS.md records).
+/// Final serving summary for one stream: request count, wall-clock span,
+/// throughput, the latency distribution (p50/p95/p99 via
+/// [`crate::util::stats::Summary`]) and the mean ridden batch size.
 #[derive(Clone, Debug)]
 pub struct ServeSummary {
+    /// Completions recorded.
     pub requests: usize,
+    /// Wall-clock seconds from [`Metrics::start`] to the last completion.
     pub wall_s: f64,
+    /// `requests / wall_s`.
     pub throughput_fps: f64,
+    /// Latency distribution in milliseconds (median = p50, plus p95/p99).
     pub latency_ms: Summary,
+    /// Mean size of the batches the requests rode in.
     pub mean_batch: f64,
 }
 
 impl Metrics {
+    /// Empty collector.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Mark the start of the measurement window.
     pub fn start(&mut self) {
         self.started = Some(std::time::Instant::now());
     }
 
+    /// Record one completion.
     pub fn record(&mut self, latency: Duration, batch_size: usize) {
         self.latencies_ms.push(latency.as_secs_f64() * 1e3);
         self.batch_sizes.push(batch_size);
         self.finished = Some(std::time::Instant::now());
     }
 
+    /// Completions recorded so far.
     pub fn count(&self) -> usize {
         self.latencies_ms.len()
     }
 
+    /// Summarize; panics when nothing was recorded (see
+    /// [`Metrics::try_summary`] for the non-panicking form).
     pub fn summary(&self) -> ServeSummary {
         assert!(!self.latencies_ms.is_empty(), "no completions recorded");
         let wall = match (self.started, self.finished) {
@@ -55,6 +72,15 @@ impl Metrics {
             latency_ms: summarize(&self.latencies_ms),
             mean_batch: self.batch_sizes.iter().sum::<usize>() as f64
                 / self.batch_sizes.len() as f64,
+        }
+    }
+
+    /// Summarize, or `None` when nothing was recorded (idle replicas).
+    pub fn try_summary(&self) -> Option<ServeSummary> {
+        if self.latencies_ms.is_empty() {
+            None
+        } else {
+            Some(self.summary())
         }
     }
 }
@@ -73,6 +99,112 @@ impl std::fmt::Display for ServeSummary {
             self.latency_ms.max,
             self.mean_batch
         )
+    }
+}
+
+/// Fleet-wide metrics: one [`Metrics`] per replica, one for the whole
+/// fleet, and the admission-control counters.
+pub struct FleetMetrics {
+    fleet: Metrics,
+    per_replica: Vec<Metrics>,
+    submitted: usize,
+    shed: usize,
+}
+
+/// Fleet summary: the fleet-wide view plus per-replica breakdowns (idle
+/// replicas report `None`) and the admission-control counters.
+#[derive(Clone, Debug)]
+pub struct FleetSummary {
+    /// Fleet-wide summary; `None` when nothing completed.
+    pub fleet: Option<ServeSummary>,
+    /// Per-replica summaries; `None` for replicas that served nothing.
+    pub per_replica: Vec<Option<ServeSummary>>,
+    /// Requests accepted by admission control.
+    pub submitted: usize,
+    /// Requests shed because every replica queue was full.
+    pub shed: usize,
+}
+
+impl FleetMetrics {
+    /// Empty collectors for a fleet of `replicas` workers.
+    pub fn new(replicas: usize) -> FleetMetrics {
+        FleetMetrics {
+            fleet: Metrics::new(),
+            per_replica: (0..replicas).map(|_| Metrics::new()).collect(),
+            submitted: 0,
+            shed: 0,
+        }
+    }
+
+    /// Mark the start of the measurement window on every collector.
+    pub fn start(&mut self) {
+        self.fleet.start();
+        for m in &mut self.per_replica {
+            m.start();
+        }
+    }
+
+    /// Record a completion against the fleet and its serving replica.
+    pub fn record(&mut self, c: &Completion) {
+        self.fleet.record(c.latency, c.batch_size);
+        if let Some(m) = self.per_replica.get_mut(c.replica) {
+            m.record(c.latency, c.batch_size);
+        }
+    }
+
+    /// Count one accepted submission.
+    pub fn record_submitted(&mut self) {
+        self.submitted += 1;
+    }
+
+    /// Count one shed (admission-control rejected) submission.
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// Completions recorded so far.
+    pub fn completed(&self) -> usize {
+        self.fleet.count()
+    }
+
+    /// Accepted submissions so far.
+    pub fn submitted(&self) -> usize {
+        self.submitted
+    }
+
+    /// Shed submissions so far.
+    pub fn shed(&self) -> usize {
+        self.shed
+    }
+
+    /// Summarize fleet and replicas.
+    pub fn summary(&self) -> FleetSummary {
+        FleetSummary {
+            fleet: self.fleet.try_summary(),
+            per_replica: self.per_replica.iter().map(Metrics::try_summary).collect(),
+            submitted: self.submitted,
+            shed: self.shed,
+        }
+    }
+}
+
+impl std::fmt::Display for FleetSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.fleet {
+            Some(s) => write!(f, "fleet: {s} | submitted {} shed {}", self.submitted, self.shed)?,
+            None => write!(
+                f,
+                "fleet: no completions | submitted {} shed {}",
+                self.submitted, self.shed
+            )?,
+        }
+        for (i, s) in self.per_replica.iter().enumerate() {
+            match s {
+                Some(s) => write!(f, "\n  replica {i}: {s}")?,
+                None => write!(f, "\n  replica {i}: idle")?,
+            }
+        }
+        Ok(())
     }
 }
 
@@ -98,5 +230,56 @@ mod tests {
     #[should_panic]
     fn empty_summary_panics() {
         Metrics::new().summary();
+    }
+
+    #[test]
+    fn try_summary_is_total() {
+        assert!(Metrics::new().try_summary().is_none());
+        let mut m = Metrics::new();
+        m.start();
+        m.record(Duration::from_millis(3), 1);
+        assert_eq!(m.try_summary().unwrap().requests, 1);
+    }
+
+    fn completion(id: u64, replica: usize, ms: u64, batch: usize) -> Completion {
+        Completion {
+            id,
+            output: vec![0.0],
+            latency: Duration::from_millis(ms),
+            batch_size: batch,
+            replica,
+        }
+    }
+
+    #[test]
+    fn fleet_metrics_split_by_replica() {
+        let mut fm = FleetMetrics::new(3);
+        fm.start();
+        for i in 0..6 {
+            fm.record_submitted();
+            fm.record(&completion(i, (i % 2) as usize, 5 + i, 2));
+        }
+        fm.record_shed();
+        assert_eq!(fm.completed(), 6);
+        assert_eq!(fm.submitted(), 6);
+        assert_eq!(fm.shed(), 1);
+        let s = fm.summary();
+        assert_eq!(s.fleet.as_ref().unwrap().requests, 6);
+        assert_eq!(s.per_replica[0].as_ref().unwrap().requests, 3);
+        assert_eq!(s.per_replica[1].as_ref().unwrap().requests, 3);
+        assert!(s.per_replica[2].is_none(), "replica 2 never served");
+        // the display renders fleet and per-replica lines
+        let text = format!("{s}");
+        assert!(text.contains("replica 2: idle"), "{text}");
+        assert!(text.contains("shed 1"), "{text}");
+    }
+
+    #[test]
+    fn out_of_range_replica_ignored_gracefully() {
+        let mut fm = FleetMetrics::new(1);
+        fm.start();
+        fm.record(&completion(0, 5, 1, 1));
+        assert_eq!(fm.completed(), 1);
+        assert!(fm.summary().per_replica[0].is_none());
     }
 }

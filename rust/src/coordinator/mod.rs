@@ -1,46 +1,75 @@
-//! Inference serving coordinator: request router, dynamic batcher, worker
-//! pool and metrics. This is the L3 request path — rust only, python never
-//! runs here (tokio is unavailable offline; std::thread + bounded mpsc
-//! channels provide the async substrate, see DESIGN.md substitutions).
+//! Multi-replica sharded serving coordinator — the L3 request path. Rust
+//! only, python never runs here (tokio is unavailable offline; std::thread +
+//! bounded mpsc channels provide the async substrate, see DESIGN.md
+//! substitutions).
 //!
-//! Architecture (vLLM-router-like, scaled to this paper's serving story):
+//! Architecture (data-center FPGA serving, scaled to this paper's porting
+//! story: one accelerator design deployed on a *heterogeneous* fleet of
+//! devices with different per-device throughput):
 //!
 //! ```text
-//!  clients ──> Router (bounded queue, backpressure)
-//!                 │ drain up to max_batch / wait up to max_wait
-//!                 v
-//!              Batcher ──> worker thread (owns the PJRT Engine)
-//!                 │                 │ infer(batch)
-//!                 v                 v
-//!              completions (per-request latency, batch size) ──> Metrics
+//!  clients ──> Server (router)
+//!                 │ admission control: bounded queues, shed on overload
+//!                 │ Scheduler: round-robin | join-shortest-queue | weighted
+//!                 │           (weights = analytic sim/timing capacity of
+//!                 │            each replica's device + FCMP configuration)
+//!        ┌────────┼─────────────┐
+//!        v        v             v
+//!   replica 0  replica 1 ... replica N-1     each: bounded queue
+//!        │        │             │                  → dynamic batcher
+//!        └────────┴──────┬──────┘                  → worker thread owning
+//!                        v                            its InferBackend
+//!              completions (id, latency, batch, replica)
+//!                        │
+//!                        v
+//!              FleetMetrics: p50/p95/p99 per replica + fleet-wide,
+//!                            submitted/shed counters
 //! ```
+//!
+//! Module map: [`policy`] (scheduling), `replica` (worker shard, private),
+//! [`capacity`] (analytic capacity weights), [`server`] (router, admission
+//! control, shutdown-drain), [`batcher`] (size-or-deadline batching),
+//! [`metrics`] (latency percentiles), [`workload`] (arrival traces).
 
 pub mod batcher;
+pub mod capacity;
 pub mod metrics;
+pub mod policy;
+mod replica;
 pub mod server;
 pub mod workload;
 
 pub use batcher::{Batch, BatcherConfig};
-pub use metrics::{Metrics, ServeSummary};
-pub use server::{InferBackend, Server, ServerConfig};
-pub use workload::{bursty, poisson, uniform, Trace};
+pub use capacity::{fleet_weights, replica_fps, ReplicaSpec};
+pub use metrics::{FleetMetrics, FleetSummary, Metrics, ServeSummary};
+pub use policy::{Policy, Scheduler};
+pub use server::{InferBackend, MockBackend, Server, ServerConfig, SubmitError};
+pub use workload::{bursty, heavy_tail, poisson, uniform, Trace};
 
 use std::time::Instant;
 
 /// One inference request.
+#[derive(Debug)]
 pub struct Request {
+    /// Caller-chosen identifier, echoed in the [`Completion`].
     pub id: u64,
     /// Flattened input image (f32, manifest sample element count).
     pub input: Vec<f32>,
+    /// Submission time (latency accounting starts here).
     pub arrival: Instant,
 }
 
 /// One completed inference.
+#[derive(Clone, Debug)]
 pub struct Completion {
+    /// The [`Request::id`] this completion answers.
     pub id: u64,
+    /// Flattened output row.
     pub output: Vec<f32>,
     /// Queue + batch + execute latency.
     pub latency: std::time::Duration,
     /// Size of the batch this request rode in.
     pub batch_size: usize,
+    /// Index of the replica that served it.
+    pub replica: usize,
 }

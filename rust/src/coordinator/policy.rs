@@ -1,0 +1,211 @@
+//! Pluggable scheduling policies for the multi-replica router.
+//!
+//! The router calls [`Scheduler::pick`] with the current per-replica
+//! outstanding-request counts and gets back the replica index to try first.
+//! All three policies are **deterministic**: given the same sequence of
+//! `pick` calls with the same observed counts they produce the same replica
+//! sequence, which is what the policy unit tests and the serving integration
+//! tests assert exact dispatch counts against.
+//!
+//! * [`Policy::RoundRobin`] — cycle through replicas in fixed order,
+//!   ignoring load. Optimal for a homogeneous fleet under smooth arrivals.
+//! * [`Policy::JoinShortestQueue`] — send each request to the replica with
+//!   the fewest outstanding requests (queued + executing), ties broken
+//!   toward the lowest index. Adapts to heterogeneous service rates without
+//!   knowing them.
+//! * [`Policy::Weighted`] — smooth weighted round-robin (the nginx SWRR
+//!   algorithm) over per-replica capacity weights. For heterogeneous fleets
+//!   the weights come from the analytic `sim`/`timing` throughput model of
+//!   each replica's device + FCMP operating point
+//!   (see [`crate::coordinator::capacity`]).
+
+/// Which replica the router hands the next request to.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    /// Fixed-order cycling, load-blind.
+    RoundRobin,
+    /// Least outstanding requests (queued + executing); ties to lowest index.
+    JoinShortestQueue,
+    /// Smooth weighted round-robin over per-replica capacity weights
+    /// (requests/s from the analytic model; any positive scale works).
+    Weighted(Vec<f64>),
+}
+
+impl Policy {
+    /// Parse a CLI policy name. `weights` are the capacity weights consumed
+    /// by the `weighted` policy and ignored by the other two.
+    pub fn by_name(name: &str, weights: Vec<f64>) -> Option<Policy> {
+        match name {
+            "rr" | "round-robin" | "round_robin" => Some(Policy::RoundRobin),
+            "jsq" | "shortest" | "join-shortest-queue" => Some(Policy::JoinShortestQueue),
+            "weighted" | "capacity" => Some(Policy::Weighted(weights)),
+            _ => None,
+        }
+    }
+
+    /// Short display name (bench rows, log lines).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::JoinShortestQueue => "jsq",
+            Policy::Weighted(_) => "weighted",
+        }
+    }
+}
+
+/// Mutable picker state for one fleet: owns the round-robin cursor and the
+/// SWRR credit vector so [`Policy`] itself stays an immutable description.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    policy: Policy,
+    replicas: usize,
+    rr_next: usize,
+    weights: Vec<f64>,
+    swrr_credit: Vec<f64>,
+}
+
+impl Scheduler {
+    /// Build a scheduler for `replicas` workers. Weighted policies are
+    /// normalized to the fleet size: missing weights default to 1.0, extra
+    /// weights are dropped, and non-positive weights are clamped up so no
+    /// replica is starved forever.
+    pub fn new(policy: Policy, replicas: usize) -> Scheduler {
+        assert!(replicas > 0, "scheduler needs at least one replica");
+        let mut weights = match &policy {
+            Policy::Weighted(w) => w.clone(),
+            _ => vec![1.0; replicas],
+        };
+        weights.resize(replicas, 1.0);
+        for w in &mut weights {
+            if !w.is_finite() || *w <= 0.0 {
+                *w = 1e-3;
+            }
+        }
+        Scheduler {
+            policy,
+            replicas,
+            rr_next: 0,
+            swrr_credit: vec![0.0; replicas],
+            weights,
+        }
+    }
+
+    /// The policy this scheduler runs.
+    pub fn policy(&self) -> &Policy {
+        &self.policy
+    }
+
+    /// Pick the preferred replica for the next request. `outstanding[i]`
+    /// is replica `i`'s current outstanding-request count (queued +
+    /// executing); only [`Policy::JoinShortestQueue`] reads it, so callers
+    /// running a load-blind policy may pass an empty slice to skip the
+    /// snapshot (JSQ treats an empty slice as all-idle and picks 0).
+    pub fn pick(&mut self, outstanding: &[usize]) -> usize {
+        debug_assert!(
+            outstanding.is_empty() || outstanding.len() == self.replicas,
+            "load snapshot arity mismatch"
+        );
+        match self.policy {
+            Policy::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.replicas;
+                i
+            }
+            Policy::JoinShortestQueue => {
+                let mut best = 0;
+                for i in 1..outstanding.len().min(self.replicas) {
+                    if outstanding[i] < outstanding[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+            Policy::Weighted(_) => {
+                let total: f64 = self.weights.iter().sum();
+                let mut best = 0;
+                for i in 0..self.replicas {
+                    self.swrr_credit[i] += self.weights[i];
+                    if self.swrr_credit[i] > self.swrr_credit[best] {
+                        best = i;
+                    }
+                }
+                self.swrr_credit[best] -= total;
+                best
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut s = Scheduler::new(Policy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..7).map(|_| s.pick(&[0, 0, 0])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn jsq_picks_least_outstanding_with_low_index_ties() {
+        let mut s = Scheduler::new(Policy::JoinShortestQueue, 3);
+        assert_eq!(s.pick(&[4, 1, 2]), 1);
+        assert_eq!(s.pick(&[0, 0, 0]), 0);
+        assert_eq!(s.pick(&[2, 1, 1]), 1);
+        assert_eq!(s.pick(&[3, 3, 0]), 2);
+    }
+
+    #[test]
+    fn swrr_matches_weight_ratio_exactly() {
+        // weights 3:1 => pattern of period 4 with 3 picks of replica 0
+        let mut s = Scheduler::new(Policy::Weighted(vec![3.0, 1.0]), 2);
+        let picks: Vec<usize> = (0..40).map(|_| s.pick(&[0, 0])).collect();
+        let c0 = picks.iter().filter(|&&p| p == 0).count();
+        assert_eq!(c0, 30, "picks {picks:?}");
+        // smooth: never more than 3 consecutive picks of the heavy replica
+        let max_run = picks
+            .windows(4)
+            .filter(|w| w.iter().all(|&p| p == 0))
+            .count();
+        assert_eq!(max_run, 0, "SWRR must interleave, got {picks:?}");
+    }
+
+    #[test]
+    fn swrr_equal_weights_degenerates_to_round_robin() {
+        let mut s = Scheduler::new(Policy::Weighted(vec![1.0, 1.0, 1.0]), 3);
+        let picks: Vec<usize> = (0..6).map(|_| s.pick(&[0, 0, 0])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn weight_vector_is_normalized_to_fleet_size() {
+        // short vector pads with 1.0; bad weights are clamped positive
+        let mut s = Scheduler::new(Policy::Weighted(vec![2.0]), 3);
+        let picks: Vec<usize> = (0..8).map(|_| s.pick(&[0, 0, 0])).collect();
+        for r in 0..3 {
+            assert!(picks.contains(&r), "replica {r} starved: {picks:?}");
+        }
+        let mut s = Scheduler::new(Policy::Weighted(vec![-1.0, f64::NAN, 1.0]), 3);
+        let picks: Vec<usize> = (0..2000).map(|_| s.pick(&[0, 0, 0])).collect();
+        assert!(picks.contains(&0) && picks.contains(&1));
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for name in ["round-robin", "jsq", "weighted"] {
+            let p = Policy::by_name(name, vec![1.0]).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        assert!(Policy::by_name("magic", vec![]).is_none());
+    }
+
+    #[test]
+    fn deterministic_for_identical_call_sequences() {
+        let mut a = Scheduler::new(Policy::Weighted(vec![1.5, 0.5, 1.0]), 3);
+        let mut b = Scheduler::new(Policy::Weighted(vec![1.5, 0.5, 1.0]), 3);
+        for _ in 0..100 {
+            assert_eq!(a.pick(&[1, 2, 3]), b.pick(&[1, 2, 3]));
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! One worker replica of the serving fleet: a bounded request queue, its own
+//! dynamic batcher, and an [`InferBackend`] constructed *inside* the worker
+//! thread (PJRT handles are thread-affine, so only the factory closure
+//! crosses threads). The router sees a replica as (bounded sender,
+//! outstanding-request counter); completions from all replicas merge into
+//! the fleet-wide completion channel.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::batcher::{next_batch, BatcherConfig};
+use super::server::InferBackend;
+use super::{Completion, Request};
+
+/// Outcome of a non-blocking submit to one replica. The request rides back
+/// in the error so the router can try another replica without copying.
+pub(crate) enum TrySubmit {
+    /// The replica's bounded queue is full (transient overload).
+    Full(Request),
+    /// The replica stopped accepting work (shutdown or dead worker).
+    Closed(Request),
+}
+
+/// A running replica: router-side handle plus the worker thread.
+pub(crate) struct Replica {
+    tx: Option<SyncSender<Request>>,
+    /// Requests accepted but not yet completed (queued + executing).
+    outstanding: Arc<AtomicUsize>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Replica {
+    /// Spawn replica `index`. The worker loops `next_batch -> infer_batch ->
+    /// completions` until the request channel is closed *and* drained, so a
+    /// fleet shutdown never drops accepted requests. A failed batch is
+    /// dropped (its completions never appear) but the replica keeps serving.
+    pub(crate) fn spawn<B, F>(
+        index: usize,
+        make_backend: F,
+        batcher: BatcherConfig,
+        queue_depth: usize,
+        completions: Sender<Completion>,
+    ) -> Replica
+    where
+        B: InferBackend,
+        F: FnOnce() -> B + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<Request>(queue_depth.max(1));
+        let outstanding = Arc::new(AtomicUsize::new(0));
+        let counter = Arc::clone(&outstanding);
+        let worker = std::thread::Builder::new()
+            .name(format!("fcmp-replica-{index}"))
+            .spawn(move || {
+                let backend = make_backend();
+                while let Some(mut batch) = next_batch(&rx, &batcher) {
+                    // move inputs out (no per-request copy on the hot path)
+                    let inputs: Vec<Vec<f32>> = batch
+                        .requests
+                        .iter_mut()
+                        .map(|r| std::mem::take(&mut r.input))
+                        .collect();
+                    let n = batch.requests.len();
+                    match backend.infer_batch(&inputs) {
+                        Ok(outputs) => {
+                            for (req, output) in batch.requests.into_iter().zip(outputs) {
+                                let _ = completions.send(Completion {
+                                    id: req.id,
+                                    output,
+                                    latency: req.arrival.elapsed(),
+                                    batch_size: n,
+                                    replica: index,
+                                });
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("replica {index}: batch failed: {e:#}");
+                        }
+                    }
+                    counter.fetch_sub(n, Ordering::SeqCst);
+                }
+            })
+            .expect("spawn replica worker");
+        Replica { tx: Some(tx), outstanding, worker: Some(worker) }
+    }
+
+    /// Outstanding requests (queued + executing) — the JSQ load signal.
+    pub(crate) fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::SeqCst)
+    }
+
+    /// Non-blocking submit. The counter is incremented *before* the send
+    /// (and rolled back on failure) so the worker can never decrement a
+    /// counter that has not yet seen its increment — a decrement-first
+    /// interleaving would wrap the `AtomicUsize` and corrupt the JSQ load
+    /// signal. The transient +1 on the failure path is harmless.
+    pub(crate) fn try_submit(&self, req: Request) -> Result<(), TrySubmit> {
+        match &self.tx {
+            None => Err(TrySubmit::Closed(req)),
+            Some(tx) => {
+                self.outstanding.fetch_add(1, Ordering::SeqCst);
+                match tx.try_send(req) {
+                    Ok(()) => Ok(()),
+                    Err(TrySendError::Full(r)) => {
+                        self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                        Err(TrySubmit::Full(r))
+                    }
+                    Err(TrySendError::Disconnected(r)) => {
+                        self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                        Err(TrySubmit::Closed(r))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Blocking submit: parks on the bounded queue until the worker frees a
+    /// slot. Same increment-before-send counter discipline as
+    /// [`Replica::try_submit`]; only a dead replica makes it fail.
+    pub(crate) fn submit_wait(&self, req: Request) -> Result<(), TrySubmit> {
+        match &self.tx {
+            None => Err(TrySubmit::Closed(req)),
+            Some(tx) => {
+                self.outstanding.fetch_add(1, Ordering::SeqCst);
+                match tx.send(req) {
+                    Ok(()) => Ok(()),
+                    Err(e) => {
+                        self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                        Err(TrySubmit::Closed(e.0))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Stop accepting requests; the worker drains what is already queued.
+    pub(crate) fn close(&mut self) {
+        self.tx = None;
+    }
+
+    /// Wait for the worker to finish draining (after [`Replica::close`]).
+    pub(crate) fn join(&mut self) {
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}

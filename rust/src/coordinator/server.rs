@@ -1,22 +1,52 @@
-//! The serving loop: router queue → dynamic batcher → worker thread that
-//! owns the inference backend → completion stream → metrics.
+//! The sharded serving fleet: a router dispatches requests to N worker
+//! replicas by a pluggable scheduling policy; each replica owns a bounded
+//! queue, a dynamic batcher and its own [`InferBackend`]; completions from
+//! all replicas merge into one stream.
 //!
-//! The backend is a trait so tests can run the full coordination path with
-//! a mock (no PJRT); `examples/serve_cifar.rs` plugs in the real
-//! [`crate::runtime::Engine`].
+//! ```text
+//!  clients ──> Server::submit ── Scheduler (policy) picks replica
+//!                 │    admission control: full fleet => QueueFull (shed)
+//!                 v
+//!          ┌─ replica 0: bounded queue → batcher → worker(backend 0) ─┐
+//!          ├─ replica 1: bounded queue → batcher → worker(backend 1) ─┤──> completions
+//!          └─ replica k: bounded queue → batcher → worker(backend k) ─┘    (+ per-replica
+//!                                                                           latency metrics)
+//! ```
+//!
+//! **Overload semantics.** Each replica's queue is bounded
+//! ([`ServerConfig::queue_depth`]). A non-blocking [`Server::submit`] tries
+//! the policy's preferred replica first, then the remaining replicas in
+//! ascending-load order; only when *every* open queue is full does it shed
+//! the request with [`SubmitError::QueueFull`] — graceful degradation, never
+//! unbounded memory. After [`Server::shutdown`] (or if all workers die) the
+//! error is [`SubmitError::Closed`] instead, so callers can tell "retry
+//! later" from "give up". Shutdown closes the queues and *drains* them:
+//! every accepted request still produces a completion before the workers
+//! exit.
+//!
+//! The backend is a trait so tests and benches run the full coordination
+//! path with [`MockBackend`] (no PJRT); `examples/serve_cifar.rs` and
+//! `fcmp serve --backend pjrt` plug in the real [`crate::runtime::Engine`].
 
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use super::batcher::{next_batch, BatcherConfig};
+use super::batcher::BatcherConfig;
+use super::metrics::FleetMetrics;
+use super::policy::{Policy, Scheduler};
+use super::replica::{Replica, TrySubmit};
+use super::workload::Trace;
 use super::{Completion, Request};
+use crate::util::rng::Rng;
 use crate::Result;
 
 /// Anything that can run a batch of inputs. The backend is constructed
-/// *inside* the worker thread (PJRT handles are not `Send`), so only the
+/// *inside* each worker thread (PJRT handles are not `Send`), so only the
 /// factory closure crosses threads.
 pub trait InferBackend: 'static {
+    /// Run one batch; `inputs[i]` is a flattened sample, the result must
+    /// hold one output row per input row.
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
 }
 
@@ -26,112 +56,315 @@ impl InferBackend for crate::runtime::Engine {
     }
 }
 
-/// Server configuration.
+/// Deterministic mock backend for tests, benches and `fcmp serve --backend
+/// mock`: each output row is `[Σ inputs, batch_size]`, and a batch of `k`
+/// requests takes `base + per_item · k` of simulated service time. Scaling
+/// `base`/`per_item` per replica models a heterogeneous fleet.
 #[derive(Clone, Copy, Debug)]
+pub struct MockBackend {
+    /// Fixed per-batch overhead (amortized by batching).
+    pub base: Duration,
+    /// Marginal service time per request in the batch.
+    pub per_item: Duration,
+}
+
+impl MockBackend {
+    /// Zero service time — completes as fast as the threads can run.
+    pub fn instant() -> MockBackend {
+        MockBackend { base: Duration::ZERO, per_item: Duration::ZERO }
+    }
+
+    /// Mock with the given service-time model.
+    pub fn with_service(base: Duration, per_item: Duration) -> MockBackend {
+        MockBackend { base, per_item }
+    }
+}
+
+impl InferBackend for MockBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let service = self.base + self.per_item * inputs.len() as u32;
+        if !service.is_zero() {
+            std::thread::sleep(service);
+        }
+        Ok(inputs
+            .iter()
+            .map(|x| vec![x.iter().sum::<f32>(), inputs.len() as f32])
+            .collect())
+    }
+}
+
+/// Fleet configuration.
+#[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Batching policy applied independently by every replica.
     pub batcher: BatcherConfig,
-    /// Router queue bound (backpressure: submit fails when full).
+    /// Per-replica router queue bound (admission control: when every open
+    /// queue is full, submits shed with [`SubmitError::QueueFull`]).
     pub queue_depth: usize,
+    /// Number of worker replicas, each owning its own backend.
+    pub replicas: usize,
+    /// Scheduling policy routing requests to replicas.
+    pub policy: Policy,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { batcher: BatcherConfig::default(), queue_depth: 256 }
+        ServerConfig {
+            batcher: BatcherConfig::default(),
+            queue_depth: 256,
+            replicas: 1,
+            policy: Policy::RoundRobin,
+        }
     }
 }
 
-/// A running inference server (single worker owning the engine).
-pub struct Server {
-    tx: Option<SyncSender<Request>>,
-    completions: Receiver<Completion>,
-    worker: Option<JoinHandle<()>>,
+/// Typed submit failure. The rejected request rides back in the error so
+/// callers can retry without rebuilding the input buffer, and the two
+/// variants make transient overload distinguishable from terminal shutdown.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Every open replica queue was full — admission control shed the
+    /// request. Retrying after a backoff can succeed.
+    QueueFull(Request),
+    /// The server is shut down (or every worker died). Retrying cannot
+    /// succeed.
+    Closed(Request),
 }
 
-// completions are unbounded: backpressure belongs on the *request* queue;
-// a bounded completion channel can deadlock shutdown (worker blocks on
-// send while the owner blocks on join without draining)
-type CompletionTx = Sender<Completion>;
-
-impl Server {
-    /// Spawn the worker thread; `make_backend` runs on the worker (PJRT
-    /// engines are thread-affine) and a panic there surfaces on first use.
-    pub fn start<B, F>(make_backend: F, cfg: ServerConfig) -> Server
-    where
-        B: InferBackend,
-        F: FnOnce() -> B + Send + 'static,
-    {
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let (ctx, crx): (CompletionTx, _) = channel();
-        let batcher = cfg.batcher;
-        let worker = std::thread::Builder::new()
-            .name("fcmp-worker".into())
-            .spawn(move || {
-                let backend = make_backend();
-                while let Some(mut batch) = next_batch(&rx, &batcher) {
-                    // move inputs out (no per-request copy on the hot path)
-                    let inputs: Vec<Vec<f32>> = batch
-                        .requests
-                        .iter_mut()
-                        .map(|r| std::mem::take(&mut r.input))
-                        .collect();
-                    match backend.infer_batch(&inputs) {
-                        Ok(outputs) => {
-                            let n = batch.requests.len();
-                            for (req, output) in batch.requests.into_iter().zip(outputs) {
-                                let _ = ctx.send(Completion {
-                                    id: req.id,
-                                    output,
-                                    latency: req.arrival.elapsed(),
-                                    batch_size: n,
-                                });
-                            }
-                        }
-                        Err(e) => {
-                            // failure injection path: drop the batch but keep
-                            // serving; completions for it never appear
-                            eprintln!("worker: batch failed: {e:#}");
-                        }
-                    }
-                }
-            })
-            .expect("spawn worker");
-        Server { tx: Some(tx), completions: crx, worker: Some(worker) }
-    }
-
-    /// Submit a request; `Err` means the queue is full (backpressure) or
-    /// the server is shutting down.
-    pub fn submit(&self, id: u64, input: Vec<f32>) -> std::result::Result<(), Request> {
-        let req = Request { id, input, arrival: Instant::now() };
-        match self.tx.as_ref() {
-            None => Err(req),
-            Some(tx) => match tx.try_send(req) {
-                Ok(()) => Ok(()),
-                Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => Err(r),
-            },
+impl SubmitError {
+    /// Recover the rejected request (e.g. to retry it later).
+    pub fn into_request(self) -> Request {
+        match self {
+            SubmitError::QueueFull(r) | SubmitError::Closed(r) => r,
         }
     }
 
-    /// Blocking submit (waits for queue space).
-    pub fn submit_blocking(&self, id: u64, input: Vec<f32>) -> Result<()> {
-        let req = Request { id, input, arrival: Instant::now() };
-        self.tx
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("server closed"))?
-            .send(req)
-            .map_err(|_| anyhow::anyhow!("worker gone"))
+    /// True iff the failure is terminal (no retry can succeed).
+    pub fn is_closed(&self) -> bool {
+        matches!(self, SubmitError::Closed(_))
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(r) => {
+                write!(f, "request {} shed: every replica queue is full", r.id)
+            }
+            SubmitError::Closed(r) => {
+                write!(f, "request {} rejected: server is shut down", r.id)
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A running multi-replica inference server.
+pub struct Server {
+    replicas: Vec<Replica>,
+    scheduler: Scheduler,
+    completions: Receiver<Completion>,
+}
+
+impl Server {
+    /// Spawn `cfg.replicas` workers. `make_backend(i)` runs on worker `i`'s
+    /// thread (PJRT engines are thread-affine) and a panic there surfaces on
+    /// first use of that replica.
+    pub fn start<B, F>(make_backend: F, cfg: ServerConfig) -> Server
+    where
+        B: InferBackend,
+        F: Fn(usize) -> B + Send + Sync + 'static,
+    {
+        let n = cfg.replicas.max(1);
+        // completions are unbounded: backpressure belongs on the *request*
+        // queues; a bounded completion channel can deadlock shutdown (worker
+        // blocks on send while the owner blocks on join without draining)
+        let (ctx, crx) = channel::<Completion>();
+        let factory = Arc::new(make_backend);
+        let replicas: Vec<Replica> = (0..n)
+            .map(|i| {
+                let f = Arc::clone(&factory);
+                Replica::spawn(i, move || (*f)(i), cfg.batcher, cfg.queue_depth, ctx.clone())
+            })
+            .collect();
+        drop(ctx);
+        Server { replicas, scheduler: Scheduler::new(cfg.policy, n), completions: crx }
     }
 
-    /// Receive the next completion (blocks until one arrives or the worker
-    /// exits after shutdown).
+    /// Number of worker replicas.
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Per-replica outstanding request counts (queued + executing).
+    pub fn outstanding(&self) -> Vec<usize> {
+        self.replicas.iter().map(|r| r.outstanding()).collect()
+    }
+
+    /// Non-blocking submit. Returns the replica index the request was routed
+    /// to, or a typed [`SubmitError`] (overload shed vs shutdown).
+    pub fn submit(&mut self, id: u64, input: Vec<f32>) -> std::result::Result<usize, SubmitError> {
+        self.dispatch(Request { id, input, arrival: Instant::now() })
+    }
+
+    /// Blocking submit: when the whole fleet is full it parks on the least
+    /// loaded replica's bounded queue (the worker wakes it when a slot
+    /// frees) instead of spin-retrying; only terminal shutdown makes it
+    /// fail.
+    pub fn submit_blocking(
+        &mut self,
+        id: u64,
+        input: Vec<f32>,
+    ) -> std::result::Result<usize, SubmitError> {
+        let mut req = Request { id, input, arrival: Instant::now() };
+        loop {
+            req = match self.dispatch(req) {
+                Ok(i) => return Ok(i),
+                Err(SubmitError::Closed(r)) => return Err(SubmitError::Closed(r)),
+                Err(SubmitError::QueueFull(r)) => r,
+            };
+            let i = self
+                .replicas
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| r.outstanding())
+                .map(|(i, _)| i)
+                .unwrap();
+            req = match self.replicas[i].submit_wait(req) {
+                Ok(()) => return Ok(i),
+                // a dead replica can look idle; back off briefly so the
+                // retry loop cannot spin between dispatch and submit_wait
+                Err(TrySubmit::Full(r)) | Err(TrySubmit::Closed(r)) => {
+                    std::thread::sleep(Duration::from_micros(200));
+                    r
+                }
+            };
+        }
+    }
+
+    /// Route a request: the policy's preferred replica first; only if its
+    /// queue is full (or it died) fall through to the remaining replicas in
+    /// ascending-load order, so a full preferred queue does not shed while
+    /// a sibling has room. The common accepted-first-try case pays no
+    /// fallback bookkeeping.
+    fn dispatch(&mut self, req: Request) -> std::result::Result<usize, SubmitError> {
+        // the load snapshot costs one atomic load per replica plus a Vec;
+        // take it up front only for the policy that reads it (JSQ) — the
+        // fallback path below re-derives it on demand
+        let mut outstanding: Vec<usize> =
+            if matches!(self.scheduler.policy(), Policy::JoinShortestQueue) {
+                self.outstanding()
+            } else {
+                Vec::new()
+            };
+        let first = self.scheduler.pick(&outstanding);
+        let mut saw_full = false;
+        let mut req = match self.replicas[first].try_submit(req) {
+            Ok(()) => return Ok(first),
+            Err(TrySubmit::Full(r)) => {
+                saw_full = true;
+                r
+            }
+            Err(TrySubmit::Closed(r)) => r,
+        };
+        if outstanding.is_empty() {
+            outstanding = self.outstanding();
+        }
+        let mut rest: Vec<usize> = (0..self.replicas.len()).filter(|&i| i != first).collect();
+        rest.sort_by_key(|&i| (outstanding[i], i));
+        for i in rest {
+            match self.replicas[i].try_submit(req) {
+                Ok(()) => return Ok(i),
+                Err(TrySubmit::Full(r)) => {
+                    saw_full = true;
+                    req = r;
+                }
+                Err(TrySubmit::Closed(r)) => req = r,
+            }
+        }
+        if saw_full {
+            Err(SubmitError::QueueFull(req))
+        } else {
+            Err(SubmitError::Closed(req))
+        }
+    }
+
+    /// Receive the next completion (blocks until one arrives, or returns
+    /// `None` once the fleet has shut down and the stream is drained).
     pub fn next_completion(&self) -> Option<Completion> {
         self.completions.recv().ok()
     }
 
-    /// Stop accepting requests; the worker drains the queue and exits.
+    /// Receive the next completion, waiting at most `timeout`.
+    pub fn try_next_completion(&self, timeout: Duration) -> Option<Completion> {
+        match self.completions.recv_timeout(timeout) {
+            Ok(c) => Some(c),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    /// Open-loop replay of an arrival trace: submits request `i` at
+    /// `trace.arrivals_s[i]` (uniform-random synthetic inputs of
+    /// `input_len` elements seeded by `seed`), drains completions while
+    /// waiting, sheds on overload, and finally waits for every *accepted*
+    /// request to complete. The server stays running; callers decide when
+    /// to [`Server::shutdown`].
+    pub fn replay(&mut self, trace: &Trace, input_len: usize, seed: u64) -> FleetMetrics {
+        let mut rng = Rng::new(seed);
+        let mut fm = FleetMetrics::new(self.replicas.len());
+        fm.start();
+        let t0 = Instant::now();
+        for (i, &due) in trace.arrivals_s.iter().enumerate() {
+            loop {
+                let now = t0.elapsed().as_secs_f64();
+                if now >= due {
+                    break;
+                }
+                let wait = Duration::from_secs_f64((due - now).min(0.005));
+                match self.completions.recv_timeout(wait) {
+                    Ok(c) => fm.record(&c),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    // every worker died (panicked backend): nothing will
+                    // ever complete, so stop replaying instead of spinning
+                    Err(RecvTimeoutError::Disconnected) => return fm,
+                }
+            }
+            let input: Vec<f32> = (0..input_len).map(|_| rng.below(256) as f32).collect();
+            match self.submit(i as u64, input) {
+                Ok(_) => fm.record_submitted(),
+                Err(SubmitError::QueueFull(_)) => fm.record_shed(),
+                Err(SubmitError::Closed(_)) => return fm,
+            }
+        }
+        // drain: every accepted request completes unless a backend fails its
+        // batch (never on the mock/PJRT paths), so guard with a stall timeout
+        let mut last_progress = Instant::now();
+        while fm.completed() < fm.submitted() {
+            match self.completions.recv_timeout(Duration::from_millis(50)) {
+                Ok(c) => {
+                    fm.record(&c);
+                    last_progress = Instant::now();
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Timeout) => {
+                    if last_progress.elapsed() > Duration::from_secs(10) {
+                        break;
+                    }
+                }
+            }
+        }
+        fm
+    }
+
+    /// Stop accepting requests and wait for every replica to drain its
+    /// queue. Buffered completions remain readable afterwards.
     pub fn shutdown(&mut self) {
-        self.tx = None;
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+        for r in &mut self.replicas {
+            r.close();
+        }
+        for r in &mut self.replicas {
+            r.join();
         }
     }
 }
@@ -146,47 +379,36 @@ impl Drop for Server {
 mod tests {
     use super::*;
     use crate::coordinator::Metrics;
-    use std::time::Duration;
 
-    /// Mock backend: output = input sum + batch-size marker; optional
-    /// failure injection on a chosen batch index.
-    struct Mock {
+    /// Mock with failure injection on every k-th batch (per replica).
+    struct FlakyMock {
         delay: Duration,
-        fail_every: Option<usize>,
+        fail_every: usize,
         calls: std::sync::atomic::AtomicUsize,
     }
 
-    impl InferBackend for Mock {
+    impl InferBackend for FlakyMock {
         fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
             let call = self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-            if let Some(k) = self.fail_every {
-                if k > 0 && (call + 1) % k == 0 {
-                    anyhow::bail!("injected failure on call {call}");
-                }
+            if self.fail_every > 0 && (call + 1) % self.fail_every == 0 {
+                anyhow::bail!("injected failure on call {call}");
             }
-            std::thread::sleep(self.delay);
-            Ok(inputs
-                .iter()
-                .map(|x| vec![x.iter().sum::<f32>(), inputs.len() as f32])
-                .collect())
+            MockBackend::with_service(self.delay, Duration::ZERO).infer_batch(inputs)
         }
     }
 
-    fn mock(delay_ms: u64, fail_every: Option<usize>) -> Mock {
-        Mock {
-            delay: Duration::from_millis(delay_ms),
-            fail_every,
-            calls: std::sync::atomic::AtomicUsize::new(0),
+    fn single(queue_depth: usize, max_batch: usize) -> ServerConfig {
+        ServerConfig {
+            batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
+            queue_depth,
+            replicas: 1,
+            policy: Policy::RoundRobin,
         }
     }
 
     #[test]
     fn end_to_end_all_requests_complete() {
-        let cfg = ServerConfig {
-            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
-            queue_depth: 64,
-        };
-        let mut srv = Server::start(|| mock(0, None), cfg);
+        let mut srv = Server::start(|_| MockBackend::instant(), single(64, 4));
         let n = 40;
         for i in 0..n {
             srv.submit_blocking(i, vec![i as f32, 1.0]).unwrap();
@@ -197,12 +419,12 @@ mod tests {
         for _ in 0..n {
             let c = srv.next_completion().unwrap();
             assert_eq!(c.output[0], c.id as f32 + 1.0);
+            assert_eq!(c.replica, 0);
             seen[c.id as usize] = true;
             metrics.record(c.latency, c.batch_size);
         }
         assert!(seen.iter().all(|&s| s));
-        let s = metrics.summary();
-        assert!(s.mean_batch >= 1.0);
+        assert!(metrics.summary().mean_batch >= 1.0);
         srv.shutdown();
     }
 
@@ -211,8 +433,13 @@ mod tests {
         let cfg = ServerConfig {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
             queue_depth: 64,
+            replicas: 1,
+            policy: Policy::RoundRobin,
         };
-        let mut srv = Server::start(|| mock(5, None), cfg);
+        let mut srv = Server::start(
+            |_| MockBackend::with_service(Duration::from_millis(5), Duration::ZERO),
+            cfg,
+        );
         for i in 0..16 {
             srv.submit_blocking(i, vec![1.0]).unwrap();
         }
@@ -227,39 +454,76 @@ mod tests {
 
     #[test]
     fn failure_injection_drops_batch_but_server_survives() {
-        let cfg = ServerConfig {
-            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(0) },
-            queue_depth: 64,
-        };
-        let mut srv = Server::start(|| mock(0, Some(3)), cfg);
+        let mut srv = Server::start(
+            |_| FlakyMock {
+                delay: Duration::ZERO,
+                fail_every: 3,
+                calls: std::sync::atomic::AtomicUsize::new(0),
+            },
+            single(64, 1),
+        );
         let n = 30;
         for i in 0..n {
             srv.submit_blocking(i, vec![1.0]).unwrap();
         }
-        srv.tx = None; // stop accepting; worker drains
+        srv.shutdown();
         let mut got = 0;
         while let Some(_c) = srv.next_completion() {
             got += 1;
         }
         // every 3rd single-request batch fails: 10 dropped
         assert_eq!(got, 20, "completions {got}");
-        srv.shutdown();
     }
 
     #[test]
-    fn backpressure_on_full_queue() {
-        let cfg = ServerConfig {
-            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(0) },
-            queue_depth: 2,
-        };
-        let srv = Server::start(|| mock(50, None), cfg);
+    fn backpressure_sheds_with_queue_full() {
+        let mut srv = Server::start(
+            |_| MockBackend::with_service(Duration::from_millis(50), Duration::ZERO),
+            single(2, 1),
+        );
         // worker is sleeping on the first batch; queue of 2 fills quickly
         let mut rejected = 0;
         for i in 0..20 {
-            if srv.submit(i, vec![1.0]).is_err() {
-                rejected += 1;
+            match srv.submit(i, vec![1.0]) {
+                Ok(_) => {}
+                Err(e) => {
+                    assert!(!e.is_closed(), "open server must shed, not close: {e}");
+                    rejected += 1;
+                }
             }
         }
-        assert!(rejected > 0, "expected backpressure rejections");
+        assert!(rejected > 0, "expected admission-control sheds");
+    }
+
+    #[test]
+    fn full_sibling_does_not_shed_while_another_replica_has_room() {
+        // replica 0 is blocked for a long time; round-robin would prefer it
+        // every other request, but the router falls through to replica 1
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(0) },
+            queue_depth: 1,
+            replicas: 2,
+            policy: Policy::RoundRobin,
+        };
+        let mut srv = Server::start(
+            |i| {
+                if i == 0 {
+                    MockBackend::with_service(Duration::from_millis(300), Duration::ZERO)
+                } else {
+                    MockBackend::instant()
+                }
+            },
+            cfg,
+        );
+        let mut ok = 0;
+        for i in 0..12 {
+            if srv.submit(i, vec![1.0]).is_ok() {
+                ok += 1;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // replica 0 absorbs at most 2 (1 executing + 1 queued); the rest
+        // must overflow to replica 1 instead of shedding
+        assert!(ok >= 10, "only {ok}/12 accepted");
     }
 }

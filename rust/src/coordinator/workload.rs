@@ -1,6 +1,6 @@
 //! Workload generators for serving experiments: open-loop Poisson arrivals,
-//! bursty (on/off) traffic, and a closed-loop (fixed-concurrency) driver
-//! model. Deterministic via the crate PRNG.
+//! bursty (on/off) traffic, heavy-tailed (Pareto inter-arrival) traffic,
+//! and a fixed-interval baseline. Deterministic via the crate PRNG.
 
 use crate::util::rng::Rng;
 
@@ -64,6 +64,33 @@ pub fn bursty(n: usize, avg_rate: f64, peak_rate: f64, burst_len: usize, seed: u
     Trace { arrivals_s: arrivals }
 }
 
+/// Heavy-tailed arrivals: Pareto(`alpha`) inter-arrival gaps scaled so the
+/// long-run rate is `rate`. `alpha <= 2` has infinite variance — the
+/// serving story's worst case: long quiet stretches punctuated by deep
+/// backlogs that stress admission control far harder than Poisson traffic.
+/// Requires `alpha > 1` (finite mean, so the rate normalization exists).
+pub fn heavy_tail(n: usize, rate: f64, alpha: f64, seed: u64) -> Trace {
+    assert!(rate > 0.0 && alpha > 1.0);
+    let mut rng = Rng::new(seed);
+    // Pareto with x_m = 1 has mean alpha/(alpha-1); scale gaps to `rate`
+    let mean_raw = alpha / (alpha - 1.0);
+    let scale = 1.0 / (rate * mean_raw);
+    let mut t = 0.0;
+    let mut arrivals = Vec::with_capacity(n);
+    for _ in 0..n {
+        let u = loop {
+            let u = rng.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        // inverse CDF: x = x_m * u^(-1/alpha) for u uniform in (0, 1]
+        t += scale * u.powf(-1.0 / alpha);
+        arrivals.push(t);
+    }
+    Trace { arrivals_s: arrivals }
+}
+
 /// Uniform (fixed-interval) arrivals — the closed-form baseline.
 pub fn uniform(n: usize, rate: f64) -> Trace {
     Trace { arrivals_s: (0..n).map(|i| i as f64 / rate).collect() }
@@ -103,6 +130,41 @@ mod tests {
             .map(|w| w[1] - w[0])
             .fold(f64::INFINITY, f64::min);
         assert!(min_gap < 1.5 / 500.0, "min gap {min_gap}");
+    }
+
+    #[test]
+    fn heavy_tail_rate_converges_when_variance_is_finite() {
+        // alpha = 2.5 has finite variance, so the sample mean converges
+        let t = heavy_tail(40_000, 200.0, 2.5, 5);
+        assert!((t.offered_rate() - 200.0).abs() / 200.0 < 0.1, "{}", t.offered_rate());
+        assert!(t.arrivals_s.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn heavy_tail_is_deterministic_per_seed() {
+        assert_eq!(
+            heavy_tail(200, 50.0, 1.5, 9).arrivals_s,
+            heavy_tail(200, 50.0, 1.5, 9).arrivals_s
+        );
+        assert_ne!(
+            heavy_tail(200, 50.0, 1.5, 9).arrivals_s,
+            heavy_tail(200, 50.0, 1.5, 10).arrivals_s
+        );
+    }
+
+    #[test]
+    fn heavy_tail_is_heavier_than_poisson() {
+        // max/median inter-arrival gap: the Pareto tail dwarfs the
+        // exponential one at the same offered rate
+        let gap_ratio = |t: &Trace| {
+            let mut gaps: Vec<f64> = t.arrivals_s.windows(2).map(|w| w[1] - w[0]).collect();
+            gaps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            gaps[gaps.len() - 1] / gaps[gaps.len() / 2]
+        };
+        let heavy = gap_ratio(&heavy_tail(5_000, 100.0, 1.5, 6));
+        let light = gap_ratio(&poisson(5_000, 100.0, 6));
+        assert!(heavy > 20.0, "heavy tail ratio {heavy}");
+        assert!(heavy > 2.0 * light, "heavy {heavy} vs poisson {light}");
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //! FPGA device models, the CNV / ResNet-50 topology zoo, the FINN folding and
 //! resource model, the physical RAM mapper, four packing engines, a
 //! cycle-level GALS streamer simulator, a timing-closure model, a dataflow
-//! pipeline simulator, and a PJRT-backed inference runtime with a serving
-//! coordinator.
+//! pipeline simulator, and a PJRT-backed inference runtime behind a
+//! multi-replica sharded serving coordinator (policy router, per-replica
+//! dynamic batchers, admission control, fleet latency metrics).
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 

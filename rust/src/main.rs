@@ -8,19 +8,25 @@
 //! fcmp perf     --network ... [--mhz 195]
 //! fcmp gals     [--nb 4] [--rf 2.0] [--depth 128] [--cycles 10000] [--static]
 //! fcmp golden   [--artifacts artifacts] [--model all|cnv_w1a1|cnv_w2a2|rn50_lite_w1a2]
-//! fcmp serve    [--model cnv_w1a1] [--requests 64] [--batch 4] [--rate 50]
+//! fcmp serve    [--backend mock|pjrt] [--model cnv_w1a1] [--replicas 1]
+//!               [--policy round-robin|jsq|weighted] [--trace poisson|bursty|heavy|uniform]
+//!               [--requests 256] [--rate 400] [--batch 4] [--queue 64]
+//!               [--devices u250,u280,7020,7012s] [--service-us 400]
 //! fcmp dse      --network ... --device ... [--budget 0.85]
 //! ```
 
-use fcmp::coordinator::{BatcherConfig, Metrics, Server, ServerConfig};
+use fcmp::coordinator::{
+    bursty, fleet_weights, heavy_tail, poisson, replica_fps, uniform, BatcherConfig, MockBackend,
+    Policy, ReplicaSpec, Server, ServerConfig, Trace,
+};
 use fcmp::device;
 use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
 use fcmp::nn::{cnv, resnet50, CnvVariant, Network};
 use fcmp::packing::{anneal::Anneal, ffd::Ffd, Packer};
 use fcmp::util::args::Args;
-use fcmp::util::rng::Rng;
 use fcmp::{folding, report, runtime, sim};
 use std::path::Path;
+use std::time::Duration;
 
 fn network_by_name(name: &str) -> Option<Network> {
     match name {
@@ -203,59 +209,115 @@ fn cmd_golden(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(a: &Args) -> anyhow::Result<()> {
-    let arts = Path::new(a.get_or("artifacts", "artifacts")).to_path_buf();
-    let model = a.get_or("model", "cnv_w1a1").to_string();
-    let n = a.get_usize("requests", 64) as u64;
-    let max_batch = a.get_usize("batch", 4);
-    let rate = a.get_f64("rate", 100.0); // requests/s
-
-    let probe = runtime::Engine::load(&arts, &model)?;
-    let per = probe.manifest.input_elements_per_sample() as usize;
-    drop(probe);
-
-    let cfg = ServerConfig {
-        batcher: BatcherConfig {
-            max_batch,
-            max_wait: std::time::Duration::from_millis(2),
-        },
-        queue_depth: 512,
-    };
-    let arts2 = arts.clone();
-    let model2 = model.clone();
-    let mut srv = Server::start(
-        move || runtime::Engine::load(&arts2, &model2).expect("engine"),
-        cfg,
-    );
-
-    let mut rng = Rng::new(7);
-    let mut metrics = Metrics::new();
-    metrics.start();
-    let t0 = std::time::Instant::now();
-    let mut submitted = 0u64;
-    let mut received = 0u64;
-    while received < n {
-        // Poisson-ish arrivals at `rate`
-        if submitted < n {
-            let due = submitted as f64 / rate;
-            if t0.elapsed().as_secs_f64() >= due {
-                let input: Vec<f32> =
-                    (0..per).map(|_| (rng.below(256)) as f32).collect();
-                if srv.submit_blocking(submitted, input).is_ok() {
-                    submitted += 1;
-                }
-                continue;
-            }
-        }
-        if let Some(c) = srv.next_completion() {
-            metrics.record(c.latency, c.batch_size);
-            received += 1;
-        } else {
-            break;
-        }
+/// Map a servable model name to its [`Network`] and the artifact name the
+/// AOT exporter actually emits (`python/compile/aot.py`): only
+/// artifact-backed models are accepted, and aliases (`rn50`, hyphen forms)
+/// canonicalize so the `pjrt` backend never sees a name without artifacts.
+fn serve_model(name: &str) -> Option<(Network, &'static str)> {
+    match name {
+        "cnv_w1a1" | "cnv-w1a1" => Some((cnv(CnvVariant::W1A1), "cnv_w1a1")),
+        "cnv_w2a2" | "cnv-w2a2" => Some((cnv(CnvVariant::W2A2), "cnv_w2a2")),
+        "rn50" | "rn50-w1" | "rn50_lite_w1a2" => Some((resnet50(1), "rn50_lite_w1a2")),
+        _ => None,
     }
+}
+
+fn trace_by_name(name: &str, n: usize, rate: f64, seed: u64) -> anyhow::Result<Trace> {
+    Ok(match name {
+        "poisson" => poisson(n, rate, seed),
+        "bursty" => bursty(n, rate, rate * 8.0, 32, seed),
+        "heavy" | "heavy-tail" => heavy_tail(n, rate, 1.5, seed),
+        "uniform" => uniform(n, rate),
+        other => anyhow::bail!("unknown trace {other} (poisson|bursty|heavy|uniform)"),
+    })
+}
+
+fn cmd_serve(a: &Args) -> anyhow::Result<()> {
+    let backend = a.get_or("backend", "mock");
+    let replicas = a.get_usize("replicas", 1).max(1);
+    let n = a.get_usize("requests", 256);
+    let rate = a.get_f64("rate", 400.0); // offered requests/s
+    let seed = a.get_usize("seed", 2020) as u64;
+    let max_batch = a.get_usize("batch", 4);
+    let queue_depth = a.get_usize("queue", 64);
+    let trace_name = a.get_or("trace", "poisson");
+    let (net, model) = serve_model(a.get_or("model", "cnv_w1a1")).ok_or_else(|| {
+        anyhow::anyhow!("unknown model (cnv_w1a1|cnv_w2a2|rn50_lite_w1a2 or aliases)")
+    })?;
+
+    // heterogeneous fleet: replica i runs on the i-th of --devices (cycled)
+    // at the paper's Table V operating point; the analytic sim/timing model
+    // turns each point into the capacity weight of the `weighted` policy
+    let dev_names: Vec<&str> = a.get_or("devices", "u250,u280,7020,7012s").split(',').collect();
+    let mut specs = Vec::with_capacity(replicas);
+    for i in 0..replicas {
+        let name = dev_names[i % dev_names.len()];
+        let dev = device::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown device {name} in --devices"))?;
+        specs.push(ReplicaSpec::paper_point(dev));
+    }
+    let weights = fleet_weights(&net, &specs);
+    let policy = Policy::by_name(a.get_or("policy", "round-robin"), weights.clone())
+        .ok_or_else(|| anyhow::anyhow!("unknown policy (round-robin|jsq|weighted)"))?;
+    let policy_name = policy.name();
+
+    let trace = trace_by_name(trace_name, n, rate, seed)?;
+    let cfg = ServerConfig {
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
+        queue_depth,
+        replicas,
+        policy,
+    };
+
+    println!("fleet: {replicas} replicas, policy {policy_name}, trace {trace_name}");
+    for (i, s) in specs.iter().enumerate() {
+        println!(
+            "  replica {i}: {} (R_F={:.1}, LUT {:.0}%) — analytic {:.0} FPS, weight {:.2}",
+            s.device.name,
+            s.rf,
+            100.0 * s.lut_util,
+            replica_fps(&net, s),
+            weights[i]
+        );
+    }
+
+    let (mut srv, fm) = match backend {
+        "mock" => {
+            // mock service time tracks the analytic capacity: replica i
+            // serves one item in `--service-us / weight_i`, so the fleet's
+            // heterogeneity is observable without hardware
+            let service_us = a.get_f64("service-us", 400.0);
+            let svc: Vec<Duration> = weights
+                .iter()
+                .map(|w| Duration::from_secs_f64(service_us * 1e-6 / w.max(1e-3)))
+                .collect();
+            let mut srv = Server::start(
+                move |i| MockBackend::with_service(Duration::ZERO, svc[i]),
+                cfg,
+            );
+            let fm = srv.replay(&trace, 8, seed);
+            (srv, fm)
+        }
+        "pjrt" => {
+            let arts = Path::new(a.get_or("artifacts", "artifacts")).to_path_buf();
+            let probe = runtime::Engine::load(&arts, model)?;
+            let per = probe.manifest.input_elements_per_sample() as usize;
+            drop(probe);
+            let mut srv = Server::start(
+                move |_| runtime::Engine::load(&arts, model).expect("engine"),
+                cfg,
+            );
+            let fm = srv.replay(&trace, per, seed);
+            (srv, fm)
+        }
+        other => anyhow::bail!("unknown backend {other} (mock|pjrt)"),
+    };
     srv.shutdown();
-    println!("serve {model}: {}", metrics.summary());
+    println!(
+        "serve [{model} x{replicas} {policy_name}/{trace_name}] offered {:.0} req/s:",
+        trace.offered_rate()
+    );
+    println!("{}", fm.summary());
     Ok(())
 }
 
@@ -321,7 +383,10 @@ subcommands:
   perf    analytic FPS/latency of an accelerator (--network, --mhz)
   gals    cycle-level GALS streamer simulation (--nb, --rf, --static)
   golden  verify PJRT runtime against python golden outputs
-  serve   run the CIFAR-10 inference server end to end (--requests, --rate)
+  serve   multi-replica sharded inference serving (--replicas N --policy
+          round-robin|jsq|weighted --trace poisson|bursty|heavy --backend
+          mock|pjrt); weighted capacity comes from the sim/timing model of
+          each replica's --devices entry
   dse     folding design-space exploration (--network, --device, --budget)
   floorplan  SLR floorplan of a network on a multi-die device (Fig. 5)";
 

@@ -10,9 +10,13 @@ use crate::util::rng::Rng;
 /// Simulated-annealing packer.
 #[derive(Clone, Copy, Debug)]
 pub struct Anneal {
+    /// Total move/swap proposals to evaluate.
     pub iterations: usize,
+    /// Initial temperature (BRAM18 cost units).
     pub t0: f64,
+    /// Geometric cooling factor applied per iteration.
     pub cooling: f64,
+    /// PRNG seed (runs are deterministic per seed).
     pub seed: u64,
 }
 

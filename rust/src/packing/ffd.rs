@@ -18,6 +18,8 @@ pub struct Ffd {
 }
 
 impl Ffd {
+    /// The default engine: width-matched best-fit-decreasing (the baseline
+    /// every stochastic engine is seeded with and measured against).
     pub fn new() -> Ffd {
         Ffd { match_width: true }
     }

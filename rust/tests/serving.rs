@@ -1,0 +1,210 @@
+//! Serving-path integration tests on the deterministic mock backend: exact
+//! dispatch counts per scheduling policy, admission-control shedding and
+//! the typed QueueFull/Closed error split, shutdown-drain semantics, and a
+//! property test that fleet completions are a permutation of submissions
+//! under every policy.
+
+use std::time::Duration;
+
+use fcmp::coordinator::{
+    BatcherConfig, Completion, MockBackend, Policy, Server, ServerConfig, SubmitError,
+};
+use fcmp::util::prop;
+
+fn cfg(replicas: usize, policy: Policy, queue_depth: usize, max_batch: usize) -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
+        queue_depth,
+        replicas,
+        policy,
+    }
+}
+
+/// Drain every remaining completion (call after `shutdown`).
+fn drain(srv: &mut Server) -> Vec<Completion> {
+    let mut out = Vec::new();
+    while let Some(c) = srv.next_completion() {
+        out.push(c);
+    }
+    out
+}
+
+#[test]
+fn round_robin_splits_exactly_evenly() {
+    let mut srv = Server::start(|_| MockBackend::instant(), cfg(2, Policy::RoundRobin, 64, 1));
+    for i in 0..40 {
+        srv.submit_blocking(i, vec![i as f32]).unwrap();
+    }
+    srv.shutdown();
+    let cs = drain(&mut srv);
+    assert_eq!(cs.len(), 40);
+    let c0 = cs.iter().filter(|c| c.replica == 0).count();
+    assert_eq!(c0, 20, "round-robin must alternate exactly");
+}
+
+#[test]
+fn weighted_matches_capacity_ratio_exactly() {
+    // SWRR with weights 3:1 dispatches exactly 30/10 over 40 requests
+    let mut srv = Server::start(
+        |_| MockBackend::instant(),
+        cfg(2, Policy::Weighted(vec![3.0, 1.0]), 64, 1),
+    );
+    for i in 0..40 {
+        srv.submit_blocking(i, vec![1.0]).unwrap();
+    }
+    srv.shutdown();
+    let cs = drain(&mut srv);
+    assert_eq!(cs.len(), 40);
+    let c0 = cs.iter().filter(|c| c.replica == 0).count();
+    assert_eq!(c0, 30, "weighted 3:1 must dispatch 30/10");
+}
+
+#[test]
+fn jsq_steers_load_away_from_the_slow_replica() {
+    // replica 0 takes 50 ms per batch, replica 1 is instant; paced arrivals
+    // let JSQ observe the asymmetry through the outstanding counters
+    let mut srv = Server::start(
+        |i| {
+            if i == 0 {
+                MockBackend::with_service(Duration::from_millis(50), Duration::ZERO)
+            } else {
+                MockBackend::instant()
+            }
+        },
+        cfg(2, Policy::JoinShortestQueue, 64, 1),
+    );
+    for i in 0..30 {
+        srv.submit_blocking(i, vec![1.0]).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    srv.shutdown();
+    let cs = drain(&mut srv);
+    assert_eq!(cs.len(), 30);
+    let c0 = cs.iter().filter(|c| c.replica == 0).count();
+    let c1 = cs.len() - c0;
+    assert!(c1 >= 2 * c0, "JSQ sent {c0} to the slow replica, {c1} to the fast one");
+}
+
+#[test]
+fn overload_sheds_with_queue_full_and_recovers() {
+    let mut srv = Server::start(
+        |_| MockBackend::with_service(Duration::from_millis(30), Duration::ZERO),
+        cfg(1, Policy::RoundRobin, 2, 1),
+    );
+    // burst far beyond queue capacity: the excess must shed as QueueFull
+    let mut shed = 0;
+    for i in 0..40 {
+        match srv.submit(i, vec![1.0]) {
+            Ok(_) => {}
+            Err(e @ SubmitError::QueueFull(_)) => {
+                assert!(!e.is_closed());
+                shed += 1;
+            }
+            Err(SubmitError::Closed(_)) => panic!("open server must never report Closed"),
+        }
+    }
+    assert!(shed > 0, "burst must overflow the depth-2 queue");
+    // after the backlog drains, admission recovers
+    std::thread::sleep(Duration::from_millis(200));
+    assert!(srv.submit(99, vec![1.0]).is_ok(), "queue must reopen after draining");
+    srv.shutdown();
+    let n = drain(&mut srv).len();
+    assert_eq!(n, 40 - shed + 1, "every accepted request must complete");
+}
+
+#[test]
+fn closed_error_is_distinct_from_queue_full() {
+    let mut srv = Server::start(|_| MockBackend::instant(), cfg(2, Policy::RoundRobin, 4, 1));
+    srv.submit(0, vec![1.0]).unwrap();
+    srv.shutdown();
+    match srv.submit(1, vec![2.0]) {
+        Err(SubmitError::Closed(r)) => {
+            assert_eq!(r.id, 1);
+            assert_eq!(r.input, vec![2.0], "the request must ride back intact");
+        }
+        other => panic!("want Closed after shutdown, got {other:?}"),
+    }
+    // the error is a real std error with distinct messages per variant
+    let closed = srv.submit(2, vec![1.0]).unwrap_err();
+    assert!(closed.is_closed());
+    assert!(format!("{closed}").contains("shut down"));
+    assert_eq!(closed.into_request().id, 2);
+}
+
+#[test]
+fn shutdown_drains_every_in_flight_request() {
+    let mut srv = Server::start(
+        |_| MockBackend::with_service(Duration::from_millis(1), Duration::from_millis(1)),
+        cfg(3, Policy::RoundRobin, 128, 4),
+    );
+    for i in 0..90 {
+        srv.submit_blocking(i, vec![i as f32, 2.0]).unwrap();
+    }
+    // shutdown must wait for all three replicas to drain their queues
+    srv.shutdown();
+    let cs = drain(&mut srv);
+    assert_eq!(cs.len(), 90, "shutdown dropped in-flight requests");
+    let mut ids: Vec<u64> = cs.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..90).collect::<Vec<u64>>());
+    for c in &cs {
+        // mock output[0] = sum of the request's inputs = id + 2
+        assert_eq!(c.output[0], c.id as f32 + 2.0, "wrong output for {}", c.id);
+        assert!(c.replica < 3);
+    }
+}
+
+#[test]
+fn prop_fleet_completions_are_a_permutation_of_submissions() {
+    // random (n, replicas, policy) cases; under every policy, every
+    // submitted id comes back exactly once with the right output
+    prop::check(
+        2024,
+        12,
+        |r| vec![1 + r.below(50), 1 + r.below(4), r.below(3)],
+        |v: &Vec<u64>| {
+            let n = v.first().copied().unwrap_or(8).clamp(1, 50);
+            let replicas = v.get(1).copied().unwrap_or(1).clamp(1, 4) as usize;
+            let policy = match v.get(2).copied().unwrap_or(0) % 3 {
+                0 => Policy::RoundRobin,
+                1 => Policy::JoinShortestQueue,
+                _ => Policy::Weighted((1..=replicas).map(|i| i as f64).collect()),
+            };
+            let mut srv = Server::start(
+                |_| MockBackend::instant(),
+                ServerConfig {
+                    batcher: BatcherConfig {
+                        max_batch: 4,
+                        max_wait: Duration::from_micros(200),
+                    },
+                    queue_depth: 64,
+                    replicas,
+                    policy,
+                },
+            );
+            for i in 0..n {
+                if srv.submit_blocking(i, vec![i as f32]).is_err() {
+                    return Err("server closed during submit".to_string());
+                }
+            }
+            srv.shutdown();
+            let mut ids = Vec::new();
+            while let Some(c) = srv.next_completion() {
+                if c.output[0] != c.id as f32 {
+                    return Err(format!("output mismatch for id {}", c.id));
+                }
+                if c.replica >= replicas {
+                    return Err(format!("completion from unknown replica {}", c.replica));
+                }
+                ids.push(c.id);
+            }
+            ids.sort_unstable();
+            let want: Vec<u64> = (0..n).collect();
+            if ids == want {
+                Ok(())
+            } else {
+                Err(format!("ids {ids:?} are not a permutation of 0..{n}"))
+            }
+        },
+    );
+}
