@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Compare a bench JSON artifact against the previous run's artifact and
+flag perf regressions as GitHub Actions warnings.
+
+Rows are joined on their string-valued identity fields (policy, trace,
+network, mix, ...) plus integer cardinalities (replicas, shards); numeric
+fields are compared directionally:
+
+* latency-like fields (``*_ms``, higher is worse) warn above ``--lat-tol``
+  (ratio current/previous);
+* throughput-like fields (``throughput_fps``, ``sim_fps``, ``analytic_fps``,
+  ``completed``, lower is worse) warn below ``--tp-tol``.
+
+Exit code is always 0: these benches run on shared CI runners where
+wall-clock noise is real, so the comparison *flags* rather than fails —
+the same philosophy as serve_scaling's soft scaling check. Rows present
+in only one file are reported informationally.
+"""
+
+import argparse
+import json
+import sys
+
+LATENCY_SUFFIXES = ("_ms",)
+THROUGHPUT_FIELDS = {
+    "throughput_fps", "sim_fps", "analytic_fps", "completed", "chain_completed",
+    "fps", "vs_analytic",
+}
+SKIP_FIELDS = {"partition_ms"}  # machine-speed dependent, not a serving metric
+
+
+def row_key(row):
+    # identity = string fields + structural cardinalities; booleans like
+    # `feasible` are OUTCOMES, not identity — a feasibility flip must
+    # compare against the old row and warn, not dodge the join
+    parts = []
+    for k in sorted(row):
+        v = row[k]
+        if isinstance(v, bool):
+            continue
+        if isinstance(v, str):
+            parts.append(f"{k}={v}")
+        elif isinstance(v, int) and k in ("replicas", "shards"):
+            parts.append(f"{k}={v}")
+    return "|".join(parts)
+
+
+def load(path):
+    with open(path) as f:
+        rows = json.load(f)
+    return {row_key(r): r for r in rows}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("previous")
+    ap.add_argument("current")
+    ap.add_argument("--lat-tol", type=float, default=1.5,
+                    help="warn when latency grows past this ratio")
+    ap.add_argument("--tp-tol", type=float, default=0.7,
+                    help="warn when throughput falls below this ratio")
+    ap.add_argument("--label", default="bench")
+    args = ap.parse_args()
+
+    try:
+        prev = load(args.previous)
+        curr = load(args.current)
+    except (OSError, ValueError) as e:
+        print(f"::notice::{args.label}: comparison skipped ({e})")
+        return 0
+
+    warned = 0
+    for key, crow in sorted(curr.items()):
+        prow = prev.get(key)
+        if prow is None:
+            print(f"{args.label}: new row (no baseline): {key}")
+            continue
+        for field, cval in crow.items():
+            if field in SKIP_FIELDS or not isinstance(cval, (int, float)):
+                continue
+            pval = prow.get(field)
+            if isinstance(cval, bool) or isinstance(pval, bool):
+                # boolean outcome flip (e.g. a plan stopped fitting) is the
+                # most severe regression class
+                if pval is True and cval is False:
+                    print(f"::warning::{args.label} regression: {key} {field} "
+                          f"flipped true -> false")
+                    warned += 1
+                continue
+            if not isinstance(pval, (int, float)):
+                continue
+            if field.endswith(LATENCY_SUFFIXES):
+                if pval > 1e-9 and cval / pval > args.lat_tol:
+                    print(f"::warning::{args.label} regression: {key} {field} "
+                          f"{pval:.3f} -> {cval:.3f} ({cval / pval:.2f}x)")
+                    warned += 1
+            elif field in THROUGHPUT_FIELDS:
+                if pval > 1e-9 and cval / pval < args.tp_tol:
+                    print(f"::warning::{args.label} regression: {key} {field} "
+                          f"{pval:.1f} -> {cval:.1f} ({cval / pval:.2f}x)")
+                    warned += 1
+    for key in sorted(set(prev) - set(curr)):
+        print(f"{args.label}: row disappeared: {key}")
+
+    print(f"{args.label}: compared {len(curr)} rows against baseline, "
+          f"{warned} regression flag(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

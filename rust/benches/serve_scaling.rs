@@ -12,7 +12,8 @@ use std::path::Path;
 use std::time::Duration;
 
 use fcmp::coordinator::{
-    bursty, heavy_tail, poisson, BatcherConfig, MockBackend, Policy, Server, ServerConfig, Trace,
+    bursty, diurnal, heavy_tail, poisson, BatcherConfig, MockBackend, Policy, Server,
+    ServerConfig, Trace,
 };
 use fcmp::util::args::Args;
 use fcmp::util::bench::Table;
@@ -130,6 +131,8 @@ fn main() {
         ("poisson", poisson(n, rate, 42)),
         ("bursty", bursty(n, rate, rate * 8.0, 24, 42)),
         ("heavy-tail", heavy_tail(n, rate, 1.5, 42)),
+        // day/night drift: trough rate/2, peak 2*rate, two cycles per trace
+        ("diurnal", diurnal(n, rate / 2.0, rate * 2.0, n as f64 / rate / 2.0, 42)),
     ];
     let policies: [&'static str; 3] = ["round-robin", "jsq", "weighted"];
 

@@ -1,0 +1,203 @@
+//! Bench: pipeline-parallel sharding scaling — shard count × device mix →
+//! analytic and simulated FPS, per-shard OCM pressure, link utilization,
+//! and partitioner wall time. Every cell partitions a network over a
+//! device list with per-shard FCMP packing (FFD engine: deterministic and
+//! fast, and the process-wide packing cache dedups repeated ranges), then
+//! validates the plan with the discrete-event staged-pipeline simulator
+//! and a diurnal stage-chain serving replay on calibrated mocks.
+//!
+//! Flags: `--smoke` shrinks frames/requests for CI; `--json` writes the
+//! cells to `BENCH_sharding.json` (the sharding perf-trajectory artifact).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use fcmp::coordinator::{
+    diurnal, shard_service_times, BatcherConfig, MockBackend, Policy, Server, ServerConfig,
+};
+use fcmp::device;
+use fcmp::nn::{cnv, resnet50, CnvVariant, Network};
+use fcmp::sharding::{partition, PartitionConfig, ShardPlan};
+use fcmp::sim;
+use fcmp::util::args::Args;
+use fcmp::util::bench::Table;
+
+struct Cell {
+    network: String,
+    mix: String,
+    shards: usize,
+    feasible: bool,
+    analytic_fps: f64,
+    sim_fps: f64,
+    vs_analytic: f64,
+    max_ocm_pct: f64,
+    max_link_pct: f64,
+    partition_ms: f64,
+    chain_p99_ms: f64,
+    chain_completed: usize,
+}
+
+fn infeasible_cell(network: &str, mix: &str, shards: usize, elapsed_ms: f64) -> Cell {
+    Cell {
+        network: network.to_string(),
+        mix: mix.to_string(),
+        shards,
+        feasible: false,
+        analytic_fps: 0.0,
+        sim_fps: 0.0,
+        vs_analytic: 0.0,
+        max_ocm_pct: 0.0,
+        max_link_pct: 0.0,
+        partition_ms: elapsed_ms,
+        chain_p99_ms: 0.0,
+        chain_completed: 0,
+    }
+}
+
+/// Replay a diurnal trace through the plan's stage chain on mocks whose
+/// per-stage service equals the analytic shard intervals; returns
+/// (end-to-end p99 ms, completed requests).
+fn chain_replay(plan: &ShardPlan, requests: usize) -> (f64, usize) {
+    let svc = shard_service_times(plan);
+    // keep mock sleeps sane on CI: cap per-stage service at 2 ms
+    let svc: Vec<Duration> = svc.into_iter().map(|d| d.min(Duration::from_millis(2))).collect();
+    let cfg = ServerConfig {
+        batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+        queue_depth: 32,
+        replicas: plan.shards.len(),
+        policy: Policy::StageChain,
+    };
+    let bottleneck = svc.iter().cloned().max().unwrap_or(Duration::from_micros(100));
+    let rate = (0.7 / bottleneck.as_secs_f64()).min(4000.0);
+    let mut srv = Server::start_chain(
+        move |i| MockBackend::with_service(Duration::ZERO, svc[i]),
+        cfg,
+    );
+    let trace = diurnal(requests, (rate * 0.5).max(1.0), rate, 2.0, 42);
+    let fm = srv.replay(&trace, 4, 42);
+    srv.shutdown();
+    let s = fm.summary();
+    match s.fleet {
+        Some(f) => (f.latency_ms.p99, f.requests),
+        None => (0.0, 0),
+    }
+}
+
+fn run_cell(net: &Network, mix: &str, frames: u64, requests: usize) -> Cell {
+    let devices: Vec<device::Device> =
+        mix.split('+').map(|n| device::by_name(n).expect("device name")).collect();
+    let cfg = PartitionConfig { generations: 0, ..PartitionConfig::default() };
+    let t0 = Instant::now();
+    let plan = partition(net, &devices, cfg);
+    let partition_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let plan = match plan {
+        Err(_) => return infeasible_cell(&net.name, mix, devices.len(), partition_ms),
+        Ok(p) => p,
+    };
+    let r = sim::simulate_sharded(net, &plan, frames, 8);
+    let (chain_p99_ms, chain_completed) = chain_replay(&plan, requests);
+    Cell {
+        network: net.name.clone(),
+        mix: mix.to_string(),
+        shards: plan.shards.len(),
+        feasible: true,
+        analytic_fps: plan.fps,
+        sim_fps: r.fps,
+        vs_analytic: r.vs_analytic,
+        max_ocm_pct: 100.0 * plan.shards.iter().map(|s| s.bram_pressure()).fold(0.0, f64::max),
+        max_link_pct: 100.0 * plan.link_utilization().into_iter().fold(0.0, f64::max),
+        partition_ms,
+        chain_p99_ms,
+        chain_completed,
+    }
+}
+
+fn cells_json(cells: &[Cell]) -> String {
+    let mut out = String::from("[");
+    for (k, c) in cells.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"network\":{:?},\"mix\":{:?},\"shards\":{},\"feasible\":{},\
+             \"analytic_fps\":{:.1},\"sim_fps\":{:.1},\"vs_analytic\":{:.4},\
+             \"max_ocm_pct\":{:.1},\"max_link_pct\":{:.1},\"partition_ms\":{:.3},\
+             \"chain_p99_ms\":{:.3},\"chain_completed\":{}}}",
+            c.network,
+            c.mix,
+            c.shards,
+            c.feasible,
+            c.analytic_fps,
+            c.sim_fps,
+            c.vs_analytic,
+            c.max_ocm_pct,
+            c.max_link_pct,
+            c.partition_ms,
+            c.chain_p99_ms,
+            c.chain_completed
+        ));
+    }
+    out.push(']');
+    out
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    let frames = if smoke { 150 } else { 400 };
+    let requests = if smoke { 80 } else { 256 };
+
+    let cnv2 = cnv(CnvVariant::W2A2);
+    let rn50 = resnet50(1);
+    let cases: Vec<(&Network, &str)> = vec![
+        (&cnv2, "7012s"),
+        (&cnv2, "7012s+7012s"),
+        (&cnv2, "7020+7012s"),
+        (&cnv2, "7012s+7012s+7012s"),
+        (&rn50, "u280"),
+        (&rn50, "u280+u280"),
+        (&rn50, "u250+u280"),
+    ];
+
+    let mut cells = Vec::new();
+    let mut t = Table::new([
+        "network", "mix", "k", "feasible", "analytic fps", "sim fps", "sim/analytic",
+        "max OCM %", "link %", "partition ms", "chain p99 ms",
+    ]);
+    for (net, mix) in cases {
+        let c = run_cell(net, mix, frames, requests);
+        t.row([
+            c.network.clone(),
+            c.mix.clone(),
+            format!("{}", c.shards),
+            format!("{}", c.feasible),
+            format!("{:.0}", c.analytic_fps),
+            format!("{:.0}", c.sim_fps),
+            format!("{:.3}", c.vs_analytic),
+            format!("{:.0}", c.max_ocm_pct),
+            format!("{:.0}", c.max_link_pct),
+            format!("{:.1}", c.partition_ms),
+            format!("{:.2}", c.chain_p99_ms),
+        ]);
+        cells.push(c);
+    }
+    println!("== Sharding scaling (FFD engine, {frames} sim frames) ==");
+    println!("{}", t.render());
+
+    // hard signal: every feasible plan's sim must track the analytic model
+    for c in &cells {
+        if c.feasible && (c.vs_analytic - 1.0).abs() > 0.02 {
+            eprintln!(
+                "WARNING {}/{}: sim {:.1} fps vs analytic {:.1} ({:.3}) — \
+                 staged-pipeline model drift",
+                c.network, c.mix, c.sim_fps, c.analytic_fps, c.vs_analytic
+            );
+        }
+    }
+
+    if args.has_flag("json") {
+        let path = Path::new("BENCH_sharding.json");
+        std::fs::write(path, cells_json(&cells)).expect("writing BENCH_sharding.json");
+        println!("wrote {} ({} cells)", path.display(), cells.len());
+    }
+}

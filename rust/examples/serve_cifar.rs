@@ -8,10 +8,8 @@
 //! and report fleet + per-replica throughput and latency percentiles.
 //! Requires `make artifacts`. The run is recorded in EXPERIMENTS.md §E2E.
 //!
-//! NOTE: the examples/ directory sits outside the cargo package (see
-//! ROADMAP open items), so build this with an explicit path, e.g.
-//! `rustc` against the built library or copy into `rust/examples/`;
-//! args: `[requests] [rate] [replicas]`.
+//! Run: `cargo run --release --example serve_cifar -- [requests] [rate]
+//! [replicas]` (from `rust/`; the artifacts/ directory must exist).
 
 use fcmp::coordinator::{poisson, BatcherConfig, Policy, Server, ServerConfig};
 use fcmp::runtime::Engine;

@@ -59,7 +59,7 @@ mod tests {
     use std::time::Instant;
 
     fn req(id: u64) -> Request {
-        Request { id, input: vec![0.0; 4], arrival: Instant::now() }
+        Request::new(id, vec![0.0; 4])
     }
 
     #[test]

@@ -43,6 +43,27 @@ impl ReplicaSpec {
         };
         ReplicaSpec { device, rf: 2.0, lut_util }
     }
+
+    /// Operating point derived from actually packing `net` on `device` at
+    /// `bin_height`: the LUT density comes from the resource model plus the
+    /// packed design's streamer/CDC logic. The packing is fetched through
+    /// the process-wide [`crate::packing::cache`], so a fleet of N
+    /// identical replicas packs once, not N times.
+    pub fn packed_point(
+        net: &Network,
+        device: Device,
+        bin_height: usize,
+        generations: usize,
+        seed: u64,
+    ) -> ReplicaSpec {
+        let packed =
+            crate::report::pack_network_cached(net, &device, bin_height, generations, seed);
+        let res = crate::folding::network_resources(net, &device);
+        // clamp: the timing model wants a density in [0, 1]; feasibility
+        // (util > 1.0) is the sharding partitioner's job, not capacity's
+        let lut_util = crate::folding::packed_lut_util(&res, packed.logic_kluts, &device).min(1.0);
+        ReplicaSpec { device, rf: bin_height as f64 / 2.0, lut_util }
+    }
 }
 
 /// Analytic throughput (frames/s) of `net` deployed at `spec`: the timing
@@ -64,6 +85,17 @@ pub fn fleet_weights(net: &Network, specs: &[ReplicaSpec]) -> Vec<f64> {
     let fps: Vec<f64> = specs.iter().map(|s| replica_fps(net, s)).collect();
     let mean = fps.iter().sum::<f64>() / fps.len() as f64;
     fps.iter().map(|f| f / mean.max(1e-12)).collect()
+}
+
+/// Per-stage service times of a sharded pipeline plan — shard `j` serves
+/// one frame every `seconds_per_frame(j)`. Calibrates the mock backends of
+/// a stage chain ([`crate::coordinator::Server::start_chain`]) so chain
+/// serving experiments reflect the analytic plan without hardware.
+pub fn shard_service_times(plan: &crate::sharding::ShardPlan) -> Vec<std::time::Duration> {
+    plan.shards
+        .iter()
+        .map(|s| std::time::Duration::from_secs_f64(s.seconds_per_frame))
+        .collect()
 }
 
 #[cfg(test)]
@@ -122,5 +154,36 @@ mod tests {
     #[test]
     fn empty_fleet_has_no_weights() {
         assert!(fleet_weights(&cnv(CnvVariant::W1A1), &[]).is_empty());
+    }
+
+    #[test]
+    fn packed_point_is_cached_across_replicas() {
+        // spinning up N identical replicas must reuse one packed design:
+        // the second fetch returns the *same* Arc (pointer equality is
+        // immune to other tests inserting into the global cache in
+        // parallel)
+        let net = cnv(CnvVariant::W1A1);
+        let a = crate::report::pack_network_cached(&net, &zynq_7020(), 4, 0, 987_654);
+        let b = crate::report::pack_network_cached(&net, &zynq_7020(), 4, 0, 987_654);
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "second spin-up re-packed");
+        let spec = ReplicaSpec::packed_point(&net, zynq_7020(), 4, 0, 987_654);
+        assert_eq!(spec.rf, 2.0);
+        assert!(spec.lut_util > 0.0 && spec.lut_util <= 1.0);
+    }
+
+    #[test]
+    fn shard_service_times_match_the_plan() {
+        let net = cnv(CnvVariant::W2A2);
+        let devs = [zynq_7012s(), zynq_7012s()];
+        let cfg = crate::sharding::PartitionConfig {
+            generations: 0,
+            ..crate::sharding::PartitionConfig::default()
+        };
+        let plan = crate::sharding::partition(&net, &devs, cfg).unwrap();
+        let times = shard_service_times(&plan);
+        assert_eq!(times.len(), plan.shards.len());
+        for (t, s) in times.iter().zip(&plan.shards) {
+            assert!((t.as_secs_f64() - s.seconds_per_frame).abs() < 1e-12);
+        }
     }
 }

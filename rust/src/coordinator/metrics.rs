@@ -145,10 +145,25 @@ impl FleetMetrics {
     }
 
     /// Record a completion against the fleet and its serving replica.
+    ///
+    /// Stage-chain completions (non-empty [`Completion::stage_latencies`])
+    /// split differently: the fleet collector sees the end-to-end latency
+    /// while each per-replica collector sees that *stage's* transit
+    /// latency, so per-replica percentiles localize the slow stage and the
+    /// fleet percentiles answer the SLO question.
     pub fn record(&mut self, c: &Completion) {
         self.fleet.record(c.latency, c.batch_size);
-        if let Some(m) = self.per_replica.get_mut(c.replica) {
-            m.record(c.latency, c.batch_size);
+        if c.stage_latencies.is_empty() {
+            if let Some(m) = self.per_replica.get_mut(c.replica) {
+                m.record(c.latency, c.batch_size);
+            }
+        } else {
+            for (i, &lat) in c.stage_latencies.iter().enumerate() {
+                if let Some(m) = self.per_replica.get_mut(i) {
+                    let batch = c.stage_batches.get(i).copied().unwrap_or(c.batch_size);
+                    m.record(lat, batch);
+                }
+            }
         }
     }
 
@@ -248,6 +263,8 @@ mod tests {
             latency: Duration::from_millis(ms),
             batch_size: batch,
             replica,
+            stage_latencies: Vec::new(),
+            stage_batches: Vec::new(),
         }
     }
 
@@ -281,5 +298,41 @@ mod tests {
         fm.record(&completion(0, 5, 1, 1));
         assert_eq!(fm.completed(), 1);
         assert!(fm.summary().per_replica[0].is_none());
+    }
+
+    #[test]
+    fn chain_completions_split_per_stage_and_end_to_end() {
+        let mut fm = FleetMetrics::new(3);
+        fm.start();
+        for i in 0..4 {
+            let mut c = completion(i, 2, 60, 1);
+            c.stage_latencies = vec![
+                Duration::from_millis(10),
+                Duration::from_millis(40),
+                Duration::from_millis(10),
+            ];
+            c.stage_batches = vec![4, 2, 1];
+            fm.record(&c);
+        }
+        let s = fm.summary();
+        // the fleet sees end-to-end latency...
+        assert!((s.fleet.as_ref().unwrap().latency_ms.median - 60.0).abs() < 1e-9);
+        // ...while each stage collector sees its own transit latency, so
+        // the bottleneck stage is visible in the per-replica percentiles
+        let stage_medians: Vec<f64> = s
+            .per_replica
+            .iter()
+            .map(|r| r.as_ref().unwrap().latency_ms.median)
+            .collect();
+        assert!((stage_medians[0] - 10.0).abs() < 1e-9);
+        assert!((stage_medians[1] - 40.0).abs() < 1e-9);
+        assert!((stage_medians[2] - 10.0).abs() < 1e-9);
+        // each stage reports its own batch size, not the final stage's
+        let stage_batches: Vec<f64> = s
+            .per_replica
+            .iter()
+            .map(|r| r.as_ref().unwrap().mean_batch)
+            .collect();
+        assert_eq!(stage_batches, vec![4.0, 2.0, 1.0]);
     }
 }

@@ -26,6 +26,13 @@
 //!                            submitted/shed counters
 //! ```
 //!
+//! A replica group can also be a **stage chain** (pipeline-parallel
+//! sharding, [`crate::sharding`]): [`Server::start_chain`] wires stage
+//! `i`'s outputs into stage `i+1`'s bounded queue, every frame traverses
+//! stages `0..k-1` in order, and the final completion carries per-stage
+//! transit latencies plus the end-to-end latency ([`FleetMetrics`] then
+//! reports per-stage queues and an end-to-end p99).
+//!
 //! Module map: [`policy`] (scheduling), `replica` (worker shard, private),
 //! [`capacity`] (analytic capacity weights), [`server`] (router, admission
 //! control, shutdown-drain), [`batcher`] (size-or-deadline batching),
@@ -40,13 +47,13 @@ pub mod server;
 pub mod workload;
 
 pub use batcher::{Batch, BatcherConfig};
-pub use capacity::{fleet_weights, replica_fps, ReplicaSpec};
+pub use capacity::{fleet_weights, replica_fps, shard_service_times, ReplicaSpec};
 pub use metrics::{FleetMetrics, FleetSummary, Metrics, ServeSummary};
 pub use policy::{Policy, Scheduler};
 pub use server::{InferBackend, MockBackend, Server, ServerConfig, SubmitError};
-pub use workload::{bursty, heavy_tail, poisson, uniform, Trace};
+pub use workload::{bursty, diurnal, heavy_tail, poisson, uniform, Trace};
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One inference request.
 #[derive(Debug)]
@@ -55,8 +62,32 @@ pub struct Request {
     pub id: u64,
     /// Flattened input image (f32, manifest sample element count).
     pub input: Vec<f32>,
-    /// Submission time (latency accounting starts here).
+    /// Submission time (end-to-end latency accounting starts here).
     pub arrival: Instant,
+    /// Arrival at the *current* stage of a stage chain (== `arrival` until
+    /// the first hop; reset at every chain forward).
+    pub stage_arrival: Instant,
+    /// Per-stage latencies accumulated while traversing a stage chain
+    /// (empty on replicated fleets).
+    pub stage_latencies: Vec<Duration>,
+    /// Batch size the frame rode in at each traversed stage (parallel to
+    /// `stage_latencies`).
+    pub stage_batches: Vec<usize>,
+}
+
+impl Request {
+    /// A fresh request arriving now.
+    pub fn new(id: u64, input: Vec<f32>) -> Request {
+        let now = Instant::now();
+        Request {
+            id,
+            input,
+            arrival: now,
+            stage_arrival: now,
+            stage_latencies: Vec::new(),
+            stage_batches: Vec::new(),
+        }
+    }
 }
 
 /// One completed inference.
@@ -66,10 +97,17 @@ pub struct Completion {
     pub id: u64,
     /// Flattened output row.
     pub output: Vec<f32>,
-    /// Queue + batch + execute latency.
+    /// Queue + batch + execute latency — end-to-end across every stage for
+    /// chain deployments.
     pub latency: std::time::Duration,
-    /// Size of the batch this request rode in.
+    /// Size of the batch this request rode in (at the final stage).
     pub batch_size: usize,
-    /// Index of the replica that served it.
+    /// Index of the replica that served it (the last stage of a chain).
     pub replica: usize,
+    /// Per-stage latencies for stage-chain deployments, in traversal order
+    /// (`len == chain length`); empty on replicated fleets.
+    pub stage_latencies: Vec<Duration>,
+    /// Per-stage batch sizes, parallel to `stage_latencies` (each stage
+    /// batches independently).
+    pub stage_batches: Vec<usize>,
 }

@@ -29,11 +29,21 @@ pub enum Policy {
     /// Smooth weighted round-robin over per-replica capacity weights
     /// (requests/s from the analytic model; any positive scale works).
     Weighted(Vec<f64>),
+    /// The replicas form a pipeline-parallel stage chain
+    /// ([`crate::coordinator::Server::start_chain`]): every new frame
+    /// enters stage 0 and the stages forward it 0→1→…→k-1 themselves, so
+    /// the router always picks 0 and never falls back to a mid-chain
+    /// stage.
+    StageChain,
 }
 
 impl Policy {
     /// Parse a CLI policy name. `weights` are the capacity weights consumed
     /// by the `weighted` policy and ignored by the other two.
+    /// [`Policy::StageChain`] is deliberately not parseable: it only makes
+    /// sense for fleets built by `Server::start_chain`, which sets it
+    /// itself — on a replicated fleet it would silently pin every request
+    /// to replica 0.
     pub fn by_name(name: &str, weights: Vec<f64>) -> Option<Policy> {
         match name {
             "rr" | "round-robin" | "round_robin" => Some(Policy::RoundRobin),
@@ -49,6 +59,7 @@ impl Policy {
             Policy::RoundRobin => "round-robin",
             Policy::JoinShortestQueue => "jsq",
             Policy::Weighted(_) => "weighted",
+            Policy::StageChain => "stage-chain",
         }
     }
 }
@@ -132,6 +143,8 @@ impl Scheduler {
                 self.swrr_credit[best] -= total;
                 best
             }
+            // chains always ingest at stage 0; the stages forward onward
+            Policy::StageChain => 0,
         }
     }
 }
@@ -198,6 +211,18 @@ mod tests {
             assert_eq!(p.name(), name);
         }
         assert!(Policy::by_name("magic", vec![]).is_none());
+        // stage-chain is not a router policy users can pick for a
+        // replicated fleet; only Server::start_chain installs it
+        assert!(Policy::by_name("stage-chain", vec![]).is_none());
+        assert_eq!(Policy::StageChain.name(), "stage-chain");
+    }
+
+    #[test]
+    fn stage_chain_always_enters_at_stage_zero() {
+        let mut s = Scheduler::new(Policy::StageChain, 4);
+        for _ in 0..10 {
+            assert_eq!(s.pick(&[5, 0, 0, 0]), 0);
+        }
     }
 
     #[test]

@@ -4,11 +4,18 @@
 //! crosses threads). The router sees a replica as (bounded sender,
 //! outstanding-request counter); completions from all replicas merge into
 //! the fleet-wide completion channel.
+//!
+//! A replica's output side is a [`Sink`]: terminal replicas emit
+//! [`Completion`]s; chained replicas (pipeline-parallel sharding,
+//! [`crate::sharding`]) forward each output as the next stage's
+//! [`Request`] over that stage's bounded queue — the blocking send *is*
+//! the inter-device FIFO backpressure.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use super::batcher::{next_batch, BatcherConfig};
 use super::server::InferBackend;
@@ -23,6 +30,16 @@ pub(crate) enum TrySubmit {
     Closed(Request),
 }
 
+/// Where a replica's outputs go.
+pub(crate) enum Sink {
+    /// Terminal stage: emit completions onto the fleet-wide stream.
+    Complete(Sender<Completion>),
+    /// Chain stage: forward each output as the next stage's request. The
+    /// downstream outstanding counter is incremented before the send, the
+    /// same discipline as [`Replica::try_submit`].
+    Forward { next: SyncSender<Request>, next_outstanding: Arc<AtomicUsize> },
+}
+
 /// A running replica: router-side handle plus the worker thread.
 pub(crate) struct Replica {
     tx: Option<SyncSender<Request>>,
@@ -33,15 +50,15 @@ pub(crate) struct Replica {
 
 impl Replica {
     /// Spawn replica `index`. The worker loops `next_batch -> infer_batch ->
-    /// completions` until the request channel is closed *and* drained, so a
-    /// fleet shutdown never drops accepted requests. A failed batch is
-    /// dropped (its completions never appear) but the replica keeps serving.
+    /// sink` until the request channel is closed *and* drained, so a fleet
+    /// shutdown never drops accepted requests. A failed batch is dropped
+    /// (its completions never appear) but the replica keeps serving.
     pub(crate) fn spawn<B, F>(
         index: usize,
         make_backend: F,
         batcher: BatcherConfig,
         queue_depth: usize,
-        completions: Sender<Completion>,
+        sink: Sink,
     ) -> Replica
     where
         B: InferBackend,
@@ -63,17 +80,49 @@ impl Replica {
                         .collect();
                     let n = batch.requests.len();
                     match backend.infer_batch(&inputs) {
-                        Ok(outputs) => {
-                            for (req, output) in batch.requests.into_iter().zip(outputs) {
-                                let _ = completions.send(Completion {
-                                    id: req.id,
-                                    output,
-                                    latency: req.arrival.elapsed(),
-                                    batch_size: n,
-                                    replica: index,
-                                });
+                        Ok(outputs) => match &sink {
+                            Sink::Complete(tx) => {
+                                for (req, output) in
+                                    batch.requests.into_iter().zip(outputs)
+                                {
+                                    let mut stage_latencies = req.stage_latencies;
+                                    let mut stage_batches = req.stage_batches;
+                                    // chain frames log the final hop too, so
+                                    // len == chain length; replicated-fleet
+                                    // completions keep the empty marker
+                                    if !stage_latencies.is_empty() {
+                                        stage_latencies.push(req.stage_arrival.elapsed());
+                                        stage_batches.push(n);
+                                    }
+                                    let _ = tx.send(Completion {
+                                        id: req.id,
+                                        output,
+                                        latency: req.arrival.elapsed(),
+                                        batch_size: n,
+                                        replica: index,
+                                        stage_latencies,
+                                        stage_batches,
+                                    });
+                                }
                             }
-                        }
+                            Sink::Forward { next, next_outstanding } => {
+                                for (mut req, output) in
+                                    batch.requests.into_iter().zip(outputs)
+                                {
+                                    req.stage_latencies.push(req.stage_arrival.elapsed());
+                                    req.stage_batches.push(n);
+                                    req.input = output;
+                                    req.stage_arrival = Instant::now();
+                                    next_outstanding.fetch_add(1, Ordering::SeqCst);
+                                    // blocking send: the bounded downstream
+                                    // queue is the inter-stage FIFO, so a
+                                    // full next stage backpressures this one
+                                    if next.send(req).is_err() {
+                                        next_outstanding.fetch_sub(1, Ordering::SeqCst);
+                                    }
+                                }
+                            }
+                        },
                         Err(e) => {
                             eprintln!("replica {index}: batch failed: {e:#}");
                         }
@@ -88,6 +137,18 @@ impl Replica {
     /// Outstanding requests (queued + executing) — the JSQ load signal.
     pub(crate) fn outstanding(&self) -> usize {
         self.outstanding.load(Ordering::SeqCst)
+    }
+
+    /// Clone of the bounded request sender (chain wiring: the upstream
+    /// stage forwards into this queue). `None` once closed.
+    pub(crate) fn sender(&self) -> Option<SyncSender<Request>> {
+        self.tx.clone()
+    }
+
+    /// Shared outstanding counter (chain wiring pairs it with
+    /// [`Replica::sender`]).
+    pub(crate) fn outstanding_handle(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.outstanding)
     }
 
     /// Non-blocking submit. The counter is incremented *before* the send

@@ -35,7 +35,7 @@ use std::time::{Duration, Instant};
 use super::batcher::BatcherConfig;
 use super::metrics::FleetMetrics;
 use super::policy::{Policy, Scheduler};
-use super::replica::{Replica, TrySubmit};
+use super::replica::{Replica, Sink, TrySubmit};
 use super::workload::Trace;
 use super::{Completion, Request};
 use crate::util::rng::Rng;
@@ -165,6 +165,10 @@ pub struct Server {
     replicas: Vec<Replica>,
     scheduler: Scheduler,
     completions: Receiver<Completion>,
+    /// The replicas form a stage chain (pipeline-parallel sharding): all
+    /// ingress goes to stage 0 and the router never falls back to a
+    /// mid-chain stage.
+    chain: bool,
 }
 
 impl Server {
@@ -185,11 +189,62 @@ impl Server {
         let replicas: Vec<Replica> = (0..n)
             .map(|i| {
                 let f = Arc::clone(&factory);
-                Replica::spawn(i, move || (*f)(i), cfg.batcher, cfg.queue_depth, ctx.clone())
+                Replica::spawn(
+                    i,
+                    move || (*f)(i),
+                    cfg.batcher,
+                    cfg.queue_depth,
+                    Sink::Complete(ctx.clone()),
+                )
             })
             .collect();
         drop(ctx);
-        Server { replicas, scheduler: Scheduler::new(cfg.policy, n), completions: crx }
+        Server {
+            replicas,
+            scheduler: Scheduler::new(cfg.policy, n),
+            completions: crx,
+            chain: false,
+        }
+    }
+
+    /// Spawn `cfg.replicas` workers as a **stage chain** (one pipeline
+    /// shard per stage, [`crate::sharding`]): requests enter stage 0, each
+    /// stage's outputs forward into the next stage's bounded queue (the
+    /// inter-device FIFO — a full downstream queue backpressures the
+    /// upstream worker), and only the final stage emits completions,
+    /// carrying per-stage latencies plus the end-to-end latency.
+    /// `cfg.policy` is ignored; the chain always schedules as
+    /// [`Policy::StageChain`].
+    pub fn start_chain<B, F>(make_backend: F, cfg: ServerConfig) -> Server
+    where
+        B: InferBackend,
+        F: Fn(usize) -> B + Send + Sync + 'static,
+    {
+        let k = cfg.replicas.max(1);
+        let (ctx, crx) = channel::<Completion>();
+        let factory = Arc::new(make_backend);
+        // spawn back-to-front so stage i can hold stage i+1's queue handle
+        let mut replicas: Vec<Replica> = Vec::with_capacity(k);
+        let mut downstream = None;
+        for i in (0..k).rev() {
+            let f = Arc::clone(&factory);
+            let sink = match downstream.take() {
+                None => Sink::Complete(ctx.clone()),
+                Some((next, next_outstanding)) => Sink::Forward { next, next_outstanding },
+            };
+            let r = Replica::spawn(i, move || (*f)(i), cfg.batcher, cfg.queue_depth, sink);
+            downstream =
+                Some((r.sender().expect("fresh replica is open"), r.outstanding_handle()));
+            replicas.push(r);
+        }
+        replicas.reverse();
+        drop(ctx);
+        Server {
+            replicas,
+            scheduler: Scheduler::new(Policy::StageChain, k),
+            completions: crx,
+            chain: true,
+        }
     }
 
     /// Number of worker replicas.
@@ -205,32 +260,35 @@ impl Server {
     /// Non-blocking submit. Returns the replica index the request was routed
     /// to, or a typed [`SubmitError`] (overload shed vs shutdown).
     pub fn submit(&mut self, id: u64, input: Vec<f32>) -> std::result::Result<usize, SubmitError> {
-        self.dispatch(Request { id, input, arrival: Instant::now() })
+        self.dispatch(Request::new(id, input))
     }
 
     /// Blocking submit: when the whole fleet is full it parks on the least
-    /// loaded replica's bounded queue (the worker wakes it when a slot
-    /// frees) instead of spin-retrying; only terminal shutdown makes it
-    /// fail.
+    /// loaded replica's bounded queue (stage 0 for a chain; the worker
+    /// wakes it when a slot frees) instead of spin-retrying; only terminal
+    /// shutdown makes it fail.
     pub fn submit_blocking(
         &mut self,
         id: u64,
         input: Vec<f32>,
     ) -> std::result::Result<usize, SubmitError> {
-        let mut req = Request { id, input, arrival: Instant::now() };
+        let mut req = Request::new(id, input);
         loop {
             req = match self.dispatch(req) {
                 Ok(i) => return Ok(i),
                 Err(SubmitError::Closed(r)) => return Err(SubmitError::Closed(r)),
                 Err(SubmitError::QueueFull(r)) => r,
             };
-            let i = self
-                .replicas
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, r)| r.outstanding())
-                .map(|(i, _)| i)
-                .unwrap();
+            let i = if self.chain {
+                0
+            } else {
+                self.replicas
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, r)| r.outstanding())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            };
             req = match self.replicas[i].submit_wait(req) {
                 Ok(()) => return Ok(i),
                 // a dead replica can look idle; back off briefly so the
@@ -247,8 +305,16 @@ impl Server {
     /// queue is full (or it died) fall through to the remaining replicas in
     /// ascending-load order, so a full preferred queue does not shed while
     /// a sibling has room. The common accepted-first-try case pays no
-    /// fallback bookkeeping.
+    /// fallback bookkeeping. Chains never fall back: frames must enter at
+    /// stage 0, so a full entry queue sheds immediately.
     fn dispatch(&mut self, req: Request) -> std::result::Result<usize, SubmitError> {
+        if self.chain {
+            return match self.replicas[0].try_submit(req) {
+                Ok(()) => Ok(0),
+                Err(TrySubmit::Full(r)) => Err(SubmitError::QueueFull(r)),
+                Err(TrySubmit::Closed(r)) => Err(SubmitError::Closed(r)),
+            };
+        }
         // the load snapshot costs one atomic load per replica plus a Vec;
         // take it up front only for the policy that reads it (JSQ) — the
         // fallback path below re-derives it on demand
@@ -493,6 +559,35 @@ mod tests {
             }
         }
         assert!(rejected > 0, "expected admission-control sheds");
+    }
+
+    #[test]
+    fn chain_traverses_stages_in_order() {
+        // 3-stage chain of instant mocks at batch 1: each stage maps
+        // [x, ...] -> [sum, 1], so the final output is input + 2 — proof
+        // the frame passed through every stage exactly once, in order
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            queue_depth: 16,
+            replicas: 3,
+            policy: Policy::RoundRobin, // ignored by start_chain
+        };
+        let mut srv = Server::start_chain(|_| MockBackend::instant(), cfg);
+        assert_eq!(srv.replica_count(), 3);
+        for i in 0..20 {
+            srv.submit_blocking(i, vec![i as f32]).unwrap();
+        }
+        srv.shutdown();
+        let mut got = 0;
+        while let Some(c) = srv.next_completion() {
+            got += 1;
+            assert_eq!(c.output[0], c.id as f32 + 2.0, "frame {} skipped a stage", c.id);
+            assert_eq!(c.replica, 2, "completions come from the last stage");
+            assert_eq!(c.stage_latencies.len(), 3, "one latency per stage");
+            let total: Duration = c.stage_latencies.iter().sum();
+            assert!(total <= c.latency + Duration::from_millis(5));
+        }
+        assert_eq!(got, 20, "chain dropped frames");
     }
 
     #[test]

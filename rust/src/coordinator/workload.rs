@@ -1,6 +1,14 @@
 //! Workload generators for serving experiments: open-loop Poisson arrivals,
 //! bursty (on/off) traffic, heavy-tailed (Pareto inter-arrival) traffic,
-//! and a fixed-interval baseline. Deterministic via the crate PRNG.
+//! a diurnal (rate-modulated Poisson) day/night cycle, and a
+//! fixed-interval baseline. Deterministic via the crate PRNG.
+//!
+//! Traces also round-trip to disk ([`Trace::save`] / [`Trace::load`]) in a
+//! one-arrival-per-line text format, so captures of real traffic can drive
+//! `fcmp serve --trace file:PATH` and the `serve_scaling` /
+//! `shard_scaling` benches.
+
+use std::path::Path;
 
 use crate::util::rng::Rng;
 
@@ -26,6 +34,48 @@ impl Trace {
         }
         let span = self.arrivals_s.last().unwrap() - self.arrivals_s[0];
         (self.arrivals_s.len() - 1) as f64 / span.max(1e-9)
+    }
+
+    /// Write the trace as `fcmp-trace v1`: a comment header followed by
+    /// one arrival time (seconds, 9 decimal places) per line.
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        let mut out = String::with_capacity(self.arrivals_s.len() * 14 + 32);
+        out.push_str("# fcmp-trace v1\n");
+        for t in &self.arrivals_s {
+            out.push_str(&format!("{t:.9}\n"));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// Read a trace written by [`Trace::save`] (or any text file with one
+    /// arrival-second per line; `#` comments and blank lines are ignored).
+    /// Arrivals must be non-decreasing — replay submits them in order.
+    pub fn load(path: &Path) -> crate::Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        let mut arrivals = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let t: f64 = line.parse().map_err(|_| {
+                anyhow::anyhow!("{}:{}: bad arrival time {line:?}", path.display(), ln + 1)
+            })?;
+            anyhow::ensure!(
+                t.is_finite() && t >= 0.0,
+                "{}:{}: arrival must be finite and non-negative",
+                path.display(),
+                ln + 1
+            );
+            arrivals.push(t);
+        }
+        anyhow::ensure!(
+            arrivals.windows(2).all(|w| w[1] >= w[0]),
+            "{}: arrivals must be non-decreasing",
+            path.display()
+        );
+        Ok(Trace { arrivals_s: arrivals })
     }
 }
 
@@ -94,6 +144,29 @@ pub fn heavy_tail(n: usize, rate: f64, alpha: f64, seed: u64) -> Trace {
 /// Uniform (fixed-interval) arrivals — the closed-form baseline.
 pub fn uniform(n: usize, rate: f64) -> Trace {
     Trace { arrivals_s: (0..n).map(|i| i as f64 / rate).collect() }
+}
+
+/// Diurnal traffic: a non-homogeneous Poisson process whose instantaneous
+/// rate swings sinusoidally between `base_rate` (night trough) and
+/// `peak_rate` (day peak) with period `period_s`, via Lewis–Shedler
+/// thinning of a `peak_rate` Poisson stream. The day/night cycle is the
+/// canonical serving-capacity planning input: autoscaling and SLO
+/// experiments need load that *drifts* rather than bursts.
+pub fn diurnal(n: usize, base_rate: f64, peak_rate: f64, period_s: f64, seed: u64) -> Trace {
+    assert!(base_rate > 0.0 && peak_rate >= base_rate && period_s > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut arrivals = Vec::with_capacity(n);
+    while arrivals.len() < n {
+        t += rng.exp(peak_rate);
+        // phase 0..1: trough at t=0, peak at period/2
+        let phase = 0.5 - 0.5 * (2.0 * std::f64::consts::PI * t / period_s).cos();
+        let rate = base_rate + (peak_rate - base_rate) * phase;
+        if rng.f64() < rate / peak_rate {
+            arrivals.push(t);
+        }
+    }
+    Trace { arrivals_s: arrivals }
 }
 
 #[cfg(test)]
@@ -172,5 +245,68 @@ mod tests {
         let t = uniform(11, 100.0);
         assert_eq!(t.len(), 11);
         assert!((t.offered_rate() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diurnal_mean_rate_between_trough_and_peak() {
+        let t = diurnal(30_000, 100.0, 500.0, 10.0, 7);
+        let r = t.offered_rate();
+        // sinusoidal modulation averages to (base+peak)/2 = 300
+        assert!((r - 300.0).abs() / 300.0 < 0.1, "rate {r}");
+        assert!(t.arrivals_s.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn diurnal_peaks_are_denser_than_troughs() {
+        // count arrivals in the first trough half-period vs the following
+        // peak half-period
+        let period = 20.0;
+        let t = diurnal(20_000, 50.0, 800.0, period, 9);
+        let in_window = |lo: f64, hi: f64| {
+            t.arrivals_s.iter().filter(|&&a| a >= lo && a < hi).count()
+        };
+        let trough = in_window(0.0, 0.25 * period) + in_window(0.75 * period, period);
+        let peak = in_window(0.25 * period, 0.75 * period);
+        assert!(peak > 3 * trough, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn diurnal_deterministic_per_seed() {
+        assert_eq!(
+            diurnal(500, 50.0, 200.0, 5.0, 3).arrivals_s,
+            diurnal(500, 50.0, 200.0, 5.0, 3).arrivals_s
+        );
+        assert_ne!(
+            diurnal(500, 50.0, 200.0, 5.0, 3).arrivals_s,
+            diurnal(500, 50.0, 200.0, 5.0, 4).arrivals_s
+        );
+    }
+
+    #[test]
+    fn trace_roundtrips_through_disk() {
+        let t = poisson(500, 120.0, 77);
+        let dir = std::env::temp_dir();
+        let path = dir.join("fcmp_trace_roundtrip_test.txt");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.len(), t.len());
+        for (a, b) in t.arrivals_s.iter().zip(&back.arrivals_s) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trace_load_rejects_garbage_and_disorder() {
+        let dir = std::env::temp_dir();
+        let bad = dir.join("fcmp_trace_bad_test.txt");
+        std::fs::write(&bad, "# fcmp-trace v1\n0.5\nnot-a-number\n").unwrap();
+        assert!(Trace::load(&bad).is_err());
+        std::fs::write(&bad, "2.0\n1.0\n").unwrap();
+        assert!(Trace::load(&bad).is_err(), "disorder must be rejected");
+        std::fs::write(&bad, "# comment\n\n0.25\n0.50\n").unwrap();
+        let t = Trace::load(&bad).unwrap();
+        assert_eq!(t.arrivals_s, vec![0.25, 0.50]);
+        let _ = std::fs::remove_file(&bad);
     }
 }

@@ -57,27 +57,44 @@ pub struct Floorplan {
     pub crossings: usize,
 }
 
-/// Can the sequence be split into `k` contiguous runs with every run's BRAM
-/// demand ≤ `limit`? Greedy: extend the current run until it would burst.
-fn feasible(demands: &[StageDemand], k: usize, limit: u64) -> Option<Vec<usize>> {
+/// Greedy monotone cover of a demand sequence by at most `caps.len()`
+/// contiguous runs, run `j` bounded by `caps[j]`. This is the linear-
+/// partition feasibility kernel shared by the uniform-SLR floorplanner
+/// (all caps equal, binary-searched) and, with heterogeneous capacities,
+/// the multi-device sharding partitioner
+/// ([`crate::sharding::partition()`]), which runs it over per-stage
+/// weight-bit floors as a sound infeasibility pre-check before its DP.
+/// Greedy-maximal prefix filling is complete for this feasibility
+/// question (exchange argument: greedy never places an element in a
+/// later run than any valid cover does). Returns the per-element run
+/// index, or `None` when no monotone cover exists (a run may be skipped
+/// — left empty — when its capacity cannot host the next element).
+pub fn contiguous_cover(demands: &[u64], caps: &[u64]) -> Option<Vec<usize>> {
+    if caps.is_empty() {
+        return if demands.is_empty() { Some(Vec::new()) } else { None };
+    }
     let mut assignment = Vec::with_capacity(demands.len());
-    let mut slr = 0usize;
+    let mut run = 0usize;
     let mut acc = 0u64;
-    for d in demands {
-        if d.bram18 > limit {
-            return None; // single stage exceeds the limit
-        }
-        if acc + d.bram18 > limit {
-            slr += 1;
+    for &d in demands {
+        while acc + d > caps[run] {
+            run += 1;
             acc = 0;
-            if slr >= k {
+            if run >= caps.len() {
                 return None;
             }
         }
-        acc += d.bram18;
-        assignment.push(slr);
+        acc += d;
+        assignment.push(run);
     }
     Some(assignment)
+}
+
+/// Can the sequence be split into `k` contiguous runs with every run's BRAM
+/// demand ≤ `limit`? (Uniform-capacity [`contiguous_cover`].)
+fn feasible(demands: &[StageDemand], k: usize, limit: u64) -> Option<Vec<usize>> {
+    let d: Vec<u64> = demands.iter().map(|d| d.bram18).collect();
+    contiguous_cover(&d, &vec![limit; k])
 }
 
 /// Compute the optimal monotone floorplan for `net` on `dev` (bottleneck
@@ -171,6 +188,21 @@ mod tests {
         let a = floorplan(&net, &alveo_u250()).unwrap();
         let b = floorplan(&net, &alveo_u280()).unwrap();
         assert!(b.max_bram_pressure > a.max_bram_pressure);
+    }
+
+    #[test]
+    fn contiguous_cover_handles_heterogeneous_caps() {
+        // a small first device forces the early demands onto it and the
+        // bulk onto the big one; the cover stays monotone
+        let a = contiguous_cover(&[3, 3, 10, 10], &[8, 32]).unwrap();
+        assert_eq!(a, vec![0, 0, 1, 1]);
+        // an element larger than a run's cap skips that run entirely
+        let b = contiguous_cover(&[9, 1], &[4, 16]).unwrap();
+        assert_eq!(b, vec![1, 1]);
+        // infeasible: total demand exceeds every suffix of capacities
+        assert!(contiguous_cover(&[9, 9], &[4, 9]).is_none());
+        assert!(contiguous_cover(&[1], &[]).is_none());
+        assert_eq!(contiguous_cover(&[], &[]), Some(vec![]));
     }
 
     #[test]

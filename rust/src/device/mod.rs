@@ -10,7 +10,7 @@ pub mod bram;
 pub mod floorplan;
 
 pub use bram::{brams_for, BramMode, BRAM18_BITS, BRAM18_MODES, URAM_BITS};
-pub use floorplan::{floorplan, Floorplan};
+pub use floorplan::{contiguous_cover, floorplan, Floorplan};
 
 /// One super logic region (die) of a multi-SLR device.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -52,6 +52,26 @@ pub enum Family {
 impl Device {
     pub fn is_monolithic(&self) -> bool {
         self.slrs.len() == 1
+    }
+
+    /// Compact identity string covering every field the packing and
+    /// sharding models read. Cache/memo keys must use this rather than
+    /// `name` alone — tests and callers legitimately tweak a named
+    /// device's capacities in place, and a name-only key would hand them
+    /// another device's cached design.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{}#{}l#{}b#{}u#{}d#{}slr#{}fc#{}fm#{}sh",
+            self.name,
+            self.luts,
+            self.bram18,
+            self.uram,
+            self.dsp,
+            self.slrs.len(),
+            self.nominal_compute_mhz,
+            self.nominal_memory_mhz,
+            self.shell_luts
+        )
     }
 
     /// Total OCM (BRAM only) in bits.
@@ -138,10 +158,10 @@ pub fn alveo_u280() -> Device {
 /// Look a device up by name (CLI surface).
 pub fn by_name(name: &str) -> Option<Device> {
     match name {
-        "zynq-7020" | "7020" => Some(zynq_7020()),
-        "zynq-7012s" | "7012s" => Some(zynq_7012s()),
-        "alveo-u250" | "u250" => Some(alveo_u250()),
-        "alveo-u280" | "u280" => Some(alveo_u280()),
+        "zynq-7020" | "zynq7020" | "7020" => Some(zynq_7020()),
+        "zynq-7012s" | "zynq7012s" | "7012s" => Some(zynq_7012s()),
+        "alveo-u250" | "alveou250" | "u250" => Some(alveo_u250()),
+        "alveo-u280" | "alveou280" | "u280" => Some(alveo_u280()),
         _ => None,
     }
 }

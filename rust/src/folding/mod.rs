@@ -135,6 +135,16 @@ pub fn network_resources(net: &Network, dev: &Device) -> NetworkResources {
     network_resources_on(net, dev.uram > 0, !dev.is_monolithic())
 }
 
+/// Device LUT utilization of a *packed* design: compute resources plus the
+/// FCMP streamer/CDC logic plus the static platform shell, over the
+/// device's LUT budget. Unclamped — a value above 1.0 means the design
+/// does not place. The single source for both the sharding partitioner's
+/// feasibility check and the serving capacity model
+/// (`ReplicaSpec::packed_point`).
+pub fn packed_lut_util(res: &NetworkResources, logic_kluts: f64, dev: &Device) -> f64 {
+    (res.luts + logic_kluts * 1e3 + dev.shell_luts as f64) / dev.luts as f64
+}
+
 /// Check a network fits a device (unpacked memories).
 pub fn fits(net: &Network, dev: &Device) -> bool {
     let r = network_resources(net, dev);

@@ -13,7 +13,10 @@
 //! cycle-level GALS streamer simulator, a timing-closure model, a dataflow
 //! pipeline simulator, and a PJRT-backed inference runtime behind a
 //! multi-replica sharded serving coordinator (policy router, per-replica
-//! dynamic batchers, admission control, fleet latency metrics).
+//! dynamic batchers, admission control, fleet latency metrics), plus a
+//! pipeline-parallel multi-device sharding subsystem ([`sharding`]) that
+//! partitions one network across a heterogeneous device fleet and serves
+//! it as a staged pipeline.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -27,6 +30,7 @@ pub mod nn;
 pub mod packing;
 pub mod report;
 pub mod runtime;
+pub mod sharding;
 pub mod sim;
 pub mod timing;
 pub mod util;

@@ -9,20 +9,27 @@
 //! fcmp gals     [--nb 4] [--rf 2.0] [--depth 128] [--cycles 10000] [--static]
 //! fcmp golden   [--artifacts artifacts] [--model all|cnv_w1a1|cnv_w2a2|rn50_lite_w1a2]
 //! fcmp serve    [--backend mock|pjrt] [--model cnv_w1a1] [--replicas 1]
-//!               [--policy round-robin|jsq|weighted] [--trace poisson|bursty|heavy|uniform]
-//!               [--requests 256] [--rate 400] [--batch 4] [--queue 64]
-//!               [--devices u250,u280,7020,7012s] [--service-us 400]
+//!               [--policy round-robin|jsq|weighted]
+//!               [--trace poisson|bursty|heavy|diurnal|uniform|file:PATH]
+//!               [--trace-out PATH] [--requests 256] [--rate 400] [--batch 4]
+//!               [--queue 64] [--devices u250,u280,7020,7012s]
+//!               [--service-us 400] [--point paper|packed]
+//! fcmp shard    --network cnv-w2a2 --devices 7012s,7012s [--shards 2]
+//!               [--hb 4] [--engine ga|ffd] [--generations 40]
+//!               [--link-gbps 100] [--link-us 2] [--frames 400] [--fifo 8]
+//!               [--serve] [--requests 256] [--rate FPS*0.8]
 //! fcmp dse      --network ... --device ... [--budget 0.85]
 //! ```
 
 use fcmp::coordinator::{
-    bursty, fleet_weights, heavy_tail, poisson, replica_fps, uniform, BatcherConfig, MockBackend,
-    Policy, ReplicaSpec, Server, ServerConfig, Trace,
+    bursty, diurnal, fleet_weights, heavy_tail, poisson, replica_fps, shard_service_times,
+    uniform, BatcherConfig, MockBackend, Policy, ReplicaSpec, Server, ServerConfig, Trace,
 };
 use fcmp::device;
 use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
 use fcmp::nn::{cnv, resnet50, CnvVariant, Network};
 use fcmp::packing::{anneal::Anneal, ffd::Ffd, Packer};
+use fcmp::sharding::{self, LinkSpec, PartitionConfig};
 use fcmp::util::args::Args;
 use fcmp::{folding, report, runtime, sim};
 use std::path::Path;
@@ -139,6 +146,7 @@ fn cmd_report(a: &Args) -> anyhow::Result<()> {
         "5" => show("Table V", report::table5(generations)),
         "fig2" => show("Fig 2", report::fig2()),
         "fig4" => show("Fig 4", report::fig4()),
+        "shard" => show("Sharding", report::shard_table(generations)),
         _ => {
             show("Table I", report::table1());
             show("Fig 2", report::fig2());
@@ -146,6 +154,7 @@ fn cmd_report(a: &Args) -> anyhow::Result<()> {
             show("Fig 4", report::fig4());
             show("Table IV", report::table4(generations));
             show("Table V", report::table5(generations));
+            show("Sharding", report::shard_table(generations));
         }
     }
     Ok(())
@@ -223,12 +232,25 @@ fn serve_model(name: &str) -> Option<(Network, &'static str)> {
 }
 
 fn trace_by_name(name: &str, n: usize, rate: f64, seed: u64) -> anyhow::Result<Trace> {
+    if let Some(path) = name.strip_prefix("file:") {
+        return Trace::load(Path::new(path));
+    }
     Ok(match name {
         "poisson" => poisson(n, rate, seed),
         "bursty" => bursty(n, rate, rate * 8.0, 32, seed),
         "heavy" | "heavy-tail" => heavy_tail(n, rate, 1.5, seed),
+        // rate swings between rate/2 (trough) and 2*rate (peak), two
+        // full day/night cycles over the trace
+        "diurnal" => {
+            let peak = rate * 2.0;
+            let mean = (rate / 2.0 + peak) / 2.0;
+            let period = n as f64 / mean / 2.0;
+            diurnal(n, rate / 2.0, peak, period.max(1e-3), seed)
+        }
         "uniform" => uniform(n, rate),
-        other => anyhow::bail!("unknown trace {other} (poisson|bursty|heavy|uniform)"),
+        other => {
+            anyhow::bail!("unknown trace {other} (poisson|bursty|heavy|diurnal|uniform|file:PATH)")
+        }
     })
 }
 
@@ -246,15 +268,28 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     })?;
 
     // heterogeneous fleet: replica i runs on the i-th of --devices (cycled)
-    // at the paper's Table V operating point; the analytic sim/timing model
-    // turns each point into the capacity weight of the `weighted` policy
+    // at the paper's Table V operating point (--point paper) or at the
+    // actually-packed design point (--point packed, cross-replica cached);
+    // the analytic sim/timing model turns each point into the capacity
+    // weight of the `weighted` policy
+    let point = a.get_or("point", "paper");
     let dev_names: Vec<&str> = a.get_or("devices", "u250,u280,7020,7012s").split(',').collect();
     let mut specs = Vec::with_capacity(replicas);
     for i in 0..replicas {
         let name = dev_names[i % dev_names.len()];
         let dev = device::by_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown device {name} in --devices"))?;
-        specs.push(ReplicaSpec::paper_point(dev));
+        specs.push(match point {
+            "paper" => ReplicaSpec::paper_point(dev),
+            "packed" => ReplicaSpec::packed_point(
+                &net,
+                dev,
+                a.get_usize("hb", 4),
+                a.get_usize("generations", 40),
+                seed,
+            ),
+            other => anyhow::bail!("unknown --point {other} (paper|packed)"),
+        });
     }
     let weights = fleet_weights(&net, &specs);
     let policy = Policy::by_name(a.get_or("policy", "round-robin"), weights.clone())
@@ -262,6 +297,10 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     let policy_name = policy.name();
 
     let trace = trace_by_name(trace_name, n, rate, seed)?;
+    if let Some(out) = a.get("trace-out") {
+        trace.save(Path::new(out))?;
+        println!("recorded trace ({} arrivals) to {out}", trace.len());
+    }
     let cfg = ServerConfig {
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
         queue_depth,
@@ -319,6 +358,140 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     );
     println!("{}", fm.summary());
     Ok(())
+}
+
+/// `fcmp shard`: partition one network across a device fleet and validate
+/// the staged pipeline (analytic plan, discrete-event sim, optionally the
+/// stage-chain serving coordinator on calibrated mocks).
+fn cmd_shard(a: &Args) -> anyhow::Result<()> {
+    let net = network_by_name(a.get_or("network", "cnv-w2a2"))
+        .ok_or_else(|| anyhow::anyhow!("unknown network"))?;
+    let dev_names: Vec<&str> = a.get_or("devices", "7012s,7012s").split(',').collect();
+    let shards = a.get_usize("shards", dev_names.len()).max(1);
+    let mut devices = Vec::with_capacity(shards);
+    for i in 0..shards {
+        let name = dev_names[i % dev_names.len()];
+        devices.push(
+            device::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown device {name} in --devices"))?,
+        );
+    }
+    let cfg = PartitionConfig {
+        bin_height: a.get_usize("hb", 4),
+        generations: if a.get_or("engine", "ga") == "ffd" {
+            0
+        } else {
+            a.get_usize("generations", 40)
+        },
+        seed: a.get_usize("seed", 2020) as u64,
+        link: LinkSpec {
+            gbps: a.get_f64("link-gbps", 100.0),
+            latency_us: a.get_f64("link-us", 2.0),
+        },
+    };
+
+    // why shard at all? report single-device feasibility per distinct part
+    let mut seen: Vec<&str> = Vec::new();
+    for dev in &devices {
+        if seen.contains(&dev.name) {
+            continue;
+        }
+        seen.push(dev.name);
+        let solo = sharding::Evaluator::new(&net, cfg).shard(0, net.stages.len(), dev);
+        println!(
+            "{} packed on one {}: {} of {} BRAM18, LUT {:.0}% -> {}",
+            net.name,
+            dev.name,
+            solo.bram_demand,
+            solo.bram_capacity,
+            100.0 * solo.lut_util,
+            if solo.fits() { "fits (sharding optional)" } else { "DOES NOT FIT" }
+        );
+    }
+
+    let plan = sharding::partition(&net, &devices, cfg)?;
+    println!(
+        "\nplan: {} over {} shards, analytic bottleneck {:.1} us -> {:.0} FPS{}",
+        plan.network,
+        plan.shards.len(),
+        plan.bottleneck_s * 1e6,
+        plan.fps,
+        if plan.bottleneck_is_link() { " (link-bound)" } else { "" }
+    );
+    for (j, s) in plan.shards.iter().enumerate() {
+        let stages: Vec<&str> =
+            net.stages[s.stages.0..s.stages.1].iter().map(|st| st.name()).collect();
+        println!(
+            "  shard {j} on {}: stages {}..{} [{}]",
+            s.device.name,
+            s.stages.0,
+            s.stages.1,
+            stages.join(", ")
+        );
+        println!(
+            "    OCM {} of {} BRAM18 ({:.0}%, packed weights {}), LUT {:.0}%, \
+             II {} cy @ {:.0} MHz -> {:.1} us/frame",
+            s.bram_demand,
+            s.bram_capacity,
+            100.0 * s.bram_pressure(),
+            s.packed_brams,
+            100.0 * s.lut_util,
+            s.ii_cycles,
+            s.effective_mhz,
+            s.seconds_per_frame * 1e6
+        );
+        if j < plan.links.len() {
+            let l = &plan.links[j];
+            println!(
+                "    link {j}: {:.1} Kbit/frame, {:.2} us/frame, {:.0}% of bottleneck",
+                l.bits_per_frame as f64 / 1e3,
+                l.seconds_per_frame * 1e6,
+                100.0 * plan.link_utilization()[j]
+            );
+        }
+    }
+
+    // the sharded sim needs a steady-state window; quietly clamp tiny values
+    let frames = a.get_usize("frames", 400).max(8) as u64;
+    let fifo = a.get_usize("fifo", 8) as u64;
+    let r = sim::simulate_sharded(&net, &plan, frames, fifo);
+    println!(
+        "\nsim ({frames} frames, link FIFO {fifo}): {:.0} FPS = {:.2}% of analytic, \
+         fill latency {:.1} us",
+        r.fps,
+        100.0 * r.vs_analytic,
+        r.first_out_ns as f64 / 1e3
+    );
+
+    if a.has_flag("serve") {
+        let requests = a.get_usize("requests", 256);
+        let rate = a.get_f64("rate", plan.fps * 0.8);
+        let svc = shard_service_times(&plan);
+        let scfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            queue_depth: fifo as usize,
+            replicas: plan.shards.len(),
+            policy: Policy::StageChain,
+        };
+        let mut srv = Server::start_chain(
+            move |i| MockBackend::with_service(Duration::ZERO, svc[i]),
+            scfg,
+        );
+        let trace = poisson(requests, rate, cfg_seed(a));
+        let fm = srv.replay(&trace, 8, cfg_seed(a));
+        srv.shutdown();
+        println!(
+            "\nchain serve [{} stages, {:.0} req/s offered]:",
+            plan.shards.len(),
+            trace.offered_rate()
+        );
+        println!("{}", fm.summary());
+    }
+    Ok(())
+}
+
+fn cfg_seed(a: &Args) -> u64 {
+    a.get_usize("seed", 2020) as u64
 }
 
 fn cmd_floorplan(a: &Args) -> anyhow::Result<()> {
@@ -379,14 +552,22 @@ fcmp — Frequency Compensated Memory Packing (paper reproduction)
 subcommands:
   pack    pack a network's weight buffers into BRAMs (FCMP, paper section IV;
           --islands N --threads T runs the parallel island-model GA)
-  report  regenerate the paper's tables/figures (--table 1|2|4|5|fig2|fig4|all)
+  report  regenerate the paper's tables/figures
+          (--table 1|2|4|5|fig2|fig4|shard|all)
   perf    analytic FPS/latency of an accelerator (--network, --mhz)
   gals    cycle-level GALS streamer simulation (--nb, --rf, --static)
   golden  verify PJRT runtime against python golden outputs
   serve   multi-replica sharded inference serving (--replicas N --policy
-          round-robin|jsq|weighted --trace poisson|bursty|heavy --backend
-          mock|pjrt); weighted capacity comes from the sim/timing model of
-          each replica's --devices entry
+          round-robin|jsq|weighted --trace poisson|bursty|heavy|diurnal|
+          file:PATH [--trace-out PATH] --backend mock|pjrt --point
+          paper|packed); weighted capacity comes from the sim/timing model
+          of each replica's --devices entry
+  shard   pipeline-parallel multi-device sharding: partition one network
+          over --devices a,b,... [--shards k] into contiguous stage shards
+          (per-shard FCMP packing, --hb/--generations/--engine ga|ffd),
+          model the cut links (--link-gbps/--link-us), simulate the staged
+          pipeline (--frames/--fifo) and optionally serve it as a stage
+          chain (--serve --requests N --rate R)
   dse     folding design-space exploration (--network, --device, --budget)
   floorplan  SLR floorplan of a network on a multi-die device (Fig. 5)";
 
@@ -399,6 +580,7 @@ fn main() {
         Some("gals") => cmd_gals(&args),
         Some("golden") => cmd_golden(&args),
         Some("serve") => cmd_serve(&args),
+        Some("shard") => cmd_shard(&args),
         Some("dse") => cmd_dse(&args),
         Some("floorplan") => cmd_floorplan(&args),
         _ => {

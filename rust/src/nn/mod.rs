@@ -172,6 +172,34 @@ pub enum Stage {
 }
 
 impl Stage {
+    /// Display name of the stage.
+    pub fn name(&self) -> &str {
+        match self {
+            Stage::Mvau(l) => &l.name,
+            Stage::MaxPool { name, .. } => name,
+            Stage::ResBlock { name, .. } => name,
+        }
+    }
+
+    /// Activation bits leaving the stage per frame — the tensor a pipeline
+    /// cut placed *after* this stage must move to the next device
+    /// ([`crate::sharding`] link traffic). Raw-accumulator outputs
+    /// (`abits = 0`) count as 1-bit streams, matching
+    /// [`crate::memory::activation_bits`].
+    pub fn output_bits_per_frame(&self) -> u64 {
+        match self {
+            Stage::Mvau(l) => l.ofm() * l.ofm() * l.c_out * l.abits.max(1),
+            Stage::MaxPool { window, stride, ifm, channels, .. } => {
+                let ofm = (ifm - window) / stride + 1;
+                ofm * ofm * channels * 2
+            }
+            Stage::ResBlock { branch, .. } => {
+                let l = branch.last().expect("resblock has branch layers");
+                l.ofm() * l.ofm() * l.c_out * l.abits.max(1)
+            }
+        }
+    }
+
     /// All weight-bearing layers in the stage.
     pub fn layers(&self) -> Vec<&Layer> {
         match self {
@@ -255,6 +283,25 @@ impl Network {
             }
         }
         cycles / (compute_mhz * 1e6)
+    }
+
+    /// Contiguous sub-network of stages `[start, end)` — one shard of a
+    /// pipeline partition ([`crate::sharding`]). Layer folding and geometry
+    /// are untouched; the slice's name records the range so packed-design
+    /// caches can key on it.
+    pub fn slice(&self, start: usize, end: usize) -> Network {
+        assert!(
+            start < end && end <= self.stages.len(),
+            "bad stage range {start}..{end} of {}",
+            self.stages.len()
+        );
+        Network {
+            name: format!("{}[{start}..{end}]", self.name),
+            stages: self.stages[start..end].to_vec(),
+            image: self.image,
+            top1_pct: self.top1_pct,
+            top5_pct: self.top5_pct,
+        }
     }
 
     /// Apply ×2 folding to every layer (the paper's F2 variants).
@@ -345,5 +392,42 @@ mod tests {
         let mut l = layer(1, 1);
         l.stride = 2;
         assert_eq!(l.ofm(), 8);
+    }
+
+    #[test]
+    fn slice_covers_and_preserves_stages() {
+        let net = crate::nn::cnv(crate::nn::CnvVariant::W1A1);
+        let n = net.stages.len();
+        let a = net.slice(0, 3);
+        let b = net.slice(3, n);
+        assert_eq!(a.stages.len() + b.stages.len(), n);
+        assert_eq!(a.stages[2].name(), net.stages[2].name());
+        assert_eq!(b.stages[0].name(), net.stages[3].name());
+        // weights are conserved across the cut
+        assert_eq!(
+            a.total_weight_bits() + b.total_weight_bits(),
+            net.total_weight_bits()
+        );
+        assert!(a.name.contains("[0..3]"), "{}", a.name);
+    }
+
+    #[test]
+    #[should_panic]
+    fn slice_rejects_empty_range() {
+        crate::nn::cnv(crate::nn::CnvVariant::W1A1).slice(2, 2);
+    }
+
+    #[test]
+    fn output_bits_track_tensor_shapes() {
+        let l = layer(4, 8); // ofm 16, c_out 128, abits 2
+        assert_eq!(Stage::Mvau(l).output_bits_per_frame(), 16 * 16 * 128 * 2);
+        let pool = Stage::MaxPool {
+            name: "p".into(),
+            window: 2,
+            stride: 2,
+            ifm: 16,
+            channels: 64,
+        };
+        assert_eq!(pool.output_bits_per_frame(), 8 * 8 * 64 * 2);
     }
 }

@@ -1,0 +1,184 @@
+//! Cross-replica / cross-shard packed-design cache.
+//!
+//! Every replica of a serving fleet — and every candidate stage range the
+//! sharding partitioner probes — would otherwise re-run the same
+//! deterministic packing engine on the same inputs. Packings are pure
+//! functions of `(network, device, H_B, engine parameters, seed)`, so a
+//! process-wide read-only cache turns fleet spin-up from `O(N · pack)`
+//! into `O(pack)` and makes the partitioner's `O(S²)` range sweep pay for
+//! each distinct range once.
+//!
+//! The cache is keyed by a [`PackKey`] that fingerprints the network
+//! (name, total weight bits, layer count — `Network::slice` embeds the
+//! stage range in the name, so shard slices key distinctly) together with
+//! the device, bin height and engine identity. Values are shared as
+//! `Arc<CachedPack>`; callers never mutate them.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::{PackReport, Packing};
+use crate::device::Device;
+use crate::nn::Network;
+
+/// Identity of one packed design.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PackKey {
+    /// Network fingerprint (name + weight bits + layer count).
+    pub network: String,
+    /// Device fingerprint ([`crate::device::Device::fingerprint`] — name
+    /// alone would collide when a named device's capacities are tweaked).
+    pub device: String,
+    /// Bin height `H_B`.
+    pub bin_height: usize,
+    /// Engine tag + parameters that select the packing (e.g. `"ga/120"`,
+    /// `"ffd"`).
+    pub engine: String,
+    /// Engine seed (0 for deterministic engines).
+    pub seed: u64,
+}
+
+impl PackKey {
+    /// Key for packing `net` on `dev` at `bin_height` with the engine
+    /// described by `engine`/`seed`.
+    pub fn new(
+        net: &Network,
+        dev: &Device,
+        bin_height: usize,
+        engine: String,
+        seed: u64,
+    ) -> PackKey {
+        PackKey {
+            network: format!(
+                "{}#{}w#{}l",
+                net.name,
+                net.total_weight_bits(),
+                net.layers().len()
+            ),
+            device: dev.fingerprint(),
+            bin_height,
+            engine,
+            seed,
+        }
+    }
+}
+
+/// One cached packed design (the shareable subset of
+/// [`crate::report::PackOutcome`]).
+#[derive(Clone, Debug)]
+pub struct CachedPack {
+    pub packing: Packing,
+    pub report: PackReport,
+    /// Direct (unpacked) BRAM18 cost of the same buffers.
+    pub baseline_brams: u64,
+    /// Streamer + CDC logic overhead in kLUT.
+    pub logic_kluts: f64,
+}
+
+static CACHE: OnceLock<Mutex<HashMap<PackKey, Arc<CachedPack>>>> = OnceLock::new();
+
+fn cache() -> &'static Mutex<HashMap<PackKey, Arc<CachedPack>>> {
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Look a packed design up without building it.
+pub fn lookup(key: &PackKey) -> Option<Arc<CachedPack>> {
+    cache().lock().unwrap().get(key).cloned()
+}
+
+/// Fetch the packed design for `key`, running `build` on a miss. `build`
+/// executes outside the cache lock (packing can take seconds), so two
+/// racing builders may both pack — the engines are deterministic, so both
+/// produce the same design and the first insert wins.
+pub fn get_or_pack<F>(key: PackKey, build: F) -> Arc<CachedPack>
+where
+    F: FnOnce() -> CachedPack,
+{
+    if let Some(hit) = lookup(&key) {
+        return hit;
+    }
+    let built = Arc::new(build());
+    let mut map = cache().lock().unwrap();
+    Arc::clone(map.entry(key).or_insert(built))
+}
+
+/// Number of designs currently cached (diagnostics).
+pub fn len() -> usize {
+    cache().lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{cnv, CnvVariant};
+    use crate::packing::Bin;
+
+    fn dummy_pack(brams: u64) -> CachedPack {
+        CachedPack {
+            packing: Packing { bins: vec![Bin { items: vec![0] }] },
+            report: PackReport {
+                engine: "test",
+                brams,
+                efficiency: 1.0,
+                max_height: 1,
+                elapsed: std::time::Duration::ZERO,
+            },
+            baseline_brams: brams,
+            logic_kluts: 0.0,
+        }
+    }
+
+    #[test]
+    fn second_fetch_reuses_the_first_build() {
+        let net = cnv(CnvVariant::W1A1);
+        let dev = crate::device::zynq_7020();
+        let key = PackKey::new(&net, &dev, 4, "unit-test-reuse".into(), 1);
+        let mut builds = 0;
+        let a = get_or_pack(key.clone(), || {
+            builds += 1;
+            dummy_pack(7)
+        });
+        let b = get_or_pack(key.clone(), || {
+            builds += 1;
+            dummy_pack(7)
+        });
+        assert_eq!(builds, 1, "second fetch must hit the cache");
+        assert!(Arc::ptr_eq(&a, &b), "both fetches share one design");
+        assert!(lookup(&key).is_some());
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let net = cnv(CnvVariant::W1A1);
+        let dev = crate::device::zynq_7020();
+        let k1 = PackKey::new(&net, &dev, 4, "unit-test-distinct".into(), 1);
+        let k2 = PackKey::new(&net, &dev, 3, "unit-test-distinct".into(), 1);
+        assert_ne!(k1, k2);
+        let a = get_or_pack(k1, || dummy_pack(1));
+        let b = get_or_pack(k2, || dummy_pack(2));
+        assert_ne!(a.report.brams, b.report.brams);
+    }
+
+    #[test]
+    fn same_name_different_capacity_keys_distinctly() {
+        let net = cnv(CnvVariant::W1A1);
+        let a = crate::device::zynq_7020();
+        let mut b = crate::device::zynq_7020();
+        b.bram18 = 8;
+        let ka = PackKey::new(&net, &a, 4, "unit-test-fp".into(), 1);
+        let kb = PackKey::new(&net, &b, 4, "unit-test-fp".into(), 1);
+        assert_ne!(ka, kb, "capacity tweak must not reuse the cached design");
+    }
+
+    #[test]
+    fn sliced_networks_key_distinctly() {
+        let net = cnv(CnvVariant::W1A1);
+        let dev = crate::device::zynq_7020();
+        let n = net.stages.len();
+        let ka = PackKey::new(&net.slice(0, 3), &dev, 4, "ga/40".into(), 2020);
+        let kb = PackKey::new(&net.slice(3, n), &dev, 4, "ga/40".into(), 2020);
+        let kf = PackKey::new(&net, &dev, 4, "ga/40".into(), 2020);
+        assert_ne!(ka, kb);
+        assert_ne!(ka, kf);
+    }
+}

@@ -26,6 +26,7 @@
 
 pub mod anneal;
 pub mod bnb;
+pub mod cache;
 pub mod ffd;
 pub mod ga;
 

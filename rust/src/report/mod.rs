@@ -50,6 +50,60 @@ pub fn pack_network(
     PackOutcome { items, packing, report, baseline_brams, baseline_eff, logic_kluts }
 }
 
+/// Cached [`pack_network`]: fetches the packed design from the process-wide
+/// [`crate::packing::cache`], packing on first miss — a fleet of identical
+/// replicas (or a partitioner probing the same stage range twice) packs
+/// once, not once per caller. `generations == 0` selects the deterministic
+/// FFD baseline (fast feasibility sweeps); any other value runs the default
+/// GA with that generation budget and `seed`. Empty item sets (shards made
+/// of pool stages or packing-excluded layers only) short-circuit to a
+/// zero-cost design.
+pub fn pack_network_cached(
+    net: &Network,
+    dev: &Device,
+    bin_height: usize,
+    generations: usize,
+    seed: u64,
+) -> std::sync::Arc<packing::cache::CachedPack> {
+    let engine_tag = if generations == 0 {
+        "ffd".to_string()
+    } else {
+        format!("ga/{generations}")
+    };
+    let key = packing::cache::PackKey::new(net, dev, bin_height, engine_tag, seed);
+    packing::cache::get_or_pack(key, || {
+        let bufs = memory::weight_buffers(net, dev.slrs.len());
+        if memory::all_columns(&bufs).is_empty() {
+            return packing::cache::CachedPack {
+                packing: packing::Packing::default(),
+                report: packing::PackReport {
+                    engine: "empty",
+                    brams: 0,
+                    efficiency: 1.0,
+                    max_height: 0,
+                    elapsed: std::time::Duration::ZERO,
+                },
+                baseline_brams: 0,
+                logic_kluts: 0.0,
+            };
+        }
+        let out = if generations == 0 {
+            pack_network(net, dev, &packing::ffd::Ffd::new(), bin_height)
+        } else {
+            let mut ga = default_ga(net);
+            ga.params.generations = generations;
+            ga.params.seed = seed;
+            pack_network(net, dev, &ga, bin_height)
+        };
+        packing::cache::CachedPack {
+            packing: out.packing,
+            report: out.report,
+            baseline_brams: out.baseline_brams,
+            logic_kluts: out.logic_kluts,
+        }
+    })
+}
+
 /// Default GA engine for a network (Table III hyper-parameters).
 pub fn default_ga(net: &Network) -> packing::ga::Ga {
     if net.name.starts_with("CNV") {
@@ -338,6 +392,87 @@ pub fn table5(generations: usize) -> Table {
             format!("{:.0}", delta),
             r.paper.to_string(),
         ]);
+    }
+    t
+}
+
+/// Sharding table — pipeline-parallel partitions of the paper's networks
+/// over device fleets ([`crate::sharding`]): per-mix feasibility,
+/// bottleneck FPS, shard OCM pressures and link utilization. CNV rows use
+/// the GA engine at `generations`; RN50 rows use the FFD baseline
+/// (`generations = 0`) to keep the `O(S²)` range sweep tractable.
+pub fn shard_table(generations: usize) -> Table {
+    use crate::sharding::{partition, Evaluator, PartitionConfig};
+    let mut t = Table::new([
+        "network", "devices", "k", "feasible", "FPS", "bottleneck", "max OCM %", "link %",
+    ]);
+    let mixes: Vec<(Network, Vec<Device>, usize)> = vec![
+        (cnv(CnvVariant::W2A2), vec![device::zynq_7012s()], generations),
+        (cnv(CnvVariant::W2A2), vec![device::zynq_7012s(), device::zynq_7012s()], generations),
+        (cnv(CnvVariant::W2A2), vec![device::zynq_7020(), device::zynq_7012s()], generations),
+        (resnet50(1), vec![device::alveo_u280()], 0),
+        (resnet50(1), vec![device::alveo_u280(), device::alveo_u280()], 0),
+        (resnet50(1), vec![device::alveo_u250(), device::alveo_u280()], 0),
+    ];
+    for (net, devs, gens) in mixes {
+        let cfg = PartitionConfig { generations: gens, ..PartitionConfig::default() };
+        let names: Vec<&str> = devs.iter().map(|d| d.name).collect();
+        let k = devs.len();
+        let (network, mix, kcol) = (net.name.clone(), names.join("+"), format!("{k}"));
+        if k == 1 {
+            let solo = Evaluator::new(&net, cfg).shard(0, net.stages.len(), &devs[0]);
+            let (feasible, fps) = if solo.fits() {
+                ("yes".to_string(), format!("{:.0}", 1.0 / solo.seconds_per_frame))
+            } else {
+                ("no".to_string(), "-".to_string())
+            };
+            t.row([
+                network,
+                mix,
+                kcol,
+                feasible,
+                fps,
+                "-".to_string(),
+                format!("{:.0}", 100.0 * solo.bram_pressure()),
+                "-".to_string(),
+            ]);
+            continue;
+        }
+        match partition(&net, &devs, cfg) {
+            Err(_) => {
+                let dash = || "-".to_string();
+                t.row([network, mix, kcol, "no".into(), dash(), dash(), dash(), dash()])
+            }
+            Ok(plan) => {
+                let max_ocm =
+                    plan.shards.iter().map(|s| s.bram_pressure()).fold(0.0, f64::max);
+                let max_link = plan.link_utilization().into_iter().fold(0.0, f64::max);
+                let bottleneck = if plan.bottleneck_is_link() {
+                    "link".to_string()
+                } else {
+                    let worst = plan
+                        .shards
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| {
+                            a.1.seconds_per_frame.partial_cmp(&b.1.seconds_per_frame).unwrap()
+                        })
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    format!("shard{worst}")
+                };
+                t.row([
+                    network,
+                    mix,
+                    kcol,
+                    "yes".into(),
+                    format!("{:.0}", plan.fps),
+                    bottleneck,
+                    format!("{:.0}", 100.0 * max_ocm),
+                    format!("{:.0}", 100.0 * max_link),
+                ]);
+            }
+        }
     }
     t
 }

@@ -1,0 +1,102 @@
+//! Inter-shard link model.
+//!
+//! A pipeline cut between two devices turns one intra-FPGA AXI stream into
+//! a board-to-board transport (Aurora/QSFP in the FINN multi-FPGA setting,
+//! NICs in a host-mediated one). The model is store-and-forward at frame
+//! granularity: a frame occupies the link for its serialization time plus
+//! a fixed per-frame latency, and back-to-back frames do not overlap — so
+//! the link behaves exactly like one more pipeline stage whose initiation
+//! interval is [`LinkSpec::seconds_per_frame`]. Bounded FIFOs on both ends
+//! (the sharded-pipeline simulator's `link_fifo` knob) absorb jitter.
+//!
+//! Cut traffic comes from the activation tensor crossing the boundary
+//! ([`crate::nn::Stage::output_bits_per_frame`]). When the stage *after*
+//! the cut is a residual block, the tensor is consumed twice on the remote
+//! device — once by the branch, once by the bypass FIFO (§III.B) — and
+//! since the duplication point moves across the link, the cut carries the
+//! stream twice.
+
+use crate::nn::{Network, Stage};
+
+/// Bandwidth/latency of one inter-device link.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// Usable link bandwidth in Gbit/s.
+    pub gbps: f64,
+    /// Fixed per-frame transport latency in microseconds.
+    pub latency_us: f64,
+}
+
+impl LinkSpec {
+    /// A 100G Aurora/QSFP-class board-to-board link.
+    pub fn default_100g() -> LinkSpec {
+        LinkSpec { gbps: 100.0, latency_us: 2.0 }
+    }
+
+    /// Seconds one frame of `bits` occupies the link (serialization +
+    /// fixed latency; store-and-forward, no overlap between frames).
+    pub fn seconds_per_frame(&self, bits: u64) -> f64 {
+        assert!(self.gbps > 0.0, "link bandwidth must be positive");
+        bits as f64 / (self.gbps * 1e9) + self.latency_us * 1e-6
+    }
+}
+
+/// Activation bits per frame crossing a cut placed *after* stage
+/// `cut_after` (so between `cut_after` and `cut_after + 1`). Doubled when
+/// the downstream stage is a residual block (its input feeds both the
+/// branch and the bypass FIFO on the remote device).
+pub fn cut_traffic_bits(net: &Network, cut_after: usize) -> u64 {
+    assert!(
+        cut_after + 1 < net.stages.len(),
+        "cut after stage {cut_after} leaves no downstream stage"
+    );
+    let mut bits = net.stages[cut_after].output_bits_per_frame();
+    if matches!(net.stages[cut_after + 1], Stage::ResBlock { .. }) {
+        bits *= 2;
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{cnv, resnet50, CnvVariant};
+
+    #[test]
+    fn link_time_combines_serialization_and_latency() {
+        let l = LinkSpec { gbps: 10.0, latency_us: 5.0 };
+        // 10 Gbit at 10 Gb/s = 1 s, plus 5 us
+        let t = l.seconds_per_frame(10_000_000_000);
+        assert!((t - 1.000_005).abs() < 1e-9, "{t}");
+        // zero payload still pays the latency
+        assert!((l.seconds_per_frame(0) - 5e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cnv_cut_traffic_shrinks_down_the_pipeline() {
+        // feature maps shrink through the conv stack, so later cuts are
+        // cheaper — the partitioner's incentive to cut late
+        let net = cnv(CnvVariant::W2A2);
+        let early = cut_traffic_bits(&net, 1); // after conv2
+        let late = cut_traffic_bits(&net, net.stages.len() - 2);
+        assert!(early > 50 * late, "early {early} vs late {late}");
+    }
+
+    #[test]
+    fn resblock_bypass_doubles_cut_traffic() {
+        let net = resnet50(1);
+        // find a cut whose downstream stage is a resblock
+        let i = net
+            .stages
+            .iter()
+            .enumerate()
+            .position(|(i, s)| {
+                i + 1 < net.stages.len()
+                    && matches!(net.stages[i + 1], crate::nn::Stage::ResBlock { .. })
+                    && !matches!(s, crate::nn::Stage::ResBlock { .. })
+            })
+            .expect("rn50 has a non-resblock stage feeding a resblock");
+        let single = net.stages[i].output_bits_per_frame();
+        assert_eq!(cut_traffic_bits(&net, i), 2 * single);
+    }
+}

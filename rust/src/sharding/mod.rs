@@ -1,0 +1,132 @@
+//! Pipeline-parallel multi-device sharding.
+//!
+//! The paper's porting story fits one dataflow accelerator into the OCM of
+//! a *single* smaller device (7020→7012S, U250→U280). This subsystem opens
+//! the scenario the ROADMAP calls "multi-device floorplan-aware sharding":
+//! a network that fits *no* single device — even FCMP-packed — is split
+//! into `k` contiguous **stage shards** placed on a heterogeneous device
+//! list and served as a staged pipeline:
+//!
+//! ```text
+//!   frames ─> [ shard 0 on dev A ] ─link─> [ shard 1 on dev B ] ─link─> … ─> out
+//!              stages 0..c1              stages c1..c2
+//!              FCMP-packed per shard     bounded inter-device FIFOs
+//! ```
+//!
+//! * [`partition()`] — exact DP over contiguous covers, minimizing the
+//!   wall-clock bottleneck (shard II ÷ per-device effective clock, or a
+//!   link's store-and-forward interval) subject to per-device BRAM / URAM /
+//!   LUT feasibility *after* invoking the FCMP packer on every candidate
+//!   shard (memoized range-wise and process-wide).
+//! * [`LinkSpec`] / [`cut_traffic_bits`] — the inter-shard transport
+//!   model, including the doubled stream when a resblock's bypass
+//!   duplication point crosses a cut.
+//! * [`crate::sim::pipeline::simulate_sharded`] — discrete-event
+//!   validation that the staged pipeline's steady state matches
+//!   [`ShardPlan::fps`].
+//! * [`crate::coordinator::Server::start_chain`] — serves a plan as a
+//!   stage chain: every frame traverses shard 0..k-1 in order over
+//!   bounded queues, with per-stage and end-to-end latency metrics.
+//!
+//! CLI: `fcmp shard --network cnv-w2a2 --devices zynq7012s,zynq7012s
+//! --shards 2`; bench: `shard_scaling` → `BENCH_sharding.json`.
+
+pub mod link;
+pub mod partition;
+
+pub use link::{cut_traffic_bits, LinkSpec};
+pub use partition::{
+    fits_packed, partition, Evaluator, Link, PartitionConfig, Shard, ShardPlan,
+    LINK_FIFO_BRAMS,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{zynq_7012s, zynq_7020};
+    use crate::nn::{cnv, CnvVariant};
+
+    fn ffd_cfg() -> PartitionConfig {
+        PartitionConfig { generations: 0, ..PartitionConfig::default() }
+    }
+
+    #[test]
+    fn w2a2_needs_sharding_w1a1_does_not() {
+        // the paper ports CNV-W1A1-P4 onto one 7012S; the doubled weight
+        // bits of W2A2 overflow it even packed — the sharding scenario
+        let small = zynq_7012s();
+        assert!(fits_packed(&cnv(CnvVariant::W1A1), &small, ffd_cfg()));
+        assert!(!fits_packed(&cnv(CnvVariant::W2A2), &small, ffd_cfg()));
+    }
+
+    #[test]
+    fn two_7012s_host_what_one_cannot() {
+        let net = cnv(CnvVariant::W2A2);
+        let devs = [zynq_7012s(), zynq_7012s()];
+        let plan = partition(&net, &devs, ffd_cfg()).expect("2-shard cover");
+        assert_eq!(plan.shards.len(), 2);
+        assert_eq!(plan.links.len(), 1);
+        for s in &plan.shards {
+            assert!(s.fits(), "shard {:?} overflows", s.stages);
+            assert!(s.bram_demand <= s.bram_capacity);
+        }
+        // contiguous exhaustive cover
+        let a = plan.assignment();
+        assert_eq!(a.len(), net.stages.len());
+        assert!(a.windows(2).all(|w| w[1] == w[0] || w[1] == w[0] + 1));
+        assert_eq!(*a.last().unwrap(), 1);
+        assert!(plan.fps > 0.0 && plan.bottleneck_s > 0.0);
+    }
+
+    #[test]
+    fn plan_bottleneck_consistent_with_members() {
+        let net = cnv(CnvVariant::W2A2);
+        let devs = [zynq_7020(), zynq_7012s()];
+        let plan = partition(&net, &devs, ffd_cfg()).unwrap();
+        let worst_shard = plan.shards.iter().map(|s| s.seconds_per_frame).fold(0.0, f64::max);
+        let worst_link = plan.links.iter().map(|l| l.seconds_per_frame).fold(0.0, f64::max);
+        assert!((plan.bottleneck_s - worst_shard.max(worst_link)).abs() < 1e-15);
+        assert!((plan.fps * plan.bottleneck_s - 1.0).abs() < 1e-12);
+        for u in plan.link_utilization() {
+            assert!(u > 0.0 && u <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn slow_links_become_the_bottleneck() {
+        let net = cnv(CnvVariant::W2A2);
+        let devs = [zynq_7012s(), zynq_7012s()];
+        // a near-zero-bandwidth link dominates any shard's II
+        let cfg = PartitionConfig {
+            generations: 0,
+            link: LinkSpec { gbps: 0.0001, latency_us: 2.0 },
+            ..PartitionConfig::default()
+        };
+        let plan = partition(&net, &devs, cfg).unwrap();
+        assert!(plan.bottleneck_is_link(), "links {:?}", plan.links);
+        let fast = partition(&net, &devs, ffd_cfg()).unwrap();
+        assert!(plan.fps < fast.fps);
+    }
+
+    #[test]
+    fn precheck_rejects_fleets_with_too_little_total_ocm() {
+        // the cover-kernel pre-check fires before any packer runs: two
+        // 8-BRAM devices can never host CNV-W2A2's weight bits
+        let mut tiny = zynq_7012s();
+        tiny.bram18 = 8;
+        for slr in &mut tiny.slrs {
+            slr.bram18 = 8;
+        }
+        let err = partition(&cnv(CnvVariant::W2A2), &[tiny.clone(), tiny], ffd_cfg());
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("OCM"));
+    }
+
+    #[test]
+    fn too_many_shards_rejected() {
+        let net = cnv(CnvVariant::W1A1);
+        let devs: Vec<_> = (0..net.stages.len() + 1).map(|_| zynq_7020()).collect();
+        assert!(partition(&net, &devs, ffd_cfg()).is_err());
+        assert!(partition(&net, &[], ffd_cfg()).is_err());
+    }
+}

@@ -1,0 +1,396 @@
+//! Bottleneck-minimal contiguous partition of a network over a device fleet.
+//!
+//! The floorplanner's monotone linear-partition trick
+//! ([`crate::device::floorplan`]) assigns stages to SLRs *within* one
+//! device; here the same contiguity structure is lifted to devices *within
+//! a fleet*, with three generalizations that break the binary-search
+//! formulation and call for dynamic programming instead:
+//!
+//! 1. **Heterogeneous capacity** — every shard must fit its own device
+//!    *after* FCMP packing, so shard cost is not additive in the stages:
+//!    the packer runs per candidate stage range (memoized by range and
+//!    device via [`crate::packing::cache`]).
+//! 2. **Heterogeneous speed** — the objective is wall-clock bottleneck
+//!    (seconds/frame = shard II ÷ that device's post-timing-closure
+//!    clock), not a resource bottleneck.
+//! 3. **Links** — each cut inserts a store-and-forward link stage whose
+//!    initiation interval competes for the bottleneck
+//!    ([`super::link`]).
+//!
+//! `dp[j][i]` = the best achievable bottleneck covering stages `[0, i)`
+//! with the first `j` devices (all shards non-empty); the transition
+//! scans the last cut `m` and takes
+//! `max(dp[j-1][m], link(m-1), shard(m..i, device_j))`. `max`/`min`
+//! compose monotonically, so the DP is exact over all contiguous covers.
+
+use std::collections::HashMap;
+
+use super::link::{cut_traffic_bits, LinkSpec};
+use crate::device::Device;
+use crate::memory;
+use crate::nn::Network;
+use crate::{folding, report, timing};
+
+/// Partitioner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionConfig {
+    /// FCMP bin height `H_B` for every shard's weight subsystem.
+    pub bin_height: usize,
+    /// GA generations per shard packing; `0` selects the deterministic FFD
+    /// baseline (fast sweeps, property tests, benches).
+    pub generations: usize,
+    /// Packing seed.
+    pub seed: u64,
+    /// Inter-device link model applied at every cut.
+    pub link: LinkSpec,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig {
+            bin_height: 4,
+            generations: 40,
+            seed: 2020,
+            link: LinkSpec::default_100g(),
+        }
+    }
+}
+
+/// BRAM18 budget one shard reserves per inter-device boundary it touches
+/// (ingress/egress link FIFO, CDC).
+pub const LINK_FIFO_BRAMS: u64 = 4;
+
+/// One stage shard placed on one device.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub device: Device,
+    /// Stage range `[start, end)` of the parent network.
+    pub stages: (usize, usize),
+    /// FCMP-packed weight-subsystem BRAM18 count.
+    pub packed_brams: u64,
+    /// Total BRAM18 demand: packed weights + packing-excluded weight
+    /// buffers (BRAM-resident on Zynq-class parts) + the activation/FIFO
+    /// allocation of the shard's stages + link FIFOs per touched boundary.
+    pub bram_demand: u64,
+    /// Device BRAM18 capacity.
+    pub bram_capacity: u64,
+    /// URAM demand/capacity (activations on Alveo-class parts).
+    pub uram_demand: u64,
+    pub uram_capacity: u64,
+    /// LUT utilization (compute + streamer logic + shell) of the device.
+    pub lut_util: f64,
+    /// Shard initiation interval in compute cycles (slowest stage).
+    pub ii_cycles: u64,
+    /// Effective compute clock after timing closure and memory-side
+    /// throttling at `R_F = H_B / 2`.
+    pub effective_mhz: f64,
+    /// Seconds per frame: `ii_cycles / (effective_mhz · 1e6)`.
+    pub seconds_per_frame: f64,
+}
+
+impl Shard {
+    /// Does the shard fit its device?
+    pub fn fits(&self) -> bool {
+        self.bram_demand <= self.bram_capacity
+            && self.uram_demand <= self.uram_capacity
+            && self.lut_util <= 1.0
+    }
+
+    /// BRAM pressure (demand / capacity).
+    pub fn bram_pressure(&self) -> f64 {
+        self.bram_demand as f64 / self.bram_capacity.max(1) as f64
+    }
+}
+
+/// One inter-shard link of a plan.
+#[derive(Clone, Debug)]
+pub struct Link {
+    /// Activation bits per frame crossing the cut.
+    pub bits_per_frame: u64,
+    /// Link initiation interval in seconds.
+    pub seconds_per_frame: f64,
+}
+
+/// A complete sharded deployment plan.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Parent network name.
+    pub network: String,
+    /// The shards in pipeline order (one per device).
+    pub shards: Vec<Shard>,
+    /// The `shards.len() - 1` links between consecutive shards.
+    pub links: Vec<Link>,
+    /// Bottleneck initiation interval in seconds (max over shards+links).
+    pub bottleneck_s: f64,
+    /// Steady-state frames/s = `1 / bottleneck_s`.
+    pub fps: f64,
+}
+
+impl ShardPlan {
+    /// Stage index → shard index.
+    pub fn assignment(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (si, s) in self.shards.iter().enumerate() {
+            for _ in s.stages.0..s.stages.1 {
+                out.push(si);
+            }
+        }
+        out
+    }
+
+    /// Is a link (not a shard) the pipeline bottleneck?
+    pub fn bottleneck_is_link(&self) -> bool {
+        self.links.iter().any(|l| l.seconds_per_frame >= self.bottleneck_s - 1e-15)
+    }
+
+    /// Per-link occupancy relative to the bottleneck (1.0 = the link IS
+    /// the bottleneck).
+    pub fn link_utilization(&self) -> Vec<f64> {
+        self.links.iter().map(|l| l.seconds_per_frame / self.bottleneck_s).collect()
+    }
+}
+
+/// Evaluates candidate shards, memoizing by `(start, end, device)`. The
+/// inner packing is additionally memoized process-wide by
+/// [`crate::packing::cache`], so repeated partitioning runs (benches,
+/// property tests sampling alternatives) pay for each range once.
+pub struct Evaluator<'a> {
+    net: &'a Network,
+    cfg: PartitionConfig,
+    /// Keyed by `(start, end, device fingerprint)` — the fingerprint, not
+    /// the name, so same-named devices with tweaked capacities never
+    /// share a cached shard.
+    memo: HashMap<(usize, usize, String), Shard>,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(net: &'a Network, cfg: PartitionConfig) -> Evaluator<'a> {
+        Evaluator { net, cfg, memo: HashMap::new() }
+    }
+
+    /// Evaluate stages `[start, end)` on `dev` (always returns a shard;
+    /// check [`Shard::fits`] for feasibility).
+    pub fn shard(&mut self, start: usize, end: usize, dev: &Device) -> Shard {
+        let key = (start, end, dev.fingerprint());
+        if let Some(hit) = self.memo.get(&key) {
+            return hit.clone();
+        }
+        let s = self.evaluate(start, end, dev);
+        self.memo.insert(key, s.clone());
+        s
+    }
+
+    fn evaluate(&self, start: usize, end: usize, dev: &Device) -> Shard {
+        let sub = self.net.slice(start, end);
+        let packed = report::pack_network_cached(
+            &sub,
+            dev,
+            self.cfg.bin_height,
+            self.cfg.generations,
+            self.cfg.seed,
+        );
+        let use_uram = dev.uram > 0;
+        // packing-excluded layers: URAM/HBM/DDR on Alveo (§V), BRAM on Zynq
+        let excluded: u64 = if use_uram {
+            0
+        } else {
+            sub.layers()
+                .iter()
+                .filter(|l| l.exclude_from_packing)
+                .map(|l| memory::WeightBuffer::from_layer(l, 0).brams())
+                .sum()
+        };
+        // activation/FIFO storage: URAM on Alveo; on Zynq the conservative
+        // HLS FIFO allocation is halved, matching the §V porting builds
+        // (FIFOs are re-sized to fit when porting — port_device example)
+        let (act_brams, uram_demand) = if use_uram {
+            (0, memory::activation_urams(&sub))
+        } else {
+            (memory::activation_brams(&sub) / 2, 0)
+        };
+        let boundaries = (start > 0) as u64 + ((end < self.net.stages.len()) as u64);
+        let bram_demand = packed.report.brams + excluded + act_brams + LINK_FIFO_BRAMS * boundaries;
+
+        let res = folding::network_resources(&sub, dev);
+        let lut_util = folding::packed_lut_util(&res, packed.logic_kluts, dev);
+        let rf = self.cfg.bin_height as f64 / 2.0;
+        let target = dev.nominal_compute_mhz;
+        let t = timing::evaluate(dev, lut_util.min(1.0), target, rf, target);
+        let ii_cycles = sub.initiation_interval().max(1);
+        let seconds_per_frame = ii_cycles as f64 / (t.effective_fc_mhz * 1e6);
+        Shard {
+            device: dev.clone(),
+            stages: (start, end),
+            packed_brams: packed.report.brams,
+            bram_demand,
+            bram_capacity: dev.bram18,
+            uram_demand,
+            uram_capacity: dev.uram,
+            lut_util,
+            ii_cycles,
+            effective_mhz: t.effective_fc_mhz,
+            seconds_per_frame,
+        }
+    }
+
+    /// Bottleneck (seconds/frame) of an explicit partition given by `cuts`
+    /// (ascending stage indices where shard `j` is `[cuts[j-1], cuts[j])`,
+    /// with implicit 0 and `n` sentinels), or `None` when any shard
+    /// overflows its device. Used by the optimality property test to score
+    /// sampled alternatives against the DP's choice.
+    pub fn bottleneck_of(&mut self, devices: &[Device], cuts: &[usize]) -> Option<f64> {
+        let n = self.net.stages.len();
+        assert_eq!(cuts.len() + 1, devices.len(), "k shards need k-1 cuts");
+        let mut bounds = Vec::with_capacity(devices.len() + 1);
+        bounds.push(0);
+        bounds.extend_from_slice(cuts);
+        bounds.push(n);
+        let mut worst = 0.0f64;
+        for (j, dev) in devices.iter().enumerate() {
+            let (s, e) = (bounds[j], bounds[j + 1]);
+            if s >= e || e > n {
+                return None;
+            }
+            let shard = self.shard(s, e, dev);
+            if !shard.fits() {
+                return None;
+            }
+            worst = worst.max(shard.seconds_per_frame);
+            if j > 0 {
+                let bits = cut_traffic_bits(self.net, s - 1);
+                worst = worst.max(self.cfg.link.seconds_per_frame(bits));
+            }
+        }
+        Some(worst)
+    }
+}
+
+/// Does the whole network, FCMP-packed, fit a single device? (The
+/// single-shard degenerate of the partitioner — the "must we shard at
+/// all?" question.)
+pub fn fits_packed(net: &Network, dev: &Device, cfg: PartitionConfig) -> bool {
+    Evaluator::new(net, cfg).shard(0, net.stages.len(), dev).fits()
+}
+
+/// Partition `net` over `devices` (one shard per device, in order) into
+/// the contiguous cover minimizing the bottleneck initiation interval,
+/// subject to every shard fitting its device after FCMP packing. Errors
+/// when the device list is empty, longer than the stage count, or no
+/// feasible cover exists.
+pub fn partition(
+    net: &Network,
+    devices: &[Device],
+    cfg: PartitionConfig,
+) -> crate::Result<ShardPlan> {
+    let k = devices.len();
+    let n = net.stages.len();
+    anyhow::ensure!(k > 0, "sharding needs at least one device");
+    anyhow::ensure!(
+        k <= n,
+        "{k} shards over {n} stages: every shard needs at least one stage"
+    );
+
+    // Fast infeasibility pre-check via the floorplanner's cover kernel
+    // with heterogeneous caps. Per-stage floor(weight_bits / 18 Kib) is a
+    // sound lower bound on any shard's packed BRAM demand on every device
+    // class (summed floor divisions never exceed the shard's
+    // information-theoretic bits/18Kib bound, which no packing can beat),
+    // so if even these floors admit no monotone cover of the fleet's BRAM
+    // capacities, no partition exists and the DP (and its packer
+    // invocations) can be skipped entirely.
+    let floors: Vec<u64> = net
+        .stages
+        .iter()
+        .map(|s| {
+            let bits: u64 = s
+                .layers()
+                .iter()
+                .filter(|l| !l.exclude_from_packing)
+                .map(|l| l.weight_bits())
+                .sum();
+            bits / crate::device::BRAM18_BITS
+        })
+        .collect();
+    let caps: Vec<u64> = devices.iter().map(|d| d.bram18).collect();
+    anyhow::ensure!(
+        crate::device::contiguous_cover(&floors, &caps).is_some(),
+        "{} does not partition over {:?}: total weight bits exceed the fleet's OCM",
+        net.name,
+        devices.iter().map(|d| d.name).collect::<Vec<_>>()
+    );
+
+    let mut ev = Evaluator::new(net, cfg);
+
+    // dp[j][i]: best bottleneck covering stages [0, i) with j shards
+    let inf = f64::INFINITY;
+    let mut dp = vec![vec![inf; n + 1]; k + 1];
+    let mut prev = vec![vec![usize::MAX; n + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for j in 1..=k {
+        let dev = &devices[j - 1];
+        // shard j-1 spans [m, i); i is bounded so every later shard keeps
+        // at least one stage, and the final layer only needs the full
+        // cover (skipping it keeps a k=2 sweep at O(S) packs, not O(S²))
+        let lo = if j == k { n } else { j };
+        for i in lo..=(n - (k - j)) {
+            for m in (j - 1)..i {
+                if dp[j - 1][m].is_infinite() {
+                    continue;
+                }
+                let shard = ev.shard(m, i, dev);
+                if !shard.fits() {
+                    continue;
+                }
+                let mut cost = dp[j - 1][m].max(shard.seconds_per_frame);
+                if m > 0 {
+                    let bits = cut_traffic_bits(net, m - 1);
+                    cost = cost.max(cfg.link.seconds_per_frame(bits));
+                }
+                if cost < dp[j][i] {
+                    dp[j][i] = cost;
+                    prev[j][i] = m;
+                }
+            }
+        }
+    }
+    anyhow::ensure!(
+        dp[k][n].is_finite(),
+        "{} does not partition over {:?}: no contiguous {}-shard cover fits",
+        net.name,
+        devices.iter().map(|d| d.name).collect::<Vec<_>>(),
+        k
+    );
+
+    // reconstruct cut points
+    let mut bounds = vec![n];
+    let mut i = n;
+    for j in (1..=k).rev() {
+        i = prev[j][i];
+        bounds.push(i);
+    }
+    bounds.reverse();
+    debug_assert_eq!(bounds[0], 0);
+
+    let mut shards = Vec::with_capacity(k);
+    let mut links = Vec::with_capacity(k - 1);
+    let mut bottleneck = 0.0f64;
+    for j in 0..k {
+        let (s, e) = (bounds[j], bounds[j + 1]);
+        let shard = ev.shard(s, e, &devices[j]);
+        bottleneck = bottleneck.max(shard.seconds_per_frame);
+        if j > 0 {
+            let bits = cut_traffic_bits(net, s - 1);
+            let secs = cfg.link.seconds_per_frame(bits);
+            bottleneck = bottleneck.max(secs);
+            links.push(Link { bits_per_frame: bits, seconds_per_frame: secs });
+        }
+        shards.push(shard);
+    }
+    Ok(ShardPlan {
+        network: net.name.clone(),
+        shards,
+        links,
+        bottleneck_s: bottleneck,
+        fps: 1.0 / bottleneck,
+    })
+}

@@ -9,7 +9,10 @@
 
 pub mod pipeline;
 
-pub use pipeline::{simulate_network, PipelineResult};
+pub use pipeline::{
+    simulate_chain, simulate_network, simulate_sharded, ChainResult, ChainStage,
+    PipelineResult, ShardedResult,
+};
 
 use crate::nn::{Network, Stage};
 
