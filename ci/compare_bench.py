@@ -11,14 +11,18 @@ fields are compared directionally:
 * throughput-like fields (``throughput_fps``, ``sim_fps``, ``analytic_fps``,
   ``completed``, lower is worse) warn below ``--tp-tol``.
 
-Exit code is always 0: these benches run on shared CI runners where
-wall-clock noise is real, so the comparison *flags* rather than fails —
-the same philosophy as serve_scaling's soft scaling check. Rows present
-in only one file are reported informationally.
+Perf deltas never fail the job: these benches run on shared CI runners
+where wall-clock noise is real, so the comparison *flags* rather than
+fails — the same philosophy as serve_scaling's soft scaling check. Rows
+present in only one file are reported informationally, and a missing
+baseline (the first run of a new bench artifact) is a notice. The one
+failing case (exit 1) is a missing or corrupt *current* artifact: that
+means the bench itself broke, not that perf moved.
 """
 
 import argparse
 import json
+import os
 import sys
 
 LATENCY_SUFFIXES = ("_ms",)
@@ -48,6 +52,8 @@ def row_key(row):
 def load(path):
     with open(path) as f:
         rows = json.load(f)
+    if not isinstance(rows, list):
+        raise ValueError(f"{path}: expected a JSON array of rows")
     return {row_key(r): r for r in rows}
 
 
@@ -62,12 +68,25 @@ def main():
     ap.add_argument("--label", default="bench")
     args = ap.parse_args()
 
+    # A missing *baseline* is expected on the first run of a new bench
+    # artifact (nothing to download yet): warn-and-pass. A missing or
+    # corrupt *current* artifact means the bench itself broke: fail.
+    if not os.path.exists(args.previous):
+        print(f"::notice::{args.label}: no baseline artifact yet "
+              f"({args.previous}) — first run of this bench, comparison skipped")
+        return 0
     try:
         prev = load(args.previous)
+    except (OSError, ValueError) as e:
+        print(f"::warning::{args.label}: baseline unreadable ({e}) — "
+              f"comparison skipped")
+        return 0
+    try:
         curr = load(args.current)
     except (OSError, ValueError) as e:
-        print(f"::notice::{args.label}: comparison skipped ({e})")
-        return 0
+        print(f"::error::{args.label}: current bench artifact missing or "
+              f"corrupt ({e})")
+        return 1
 
     warned = 0
     for key, crow in sorted(curr.items()):

@@ -1,0 +1,268 @@
+//! Hysteresis-banded replica autoscaler.
+//!
+//! The policy is deliberately asymmetric, which is where the hysteresis
+//! band comes from: **scale out** fires on distress (windowed shed rate
+//! above [`AutoscalerConfig::shed_out`], or windowed p99 above
+//! [`AutoscalerConfig::p99_out_ms`]), while **scale in** requires the
+//! fleet to be *provably* idle — zero sheds in the window, every
+//! replica's utilization under [`AutoscalerConfig::util_in`], and p99
+//! comfortably inside budget. Between the two thresholds the controller
+//! holds, so a fleet hovering near capacity never flaps. A cooldown of
+//! [`AutoscalerConfig::cooldown_ticks`] after every action gives each
+//! decision one reconfiguration's worth of signal before the next —
+//! without it, the window still reflecting pre-scale sheds would trigger
+//! a second scale-out immediately.
+//!
+//! Placement is capacity-aware via [`rank_by_capacity`]: scale-out takes
+//! the fastest standby device first (analytic FPS from
+//! [`crate::coordinator::capacity`]), scale-in retires the slowest active
+//! replica first.
+
+use crate::coordinator::{replica_fps, ReplicaSpec};
+use crate::nn::Network;
+
+use super::signal::ControlSignals;
+
+/// Autoscaler thresholds and bounds.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscalerConfig {
+    /// Never scale below this many replicas.
+    pub min_replicas: usize,
+    /// Never scale above this many replicas (also bounded by the standby
+    /// device pool).
+    pub max_replicas: usize,
+    /// Scale out when the windowed shed rate exceeds this.
+    pub shed_out: f64,
+    /// Scale out when the windowed p99 (ms) exceeds this
+    /// (`f64::INFINITY` disables the latency trigger).
+    pub p99_out_ms: f64,
+    /// Scale in only when every replica's windowed utilization is below
+    /// this (and the window saw zero sheds).
+    pub util_in: f64,
+    /// Ticks to hold after any scale action before deciding again.
+    pub cooldown_ticks: usize,
+    /// Replicas added/removed per decision.
+    pub step: usize,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            min_replicas: 1,
+            max_replicas: 8,
+            shed_out: 0.02,
+            p99_out_ms: f64::INFINITY,
+            util_in: 0.25,
+            cooldown_ticks: 4,
+            step: 1,
+        }
+    }
+}
+
+/// One autoscaling decision, as a replica-count delta.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// No change this tick.
+    Hold,
+    /// Add this many replicas.
+    Out(usize),
+    /// Remove this many replicas.
+    In(usize),
+}
+
+/// Deterministic tick-driven scaling controller: same signal sequence,
+/// same decision sequence.
+pub struct Autoscaler {
+    cfg: AutoscalerConfig,
+    last_action_tick: Option<usize>,
+    seen_traffic: bool,
+}
+
+impl Autoscaler {
+    /// Controller with the given thresholds.
+    pub fn new(cfg: AutoscalerConfig) -> Autoscaler {
+        Autoscaler { cfg, last_action_tick: None, seen_traffic: false }
+    }
+
+    /// The configured thresholds.
+    pub fn config(&self) -> &AutoscalerConfig {
+        &self.cfg
+    }
+
+    /// Decide for the tick that produced `signals`, with `current` active
+    /// replicas. Pure function of the observed signal sequence (plus the
+    /// cooldown clock), so the control loop is replayable. The cooldown
+    /// clock only advances via [`Autoscaler::note_action`], which the
+    /// driver calls when a decision *actually* reshaped the fleet — a
+    /// decision that no-ops (standby pool exhausted) must not burn the
+    /// cooldown, or a later legitimate action would be delayed for no
+    /// journaled reason.
+    pub fn decide(&mut self, signals: &ControlSignals, current: usize) -> ScaleDecision {
+        if signals.offered > 0 {
+            self.seen_traffic = true;
+        }
+        if let Some(last) = self.last_action_tick {
+            if signals.tick.saturating_sub(last) < self.cfg.cooldown_ticks {
+                return ScaleDecision::Hold;
+            }
+        }
+        let overloaded = signals.shed_rate > self.cfg.shed_out
+            || signals.p99_ms.map_or(false, |p| p > self.cfg.p99_out_ms);
+        if overloaded && current < self.cfg.max_replicas {
+            let step = self.cfg.step.max(1).min(self.cfg.max_replicas - current);
+            return ScaleDecision::Out(step);
+        }
+        // the scale-in side of the hysteresis band: provably idle only —
+        // and never before the first traffic, or an empty pre-trace window
+        // would fold the fleet below its provisioned size
+        let idle = self.seen_traffic
+            && signals.shed == 0
+            && signals.max_utilization < self.cfg.util_in
+            && signals.p99_ms.map_or(true, |p| p < 0.5 * self.cfg.p99_out_ms);
+        if idle && current > self.cfg.min_replicas {
+            let step = self.cfg.step.max(1).min(current - self.cfg.min_replicas);
+            return ScaleDecision::In(step);
+        }
+        ScaleDecision::Hold
+    }
+
+    /// Start the cooldown: a decision from [`Autoscaler::decide`] was
+    /// actuated at `tick` and changed the fleet.
+    pub fn note_action(&mut self, tick: usize) {
+        self.last_action_tick = Some(tick);
+    }
+}
+
+/// Capacity-aware placement order: indices of `pool` sorted fastest-first
+/// by analytic throughput of `net` at each spec (ties break toward the
+/// lower index, so the order — and with it every scale decision — is
+/// deterministic). Scale-out consumes this order from the front; scale-in
+/// retires from the back.
+pub fn rank_by_capacity(net: &Network, pool: &[ReplicaSpec]) -> Vec<usize> {
+    let fps: Vec<f64> = pool.iter().map(|s| replica_fps(net, s)).collect();
+    let mut idx: Vec<usize> = (0..pool.len()).collect();
+    idx.sort_by(|&a, &b| {
+        fps[b].partial_cmp(&fps[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn signals(
+        tick: usize,
+        shed_rate: f64,
+        shed: u64,
+        util: f64,
+        p99: Option<f64>,
+    ) -> ControlSignals {
+        ControlSignals {
+            tick,
+            offered: 100,
+            shed,
+            shed_rate,
+            completed: 100 - shed,
+            p50_ms: p99.map(|p| p / 2.0),
+            p99_ms: p99,
+            utilization: vec![util],
+            max_utilization: util,
+        }
+    }
+
+    fn cfg() -> AutoscalerConfig {
+        AutoscalerConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            shed_out: 0.05,
+            p99_out_ms: 100.0,
+            util_in: 0.25,
+            cooldown_ticks: 3,
+            step: 1,
+        }
+    }
+
+    #[test]
+    fn sheds_trigger_scale_out_until_the_max() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.decide(&signals(0, 0.3, 30, 0.9, None), 1), ScaleDecision::Out(1));
+        // at max: overloaded but can't grow
+        let mut b = Autoscaler::new(cfg());
+        assert_eq!(b.decide(&signals(0, 0.3, 30, 0.9, None), 4), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn p99_breach_also_triggers_scale_out() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(
+            a.decide(&signals(0, 0.0, 0, 0.9, Some(250.0)), 2),
+            ScaleDecision::Out(1)
+        );
+    }
+
+    #[test]
+    fn cooldown_holds_between_actuated_actions() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.decide(&signals(0, 0.3, 30, 0.9, None), 1), ScaleDecision::Out(1));
+        a.note_action(0); // the driver actuated the decision
+        assert_eq!(a.decide(&signals(1, 0.3, 30, 0.9, None), 2), ScaleDecision::Hold);
+        assert_eq!(a.decide(&signals(2, 0.3, 30, 0.9, None), 2), ScaleDecision::Hold);
+        // cooldown of 3 ticks elapsed at tick 3
+        assert_eq!(a.decide(&signals(3, 0.3, 30, 0.9, None), 2), ScaleDecision::Out(1));
+    }
+
+    #[test]
+    fn unactuated_decisions_do_not_burn_the_cooldown() {
+        // the driver could not actuate (standby exhausted): no note_action,
+        // so the very next tick may still decide — including the other
+        // direction once the overload clears
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.decide(&signals(0, 0.3, 30, 0.9, None), 2), ScaleDecision::Out(1));
+        assert_eq!(a.decide(&signals(1, 0.3, 30, 0.9, None), 2), ScaleDecision::Out(1));
+        assert_eq!(a.decide(&signals(2, 0.0, 0, 0.05, Some(10.0)), 2), ScaleDecision::In(1));
+    }
+
+    #[test]
+    fn scale_in_requires_a_provably_idle_window_after_traffic() {
+        let mut a = Autoscaler::new(cfg());
+        // pre-traffic idle window must NOT fold the fleet
+        let mut pre = signals(0, 0.0, 0, 0.0, None);
+        pre.offered = 0;
+        assert_eq!(a.decide(&pre, 3), ScaleDecision::Hold);
+        // traffic seen, then an idle window: scale in
+        assert_eq!(a.decide(&signals(1, 0.0, 0, 0.6, None), 3), ScaleDecision::Hold);
+        assert_eq!(a.decide(&signals(2, 0.0, 0, 0.1, Some(10.0)), 3), ScaleDecision::In(1));
+        // min bound: idle but already at minimum
+        let mut b = Autoscaler::new(cfg());
+        b.decide(&signals(0, 0.2, 20, 0.9, None), 1); // sees traffic (and scales)
+        assert_eq!(b.decide(&signals(9, 0.0, 0, 0.0, None), 1), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn hysteresis_band_holds_between_thresholds() {
+        let mut a = Autoscaler::new(cfg());
+        // busy but not shedding, p99 inside budget: neither direction
+        assert_eq!(
+            a.decide(&signals(0, 0.0, 0, 0.7, Some(60.0)), 2),
+            ScaleDecision::Hold
+        );
+    }
+
+    #[test]
+    fn placement_ranks_fastest_first_deterministically() {
+        let net = crate::nn::cnv(crate::nn::CnvVariant::W1A1);
+        let pool = vec![
+            ReplicaSpec::paper_point(crate::device::alveo_u280()),
+            ReplicaSpec::paper_point(crate::device::alveo_u250()),
+            ReplicaSpec::paper_point(crate::device::alveo_u280()),
+        ];
+        let order = rank_by_capacity(&net, &pool);
+        assert_eq!(order.len(), 3);
+        // Table V: the U250 point out-clocks the 99%-dense U280 point
+        assert_eq!(order[0], 1, "fastest device must rank first: {order:?}");
+        // equal-speed U280s tie toward the lower index
+        assert_eq!(&order[1..], &[0, 2]);
+        assert_eq!(order, rank_by_capacity(&net, &pool), "ranking must be stable");
+    }
+}

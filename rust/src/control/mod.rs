@@ -1,0 +1,704 @@
+//! Adaptive control plane: the subsystem that closes the loop between
+//! fleet metrics and fleet shape.
+//!
+//! Everything below the coordinator picks a *static* design point — an
+//! FCMP packing, a shard plan, a replica count. Production load is not
+//! static: it drifts (diurnal), steps (flash crowds) and breaks (device
+//! loss). The control plane re-picks the deployed point at runtime,
+//! deterministically, on a fixed tick:
+//!
+//! ```text
+//!   Server / FleetMetrics                 (observe)
+//!        │  submits, sheds, completions, outstanding
+//!        v
+//!   signal::SignalTap ── windowed shed rate, p99, utilization
+//!        │                               (decide, once per tick)
+//!        ├─> autoscaler::Autoscaler ── hysteresis-banded Out/In/Hold
+//!        ├─> slo::SloController ────── batching-window MIMD vs p99 budget
+//!        └─> repair::replan ────────── re-partition on device loss
+//!        │                               (actuate)
+//!        ├─> ControlledFleet::scale_out/in  → Server::reconfigure
+//!        ├─> Server::set_batcher            (live, no drain)
+//!        └─> repair::splice_mock_chain      → Server::reconfigure_chain
+//! ```
+//!
+//! [`run_loop`] is the driver: it replays an arrival trace open-loop
+//! (like [`crate::coordinator::Server::replay`]) while firing the control
+//! tick on its own cadence, applying a failure-injection schedule, and
+//! journaling every decision as a [`ControlEvent`]. All controllers are
+//! pure functions of the observed signal sequence, so a run is replayable
+//! and the tests can assert on decisions, not just outcomes.
+//!
+//! Surfaces: `fcmp autoscale` (CLI), `benches/control_loop.rs`
+//! (`BENCH_control.json`), `tests/control.rs` (acceptance).
+
+pub mod autoscaler;
+pub mod repair;
+pub mod signal;
+pub mod slo;
+
+pub use autoscaler::{rank_by_capacity, Autoscaler, AutoscalerConfig, ScaleDecision};
+pub use repair::{replan, splice_mock_chain, RepairOutcome};
+pub use signal::{ControlSignals, SignalConfig, SignalTap};
+pub use slo::{co_tune_chain, SloConfig, SloController};
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    fleet_weights, replica_fps, BatcherConfig, FleetMetrics, FleetSummary, MockBackend,
+    Policy, ReplicaSpec, Server, ServerConfig, SubmitError, Trace,
+};
+use crate::nn::Network;
+use crate::util::rng::Rng;
+
+/// One scheduled device loss: at `at_s` seconds into the run, active
+/// replica `replica` dies (it leaves the fleet entirely — a dead device
+/// does not return to standby).
+#[derive(Clone, Copy, Debug)]
+pub struct FailureEvent {
+    /// Seconds from the start of the replay.
+    pub at_s: f64,
+    /// Index into the active replica list at firing time.
+    pub replica: usize,
+}
+
+/// Driver-loop configuration.
+#[derive(Clone, Debug)]
+pub struct LoopConfig {
+    /// Control period: signals are aggregated and decisions made once per
+    /// tick.
+    pub tick: Duration,
+    /// Signal-window shape.
+    pub signal: SignalConfig,
+    /// Autoscaling policy; `None` runs a static fleet (the baseline arm).
+    pub autoscaler: Option<AutoscalerConfig>,
+    /// SLO batching controller; `None` leaves batchers at their baseline.
+    pub slo: Option<SloConfig>,
+    /// Failure-injection schedule (fired in time order).
+    pub failures: Vec<FailureEvent>,
+    /// Extra idle control ticks after the drain, so scale-in on a
+    /// quiesced fleet is observable even when the trace ends under load.
+    pub trailing_ticks: usize,
+    /// Elements per synthetic request input.
+    pub input_len: usize,
+    /// Seed for the synthetic inputs.
+    pub seed: u64,
+}
+
+impl Default for LoopConfig {
+    fn default() -> Self {
+        LoopConfig {
+            tick: Duration::from_millis(25),
+            signal: SignalConfig::default(),
+            autoscaler: None,
+            slo: None,
+            failures: Vec::new(),
+            trailing_ticks: 8,
+            input_len: 8,
+            seed: 2020,
+        }
+    }
+}
+
+/// One journaled control-plane decision.
+#[derive(Clone, Debug)]
+pub enum ControlEvent {
+    /// The autoscaler grew the fleet from `from` to `to` replicas.
+    ScaleOut {
+        /// Tick the decision fired on.
+        tick: usize,
+        /// Replicas before.
+        from: usize,
+        /// Replicas after.
+        to: usize,
+    },
+    /// The autoscaler shrank the fleet from `from` to `to` replicas.
+    ScaleIn {
+        /// Tick the decision fired on.
+        tick: usize,
+        /// Replicas before.
+        from: usize,
+        /// Replicas after.
+        to: usize,
+    },
+    /// The SLO controller retuned a replica's batcher.
+    SloAdjust {
+        /// Tick the adjustment fired on.
+        tick: usize,
+        /// Replica retuned.
+        replica: usize,
+        /// New batch-size cap.
+        max_batch: usize,
+        /// New batching window.
+        max_wait: Duration,
+    },
+    /// A scheduled device loss fired.
+    Failure {
+        /// Tick count when the failure fired.
+        tick: usize,
+        /// Active index of the victim at firing time.
+        replica: usize,
+        /// Replicas remaining after the loss.
+        survivors: usize,
+    },
+}
+
+impl std::fmt::Display for ControlEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ControlEvent::ScaleOut { tick, from, to } => {
+                write!(f, "tick {tick}: scale-out {from} -> {to} replicas")
+            }
+            ControlEvent::ScaleIn { tick, from, to } => {
+                write!(f, "tick {tick}: scale-in {from} -> {to} replicas")
+            }
+            ControlEvent::SloAdjust { tick, replica, max_batch, max_wait } => write!(
+                f,
+                "tick {tick}: slo-adjust replica {replica}: batch {max_batch}, wait {max_wait:?}"
+            ),
+            ControlEvent::Failure { tick, replica, survivors } => {
+                write!(f, "tick {tick}: FAILURE replica {replica} ({survivors} survive)")
+            }
+        }
+    }
+}
+
+/// Result of one controlled replay.
+#[derive(Debug)]
+pub struct ControlReport {
+    /// Fleet-wide serving summary of the whole run.
+    pub summary: FleetSummary,
+    /// Every control decision, in firing order.
+    pub events: Vec<ControlEvent>,
+    /// Control ticks fired.
+    pub ticks: usize,
+    /// Replicas at the start.
+    pub initial_replicas: usize,
+    /// Replicas at the end.
+    pub final_replicas: usize,
+    /// Largest fleet the run reached.
+    pub max_replicas_seen: usize,
+    /// Requests accepted.
+    pub submitted: usize,
+    /// Requests shed by admission control.
+    pub shed: usize,
+    /// Requests completed.
+    pub completed: usize,
+}
+
+impl ControlReport {
+    /// Scale-out decisions that took effect.
+    pub fn scale_outs(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, ControlEvent::ScaleOut { .. })).count()
+    }
+
+    /// Scale-in decisions that took effect.
+    pub fn scale_ins(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, ControlEvent::ScaleIn { .. })).count()
+    }
+
+    /// Failures that fired.
+    pub fn failures(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, ControlEvent::Failure { .. })).count()
+    }
+
+    /// Overall shed rate: `shed / (submitted + shed)` (0 when idle).
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.submitted + self.shed;
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / offered as f64
+        }
+    }
+
+    /// Ticks of every scale decision (out and in), in firing order — the
+    /// cooldown-bound assertions read consecutive gaps off this.
+    pub fn scale_ticks(&self) -> Vec<usize> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                ControlEvent::ScaleOut { tick, .. } | ControlEvent::ScaleIn { tick, .. } => {
+                    Some(*tick)
+                }
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// A mock-backed replicated fleet the control plane can reshape: a
+/// [`Server`] plus the [`ReplicaSpec`]s behind it (active) and the device
+/// pool scale-out can draw from (standby).
+///
+/// Per-replica mock service times derive from the analytic capacity model
+/// ([`replica_fps`]): the fastest device in the initial pool serves one
+/// item in `service_us` microseconds and every other device scales up by
+/// its FPS ratio, so the fleet's heterogeneity — and every capacity-aware
+/// placement decision — is observable without hardware. The router policy
+/// is capacity-weighted ([`Policy::Weighted`]) and re-derived on every
+/// reshape.
+pub struct ControlledFleet {
+    net: Network,
+    service_us: f64,
+    ref_fps: f64,
+    batcher: BatcherConfig,
+    queue_depth: usize,
+    active: Vec<ReplicaSpec>,
+    standby: Vec<ReplicaSpec>,
+    srv: Server,
+}
+
+fn service_time(net: &Network, spec: &ReplicaSpec, service_us: f64, ref_fps: f64) -> Duration {
+    let fps = replica_fps(net, spec).max(1e-9);
+    Duration::from_secs_f64(service_us * 1e-6 * ref_fps / fps)
+}
+
+impl ControlledFleet {
+    /// Start a fleet of `active` replicas with `standby` devices held for
+    /// scale-out. `service_us` is the per-item mock service time of the
+    /// fastest device anywhere in the pool.
+    pub fn start(
+        net: Network,
+        active: Vec<ReplicaSpec>,
+        standby: Vec<ReplicaSpec>,
+        service_us: f64,
+        batcher: BatcherConfig,
+        queue_depth: usize,
+    ) -> ControlledFleet {
+        assert!(!active.is_empty(), "a controlled fleet needs at least one active replica");
+        let ref_fps = active
+            .iter()
+            .chain(standby.iter())
+            .map(|s| replica_fps(&net, s))
+            .fold(0.0f64, f64::max)
+            .max(1e-9);
+        let weights = fleet_weights(&net, &active);
+        let svc: Vec<Duration> =
+            active.iter().map(|s| service_time(&net, s, service_us, ref_fps)).collect();
+        let cfg = ServerConfig {
+            batcher,
+            queue_depth,
+            replicas: active.len(),
+            policy: Policy::Weighted(weights),
+        };
+        let srv =
+            Server::start(move |i| MockBackend::with_service(Duration::ZERO, svc[i]), cfg);
+        ControlledFleet {
+            net,
+            service_us,
+            ref_fps,
+            batcher,
+            queue_depth,
+            active,
+            standby,
+            srv,
+        }
+    }
+
+    /// Active replica count.
+    pub fn replicas(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Devices still available for scale-out.
+    pub fn standby_len(&self) -> usize {
+        self.standby.len()
+    }
+
+    /// The active replica specs, in router order.
+    pub fn active_specs(&self) -> &[ReplicaSpec] {
+        &self.active
+    }
+
+    /// The underlying server (submit/drain directly, e.g. from tests).
+    pub fn server(&mut self) -> &mut Server {
+        &mut self.srv
+    }
+
+    /// Shut the fleet down (drains; the server is unusable afterwards).
+    pub fn shutdown(&mut self) {
+        self.srv.shutdown();
+    }
+
+    /// Drain-and-swap the server onto the current active specs.
+    fn respawn(&mut self) -> crate::Result<()> {
+        let weights = fleet_weights(&self.net, &self.active);
+        let svc: Vec<Duration> = self
+            .active
+            .iter()
+            .map(|s| service_time(&self.net, s, self.service_us, self.ref_fps))
+            .collect();
+        let cfg = ServerConfig {
+            batcher: self.batcher,
+            queue_depth: self.queue_depth,
+            replicas: self.active.len().max(1),
+            policy: Policy::Weighted(weights),
+        };
+        self.srv
+            .reconfigure(move |i| MockBackend::with_service(Duration::ZERO, svc[i]), cfg)
+    }
+
+    /// Scale out by up to `want` replicas, capacity-aware: the fastest
+    /// standby devices join first. Returns how many actually joined
+    /// (bounded by the standby pool).
+    pub fn scale_out(&mut self, want: usize) -> crate::Result<usize> {
+        if want == 0 || self.standby.is_empty() {
+            return Ok(0);
+        }
+        let mut picks: Vec<usize> =
+            rank_by_capacity(&self.net, &self.standby).into_iter().take(want).collect();
+        let added = picks.len();
+        picks.sort_unstable_by(|a, b| b.cmp(a)); // remove back-to-front
+        for i in picks {
+            let spec = self.standby.remove(i);
+            self.active.push(spec);
+        }
+        self.respawn()?;
+        Ok(added)
+    }
+
+    /// Scale in by up to `want` replicas, retiring the slowest first
+    /// (back to standby). The fleet never shrinks below one replica.
+    /// Returns how many were retired.
+    pub fn scale_in(&mut self, want: usize) -> crate::Result<usize> {
+        let removable = self.active.len().saturating_sub(1);
+        let want = want.min(removable);
+        if want == 0 {
+            return Ok(0);
+        }
+        let mut retire: Vec<usize> = rank_by_capacity(&self.net, &self.active)
+            .into_iter()
+            .rev() // slowest-first
+            .take(want)
+            .collect();
+        retire.sort_unstable_by(|a, b| b.cmp(a));
+        for i in retire {
+            let spec = self.active.remove(i);
+            self.standby.push(spec);
+        }
+        self.respawn()?;
+        Ok(want)
+    }
+
+    /// Simulated device loss: active replica `replica` leaves the fleet
+    /// for good (it does **not** return to standby) and the survivors are
+    /// respawned. Returns `false` (and does nothing) when the index is
+    /// out of range or only one replica remains — a fleet cannot be
+    /// emptied, matching the partitioner's "at least one device" rule.
+    pub fn kill(&mut self, replica: usize) -> crate::Result<bool> {
+        if replica >= self.active.len() || self.active.len() <= 1 {
+            return Ok(false);
+        }
+        self.active.remove(replica);
+        self.respawn()?;
+        Ok(true)
+    }
+}
+
+/// One control tick: sample utilization, close the signal window, let the
+/// autoscaler reshape the fleet and the SLO controller retune batchers.
+fn control_tick(
+    fleet: &mut ControlledFleet,
+    tap: &mut SignalTap,
+    scaler: &mut Option<Autoscaler>,
+    slo: Option<&SloController>,
+    events: &mut Vec<ControlEvent>,
+) {
+    tap.observe_utilization(&fleet.srv.outstanding(), fleet.queue_depth);
+    let sig = tap.tick();
+    if let Some(sc) = scaler.as_mut() {
+        match sc.decide(&sig, fleet.replicas()) {
+            ScaleDecision::Out(k) => {
+                let from = fleet.replicas();
+                if let Ok(added) = fleet.scale_out(k) {
+                    // the cooldown starts only when the fleet actually
+                    // changed — a no-op against an exhausted standby pool
+                    // must not delay later legitimate actions
+                    if added > 0 {
+                        sc.note_action(sig.tick);
+                        events.push(ControlEvent::ScaleOut {
+                            tick: sig.tick,
+                            from,
+                            to: from + added,
+                        });
+                    }
+                }
+            }
+            ScaleDecision::In(k) => {
+                let from = fleet.replicas();
+                if let Ok(removed) = fleet.scale_in(k) {
+                    if removed > 0 {
+                        sc.note_action(sig.tick);
+                        events.push(ControlEvent::ScaleIn {
+                            tick: sig.tick,
+                            from,
+                            to: from - removed,
+                        });
+                    }
+                }
+            }
+            ScaleDecision::Hold => {}
+        }
+    }
+    if let Some(sl) = slo {
+        for r in 0..fleet.srv.replica_count() {
+            if let Some(cur) = fleet.srv.batcher_config(r) {
+                let next = sl.adjust(sig.p99_ms, cur);
+                if next.max_batch != cur.max_batch || next.max_wait != cur.max_wait {
+                    fleet.srv.set_batcher(r, next);
+                    events.push(ControlEvent::SloAdjust {
+                        tick: sig.tick,
+                        replica: r,
+                        max_batch: next.max_batch,
+                        max_wait: next.max_wait,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Fire every failure whose schedule time has passed. Checked in all
+/// three phases of [`run_loop`] (arrival replay, drain, trailing ticks),
+/// so a kill scheduled after the last arrival still fires.
+fn fire_due_failures(
+    fleet: &mut ControlledFleet,
+    failures: &[FailureEvent],
+    next_failure: &mut usize,
+    elapsed_s: f64,
+    tick_no: usize,
+    events: &mut Vec<ControlEvent>,
+) {
+    while *next_failure < failures.len() && elapsed_s >= failures[*next_failure].at_s {
+        let f = failures[*next_failure];
+        *next_failure += 1;
+        if fleet.kill(f.replica).unwrap_or(false) {
+            events.push(ControlEvent::Failure {
+                tick: tick_no,
+                replica: f.replica,
+                survivors: fleet.replicas(),
+            });
+        }
+    }
+}
+
+/// Resynchronize the tick deadline past `now`. A long actuation (a
+/// drain-and-swap can take many periods) must *skip* the missed ticks,
+/// not replay them back-to-back: replayed ticks would burn the
+/// autoscaler's tick-denominated cooldown in zero wall time, on a signal
+/// window that still reflects the pre-swap fleet.
+fn skip_missed_ticks(next_tick: &mut Duration, tick: Duration, now: Duration) {
+    *next_tick += tick;
+    while *next_tick <= now {
+        *next_tick += tick;
+    }
+}
+
+/// Replay `trace` through `fleet` under closed-loop control: open-loop
+/// arrival submission (sheds on overload), completion draining, control
+/// ticks on the [`LoopConfig::tick`] cadence, the failure-injection
+/// schedule, and [`LoopConfig::trailing_ticks`] idle ticks after the
+/// drain. Returns the journaled decisions plus the fleet-wide serving
+/// summary. The fleet stays running — callers chain further replays (the
+/// SLO acceptance test replays a probe trace through the converged fleet)
+/// or shut it down.
+pub fn run_loop(fleet: &mut ControlledFleet, trace: &Trace, cfg: &LoopConfig) -> ControlReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut tap = SignalTap::new(cfg.signal);
+    let mut scaler = cfg.autoscaler.map(Autoscaler::new);
+    let slo = cfg.slo.map(SloController::new);
+    let mut failures = cfg.failures.clone();
+    failures.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap_or(std::cmp::Ordering::Equal));
+    let mut next_failure = 0usize;
+    let initial_replicas = fleet.replicas();
+
+    let mut fm = FleetMetrics::new(fleet.active.len() + fleet.standby.len());
+    fm.start();
+    let mut events: Vec<ControlEvent> = Vec::new();
+    let t0 = Instant::now();
+    let tick = cfg.tick.max(Duration::from_millis(1));
+    let mut next_tick = tick;
+    let input_len = cfg.input_len.max(1);
+
+    'arrivals: for (idx, &due) in trace.arrivals_s.iter().enumerate() {
+        loop {
+            // scheduled failures fire by wall clock, ahead of control
+            fire_due_failures(
+                fleet,
+                &failures,
+                &mut next_failure,
+                t0.elapsed().as_secs_f64(),
+                tap.ticks(),
+                &mut events,
+            );
+            if t0.elapsed() >= next_tick {
+                control_tick(fleet, &mut tap, &mut scaler, slo.as_ref(), &mut events);
+                skip_missed_ticks(&mut next_tick, tick, t0.elapsed());
+            }
+            let now_s = t0.elapsed().as_secs_f64();
+            if now_s >= due {
+                break;
+            }
+            let wait_s = (due - now_s)
+                .min((next_tick.as_secs_f64() - now_s).max(0.0))
+                .min(0.005)
+                .max(1e-4);
+            if let Some(c) = fleet.srv.try_next_completion(Duration::from_secs_f64(wait_s)) {
+                fm.record(&c);
+                tap.record_completion(c.latency);
+            }
+        }
+        let input: Vec<f32> = (0..input_len).map(|_| rng.below(256) as f32).collect();
+        match fleet.srv.submit(idx as u64, input) {
+            Ok(_) => {
+                fm.record_submitted();
+                tap.record_submitted();
+            }
+            Err(SubmitError::QueueFull(_)) => {
+                fm.record_shed();
+                tap.record_shed();
+            }
+            Err(SubmitError::Closed(_)) => break 'arrivals,
+        }
+    }
+
+    // drain every accepted request, still ticking so the post-trace lull
+    // settles the window (stall guard mirrors Server::replay)
+    let mut last_progress = Instant::now();
+    while fm.completed() < fm.submitted() {
+        fire_due_failures(
+            fleet,
+            &failures,
+            &mut next_failure,
+            t0.elapsed().as_secs_f64(),
+            tap.ticks(),
+            &mut events,
+        );
+        if t0.elapsed() >= next_tick {
+            control_tick(fleet, &mut tap, &mut scaler, slo.as_ref(), &mut events);
+            skip_missed_ticks(&mut next_tick, tick, t0.elapsed());
+        }
+        match fleet.srv.try_next_completion(Duration::from_millis(5)) {
+            Some(c) => {
+                fm.record(&c);
+                tap.record_completion(c.latency);
+                last_progress = Instant::now();
+            }
+            None => {
+                if last_progress.elapsed() > Duration::from_secs(10) {
+                    break;
+                }
+            }
+        }
+    }
+    // idle trailing ticks: a drained fleet's scale-in is part of the story
+    for _ in 0..cfg.trailing_ticks {
+        let now = t0.elapsed();
+        if next_tick > now {
+            std::thread::sleep(next_tick - now);
+        }
+        fire_due_failures(
+            fleet,
+            &failures,
+            &mut next_failure,
+            t0.elapsed().as_secs_f64(),
+            tap.ticks(),
+            &mut events,
+        );
+        control_tick(fleet, &mut tap, &mut scaler, slo.as_ref(), &mut events);
+        skip_missed_ticks(&mut next_tick, tick, t0.elapsed());
+    }
+
+    let mut max_replicas_seen = initial_replicas;
+    for e in &events {
+        if let ControlEvent::ScaleOut { to, .. } = e {
+            max_replicas_seen = max_replicas_seen.max(*to);
+        }
+    }
+    ControlReport {
+        summary: fm.summary(),
+        events,
+        ticks: tap.ticks(),
+        initial_replicas,
+        final_replicas: fleet.replicas(),
+        max_replicas_seen,
+        submitted: fm.submitted(),
+        shed: fm.shed(),
+        completed: fm.completed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{alveo_u250, alveo_u280};
+    use crate::nn::{cnv, CnvVariant};
+
+    fn bc() -> BatcherConfig {
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) }
+    }
+
+    #[test]
+    fn fleet_scaling_is_capacity_aware_and_bounded() {
+        let net = cnv(CnvVariant::W1A1);
+        let active = vec![ReplicaSpec::paper_point(alveo_u280())];
+        let standby = vec![
+            ReplicaSpec::paper_point(alveo_u280()),
+            ReplicaSpec::paper_point(alveo_u250()),
+        ];
+        let mut fleet = ControlledFleet::start(net, active, standby, 100.0, bc(), 16);
+        assert_eq!(fleet.replicas(), 1);
+        // the faster U250 standby joins first
+        assert_eq!(fleet.scale_out(1).unwrap(), 1);
+        assert_eq!(fleet.active_specs()[1].device.name, "alveo-u250");
+        // pool exhaustion bounds the next scale-out
+        assert_eq!(fleet.scale_out(5).unwrap(), 1);
+        assert_eq!(fleet.standby_len(), 0);
+        // scale-in retires the slowest (a U280) and never empties the fleet
+        assert_eq!(fleet.scale_in(1).unwrap(), 1);
+        assert!(fleet.active_specs().iter().any(|s| s.device.name == "alveo-u250"));
+        assert_eq!(fleet.scale_in(10).unwrap(), 1);
+        assert_eq!(fleet.replicas(), 1);
+        assert_eq!(fleet.scale_in(1).unwrap(), 0, "last replica must survive");
+        // the server still serves after all that reshaping
+        fleet.server().submit_blocking(1, vec![1.0]).unwrap();
+        let c = fleet.server().next_completion().unwrap();
+        assert_eq!(c.id, 1);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn kill_removes_the_device_for_good() {
+        let net = cnv(CnvVariant::W1A1);
+        let active = vec![
+            ReplicaSpec::paper_point(alveo_u250()),
+            ReplicaSpec::paper_point(alveo_u280()),
+        ];
+        let mut fleet = ControlledFleet::start(net, active, vec![], 100.0, bc(), 16);
+        assert!(fleet.kill(0).unwrap());
+        assert_eq!(fleet.replicas(), 1);
+        assert_eq!(fleet.standby_len(), 0, "a dead device must not rejoin via standby");
+        assert!(!fleet.kill(0).unwrap(), "the last replica cannot be killed");
+        assert!(!fleet.kill(7).unwrap(), "out-of-range kill is a no-op");
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn run_loop_without_controllers_replays_and_drains() {
+        let net = cnv(CnvVariant::W1A1);
+        let active = vec![ReplicaSpec::paper_point(alveo_u250())];
+        let mut fleet = ControlledFleet::start(net, active, vec![], 50.0, bc(), 64);
+        let trace = crate::coordinator::poisson(60, 800.0, 5);
+        let cfg = LoopConfig { trailing_ticks: 2, ..LoopConfig::default() };
+        let rep = run_loop(&mut fleet, &trace, &cfg);
+        fleet.shutdown();
+        assert_eq!(rep.submitted, 60);
+        assert_eq!(rep.completed, 60, "every accepted request must drain");
+        assert_eq!(rep.shed, 0);
+        assert!(rep.ticks >= 2, "trailing ticks must fire even on short traces");
+        assert!(rep.events.is_empty(), "no controllers, no events");
+        assert_eq!(rep.initial_replicas, 1);
+        assert_eq!(rep.final_replicas, 1);
+    }
+}

@@ -1,0 +1,179 @@
+//! Failure-driven re-partition: lose a device, re-plan on the survivors,
+//! splice the new plan into a running server.
+//!
+//! Packing is the expensive step of partitioning (the reason
+//! [`crate::packing::cache`] exists), so a fleet event must not pay for
+//! it again: [`replan`] re-runs the bottleneck-minimal DP
+//! ([`crate::sharding::partition()`]) over the surviving `k-1` devices and
+//! reports, shard by shard, whether the packed manifest was **migrated**
+//! from the process-wide cache or had to be re-packed. When the surviving
+//! point was already probed — by the original partition sweep, a
+//! feasibility check, or an earlier repair — the re-plan is pure cache
+//! lookups: zero re-packs. An infeasible survivor set (the network no
+//! longer fits the remaining OCM) is a *clean* outcome, not a panic: the
+//! report carries the partitioner's reason so the operator layer can page
+//! instead of serving a plan that cannot exist.
+//!
+//! Actuation is [`crate::coordinator::Server::reconfigure_chain`]: the old
+//! chain drains every in-flight frame, then the repaired plan's stages
+//! spawn on the same completion stream ([`splice_mock_chain`] calibrates
+//! their mock backends from the plan's shard service intervals, as
+//! `fcmp shard --serve` does).
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use crate::coordinator::{
+    shard_service_times, BatcherConfig, MockBackend, Policy, Server, ServerConfig,
+};
+use crate::device::Device;
+use crate::nn::Network;
+use crate::packing::cache::{self, PackKey};
+use crate::report::engine_tag;
+use crate::sharding::{partition, PartitionConfig, ShardPlan};
+
+/// Outcome of a failure-driven re-partition.
+#[derive(Clone, Debug)]
+pub struct RepairOutcome {
+    /// The devices that survived the loss, in original fleet order.
+    pub survivors: Vec<Device>,
+    /// The repaired plan, when one exists.
+    pub plan: Option<ShardPlan>,
+    /// The partitioner's reason when no feasible plan exists on the
+    /// survivors (the clean-infeasibility report).
+    pub infeasible: Option<String>,
+    /// Shards of the new plan whose packed manifest was already in the
+    /// cache before re-planning (migrated, not re-packed).
+    pub migrated_shards: usize,
+    /// Shards of the new plan that required a fresh packing run.
+    pub repacked_shards: usize,
+}
+
+impl RepairOutcome {
+    /// True when a feasible plan was found.
+    pub fn is_feasible(&self) -> bool {
+        self.plan.is_some()
+    }
+}
+
+/// Re-partition `net` over the fleet surviving the loss of
+/// `devices[dead]`. Snapshots which candidate shard manifests are already
+/// cached *before* invoking the partitioner, so
+/// [`RepairOutcome::migrated_shards`] / [`RepairOutcome::repacked_shards`]
+/// report true migrations rather than the trivially-warm state after the
+/// DP ran.
+pub fn replan(
+    net: &Network,
+    devices: &[Device],
+    dead: usize,
+    cfg: PartitionConfig,
+) -> RepairOutcome {
+    let survivors: Vec<Device> = devices
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != dead)
+        .map(|(_, d)| d.clone())
+        .collect();
+    if survivors.is_empty() {
+        return RepairOutcome {
+            survivors,
+            plan: None,
+            infeasible: Some("no surviving devices".to_string()),
+            migrated_shards: 0,
+            repacked_shards: 0,
+        };
+    }
+
+    // pre-partition cache census over every contiguous stage range the DP
+    // could evaluate on each survivor (O(S² · k) hash lookups — cheap next
+    // to a single packing run)
+    let engine = engine_tag(cfg.generations);
+    let n = net.stages.len();
+    let mut warm: HashSet<(usize, usize, String)> = HashSet::new();
+    for s in 0..n {
+        for e in (s + 1)..=n {
+            for d in &survivors {
+                let key =
+                    PackKey::new(&net.slice(s, e), d, cfg.bin_height, engine.clone(), cfg.seed);
+                if cache::lookup(&key).is_some() {
+                    warm.insert((s, e, d.fingerprint()));
+                }
+            }
+        }
+    }
+
+    match partition(net, &survivors, cfg) {
+        Err(e) => RepairOutcome {
+            survivors,
+            plan: None,
+            infeasible: Some(format!("{e:#}")),
+            migrated_shards: 0,
+            repacked_shards: 0,
+        },
+        Ok(plan) => {
+            let mut migrated = 0;
+            let mut repacked = 0;
+            for sh in &plan.shards {
+                if warm.contains(&(sh.stages.0, sh.stages.1, sh.device.fingerprint())) {
+                    migrated += 1;
+                } else {
+                    repacked += 1;
+                }
+            }
+            RepairOutcome {
+                survivors,
+                plan: Some(plan),
+                infeasible: None,
+                migrated_shards: migrated,
+                repacked_shards: repacked,
+            }
+        }
+    }
+}
+
+/// Splice a repaired plan into a running chain server: drain-and-swap
+/// ([`Server::reconfigure_chain`]) onto mock backends whose per-stage
+/// service equals the plan's analytic shard intervals
+/// ([`shard_service_times`]), each capped at `service_cap` so splices in
+/// tests and benches stay wall-clock sane. The spliced stages come up
+/// with their batchers co-tuned against the new plan's bottleneck shard
+/// ([`super::slo::co_tune_chain`] applied via [`Server::set_batcher`]):
+/// the bottleneck stage serves greedily, faster stages may batch up to
+/// their II ratio under `batcher`'s caps.
+pub fn splice_mock_chain(
+    srv: &mut Server,
+    plan: &ShardPlan,
+    batcher: BatcherConfig,
+    queue_depth: usize,
+    service_cap: Duration,
+) -> crate::Result<()> {
+    let svc: Vec<Duration> =
+        shard_service_times(plan).into_iter().map(|d| d.min(service_cap)).collect();
+    let tuned = super::slo::co_tune_chain(&svc, batcher);
+    let cfg = ServerConfig {
+        batcher,
+        queue_depth,
+        replicas: plan.shards.len(),
+        policy: Policy::StageChain,
+    };
+    srv.reconfigure_chain(move |i| MockBackend::with_service(Duration::ZERO, svc[i]), cfg)?;
+    for (i, t) in tuned.into_iter().enumerate() {
+        srv.set_batcher(i, t);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn losing_every_device_reports_cleanly() {
+        let net = crate::nn::cnv(crate::nn::CnvVariant::W1A1);
+        let devs = [crate::device::zynq_7020()];
+        let out = replan(&net, &devs, 0, PartitionConfig::default());
+        assert!(!out.is_feasible());
+        assert!(out.survivors.is_empty());
+        assert!(out.infeasible.unwrap().contains("no surviving devices"));
+    }
+}

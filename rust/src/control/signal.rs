@@ -1,0 +1,234 @@
+//! Windowed control signals computed from the serving fleet's metrics
+//! plumbing.
+//!
+//! The control plane is tick-driven: the driver loop feeds every
+//! admission-control outcome and completion into a [`SignalTap`] as it
+//! happens, samples per-replica utilization once per tick, and closes the
+//! tick with [`SignalTap::tick`], which aggregates the last
+//! [`SignalConfig::window_ticks`] ticks into one [`ControlSignals`]
+//! snapshot. Windowing is what makes the downstream controllers stable:
+//! a single 25 ms tick of shed requests is noise, the same shed rate
+//! sustained over a window is a capacity shortfall.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::util::stats::percentile;
+
+/// Signal-window configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SignalConfig {
+    /// Ticks aggregated into each [`ControlSignals`] snapshot.
+    pub window_ticks: usize,
+}
+
+impl Default for SignalConfig {
+    fn default() -> Self {
+        SignalConfig { window_ticks: 4 }
+    }
+}
+
+/// Everything observed during one control tick.
+#[derive(Clone, Debug, Default)]
+struct TickSample {
+    submitted: u64,
+    shed: u64,
+    latencies_ms: Vec<f64>,
+    /// Per-replica `outstanding / queue_depth` sampled at tick close.
+    utilization: Vec<f64>,
+}
+
+/// One windowed snapshot of the fleet's control signals.
+#[derive(Clone, Debug)]
+pub struct ControlSignals {
+    /// Tick number this snapshot closed (0-based, monotonic).
+    pub tick: usize,
+    /// Requests offered (accepted + shed) inside the window.
+    pub offered: u64,
+    /// Requests shed by admission control inside the window.
+    pub shed: u64,
+    /// `shed / offered` (0 when nothing was offered).
+    pub shed_rate: f64,
+    /// Completions inside the window.
+    pub completed: u64,
+    /// Windowed latency median (ms); `None` when nothing completed.
+    pub p50_ms: Option<f64>,
+    /// Windowed latency p99 (ms); `None` when nothing completed.
+    pub p99_ms: Option<f64>,
+    /// Per-replica mean utilization (outstanding / queue depth) over the
+    /// window, shaped to the most recent tick's replica count.
+    pub utilization: Vec<f64>,
+    /// Max over [`ControlSignals::utilization`] (0 when empty).
+    pub max_utilization: f64,
+}
+
+/// Accumulates per-tick observations and aggregates them over a sliding
+/// window; the driver loop owns one per controlled fleet.
+pub struct SignalTap {
+    window: usize,
+    closed: VecDeque<TickSample>,
+    cur: TickSample,
+    ticks: usize,
+}
+
+impl SignalTap {
+    /// Empty tap with the given window.
+    pub fn new(cfg: SignalConfig) -> SignalTap {
+        SignalTap {
+            window: cfg.window_ticks.max(1),
+            closed: VecDeque::new(),
+            cur: TickSample::default(),
+            ticks: 0,
+        }
+    }
+
+    /// Ticks closed so far.
+    pub fn ticks(&self) -> usize {
+        self.ticks
+    }
+
+    /// Count one accepted submission in the current tick.
+    pub fn record_submitted(&mut self) {
+        self.cur.submitted += 1;
+    }
+
+    /// Count one shed (admission-rejected) submission in the current tick.
+    pub fn record_shed(&mut self) {
+        self.cur.shed += 1;
+    }
+
+    /// Record one completion's end-to-end latency in the current tick.
+    pub fn record_completion(&mut self, latency: Duration) {
+        self.cur.latencies_ms.push(latency.as_secs_f64() * 1e3);
+    }
+
+    /// Sample per-replica utilization (outstanding / `queue_depth`) for
+    /// the current tick; the last sample before [`SignalTap::tick`] wins.
+    pub fn observe_utilization(&mut self, outstanding: &[usize], queue_depth: usize) {
+        let depth = queue_depth.max(1) as f64;
+        self.cur.utilization = outstanding.iter().map(|&o| o as f64 / depth).collect();
+    }
+
+    /// Close the current tick and aggregate the window into one
+    /// [`ControlSignals`] snapshot.
+    pub fn tick(&mut self) -> ControlSignals {
+        let sample = std::mem::take(&mut self.cur);
+        self.closed.push_back(sample);
+        while self.closed.len() > self.window {
+            self.closed.pop_front();
+        }
+        let tick = self.ticks;
+        self.ticks += 1;
+
+        let submitted: u64 = self.closed.iter().map(|t| t.submitted).sum();
+        let shed: u64 = self.closed.iter().map(|t| t.shed).sum();
+        let offered = submitted + shed;
+        let mut lat: Vec<f64> =
+            self.closed.iter().flat_map(|t| t.latencies_ms.iter().copied()).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (p50, p99) = if lat.is_empty() {
+            (None, None)
+        } else {
+            (Some(percentile(&lat, 50.0)), Some(percentile(&lat, 99.0)))
+        };
+
+        // utilization averages elementwise over the window, shaped to the
+        // newest tick's replica count (the fleet may have been resized
+        // mid-window; stale extra replicas are dropped, missing ones
+        // average over the ticks that saw them)
+        let replicas = self.closed.back().map(|t| t.utilization.len()).unwrap_or(0);
+        let mut util = vec![0.0f64; replicas];
+        let mut seen = vec![0usize; replicas];
+        for t in &self.closed {
+            for (i, &u) in t.utilization.iter().enumerate() {
+                if i < replicas {
+                    util[i] += u;
+                    seen[i] += 1;
+                }
+            }
+        }
+        for i in 0..replicas {
+            if seen[i] > 0 {
+                util[i] /= seen[i] as f64;
+            }
+        }
+        let max_utilization = util.iter().copied().fold(0.0f64, f64::max);
+
+        ControlSignals {
+            tick,
+            offered,
+            shed,
+            shed_rate: if offered == 0 { 0.0 } else { shed as f64 / offered as f64 },
+            completed: lat.len() as u64,
+            p50_ms: p50,
+            p99_ms: p99,
+            utilization: util,
+            max_utilization,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_rate_and_counts_aggregate_over_the_window() {
+        let mut tap = SignalTap::new(SignalConfig { window_ticks: 2 });
+        for _ in 0..8 {
+            tap.record_submitted();
+        }
+        for _ in 0..2 {
+            tap.record_shed();
+        }
+        let s = tap.tick();
+        assert_eq!(s.tick, 0);
+        assert_eq!(s.offered, 10);
+        assert_eq!(s.shed, 2);
+        assert!((s.shed_rate - 0.2).abs() < 1e-12);
+
+        // next tick is quiet; window still sees the previous tick
+        let s = tap.tick();
+        assert_eq!(s.tick, 1);
+        assert_eq!(s.offered, 10);
+        // third tick evicts the loaded one: all-quiet window
+        let s = tap.tick();
+        assert_eq!(s.offered, 0);
+        assert_eq!(s.shed_rate, 0.0);
+    }
+
+    #[test]
+    fn latency_percentiles_cover_the_window() {
+        let mut tap = SignalTap::new(SignalConfig { window_ticks: 3 });
+        assert!(tap.tick().p99_ms.is_none(), "no completions yet");
+        for ms in [10u64, 20, 30, 40] {
+            tap.record_completion(Duration::from_millis(ms));
+        }
+        let s = tap.tick();
+        assert_eq!(s.completed, 4);
+        assert!((s.p50_ms.unwrap() - 25.0).abs() < 1e-9);
+        assert!(s.p99_ms.unwrap() > 39.0);
+        // the window keeps earlier completions until eviction
+        tap.record_completion(Duration::from_millis(50));
+        let s = tap.tick();
+        assert_eq!(s.completed, 5);
+    }
+
+    #[test]
+    fn utilization_averages_and_tracks_fleet_resizes() {
+        let mut tap = SignalTap::new(SignalConfig { window_ticks: 2 });
+        tap.observe_utilization(&[8, 0], 16);
+        let s = tap.tick();
+        assert_eq!(s.utilization.len(), 2);
+        assert!((s.utilization[0] - 0.5).abs() < 1e-12);
+        // fleet grew to 3 replicas; snapshot reshapes to the newest tick
+        tap.observe_utilization(&[16, 8, 4], 16);
+        let s = tap.tick();
+        assert_eq!(s.utilization.len(), 3);
+        // replica 0 averages over both ticks: (0.5 + 1.0) / 2
+        assert!((s.utilization[0] - 0.75).abs() < 1e-12);
+        // replica 2 only existed in the newest tick
+        assert!((s.utilization[2] - 0.25).abs() < 1e-12);
+        assert!((s.max_utilization - 0.75).abs() < 1e-12);
+    }
+}

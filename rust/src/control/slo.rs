@@ -1,0 +1,224 @@
+//! SLO-aware batching: adapt each replica's batching window from the live
+//! windowed p99 against a latency budget.
+//!
+//! The dynamic batcher trades latency for amortization: a long
+//! [`BatcherConfig::max_wait`] fills bigger batches but holds early
+//! arrivals hostage. The [`SloController`] closes that trade-off against
+//! an explicit p99 budget with a multiplicative-increase /
+//! multiplicative-decrease rule and a dead band:
+//!
+//! * p99 **over budget** → halve `max_wait` (shed the queueing the window
+//!   itself causes); once the window is already at its floor, halve
+//!   `max_batch` too (the residual latency is service-time, not window).
+//! * p99 **under [`SloConfig::grow_below`] × budget** → double `max_wait`
+//!   and `max_batch` back toward their ceilings (idle fleets should
+//!   amortize).
+//! * in between → hold (the dead band is what stops flapping).
+//!
+//! Actuation is [`crate::coordinator::Server::set_batcher`] — live, per
+//! replica, no drain. Under saturation batches fill from the backlog
+//! without waiting on the window, so shrinking `max_wait` does not cost
+//! steady-state throughput (the acceptance test in `tests/control.rs`
+//! bounds the loss at 5%).
+//!
+//! For **stage chains**, [`co_tune_chain`] derives per-stage settings
+//! from the plan's shard service intervals instead: the bottleneck shard
+//! sets the pipeline's initiation interval, so only stages faster than it
+//! can afford to batch at all.
+
+use std::time::Duration;
+
+use crate::coordinator::BatcherConfig;
+
+/// SLO controller configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// The latency budget: windowed p99 must come under this.
+    pub p99_budget_ms: f64,
+    /// Floor for `max_wait` shrinkage.
+    pub min_wait: Duration,
+    /// Ceiling for `max_wait` growth.
+    pub max_wait: Duration,
+    /// Floor for `max_batch` shrinkage.
+    pub min_batch: usize,
+    /// Ceiling for `max_batch` growth.
+    pub max_batch: usize,
+    /// Grow the window only when p99 is under this fraction of the
+    /// budget; between `grow_below · budget` and `budget` the controller
+    /// holds (the anti-flap dead band).
+    pub grow_below: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            p99_budget_ms: 50.0,
+            min_wait: Duration::from_micros(200),
+            max_wait: Duration::from_millis(8),
+            min_batch: 1,
+            max_batch: 16,
+            grow_below: 0.4,
+        }
+    }
+}
+
+/// Deterministic per-tick batching-window controller.
+pub struct SloController {
+    cfg: SloConfig,
+}
+
+impl SloController {
+    /// Controller for the given budget and bounds.
+    pub fn new(cfg: SloConfig) -> SloController {
+        SloController { cfg }
+    }
+
+    /// The configured budget and bounds.
+    pub fn config(&self) -> &SloConfig {
+        &self.cfg
+    }
+
+    /// Next batching settings for a replica whose windowed p99 was
+    /// `p99_ms` (`None` — nothing completed in the window — holds). Pure
+    /// in `(p99_ms, cur)`, so the control loop stays replayable.
+    pub fn adjust(&self, p99_ms: Option<f64>, cur: BatcherConfig) -> BatcherConfig {
+        let Some(p99) = p99_ms else { return cur };
+        let mut next = cur;
+        if p99 > self.cfg.p99_budget_ms {
+            if cur.max_wait > self.cfg.min_wait {
+                next.max_wait = (cur.max_wait / 2).max(self.cfg.min_wait);
+            } else {
+                // window already at the floor: the violation is
+                // service-side, trade batch amortization for latency
+                next.max_batch = (cur.max_batch / 2).max(self.cfg.min_batch);
+            }
+        } else if p99 < self.cfg.grow_below * self.cfg.p99_budget_ms {
+            next.max_wait = (cur.max_wait * 2).min(self.cfg.max_wait).max(self.cfg.min_wait);
+            next.max_batch =
+                (cur.max_batch * 2).min(self.cfg.max_batch).max(self.cfg.min_batch);
+        }
+        next
+    }
+}
+
+/// Per-stage batching for a stage chain, co-tuned against the bottleneck
+/// shard's initiation interval. A stage whose service interval is `s`
+/// when the bottleneck's is `B ≥ s` can batch up to `⌊B / s⌋` frames and
+/// still drain faster than the bottleneck admits work, so batching there
+/// is free; the bottleneck stage itself (ratio 1) must serve greedily —
+/// any window it holds adds directly to the pipeline's initiation
+/// interval. Faster stages also never hold a partial batch longer than
+/// one bottleneck interval: the next frame cannot arrive sooner, so a
+/// longer wait is pure latency. Applied to live servers by
+/// [`crate::control::repair::splice_mock_chain`], which retunes every
+/// spliced stage via [`crate::coordinator::Server::set_batcher`].
+pub fn co_tune_chain(stage_service: &[Duration], base: BatcherConfig) -> Vec<BatcherConfig> {
+    let bottleneck = stage_service.iter().copied().max().unwrap_or(Duration::ZERO);
+    stage_service
+        .iter()
+        .map(|&s| {
+            if bottleneck.is_zero() {
+                // degenerate all-instant chain: greedy single frames
+                return BatcherConfig { max_batch: 1, max_wait: Duration::ZERO };
+            }
+            let ratio = if s.is_zero() {
+                base.max_batch.max(1)
+            } else {
+                (bottleneck.as_secs_f64() / s.as_secs_f64()).floor() as usize
+            };
+            let max_batch = ratio.clamp(1, base.max_batch.max(1));
+            let max_wait =
+                if max_batch == 1 { Duration::ZERO } else { base.max_wait.min(bottleneck) };
+            BatcherConfig { max_batch, max_wait }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bc(max_batch: usize, wait_us: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait: Duration::from_micros(wait_us) }
+    }
+
+    fn ctl() -> SloController {
+        SloController::new(SloConfig {
+            p99_budget_ms: 40.0,
+            min_wait: Duration::from_micros(500),
+            max_wait: Duration::from_millis(16),
+            min_batch: 1,
+            max_batch: 32,
+            grow_below: 0.4,
+        })
+    }
+
+    #[test]
+    fn violation_halves_the_window_down_to_the_floor() {
+        let c = ctl();
+        let a = c.adjust(Some(90.0), bc(16, 8_000));
+        assert_eq!(a.max_wait, Duration::from_micros(4_000));
+        assert_eq!(a.max_batch, 16, "batch untouched while the window can shrink");
+        // repeated violations walk the window to the floor...
+        let mut cur = a;
+        for _ in 0..8 {
+            cur = c.adjust(Some(90.0), cur);
+        }
+        assert_eq!(cur.max_wait, Duration::from_micros(500));
+        // ...then start trading batch size
+        assert!(cur.max_batch < 16, "floored window must shrink the batch: {cur:?}");
+        assert!(cur.max_batch >= 1);
+    }
+
+    #[test]
+    fn idle_grows_back_within_bounds_and_dead_band_holds() {
+        let c = ctl();
+        // well under budget: grow toward the ceilings
+        let g = c.adjust(Some(5.0), bc(4, 1_000));
+        assert_eq!(g.max_wait, Duration::from_micros(2_000));
+        assert_eq!(g.max_batch, 8);
+        // growth clamps at the ceilings
+        let g = c.adjust(Some(5.0), bc(32, 16_000));
+        assert_eq!(g.max_wait, Duration::from_millis(16));
+        assert_eq!(g.max_batch, 32);
+        // dead band: between grow_below·budget (16 ms) and budget (40 ms)
+        let h = c.adjust(Some(25.0), bc(4, 1_000));
+        assert_eq!(h.max_batch, 4);
+        assert_eq!(h.max_wait, Duration::from_micros(1_000));
+        // no signal: hold
+        let h = c.adjust(None, bc(4, 1_000));
+        assert_eq!(h.max_batch, 4);
+    }
+
+    #[test]
+    fn co_tune_gives_the_bottleneck_stage_a_greedy_batcher() {
+        let svc = [
+            Duration::from_micros(100),
+            Duration::from_micros(400), // bottleneck
+            Duration::from_micros(100),
+        ];
+        let base = bc(16, 2_000);
+        let tuned = co_tune_chain(&svc, base);
+        assert_eq!(tuned.len(), 3);
+        assert_eq!(tuned[1].max_batch, 1, "bottleneck stage must serve greedily");
+        assert_eq!(tuned[1].max_wait, Duration::ZERO);
+        // 4x-faster stages may batch up to the II ratio
+        assert_eq!(tuned[0].max_batch, 4);
+        assert_eq!(tuned[2].max_batch, 4);
+        // and never hold longer than one bottleneck interval
+        assert_eq!(tuned[0].max_wait, Duration::from_micros(400));
+    }
+
+    #[test]
+    fn co_tune_clamps_to_the_base_batch_and_handles_degenerates() {
+        let svc = [Duration::from_micros(1), Duration::from_micros(1_000)];
+        let tuned = co_tune_chain(&svc, bc(8, 5_000));
+        assert_eq!(tuned[0].max_batch, 8, "1000x ratio clamps to the base max_batch");
+        assert_eq!(tuned[1].max_batch, 1);
+        // all-instant chain
+        let tuned = co_tune_chain(&[Duration::ZERO, Duration::ZERO], bc(8, 5_000));
+        assert!(tuned.iter().all(|c| c.max_batch == 1));
+        // empty chain
+        assert!(co_tune_chain(&[], bc(8, 5_000)).is_empty());
+    }
+}

@@ -3,7 +3,14 @@
 //! request of a batch has arrived (the classic size-or-deadline policy).
 //! Every replica of the fleet runs its own batcher over its own bounded
 //! queue, so batch formation never crosses replicas.
+//!
+//! The settings are *live*: each replica publishes its policy through a
+//! [`SharedBatcher`], which the worker re-reads before forming every
+//! batch — the actuation path of the SLO-aware batching controller
+//! ([`crate::control::slo`]), which shrinks the batching window under
+//! backlog and grows it when idle without restarting the replica.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -21,6 +28,53 @@ pub struct BatcherConfig {
 impl Default for BatcherConfig {
     fn default() -> Self {
         BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Live-tunable batching settings shared between a replica's worker thread
+/// and the control plane. The worker snapshots the settings with
+/// [`SharedBatcher::load`] before forming each batch, so a
+/// [`SharedBatcher::store`] from the SLO controller takes effect on the
+/// very next batch — no drain, no respawn. Both fields live in one
+/// packed atomic so a snapshot is genuinely atomic: a concurrent store
+/// can never hand the worker a torn config mixing old and new settings.
+#[derive(Debug)]
+pub struct SharedBatcher {
+    /// `(max_batch << WAIT_BITS) | max_wait_us`.
+    packed: AtomicU64,
+}
+
+/// Bits of the packed word holding `max_wait` in microseconds (~8.9
+/// years — far beyond any sane batching window); the remaining 16 bits
+/// hold `max_batch`.
+const WAIT_BITS: u32 = 48;
+const WAIT_MASK: u64 = (1 << WAIT_BITS) - 1;
+
+impl SharedBatcher {
+    /// Publish `cfg` as the initial settings.
+    pub fn new(cfg: BatcherConfig) -> SharedBatcher {
+        let s = SharedBatcher { packed: AtomicU64::new(1 << WAIT_BITS) };
+        s.store(cfg);
+        s
+    }
+
+    /// Snapshot the current settings (one atomic load).
+    pub fn load(&self) -> BatcherConfig {
+        let packed = self.packed.load(Ordering::SeqCst);
+        BatcherConfig {
+            max_batch: ((packed >> WAIT_BITS) as usize).max(1),
+            max_wait: Duration::from_micros(packed & WAIT_MASK),
+        }
+    }
+
+    /// Replace the settings (one atomic store); the owning worker picks
+    /// them up on its next batch. `max_batch` is clamped to 1..=65535 so
+    /// a worker can never be configured into forming empty batches and
+    /// the packed encoding cannot overflow.
+    pub fn store(&self, cfg: BatcherConfig) {
+        let batch = cfg.max_batch.clamp(1, u16::MAX as usize) as u64;
+        let us = (cfg.max_wait.as_micros().min(u128::from(WAIT_MASK))) as u64;
+        self.packed.store((batch << WAIT_BITS) | us, Ordering::SeqCst);
     }
 }
 
@@ -94,6 +148,26 @@ mod tests {
         drop(tx);
         let cfg = BatcherConfig::default();
         assert!(next_batch(&rx, &cfg).is_none());
+    }
+
+    #[test]
+    fn shared_batcher_roundtrips_and_clamps() {
+        let s = SharedBatcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(3),
+        });
+        let c = s.load();
+        assert_eq!(c.max_batch, 8);
+        assert_eq!(c.max_wait, Duration::from_millis(3));
+        s.store(BatcherConfig { max_batch: 0, max_wait: Duration::from_micros(250) });
+        let c = s.load();
+        assert_eq!(c.max_batch, 1, "zero batch must clamp to 1");
+        assert_eq!(c.max_wait, Duration::from_micros(250));
+        // oversized values clamp instead of corrupting the packed word
+        s.store(BatcherConfig { max_batch: usize::MAX, max_wait: Duration::from_secs(1) });
+        let c = s.load();
+        assert_eq!(c.max_batch, u16::MAX as usize);
+        assert_eq!(c.max_wait, Duration::from_secs(1));
     }
 
     #[test]

@@ -37,6 +37,12 @@
 //! [`capacity`] (analytic capacity weights), [`server`] (router, admission
 //! control, shutdown-drain), [`batcher`] (size-or-deadline batching),
 //! [`metrics`] (latency percentiles), [`workload`] (arrival traces).
+//!
+//! The fleet shape is **not** static: [`Server::reconfigure`] /
+//! [`Server::reconfigure_chain`] drain-and-swap the replica set on a live
+//! completion stream, and [`Server::set_batcher`] retunes a running
+//! replica's batching window in place — the actuation surface of the
+//! adaptive control plane ([`crate::control`]).
 
 pub mod batcher;
 pub mod capacity;
@@ -46,12 +52,12 @@ mod replica;
 pub mod server;
 pub mod workload;
 
-pub use batcher::{Batch, BatcherConfig};
+pub use batcher::{Batch, BatcherConfig, SharedBatcher};
 pub use capacity::{fleet_weights, replica_fps, shard_service_times, ReplicaSpec};
 pub use metrics::{FleetMetrics, FleetSummary, Metrics, ServeSummary};
 pub use policy::{Policy, Scheduler};
 pub use server::{InferBackend, MockBackend, Server, ServerConfig, SubmitError};
-pub use workload::{bursty, diurnal, heavy_tail, poisson, uniform, Trace};
+pub use workload::{bursty, diurnal, flash_crowd, heavy_tail, poisson, uniform, Trace};
 
 use std::time::{Duration, Instant};
 

@@ -17,7 +17,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::batcher::{next_batch, BatcherConfig};
+use super::batcher::{next_batch, BatcherConfig, SharedBatcher};
 use super::server::InferBackend;
 use super::{Completion, Request};
 
@@ -45,6 +45,9 @@ pub(crate) struct Replica {
     tx: Option<SyncSender<Request>>,
     /// Requests accepted but not yet completed (queued + executing).
     outstanding: Arc<AtomicUsize>,
+    /// Live batching settings; the worker re-reads them per batch, so the
+    /// SLO controller can retune a running replica.
+    batcher: Arc<SharedBatcher>,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -67,11 +70,13 @@ impl Replica {
         let (tx, rx) = sync_channel::<Request>(queue_depth.max(1));
         let outstanding = Arc::new(AtomicUsize::new(0));
         let counter = Arc::clone(&outstanding);
+        let shared = Arc::new(SharedBatcher::new(batcher));
+        let shared_worker = Arc::clone(&shared);
         let worker = std::thread::Builder::new()
             .name(format!("fcmp-replica-{index}"))
             .spawn(move || {
                 let backend = make_backend();
-                while let Some(mut batch) = next_batch(&rx, &batcher) {
+                while let Some(mut batch) = next_batch(&rx, &shared_worker.load()) {
                     // move inputs out (no per-request copy on the hot path)
                     let inputs: Vec<Vec<f32>> = batch
                         .requests
@@ -131,12 +136,32 @@ impl Replica {
                 }
             })
             .expect("spawn replica worker");
-        Replica { tx: Some(tx), outstanding, worker: Some(worker) }
+        Replica { tx: Some(tx), outstanding, batcher: shared, worker: Some(worker) }
     }
 
     /// Outstanding requests (queued + executing) — the JSQ load signal.
     pub(crate) fn outstanding(&self) -> usize {
         self.outstanding.load(Ordering::SeqCst)
+    }
+
+    /// True when the worker thread exited while the replica was still
+    /// nominally open (a panicked backend, never a normal close-drain).
+    /// The server's completion sender keeps the completion channel open
+    /// even then, so liveness checks must ask the thread, not the
+    /// channel.
+    pub(crate) fn is_dead(&self) -> bool {
+        self.tx.is_some() && self.worker.as_ref().map_or(false, |h| h.is_finished())
+    }
+
+    /// Snapshot of the replica's current batching settings.
+    pub(crate) fn batcher(&self) -> BatcherConfig {
+        self.batcher.load()
+    }
+
+    /// Live-retune the replica's batcher; the worker applies the new
+    /// settings on its next batch.
+    pub(crate) fn set_batcher(&self, cfg: BatcherConfig) {
+        self.batcher.store(cfg);
     }
 
     /// Clone of the bounded request sender (chain wiring: the upstream

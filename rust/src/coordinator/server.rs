@@ -28,7 +28,7 @@
 //! path with [`MockBackend`] (no PJRT); `examples/serve_cifar.rs` and
 //! `fcmp serve --backend pjrt` plug in the real [`crate::runtime::Engine`].
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -165,6 +165,10 @@ pub struct Server {
     replicas: Vec<Replica>,
     scheduler: Scheduler,
     completions: Receiver<Completion>,
+    /// Kept open across [`Server::reconfigure`] so a swapped-in fleet keeps
+    /// feeding the same completion stream; dropped on [`Server::shutdown`]
+    /// so the stream terminates once drained.
+    completion_tx: Option<Sender<Completion>>,
     /// The replicas form a stage chain (pipeline-parallel sharding): all
     /// ingress goes to stage 0 and the router never falls back to a
     /// mid-chain stage.
@@ -186,23 +190,12 @@ impl Server {
         // blocks on send while the owner blocks on join without draining)
         let (ctx, crx) = channel::<Completion>();
         let factory = Arc::new(make_backend);
-        let replicas: Vec<Replica> = (0..n)
-            .map(|i| {
-                let f = Arc::clone(&factory);
-                Replica::spawn(
-                    i,
-                    move || (*f)(i),
-                    cfg.batcher,
-                    cfg.queue_depth,
-                    Sink::Complete(ctx.clone()),
-                )
-            })
-            .collect();
-        drop(ctx);
+        let replicas = Self::spawn_replicated(&factory, &cfg, &ctx);
         Server {
             replicas,
             scheduler: Scheduler::new(cfg.policy, n),
             completions: crx,
+            completion_tx: Some(ctx),
             chain: false,
         }
     }
@@ -223,11 +216,57 @@ impl Server {
         let k = cfg.replicas.max(1);
         let (ctx, crx) = channel::<Completion>();
         let factory = Arc::new(make_backend);
-        // spawn back-to-front so stage i can hold stage i+1's queue handle
+        let replicas = Self::spawn_chain_stages(&factory, &cfg, &ctx);
+        Server {
+            replicas,
+            scheduler: Scheduler::new(Policy::StageChain, k),
+            completions: crx,
+            completion_tx: Some(ctx),
+            chain: true,
+        }
+    }
+
+    /// Spawn a replicated fleet feeding completions into `ctx`.
+    fn spawn_replicated<B, F>(
+        factory: &Arc<F>,
+        cfg: &ServerConfig,
+        ctx: &Sender<Completion>,
+    ) -> Vec<Replica>
+    where
+        B: InferBackend,
+        F: Fn(usize) -> B + Send + Sync + 'static,
+    {
+        (0..cfg.replicas.max(1))
+            .map(|i| {
+                let f = Arc::clone(factory);
+                Replica::spawn(
+                    i,
+                    move || (*f)(i),
+                    cfg.batcher,
+                    cfg.queue_depth,
+                    Sink::Complete(ctx.clone()),
+                )
+            })
+            .collect()
+    }
+
+    /// Spawn a stage chain feeding the final stage's completions into
+    /// `ctx`. Stages spawn back-to-front so stage `i` can hold stage
+    /// `i+1`'s queue handle.
+    fn spawn_chain_stages<B, F>(
+        factory: &Arc<F>,
+        cfg: &ServerConfig,
+        ctx: &Sender<Completion>,
+    ) -> Vec<Replica>
+    where
+        B: InferBackend,
+        F: Fn(usize) -> B + Send + Sync + 'static,
+    {
+        let k = cfg.replicas.max(1);
         let mut replicas: Vec<Replica> = Vec::with_capacity(k);
         let mut downstream = None;
         for i in (0..k).rev() {
-            let f = Arc::clone(&factory);
+            let f = Arc::clone(factory);
             let sink = match downstream.take() {
                 None => Sink::Complete(ctx.clone()),
                 Some((next, next_outstanding)) => Sink::Forward { next, next_outstanding },
@@ -238,13 +277,69 @@ impl Server {
             replicas.push(r);
         }
         replicas.reverse();
-        drop(ctx);
-        Server {
-            replicas,
-            scheduler: Scheduler::new(Policy::StageChain, k),
-            completions: crx,
-            chain: true,
+        replicas
+    }
+
+    /// **Drain-and-swap reconfiguration** (the control plane's actuation
+    /// path, [`crate::control`]): stop admitting to the current replicas,
+    /// drain every accepted request to completion, then spawn a fresh
+    /// replicated fleet per `cfg` on the *same* completion stream —
+    /// completions buffered before, during and after the swap all remain
+    /// readable, so a driver loop never misses one. Fails only after
+    /// [`Server::shutdown`] (the completion stream is gone for good).
+    pub fn reconfigure<B, F>(&mut self, make_backend: F, cfg: ServerConfig) -> crate::Result<()>
+    where
+        B: InferBackend,
+        F: Fn(usize) -> B + Send + Sync + 'static,
+    {
+        let ctx = self.drain_current()?;
+        let n = cfg.replicas.max(1);
+        let factory = Arc::new(make_backend);
+        self.replicas = Self::spawn_replicated(&factory, &cfg, &ctx);
+        self.scheduler = Scheduler::new(cfg.policy, n);
+        self.chain = false;
+        Ok(())
+    }
+
+    /// [`Server::reconfigure`], but the new fleet is a **stage chain**
+    /// (used by the failure-repair path, [`crate::control::repair`], to
+    /// splice a re-partitioned plan into a running server). The old
+    /// stages drain front-to-back before the new chain spawns, so every
+    /// in-flight frame finishes its traversal on the old plan.
+    pub fn reconfigure_chain<B, F>(
+        &mut self,
+        make_backend: F,
+        cfg: ServerConfig,
+    ) -> crate::Result<()>
+    where
+        B: InferBackend,
+        F: Fn(usize) -> B + Send + Sync + 'static,
+    {
+        let ctx = self.drain_current()?;
+        let k = cfg.replicas.max(1);
+        let factory = Arc::new(make_backend);
+        self.replicas = Self::spawn_chain_stages(&factory, &cfg, &ctx);
+        self.scheduler = Scheduler::new(Policy::StageChain, k);
+        self.chain = true;
+        Ok(())
+    }
+
+    /// Shared drain half of the drain-and-swap: stop admitting to every
+    /// replica, drain all accepted requests to completion, and hand back
+    /// the live completion sender for the replacement fleet. Fails after
+    /// [`Server::shutdown`].
+    fn drain_current(&mut self) -> crate::Result<Sender<Completion>> {
+        let ctx = match self.completion_tx.clone() {
+            Some(tx) => tx,
+            None => anyhow::bail!("cannot reconfigure a server after shutdown"),
+        };
+        for r in &mut self.replicas {
+            r.close();
         }
+        for r in &mut self.replicas {
+            r.join();
+        }
+        Ok(ctx)
     }
 
     /// Number of worker replicas.
@@ -252,9 +347,39 @@ impl Server {
         self.replicas.len()
     }
 
+    /// Current batching settings of replica `replica` (`None` when the
+    /// index is out of range).
+    pub fn batcher_config(&self, replica: usize) -> Option<BatcherConfig> {
+        self.replicas.get(replica).map(|r| r.batcher())
+    }
+
+    /// Live-retune replica `replica`'s batcher (the SLO controller's
+    /// actuation, [`crate::control::slo`]): the worker applies the new
+    /// settings on its next batch, with no drain and no respawn. Returns
+    /// `false` when the index is out of range. Note a later
+    /// [`Server::reconfigure`] respawns replicas at the configured
+    /// baseline, discarding live adjustments.
+    pub fn set_batcher(&self, replica: usize, cfg: BatcherConfig) -> bool {
+        match self.replicas.get(replica) {
+            Some(r) => {
+                r.set_batcher(cfg);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Per-replica outstanding request counts (queued + executing).
     pub fn outstanding(&self) -> Vec<usize> {
         self.replicas.iter().map(|r| r.outstanding()).collect()
+    }
+
+    /// Every worker died without a shutdown (panicked backends). The
+    /// completion channel stays open (the server holds a sender for
+    /// [`Server::reconfigure`]), so this probe — not channel
+    /// disconnection — is how replay loops detect a dead fleet.
+    fn all_workers_dead(&self) -> bool {
+        !self.replicas.is_empty() && self.replicas.iter().all(|r| r.is_dead())
     }
 
     /// Non-blocking submit. Returns the replica index the request was routed
@@ -358,6 +483,10 @@ impl Server {
 
     /// Receive the next completion (blocks until one arrives, or returns
     /// `None` once the fleet has shut down and the stream is drained).
+    /// The stream only terminates after [`Server::shutdown`] — a fleet
+    /// whose workers all died stays open for [`Server::reconfigure`], so
+    /// drive it with [`Server::try_next_completion`] if the backend can
+    /// fail.
     pub fn next_completion(&self) -> Option<Completion> {
         self.completions.recv().ok()
     }
@@ -390,9 +519,13 @@ impl Server {
                 let wait = Duration::from_secs_f64((due - now).min(0.005));
                 match self.completions.recv_timeout(wait) {
                     Ok(c) => fm.record(&c),
-                    Err(RecvTimeoutError::Timeout) => {}
                     // every worker died (panicked backend): nothing will
                     // ever complete, so stop replaying instead of spinning
+                    Err(RecvTimeoutError::Timeout) => {
+                        if self.all_workers_dead() {
+                            return fm;
+                        }
+                    }
                     Err(RecvTimeoutError::Disconnected) => return fm,
                 }
             }
@@ -414,7 +547,9 @@ impl Server {
                 }
                 Err(RecvTimeoutError::Disconnected) => break,
                 Err(RecvTimeoutError::Timeout) => {
-                    if last_progress.elapsed() > Duration::from_secs(10) {
+                    if self.all_workers_dead()
+                        || last_progress.elapsed() > Duration::from_secs(10)
+                    {
                         break;
                     }
                 }
@@ -424,7 +559,9 @@ impl Server {
     }
 
     /// Stop accepting requests and wait for every replica to drain its
-    /// queue. Buffered completions remain readable afterwards.
+    /// queue. Buffered completions remain readable afterwards; once they
+    /// are drained the completion stream terminates (and the server can no
+    /// longer be [`Server::reconfigure`]d).
     pub fn shutdown(&mut self) {
         for r in &mut self.replicas {
             r.close();
@@ -432,6 +569,7 @@ impl Server {
         for r in &mut self.replicas {
             r.join();
         }
+        self.completion_tx = None;
     }
 }
 
@@ -588,6 +726,91 @@ mod tests {
             assert!(total <= c.latency + Duration::from_millis(5));
         }
         assert_eq!(got, 20, "chain dropped frames");
+    }
+
+    #[test]
+    fn reconfigure_swaps_fleet_without_losing_completions() {
+        let mut srv = Server::start(|_| MockBackend::instant(), single(64, 2));
+        for i in 0..10 {
+            srv.submit_blocking(i, vec![i as f32]).unwrap();
+        }
+        // drain-and-swap to a 3-replica fleet on the same completion stream
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(1) },
+            queue_depth: 64,
+            replicas: 3,
+            policy: Policy::RoundRobin,
+        };
+        srv.reconfigure(|_| MockBackend::instant(), cfg).unwrap();
+        assert_eq!(srv.replica_count(), 3);
+        for i in 10..30 {
+            srv.submit_blocking(i, vec![i as f32]).unwrap();
+        }
+        srv.shutdown();
+        let mut ids = Vec::new();
+        while let Some(c) = srv.next_completion() {
+            assert_eq!(c.output[0], c.id as f32 + 1.0);
+            ids.push(c.id);
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, (0..30).collect::<Vec<u64>>(), "swap lost completions");
+    }
+
+    #[test]
+    fn reconfigure_after_shutdown_is_an_error() {
+        let mut srv = Server::start(|_| MockBackend::instant(), single(8, 1));
+        srv.shutdown();
+        let err = srv.reconfigure(|_| MockBackend::instant(), single(8, 1));
+        assert!(err.is_err(), "reconfiguring a shut-down server must fail");
+    }
+
+    #[test]
+    fn reconfigure_chain_splices_a_new_stage_count() {
+        let cfg = |k: usize| ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            queue_depth: 16,
+            replicas: k,
+            policy: Policy::RoundRobin, // ignored by the chain paths
+        };
+        let mut srv = Server::start_chain(|_| MockBackend::instant(), cfg(3));
+        for i in 0..10 {
+            srv.submit_blocking(i, vec![i as f32]).unwrap();
+        }
+        // splice down to a 2-stage chain (one device lost, plan repaired)
+        srv.reconfigure_chain(|_| MockBackend::instant(), cfg(2)).unwrap();
+        assert_eq!(srv.replica_count(), 2);
+        for i in 100..110 {
+            srv.submit_blocking(i, vec![i as f32]).unwrap();
+        }
+        srv.shutdown();
+        let mut pre = 0;
+        let mut post = 0;
+        while let Some(c) = srv.next_completion() {
+            if c.id < 100 {
+                // old plan: 3 stages, each adding +1 after the first
+                assert_eq!(c.output[0], c.id as f32 + 2.0);
+                pre += 1;
+            } else {
+                // new plan: 2 stages
+                assert_eq!(c.output[0], c.id as f32 + 1.0);
+                post += 1;
+            }
+        }
+        assert_eq!((pre, post), (10, 10), "splice dropped frames");
+    }
+
+    #[test]
+    fn live_batcher_retune_roundtrips() {
+        let srv = Server::start(|_| MockBackend::instant(), single(8, 4));
+        let cur = srv.batcher_config(0).unwrap();
+        assert_eq!(cur.max_batch, 4);
+        let next = BatcherConfig { max_batch: 9, max_wait: Duration::from_micros(700) };
+        assert!(srv.set_batcher(0, next));
+        let got = srv.batcher_config(0).unwrap();
+        assert_eq!(got.max_batch, 9);
+        assert_eq!(got.max_wait, Duration::from_micros(700));
+        assert!(!srv.set_batcher(5, next), "out-of-range index must report false");
+        assert!(srv.batcher_config(5).is_none());
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Workload generators for serving experiments: open-loop Poisson arrivals,
 //! bursty (on/off) traffic, heavy-tailed (Pareto inter-arrival) traffic,
-//! a diurnal (rate-modulated Poisson) day/night cycle, and a
-//! fixed-interval baseline. Deterministic via the crate PRNG.
+//! a diurnal (rate-modulated Poisson) day/night cycle, a flash-crowd
+//! step/burst (the autoscaler stressor), and a fixed-interval baseline.
+//! Deterministic via the crate PRNG.
 //!
 //! Traces also round-trip to disk ([`Trace::save`] / [`Trace::load`]) in a
 //! one-arrival-per-line text format, so captures of real traffic can drive
@@ -169,6 +170,42 @@ pub fn diurnal(n: usize, base_rate: f64, peak_rate: f64, period_s: f64, seed: u6
     Trace { arrivals_s: arrivals }
 }
 
+/// Flash crowd: Poisson arrivals at `base_rate`, except inside the burst
+/// window `[burst_start_s, burst_start_s + burst_len_s)` where the rate
+/// steps to `base_rate · burst_mult` (Lewis–Shedler thinning of a
+/// peak-rate stream, like [`diurnal`], but with a step instead of a
+/// sinusoid). The step edge is the canonical autoscaler stressor: unlike
+/// the diurnal drift there is no ramp to track, so the controller's
+/// reaction time — cooldown, window length, hysteresis — is fully exposed
+/// in the shed counters. CLI surface: `--trace
+/// flash[:MULT[:START_S[:LEN_S]]]` on `fcmp serve` / `fcmp autoscale`.
+pub fn flash_crowd(
+    n: usize,
+    base_rate: f64,
+    burst_mult: f64,
+    burst_start_s: f64,
+    burst_len_s: f64,
+    seed: u64,
+) -> Trace {
+    assert!(
+        base_rate > 0.0 && burst_mult >= 1.0 && burst_start_s >= 0.0 && burst_len_s >= 0.0,
+        "flash_crowd wants base_rate > 0, burst_mult >= 1, non-negative window"
+    );
+    let peak = base_rate * burst_mult;
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut arrivals = Vec::with_capacity(n);
+    while arrivals.len() < n {
+        t += rng.exp(peak);
+        let in_burst = t >= burst_start_s && t < burst_start_s + burst_len_s;
+        let rate = if in_burst { peak } else { base_rate };
+        if rng.f64() < rate / peak {
+            arrivals.push(t);
+        }
+    }
+    Trace { arrivals_s: arrivals }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +317,38 @@ mod tests {
             diurnal(500, 50.0, 200.0, 5.0, 3).arrivals_s,
             diurnal(500, 50.0, 200.0, 5.0, 4).arrivals_s
         );
+    }
+
+    #[test]
+    fn flash_crowd_burst_window_is_denser_by_the_multiplier() {
+        // base 100/s, 8x burst over [2, 3): compare arrival densities
+        let t = flash_crowd(2_000, 100.0, 8.0, 2.0, 1.0, 13);
+        let in_window = |lo: f64, hi: f64| {
+            t.arrivals_s.iter().filter(|&&a| a >= lo && a < hi).count() as f64 / (hi - lo)
+        };
+        let before = in_window(0.0, 2.0);
+        let burst = in_window(2.0, 3.0);
+        assert!((before - 100.0).abs() / 100.0 < 0.25, "baseline density {before}");
+        assert!((burst - 800.0).abs() / 800.0 < 0.15, "burst density {burst}");
+        assert!(t.arrivals_s.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn flash_crowd_deterministic_per_seed() {
+        assert_eq!(
+            flash_crowd(300, 50.0, 6.0, 1.0, 0.5, 3).arrivals_s,
+            flash_crowd(300, 50.0, 6.0, 1.0, 0.5, 3).arrivals_s
+        );
+        assert_ne!(
+            flash_crowd(300, 50.0, 6.0, 1.0, 0.5, 3).arrivals_s,
+            flash_crowd(300, 50.0, 6.0, 1.0, 0.5, 4).arrivals_s
+        );
+    }
+
+    #[test]
+    fn flash_crowd_without_burst_is_plain_poisson_rate() {
+        let t = flash_crowd(10_000, 200.0, 5.0, 1e9, 1.0, 21);
+        assert!((t.offered_rate() - 200.0).abs() / 200.0 < 0.05, "{}", t.offered_rate());
     }
 
     #[test]

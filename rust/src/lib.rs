@@ -16,11 +16,15 @@
 //! dynamic batchers, admission control, fleet latency metrics), plus a
 //! pipeline-parallel multi-device sharding subsystem ([`sharding`]) that
 //! partitions one network across a heterogeneous device fleet and serves
-//! it as a staged pipeline.
+//! it as a staged pipeline, and an adaptive control plane ([`control`])
+//! that closes the loop from fleet metrics back to fleet shape: an
+//! SLO-driven autoscaler, live batching-window adaptation, and
+//! failure-driven re-partition with cached-manifest migration.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod device;
 pub mod folding;

@@ -17,13 +17,24 @@
 //! fcmp shard    --network cnv-w2a2 --devices 7012s,7012s [--shards 2]
 //!               [--hb 4] [--engine ga|ffd] [--generations 40]
 //!               [--link-gbps 100] [--link-us 2] [--frames 400] [--fifo 8]
-//!               [--serve] [--requests 256] [--rate FPS*0.8]
+//!               [--serve] [--requests 256] [--rate FPS*0.8] [--kill-stage I]
+//! fcmp autoscale [--trace flash|diurnal|...|file:PATH] [--requests 600]
+//!               [--rate 300] [--devices 7020,7020,7020,7020] [--replicas 1]
+//!               [--min 1] [--max POOL] [--shed-out 0.02] [--p99-out MS]
+//!               [--util-in 0.25] [--cooldown 3] [--tick-ms 25] [--window 3]
+//!               [--slo-p99 MS] [--kill T:R,...] [--static]
+//!               [--require-scale-cycle]
 //! fcmp dse      --network ... --device ... [--budget 0.85]
 //! ```
 
+use fcmp::control::{
+    replan, run_loop, splice_mock_chain, AutoscalerConfig, ControlledFleet, FailureEvent,
+    LoopConfig, SignalConfig, SloConfig,
+};
 use fcmp::coordinator::{
-    bursty, diurnal, fleet_weights, heavy_tail, poisson, replica_fps, shard_service_times,
-    uniform, BatcherConfig, MockBackend, Policy, ReplicaSpec, Server, ServerConfig, Trace,
+    bursty, diurnal, flash_crowd, fleet_weights, heavy_tail, poisson, replica_fps,
+    shard_service_times, uniform, BatcherConfig, MockBackend, Policy, ReplicaSpec, Server,
+    ServerConfig, Trace,
 };
 use fcmp::device;
 use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
@@ -235,6 +246,42 @@ fn trace_by_name(name: &str, n: usize, rate: f64, seed: u64) -> anyhow::Result<T
     if let Some(path) = name.strip_prefix("file:") {
         return Trace::load(Path::new(path));
     }
+    // flash[:MULT[:START_S[:LEN_S]]] — step burst at MULT x the base rate;
+    // window defaults to the middle fifth of the (pre-burst) trace span
+    if name == "flash" || name.starts_with("flash:") {
+        let span = n as f64 / rate;
+        let mut mult = 6.0;
+        let mut start = 0.25 * span;
+        let mut len = 0.2 * span;
+        if let Some(rest) = name.strip_prefix("flash:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            anyhow::ensure!(
+                parts.len() <= 3,
+                "flash trace wants flash[:MULT[:START_S[:LEN_S]]], got {name:?}"
+            );
+            let want = |s: &str| -> anyhow::Result<f64> {
+                s.parse().map_err(|_| anyhow::anyhow!("bad flash parameter {s:?} in {name:?}"))
+            };
+            if !parts.is_empty() {
+                mult = want(parts[0])?;
+            }
+            if parts.len() > 1 {
+                start = want(parts[1])?;
+            }
+            if parts.len() > 2 {
+                len = want(parts[2])?;
+            }
+        }
+        // range-check here so bad CLI input gets a clean error, not the
+        // generator's assert
+        anyhow::ensure!(rate > 0.0, "flash trace wants --rate > 0, got {rate}");
+        anyhow::ensure!(mult >= 1.0, "flash burst multiplier must be >= 1, got {mult}");
+        anyhow::ensure!(
+            start >= 0.0 && len >= 0.0,
+            "flash burst window must be non-negative, got start {start}, len {len}"
+        );
+        return Ok(flash_crowd(n, rate, mult, start, len, seed));
+    }
     Ok(match name {
         "poisson" => poisson(n, rate, seed),
         "bursty" => bursty(n, rate, rate * 8.0, 32, seed),
@@ -249,9 +296,176 @@ fn trace_by_name(name: &str, n: usize, rate: f64, seed: u64) -> anyhow::Result<T
         }
         "uniform" => uniform(n, rate),
         other => {
-            anyhow::bail!("unknown trace {other} (poisson|bursty|heavy|diurnal|uniform|file:PATH)")
+            anyhow::bail!(
+                "unknown trace {other} \
+                 (poisson|bursty|heavy|diurnal|flash[:M[:S[:L]]]|uniform|file:PATH)"
+            )
         }
     })
+}
+
+/// Parse a failure-injection schedule: `T:R[,T:R...]` (at `T` seconds,
+/// kill active replica `R`).
+fn parse_failures(spec: &str) -> anyhow::Result<Vec<FailureEvent>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let (t, r) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("--kill wants T:R[,T:R...], got {part:?}"))?;
+        out.push(FailureEvent {
+            at_s: t.parse().map_err(|_| anyhow::anyhow!("bad --kill time {t:?}"))?,
+            replica: r.parse().map_err(|_| anyhow::anyhow!("bad --kill replica {r:?}"))?,
+        });
+    }
+    Ok(out)
+}
+
+/// `fcmp autoscale`: the adaptive control plane end to end — replay a
+/// trace through a mock fleet while the autoscaler reshapes it, the SLO
+/// controller retunes batching windows, and the failure schedule kills
+/// replicas mid-run.
+fn cmd_autoscale(a: &Args) -> anyhow::Result<()> {
+    let (net, model) = serve_model(a.get_or("model", "cnv_w1a1")).ok_or_else(|| {
+        anyhow::anyhow!("unknown model (cnv_w1a1|cnv_w2a2|rn50_lite_w1a2 or aliases)")
+    })?;
+    let n = a.get_usize("requests", 600);
+    let rate = a.get_f64("rate", 300.0);
+    let seed = cfg_seed(a);
+    let trace_name = a.get_or("trace", "flash");
+    let trace = trace_by_name(trace_name, n, rate, seed)?;
+    if let Some(out) = a.get("trace-out") {
+        trace.save(Path::new(out))?;
+        println!("recorded trace ({} arrivals) to {out}", trace.len());
+    }
+
+    // device pool: the first --replicas entries start active, the rest are
+    // the standby pool scale-out draws from (capacity-ranked)
+    let dev_names: Vec<&str> = a.get_or("devices", "7020,7020,7020,7020").split(',').collect();
+    let init = a.get_usize("replicas", 1).max(1);
+    anyhow::ensure!(
+        init <= dev_names.len(),
+        "--replicas {init} exceeds the {}-device pool",
+        dev_names.len()
+    );
+    let mut pool = Vec::with_capacity(dev_names.len());
+    for name in &dev_names {
+        let dev = device::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown device {name} in --devices"))?;
+        pool.push(ReplicaSpec::paper_point(dev));
+    }
+    let standby = pool.split_off(init);
+    let active = pool;
+
+    let batcher = BatcherConfig {
+        max_batch: a.get_usize("batch", 4),
+        max_wait: Duration::from_secs_f64(a.get_f64("wait-ms", 1.0) * 1e-3),
+    };
+    let queue_depth = a.get_usize("queue", 32);
+    let service_us = a.get_f64("service-us", 1800.0);
+    let mut fleet = ControlledFleet::start(
+        net.clone(),
+        active,
+        standby,
+        service_us,
+        batcher,
+        queue_depth,
+    );
+
+    let scaler = AutoscalerConfig {
+        min_replicas: a.get_usize("min", 1),
+        max_replicas: a.get_usize("max", dev_names.len()),
+        shed_out: a.get_f64("shed-out", 0.02),
+        p99_out_ms: a.get_f64("p99-out", f64::INFINITY),
+        util_in: a.get_f64("util-in", 0.25),
+        cooldown_ticks: a.get_usize("cooldown", 3),
+        step: a.get_usize("step", 1),
+    };
+    let slo = a.get("slo-p99").map(|_| SloConfig {
+        p99_budget_ms: a.get_f64("slo-p99", 50.0),
+        ..SloConfig::default()
+    });
+    let lcfg = LoopConfig {
+        tick: Duration::from_millis(a.get_usize("tick-ms", 25) as u64),
+        signal: SignalConfig { window_ticks: a.get_usize("window", 3) },
+        autoscaler: if a.has_flag("static") { None } else { Some(scaler) },
+        slo,
+        failures: match a.get("kill") {
+            Some(spec) => parse_failures(spec)?,
+            None => Vec::new(),
+        },
+        trailing_ticks: a.get_usize("trailing", 8),
+        input_len: 8,
+        seed,
+    };
+
+    println!(
+        "autoscale [{model}]: {init} of {} devices active, trace {trace_name} \
+         ({:.0} req/s offered), tick {:?}, window {} ticks",
+        dev_names.len(),
+        trace.offered_rate(),
+        lcfg.tick,
+        lcfg.signal.window_ticks
+    );
+    let rep = run_loop(&mut fleet, &trace, &lcfg);
+    fleet.shutdown();
+
+    if rep.events.is_empty() {
+        println!("events: none");
+    } else {
+        println!("events:");
+        for e in &rep.events {
+            println!("  {e}");
+        }
+    }
+    println!(
+        "result: submitted {} shed {} ({:.1}% of offered) completed {} | \
+         replicas {} -> {} (peak {}) over {} ticks",
+        rep.submitted,
+        rep.shed,
+        100.0 * rep.shed_rate(),
+        rep.completed,
+        rep.initial_replicas,
+        rep.final_replicas,
+        rep.max_replicas_seen,
+        rep.ticks
+    );
+    println!("{}", rep.summary);
+
+    // CI smoke contract: the run must have scaled out under load and back
+    // in afterwards
+    if a.has_flag("require-scale-cycle") {
+        anyhow::ensure!(
+            rep.scale_outs() >= 1,
+            "--require-scale-cycle: no scale-out occurred"
+        );
+        anyhow::ensure!(
+            rep.scale_ins() >= 1,
+            "--require-scale-cycle: no scale-in occurred"
+        );
+        let first_out = rep
+            .events
+            .iter()
+            .find_map(|e| match e {
+                fcmp::control::ControlEvent::ScaleOut { tick, .. } => Some(*tick),
+                _ => None,
+            })
+            .unwrap();
+        let first_in = rep
+            .events
+            .iter()
+            .find_map(|e| match e {
+                fcmp::control::ControlEvent::ScaleIn { tick, .. } => Some(*tick),
+                _ => None,
+            })
+            .unwrap();
+        anyhow::ensure!(
+            first_out < first_in,
+            "--require-scale-cycle: scale-in (tick {first_in}) preceded scale-out \
+             (tick {first_out})"
+        );
+        println!("scale cycle OK: out at tick {first_out}, in at tick {first_in}");
+    }
+    Ok(())
 }
 
 fn cmd_serve(a: &Args) -> anyhow::Result<()> {
@@ -466,9 +680,10 @@ fn cmd_shard(a: &Args) -> anyhow::Result<()> {
     if a.has_flag("serve") {
         let requests = a.get_usize("requests", 256);
         let rate = a.get_f64("rate", plan.fps * 0.8);
+        let batcher = BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) };
         let svc = shard_service_times(&plan);
         let scfg = ServerConfig {
-            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            batcher,
             queue_depth: fifo as usize,
             replicas: plan.shards.len(),
             policy: Policy::StageChain,
@@ -479,13 +694,63 @@ fn cmd_shard(a: &Args) -> anyhow::Result<()> {
         );
         let trace = poisson(requests, rate, cfg_seed(a));
         let fm = srv.replay(&trace, 8, cfg_seed(a));
-        srv.shutdown();
         println!(
             "\nchain serve [{} stages, {:.0} req/s offered]:",
             plan.shards.len(),
             trace.offered_rate()
         );
         println!("{}", fm.summary());
+
+        // --kill-stage I: simulate losing shard I's device mid-deployment,
+        // re-partition over the survivors (migrating cached packed
+        // manifests) and splice the repaired plan into the running chain
+        if let Some(kill) = a.get("kill-stage") {
+            let dead: usize = kill
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--kill-stage wants a shard index, got {kill:?}"))?;
+            anyhow::ensure!(
+                dead < devices.len(),
+                "--kill-stage {dead} out of range for {} devices",
+                devices.len()
+            );
+            println!("\nFAILURE: device {} ({}) lost", dead, devices[dead].name);
+            let out = replan(&net, &devices, dead, cfg);
+            match &out.plan {
+                None => println!(
+                    "re-partition over {:?}: INFEASIBLE — {}",
+                    out.survivors.iter().map(|d| d.name).collect::<Vec<_>>(),
+                    out.infeasible.as_deref().unwrap_or("unknown")
+                ),
+                Some(new_plan) => {
+                    println!(
+                        "re-partition over {:?}: {} shards, {:.0} FPS analytic \
+                         ({} manifests migrated from cache, {} re-packed)",
+                        out.survivors.iter().map(|d| d.name).collect::<Vec<_>>(),
+                        new_plan.shards.len(),
+                        new_plan.fps,
+                        out.migrated_shards,
+                        out.repacked_shards
+                    );
+                    splice_mock_chain(
+                        &mut srv,
+                        new_plan,
+                        batcher,
+                        fifo as usize,
+                        Duration::from_millis(2),
+                    )?;
+                    let rate2 = a.get_f64("rate", new_plan.fps * 0.8).min(new_plan.fps * 0.8);
+                    let trace2 = poisson(requests, rate2.max(1.0), cfg_seed(a) + 1);
+                    let fm2 = srv.replay(&trace2, 8, cfg_seed(a) + 1);
+                    println!(
+                        "post-repair chain serve [{} stages, {:.0} req/s offered]:",
+                        new_plan.shards.len(),
+                        trace2.offered_rate()
+                    );
+                    println!("{}", fm2.summary());
+                }
+            }
+        }
+        srv.shutdown();
     }
     Ok(())
 }
@@ -567,7 +832,17 @@ subcommands:
           (per-shard FCMP packing, --hb/--generations/--engine ga|ffd),
           model the cut links (--link-gbps/--link-us), simulate the staged
           pipeline (--frames/--fifo) and optionally serve it as a stage
-          chain (--serve --requests N --rate R)
+          chain (--serve --requests N --rate R); --kill-stage I simulates
+          losing shard I's device mid-serve, re-partitions the survivors
+          (migrating cached packed manifests) and splices the repaired
+          plan into the running chain
+  autoscale  adaptive control plane on a mock fleet: SLO-driven
+          autoscaling (--shed-out/--p99-out/--util-in/--cooldown, bounds
+          --min/--max), live SLO batching (--slo-p99 MS), failure
+          injection (--kill T:R,...), driven by --trace
+          flash[:M[:S[:L]]]|diurnal|...|file:PATH; --static disables the
+          autoscaler (baseline arm), --require-scale-cycle makes the run
+          fail unless it scaled out then back in (CI smoke)
   dse     folding design-space exploration (--network, --device, --budget)
   floorplan  SLR floorplan of a network on a multi-die device (Fig. 5)";
 
@@ -581,6 +856,7 @@ fn main() {
         Some("golden") => cmd_golden(&args),
         Some("serve") => cmd_serve(&args),
         Some("shard") => cmd_shard(&args),
+        Some("autoscale") => cmd_autoscale(&args),
         Some("dse") => cmd_dse(&args),
         Some("floorplan") => cmd_floorplan(&args),
         _ => {

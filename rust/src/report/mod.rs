@@ -65,12 +65,7 @@ pub fn pack_network_cached(
     generations: usize,
     seed: u64,
 ) -> std::sync::Arc<packing::cache::CachedPack> {
-    let engine_tag = if generations == 0 {
-        "ffd".to_string()
-    } else {
-        format!("ga/{generations}")
-    };
-    let key = packing::cache::PackKey::new(net, dev, bin_height, engine_tag, seed);
+    let key = packing::cache::PackKey::new(net, dev, bin_height, engine_tag(generations), seed);
     packing::cache::get_or_pack(key, || {
         let bufs = memory::weight_buffers(net, dev.slrs.len());
         if memory::all_columns(&bufs).is_empty() {
@@ -102,6 +97,20 @@ pub fn pack_network_cached(
             logic_kluts: out.logic_kluts,
         }
     })
+}
+
+/// Engine identity string [`pack_network_cached`] keys the packing cache
+/// with for a given generation budget (`"ffd"` for the deterministic
+/// baseline, `"ga/N"` otherwise). The failure-repair path
+/// ([`crate::control::repair`]) reconstructs cache keys with this exact
+/// tag to tell migrated manifests from re-packs — keep the two in sync by
+/// construction, not by convention.
+pub fn engine_tag(generations: usize) -> String {
+    if generations == 0 {
+        "ffd".to_string()
+    } else {
+        format!("ga/{generations}")
+    }
 }
 
 /// Default GA engine for a network (Table III hyper-parameters).

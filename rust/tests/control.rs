@@ -1,0 +1,379 @@
+//! Control-plane acceptance: (a) the autoscaler absorbs a flash crowd
+//! that a static fleet sheds, scaling out within cooldown bounds and back
+//! in afterwards; (b) the SLO controller brings p99 under budget on a
+//! backlogged replica without giving up steady-state throughput; (c)
+//! losing a device of a sharded plan triggers re-partition onto the
+//! survivor — migrating cached packed manifests with zero re-packs when
+//! the cache is warm — or a clean infeasibility report, and the repaired
+//! plan splices into a running chain; plus packing-cache behavior under
+//! control-plane churn.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fcmp::control::{
+    replan, run_loop, splice_mock_chain, AutoscalerConfig, ControlEvent, ControlledFleet,
+    FailureEvent, LoopConfig, SignalConfig, SloConfig,
+};
+use fcmp::coordinator::{
+    flash_crowd, poisson, shard_service_times, BatcherConfig, MockBackend, Policy,
+    ReplicaSpec, Server, ServerConfig,
+};
+use fcmp::device::{zynq_7012s, zynq_7020};
+use fcmp::nn::{cnv, CnvVariant};
+use fcmp::report::pack_network_cached;
+use fcmp::sharding::{fits_packed, partition, PartitionConfig};
+
+fn specs_7020(k: usize) -> Vec<ReplicaSpec> {
+    (0..k).map(|_| ReplicaSpec::paper_point(zynq_7020())).collect()
+}
+
+/// (a) Flash crowd: scale-out within cooldown bounds, shed rate below the
+/// static fleet of the initial size, scale back in over the quiet tail.
+#[test]
+fn autoscaler_absorbs_a_flash_crowd_a_static_fleet_sheds() {
+    let net = cnv(CnvVariant::W1A1);
+    // base 200 req/s, 5x burst over [0.5, 1.0), ~1 s quiet tail; one
+    // replica sustains 500 req/s (2 ms/item), so the burst needs ~2-3
+    let trace = flash_crowd(800, 200.0, 5.0, 0.5, 0.5, 7);
+    let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
+    let service_us = 2_000.0;
+    let cooldown = 2usize;
+    let base_cfg = LoopConfig {
+        tick: Duration::from_millis(20),
+        signal: SignalConfig { window_ticks: 2 },
+        trailing_ticks: 10,
+        input_len: 4,
+        seed: 7,
+        ..LoopConfig::default()
+    };
+
+    // static arm: 1 replica, no controller
+    let mut static_fleet =
+        ControlledFleet::start(net.clone(), specs_7020(1), vec![], service_us, batcher, 32);
+    let static_rep = run_loop(&mut static_fleet, &trace, &base_cfg);
+    static_fleet.shutdown();
+
+    // autoscaled arm: same initial size, 3 standby devices
+    let mut auto_fleet =
+        ControlledFleet::start(net, specs_7020(1), specs_7020(3), service_us, batcher, 32);
+    let auto_cfg = LoopConfig {
+        autoscaler: Some(AutoscalerConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            shed_out: 0.02,
+            p99_out_ms: f64::INFINITY,
+            util_in: 0.2,
+            cooldown_ticks: cooldown,
+            step: 1,
+        }),
+        ..base_cfg
+    };
+    let auto_rep = run_loop(&mut auto_fleet, &trace, &auto_cfg);
+    auto_fleet.shutdown();
+
+    // the static baseline must actually have been overloaded, or the
+    // comparison is vacuous
+    assert!(
+        static_rep.shed > 0,
+        "static fleet absorbed the whole burst — the scenario lost its signal"
+    );
+    assert!(auto_rep.scale_outs() >= 1, "no scale-out under a 5x flash crowd");
+    assert!(
+        auto_rep.max_replicas_seen > auto_rep.initial_replicas,
+        "fleet never grew: {:?}",
+        auto_rep.events
+    );
+    // scale decisions respect the cooldown: consecutive scale events are
+    // at least `cooldown` ticks apart
+    let ticks = auto_rep.scale_ticks();
+    for w in ticks.windows(2) {
+        assert!(
+            w[1] - w[0] >= cooldown,
+            "scale events at ticks {:?} violate the {cooldown}-tick cooldown",
+            ticks
+        );
+    }
+    // the burst absorbed: strictly less shed than the static fleet
+    assert!(
+        auto_rep.shed < static_rep.shed,
+        "autoscaled shed {} >= static shed {}",
+        auto_rep.shed,
+        static_rep.shed
+    );
+    assert!(
+        auto_rep.shed_rate() < static_rep.shed_rate(),
+        "autoscaled shed rate {:.3} >= static {:.3}",
+        auto_rep.shed_rate(),
+        static_rep.shed_rate()
+    );
+    // and the quiet tail scales the fleet back in
+    assert!(auto_rep.scale_ins() >= 1, "no scale-in over the quiet tail: {:?}", auto_rep.events);
+    assert!(
+        auto_rep.final_replicas < auto_rep.max_replicas_seen,
+        "fleet ended at its peak size {}",
+        auto_rep.final_replicas
+    );
+}
+
+/// (b) SLO batching: an over-wide batching window inflates p99 far past
+/// the budget; the controller shrinks it until p99 is inside the budget,
+/// and steady-state throughput stays within 5% of the uncontrolled fleet.
+#[test]
+fn slo_controller_brings_p99_under_budget_without_throughput_loss() {
+    let net = cnv(CnvVariant::W1A1);
+    // 80 ms window, batch cap 64: arrivals at 300/s ride ~24-request
+    // batches that close on the window — p99 lands near 80 ms against a
+    // 35 ms budget, while capacity (0.5 ms/item) is nowhere near the limit
+    let bad_batcher = BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(80) };
+    let budget_ms = 35.0;
+    let slo = SloConfig {
+        p99_budget_ms: budget_ms,
+        min_wait: Duration::from_millis(1),
+        max_wait: Duration::from_millis(80),
+        min_batch: 1,
+        max_batch: 64,
+        grow_below: 0.4,
+    };
+    let mk_fleet = || {
+        ControlledFleet::start(
+            net.clone(),
+            specs_7020(1),
+            vec![],
+            500.0,
+            bad_batcher,
+            256,
+        )
+    };
+    let base_cfg = LoopConfig {
+        tick: Duration::from_millis(30),
+        signal: SignalConfig { window_ticks: 2 },
+        trailing_ticks: 2,
+        input_len: 4,
+        seed: 11,
+        ..LoopConfig::default()
+    };
+    let warm = poisson(400, 300.0, 11);
+    let probe = poisson(300, 300.0, 12);
+
+    // uncontrolled arm: probe straight through the backlogged window
+    let mut static_fleet = mk_fleet();
+    let static_rep = run_loop(&mut static_fleet, &probe, &base_cfg);
+    static_fleet.shutdown();
+    let static_fleet_summary = static_rep.summary.fleet.expect("static probe completions");
+    assert!(
+        static_fleet_summary.latency_ms.p99 > budget_ms,
+        "uncontrolled p99 {:.1} ms already inside the {budget_ms} ms budget — \
+         the scenario lost its signal",
+        static_fleet_summary.latency_ms.p99
+    );
+
+    // controlled arm: converge on the warm trace, then measure the probe
+    let slo_cfg = LoopConfig { slo: Some(slo), ..base_cfg };
+    let mut fleet = mk_fleet();
+    let warm_rep = run_loop(&mut fleet, &warm, &slo_cfg);
+    assert!(
+        warm_rep.events.iter().any(|e| matches!(e, ControlEvent::SloAdjust { .. })),
+        "controller never adjusted the batcher"
+    );
+    let probe_rep = run_loop(&mut fleet, &probe, &slo_cfg);
+    fleet.shutdown();
+    let controlled = probe_rep.summary.fleet.expect("controlled probe completions");
+    assert!(
+        controlled.latency_ms.p99 < budget_ms,
+        "p99 {:.1} ms still over the {budget_ms} ms budget after convergence",
+        controlled.latency_ms.p99
+    );
+    // steady-state throughput within 5%: both arms are arrival-bound, the
+    // controller must not have turned latency into lost completions
+    assert_eq!(probe_rep.completed, probe_rep.submitted, "controlled arm dropped requests");
+    assert!(
+        controlled.throughput_fps >= 0.95 * static_fleet_summary.throughput_fps,
+        "throughput {:.0} fps fell more than 5% below the uncontrolled {:.0} fps",
+        controlled.throughput_fps,
+        static_fleet_summary.throughput_fps
+    );
+}
+
+/// (c) Device loss on a 2-device sharded plan: re-partition onto the
+/// survivor with ZERO re-packs when the cache already holds the
+/// surviving point, and splice the repaired plan into a running chain.
+#[test]
+fn device_loss_repartitions_onto_survivor_migrating_cached_manifests() {
+    let net = cnv(CnvVariant::W1A1);
+    let devs = [zynq_7020(), zynq_7012s()];
+    // distinctive seed so no other test shares these cache keys
+    let cfg = PartitionConfig { generations: 0, seed: 777_001, ..PartitionConfig::default() };
+
+    let plan = partition(&net, &devs, cfg).expect("2-shard plan");
+    assert_eq!(plan.shards.len(), 2);
+    // the deployment-time feasibility probe warms the survivor's
+    // full-range packed point — exactly what repair will need
+    assert!(fits_packed(&net, &devs[0], cfg), "W1A1 must fit a 7020 packed");
+
+    // serve the plan as a 2-stage chain
+    let svc: Vec<Duration> = shard_service_times(&plan)
+        .iter()
+        .map(|d| Duration::from_micros((d.as_micros() as u64).clamp(50, 500)))
+        .collect();
+    let batcher = BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) };
+    let scfg = ServerConfig {
+        batcher,
+        queue_depth: 16,
+        replicas: plan.shards.len(),
+        policy: Policy::StageChain,
+    };
+    let mut srv = Server::start_chain(
+        move |i| MockBackend::with_service(Duration::ZERO, svc[i]),
+        scfg,
+    );
+    for i in 0..20u64 {
+        srv.submit_blocking(i, vec![i as f32]).unwrap();
+    }
+
+    // device 1 dies: re-plan over the survivor
+    let out = replan(&net, &devs, 1, cfg);
+    assert_eq!(out.survivors.len(), 1);
+    assert_eq!(out.survivors[0].name, "zynq-7020");
+    let new_plan = out.plan.as_ref().expect("survivor hosts the full network");
+    assert_eq!(new_plan.shards.len(), 1);
+    assert_eq!(
+        (out.migrated_shards, out.repacked_shards),
+        (1, 0),
+        "warm cache must migrate the manifest, not re-pack"
+    );
+
+    // splice the repaired plan into the running server and keep serving
+    splice_mock_chain(&mut srv, new_plan, batcher, 16, Duration::from_millis(2)).unwrap();
+    assert_eq!(srv.replica_count(), 1);
+    // the spliced stage is the bottleneck of its own 1-stage chain, so
+    // co-tuning must have set it to serve greedily (batch 1, no window)
+    let spliced = srv.batcher_config(0).expect("spliced stage");
+    assert_eq!(spliced.max_batch, 1);
+    assert_eq!(spliced.max_wait, Duration::ZERO);
+    for i in 100..120u64 {
+        srv.submit_blocking(i, vec![i as f32]).unwrap();
+    }
+    srv.shutdown();
+    let (mut pre, mut post) = (0, 0);
+    while let Some(c) = srv.next_completion() {
+        if c.id < 100 {
+            // old 2-stage chain: each forward adds +1 to the mock sum
+            assert_eq!(c.output[0], c.id as f32 + 1.0, "frame {} broke pre-swap", c.id);
+            pre += 1;
+        } else {
+            // repaired single-shard chain: output == input
+            assert_eq!(c.output[0], c.id as f32, "frame {} broke post-swap", c.id);
+            post += 1;
+        }
+    }
+    assert_eq!((pre, post), (20, 20), "drain-and-swap dropped frames");
+}
+
+/// (c, infeasible half) When the survivors cannot host the network, the
+/// repair reports cleanly instead of producing a plan (or panicking).
+#[test]
+fn device_loss_with_infeasible_survivors_reports_cleanly() {
+    let net = cnv(CnvVariant::W2A2);
+    let devs = [zynq_7012s(), zynq_7012s()];
+    let cfg = PartitionConfig { generations: 0, seed: 777_002, ..PartitionConfig::default() };
+    // sanity: the 2-device plan exists...
+    assert!(partition(&net, &devs, cfg).is_ok());
+    // ...but one 7012S cannot host W2A2 even packed
+    let out = replan(&net, &devs, 0, cfg);
+    assert!(!out.is_feasible());
+    assert_eq!(out.survivors.len(), 1);
+    let reason = out.infeasible.expect("infeasibility reason");
+    assert!(
+        reason.contains("OCM") || reason.contains("partition"),
+        "unhelpful infeasibility report: {reason}"
+    );
+    assert_eq!((out.migrated_shards, out.repacked_shards), (0, 0));
+}
+
+/// Packing cache under control-plane churn: the same (network, device,
+/// H_B, engine, seed) point requested concurrently from the repair path
+/// (sliced network) and the scale-out path (full network) converges on
+/// one cached design per key — no duplicate growth, deterministic hits.
+#[test]
+fn packing_cache_churn_converges_on_one_design_per_key() {
+    let net = cnv(CnvVariant::W1A1);
+    let dev = zynq_7020();
+    let n = net.stages.len();
+    let seed = 909_090u64; // distinctive: no other test shares these keys
+
+    // 4 concurrent "scale-out" fetches (full net) + 4 concurrent
+    // "repair" fetches (full-range slice, the k=1 partition's key)
+    let sliced = net.slice(0, n);
+    let (full_arcs, slice_arcs) = std::thread::scope(|s| {
+        let full: Vec<_> =
+            (0..4).map(|_| s.spawn(|| pack_network_cached(&net, &dev, 4, 0, seed))).collect();
+        let slice: Vec<_> = (0..4)
+            .map(|_| s.spawn(|| pack_network_cached(&sliced, &dev, 4, 0, seed)))
+            .collect();
+        (
+            full.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>(),
+            slice.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>(),
+        )
+    });
+    for a in &full_arcs[1..] {
+        assert!(Arc::ptr_eq(&full_arcs[0], a), "racing full-net fetches diverged");
+    }
+    for a in &slice_arcs[1..] {
+        assert!(Arc::ptr_eq(&slice_arcs[0], a), "racing slice fetches diverged");
+    }
+    // bounded growth: repeated requests keep hitting the same designs
+    for _ in 0..5 {
+        assert!(Arc::ptr_eq(&full_arcs[0], &pack_network_cached(&net, &dev, 4, 0, seed)));
+        assert!(Arc::ptr_eq(&slice_arcs[0], &pack_network_cached(&sliced, &dev, 4, 0, seed)));
+    }
+    // keyed-hit determinism: the full net and its full-range slice are
+    // distinct keys (the slice embeds the range in its name) yet pack to
+    // the same BRAM cost — same buffers, same engine, same seed
+    assert!(!Arc::ptr_eq(&full_arcs[0], &slice_arcs[0]));
+    assert_eq!(full_arcs[0].report.brams, slice_arcs[0].report.brams);
+}
+
+/// Failure injection through the driver loop: the scheduled kill fires,
+/// the journal records it, and the autoscaler refills the fleet from
+/// standby.
+#[test]
+fn failure_injection_is_journaled_and_recovered_from() {
+    let net = cnv(CnvVariant::W1A1);
+    // steady 700 req/s saturates one 500 req/s replica but not two;
+    // killing one at 0.3 s forces sheds, and the autoscaler pulls the
+    // standby device in
+    let trace = poisson(600, 700.0, 23);
+    let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
+    let mut fleet =
+        ControlledFleet::start(net, specs_7020(2), specs_7020(1), 2_000.0, batcher, 16);
+    let cfg = LoopConfig {
+        tick: Duration::from_millis(20),
+        signal: SignalConfig { window_ticks: 2 },
+        autoscaler: Some(AutoscalerConfig {
+            min_replicas: 1,
+            max_replicas: 3,
+            shed_out: 0.02,
+            p99_out_ms: f64::INFINITY,
+            util_in: 0.0, // scale-in disabled: the kill target must exist
+            cooldown_ticks: 2,
+            step: 1,
+        }),
+        failures: vec![FailureEvent { at_s: 0.3, replica: 1 }],
+        trailing_ticks: 4,
+        input_len: 4,
+        seed: 23,
+        ..LoopConfig::default()
+    };
+    let rep = run_loop(&mut fleet, &trace, &cfg);
+    fleet.shutdown();
+    assert_eq!(rep.failures(), 1, "the scheduled kill must fire: {:?}", rep.events);
+    let failure_pos =
+        rep.events.iter().position(|e| matches!(e, ControlEvent::Failure { .. })).unwrap();
+    assert!(
+        rep.events[failure_pos..].iter().any(|e| matches!(e, ControlEvent::ScaleOut { .. })),
+        "no scale-out after the failure: {:?}",
+        rep.events
+    );
+    assert_eq!(rep.completed, rep.submitted, "accepted requests must survive the churn");
+}
