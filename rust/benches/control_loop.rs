@@ -1,13 +1,15 @@
-//! Bench: the adaptive control plane under a flash crowd — four arms over
-//! the same trace and the same per-replica capacity:
+//! Bench: the adaptive control plane under a flash crowd — five arms over
+//! the same trace and the same per-device capacity:
 //!
 //! * `static-1`   — fixed fleet at the initial size (the no-control-plane
 //!   baseline; sheds through the whole burst);
 //! * `static-max` — fixed fleet at the autoscaler's maximum (the
 //!   always-overprovisioned reference);
-//! * `autoscaled` — starts at 1 replica, hysteresis autoscaler reshapes;
-//! * `failure`    — starts at 2, one replica dies mid-burst, the
-//!   autoscaler re-absorbs the load from standby.
+//! * `autoscaled` — starts at 1 group, hysteresis autoscaler reshapes;
+//! * `failure`    — starts at 2, one group dies mid-burst, the
+//!   autoscaler re-absorbs the load from standby;
+//! * `chained-auto` — the replicated-chain shape: 2-stage chain groups,
+//!   the autoscaler adds/retires whole chains (2 devices at a time).
 //!
 //! The headline signal: the autoscaled arm must beat `static-1` on shed
 //! rate at comparable peak p99 (both arms bound p99 by the same queue
@@ -28,16 +30,19 @@ use fcmp::nn::{cnv, CnvVariant};
 use fcmp::util::args::Args;
 use fcmp::util::bench::Table;
 
-/// Per-item mock service time (µs): one replica sustains ~555 req/s, so
-/// the 250 req/s baseline fits one replica and the 6x burst needs ~3.
+/// Per-item mock service time (µs): one 1-stage group sustains ~555
+/// req/s, so the 250 req/s baseline fits one group and the 6x burst
+/// needs ~3 (a 2-stage chain group sustains ~1111 req/s, so the chained
+/// arm needs 2).
 const PER_ITEM_US: f64 = 1800.0;
 
 struct Cell {
     arm: &'static str,
     trace: &'static str,
-    replicas_init: usize,
-    replicas_peak: usize,
-    replicas_final: usize,
+    stages: usize,
+    groups_init: usize,
+    groups_peak: usize,
+    groups_final: usize,
     scale_outs: usize,
     scale_ins: usize,
     failures: usize,
@@ -57,8 +62,8 @@ fn specs(k: usize) -> Vec<ReplicaSpec> {
 
 fn scaler(max: usize) -> AutoscalerConfig {
     AutoscalerConfig {
-        min_replicas: 1,
-        max_replicas: max,
+        min_groups: 1,
+        max_groups: max,
         shed_out: 0.02,
         p99_out_ms: f64::INFINITY,
         util_in: 0.2,
@@ -67,18 +72,27 @@ fn scaler(max: usize) -> AutoscalerConfig {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_arm(
     arm: &'static str,
     trace: &Trace,
-    active: usize,
-    standby: usize,
+    stages: usize,
+    active_groups: usize,
+    standby_devices: usize,
     autoscale: Option<AutoscalerConfig>,
     failures: Vec<FailureEvent>,
 ) -> Cell {
     let net = cnv(CnvVariant::W1A1);
     let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
-    let mut fleet =
-        ControlledFleet::start(net, specs(active), specs(standby), PER_ITEM_US, batcher, 32);
+    let groups: Vec<Vec<ReplicaSpec>> = (0..active_groups).map(|_| specs(stages)).collect();
+    let mut fleet = ControlledFleet::start_chained(
+        net,
+        groups,
+        specs(standby_devices),
+        PER_ITEM_US,
+        batcher,
+        32,
+    );
     let cfg = LoopConfig {
         tick: Duration::from_millis(20),
         signal: SignalConfig { window_ticks: 2 },
@@ -98,9 +112,10 @@ fn run_arm(
     Cell {
         arm,
         trace: "flash",
-        replicas_init: rep.initial_replicas,
-        replicas_peak: rep.max_replicas_seen,
-        replicas_final: rep.final_replicas,
+        stages,
+        groups_init: rep.initial_groups,
+        groups_peak: rep.max_groups_seen,
+        groups_final: rep.final_groups,
         scale_outs: rep.scale_outs(),
         scale_ins: rep.scale_ins(),
         failures: rep.failures(),
@@ -122,15 +137,17 @@ fn cells_json(cells: &[Cell]) -> String {
             out.push(',');
         }
         out.push_str(&format!(
-            "{{\"arm\":{:?},\"trace\":{:?},\"replicas_init\":{},\"replicas_peak\":{},\
-             \"replicas_final\":{},\"scale_outs\":{},\"scale_ins\":{},\"failures\":{},\
-             \"offered_rps\":{:.1},\"submitted\":{},\"completed\":{},\"shed\":{},\
-             \"shed_rate\":{:.4},\"throughput_fps\":{:.1},\"p50_ms\":{:.3},\"p99_ms\":{:.3}}}",
+            "{{\"arm\":{:?},\"trace\":{:?},\"stages\":{},\"groups_init\":{},\
+             \"groups_peak\":{},\"groups_final\":{},\"scale_outs\":{},\"scale_ins\":{},\
+             \"failures\":{},\"offered_rps\":{:.1},\"submitted\":{},\"completed\":{},\
+             \"shed\":{},\"shed_rate\":{:.4},\"throughput_fps\":{:.1},\"p50_ms\":{:.3},\
+             \"p99_ms\":{:.3}}}",
             c.arm,
             c.trace,
-            c.replicas_init,
-            c.replicas_peak,
-            c.replicas_final,
+            c.stages,
+            c.groups_init,
+            c.groups_peak,
+            c.groups_final,
             c.scale_outs,
             c.scale_ins,
             c.failures,
@@ -157,31 +174,37 @@ fn main() {
     let kill_at = burst_start + 0.5 * burst_len;
 
     let cells = vec![
-        run_arm("static-1", &trace, 1, 0, None, vec![]),
-        run_arm("static-max", &trace, 4, 0, None, vec![]),
-        run_arm("autoscaled", &trace, 1, 3, Some(scaler(4)), vec![]),
+        run_arm("static-1", &trace, 1, 1, 0, None, vec![]),
+        run_arm("static-max", &trace, 1, 4, 0, None, vec![]),
+        run_arm("autoscaled", &trace, 1, 1, 3, Some(scaler(4)), vec![]),
         // scale-in disabled so the pre-burst lull cannot vacate the kill
         // target; the arm measures failure recovery, not the full cycle
         run_arm(
             "failure",
             &trace,
+            1,
             2,
             2,
             Some(AutoscalerConfig { util_in: 0.0, ..scaler(4) }),
-            vec![FailureEvent { at_s: kill_at, replica: 1 }],
+            vec![FailureEvent { at_s: kill_at, group: 1 }],
         ),
+        // replicated chains: 2-stage groups, whole-chain scaling (each
+        // decision moves 2 devices); a chain group is ~2x one replica's
+        // capacity, so the burst needs one extra group
+        run_arm("chained-auto", &trace, 2, 1, 2, Some(scaler(2)), vec![]),
     ];
 
     let mut t = Table::new([
-        "arm", "k init", "k peak", "k final", "out", "in", "fail", "offered", "completed",
-        "shed", "shed %", "fps", "p50 ms", "p99 ms",
+        "arm", "stages", "g init", "g peak", "g final", "out", "in", "fail", "offered",
+        "completed", "shed", "shed %", "fps", "p50 ms", "p99 ms",
     ]);
     for c in &cells {
         t.row([
             c.arm.to_string(),
-            format!("{}", c.replicas_init),
-            format!("{}", c.replicas_peak),
-            format!("{}", c.replicas_final),
+            format!("{}", c.stages),
+            format!("{}", c.groups_init),
+            format!("{}", c.groups_peak),
+            format!("{}", c.groups_final),
             format!("{}", c.scale_outs),
             format!("{}", c.scale_ins),
             format!("{}", c.failures),
@@ -194,7 +217,7 @@ fn main() {
             format!("{:.2}", c.p99_ms),
         ]);
     }
-    println!("== Control loop (flash crowd, mock fleet, {n} requests) ==");
+    println!("== Control loop (flash crowd, mock chain-group fleet, {n} requests) ==");
     println!("{}", t.render());
 
     // headline: autoscaling must beat the static baseline on shed rate —
@@ -208,8 +231,8 @@ fn main() {
         100.0 * auto.shed_rate,
         s1.p99_ms,
         auto.p99_ms,
-        auto.replicas_peak,
-        auto.replicas_final
+        auto.groups_peak,
+        auto.groups_final
     );
     if auto.shed >= s1.shed {
         eprintln!(
@@ -228,6 +251,19 @@ fn main() {
     let fail = find("failure");
     if fail.failures != 1 {
         eprintln!("WARNING failure arm fired {} failures, expected 1", fail.failures);
+    }
+    let chained = find("chained-auto");
+    println!(
+        "chained-auto: {} -> peak {} chain groups of {} stages, shed {:.1}%",
+        chained.groups_init,
+        chained.groups_peak,
+        chained.stages,
+        100.0 * chained.shed_rate
+    );
+    if chained.scale_outs == 0 {
+        eprintln!(
+            "WARNING chained-auto arm never added a chain group under the 6x burst"
+        );
     }
 
     if args.has_flag("json") {

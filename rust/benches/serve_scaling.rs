@@ -12,8 +12,8 @@ use std::path::Path;
 use std::time::Duration;
 
 use fcmp::coordinator::{
-    bursty, diurnal, heavy_tail, poisson, BatcherConfig, MockBackend, Policy, Server,
-    ServerConfig, Trace,
+    bursty, diurnal, heavy_tail, poisson, BatcherConfig, Deployment, MockBackend, Policy,
+    Server, Trace, WorkerId,
 };
 use fcmp::util::args::Args;
 use fcmp::util::bench::Table;
@@ -52,19 +52,17 @@ fn run_cell(
 ) -> Cell {
     let weights: Vec<f64> = (0..replicas).map(|i| SPEEDS[i % SPEEDS.len()]).collect();
     let policy = Policy::by_name(policy_name, weights.clone()).expect("policy name");
-    let cfg = ServerConfig {
-        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
-        queue_depth: 32,
-        replicas,
-        policy,
-    };
+    let plan = Deployment::replicated(replicas)
+        .with_policy(policy)
+        .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) })
+        .with_queue_depth(32);
     let svc: Vec<Duration> = weights
         .iter()
         .map(|w| Duration::from_secs_f64(PER_ITEM_US * 1e-6 / w))
         .collect();
-    let mut srv = Server::start(
-        move |i| MockBackend::with_service(Duration::ZERO, svc[i]),
-        cfg,
+    let mut srv = Server::deploy(
+        move |id: WorkerId| MockBackend::with_service(Duration::ZERO, svc[id.group]),
+        plan,
     );
     let fm = srv.replay(trace, 4, 7);
     srv.shutdown();

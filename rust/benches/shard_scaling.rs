@@ -1,10 +1,13 @@
-//! Bench: pipeline-parallel sharding scaling — shard count × device mix →
-//! analytic and simulated FPS, per-shard OCM pressure, link utilization,
-//! and partitioner wall time. Every cell partitions a network over a
-//! device list with per-shard FCMP packing (FFD engine: deterministic and
-//! fast, and the process-wide packing cache dedups repeated ranges), then
-//! validates the plan with the discrete-event staged-pipeline simulator
-//! and a diurnal stage-chain serving replay on calibrated mocks.
+//! Bench: pipeline-parallel sharding scaling — (shard count × device mix
+//! × chain-group replication) → analytic and simulated FPS, per-shard OCM
+//! pressure, link utilization, and partitioner wall time. Every cell
+//! partitions a network over a device list with per-shard FCMP packing
+//! (FFD engine: deterministic and fast, and the process-wide packing
+//! cache dedups repeated ranges), then validates the plan with the
+//! discrete-event staged-pipeline simulator and a diurnal serving replay
+//! of `chains` replicated copies of the stage chain on calibrated mocks —
+//! the replicated-chain rows are the throughput-beyond-one-pipeline
+//! signal, with the worst per-group e2e p99 reported alongside.
 //!
 //! Flags: `--smoke` shrinks frames/requests for CI; `--json` writes the
 //! cells to `BENCH_sharding.json` (the sharding perf-trajectory artifact).
@@ -13,7 +16,7 @@ use std::path::Path;
 use std::time::{Duration, Instant};
 
 use fcmp::coordinator::{
-    diurnal, shard_service_times, BatcherConfig, MockBackend, Policy, Server, ServerConfig,
+    diurnal, shard_service_times, BatcherConfig, Deployment, MockBackend, Server, WorkerId,
 };
 use fcmp::device;
 use fcmp::nn::{cnv, resnet50, CnvVariant, Network};
@@ -26,6 +29,7 @@ struct Cell {
     network: String,
     mix: String,
     shards: usize,
+    chains: usize,
     feasible: bool,
     analytic_fps: f64,
     sim_fps: f64,
@@ -34,14 +38,17 @@ struct Cell {
     max_link_pct: f64,
     partition_ms: f64,
     chain_p99_ms: f64,
+    group_p99_ms: f64,
+    chain_offered: usize,
     chain_completed: usize,
 }
 
-fn infeasible_cell(network: &str, mix: &str, shards: usize, elapsed_ms: f64) -> Cell {
+fn infeasible_cell(network: &str, mix: &str, shards: usize, chains: usize, elapsed_ms: f64) -> Cell {
     Cell {
         network: network.to_string(),
         mix: mix.to_string(),
         shards,
+        chains,
         feasible: false,
         analytic_fps: 0.0,
         sim_fps: 0.0,
@@ -50,40 +57,49 @@ fn infeasible_cell(network: &str, mix: &str, shards: usize, elapsed_ms: f64) -> 
         max_link_pct: 0.0,
         partition_ms: elapsed_ms,
         chain_p99_ms: 0.0,
+        group_p99_ms: 0.0,
+        chain_offered: 0,
         chain_completed: 0,
     }
 }
 
-/// Replay a diurnal trace through the plan's stage chain on mocks whose
-/// per-stage service equals the analytic shard intervals; returns
-/// (end-to-end p99 ms, completed requests).
-fn chain_replay(plan: &ShardPlan, requests: usize) -> (f64, usize) {
+/// Replay a diurnal trace through `chains` replicated copies of the
+/// plan's stage chain on mocks whose per-stage service equals the
+/// analytic shard intervals; returns (fleet e2e p99 ms, worst per-group
+/// e2e p99 ms, completed requests). The offered rate scales with the
+/// chain count, so the replicated rows demonstrate throughput beyond one
+/// pipeline at comparable latency.
+fn chain_replay(plan: &ShardPlan, requests: usize, chains: usize) -> (f64, f64, usize) {
     let svc = shard_service_times(plan);
     // keep mock sleeps sane on CI: cap per-stage service at 2 ms
     let svc: Vec<Duration> = svc.into_iter().map(|d| d.min(Duration::from_millis(2))).collect();
-    let cfg = ServerConfig {
-        batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
-        queue_depth: 32,
-        replicas: plan.shards.len(),
-        policy: Policy::StageChain,
-    };
+    let dep = Deployment::replicated_chains(chains, plan.shards.len())
+        .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) })
+        .with_queue_depth(32);
     let bottleneck = svc.iter().cloned().max().unwrap_or(Duration::from_micros(100));
-    let rate = (0.7 / bottleneck.as_secs_f64()).min(4000.0);
-    let mut srv = Server::start_chain(
-        move |i| MockBackend::with_service(Duration::ZERO, svc[i]),
-        cfg,
+    let rate = (0.7 * chains as f64 / bottleneck.as_secs_f64()).min(4000.0 * chains as f64);
+    let svc_backend = svc.clone();
+    let mut srv = Server::deploy(
+        move |id: WorkerId| MockBackend::with_service(Duration::ZERO, svc_backend[id.stage]),
+        dep,
     );
     let trace = diurnal(requests, (rate * 0.5).max(1.0), rate, 2.0, 42);
     let fm = srv.replay(&trace, 4, 42);
     srv.shutdown();
     let s = fm.summary();
+    let group_p99 = s
+        .per_group
+        .iter()
+        .flatten()
+        .map(|g| g.latency_ms.p99)
+        .fold(0.0f64, f64::max);
     match s.fleet {
-        Some(f) => (f.latency_ms.p99, f.requests),
-        None => (0.0, 0),
+        Some(f) => (f.latency_ms.p99, group_p99, f.requests),
+        None => (0.0, 0.0, 0),
     }
 }
 
-fn run_cell(net: &Network, mix: &str, frames: u64, requests: usize) -> Cell {
+fn run_cell(net: &Network, mix: &str, chains: usize, frames: u64, requests: usize) -> Cell {
     let devices: Vec<device::Device> =
         mix.split('+').map(|n| device::by_name(n).expect("device name")).collect();
     let cfg = PartitionConfig { generations: 0, ..PartitionConfig::default() };
@@ -91,15 +107,18 @@ fn run_cell(net: &Network, mix: &str, frames: u64, requests: usize) -> Cell {
     let plan = partition(net, &devices, cfg);
     let partition_ms = t0.elapsed().as_secs_f64() * 1e3;
     let plan = match plan {
-        Err(_) => return infeasible_cell(&net.name, mix, devices.len(), partition_ms),
+        Err(_) => return infeasible_cell(&net.name, mix, devices.len(), chains, partition_ms),
         Ok(p) => p,
     };
     let r = sim::simulate_sharded(net, &plan, frames, 8);
-    let (chain_p99_ms, chain_completed) = chain_replay(&plan, requests);
+    let chain_offered = requests * chains;
+    let (chain_p99_ms, group_p99_ms, chain_completed) =
+        chain_replay(&plan, chain_offered, chains);
     Cell {
         network: net.name.clone(),
         mix: mix.to_string(),
         shards: plan.shards.len(),
+        chains,
         feasible: true,
         analytic_fps: plan.fps,
         sim_fps: r.fps,
@@ -108,6 +127,8 @@ fn run_cell(net: &Network, mix: &str, frames: u64, requests: usize) -> Cell {
         max_link_pct: 100.0 * plan.link_utilization().into_iter().fold(0.0, f64::max),
         partition_ms,
         chain_p99_ms,
+        group_p99_ms,
+        chain_offered,
         chain_completed,
     }
 }
@@ -119,13 +140,15 @@ fn cells_json(cells: &[Cell]) -> String {
             out.push(',');
         }
         out.push_str(&format!(
-            "{{\"network\":{:?},\"mix\":{:?},\"shards\":{},\"feasible\":{},\
+            "{{\"network\":{:?},\"mix\":{:?},\"shards\":{},\"chains\":{},\"feasible\":{},\
              \"analytic_fps\":{:.1},\"sim_fps\":{:.1},\"vs_analytic\":{:.4},\
              \"max_ocm_pct\":{:.1},\"max_link_pct\":{:.1},\"partition_ms\":{:.3},\
-             \"chain_p99_ms\":{:.3},\"chain_completed\":{}}}",
+             \"chain_p99_ms\":{:.3},\"group_p99_ms\":{:.3},\"chain_offered\":{},\
+             \"chain_completed\":{}}}",
             c.network,
             c.mix,
             c.shards,
+            c.chains,
             c.feasible,
             c.analytic_fps,
             c.sim_fps,
@@ -134,6 +157,8 @@ fn cells_json(cells: &[Cell]) -> String {
             c.max_link_pct,
             c.partition_ms,
             c.chain_p99_ms,
+            c.group_p99_ms,
+            c.chain_offered,
             c.chain_completed
         ));
     }
@@ -149,27 +174,33 @@ fn main() {
 
     let cnv2 = cnv(CnvVariant::W2A2);
     let rn50 = resnet50(1);
-    let cases: Vec<(&Network, &str)> = vec![
-        (&cnv2, "7012s"),
-        (&cnv2, "7012s+7012s"),
-        (&cnv2, "7020+7012s"),
-        (&cnv2, "7012s+7012s+7012s"),
-        (&rn50, "u280"),
-        (&rn50, "u280+u280"),
-        (&rn50, "u250+u280"),
+    // (network, device mix, chain-group copies): chains > 1 rows serve N
+    // replicated copies of the partitioned chain behind one router
+    let cases: Vec<(&Network, &str, usize)> = vec![
+        (&cnv2, "7012s", 1),
+        (&cnv2, "7012s+7012s", 1),
+        (&cnv2, "7012s+7012s", 2),
+        (&cnv2, "7020+7012s", 1),
+        (&cnv2, "7012s+7012s+7012s", 1),
+        (&rn50, "u280", 1),
+        (&rn50, "u280+u280", 1),
+        (&rn50, "u250+u280", 1),
+        (&rn50, "u250+u280", 2),
     ];
 
     let mut cells = Vec::new();
     let mut t = Table::new([
-        "network", "mix", "k", "feasible", "analytic fps", "sim fps", "sim/analytic",
-        "max OCM %", "link %", "partition ms", "chain p99 ms",
+        "network", "mix", "k", "chains", "feasible", "analytic fps", "sim fps",
+        "sim/analytic", "max OCM %", "link %", "partition ms", "chain p99 ms",
+        "group p99 ms",
     ]);
-    for (net, mix) in cases {
-        let c = run_cell(net, mix, frames, requests);
+    for (net, mix, chains) in cases {
+        let c = run_cell(net, mix, chains, frames, requests);
         t.row([
             c.network.clone(),
             c.mix.clone(),
             format!("{}", c.shards),
+            format!("{}", c.chains),
             format!("{}", c.feasible),
             format!("{:.0}", c.analytic_fps),
             format!("{:.0}", c.sim_fps),
@@ -178,6 +209,7 @@ fn main() {
             format!("{:.0}", c.max_link_pct),
             format!("{:.1}", c.partition_ms),
             format!("{:.2}", c.chain_p99_ms),
+            format!("{:.2}", c.group_p99_ms),
         ]);
         cells.push(c);
     }
@@ -192,6 +224,37 @@ fn main() {
                  staged-pipeline model drift",
                 c.network, c.mix, c.sim_fps, c.analytic_fps, c.vs_analytic
             );
+        }
+    }
+    // replicated-chain signal: at fixed mix, the 2-chain cell is offered
+    // 2x the requests, so compare completion *rates* (completed/offered)
+    // — absolute counts would stay green even if the router pinned all
+    // traffic to one chain of the pair. Soft check (sleep-based mocks on
+    // shared CI runners).
+    for (a, b) in [("CNV-W2A2", "7012s+7012s"), ("RN50-W1", "u250+u280")] {
+        let one = cells.iter().find(|c| c.network.starts_with(a) && c.mix == b && c.chains == 1);
+        let two = cells.iter().find(|c| c.network.starts_with(a) && c.mix == b && c.chains == 2);
+        if let (Some(one), Some(two)) = (one, two) {
+            let rate = |c: &Cell| c.chain_completed as f64 / c.chain_offered.max(1) as f64;
+            println!(
+                "replicated chains {a}/{b}: completed {}/{} (1 chain) -> {}/{} (2 chains), \
+                 group p99 {:.2} -> {:.2} ms",
+                one.chain_completed,
+                one.chain_offered,
+                two.chain_completed,
+                two.chain_offered,
+                one.group_p99_ms,
+                two.group_p99_ms
+            );
+            if rate(two) + 0.02 < rate(one) {
+                eprintln!(
+                    "WARNING {a}/{b}: 2 chains completed {:.0}% of their 2x-offered trace \
+                     vs {:.0}% for 1 chain — replication is not holding the completion \
+                     rate (noisy runner, or a routing regression)",
+                    100.0 * rate(two),
+                    100.0 * rate(one)
+                );
+            }
         }
     }
 

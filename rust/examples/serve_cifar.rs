@@ -11,7 +11,7 @@
 //! Run: `cargo run --release --example serve_cifar -- [requests] [rate]
 //! [replicas]` (from `rust/`; the artifacts/ directory must exist).
 
-use fcmp::coordinator::{poisson, BatcherConfig, Policy, Server, ServerConfig};
+use fcmp::coordinator::{poisson, BatcherConfig, Deployment, Policy, Server};
 use fcmp::runtime::Engine;
 use std::path::Path;
 use std::time::Duration;
@@ -35,16 +35,15 @@ fn main() -> anyhow::Result<()> {
     drop(probe);
 
     // the replicas all load the same artifact, so join-shortest-queue keeps
-    // the homogeneous fleet balanced without capacity estimates
-    let cfg = ServerConfig {
-        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(3) },
-        queue_depth: 256,
-        replicas,
-        policy: Policy::JoinShortestQueue,
-    };
-    let mut srv = Server::start(
-        |_i| Engine::load(Path::new("artifacts"), "cnv_w1a1").expect("engine"),
-        cfg,
+    // the homogeneous fleet balanced without capacity estimates; the flat
+    // fleet is the N x 1 case of the Deployment topology
+    let plan = Deployment::replicated(replicas)
+        .with_policy(Policy::JoinShortestQueue)
+        .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(3) })
+        .with_queue_depth(256);
+    let mut srv = Server::deploy(
+        |_id| Engine::load(Path::new("artifacts"), "cnv_w1a1").expect("engine"),
+        plan,
     );
 
     // open-loop Poisson arrivals at `rate` req/s (synthetic CIFAR-10 images)

@@ -1,55 +1,57 @@
-//! Hysteresis-banded replica autoscaler.
+//! Hysteresis-banded chain-group autoscaler.
 //!
-//! The policy is deliberately asymmetric, which is where the hysteresis
-//! band comes from: **scale out** fires on distress (windowed shed rate
-//! above [`AutoscalerConfig::shed_out`], or windowed p99 above
-//! [`AutoscalerConfig::p99_out_ms`]), while **scale in** requires the
-//! fleet to be *provably* idle — zero sheds in the window, every
-//! replica's utilization under [`AutoscalerConfig::util_in`], and p99
-//! comfortably inside budget. Between the two thresholds the controller
-//! holds, so a fleet hovering near capacity never flaps. A cooldown of
-//! [`AutoscalerConfig::cooldown_ticks`] after every action gives each
-//! decision one reconfiguration's worth of signal before the next —
-//! without it, the window still reflecting pre-scale sheds would trigger
-//! a second scale-out immediately.
+//! The unit of scaling is a whole **chain group** of the
+//! [`crate::coordinator::Deployment`] topology (a k-stage pipeline; a
+//! plain replica is the k=1 case). The policy is deliberately asymmetric,
+//! which is where the hysteresis band comes from: **scale out** fires on
+//! distress (windowed shed rate above [`AutoscalerConfig::shed_out`], or
+//! windowed p99 above [`AutoscalerConfig::p99_out_ms`]), while **scale
+//! in** requires the fleet to be *provably* idle — zero sheds in the
+//! window, every worker's utilization under [`AutoscalerConfig::util_in`],
+//! and p99 comfortably inside budget. Between the two thresholds the
+//! controller holds, so a fleet hovering near capacity never flaps. A
+//! cooldown of [`AutoscalerConfig::cooldown_ticks`] after every action
+//! gives each decision one reconfiguration's worth of signal before the
+//! next — without it, the window still reflecting pre-scale sheds would
+//! trigger a second scale-out immediately.
 //!
-//! Placement is capacity-aware via [`rank_by_capacity`]: scale-out takes
-//! the fastest standby device first (analytic FPS from
-//! [`crate::coordinator::capacity`]), scale-in retires the slowest active
-//! replica first.
+//! Placement is capacity-aware via [`rank_by_capacity`]: a scale-out
+//! builds its new group from the fastest standby devices first (analytic
+//! FPS from [`crate::coordinator::capacity`]), a scale-in retires the
+//! slowest active group first.
 
 use crate::coordinator::{replica_fps, ReplicaSpec};
 use crate::nn::Network;
 
 use super::signal::ControlSignals;
 
-/// Autoscaler thresholds and bounds.
+/// Autoscaler thresholds and bounds (in chain groups).
 #[derive(Clone, Copy, Debug)]
 pub struct AutoscalerConfig {
-    /// Never scale below this many replicas.
-    pub min_replicas: usize,
-    /// Never scale above this many replicas (also bounded by the standby
-    /// device pool).
-    pub max_replicas: usize,
+    /// Never scale below this many chain groups.
+    pub min_groups: usize,
+    /// Never scale above this many chain groups (also bounded by the
+    /// standby device pool — a group needs `stages` devices).
+    pub max_groups: usize,
     /// Scale out when the windowed shed rate exceeds this.
     pub shed_out: f64,
     /// Scale out when the windowed p99 (ms) exceeds this
     /// (`f64::INFINITY` disables the latency trigger).
     pub p99_out_ms: f64,
-    /// Scale in only when every replica's windowed utilization is below
+    /// Scale in only when every worker's windowed utilization is below
     /// this (and the window saw zero sheds).
     pub util_in: f64,
     /// Ticks to hold after any scale action before deciding again.
     pub cooldown_ticks: usize,
-    /// Replicas added/removed per decision.
+    /// Chain groups added/removed per decision.
     pub step: usize,
 }
 
 impl Default for AutoscalerConfig {
     fn default() -> Self {
         AutoscalerConfig {
-            min_replicas: 1,
-            max_replicas: 8,
+            min_groups: 1,
+            max_groups: 8,
             shed_out: 0.02,
             p99_out_ms: f64::INFINITY,
             util_in: 0.25,
@@ -59,14 +61,14 @@ impl Default for AutoscalerConfig {
     }
 }
 
-/// One autoscaling decision, as a replica-count delta.
+/// One autoscaling decision, as a chain-group-count delta.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScaleDecision {
     /// No change this tick.
     Hold,
-    /// Add this many replicas.
+    /// Add this many chain groups.
     Out(usize),
-    /// Remove this many replicas.
+    /// Remove this many chain groups.
     In(usize),
 }
 
@@ -90,10 +92,10 @@ impl Autoscaler {
     }
 
     /// Decide for the tick that produced `signals`, with `current` active
-    /// replicas. Pure function of the observed signal sequence (plus the
-    /// cooldown clock), so the control loop is replayable. The cooldown
-    /// clock only advances via [`Autoscaler::note_action`], which the
-    /// driver calls when a decision *actually* reshaped the fleet — a
+    /// chain groups. Pure function of the observed signal sequence (plus
+    /// the cooldown clock), so the control loop is replayable. The
+    /// cooldown clock only advances via [`Autoscaler::note_action`], which
+    /// the driver calls when a decision *actually* reshaped the fleet — a
     /// decision that no-ops (standby pool exhausted) must not burn the
     /// cooldown, or a later legitimate action would be delayed for no
     /// journaled reason.
@@ -108,8 +110,8 @@ impl Autoscaler {
         }
         let overloaded = signals.shed_rate > self.cfg.shed_out
             || signals.p99_ms.map_or(false, |p| p > self.cfg.p99_out_ms);
-        if overloaded && current < self.cfg.max_replicas {
-            let step = self.cfg.step.max(1).min(self.cfg.max_replicas - current);
+        if overloaded && current < self.cfg.max_groups {
+            let step = self.cfg.step.max(1).min(self.cfg.max_groups - current);
             return ScaleDecision::Out(step);
         }
         // the scale-in side of the hysteresis band: provably idle only —
@@ -119,8 +121,8 @@ impl Autoscaler {
             && signals.shed == 0
             && signals.max_utilization < self.cfg.util_in
             && signals.p99_ms.map_or(true, |p| p < 0.5 * self.cfg.p99_out_ms);
-        if idle && current > self.cfg.min_replicas {
-            let step = self.cfg.step.max(1).min(current - self.cfg.min_replicas);
+        if idle && current > self.cfg.min_groups {
+            let step = self.cfg.step.max(1).min(current - self.cfg.min_groups);
             return ScaleDecision::In(step);
         }
         ScaleDecision::Hold
@@ -136,8 +138,8 @@ impl Autoscaler {
 /// Capacity-aware placement order: indices of `pool` sorted fastest-first
 /// by analytic throughput of `net` at each spec (ties break toward the
 /// lower index, so the order — and with it every scale decision — is
-/// deterministic). Scale-out consumes this order from the front; scale-in
-/// retires from the back.
+/// deterministic). Scale-out consumes this order from the front to staff
+/// a new chain group; scale-in retires groups from the slow end.
 pub fn rank_by_capacity(net: &Network, pool: &[ReplicaSpec]) -> Vec<usize> {
     let fps: Vec<f64> = pool.iter().map(|s| replica_fps(net, s)).collect();
     let mut idx: Vec<usize> = (0..pool.len()).collect();
@@ -173,8 +175,8 @@ mod tests {
 
     fn cfg() -> AutoscalerConfig {
         AutoscalerConfig {
-            min_replicas: 1,
-            max_replicas: 4,
+            min_groups: 1,
+            max_groups: 4,
             shed_out: 0.05,
             p99_out_ms: 100.0,
             util_in: 0.25,

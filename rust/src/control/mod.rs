@@ -2,10 +2,12 @@
 //! fleet metrics and fleet shape.
 //!
 //! Everything below the coordinator picks a *static* design point — an
-//! FCMP packing, a shard plan, a replica count. Production load is not
-//! static: it drifts (diurnal), steps (flash crowds) and breaks (device
-//! loss). The control plane re-picks the deployed point at runtime,
-//! deterministically, on a fixed tick:
+//! FCMP packing, a shard plan, a deployment topology. Production load is
+//! not static: it drifts (diurnal), steps (flash crowds) and breaks
+//! (device loss). The control plane re-picks the deployed point at
+//! runtime, deterministically, on a fixed tick — and it works in units of
+//! whole **chain groups** of the [`Deployment`] topology, never lone
+//! mid-chain workers:
 //!
 //! ```text
 //!   Server / FleetMetrics                 (observe)
@@ -14,12 +16,16 @@
 //!   signal::SignalTap ── windowed shed rate, p99, utilization
 //!        │                               (decide, once per tick)
 //!        ├─> autoscaler::Autoscaler ── hysteresis-banded Out/In/Hold
-//!        ├─> slo::SloController ────── batching-window MIMD vs p99 budget
+//!        │                             (adds / retires chain groups)
+//!        ├─> slo::SloController ────── batching-window MIMD vs p99
+//!        │                             budget, co-tuned per chain group
 //!        └─> repair::replan ────────── re-partition on device loss
 //!        │                               (actuate)
-//!        ├─> ControlledFleet::scale_out/in  → Server::reconfigure
+//!        ├─> ControlledFleet::scale_out/in  → Server::apply (group diff:
+//!        │                                    untouched groups keep
+//!        │                                    serving through the swap)
 //!        ├─> Server::set_batcher            (live, no drain)
-//!        └─> repair::splice_mock_chain      → Server::reconfigure_chain
+//!        └─> repair::splice_mock_chain      → Server::apply
 //! ```
 //!
 //! [`run_loop`] is the driver: it replays an arrival trace open-loop
@@ -27,7 +33,10 @@
 //! tick on its own cadence, applying a failure-injection schedule, and
 //! journaling every decision as a [`ControlEvent`]. All controllers are
 //! pure functions of the observed signal sequence, so a run is replayable
-//! and the tests can assert on decisions, not just outcomes.
+//! and the tests can assert on decisions, not just outcomes. The journal
+//! itself persists to disk ([`save_events`] / [`load_events`]) in the
+//! same text convention as [`Trace::save`], so a fleet's scaling history
+//! replays alongside its arrival trace (`fcmp autoscale --events-out`).
 //!
 //! Surfaces: `fcmp autoscale` (CLI), `benches/control_loop.rs`
 //! (`BENCH_control.json`), `tests/control.rs` (acceptance).
@@ -42,24 +51,26 @@ pub use repair::{replan, splice_mock_chain, RepairOutcome};
 pub use signal::{ControlSignals, SignalConfig, SignalTap};
 pub use slo::{co_tune_chain, SloConfig, SloController};
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    fleet_weights, replica_fps, BatcherConfig, FleetMetrics, FleetSummary, MockBackend,
-    Policy, ReplicaSpec, Server, ServerConfig, SubmitError, Trace,
+    chain_fps, group_weights, mock_chain_service, replica_fps, BatcherConfig, ChainGroup,
+    Deployment, FleetMetrics, FleetSummary, MockBackend, Policy, ReplicaSpec, Server,
+    SubmitError, Trace, WorkerId,
 };
 use crate::nn::Network;
 use crate::util::rng::Rng;
 
-/// One scheduled device loss: at `at_s` seconds into the run, active
-/// replica `replica` dies (it leaves the fleet entirely — a dead device
-/// does not return to standby).
+/// One scheduled device loss: at `at_s` seconds into the run, the whole
+/// active chain group `group` dies (its devices leave the fleet entirely —
+/// a dead group does not return to standby).
 #[derive(Clone, Copy, Debug)]
 pub struct FailureEvent {
     /// Seconds from the start of the replay.
     pub at_s: f64,
-    /// Index into the active replica list at firing time.
-    pub replica: usize,
+    /// Index into the active chain-group list at firing time.
+    pub group: usize,
 }
 
 /// Driver-loop configuration.
@@ -100,67 +111,170 @@ impl Default for LoopConfig {
     }
 }
 
-/// One journaled control-plane decision.
-#[derive(Clone, Debug)]
-pub enum ControlEvent {
-    /// The autoscaler grew the fleet from `from` to `to` replicas.
+/// One journaled control-plane decision: when it fired (control tick and
+/// wall-clock seconds into the run, so the journal aligns with the
+/// arrival trace's time base) and what it did.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ControlEvent {
+    /// Control tick the decision fired on.
+    pub tick: usize,
+    /// Seconds from the start of the replay.
+    pub at_s: f64,
+    /// The decision itself.
+    pub kind: ControlEventKind,
+}
+
+/// What a [`ControlEvent`] did.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ControlEventKind {
+    /// The autoscaler grew the fleet from `from` to `to` chain groups.
     ScaleOut {
-        /// Tick the decision fired on.
-        tick: usize,
-        /// Replicas before.
+        /// Chain groups before.
         from: usize,
-        /// Replicas after.
+        /// Chain groups after.
         to: usize,
     },
-    /// The autoscaler shrank the fleet from `from` to `to` replicas.
+    /// The autoscaler shrank the fleet from `from` to `to` chain groups.
     ScaleIn {
-        /// Tick the decision fired on.
-        tick: usize,
-        /// Replicas before.
+        /// Chain groups before.
         from: usize,
-        /// Replicas after.
+        /// Chain groups after.
         to: usize,
     },
-    /// The SLO controller retuned a replica's batcher.
+    /// The SLO controller retuned one stage's batcher.
     SloAdjust {
-        /// Tick the adjustment fired on.
-        tick: usize,
-        /// Replica retuned.
-        replica: usize,
+        /// Chain group retuned.
+        group: usize,
+        /// Stage within the group.
+        stage: usize,
         /// New batch-size cap.
         max_batch: usize,
         /// New batching window.
         max_wait: Duration,
     },
-    /// A scheduled device loss fired.
+    /// A scheduled group loss fired.
     Failure {
-        /// Tick count when the failure fired.
-        tick: usize,
-        /// Active index of the victim at firing time.
-        replica: usize,
-        /// Replicas remaining after the loss.
+        /// Active index of the victim group at firing time.
+        group: usize,
+        /// Chain groups remaining after the loss.
         survivors: usize,
     },
 }
 
 impl std::fmt::Display for ControlEvent {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            ControlEvent::ScaleOut { tick, from, to } => {
-                write!(f, "tick {tick}: scale-out {from} -> {to} replicas")
+        match &self.kind {
+            ControlEventKind::ScaleOut { from, to } => {
+                write!(f, "tick {}: scale-out {from} -> {to} chain groups", self.tick)
             }
-            ControlEvent::ScaleIn { tick, from, to } => {
-                write!(f, "tick {tick}: scale-in {from} -> {to} replicas")
+            ControlEventKind::ScaleIn { from, to } => {
+                write!(f, "tick {}: scale-in {from} -> {to} chain groups", self.tick)
             }
-            ControlEvent::SloAdjust { tick, replica, max_batch, max_wait } => write!(
+            ControlEventKind::SloAdjust { group, stage, max_batch, max_wait } => write!(
                 f,
-                "tick {tick}: slo-adjust replica {replica}: batch {max_batch}, wait {max_wait:?}"
+                "tick {}: slo-adjust g{group}.s{stage}: batch {max_batch}, wait {max_wait:?}",
+                self.tick
             ),
-            ControlEvent::Failure { tick, replica, survivors } => {
-                write!(f, "tick {tick}: FAILURE replica {replica} ({survivors} survive)")
+            ControlEventKind::Failure { group, survivors } => {
+                write!(f, "tick {}: FAILURE group {group} ({survivors} survive)", self.tick)
             }
         }
     }
+}
+
+/// Write a control-event journal as `fcmp-events v1`: a comment header
+/// followed by one event per line (`at_s tick kind args…`), the same
+/// text-file convention as [`Trace::save`] — so a run's scaling history
+/// is archived next to its arrival trace and replays with it.
+pub fn save_events(events: &[ControlEvent], path: &Path) -> crate::Result<()> {
+    let mut out = String::with_capacity(events.len() * 40 + 32);
+    out.push_str("# fcmp-events v1\n");
+    for e in events {
+        match &e.kind {
+            ControlEventKind::ScaleOut { from, to } => {
+                out.push_str(&format!("{:.6} {} scale-out {from} {to}\n", e.at_s, e.tick));
+            }
+            ControlEventKind::ScaleIn { from, to } => {
+                out.push_str(&format!("{:.6} {} scale-in {from} {to}\n", e.at_s, e.tick));
+            }
+            ControlEventKind::SloAdjust { group, stage, max_batch, max_wait } => {
+                // nanoseconds: co-tuned windows derived from analytic
+                // service intervals carry sub-microsecond components, and
+                // the journal must round-trip them exactly
+                out.push_str(&format!(
+                    "{:.6} {} slo-adjust {group} {stage} {max_batch} {}\n",
+                    e.at_s,
+                    e.tick,
+                    max_wait.as_nanos()
+                ));
+            }
+            ControlEventKind::Failure { group, survivors } => {
+                out.push_str(&format!(
+                    "{:.6} {} failure {group} {survivors}\n",
+                    e.at_s, e.tick
+                ));
+            }
+        }
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Read a journal written by [`save_events`] (`#` comments and blank
+/// lines are ignored). Events must carry finite, non-negative times.
+pub fn load_events(path: &Path) -> crate::Result<Vec<ControlEvent>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let bad =
+            || anyhow::anyhow!("{}:{}: malformed control event {line:?}", path.display(), ln + 1);
+        if toks.len() < 3 {
+            return Err(bad());
+        }
+        let at_s: f64 = toks[0].parse().map_err(|_| bad())?;
+        anyhow::ensure!(
+            at_s.is_finite() && at_s >= 0.0,
+            "{}:{}: event time must be finite and non-negative",
+            path.display(),
+            ln + 1
+        );
+        let tick: usize = toks[1].parse().map_err(|_| bad())?;
+        let num = |i: usize| -> crate::Result<usize> {
+            toks.get(i).and_then(|s| s.parse().ok()).ok_or_else(|| bad())
+        };
+        let (kind, want) = match toks[2] {
+            "scale-out" => {
+                (ControlEventKind::ScaleOut { from: num(3)?, to: num(4)? }, 5)
+            }
+            "scale-in" => (ControlEventKind::ScaleIn { from: num(3)?, to: num(4)? }, 5),
+            "slo-adjust" => (
+                ControlEventKind::SloAdjust {
+                    group: num(3)?,
+                    stage: num(4)?,
+                    max_batch: num(5)?,
+                    max_wait: Duration::from_nanos(num(6)? as u64),
+                },
+                7,
+            ),
+            "failure" => {
+                (ControlEventKind::Failure { group: num(3)?, survivors: num(4)? }, 5)
+            }
+            _ => return Err(bad()),
+        };
+        anyhow::ensure!(
+            toks.len() == want,
+            "{}:{}: trailing fields in control event",
+            path.display(),
+            ln + 1
+        );
+        out.push(ControlEvent { tick, at_s, kind });
+    }
+    Ok(out)
 }
 
 /// Result of one controlled replay.
@@ -172,12 +286,12 @@ pub struct ControlReport {
     pub events: Vec<ControlEvent>,
     /// Control ticks fired.
     pub ticks: usize,
-    /// Replicas at the start.
-    pub initial_replicas: usize,
-    /// Replicas at the end.
-    pub final_replicas: usize,
-    /// Largest fleet the run reached.
-    pub max_replicas_seen: usize,
+    /// Chain groups at the start.
+    pub initial_groups: usize,
+    /// Chain groups at the end.
+    pub final_groups: usize,
+    /// Largest fleet (in chain groups) the run reached.
+    pub max_groups_seen: usize,
     /// Requests accepted.
     pub submitted: usize,
     /// Requests shed by admission control.
@@ -189,17 +303,26 @@ pub struct ControlReport {
 impl ControlReport {
     /// Scale-out decisions that took effect.
     pub fn scale_outs(&self) -> usize {
-        self.events.iter().filter(|e| matches!(e, ControlEvent::ScaleOut { .. })).count()
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, ControlEventKind::ScaleOut { .. }))
+            .count()
     }
 
     /// Scale-in decisions that took effect.
     pub fn scale_ins(&self) -> usize {
-        self.events.iter().filter(|e| matches!(e, ControlEvent::ScaleIn { .. })).count()
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, ControlEventKind::ScaleIn { .. }))
+            .count()
     }
 
     /// Failures that fired.
     pub fn failures(&self) -> usize {
-        self.events.iter().filter(|e| matches!(e, ControlEvent::Failure { .. })).count()
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, ControlEventKind::Failure { .. }))
+            .count()
     }
 
     /// Overall shed rate: `shed / (submitted + shed)` (0 when idle).
@@ -217,9 +340,9 @@ impl ControlReport {
     pub fn scale_ticks(&self) -> Vec<usize> {
         self.events
             .iter()
-            .filter_map(|e| match e {
-                ControlEvent::ScaleOut { tick, .. } | ControlEvent::ScaleIn { tick, .. } => {
-                    Some(*tick)
+            .filter_map(|e| match e.kind {
+                ControlEventKind::ScaleOut { .. } | ControlEventKind::ScaleIn { .. } => {
+                    Some(e.tick)
                 }
                 _ => None,
             })
@@ -227,37 +350,89 @@ impl ControlReport {
     }
 }
 
-/// A mock-backed replicated fleet the control plane can reshape: a
-/// [`Server`] plus the [`ReplicaSpec`]s behind it (active) and the device
-/// pool scale-out can draw from (standby).
+/// One active chain group of a [`ControlledFleet`]: its diffing tag (the
+/// identity [`Server::apply`] keeps it running under), the device spec
+/// behind each stage, and the per-stage mock service intervals cached at
+/// creation (they depend only on the specs and the fleet's calibration,
+/// so the control tick never re-runs the analytic models for a group
+/// that did not change).
+struct FleetGroup {
+    tag: String,
+    specs: Vec<ReplicaSpec>,
+    service: Vec<Duration>,
+    /// The SLO controller's MIMD state for this group. Chain co-tuning
+    /// overwrites the *actuated* per-stage settings every tick (the
+    /// bottleneck stage is pinned greedy), so the adaptation must walk a
+    /// base kept apart from them — reading stage 0's live config back
+    /// would collapse every stage toward the bottleneck's batch-1 value.
+    slo_base: BatcherConfig,
+}
+
+/// A mock-backed fleet of chain groups the control plane can reshape: a
+/// [`Server`] running a real [`Deployment`] plus the [`ReplicaSpec`]s
+/// behind each group (active) and the device pool scale-out draws from
+/// (standby). Every group is `stages` deep; scaling works in whole
+/// groups, consuming or releasing `stages` devices at a time — the
+/// control plane never creates a partial chain.
 ///
-/// Per-replica mock service times derive from the analytic capacity model
+/// Per-stage mock service times derive from the analytic capacity model
 /// ([`replica_fps`]): the fastest device in the initial pool serves one
-/// item in `service_us` microseconds and every other device scales up by
-/// its FPS ratio, so the fleet's heterogeneity — and every capacity-aware
-/// placement decision — is observable without hardware. The router policy
-/// is capacity-weighted ([`Policy::Weighted`]) and re-derived on every
-/// reshape.
+/// item in `service_us` microseconds, every other device scales up by its
+/// FPS ratio, and a `k`-stage chain splits its device's service across
+/// the stages — so the fleet's heterogeneity, the chain pipelining win,
+/// and every capacity-aware placement decision are observable without
+/// hardware. The router policy is capacity-weighted ([`Policy::Weighted`]
+/// over per-group [`chain_fps`]) and re-derived on every reshape.
+/// Actuation is [`Server::apply`]: groups untouched by a decision keep
+/// serving straight through it (tag-matched in the diff), so a scale-out
+/// no longer drains the whole fleet.
 pub struct ControlledFleet {
     net: Network,
     service_us: f64,
     ref_fps: f64,
     batcher: BatcherConfig,
     queue_depth: usize,
-    active: Vec<ReplicaSpec>,
+    stages: usize,
+    active: Vec<FleetGroup>,
     standby: Vec<ReplicaSpec>,
+    next_uid: u64,
     srv: Server,
 }
 
-fn service_time(net: &Network, spec: &ReplicaSpec, service_us: f64, ref_fps: f64) -> Duration {
-    let fps = replica_fps(net, spec).max(1e-9);
-    Duration::from_secs_f64(service_us * 1e-6 * ref_fps / fps)
+/// The deployment (and the per-group service snapshot its backends need)
+/// describing `active` as it stands — the one derivation shared by the
+/// initial [`Server::deploy`] and every [`Server::apply`] reshape, so the
+/// two can never disagree on tags, weights or batching defaults.
+fn fleet_plan(
+    active: &[FleetGroup],
+    stages: usize,
+    batcher: BatcherConfig,
+    queue_depth: usize,
+) -> (Vec<Vec<Duration>>, Deployment) {
+    let svc: Vec<Vec<Duration>> = active.iter().map(|g| g.service.clone()).collect();
+    let plan = Deployment {
+        groups: active.iter().map(|g| ChainGroup::tagged(stages, g.tag.clone())).collect(),
+        batcher,
+        queue_depth,
+        policy: Policy::Weighted(group_weights(
+            &svc.iter().map(|s| chain_fps(s)).collect::<Vec<f64>>(),
+        )),
+    };
+    (svc, plan)
+}
+
+/// The mock backend factory for a service snapshot from [`fleet_plan`].
+fn mock_factory(
+    svc: Vec<Vec<Duration>>,
+) -> impl Fn(WorkerId) -> MockBackend + Send + Sync + 'static {
+    move |id| MockBackend::with_service(Duration::ZERO, svc[id.group][id.stage])
 }
 
 impl ControlledFleet {
-    /// Start a fleet of `active` replicas with `standby` devices held for
-    /// scale-out. `service_us` is the per-item mock service time of the
-    /// fastest device anywhere in the pool.
+    /// Start a flat fleet: every entry of `active` becomes a 1-stage
+    /// chain group, with `standby` devices held for scale-out.
+    /// `service_us` is the per-item mock service time of the fastest
+    /// device anywhere in the pool.
     pub fn start(
         net: Network,
         active: Vec<ReplicaSpec>,
@@ -266,39 +441,74 @@ impl ControlledFleet {
         batcher: BatcherConfig,
         queue_depth: usize,
     ) -> ControlledFleet {
-        assert!(!active.is_empty(), "a controlled fleet needs at least one active replica");
-        let ref_fps = active
+        let groups = active.into_iter().map(|s| vec![s]).collect();
+        Self::start_chained(net, groups, standby, service_us, batcher, queue_depth)
+    }
+
+    /// Start a fleet of chain groups: `groups[g]` lists the device spec
+    /// behind each stage of group `g` (all groups must share one depth —
+    /// the shape scaling preserves). `standby` devices are consumed
+    /// `stages` at a time when the autoscaler adds a group.
+    pub fn start_chained(
+        net: Network,
+        groups: Vec<Vec<ReplicaSpec>>,
+        standby: Vec<ReplicaSpec>,
+        service_us: f64,
+        batcher: BatcherConfig,
+        queue_depth: usize,
+    ) -> ControlledFleet {
+        assert!(!groups.is_empty(), "a controlled fleet needs at least one chain group");
+        let stages = groups[0].len().max(1);
+        assert!(
+            groups.iter().all(|g| g.len() == stages),
+            "every chain group must have the same stage count"
+        );
+        let ref_fps = groups
             .iter()
+            .flatten()
             .chain(standby.iter())
             .map(|s| replica_fps(&net, s))
             .fold(0.0f64, f64::max)
             .max(1e-9);
-        let weights = fleet_weights(&net, &active);
-        let svc: Vec<Duration> =
-            active.iter().map(|s| service_time(&net, s, service_us, ref_fps)).collect();
-        let cfg = ServerConfig {
-            batcher,
-            queue_depth,
-            replicas: active.len(),
-            policy: Policy::Weighted(weights),
-        };
-        let srv =
-            Server::start(move |i| MockBackend::with_service(Duration::ZERO, svc[i]), cfg);
+        let mut next_uid = 0u64;
+        let active: Vec<FleetGroup> = groups
+            .into_iter()
+            .map(|specs| {
+                let tag = format!("cg{next_uid}");
+                next_uid += 1;
+                let service = mock_chain_service(&net, &specs, service_us, ref_fps);
+                FleetGroup { tag, specs, service, slo_base: batcher }
+            })
+            .collect();
+        let (svc, plan) = fleet_plan(&active, stages, batcher, queue_depth);
+        let srv = Server::deploy(mock_factory(svc), plan);
         ControlledFleet {
             net,
             service_us,
             ref_fps,
             batcher,
             queue_depth,
+            stages,
             active,
             standby,
+            next_uid,
             srv,
         }
     }
 
-    /// Active replica count.
-    pub fn replicas(&self) -> usize {
+    /// Active chain-group count.
+    pub fn group_count(&self) -> usize {
         self.active.len()
+    }
+
+    /// Stage depth every group runs at.
+    pub fn stages(&self) -> usize {
+        self.stages
+    }
+
+    /// Devices currently serving (`group_count × stages`).
+    pub fn device_count(&self) -> usize {
+        self.active.len() * self.stages
     }
 
     /// Devices still available for scale-out.
@@ -306,9 +516,16 @@ impl ControlledFleet {
         self.standby.len()
     }
 
-    /// The active replica specs, in router order.
-    pub fn active_specs(&self) -> &[ReplicaSpec] {
-        &self.active
+    /// The device specs behind group `g`'s stages, in stage order.
+    pub fn group_specs(&self, g: usize) -> &[ReplicaSpec] {
+        &self.active[g].specs
+    }
+
+    /// Per-stage analytic mock service intervals of group `g` (the
+    /// co-tuning input for [`SloController::co_tune_chain`]), cached at
+    /// group creation.
+    pub fn group_service(&self, g: usize) -> &[Duration] {
+        &self.active[g].service
     }
 
     /// The underlying server (submit/drain directly, e.g. from tests).
@@ -321,119 +538,144 @@ impl ControlledFleet {
         self.srv.shutdown();
     }
 
-    /// Drain-and-swap the server onto the current active specs.
-    fn respawn(&mut self) -> crate::Result<()> {
-        let weights = fleet_weights(&self.net, &self.active);
-        let svc: Vec<Duration> = self
-            .active
-            .iter()
-            .map(|s| service_time(&self.net, s, self.service_us, self.ref_fps))
-            .collect();
-        let cfg = ServerConfig {
-            batcher: self.batcher,
-            queue_depth: self.queue_depth,
-            replicas: self.active.len().max(1),
-            policy: Policy::Weighted(weights),
-        };
-        self.srv
-            .reconfigure(move |i| MockBackend::with_service(Duration::ZERO, svc[i]), cfg)
+    /// Per-group metrics shape covering the largest fleet this run could
+    /// reach (current groups plus every whole group the standby pool
+    /// could still fund) — size [`FleetMetrics::new`] with this so
+    /// completions from scaled-out groups land in real collectors.
+    pub fn metrics_shape(&self) -> Vec<usize> {
+        let max_groups = self.active.len() + self.standby.len() / self.stages;
+        vec![self.stages; max_groups.max(1)]
     }
 
-    /// Scale out by up to `want` replicas, capacity-aware: the fastest
-    /// standby devices join first. Returns how many actually joined
-    /// (bounded by the standby pool).
+    /// Re-derive the deployment from the active groups and diff it onto
+    /// the server. Groups whose tag survived keep serving untouched.
+    fn apply_plan(&mut self) -> crate::Result<()> {
+        let (svc, plan) = fleet_plan(&self.active, self.stages, self.batcher, self.queue_depth);
+        self.srv.apply(mock_factory(svc), plan)
+    }
+
+    /// Scale out by up to `want` whole chain groups, capacity-aware: each
+    /// new group takes the `stages` fastest devices remaining in standby.
+    /// Returns how many groups actually joined (bounded by the standby
+    /// pool — a pool with fewer than `stages` devices left cannot fund a
+    /// partial group).
     pub fn scale_out(&mut self, want: usize) -> crate::Result<usize> {
-        if want == 0 || self.standby.is_empty() {
+        let fundable = (self.standby.len() / self.stages).min(want);
+        if fundable == 0 {
             return Ok(0);
         }
-        let mut picks: Vec<usize> =
-            rank_by_capacity(&self.net, &self.standby).into_iter().take(want).collect();
-        let added = picks.len();
-        picks.sort_unstable_by(|a, b| b.cmp(a)); // remove back-to-front
-        for i in picks {
-            let spec = self.standby.remove(i);
-            self.active.push(spec);
+        // one capacity ranking covers every group this decision staffs:
+        // consecutive `stages`-sized chunks of the fastest-first order
+        // are exactly the groups the old one-rank-per-group loop built
+        let picks: Vec<usize> = rank_by_capacity(&self.net, &self.standby)
+            .into_iter()
+            .take(fundable * self.stages)
+            .collect();
+        let staffed: Vec<ReplicaSpec> =
+            picks.iter().map(|&i| self.standby[i].clone()).collect();
+        // remove back-to-front so earlier indices stay valid
+        let mut remove = picks;
+        remove.sort_unstable_by(|a, b| b.cmp(a));
+        for i in remove {
+            self.standby.remove(i);
         }
-        self.respawn()?;
-        Ok(added)
+        for chunk in staffed.chunks(self.stages) {
+            let tag = format!("cg{}", self.next_uid);
+            self.next_uid += 1;
+            let service =
+                mock_chain_service(&self.net, chunk, self.service_us, self.ref_fps);
+            self.active.push(FleetGroup {
+                tag,
+                specs: chunk.to_vec(),
+                service,
+                slo_base: self.batcher,
+            });
+        }
+        self.apply_plan()?;
+        Ok(fundable)
     }
 
-    /// Scale in by up to `want` replicas, retiring the slowest first
-    /// (back to standby). The fleet never shrinks below one replica.
-    /// Returns how many were retired.
+    /// Scale in by up to `want` chain groups, retiring the slowest groups
+    /// first (their devices return to standby). The fleet never shrinks
+    /// below one group. Returns how many groups were retired.
     pub fn scale_in(&mut self, want: usize) -> crate::Result<usize> {
         let removable = self.active.len().saturating_sub(1);
         let want = want.min(removable);
         if want == 0 {
             return Ok(0);
         }
-        let mut retire: Vec<usize> = rank_by_capacity(&self.net, &self.active)
-            .into_iter()
-            .rev() // slowest-first
-            .take(want)
-            .collect();
+        let fps: Vec<f64> = self.active.iter().map(|g| chain_fps(&g.service)).collect();
+        let mut order: Vec<usize> = (0..self.active.len()).collect();
+        // slowest first; ties retire the newest group (highest index)
+        order.sort_by(|&a, &b| {
+            fps[a].partial_cmp(&fps[b]).unwrap_or(std::cmp::Ordering::Equal).then(b.cmp(&a))
+        });
+        let mut retire: Vec<usize> = order.into_iter().take(want).collect();
         retire.sort_unstable_by(|a, b| b.cmp(a));
-        for i in retire {
-            let spec = self.active.remove(i);
-            self.standby.push(spec);
+        for g in retire {
+            let group = self.active.remove(g);
+            self.standby.extend(group.specs);
         }
-        self.respawn()?;
+        self.apply_plan()?;
         Ok(want)
     }
 
-    /// Simulated device loss: active replica `replica` leaves the fleet
-    /// for good (it does **not** return to standby) and the survivors are
-    /// respawned. Returns `false` (and does nothing) when the index is
-    /// out of range or only one replica remains — a fleet cannot be
-    /// emptied, matching the partitioner's "at least one device" rule.
-    pub fn kill(&mut self, replica: usize) -> crate::Result<bool> {
-        if replica >= self.active.len() || self.active.len() <= 1 {
+    /// Simulated device loss: active chain group `group` leaves the fleet
+    /// for good (its devices do **not** return to standby) and the plan
+    /// re-applies over the survivors — who keep serving through the diff.
+    /// Returns `false` (and does nothing) when the index is out of range
+    /// or only one group remains — a fleet cannot be emptied, matching
+    /// the partitioner's "at least one device" rule.
+    pub fn kill(&mut self, group: usize) -> crate::Result<bool> {
+        if group >= self.active.len() || self.active.len() <= 1 {
             return Ok(false);
         }
-        self.active.remove(replica);
-        self.respawn()?;
+        self.active.remove(group);
+        self.apply_plan()?;
         Ok(true)
     }
 }
 
 /// One control tick: sample utilization, close the signal window, let the
-/// autoscaler reshape the fleet and the SLO controller retune batchers.
+/// autoscaler reshape the fleet (whole chain groups) and the SLO
+/// controller retune batchers (co-tuned per group for chains).
 fn control_tick(
     fleet: &mut ControlledFleet,
     tap: &mut SignalTap,
     scaler: &mut Option<Autoscaler>,
     slo: Option<&SloController>,
+    at_s: f64,
     events: &mut Vec<ControlEvent>,
 ) {
     tap.observe_utilization(&fleet.srv.outstanding(), fleet.queue_depth);
     let sig = tap.tick();
     if let Some(sc) = scaler.as_mut() {
-        match sc.decide(&sig, fleet.replicas()) {
+        match sc.decide(&sig, fleet.group_count()) {
             ScaleDecision::Out(k) => {
-                let from = fleet.replicas();
+                let from = fleet.group_count();
                 if let Ok(added) = fleet.scale_out(k) {
                     // the cooldown starts only when the fleet actually
                     // changed — a no-op against an exhausted standby pool
                     // must not delay later legitimate actions
                     if added > 0 {
                         sc.note_action(sig.tick);
-                        events.push(ControlEvent::ScaleOut {
+                        events.push(ControlEvent {
                             tick: sig.tick,
-                            from,
-                            to: from + added,
+                            at_s,
+                            kind: ControlEventKind::ScaleOut { from, to: from + added },
                         });
                     }
                 }
             }
             ScaleDecision::In(k) => {
-                let from = fleet.replicas();
+                let from = fleet.group_count();
                 if let Ok(removed) = fleet.scale_in(k) {
                     if removed > 0 {
                         sc.note_action(sig.tick);
-                        events.push(ControlEvent::ScaleIn {
+                        events.push(ControlEvent {
                             tick: sig.tick,
-                            from,
-                            to: from - removed,
+                            at_s,
+                            kind: ControlEventKind::ScaleIn { from, to: from - removed },
                         });
                     }
                 }
@@ -442,17 +684,49 @@ fn control_tick(
         }
     }
     if let Some(sl) = slo {
-        for r in 0..fleet.srv.replica_count() {
-            if let Some(cur) = fleet.srv.batcher_config(r) {
-                let next = sl.adjust(sig.p99_ms, cur);
-                if next.max_batch != cur.max_batch || next.max_wait != cur.max_wait {
-                    fleet.srv.set_batcher(r, next);
-                    events.push(ControlEvent::SloAdjust {
-                        tick: sig.tick,
-                        replica: r,
-                        max_batch: next.max_batch,
-                        max_wait: next.max_wait,
-                    });
+        for g in 0..fleet.group_count() {
+            if fleet.stages() == 1 {
+                // plain replicas: MIMD-adjust straight from the windowed p99
+                if let Some(cur) = fleet.srv.batcher_config(g, 0) {
+                    let next = sl.adjust(sig.p99_ms, cur);
+                    if next != cur {
+                        fleet.srv.set_batcher(g, 0, next);
+                        events.push(ControlEvent {
+                            tick: sig.tick,
+                            at_s,
+                            kind: ControlEventKind::SloAdjust {
+                                group: g,
+                                stage: 0,
+                                max_batch: next.max_batch,
+                                max_wait: next.max_wait,
+                            },
+                        });
+                    }
+                }
+            } else {
+                // chain group: MIMD-adapt the group's own base (kept
+                // apart from the actuated per-stage settings, which the
+                // co-tuning overwrites every tick), then spread it per
+                // stage against the group's bottleneck shard interval
+                let next = sl.adjust(sig.p99_ms, fleet.active[g].slo_base);
+                fleet.active[g].slo_base = next;
+                let tuned = sl.co_tune_chain(fleet.group_service(g), next);
+                for (stage, t) in tuned.into_iter().enumerate() {
+                    if let Some(cur) = fleet.srv.batcher_config(g, stage) {
+                        if t != cur {
+                            fleet.srv.set_batcher(g, stage, t);
+                            events.push(ControlEvent {
+                                tick: sig.tick,
+                                at_s,
+                                kind: ControlEventKind::SloAdjust {
+                                    group: g,
+                                    stage,
+                                    max_batch: t.max_batch,
+                                    max_wait: t.max_wait,
+                                },
+                            });
+                        }
+                    }
                 }
             }
         }
@@ -473,11 +747,14 @@ fn fire_due_failures(
     while *next_failure < failures.len() && elapsed_s >= failures[*next_failure].at_s {
         let f = failures[*next_failure];
         *next_failure += 1;
-        if fleet.kill(f.replica).unwrap_or(false) {
-            events.push(ControlEvent::Failure {
+        if fleet.kill(f.group).unwrap_or(false) {
+            events.push(ControlEvent {
                 tick: tick_no,
-                replica: f.replica,
-                survivors: fleet.replicas(),
+                at_s: elapsed_s,
+                kind: ControlEventKind::Failure {
+                    group: f.group,
+                    survivors: fleet.group_count(),
+                },
             });
         }
     }
@@ -500,9 +777,9 @@ fn skip_missed_ticks(next_tick: &mut Duration, tick: Duration, now: Duration) {
 /// ticks on the [`LoopConfig::tick`] cadence, the failure-injection
 /// schedule, and [`LoopConfig::trailing_ticks`] idle ticks after the
 /// drain. Returns the journaled decisions plus the fleet-wide serving
-/// summary. The fleet stays running — callers chain further replays (the
-/// SLO acceptance test replays a probe trace through the converged fleet)
-/// or shut it down.
+/// summary (per chain group e2e + per stage). The fleet stays running —
+/// callers chain further replays (the SLO acceptance test replays a probe
+/// trace through the converged fleet) or shut it down.
 pub fn run_loop(fleet: &mut ControlledFleet, trace: &Trace, cfg: &LoopConfig) -> ControlReport {
     let mut rng = Rng::new(cfg.seed);
     let mut tap = SignalTap::new(cfg.signal);
@@ -511,9 +788,9 @@ pub fn run_loop(fleet: &mut ControlledFleet, trace: &Trace, cfg: &LoopConfig) ->
     let mut failures = cfg.failures.clone();
     failures.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap_or(std::cmp::Ordering::Equal));
     let mut next_failure = 0usize;
-    let initial_replicas = fleet.replicas();
+    let initial_groups = fleet.group_count();
 
-    let mut fm = FleetMetrics::new(fleet.active.len() + fleet.standby.len());
+    let mut fm = FleetMetrics::new(&fleet.metrics_shape());
     fm.start();
     let mut events: Vec<ControlEvent> = Vec::new();
     let t0 = Instant::now();
@@ -533,7 +810,8 @@ pub fn run_loop(fleet: &mut ControlledFleet, trace: &Trace, cfg: &LoopConfig) ->
                 &mut events,
             );
             if t0.elapsed() >= next_tick {
-                control_tick(fleet, &mut tap, &mut scaler, slo.as_ref(), &mut events);
+                let at_s = t0.elapsed().as_secs_f64();
+                control_tick(fleet, &mut tap, &mut scaler, slo.as_ref(), at_s, &mut events);
                 skip_missed_ticks(&mut next_tick, tick, t0.elapsed());
             }
             let now_s = t0.elapsed().as_secs_f64();
@@ -576,7 +854,8 @@ pub fn run_loop(fleet: &mut ControlledFleet, trace: &Trace, cfg: &LoopConfig) ->
             &mut events,
         );
         if t0.elapsed() >= next_tick {
-            control_tick(fleet, &mut tap, &mut scaler, slo.as_ref(), &mut events);
+            let at_s = t0.elapsed().as_secs_f64();
+            control_tick(fleet, &mut tap, &mut scaler, slo.as_ref(), at_s, &mut events);
             skip_missed_ticks(&mut next_tick, tick, t0.elapsed());
         }
         match fleet.srv.try_next_completion(Duration::from_millis(5)) {
@@ -606,23 +885,24 @@ pub fn run_loop(fleet: &mut ControlledFleet, trace: &Trace, cfg: &LoopConfig) ->
             tap.ticks(),
             &mut events,
         );
-        control_tick(fleet, &mut tap, &mut scaler, slo.as_ref(), &mut events);
+        let at_s = t0.elapsed().as_secs_f64();
+        control_tick(fleet, &mut tap, &mut scaler, slo.as_ref(), at_s, &mut events);
         skip_missed_ticks(&mut next_tick, tick, t0.elapsed());
     }
 
-    let mut max_replicas_seen = initial_replicas;
+    let mut max_groups_seen = initial_groups;
     for e in &events {
-        if let ControlEvent::ScaleOut { to, .. } = e {
-            max_replicas_seen = max_replicas_seen.max(*to);
+        if let ControlEventKind::ScaleOut { to, .. } = e.kind {
+            max_groups_seen = max_groups_seen.max(to);
         }
     }
     ControlReport {
         summary: fm.summary(),
         events,
         ticks: tap.ticks(),
-        initial_replicas,
-        final_replicas: fleet.replicas(),
-        max_replicas_seen,
+        initial_groups,
+        final_groups: fleet.group_count(),
+        max_groups_seen,
         submitted: fm.submitted(),
         shed: fm.shed(),
         completed: fm.completed(),
@@ -632,7 +912,7 @@ pub fn run_loop(fleet: &mut ControlledFleet, trace: &Trace, cfg: &LoopConfig) ->
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::{alveo_u250, alveo_u280};
+    use crate::device::{alveo_u250, alveo_u280, zynq_7020};
     use crate::nn::{cnv, CnvVariant};
 
     fn bc() -> BatcherConfig {
@@ -648,19 +928,22 @@ mod tests {
             ReplicaSpec::paper_point(alveo_u250()),
         ];
         let mut fleet = ControlledFleet::start(net, active, standby, 100.0, bc(), 16);
-        assert_eq!(fleet.replicas(), 1);
+        assert_eq!(fleet.group_count(), 1);
+        assert_eq!(fleet.stages(), 1);
         // the faster U250 standby joins first
         assert_eq!(fleet.scale_out(1).unwrap(), 1);
-        assert_eq!(fleet.active_specs()[1].device.name, "alveo-u250");
+        assert_eq!(fleet.group_specs(1)[0].device.name, "alveo-u250");
         // pool exhaustion bounds the next scale-out
         assert_eq!(fleet.scale_out(5).unwrap(), 1);
         assert_eq!(fleet.standby_len(), 0);
-        // scale-in retires the slowest (a U280) and never empties the fleet
+        // scale-in retires the slowest group (a U280) and never empties
+        // the fleet
         assert_eq!(fleet.scale_in(1).unwrap(), 1);
-        assert!(fleet.active_specs().iter().any(|s| s.device.name == "alveo-u250"));
+        assert!((0..fleet.group_count())
+            .any(|g| fleet.group_specs(g)[0].device.name == "alveo-u250"));
         assert_eq!(fleet.scale_in(10).unwrap(), 1);
-        assert_eq!(fleet.replicas(), 1);
-        assert_eq!(fleet.scale_in(1).unwrap(), 0, "last replica must survive");
+        assert_eq!(fleet.group_count(), 1);
+        assert_eq!(fleet.scale_in(1).unwrap(), 0, "last group must survive");
         // the server still serves after all that reshaping
         fleet.server().submit_blocking(1, vec![1.0]).unwrap();
         let c = fleet.server().next_completion().unwrap();
@@ -669,7 +952,72 @@ mod tests {
     }
 
     #[test]
-    fn kill_removes_the_device_for_good() {
+    fn chained_fleet_scales_whole_groups_only() {
+        let net = cnv(CnvVariant::W1A1);
+        let specs = |k: usize| -> Vec<ReplicaSpec> {
+            (0..k).map(|_| ReplicaSpec::paper_point(zynq_7020())).collect()
+        };
+        // one 2-stage group active, 3 standby devices: only one more whole
+        // group can be funded (the third device is a spare, not a shard)
+        let mut fleet =
+            ControlledFleet::start_chained(net, vec![specs(2)], specs(3), 100.0, bc(), 16);
+        assert_eq!((fleet.group_count(), fleet.stages(), fleet.device_count()), (1, 2, 2));
+        assert_eq!(fleet.scale_out(5).unwrap(), 1, "3 standby devices fund one 2-stage group");
+        assert_eq!(fleet.group_count(), 2);
+        assert_eq!(fleet.device_count(), 4);
+        assert_eq!(fleet.standby_len(), 1, "the odd device stays in standby");
+        // scale-in releases a whole group's devices back
+        assert_eq!(fleet.scale_in(1).unwrap(), 1);
+        assert_eq!(fleet.standby_len(), 3);
+        // frames still traverse both stages end-to-end
+        fleet.server().submit_blocking(9, vec![2.0]).unwrap();
+        let c = fleet.server().next_completion().unwrap();
+        assert_eq!(c.stage_latencies.len(), 2, "chain group must report both stages");
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn chain_slo_base_adapts_instead_of_collapsing_to_the_bottleneck() {
+        let net = cnv(CnvVariant::W1A1);
+        // heterogeneous 2-stage group: the Zynq stage is the bottleneck,
+        // the much faster U250 stage has co-tuning headroom
+        let group = vec![
+            ReplicaSpec::paper_point(zynq_7020()),
+            ReplicaSpec::paper_point(alveo_u250()),
+        ];
+        let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
+        let mut fleet =
+            ControlledFleet::start_chained(net, vec![group], vec![], 500.0, batcher, 32);
+        let svc = fleet.group_service(0).to_vec();
+        assert!(svc[0] > svc[1], "stage 0 must be the bottleneck: {svc:?}");
+        let sl = SloController::new(SloConfig::default()); // 50 ms budget, batch cap 16
+        let mut tap = SignalTap::new(SignalConfig { window_ticks: 1 });
+        let mut scaler: Option<Autoscaler> = None;
+        let mut events = Vec::new();
+        // quiet ticks far under budget: the per-group MIMD base must
+        // *grow* toward the SLO cap even though co-tuning pins the
+        // bottleneck stage greedy every tick — reading the actuated
+        // stage-0 config back as the base would collapse it to 1
+        for _ in 0..5 {
+            tap.record_completion(Duration::from_millis(2));
+            control_tick(&mut fleet, &mut tap, &mut scaler, Some(&sl), 0.0, &mut events);
+        }
+        assert!(
+            fleet.active[0].slo_base.max_batch >= 8,
+            "group MIMD base failed to grow: {:?}",
+            fleet.active[0].slo_base
+        );
+        // the bottleneck stage stays greedy regardless
+        let b0 = fleet.server().batcher_config(0, 0).unwrap();
+        assert_eq!((b0.max_batch, b0.max_wait), (1, Duration::ZERO));
+        // the fast stage's actuated batch never shrinks across quiet ticks
+        let b1 = fleet.server().batcher_config(0, 1).unwrap();
+        assert!(b1.max_batch >= 1);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn kill_removes_the_group_for_good() {
         let net = cnv(CnvVariant::W1A1);
         let active = vec![
             ReplicaSpec::paper_point(alveo_u250()),
@@ -677,9 +1025,9 @@ mod tests {
         ];
         let mut fleet = ControlledFleet::start(net, active, vec![], 100.0, bc(), 16);
         assert!(fleet.kill(0).unwrap());
-        assert_eq!(fleet.replicas(), 1);
-        assert_eq!(fleet.standby_len(), 0, "a dead device must not rejoin via standby");
-        assert!(!fleet.kill(0).unwrap(), "the last replica cannot be killed");
+        assert_eq!(fleet.group_count(), 1);
+        assert_eq!(fleet.standby_len(), 0, "a dead group must not rejoin via standby");
+        assert!(!fleet.kill(0).unwrap(), "the last group cannot be killed");
         assert!(!fleet.kill(7).unwrap(), "out-of-range kill is a no-op");
         fleet.shutdown();
     }
@@ -698,7 +1046,68 @@ mod tests {
         assert_eq!(rep.shed, 0);
         assert!(rep.ticks >= 2, "trailing ticks must fire even on short traces");
         assert!(rep.events.is_empty(), "no controllers, no events");
-        assert_eq!(rep.initial_replicas, 1);
-        assert_eq!(rep.final_replicas, 1);
+        assert_eq!(rep.initial_groups, 1);
+        assert_eq!(rep.final_groups, 1);
+    }
+
+    #[test]
+    fn event_journal_roundtrips_through_disk() {
+        let events = vec![
+            ControlEvent {
+                tick: 4,
+                at_s: 0.1125,
+                kind: ControlEventKind::ScaleOut { from: 1, to: 2 },
+            },
+            ControlEvent {
+                tick: 9,
+                at_s: 0.25,
+                kind: ControlEventKind::SloAdjust {
+                    group: 1,
+                    stage: 0,
+                    max_batch: 8,
+                    // sub-microsecond component: the nanosecond encoding
+                    // must carry it through the round-trip exactly
+                    max_wait: Duration::from_nanos(1_500_417),
+                },
+            },
+            ControlEvent {
+                tick: 12,
+                at_s: 0.31,
+                kind: ControlEventKind::Failure { group: 0, survivors: 1 },
+            },
+            ControlEvent {
+                tick: 20,
+                at_s: 0.5,
+                kind: ControlEventKind::ScaleIn { from: 2, to: 1 },
+            },
+        ];
+        let path = std::env::temp_dir().join("fcmp_events_roundtrip_test.txt");
+        save_events(&events, &path).unwrap();
+        let back = load_events(&path).unwrap();
+        assert_eq!(back.len(), events.len());
+        for (a, b) in events.iter().zip(&back) {
+            assert_eq!(a.tick, b.tick);
+            assert_eq!(a.kind, b.kind);
+            assert!((a.at_s - b.at_s).abs() < 1e-6, "{} vs {}", a.at_s, b.at_s);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn event_journal_rejects_garbage() {
+        let path = std::env::temp_dir().join("fcmp_events_bad_test.txt");
+        std::fs::write(&path, "# fcmp-events v1\n0.5 3 scale-out 1\n").unwrap();
+        assert!(load_events(&path).is_err(), "missing field must be rejected");
+        std::fs::write(&path, "0.5 3 teleport 1 2\n").unwrap();
+        assert!(load_events(&path).is_err(), "unknown kind must be rejected");
+        std::fs::write(&path, "-1 3 scale-out 1 2\n").unwrap();
+        assert!(load_events(&path).is_err(), "negative time must be rejected");
+        std::fs::write(&path, "0.5 3 scale-out 1 2 9\n").unwrap();
+        assert!(load_events(&path).is_err(), "trailing fields must be rejected");
+        std::fs::write(&path, "# comment\n\n0.25 2 failure 0 1\n").unwrap();
+        let ok = load_events(&path).unwrap();
+        assert_eq!(ok.len(), 1);
+        assert_eq!(ok[0].kind, ControlEventKind::Failure { group: 0, survivors: 1 });
+        let _ = std::fs::remove_file(&path);
     }
 }

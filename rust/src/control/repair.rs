@@ -14,17 +14,22 @@
 //! report carries the partitioner's reason so the operator layer can page
 //! instead of serving a plan that cannot exist.
 //!
-//! Actuation is [`crate::coordinator::Server::reconfigure_chain`]: the old
-//! chain drains every in-flight frame, then the repaired plan's stages
-//! spawn on the same completion stream ([`splice_mock_chain`] calibrates
-//! their mock backends from the plan's shard service intervals, as
-//! `fcmp shard --serve` does).
+//! Actuation is [`Server::apply`] with a replacement
+//! [`Deployment`]: every chain group of the running deployment is
+//! replaced by a freshly tagged copy of the repaired plan's chain (the
+//! old groups drain every in-flight frame first; the splice-unique tags
+//! force the diff to respawn even when the repaired chain happens to
+//! match the old shape, because the backends behind it changed).
+//! [`splice_mock_chain`] calibrates the new stages' mock backends from
+//! the plan's shard service intervals, as `fcmp shard --serve` does.
 
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::coordinator::{
-    shard_service_times, BatcherConfig, MockBackend, Policy, Server, ServerConfig,
+    shard_service_times, BatcherConfig, ChainGroup, Deployment, MockBackend, Policy, Server,
+    WorkerId,
 };
 use crate::device::Device;
 use crate::nn::Network;
@@ -131,11 +136,17 @@ pub fn replan(
     }
 }
 
-/// Splice a repaired plan into a running chain server: drain-and-swap
-/// ([`Server::reconfigure_chain`]) onto mock backends whose per-stage
-/// service equals the plan's analytic shard intervals
+/// Splice a repaired plan into a running server: every chain group of the
+/// current deployment is replaced — via the group-diffing
+/// [`Server::apply`], under splice-unique tags so the diff can never
+/// mistake the new chain for the old one even when the shapes coincide —
+/// by a copy of the repaired plan's stage chain on mock backends whose
+/// per-stage service equals the plan's analytic shard intervals
 /// ([`shard_service_times`]), each capped at `service_cap` so splices in
-/// tests and benches stay wall-clock sane. The spliced stages come up
+/// tests and benches stay wall-clock sane. A server running N replicated
+/// chains gets N copies of the repaired chain. The old groups drain every
+/// in-flight frame before the new chain spawns, so every accepted frame
+/// finishes its traversal on the old plan. The spliced stages come up
 /// with their batchers co-tuned against the new plan's bottleneck shard
 /// ([`super::slo::co_tune_chain`] applied via [`Server::set_batcher`]):
 /// the bottleneck stage serves greedily, faster stages may batch up to
@@ -147,18 +158,32 @@ pub fn splice_mock_chain(
     queue_depth: usize,
     service_cap: Duration,
 ) -> crate::Result<()> {
+    static SPLICE_SEQ: AtomicU64 = AtomicU64::new(0);
     let svc: Vec<Duration> =
         shard_service_times(plan).into_iter().map(|d| d.min(service_cap)).collect();
     let tuned = super::slo::co_tune_chain(&svc, batcher);
-    let cfg = ServerConfig {
+    let k = plan.shards.len().max(1);
+    let chains = srv.group_count().max(1);
+    let seq = SPLICE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let dep = Deployment {
+        groups: (0..chains)
+            .map(|g| ChainGroup::tagged(k, format!("splice{seq}-{g}")))
+            .collect(),
         batcher,
         queue_depth,
-        replicas: plan.shards.len(),
-        policy: Policy::StageChain,
+        policy: Policy::RoundRobin,
     };
-    srv.reconfigure_chain(move |i| MockBackend::with_service(Duration::ZERO, svc[i]), cfg)?;
-    for (i, t) in tuned.into_iter().enumerate() {
-        srv.set_batcher(i, t);
+    let svc_backend = svc.clone();
+    srv.apply(
+        move |id: WorkerId| {
+            MockBackend::with_service(Duration::ZERO, svc_backend[id.stage])
+        },
+        dep,
+    )?;
+    for g in 0..srv.group_count() {
+        for (stage, t) in tuned.iter().enumerate() {
+            srv.set_batcher(g, stage, *t);
+        }
     }
     Ok(())
 }

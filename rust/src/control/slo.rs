@@ -78,7 +78,30 @@ impl SloController {
         &self.cfg
     }
 
-    /// Next batching settings for a replica whose windowed p99 was
+    /// Per-stage batching for one chain group, clamped to this
+    /// controller's bounds: the free [`co_tune_chain`] derives the
+    /// per-stage settings from the group's stage service intervals, then
+    /// the configured `max_batch` / `max_wait` ceilings cap them (the
+    /// bottleneck stage's greedy batch-1 / zero-wait setting is always
+    /// within bounds — co-tuning never floors it back up). The control
+    /// loop calls this once per group per tick, with `base` already
+    /// MIMD-adjusted from the windowed p99.
+    pub fn co_tune_chain(
+        &self,
+        stage_service: &[Duration],
+        base: BatcherConfig,
+    ) -> Vec<BatcherConfig> {
+        let hi_batch = self.cfg.max_batch.max(1);
+        co_tune_chain(stage_service, base)
+            .into_iter()
+            .map(|c| BatcherConfig {
+                max_batch: c.max_batch.min(hi_batch).max(1),
+                max_wait: c.max_wait.min(self.cfg.max_wait),
+            })
+            .collect()
+    }
+
+    /// Next batching settings for a worker whose windowed p99 was
     /// `p99_ms` (`None` — nothing completed in the window — holds). Pure
     /// in `(p99_ms, cur)`, so the control loop stays replayable.
     pub fn adjust(&self, p99_ms: Option<f64>, cur: BatcherConfig) -> BatcherConfig {
@@ -110,8 +133,10 @@ impl SloController {
 /// interval. Faster stages also never hold a partial batch longer than
 /// one bottleneck interval: the next frame cannot arrive sooner, so a
 /// longer wait is pure latency. Applied to live servers by
-/// [`crate::control::repair::splice_mock_chain`], which retunes every
-/// spliced stage via [`crate::coordinator::Server::set_batcher`].
+/// [`crate::control::repair::splice_mock_chain`] and, per chain group and
+/// bounded by the SLO config, by [`SloController::co_tune_chain`] inside
+/// the control tick — both actuate via
+/// [`crate::coordinator::Server::set_batcher`].
 pub fn co_tune_chain(stage_service: &[Duration], base: BatcherConfig) -> Vec<BatcherConfig> {
     let bottleneck = stage_service.iter().copied().max().unwrap_or(Duration::ZERO);
     stage_service
@@ -207,6 +232,23 @@ mod tests {
         assert_eq!(tuned[2].max_batch, 4);
         // and never hold longer than one bottleneck interval
         assert_eq!(tuned[0].max_wait, Duration::from_micros(400));
+    }
+
+    #[test]
+    fn controller_co_tune_caps_at_the_slo_bounds() {
+        let c = ctl(); // max_batch 32, max_wait 16 ms
+        let svc = [
+            Duration::from_micros(10), // 100x faster than the bottleneck
+            Duration::from_micros(1_000),
+        ];
+        // a base far beyond the SLO bounds gets capped back
+        let tuned = c.co_tune_chain(&svc, bc(64, 40_000));
+        assert_eq!(tuned.len(), 2);
+        assert!(tuned[0].max_batch <= 32, "batch must cap at the SLO bound");
+        assert!(tuned[0].max_wait <= Duration::from_millis(16));
+        // the bottleneck stage stays greedy — bounds never floor it up
+        assert_eq!(tuned[1].max_batch, 1);
+        assert_eq!(tuned[1].max_wait, Duration::ZERO);
     }
 
     #[test]

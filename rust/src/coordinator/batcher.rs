@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 use super::Request;
 
 /// Batching policy.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BatcherConfig {
     /// Maximum requests per batch (match the engine's largest variant).
     pub max_batch: usize,

@@ -75,22 +75,91 @@ pub fn replica_fps(net: &Network, spec: &ReplicaSpec) -> f64 {
     sim::estimate(net, t.effective_fc_mhz).fps
 }
 
-/// Capacity weights for a heterogeneous fleet, mean-normalized to 1.0 so
-/// the weighted policy's credit arithmetic stays well-conditioned no matter
-/// how large the absolute FPS numbers are.
+/// Capacity weights for a heterogeneous flat fleet (1-stage chain
+/// groups), mean-normalized via [`group_weights`].
 pub fn fleet_weights(net: &Network, specs: &[ReplicaSpec]) -> Vec<f64> {
-    if specs.is_empty() {
+    let fps: Vec<f64> = specs.iter().map(|s| replica_fps(net, s)).collect();
+    group_weights(&fps)
+}
+
+/// Mean-normalize per-chain-group capacities (frames/s, any positive
+/// scale) into weights for [`crate::coordinator::Policy::Weighted`] group
+/// scheduling: normalization to mean 1.0 keeps the SWRR credit arithmetic
+/// well-conditioned no matter how large the absolute FPS numbers are.
+pub fn group_weights(group_fps: &[f64]) -> Vec<f64> {
+    if group_fps.is_empty() {
         return Vec::new();
     }
+    let mean = group_fps.iter().sum::<f64>() / group_fps.len() as f64;
+    group_fps.iter().map(|f| f / mean.max(1e-12)).collect()
+}
+
+/// Analytic throughput (frames/s) of one chain group from its per-stage
+/// service intervals: the slowest stage sets the pipeline's initiation
+/// interval. Returns 0.0 for empty or all-instant chains (no meaningful
+/// capacity signal; the scheduler clamps non-positive weights anyway).
+pub fn chain_fps(stage_service: &[std::time::Duration]) -> f64 {
+    let bottleneck = stage_service.iter().copied().max().unwrap_or_default();
+    if bottleneck.is_zero() {
+        0.0
+    } else {
+        1.0 / bottleneck.as_secs_f64()
+    }
+}
+
+/// Per-item mock service interval of one device for serving experiments:
+/// the fastest device anywhere in the pool (analytic `ref_fps`) serves
+/// one item in `service_us` microseconds and every other device scales
+/// up by its FPS ratio, so fleet heterogeneity — and every
+/// capacity-aware decision built on it — is observable without hardware.
+/// The one calibration formula shared by `fcmp serve --backend mock` and
+/// the control plane's [`crate::control::ControlledFleet`].
+pub fn mock_service_time(
+    net: &Network,
+    spec: &ReplicaSpec,
+    service_us: f64,
+    ref_fps: f64,
+) -> std::time::Duration {
+    mock_service_from_fps(replica_fps(net, spec), service_us, ref_fps)
+}
+
+/// The calibration core of [`mock_service_time`] over a precomputed
+/// analytic throughput — callers that already ran [`replica_fps`] (e.g.
+/// to print a capacity table) avoid evaluating the analytic model twice.
+pub fn mock_service_from_fps(fps: f64, service_us: f64, ref_fps: f64) -> std::time::Duration {
+    std::time::Duration::from_secs_f64(service_us * 1e-6 * ref_fps.max(1e-9) / fps.max(1e-9))
+}
+
+/// Per-stage mock service of one chain group: each of the `k` stages
+/// hosts `1/k` of the network, so its interval is its device's
+/// full-network [`mock_service_time`] divided by the chain depth.
+pub fn mock_chain_service(
+    net: &Network,
+    specs: &[ReplicaSpec],
+    service_us: f64,
+    ref_fps: f64,
+) -> Vec<std::time::Duration> {
     let fps: Vec<f64> = specs.iter().map(|s| replica_fps(net, s)).collect();
-    let mean = fps.iter().sum::<f64>() / fps.len() as f64;
-    fps.iter().map(|f| f / mean.max(1e-12)).collect()
+    mock_chain_service_from_fps(&fps, service_us, ref_fps)
+}
+
+/// [`mock_chain_service`] over precomputed per-stage throughputs.
+pub fn mock_chain_service_from_fps(
+    stage_fps: &[f64],
+    service_us: f64,
+    ref_fps: f64,
+) -> Vec<std::time::Duration> {
+    let k = stage_fps.len().max(1) as u32;
+    stage_fps.iter().map(|&f| mock_service_from_fps(f, service_us, ref_fps) / k).collect()
 }
 
 /// Per-stage service times of a sharded pipeline plan — shard `j` serves
-/// one frame every `seconds_per_frame(j)`. Calibrates the mock backends of
-/// a stage chain ([`crate::coordinator::Server::start_chain`]) so chain
-/// serving experiments reflect the analytic plan without hardware.
+/// one frame every `seconds_per_frame(j)`. Calibrates the mock backends
+/// of chain-group deployments ([`crate::coordinator::Server::deploy`]
+/// with a [`crate::coordinator::Deployment::chain`] or
+/// [`crate::coordinator::Deployment::replicated_chains`] plan) so chain
+/// serving experiments reflect the analytic plan without hardware, and
+/// feeds [`chain_fps`] for per-group scheduling weights.
 pub fn shard_service_times(plan: &crate::sharding::ShardPlan) -> Vec<std::time::Duration> {
     plan.shards
         .iter()
@@ -154,6 +223,47 @@ mod tests {
     #[test]
     fn empty_fleet_has_no_weights() {
         assert!(fleet_weights(&cnv(CnvVariant::W1A1), &[]).is_empty());
+        assert!(group_weights(&[]).is_empty());
+    }
+
+    #[test]
+    fn chain_fps_is_set_by_the_bottleneck_stage() {
+        use std::time::Duration;
+        let svc = [
+            Duration::from_micros(100),
+            Duration::from_micros(400), // bottleneck: 2500 fps
+            Duration::from_micros(200),
+        ];
+        assert!((chain_fps(&svc) - 2500.0).abs() < 1e-6);
+        assert_eq!(chain_fps(&[]), 0.0);
+        assert_eq!(chain_fps(&[Duration::ZERO]), 0.0);
+    }
+
+    #[test]
+    fn mock_service_splits_evenly_across_chain_stages() {
+        let net = cnv(CnvVariant::W1A1);
+        let spec = ReplicaSpec::paper_point(zynq_7020());
+        let ref_fps = replica_fps(&net, &spec);
+        // the reference device itself serves at exactly service_us
+        let solo = mock_service_time(&net, &spec, 800.0, ref_fps);
+        assert!((solo.as_secs_f64() - 800e-6).abs() < 1e-9);
+        // a 2-stage chain of the same device halves the per-stage interval
+        let chain = mock_chain_service(&net, &[spec.clone(), spec], 800.0, ref_fps);
+        assert_eq!(chain.len(), 2);
+        for s in &chain {
+            assert!((s.as_secs_f64() - 400e-6).abs() < 1e-9);
+        }
+        // and the chain's capacity doubles the single stage's
+        assert!((chain_fps(&chain) - 2.0 / solo.as_secs_f64()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn group_weights_are_mean_normalized() {
+        let w = group_weights(&[100.0, 300.0]);
+        assert!((w[0] - 0.5).abs() < 1e-12);
+        assert!((w[1] - 1.5).abs() < 1e-12);
+        let mean: f64 = w.iter().sum::<f64>() / w.len() as f64;
+        assert!((mean - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! The fleet topology plan: one composable abstraction for every shape
+//! the coordinator can serve.
+//!
+//! A [`Deployment`] is an ordered set of [`ChainGroup`]s behind the
+//! router. Each group is a `k`-stage pipeline chain; the degenerate
+//! shapes the old API hard-coded fall out as special cases:
+//!
+//! ```text
+//!   N groups × 1 stage   — the flat replicated fleet (PR-2 `start`)
+//!   1 group  × k stages  — the single stage chain   (PR-3 `start_chain`)
+//!   N groups × k stages  — replicated chains: the new diagonal of the
+//!                          design space (policy picks a chain, frames
+//!                          traverse it, throughput scales past one
+//!                          pipeline)
+//! ```
+//!
+//! [`crate::coordinator::Server::deploy`] spawns a plan;
+//! [`crate::coordinator::Server::apply`] diffs a new plan against the
+//! running one at **chain-group granularity**: groups whose
+//! [`ChainGroup`] spec is unchanged keep serving (no drain, live batcher
+//! retunes survive), removed groups drain to completion, added groups
+//! spawn fresh. Give groups distinct [`ChainGroup::tag`]s when specs
+//! look identical but the backends behind them must differ (the control
+//! plane tags every group it creates, so scale-in retires exactly the
+//! group it chose).
+
+use super::batcher::BatcherConfig;
+use super::policy::Policy;
+
+/// Identifies one worker of a deployment: stage `stage` of chain group
+/// `group`. Backend factories receive the id of the worker they are
+/// building for (on that worker's own thread — PJRT handles are
+/// thread-affine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerId {
+    /// Chain-group index within the deployment, in plan order.
+    pub group: usize,
+    /// Stage index within the group (`0` is the entry stage).
+    pub stage: usize,
+}
+
+/// One chain group of a [`Deployment`]: a `k`-stage pipeline behind the
+/// router. `stages == 1` is a plain replica.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChainGroup {
+    /// Pipeline depth of this group (clamped to at least 1 at deploy).
+    pub stages: usize,
+    /// Per-group batching baseline; `None` inherits
+    /// [`Deployment::batcher`].
+    pub batcher: Option<BatcherConfig>,
+    /// Identity label for [`crate::coordinator::Server::apply`] diffing:
+    /// two groups match (and the running one is kept, backends and all)
+    /// only when their tags are equal alongside the rest of the spec.
+    /// `None` groups match each other by shape alone.
+    pub tag: Option<String>,
+}
+
+impl ChainGroup {
+    /// A `stages`-deep chain group inheriting the deployment's batcher.
+    pub fn new(stages: usize) -> ChainGroup {
+        ChainGroup { stages, batcher: None, tag: None }
+    }
+
+    /// Same group with an identity tag (see [`ChainGroup::tag`]).
+    pub fn tagged(stages: usize, tag: impl Into<String>) -> ChainGroup {
+        ChainGroup { stages, batcher: None, tag: Some(tag.into()) }
+    }
+}
+
+/// The fleet topology the coordinator serves: an ordered set of chain
+/// groups plus the routing policy and the shared defaults. Replaces the
+/// old `ServerConfig` + `start`/`start_chain` split.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Deployment {
+    /// The chain groups, in router order (a plan with zero groups is
+    /// normalized to one 1-stage group at deploy time).
+    pub groups: Vec<ChainGroup>,
+    /// Default batching policy for groups without their own.
+    pub batcher: BatcherConfig,
+    /// Bound of every stage's request queue (admission control: when
+    /// every open group entry is full, submits shed with
+    /// [`crate::coordinator::SubmitError::QueueFull`]).
+    pub queue_depth: usize,
+    /// Scheduling policy picking the *chain group* each request enters.
+    pub policy: Policy,
+}
+
+impl Default for Deployment {
+    fn default() -> Self {
+        Deployment {
+            groups: vec![ChainGroup::new(1)],
+            batcher: BatcherConfig::default(),
+            queue_depth: 256,
+            policy: Policy::RoundRobin,
+        }
+    }
+}
+
+impl Deployment {
+    /// The flat replicated fleet: `n` groups of one stage each.
+    pub fn replicated(n: usize) -> Deployment {
+        Deployment::replicated_chains(n, 1)
+    }
+
+    /// A single `k`-stage chain (pipeline-parallel sharding,
+    /// [`crate::sharding`]).
+    pub fn chain(k: usize) -> Deployment {
+        Deployment::replicated_chains(1, k)
+    }
+
+    /// `n` parallel copies of a `k`-stage chain behind the router — the
+    /// replicated-chain shape that lifts sharded throughput beyond one
+    /// pipeline.
+    pub fn replicated_chains(n: usize, k: usize) -> Deployment {
+        Deployment {
+            groups: (0..n.max(1)).map(|_| ChainGroup::new(k.max(1))).collect(),
+            ..Deployment::default()
+        }
+    }
+
+    /// Same plan with `policy` (builder style).
+    pub fn with_policy(mut self, policy: Policy) -> Deployment {
+        self.policy = policy;
+        self
+    }
+
+    /// Same plan with the default batcher `b`.
+    pub fn with_batcher(mut self, b: BatcherConfig) -> Deployment {
+        self.batcher = b;
+        self
+    }
+
+    /// Same plan with per-stage queue bound `depth`.
+    pub fn with_queue_depth(mut self, depth: usize) -> Deployment {
+        self.queue_depth = depth;
+        self
+    }
+
+    /// Number of chain groups (after normalization: at least 1).
+    pub fn group_count(&self) -> usize {
+        self.groups.len().max(1)
+    }
+
+    /// Stage counts per group, in plan order.
+    pub fn group_sizes(&self) -> Vec<usize> {
+        if self.groups.is_empty() {
+            return vec![1];
+        }
+        self.groups.iter().map(|g| g.stages.max(1)).collect()
+    }
+
+    /// Total workers across every group.
+    pub fn total_stages(&self) -> usize {
+        self.group_sizes().iter().sum()
+    }
+
+    /// The batcher group `g` actually runs (its own, or the default).
+    pub fn group_batcher(&self, g: usize) -> BatcherConfig {
+        self.groups.get(g).and_then(|grp| grp.batcher).unwrap_or(self.batcher)
+    }
+
+    /// Clamp the plan into a servable shape: at least one group, every
+    /// group at least one stage, queue depth at least 1.
+    pub(crate) fn normalized(mut self) -> Deployment {
+        if self.groups.is_empty() {
+            self.groups.push(ChainGroup::new(1));
+        }
+        for g in &mut self.groups {
+            g.stages = g.stages.max(1);
+        }
+        self.queue_depth = self.queue_depth.max(1);
+        self
+    }
+
+    /// Diffing identity of group `g` for [`crate::coordinator::Server::apply`]:
+    /// a running group is kept only when its key equals the new plan's.
+    pub(crate) fn group_key(&self, g: usize) -> GroupKey {
+        GroupKey {
+            tag: self.groups.get(g).and_then(|grp| grp.tag.clone()),
+            stages: self.groups.get(g).map(|grp| grp.stages.max(1)).unwrap_or(1),
+            batcher: self.group_batcher(g),
+            queue_depth: self.queue_depth.max(1),
+        }
+    }
+}
+
+/// Everything that must match for a running group to survive an
+/// [`crate::coordinator::Server::apply`] without a respawn.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct GroupKey {
+    pub(crate) tag: Option<String>,
+    pub(crate) stages: usize,
+    pub(crate) batcher: BatcherConfig,
+    pub(crate) queue_depth: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn constructors_cover_the_three_shapes() {
+        let flat = Deployment::replicated(3);
+        assert_eq!(flat.group_sizes(), vec![1, 1, 1]);
+        assert_eq!(flat.total_stages(), 3);
+        let chain = Deployment::chain(4);
+        assert_eq!(chain.group_sizes(), vec![4]);
+        let rc = Deployment::replicated_chains(2, 3);
+        assert_eq!(rc.group_sizes(), vec![3, 3]);
+        assert_eq!(rc.total_stages(), 6);
+    }
+
+    #[test]
+    fn normalization_clamps_degenerates() {
+        let d = Deployment { groups: vec![], queue_depth: 0, ..Deployment::default() }
+            .normalized();
+        assert_eq!(d.group_count(), 1);
+        assert_eq!(d.queue_depth, 1);
+        let d = Deployment {
+            groups: vec![ChainGroup::new(0)],
+            ..Deployment::default()
+        }
+        .normalized();
+        assert_eq!(d.group_sizes(), vec![1]);
+        // degenerate constructor args clamp too
+        assert_eq!(Deployment::replicated(0).group_count(), 1);
+        assert_eq!(Deployment::chain(0).group_sizes(), vec![1]);
+    }
+
+    #[test]
+    fn group_keys_diff_on_tag_shape_and_batcher() {
+        let base = Deployment::replicated_chains(2, 2);
+        assert_eq!(base.group_key(0), base.group_key(1), "untagged same-shape groups match");
+        let mut tagged = base.clone();
+        tagged.groups[1].tag = Some("g1".into());
+        assert_ne!(tagged.group_key(0), tagged.group_key(1));
+        let mut other = base.clone();
+        other.groups[1].stages = 3;
+        assert_ne!(base.group_key(1), other.group_key(1));
+        let mut batched = base.clone();
+        batched.groups[1].batcher =
+            Some(BatcherConfig { max_batch: 9, max_wait: Duration::from_millis(1) });
+        assert_ne!(base.group_key(1), batched.group_key(1));
+        // a queue-depth change invalidates every key (full swap on apply)
+        let deeper = base.clone().with_queue_depth(base.queue_depth + 1);
+        assert_ne!(base.group_key(0), deeper.group_key(0));
+    }
+
+    #[test]
+    fn group_batcher_falls_back_to_the_default() {
+        let own = BatcherConfig { max_batch: 7, max_wait: Duration::from_micros(300) };
+        let mut d = Deployment::replicated(2);
+        d.groups[1].batcher = Some(own);
+        assert_eq!(d.group_batcher(0), d.batcher);
+        assert_eq!(d.group_batcher(1), own);
+        // out of range falls back too (callers guard separately)
+        assert_eq!(d.group_batcher(9), d.batcher);
+    }
+}

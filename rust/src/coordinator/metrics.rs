@@ -1,14 +1,15 @@
 //! Serving metrics: latency percentiles, throughput and batch-size
-//! statistics — per replica and fleet-wide — plus the admission-control
-//! counters (submitted / shed) the overload experiments report.
+//! statistics — fleet-wide, per chain group (end-to-end) and per worker
+//! (per-stage transit for chains) — plus the admission-control counters
+//! (submitted / shed) the overload experiments report.
 
 use std::time::Duration;
 
 use super::Completion;
 use crate::util::stats::{summarize, Summary};
 
-/// Collects per-request completions for one stream (one replica, or the
-/// whole fleet when driven through [`FleetMetrics`]).
+/// Collects per-request completions for one stream (one worker, one chain
+/// group, or the whole fleet when driven through [`FleetMetrics`]).
 #[derive(Default)]
 pub struct Metrics {
     latencies_ms: Vec<f64>,
@@ -75,7 +76,7 @@ impl Metrics {
         }
     }
 
-    /// Summarize, or `None` when nothing was recorded (idle replicas).
+    /// Summarize, or `None` when nothing was recorded (idle workers).
     pub fn try_summary(&self) -> Option<ServeSummary> {
         if self.latencies_ms.is_empty() {
             None
@@ -102,64 +103,111 @@ impl std::fmt::Display for ServeSummary {
     }
 }
 
-/// Fleet-wide metrics: one [`Metrics`] per replica, one for the whole
-/// fleet, and the admission-control counters.
+/// Fleet-wide metrics shaped to a deployment: one [`Metrics`] per worker,
+/// one per chain group (end-to-end), one for the whole fleet, and the
+/// admission-control counters.
 pub struct FleetMetrics {
     fleet: Metrics,
+    per_group: Vec<Metrics>,
     per_replica: Vec<Metrics>,
+    /// Flat worker offset of each group (`per_replica[offsets[g] + s]` is
+    /// stage `s` of group `g`).
+    offsets: Vec<usize>,
+    /// Configured stage count per group — per-stage writes are bounded by
+    /// it so a shape-mismatched completion can never bleed into the next
+    /// group's worker slots.
+    sizes: Vec<usize>,
     submitted: usize,
     shed: usize,
 }
 
-/// Fleet summary: the fleet-wide view plus per-replica breakdowns (idle
-/// replicas report `None`) and the admission-control counters.
+/// Fleet summary: the fleet-wide view, the per-chain-group end-to-end
+/// breakdown (the replicated-chain experiments read group p99 here), the
+/// per-worker breakdown (per-stage transit for chains; idle workers
+/// report `None`) and the admission-control counters.
 #[derive(Clone, Debug)]
 pub struct FleetSummary {
     /// Fleet-wide summary; `None` when nothing completed.
     pub fleet: Option<ServeSummary>,
-    /// Per-replica summaries; `None` for replicas that served nothing.
+    /// Per-chain-group **end-to-end** summaries (queue + every stage +
+    /// links), in router order; `None` for groups that served nothing.
+    pub per_group: Vec<Option<ServeSummary>>,
+    /// Per-worker summaries, flat in group-then-stage order; for chain
+    /// groups each entry is that *stage's* transit latency, so the slow
+    /// stage is localizable while [`FleetSummary::per_group`] answers the
+    /// SLO question.
     pub per_replica: Vec<Option<ServeSummary>>,
     /// Requests accepted by admission control.
     pub submitted: usize,
-    /// Requests shed because every replica queue was full.
+    /// Requests shed because every group entry queue was full.
     pub shed: usize,
 }
 
 impl FleetMetrics {
-    /// Empty collectors for a fleet of `replicas` workers.
-    pub fn new(replicas: usize) -> FleetMetrics {
+    /// Empty collectors for a deployment with the given per-group stage
+    /// counts (`group_sizes[g]` workers in group `g`); `&[1, 1, 1]` is a
+    /// flat 3-replica fleet, `&[3]` a single 3-stage chain.
+    pub fn new(group_sizes: &[usize]) -> FleetMetrics {
+        let mut offsets = Vec::with_capacity(group_sizes.len());
+        let mut total = 0usize;
+        for &k in group_sizes {
+            offsets.push(total);
+            total += k.max(1);
+        }
         FleetMetrics {
             fleet: Metrics::new(),
-            per_replica: (0..replicas).map(|_| Metrics::new()).collect(),
+            per_group: group_sizes.iter().map(|_| Metrics::new()).collect(),
+            per_replica: (0..total).map(|_| Metrics::new()).collect(),
+            offsets,
+            sizes: group_sizes.iter().map(|&k| k.max(1)).collect(),
             submitted: 0,
             shed: 0,
         }
     }
 
+    /// Collectors for a flat fleet of `workers` 1-stage groups.
+    pub fn flat(workers: usize) -> FleetMetrics {
+        FleetMetrics::new(&vec![1; workers])
+    }
+
     /// Mark the start of the measurement window on every collector.
     pub fn start(&mut self) {
         self.fleet.start();
+        for m in &mut self.per_group {
+            m.start();
+        }
         for m in &mut self.per_replica {
             m.start();
         }
     }
 
-    /// Record a completion against the fleet and its serving replica.
+    /// Record a completion against the fleet, its chain group and its
+    /// serving worker(s).
     ///
-    /// Stage-chain completions (non-empty [`Completion::stage_latencies`])
-    /// split differently: the fleet collector sees the end-to-end latency
-    /// while each per-replica collector sees that *stage's* transit
-    /// latency, so per-replica percentiles localize the slow stage and the
-    /// fleet percentiles answer the SLO question.
+    /// The fleet and group collectors always see the end-to-end latency.
+    /// Chain completions (non-empty [`Completion::stage_latencies`])
+    /// split the worker view differently: each stage's collector sees
+    /// that *stage's* transit latency, so per-worker percentiles localize
+    /// the slow stage. Completions from outside the configured shape —
+    /// an unknown group, or stages beyond the group's configured depth —
+    /// are counted fleet-wide only (never attributed to a neighbouring
+    /// group's worker slots).
     pub fn record(&mut self, c: &Completion) {
         self.fleet.record(c.latency, c.batch_size);
+        if let Some(m) = self.per_group.get_mut(c.group) {
+            m.record(c.latency, c.batch_size);
+        }
+        let Some(&base) = self.offsets.get(c.group) else { return };
+        let size = self.sizes[c.group];
         if c.stage_latencies.is_empty() {
-            if let Some(m) = self.per_replica.get_mut(c.replica) {
-                m.record(c.latency, c.batch_size);
+            if c.stage < size {
+                if let Some(m) = self.per_replica.get_mut(base + c.stage) {
+                    m.record(c.latency, c.batch_size);
+                }
             }
         } else {
-            for (i, &lat) in c.stage_latencies.iter().enumerate() {
-                if let Some(m) = self.per_replica.get_mut(i) {
+            for (i, &lat) in c.stage_latencies.iter().take(size).enumerate() {
+                if let Some(m) = self.per_replica.get_mut(base + i) {
                     let batch = c.stage_batches.get(i).copied().unwrap_or(c.batch_size);
                     m.record(lat, batch);
                 }
@@ -192,10 +240,11 @@ impl FleetMetrics {
         self.shed
     }
 
-    /// Summarize fleet and replicas.
+    /// Summarize fleet, groups and workers.
     pub fn summary(&self) -> FleetSummary {
         FleetSummary {
             fleet: self.fleet.try_summary(),
+            per_group: self.per_group.iter().map(Metrics::try_summary).collect(),
             per_replica: self.per_replica.iter().map(Metrics::try_summary).collect(),
             submitted: self.submitted,
             shed: self.shed,
@@ -212,6 +261,16 @@ impl std::fmt::Display for FleetSummary {
                 "fleet: no completions | submitted {} shed {}",
                 self.submitted, self.shed
             )?,
+        }
+        // the group view adds information only when groups are chains
+        // (for flat fleets it would duplicate the per-worker lines)
+        if self.per_group.len() != self.per_replica.len() {
+            for (g, s) in self.per_group.iter().enumerate() {
+                match s {
+                    Some(s) => write!(f, "\n  group {g} (e2e): {s}")?,
+                    None => write!(f, "\n  group {g} (e2e): idle")?,
+                }
+            }
         }
         for (i, s) in self.per_replica.iter().enumerate() {
             match s {
@@ -256,21 +315,22 @@ mod tests {
         assert_eq!(m.try_summary().unwrap().requests, 1);
     }
 
-    fn completion(id: u64, replica: usize, ms: u64, batch: usize) -> Completion {
+    fn completion(id: u64, group: usize, ms: u64, batch: usize) -> Completion {
         Completion {
             id,
             output: vec![0.0],
             latency: Duration::from_millis(ms),
             batch_size: batch,
-            replica,
+            group,
+            stage: 0,
             stage_latencies: Vec::new(),
             stage_batches: Vec::new(),
         }
     }
 
     #[test]
-    fn fleet_metrics_split_by_replica() {
-        let mut fm = FleetMetrics::new(3);
+    fn fleet_metrics_split_by_group() {
+        let mut fm = FleetMetrics::flat(3);
         fm.start();
         for i in 0..6 {
             fm.record_submitted();
@@ -284,28 +344,58 @@ mod tests {
         assert_eq!(s.fleet.as_ref().unwrap().requests, 6);
         assert_eq!(s.per_replica[0].as_ref().unwrap().requests, 3);
         assert_eq!(s.per_replica[1].as_ref().unwrap().requests, 3);
-        assert!(s.per_replica[2].is_none(), "replica 2 never served");
-        // the display renders fleet and per-replica lines
+        assert!(s.per_replica[2].is_none(), "group 2 never served");
+        // flat fleets mirror the worker view in the group view
+        assert_eq!(s.per_group[0].as_ref().unwrap().requests, 3);
+        // the display renders fleet and per-worker lines (group lines are
+        // suppressed for flat fleets — they would be duplicates)
         let text = format!("{s}");
         assert!(text.contains("replica 2: idle"), "{text}");
+        assert!(!text.contains("group 2"), "{text}");
         assert!(text.contains("shed 1"), "{text}");
     }
 
     #[test]
-    fn out_of_range_replica_ignored_gracefully() {
-        let mut fm = FleetMetrics::new(1);
+    fn out_of_range_group_ignored_gracefully() {
+        let mut fm = FleetMetrics::flat(1);
         fm.start();
         fm.record(&completion(0, 5, 1, 1));
         assert_eq!(fm.completed(), 1);
         assert!(fm.summary().per_replica[0].is_none());
+        assert!(fm.summary().per_group[0].is_none());
+    }
+
+    #[test]
+    fn stage_overflow_never_bleeds_into_the_next_group() {
+        // two 1-stage groups; a malformed completion claiming group 0 ran
+        // 2 chain stages (or a flat stage index of 1) must not land its
+        // extra latency in group 1's worker slot
+        let mut fm = FleetMetrics::new(&[1, 1]);
+        fm.start();
+        let mut chained = completion(0, 0, 20, 1);
+        chained.stage_latencies = vec![Duration::from_millis(10), Duration::from_millis(10)];
+        chained.stage_batches = vec![1, 1];
+        fm.record(&chained);
+        let mut flat = completion(1, 0, 5, 1);
+        flat.stage = 1;
+        fm.record(&flat);
+        let s = fm.summary();
+        // both counted fleet-wide and against group 0's e2e view...
+        assert_eq!(s.fleet.as_ref().unwrap().requests, 2);
+        assert_eq!(s.per_group[0].as_ref().unwrap().requests, 2);
+        // ...group 0's worker saw only its one in-shape stage, and group
+        // 1's worker saw nothing at all
+        assert_eq!(s.per_replica[0].as_ref().unwrap().requests, 1);
+        assert!(s.per_replica[1].is_none(), "stage overflow bled into group 1");
     }
 
     #[test]
     fn chain_completions_split_per_stage_and_end_to_end() {
-        let mut fm = FleetMetrics::new(3);
+        let mut fm = FleetMetrics::new(&[3]);
         fm.start();
         for i in 0..4 {
-            let mut c = completion(i, 2, 60, 1);
+            let mut c = completion(i, 0, 60, 1);
+            c.stage = 2;
             c.stage_latencies = vec![
                 Duration::from_millis(10),
                 Duration::from_millis(40),
@@ -315,10 +405,11 @@ mod tests {
             fm.record(&c);
         }
         let s = fm.summary();
-        // the fleet sees end-to-end latency...
+        // the fleet and the group see the end-to-end latency...
         assert!((s.fleet.as_ref().unwrap().latency_ms.median - 60.0).abs() < 1e-9);
+        assert!((s.per_group[0].as_ref().unwrap().latency_ms.median - 60.0).abs() < 1e-9);
         // ...while each stage collector sees its own transit latency, so
-        // the bottleneck stage is visible in the per-replica percentiles
+        // the bottleneck stage is visible in the per-worker percentiles
         let stage_medians: Vec<f64> = s
             .per_replica
             .iter()
@@ -334,5 +425,34 @@ mod tests {
             .map(|r| r.as_ref().unwrap().mean_batch)
             .collect();
         assert_eq!(stage_batches, vec![4.0, 2.0, 1.0]);
+        // chained shape: the display carries the group e2e line
+        let text = format!("{s}");
+        assert!(text.contains("group 0 (e2e)"), "{text}");
+    }
+
+    #[test]
+    fn replicated_chains_report_per_group_e2e_p99() {
+        // 2 groups × 2 stages; group 1 is twice as slow end-to-end
+        let mut fm = FleetMetrics::new(&[2, 2]);
+        fm.start();
+        for i in 0..8 {
+            let g = (i % 2) as usize;
+            let ms = if g == 0 { 20 } else { 40 };
+            let mut c = completion(i, g, ms, 1);
+            c.stage = 1;
+            c.stage_latencies =
+                vec![Duration::from_millis(ms / 2), Duration::from_millis(ms / 2)];
+            c.stage_batches = vec![1, 1];
+            fm.record(&c);
+        }
+        let s = fm.summary();
+        assert_eq!(s.per_group.len(), 2);
+        assert_eq!(s.per_replica.len(), 4);
+        let g0 = s.per_group[0].as_ref().unwrap();
+        let g1 = s.per_group[1].as_ref().unwrap();
+        assert!((g0.latency_ms.p99 - 20.0).abs() < 1e-9, "{}", g0.latency_ms.p99);
+        assert!((g1.latency_ms.p99 - 40.0).abs() < 1e-9, "{}", g1.latency_ms.p99);
+        // group 1's stages land in flat worker slots 2 and 3
+        assert!((s.per_replica[2].as_ref().unwrap().latency_ms.median - 20.0).abs() < 1e-9);
     }
 }

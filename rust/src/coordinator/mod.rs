@@ -3,49 +3,54 @@
 //! bounded mpsc channels provide the async substrate, see DESIGN.md
 //! substitutions).
 //!
-//! Architecture (data-center FPGA serving, scaled to this paper's porting
-//! story: one accelerator design deployed on a *heterogeneous* fleet of
-//! devices with different per-device throughput):
+//! The fleet topology is one composable abstraction: a [`Deployment`] is
+//! an ordered set of [`ChainGroup`]s, each a k-stage pipeline chain.
+//! `N × 1` is the flat replicated fleet, `1 × k` a single sharded stage
+//! chain, and `N × k` the replicated-chain shape that lifts sharded
+//! throughput beyond one pipeline:
 //!
 //! ```text
 //!  clients ──> Server (router)
 //!                 │ admission control: bounded queues, shed on overload
 //!                 │ Scheduler: round-robin | join-shortest-queue | weighted
 //!                 │           (weights = analytic sim/timing capacity of
-//!                 │            each replica's device + FCMP configuration)
-//!        ┌────────┼─────────────┐
-//!        v        v             v
-//!   replica 0  replica 1 ... replica N-1     each: bounded queue
-//!        │        │             │                  → dynamic batcher
-//!        └────────┴──────┬──────┘                  → worker thread owning
-//!                        v                            its InferBackend
-//!              completions (id, latency, batch, replica)
-//!                        │
-//!                        v
-//!              FleetMetrics: p50/p95/p99 per replica + fleet-wide,
-//!                            submitted/shed counters
+//!                 │            each group's devices + FCMP configuration)
+//!        ┌────────┼──────────────────┐
+//!        v        v                  v
+//!    group 0   group 1     ...   group N-1      each group: k chained
+//!    s0→…→sk   s0→…→sk           s0→…→sk        stages, each stage a
+//!        │        │                  │          bounded queue → dynamic
+//!        └────────┴────────┬─────────┘          batcher → worker thread
+//!                          v                    owning its InferBackend
+//!          completions (id, group, stage, e2e + per-stage latency)
+//!                          │
+//!                          v
+//!          FleetMetrics: p50/p95/p99 fleet-wide, per group (e2e) and
+//!                        per stage, submitted/shed counters
 //! ```
 //!
-//! A replica group can also be a **stage chain** (pipeline-parallel
-//! sharding, [`crate::sharding`]): [`Server::start_chain`] wires stage
-//! `i`'s outputs into stage `i+1`'s bounded queue, every frame traverses
-//! stages `0..k-1` in order, and the final completion carries per-stage
-//! transit latencies plus the end-to-end latency ([`FleetMetrics`] then
-//! reports per-stage queues and an end-to-end p99).
+//! Frames enter a group at its stage 0; each stage's outputs forward into
+//! the next stage's bounded queue (the inter-device FIFO — a full
+//! downstream queue backpressures the upstream worker), and only the final
+//! stage emits completions, carrying per-stage latencies plus the
+//! end-to-end latency.
 //!
-//! Module map: [`policy`] (scheduling), `replica` (worker shard, private),
-//! [`capacity`] (analytic capacity weights), [`server`] (router, admission
-//! control, shutdown-drain), [`batcher`] (size-or-deadline batching),
+//! Module map: [`deployment`] (the topology plan), [`policy`] (group
+//! scheduling), `replica` (stage worker, private), [`capacity`] (analytic
+//! capacity weights), [`server`] (router, admission control, group
+//! diffing, shutdown-drain), [`batcher`] (size-or-deadline batching),
 //! [`metrics`] (latency percentiles), [`workload`] (arrival traces).
 //!
-//! The fleet shape is **not** static: [`Server::reconfigure`] /
-//! [`Server::reconfigure_chain`] drain-and-swap the replica set on a live
-//! completion stream, and [`Server::set_batcher`] retunes a running
-//! replica's batching window in place — the actuation surface of the
-//! adaptive control plane ([`crate::control`]).
+//! The fleet shape is **not** static: [`Server::apply`] diffs a new plan
+//! against the running one at chain-group granularity — unchanged groups
+//! keep serving, removed groups drain, added groups spawn on the same
+//! live completion stream — and [`Server::set_batcher`] retunes a running
+//! worker's batching window in place. Together they are the actuation
+//! surface of the adaptive control plane ([`crate::control`]).
 
 pub mod batcher;
 pub mod capacity;
+pub mod deployment;
 pub mod metrics;
 pub mod policy;
 mod replica;
@@ -53,10 +58,14 @@ pub mod server;
 pub mod workload;
 
 pub use batcher::{Batch, BatcherConfig, SharedBatcher};
-pub use capacity::{fleet_weights, replica_fps, shard_service_times, ReplicaSpec};
+pub use capacity::{
+    chain_fps, fleet_weights, group_weights, mock_chain_service, mock_chain_service_from_fps,
+    mock_service_from_fps, mock_service_time, replica_fps, shard_service_times, ReplicaSpec,
+};
+pub use deployment::{ChainGroup, Deployment, WorkerId};
 pub use metrics::{FleetMetrics, FleetSummary, Metrics, ServeSummary};
 pub use policy::{Policy, Scheduler};
-pub use server::{InferBackend, MockBackend, Server, ServerConfig, SubmitError};
+pub use server::{InferBackend, MockBackend, Server, SubmitError};
 pub use workload::{bursty, diurnal, flash_crowd, heavy_tail, poisson, uniform, Trace};
 
 use std::time::{Duration, Instant};
@@ -70,11 +79,11 @@ pub struct Request {
     pub input: Vec<f32>,
     /// Submission time (end-to-end latency accounting starts here).
     pub arrival: Instant,
-    /// Arrival at the *current* stage of a stage chain (== `arrival` until
+    /// Arrival at the *current* stage of a chain group (== `arrival` until
     /// the first hop; reset at every chain forward).
     pub stage_arrival: Instant,
-    /// Per-stage latencies accumulated while traversing a stage chain
-    /// (empty on replicated fleets).
+    /// Per-stage latencies accumulated while traversing a chain group
+    /// (empty on 1-stage groups).
     pub stage_latencies: Vec<Duration>,
     /// Batch size the frame rode in at each traversed stage (parallel to
     /// `stage_latencies`).
@@ -103,15 +112,20 @@ pub struct Completion {
     pub id: u64,
     /// Flattened output row.
     pub output: Vec<f32>,
-    /// Queue + batch + execute latency — end-to-end across every stage for
-    /// chain deployments.
+    /// Queue + batch + execute latency — end-to-end across every stage of
+    /// the serving chain group.
     pub latency: std::time::Duration,
     /// Size of the batch this request rode in (at the final stage).
     pub batch_size: usize,
-    /// Index of the replica that served it (the last stage of a chain).
-    pub replica: usize,
-    /// Per-stage latencies for stage-chain deployments, in traversal order
-    /// (`len == chain length`); empty on replicated fleets.
+    /// Index of the chain group that served it, at its *current* position
+    /// in the deployment (groups kept across [`Server::apply`] stamp
+    /// their new index).
+    pub group: usize,
+    /// Stage within the group that emitted the completion (`k - 1` for a
+    /// k-stage chain, `0` for a plain replica).
+    pub stage: usize,
+    /// Per-stage latencies for chain groups, in traversal order
+    /// (`len == chain length`); empty on 1-stage groups.
     pub stage_latencies: Vec<Duration>,
     /// Per-stage batch sizes, parallel to `stage_latencies` (each stage
     /// batches independently).

@@ -1,49 +1,45 @@
-//! Pluggable scheduling policies for the multi-replica router.
+//! Pluggable scheduling policies for the deployment router.
 //!
-//! The router calls [`Scheduler::pick`] with the current per-replica
-//! outstanding-request counts and gets back the replica index to try first.
-//! All three policies are **deterministic**: given the same sequence of
-//! `pick` calls with the same observed counts they produce the same replica
-//! sequence, which is what the policy unit tests and the serving integration
-//! tests assert exact dispatch counts against.
+//! The router calls [`Scheduler::pick`] with the current per-chain-group
+//! outstanding-request counts and gets back the *group* index to try
+//! first (frames always enter a group at its stage 0; the stages forward
+//! them onward themselves). All three policies are **deterministic**:
+//! given the same sequence of `pick` calls with the same observed counts
+//! they produce the same group sequence, which is what the policy unit
+//! tests and the serving integration tests assert exact dispatch counts
+//! against. A single-group deployment (one chain) trivially always picks
+//! group 0 under every policy.
 //!
-//! * [`Policy::RoundRobin`] — cycle through replicas in fixed order,
+//! * [`Policy::RoundRobin`] — cycle through groups in fixed order,
 //!   ignoring load. Optimal for a homogeneous fleet under smooth arrivals.
-//! * [`Policy::JoinShortestQueue`] — send each request to the replica with
-//!   the fewest outstanding requests (queued + executing), ties broken
-//!   toward the lowest index. Adapts to heterogeneous service rates without
-//!   knowing them.
+//! * [`Policy::JoinShortestQueue`] — send each request to the group with
+//!   the fewest outstanding requests (queued + executing, summed over the
+//!   group's stages), ties broken toward the lowest index. Adapts to
+//!   heterogeneous service rates without knowing them.
 //! * [`Policy::Weighted`] — smooth weighted round-robin (the nginx SWRR
-//!   algorithm) over per-replica capacity weights. For heterogeneous fleets
-//!   the weights come from the analytic `sim`/`timing` throughput model of
-//!   each replica's device + FCMP operating point
-//!   (see [`crate::coordinator::capacity`]).
+//!   algorithm) over per-group capacity weights. For heterogeneous fleets
+//!   the weights come from the analytic `sim`/`timing` throughput model
+//!   of each group's devices + FCMP operating points — per-replica via
+//!   [`crate::coordinator::capacity::fleet_weights`], per-chain via
+//!   [`crate::coordinator::capacity::chain_fps`] over
+//!   [`crate::coordinator::capacity::shard_service_times`].
 
-/// Which replica the router hands the next request to.
+/// Which chain group the router hands the next request to.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Policy {
     /// Fixed-order cycling, load-blind.
     RoundRobin,
     /// Least outstanding requests (queued + executing); ties to lowest index.
     JoinShortestQueue,
-    /// Smooth weighted round-robin over per-replica capacity weights
+    /// Smooth weighted round-robin over per-group capacity weights
     /// (requests/s from the analytic model; any positive scale works).
     Weighted(Vec<f64>),
-    /// The replicas form a pipeline-parallel stage chain
-    /// ([`crate::coordinator::Server::start_chain`]): every new frame
-    /// enters stage 0 and the stages forward it 0→1→…→k-1 themselves, so
-    /// the router always picks 0 and never falls back to a mid-chain
-    /// stage.
-    StageChain,
 }
 
 impl Policy {
-    /// Parse a CLI policy name. `weights` are the capacity weights consumed
-    /// by the `weighted` policy and ignored by the other two.
-    /// [`Policy::StageChain`] is deliberately not parseable: it only makes
-    /// sense for fleets built by `Server::start_chain`, which sets it
-    /// itself — on a replicated fleet it would silently pin every request
-    /// to replica 0.
+    /// Parse a CLI policy name. `weights` are the per-group capacity
+    /// weights consumed by the `weighted` policy and ignored by the other
+    /// two.
     pub fn by_name(name: &str, weights: Vec<f64>) -> Option<Policy> {
         match name {
             "rr" | "round-robin" | "round_robin" => Some(Policy::RoundRobin),
@@ -59,34 +55,34 @@ impl Policy {
             Policy::RoundRobin => "round-robin",
             Policy::JoinShortestQueue => "jsq",
             Policy::Weighted(_) => "weighted",
-            Policy::StageChain => "stage-chain",
         }
     }
 }
 
-/// Mutable picker state for one fleet: owns the round-robin cursor and the
-/// SWRR credit vector so [`Policy`] itself stays an immutable description.
+/// Mutable picker state for one deployment: owns the round-robin cursor
+/// and the SWRR credit vector so [`Policy`] itself stays an immutable
+/// description.
 #[derive(Clone, Debug)]
 pub struct Scheduler {
     policy: Policy,
-    replicas: usize,
+    groups: usize,
     rr_next: usize,
     weights: Vec<f64>,
     swrr_credit: Vec<f64>,
 }
 
 impl Scheduler {
-    /// Build a scheduler for `replicas` workers. Weighted policies are
-    /// normalized to the fleet size: missing weights default to 1.0, extra
-    /// weights are dropped, and non-positive weights are clamped up so no
-    /// replica is starved forever.
-    pub fn new(policy: Policy, replicas: usize) -> Scheduler {
-        assert!(replicas > 0, "scheduler needs at least one replica");
+    /// Build a scheduler over `groups` chain groups. Weighted policies
+    /// are normalized to the group count: missing weights default to 1.0,
+    /// extra weights are dropped, and non-positive weights are clamped up
+    /// so no group is starved forever.
+    pub fn new(policy: Policy, groups: usize) -> Scheduler {
+        assert!(groups > 0, "scheduler needs at least one chain group");
         let mut weights = match &policy {
             Policy::Weighted(w) => w.clone(),
-            _ => vec![1.0; replicas],
+            _ => vec![1.0; groups],
         };
-        weights.resize(replicas, 1.0);
+        weights.resize(groups, 1.0);
         for w in &mut weights {
             if !w.is_finite() || *w <= 0.0 {
                 *w = 1e-3;
@@ -94,9 +90,9 @@ impl Scheduler {
         }
         Scheduler {
             policy,
-            replicas,
+            groups,
             rr_next: 0,
-            swrr_credit: vec![0.0; replicas],
+            swrr_credit: vec![0.0; groups],
             weights,
         }
     }
@@ -106,25 +102,26 @@ impl Scheduler {
         &self.policy
     }
 
-    /// Pick the preferred replica for the next request. `outstanding[i]`
-    /// is replica `i`'s current outstanding-request count (queued +
-    /// executing); only [`Policy::JoinShortestQueue`] reads it, so callers
-    /// running a load-blind policy may pass an empty slice to skip the
-    /// snapshot (JSQ treats an empty slice as all-idle and picks 0).
+    /// Pick the preferred chain group for the next request.
+    /// `outstanding[g]` is group `g`'s current outstanding-request count
+    /// (queued + executing, summed over its stages); only
+    /// [`Policy::JoinShortestQueue`] reads it, so callers running a
+    /// load-blind policy may pass an empty slice to skip the snapshot
+    /// (JSQ treats an empty slice as all-idle and picks 0).
     pub fn pick(&mut self, outstanding: &[usize]) -> usize {
         debug_assert!(
-            outstanding.is_empty() || outstanding.len() == self.replicas,
+            outstanding.is_empty() || outstanding.len() == self.groups,
             "load snapshot arity mismatch"
         );
         match self.policy {
             Policy::RoundRobin => {
                 let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.replicas;
+                self.rr_next = (self.rr_next + 1) % self.groups;
                 i
             }
             Policy::JoinShortestQueue => {
                 let mut best = 0;
-                for i in 1..outstanding.len().min(self.replicas) {
+                for i in 1..outstanding.len().min(self.groups) {
                     if outstanding[i] < outstanding[best] {
                         best = i;
                     }
@@ -134,7 +131,7 @@ impl Scheduler {
             Policy::Weighted(_) => {
                 let total: f64 = self.weights.iter().sum();
                 let mut best = 0;
-                for i in 0..self.replicas {
+                for i in 0..self.groups {
                     self.swrr_credit[i] += self.weights[i];
                     if self.swrr_credit[i] > self.swrr_credit[best] {
                         best = i;
@@ -143,8 +140,6 @@ impl Scheduler {
                 self.swrr_credit[best] -= total;
                 best
             }
-            // chains always ingest at stage 0; the stages forward onward
-            Policy::StageChain => 0,
         }
     }
 }
@@ -171,12 +166,12 @@ mod tests {
 
     #[test]
     fn swrr_matches_weight_ratio_exactly() {
-        // weights 3:1 => pattern of period 4 with 3 picks of replica 0
+        // weights 3:1 => pattern of period 4 with 3 picks of group 0
         let mut s = Scheduler::new(Policy::Weighted(vec![3.0, 1.0]), 2);
         let picks: Vec<usize> = (0..40).map(|_| s.pick(&[0, 0])).collect();
         let c0 = picks.iter().filter(|&&p| p == 0).count();
         assert_eq!(c0, 30, "picks {picks:?}");
-        // smooth: never more than 3 consecutive picks of the heavy replica
+        // smooth: never more than 3 consecutive picks of the heavy group
         let max_run = picks
             .windows(4)
             .filter(|w| w.iter().all(|&p| p == 0))
@@ -192,12 +187,12 @@ mod tests {
     }
 
     #[test]
-    fn weight_vector_is_normalized_to_fleet_size() {
+    fn weight_vector_is_normalized_to_group_count() {
         // short vector pads with 1.0; bad weights are clamped positive
         let mut s = Scheduler::new(Policy::Weighted(vec![2.0]), 3);
         let picks: Vec<usize> = (0..8).map(|_| s.pick(&[0, 0, 0])).collect();
-        for r in 0..3 {
-            assert!(picks.contains(&r), "replica {r} starved: {picks:?}");
+        for g in 0..3 {
+            assert!(picks.contains(&g), "group {g} starved: {picks:?}");
         }
         let mut s = Scheduler::new(Policy::Weighted(vec![-1.0, f64::NAN, 1.0]), 3);
         let picks: Vec<usize> = (0..2000).map(|_| s.pick(&[0, 0, 0])).collect();
@@ -211,17 +206,22 @@ mod tests {
             assert_eq!(p.name(), name);
         }
         assert!(Policy::by_name("magic", vec![]).is_none());
-        // stage-chain is not a router policy users can pick for a
-        // replicated fleet; only Server::start_chain installs it
+        // the old chain pseudo-policy is gone: a chain is a 1-group
+        // deployment, and every policy picks group 0 there
         assert!(Policy::by_name("stage-chain", vec![]).is_none());
-        assert_eq!(Policy::StageChain.name(), "stage-chain");
     }
 
     #[test]
-    fn stage_chain_always_enters_at_stage_zero() {
-        let mut s = Scheduler::new(Policy::StageChain, 4);
-        for _ in 0..10 {
-            assert_eq!(s.pick(&[5, 0, 0, 0]), 0);
+    fn single_group_deployments_always_pick_zero() {
+        for policy in [
+            Policy::RoundRobin,
+            Policy::JoinShortestQueue,
+            Policy::Weighted(vec![2.5]),
+        ] {
+            let mut s = Scheduler::new(policy, 1);
+            for _ in 0..10 {
+                assert_eq!(s.pick(&[5]), 0);
+            }
         }
     }
 

@@ -1,15 +1,17 @@
-//! One worker replica of the serving fleet: a bounded request queue, its own
-//! dynamic batcher, and an [`InferBackend`] constructed *inside* the worker
+//! One worker of a deployment: a bounded request queue, its own dynamic
+//! batcher, and an [`InferBackend`] constructed *inside* the worker
 //! thread (PJRT handles are thread-affine, so only the factory closure
 //! crosses threads). The router sees a replica as (bounded sender,
-//! outstanding-request counter); completions from all replicas merge into
+//! outstanding-request counter); completions from every group merge into
 //! the fleet-wide completion channel.
 //!
-//! A replica's output side is a [`Sink`]: terminal replicas emit
-//! [`Completion`]s; chained replicas (pipeline-parallel sharding,
-//! [`crate::sharding`]) forward each output as the next stage's
-//! [`Request`] over that stage's bounded queue — the blocking send *is*
-//! the inter-device FIFO backpressure.
+//! A replica's output side is a [`Sink`]: the final stage of a chain
+//! group emits [`Completion`]s stamped with the group's *current*
+//! position (groups can move when [`crate::coordinator::Server::apply`]
+//! reshapes the plan around them, so the position lives in a shared
+//! atomic rather than being baked in at spawn); mid-chain stages forward
+//! each output as the next stage's [`Request`] over that stage's bounded
+//! queue — the blocking send *is* the inter-device FIFO backpressure.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Sender, SyncSender, TrySendError};
@@ -18,11 +20,12 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::batcher::{next_batch, BatcherConfig, SharedBatcher};
+use super::deployment::WorkerId;
 use super::server::InferBackend;
 use super::{Completion, Request};
 
 /// Outcome of a non-blocking submit to one replica. The request rides back
-/// in the error so the router can try another replica without copying.
+/// in the error so the router can try another group without copying.
 pub(crate) enum TrySubmit {
     /// The replica's bounded queue is full (transient overload).
     Full(Request),
@@ -32,11 +35,16 @@ pub(crate) enum TrySubmit {
 
 /// Where a replica's outputs go.
 pub(crate) enum Sink {
-    /// Terminal stage: emit completions onto the fleet-wide stream.
-    Complete(Sender<Completion>),
-    /// Chain stage: forward each output as the next stage's request. The
-    /// downstream outstanding counter is incremented before the send, the
-    /// same discipline as [`Replica::try_submit`].
+    /// Final stage of a chain group: emit completions onto the
+    /// fleet-wide stream, stamped with the group's current position
+    /// (read from the shared cell at send time).
+    Complete {
+        tx: Sender<Completion>,
+        group: Arc<AtomicUsize>,
+    },
+    /// Mid-chain stage: forward each output as the next stage's request.
+    /// The downstream outstanding counter is incremented before the
+    /// send, the same discipline as [`Replica::try_submit`].
     Forward { next: SyncSender<Request>, next_outstanding: Arc<AtomicUsize> },
 }
 
@@ -52,12 +60,14 @@ pub(crate) struct Replica {
 }
 
 impl Replica {
-    /// Spawn replica `index`. The worker loops `next_batch -> infer_batch ->
-    /// sink` until the request channel is closed *and* drained, so a fleet
-    /// shutdown never drops accepted requests. A failed batch is dropped
-    /// (its completions never appear) but the replica keeps serving.
+    /// Spawn the worker for `id`. The worker loops `next_batch ->
+    /// infer_batch -> sink` until the request channel is closed *and*
+    /// drained, so a group drain never drops accepted requests. A failed
+    /// batch is dropped (its completions never appear) but the replica
+    /// keeps serving. The thread name reflects the spawn-time position;
+    /// completions track the group's live position via [`Sink::Complete`].
     pub(crate) fn spawn<B, F>(
-        index: usize,
+        id: WorkerId,
         make_backend: F,
         batcher: BatcherConfig,
         queue_depth: usize,
@@ -73,7 +83,7 @@ impl Replica {
         let shared = Arc::new(SharedBatcher::new(batcher));
         let shared_worker = Arc::clone(&shared);
         let worker = std::thread::Builder::new()
-            .name(format!("fcmp-replica-{index}"))
+            .name(format!("fcmp-g{}-s{}", id.group, id.stage))
             .spawn(move || {
                 let backend = make_backend();
                 while let Some(mut batch) = next_batch(&rx, &shared_worker.load()) {
@@ -86,14 +96,14 @@ impl Replica {
                     let n = batch.requests.len();
                     match backend.infer_batch(&inputs) {
                         Ok(outputs) => match &sink {
-                            Sink::Complete(tx) => {
+                            Sink::Complete { tx, group } => {
                                 for (req, output) in
                                     batch.requests.into_iter().zip(outputs)
                                 {
                                     let mut stage_latencies = req.stage_latencies;
                                     let mut stage_batches = req.stage_batches;
                                     // chain frames log the final hop too, so
-                                    // len == chain length; replicated-fleet
+                                    // len == chain length; 1-stage-group
                                     // completions keep the empty marker
                                     if !stage_latencies.is_empty() {
                                         stage_latencies.push(req.stage_arrival.elapsed());
@@ -104,7 +114,8 @@ impl Replica {
                                         output,
                                         latency: req.arrival.elapsed(),
                                         batch_size: n,
-                                        replica: index,
+                                        group: group.load(Ordering::SeqCst),
+                                        stage: id.stage,
                                         stage_latencies,
                                         stage_batches,
                                     });
@@ -129,7 +140,10 @@ impl Replica {
                             }
                         },
                         Err(e) => {
-                            eprintln!("replica {index}: batch failed: {e:#}");
+                            eprintln!(
+                                "worker g{}.s{}: batch failed: {e:#}",
+                                id.group, id.stage
+                            );
                         }
                     }
                     counter.fetch_sub(n, Ordering::SeqCst);

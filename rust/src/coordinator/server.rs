@@ -1,38 +1,51 @@
-//! The sharded serving fleet: a router dispatches requests to N worker
-//! replicas by a pluggable scheduling policy; each replica owns a bounded
+//! The serving fleet behind the unified [`Deployment`] topology: a router
+//! dispatches requests into chain groups by a pluggable scheduling policy;
+//! each group is a k-stage pipeline of workers, each worker owns a bounded
 //! queue, a dynamic batcher and its own [`InferBackend`]; completions from
-//! all replicas merge into one stream.
+//! every group merge into one stream.
 //!
 //! ```text
-//!  clients ──> Server::submit ── Scheduler (policy) picks replica
-//!                 │    admission control: full fleet => QueueFull (shed)
+//!  clients ──> Server::submit ── Scheduler (policy) picks a chain group
+//!                 │    admission control: all entries full => QueueFull
 //!                 v
-//!          ┌─ replica 0: bounded queue → batcher → worker(backend 0) ─┐
-//!          ├─ replica 1: bounded queue → batcher → worker(backend 1) ─┤──> completions
-//!          └─ replica k: bounded queue → batcher → worker(backend k) ─┘    (+ per-replica
-//!                                                                           latency metrics)
+//!       ┌─ group 0: stage 0 → stage 1 → … → stage k-1 ─┐
+//!       ├─ group 1: stage 0 → stage 1 → … → stage k-1 ─┤──> completions
+//!       └─ group N: stage 0 ──────────────────────────┘    (group, stage,
+//!            (k=1 ⇒ a plain replica)                        e2e + per-stage
+//!                                                           latencies)
 //! ```
 //!
-//! **Overload semantics.** Each replica's queue is bounded
-//! ([`ServerConfig::queue_depth`]). A non-blocking [`Server::submit`] tries
-//! the policy's preferred replica first, then the remaining replicas in
-//! ascending-load order; only when *every* open queue is full does it shed
-//! the request with [`SubmitError::QueueFull`] — graceful degradation, never
-//! unbounded memory. After [`Server::shutdown`] (or if all workers die) the
-//! error is [`SubmitError::Closed`] instead, so callers can tell "retry
-//! later" from "give up". Shutdown closes the queues and *drains* them:
-//! every accepted request still produces a completion before the workers
-//! exit.
+//! **Overload semantics.** Each stage's queue is bounded
+//! ([`Deployment::queue_depth`]). A non-blocking [`Server::submit`] tries
+//! the policy's preferred group first, then the remaining groups in
+//! ascending-load order; only when *every* open group entry is full does it
+//! shed the request with [`SubmitError::QueueFull`] — graceful degradation,
+//! never unbounded memory. Frames always enter a group at stage 0 and the
+//! stages forward them onward themselves, so the router can never route
+//! into the middle of a chain. After [`Server::shutdown`] (or if all
+//! workers die) the error is [`SubmitError::Closed`] instead, so callers
+//! can tell "retry later" from "give up". Shutdown closes the queues and
+//! *drains* them: every accepted request still produces a completion
+//! before the workers exit.
+//!
+//! **Reshaping.** [`Server::apply`] diffs a new [`Deployment`] against the
+//! running one at chain-group granularity: unchanged groups keep serving
+//! (their backends, queues and live batcher retunes survive), removed
+//! groups drain to completion first, and added groups spawn fresh on the
+//! same completion stream — the actuation surface of the adaptive control
+//! plane ([`crate::control`]).
 //!
 //! The backend is a trait so tests and benches run the full coordination
 //! path with [`MockBackend`] (no PJRT); `examples/serve_cifar.rs` and
 //! `fcmp serve --backend pjrt` plug in the real [`crate::runtime::Engine`].
 
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::batcher::BatcherConfig;
+use super::deployment::{Deployment, GroupKey, WorkerId};
 use super::metrics::FleetMetrics;
 use super::policy::{Policy, Scheduler};
 use super::replica::{Replica, Sink, TrySubmit};
@@ -59,7 +72,7 @@ impl InferBackend for crate::runtime::Engine {
 /// Deterministic mock backend for tests, benches and `fcmp serve --backend
 /// mock`: each output row is `[Σ inputs, batch_size]`, and a batch of `k`
 /// requests takes `base + per_item · k` of simulated service time. Scaling
-/// `base`/`per_item` per replica models a heterogeneous fleet.
+/// `base`/`per_item` per worker models a heterogeneous fleet.
 #[derive(Clone, Copy, Debug)]
 pub struct MockBackend {
     /// Fixed per-batch overhead (amortized by batching).
@@ -93,37 +106,14 @@ impl InferBackend for MockBackend {
     }
 }
 
-/// Fleet configuration.
-#[derive(Clone, Debug)]
-pub struct ServerConfig {
-    /// Batching policy applied independently by every replica.
-    pub batcher: BatcherConfig,
-    /// Per-replica router queue bound (admission control: when every open
-    /// queue is full, submits shed with [`SubmitError::QueueFull`]).
-    pub queue_depth: usize,
-    /// Number of worker replicas, each owning its own backend.
-    pub replicas: usize,
-    /// Scheduling policy routing requests to replicas.
-    pub policy: Policy,
-}
-
-impl Default for ServerConfig {
-    fn default() -> Self {
-        ServerConfig {
-            batcher: BatcherConfig::default(),
-            queue_depth: 256,
-            replicas: 1,
-            policy: Policy::RoundRobin,
-        }
-    }
-}
-
 /// Typed submit failure. The rejected request rides back in the error so
 /// callers can retry without rebuilding the input buffer, and the two
 /// variants make transient overload distinguishable from terminal shutdown.
+/// Implements [`std::error::Error`], so callers can `?` it straight into
+/// `anyhow::Result` instead of pattern-matching.
 #[derive(Debug)]
 pub enum SubmitError {
-    /// Every open replica queue was full — admission control shed the
+    /// Every open group entry queue was full — admission control shed the
     /// request. Retrying after a backoff can succeed.
     QueueFull(Request),
     /// The server is shut down (or every worker died). Retrying cannot
@@ -149,7 +139,7 @@ impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::QueueFull(r) => {
-                write!(f, "request {} shed: every replica queue is full", r.id)
+                write!(f, "request {} shed: every chain group's entry queue is full", r.id)
             }
             SubmitError::Closed(r) => {
                 write!(f, "request {} rejected: server is shut down", r.id)
@@ -160,207 +150,228 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-/// A running multi-replica inference server.
-pub struct Server {
+/// One running chain group: its stage workers (stage 0 is the entry), the
+/// shared cell holding the group's current plan position (completions read
+/// it, so a group kept across [`Server::apply`] reports its new index),
+/// and the diffing key it was spawned under.
+struct Group {
     replicas: Vec<Replica>,
+    pos: Arc<std::sync::atomic::AtomicUsize>,
+    key: GroupKey,
+}
+
+impl Group {
+    /// Total outstanding requests across every stage (the group load
+    /// signal the policy and the fallback ordering read).
+    fn outstanding(&self) -> usize {
+        self.replicas.iter().map(Replica::outstanding).sum()
+    }
+
+    /// Stop admitting at every stage (front first, so drained frames flow
+    /// through still-open downstream stages).
+    fn close(&mut self) {
+        for r in &mut self.replicas {
+            r.close();
+        }
+    }
+
+    /// Wait for every stage to drain (after [`Group::close`]).
+    fn join(&mut self) {
+        for r in &mut self.replicas {
+            r.join();
+        }
+    }
+
+    fn is_dead(&self) -> bool {
+        !self.replicas.is_empty() && self.replicas.iter().all(Replica::is_dead)
+    }
+
+    /// Any stage's worker died (panicked backend). A chain with even one
+    /// dead stage cannot carry frames end-to-end, so [`Server::apply`]
+    /// must never keep such a group as a "match" — re-applying the plan
+    /// is the recovery action, and it has to respawn.
+    fn has_dead_worker(&self) -> bool {
+        self.replicas.iter().any(Replica::is_dead)
+    }
+}
+
+/// A running inference server: the live realization of a [`Deployment`].
+pub struct Server {
+    groups: Vec<Group>,
     scheduler: Scheduler,
+    plan: Deployment,
     completions: Receiver<Completion>,
-    /// Kept open across [`Server::reconfigure`] so a swapped-in fleet keeps
+    /// Kept open across [`Server::apply`] so a reshaped fleet keeps
     /// feeding the same completion stream; dropped on [`Server::shutdown`]
     /// so the stream terminates once drained.
     completion_tx: Option<Sender<Completion>>,
-    /// The replicas form a stage chain (pipeline-parallel sharding): all
-    /// ingress goes to stage 0 and the router never falls back to a
-    /// mid-chain stage.
-    chain: bool,
 }
 
 impl Server {
-    /// Spawn `cfg.replicas` workers. `make_backend(i)` runs on worker `i`'s
-    /// thread (PJRT engines are thread-affine) and a panic there surfaces on
-    /// first use of that replica.
-    pub fn start<B, F>(make_backend: F, cfg: ServerConfig) -> Server
+    /// Spawn the fleet described by `plan`. `make_backend(id)` runs on
+    /// worker `id`'s own thread (PJRT engines are thread-affine) and a
+    /// panic there surfaces on first use of that worker.
+    pub fn deploy<B, F>(make_backend: F, plan: Deployment) -> Server
     where
         B: InferBackend,
-        F: Fn(usize) -> B + Send + Sync + 'static,
+        F: Fn(WorkerId) -> B + Send + Sync + 'static,
     {
-        let n = cfg.replicas.max(1);
+        let plan = plan.normalized();
         // completions are unbounded: backpressure belongs on the *request*
         // queues; a bounded completion channel can deadlock shutdown (worker
         // blocks on send while the owner blocks on join without draining)
         let (ctx, crx) = channel::<Completion>();
         let factory = Arc::new(make_backend);
-        let replicas = Self::spawn_replicated(&factory, &cfg, &ctx);
+        let groups: Vec<Group> = (0..plan.groups.len())
+            .map(|g| Self::spawn_group(&factory, &plan, g, &ctx))
+            .collect();
         Server {
-            replicas,
-            scheduler: Scheduler::new(cfg.policy, n),
+            scheduler: Scheduler::new(plan.policy.clone(), groups.len()),
+            groups,
+            plan,
             completions: crx,
             completion_tx: Some(ctx),
-            chain: false,
         }
     }
 
-    /// Spawn `cfg.replicas` workers as a **stage chain** (one pipeline
-    /// shard per stage, [`crate::sharding`]): requests enter stage 0, each
-    /// stage's outputs forward into the next stage's bounded queue (the
-    /// inter-device FIFO — a full downstream queue backpressures the
-    /// upstream worker), and only the final stage emits completions,
-    /// carrying per-stage latencies plus the end-to-end latency.
-    /// `cfg.policy` is ignored; the chain always schedules as
-    /// [`Policy::StageChain`].
-    pub fn start_chain<B, F>(make_backend: F, cfg: ServerConfig) -> Server
+    /// **Group-granular drain-and-swap** (the control plane's actuation
+    /// path, [`crate::control`]): diff `plan` against the running
+    /// deployment. Groups whose [`crate::coordinator::ChainGroup`] spec is
+    /// unchanged (same tag, stage count, batcher and queue depth) are
+    /// *kept running* — no drain, no backend respawn, live batcher
+    /// retunes survive, only their position cell updates. Groups absent
+    /// from the new plan drain every accepted request to completion
+    /// first; then the added groups spawn on the *same* completion
+    /// stream, so completions buffered before, during and after the swap
+    /// all remain readable and a driver loop never misses one.
+    ///
+    /// A matching spec keeps the *old backends*: callers replacing the
+    /// backends behind an identical shape must change the group's
+    /// [`crate::coordinator::ChainGroup::tag`]. Fails only after
+    /// [`Server::shutdown`] (the completion stream is gone for good).
+    pub fn apply<B, F>(&mut self, make_backend: F, plan: Deployment) -> crate::Result<()>
     where
         B: InferBackend,
-        F: Fn(usize) -> B + Send + Sync + 'static,
+        F: Fn(WorkerId) -> B + Send + Sync + 'static,
     {
-        let k = cfg.replicas.max(1);
-        let (ctx, crx) = channel::<Completion>();
+        let ctx = match self.completion_tx.clone() {
+            Some(tx) => tx,
+            None => anyhow::bail!("cannot apply a new plan after shutdown"),
+        };
+        let plan = plan.normalized();
         let factory = Arc::new(make_backend);
-        let replicas = Self::spawn_chain_stages(&factory, &cfg, &ctx);
-        Server {
-            replicas,
-            scheduler: Scheduler::new(Policy::StageChain, k),
-            completions: crx,
-            completion_tx: Some(ctx),
-            chain: true,
+        // match running groups to new slots by key: first unused match, in
+        // plan order, so N identical untagged groups keep min(old, new).
+        // A group with any dead worker never matches — re-applying the
+        // same plan is the recovery action, so it must respawn the group
+        // instead of silently keeping a corpse
+        let old: Vec<Group> = std::mem::take(&mut self.groups);
+        let mut pool: Vec<Option<Group>> = old.into_iter().map(Some).collect();
+        let mut slots: Vec<Option<Group>> = Vec::with_capacity(plan.groups.len());
+        for g in 0..plan.groups.len() {
+            let key = plan.group_key(g);
+            let hit = pool
+                .iter_mut()
+                .find(|s| {
+                    s.as_ref().map_or(false, |grp| grp.key == key && !grp.has_dead_worker())
+                })
+                .and_then(Option::take);
+            slots.push(hit);
         }
-    }
-
-    /// Spawn a replicated fleet feeding completions into `ctx`.
-    fn spawn_replicated<B, F>(
-        factory: &Arc<F>,
-        cfg: &ServerConfig,
-        ctx: &Sender<Completion>,
-    ) -> Vec<Replica>
-    where
-        B: InferBackend,
-        F: Fn(usize) -> B + Send + Sync + 'static,
-    {
-        (0..cfg.replicas.max(1))
-            .map(|i| {
-                let f = Arc::clone(factory);
-                Replica::spawn(
-                    i,
-                    move || (*f)(i),
-                    cfg.batcher,
-                    cfg.queue_depth,
-                    Sink::Complete(ctx.clone()),
-                )
+        // groups leaving the plan drain first: every accepted frame
+        // completes on the old topology before replacement capacity spawns
+        let mut leaving: Vec<Group> = pool.into_iter().flatten().collect();
+        for grp in &mut leaving {
+            grp.close();
+        }
+        for grp in &mut leaving {
+            grp.join();
+        }
+        self.groups = slots
+            .into_iter()
+            .enumerate()
+            .map(|(g, slot)| match slot {
+                Some(grp) => {
+                    // kept group: serving the whole time, new position
+                    grp.pos.store(g, Ordering::SeqCst);
+                    grp
+                }
+                None => Self::spawn_group(&factory, &plan, g, &ctx),
             })
-            .collect()
+            .collect();
+        self.scheduler = Scheduler::new(plan.policy.clone(), self.groups.len());
+        self.plan = plan;
+        Ok(())
     }
 
-    /// Spawn a stage chain feeding the final stage's completions into
-    /// `ctx`. Stages spawn back-to-front so stage `i` can hold stage
+    /// Spawn chain group `g` of `plan`, feeding final-stage completions
+    /// into `ctx`. Stages spawn back-to-front so stage `i` can hold stage
     /// `i+1`'s queue handle.
-    fn spawn_chain_stages<B, F>(
+    fn spawn_group<B, F>(
         factory: &Arc<F>,
-        cfg: &ServerConfig,
+        plan: &Deployment,
+        g: usize,
         ctx: &Sender<Completion>,
-    ) -> Vec<Replica>
+    ) -> Group
     where
         B: InferBackend,
-        F: Fn(usize) -> B + Send + Sync + 'static,
+        F: Fn(WorkerId) -> B + Send + Sync + 'static,
     {
-        let k = cfg.replicas.max(1);
+        let k = plan.groups[g].stages.max(1);
+        let batcher = plan.group_batcher(g);
+        let pos = Arc::new(std::sync::atomic::AtomicUsize::new(g));
         let mut replicas: Vec<Replica> = Vec::with_capacity(k);
         let mut downstream = None;
-        for i in (0..k).rev() {
+        for stage in (0..k).rev() {
             let f = Arc::clone(factory);
+            let id = WorkerId { group: g, stage };
             let sink = match downstream.take() {
-                None => Sink::Complete(ctx.clone()),
+                None => Sink::Complete { tx: ctx.clone(), group: Arc::clone(&pos) },
                 Some((next, next_outstanding)) => Sink::Forward { next, next_outstanding },
             };
-            let r = Replica::spawn(i, move || (*f)(i), cfg.batcher, cfg.queue_depth, sink);
+            let r = Replica::spawn(id, move || (*f)(id), batcher, plan.queue_depth, sink);
             downstream =
                 Some((r.sender().expect("fresh replica is open"), r.outstanding_handle()));
             replicas.push(r);
         }
         replicas.reverse();
-        replicas
+        Group { replicas, pos, key: plan.group_key(g) }
     }
 
-    /// **Drain-and-swap reconfiguration** (the control plane's actuation
-    /// path, [`crate::control`]): stop admitting to the current replicas,
-    /// drain every accepted request to completion, then spawn a fresh
-    /// replicated fleet per `cfg` on the *same* completion stream —
-    /// completions buffered before, during and after the swap all remain
-    /// readable, so a driver loop never misses one. Fails only after
-    /// [`Server::shutdown`] (the completion stream is gone for good).
-    pub fn reconfigure<B, F>(&mut self, make_backend: F, cfg: ServerConfig) -> crate::Result<()>
-    where
-        B: InferBackend,
-        F: Fn(usize) -> B + Send + Sync + 'static,
-    {
-        let ctx = self.drain_current()?;
-        let n = cfg.replicas.max(1);
-        let factory = Arc::new(make_backend);
-        self.replicas = Self::spawn_replicated(&factory, &cfg, &ctx);
-        self.scheduler = Scheduler::new(cfg.policy, n);
-        self.chain = false;
-        Ok(())
+    /// The deployment currently being served.
+    pub fn plan(&self) -> &Deployment {
+        &self.plan
     }
 
-    /// [`Server::reconfigure`], but the new fleet is a **stage chain**
-    /// (used by the failure-repair path, [`crate::control::repair`], to
-    /// splice a re-partitioned plan into a running server). The old
-    /// stages drain front-to-back before the new chain spawns, so every
-    /// in-flight frame finishes its traversal on the old plan.
-    pub fn reconfigure_chain<B, F>(
-        &mut self,
-        make_backend: F,
-        cfg: ServerConfig,
-    ) -> crate::Result<()>
-    where
-        B: InferBackend,
-        F: Fn(usize) -> B + Send + Sync + 'static,
-    {
-        let ctx = self.drain_current()?;
-        let k = cfg.replicas.max(1);
-        let factory = Arc::new(make_backend);
-        self.replicas = Self::spawn_chain_stages(&factory, &cfg, &ctx);
-        self.scheduler = Scheduler::new(Policy::StageChain, k);
-        self.chain = true;
-        Ok(())
+    /// Number of chain groups.
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
     }
 
-    /// Shared drain half of the drain-and-swap: stop admitting to every
-    /// replica, drain all accepted requests to completion, and hand back
-    /// the live completion sender for the replacement fleet. Fails after
-    /// [`Server::shutdown`].
-    fn drain_current(&mut self) -> crate::Result<Sender<Completion>> {
-        let ctx = match self.completion_tx.clone() {
-            Some(tx) => tx,
-            None => anyhow::bail!("cannot reconfigure a server after shutdown"),
-        };
-        for r in &mut self.replicas {
-            r.close();
-        }
-        for r in &mut self.replicas {
-            r.join();
-        }
-        Ok(ctx)
+    /// Stage counts per group, in router order.
+    pub fn group_sizes(&self) -> Vec<usize> {
+        self.groups.iter().map(|g| g.replicas.len()).collect()
     }
 
-    /// Number of worker replicas.
+    /// Total workers across every group.
     pub fn replica_count(&self) -> usize {
-        self.replicas.len()
+        self.groups.iter().map(|g| g.replicas.len()).sum()
     }
 
-    /// Current batching settings of replica `replica` (`None` when the
-    /// index is out of range).
-    pub fn batcher_config(&self, replica: usize) -> Option<BatcherConfig> {
-        self.replicas.get(replica).map(|r| r.batcher())
+    /// Current batching settings of stage `stage` of group `group`
+    /// (`None` when either index is out of range).
+    pub fn batcher_config(&self, group: usize, stage: usize) -> Option<BatcherConfig> {
+        self.groups.get(group).and_then(|g| g.replicas.get(stage)).map(Replica::batcher)
     }
 
-    /// Live-retune replica `replica`'s batcher (the SLO controller's
-    /// actuation, [`crate::control::slo`]): the worker applies the new
-    /// settings on its next batch, with no drain and no respawn. Returns
-    /// `false` when the index is out of range. Note a later
-    /// [`Server::reconfigure`] respawns replicas at the configured
-    /// baseline, discarding live adjustments.
-    pub fn set_batcher(&self, replica: usize, cfg: BatcherConfig) -> bool {
-        match self.replicas.get(replica) {
+    /// Live-retune one worker's batcher (the SLO controller's actuation,
+    /// [`crate::control::slo`]): the worker applies the new settings on
+    /// its next batch, with no drain and no respawn. Returns `false` when
+    /// an index is out of range. Live adjustments survive a
+    /// [`Server::apply`] that keeps the group; a swap that respawns it
+    /// restarts from the plan's baseline.
+    pub fn set_batcher(&self, group: usize, stage: usize, cfg: BatcherConfig) -> bool {
+        match self.groups.get(group).and_then(|g| g.replicas.get(stage)) {
             Some(r) => {
                 r.set_batcher(cfg);
                 true
@@ -369,29 +380,40 @@ impl Server {
         }
     }
 
-    /// Per-replica outstanding request counts (queued + executing).
+    /// Per-worker outstanding request counts (queued + executing), flat
+    /// in group-then-stage order.
     pub fn outstanding(&self) -> Vec<usize> {
-        self.replicas.iter().map(|r| r.outstanding()).collect()
+        self.groups
+            .iter()
+            .flat_map(|g| g.replicas.iter().map(Replica::outstanding))
+            .collect()
+    }
+
+    /// Per-group outstanding request counts (summed over the group's
+    /// stages) — the load signal group-granular scheduling reads.
+    pub fn group_outstanding(&self) -> Vec<usize> {
+        self.groups.iter().map(Group::outstanding).collect()
     }
 
     /// Every worker died without a shutdown (panicked backends). The
     /// completion channel stays open (the server holds a sender for
-    /// [`Server::reconfigure`]), so this probe — not channel
-    /// disconnection — is how replay loops detect a dead fleet.
+    /// [`Server::apply`]), so this probe — not channel disconnection — is
+    /// how replay loops detect a dead fleet.
     fn all_workers_dead(&self) -> bool {
-        !self.replicas.is_empty() && self.replicas.iter().all(|r| r.is_dead())
+        !self.groups.is_empty() && self.groups.iter().all(Group::is_dead)
     }
 
-    /// Non-blocking submit. Returns the replica index the request was routed
-    /// to, or a typed [`SubmitError`] (overload shed vs shutdown).
+    /// Non-blocking submit. Returns the chain-group index the request
+    /// entered (frames always enter at the group's stage 0), or a typed
+    /// [`SubmitError`] (overload shed vs shutdown).
     pub fn submit(&mut self, id: u64, input: Vec<f32>) -> std::result::Result<usize, SubmitError> {
         self.dispatch(Request::new(id, input))
     }
 
-    /// Blocking submit: when the whole fleet is full it parks on the least
-    /// loaded replica's bounded queue (stage 0 for a chain; the worker
-    /// wakes it when a slot frees) instead of spin-retrying; only terminal
-    /// shutdown makes it fail.
+    /// Blocking submit: when every group entry is full it parks on the
+    /// least loaded group's bounded entry queue (the worker wakes it when
+    /// a slot frees) instead of spin-retrying; only terminal shutdown
+    /// makes it fail.
     pub fn submit_blocking(
         &mut self,
         id: u64,
@@ -400,23 +422,20 @@ impl Server {
         let mut req = Request::new(id, input);
         loop {
             req = match self.dispatch(req) {
-                Ok(i) => return Ok(i),
+                Ok(g) => return Ok(g),
                 Err(SubmitError::Closed(r)) => return Err(SubmitError::Closed(r)),
                 Err(SubmitError::QueueFull(r)) => r,
             };
-            let i = if self.chain {
-                0
-            } else {
-                self.replicas
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(_, r)| r.outstanding())
-                    .map(|(i, _)| i)
-                    .unwrap()
-            };
-            req = match self.replicas[i].submit_wait(req) {
-                Ok(()) => return Ok(i),
-                // a dead replica can look idle; back off briefly so the
+            let g = self
+                .groups
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, grp)| grp.outstanding())
+                .map(|(g, _)| g)
+                .unwrap();
+            req = match self.groups[g].replicas[0].submit_wait(req) {
+                Ok(()) => return Ok(g),
+                // a dead group can look idle; back off briefly so the
                 // retry loop cannot spin between dispatch and submit_wait
                 Err(TrySubmit::Full(r)) | Err(TrySubmit::Closed(r)) => {
                     std::thread::sleep(Duration::from_micros(200));
@@ -426,32 +445,27 @@ impl Server {
         }
     }
 
-    /// Route a request: the policy's preferred replica first; only if its
-    /// queue is full (or it died) fall through to the remaining replicas in
-    /// ascending-load order, so a full preferred queue does not shed while
-    /// a sibling has room. The common accepted-first-try case pays no
-    /// fallback bookkeeping. Chains never fall back: frames must enter at
-    /// stage 0, so a full entry queue sheds immediately.
+    /// Route a request: the policy's preferred group first; only if its
+    /// entry queue is full (or its workers died) fall through to the
+    /// remaining groups in ascending-load order, so a full preferred
+    /// entry does not shed while a sibling group has room. The common
+    /// accepted-first-try case pays no fallback bookkeeping. A
+    /// single-group deployment (one chain) has no siblings, so a full
+    /// entry queue sheds immediately — frames can never enter a chain
+    /// mid-pipeline.
     fn dispatch(&mut self, req: Request) -> std::result::Result<usize, SubmitError> {
-        if self.chain {
-            return match self.replicas[0].try_submit(req) {
-                Ok(()) => Ok(0),
-                Err(TrySubmit::Full(r)) => Err(SubmitError::QueueFull(r)),
-                Err(TrySubmit::Closed(r)) => Err(SubmitError::Closed(r)),
-            };
-        }
-        // the load snapshot costs one atomic load per replica plus a Vec;
+        // the load snapshot costs one atomic load per worker plus a Vec;
         // take it up front only for the policy that reads it (JSQ) — the
         // fallback path below re-derives it on demand
-        let mut outstanding: Vec<usize> =
+        let mut loads: Vec<usize> =
             if matches!(self.scheduler.policy(), Policy::JoinShortestQueue) {
-                self.outstanding()
+                self.group_outstanding()
             } else {
                 Vec::new()
             };
-        let first = self.scheduler.pick(&outstanding);
+        let first = self.scheduler.pick(&loads);
         let mut saw_full = false;
-        let mut req = match self.replicas[first].try_submit(req) {
+        let mut req = match self.groups[first].replicas[0].try_submit(req) {
             Ok(()) => return Ok(first),
             Err(TrySubmit::Full(r)) => {
                 saw_full = true;
@@ -459,14 +473,14 @@ impl Server {
             }
             Err(TrySubmit::Closed(r)) => r,
         };
-        if outstanding.is_empty() {
-            outstanding = self.outstanding();
+        if loads.is_empty() {
+            loads = self.group_outstanding();
         }
-        let mut rest: Vec<usize> = (0..self.replicas.len()).filter(|&i| i != first).collect();
-        rest.sort_by_key(|&i| (outstanding[i], i));
-        for i in rest {
-            match self.replicas[i].try_submit(req) {
-                Ok(()) => return Ok(i),
+        let mut rest: Vec<usize> = (0..self.groups.len()).filter(|&g| g != first).collect();
+        rest.sort_by_key(|&g| (loads[g], g));
+        for g in rest {
+            match self.groups[g].replicas[0].try_submit(req) {
+                Ok(()) => return Ok(g),
                 Err(TrySubmit::Full(r)) => {
                     saw_full = true;
                     req = r;
@@ -484,9 +498,8 @@ impl Server {
     /// Receive the next completion (blocks until one arrives, or returns
     /// `None` once the fleet has shut down and the stream is drained).
     /// The stream only terminates after [`Server::shutdown`] — a fleet
-    /// whose workers all died stays open for [`Server::reconfigure`], so
-    /// drive it with [`Server::try_next_completion`] if the backend can
-    /// fail.
+    /// whose workers all died stays open for [`Server::apply`], so drive
+    /// it with [`Server::try_next_completion`] if the backend can fail.
     pub fn next_completion(&self) -> Option<Completion> {
         self.completions.recv().ok()
     }
@@ -503,11 +516,13 @@ impl Server {
     /// `trace.arrivals_s[i]` (uniform-random synthetic inputs of
     /// `input_len` elements seeded by `seed`), drains completions while
     /// waiting, sheds on overload, and finally waits for every *accepted*
-    /// request to complete. The server stays running; callers decide when
-    /// to [`Server::shutdown`].
+    /// request to complete. The returned [`FleetMetrics`] is shaped to
+    /// the current plan, so chain deployments report per-group e2e
+    /// percentiles alongside the per-stage breakdown. The server stays
+    /// running; callers decide when to [`Server::shutdown`].
     pub fn replay(&mut self, trace: &Trace, input_len: usize, seed: u64) -> FleetMetrics {
         let mut rng = Rng::new(seed);
-        let mut fm = FleetMetrics::new(self.replicas.len());
+        let mut fm = FleetMetrics::new(&self.group_sizes());
         fm.start();
         let t0 = Instant::now();
         for (i, &due) in trace.arrivals_s.iter().enumerate() {
@@ -558,16 +573,16 @@ impl Server {
         fm
     }
 
-    /// Stop accepting requests and wait for every replica to drain its
-    /// queue. Buffered completions remain readable afterwards; once they
-    /// are drained the completion stream terminates (and the server can no
-    /// longer be [`Server::reconfigure`]d).
+    /// Stop accepting requests and wait for every group to drain its
+    /// queues. Buffered completions remain readable afterwards; once they
+    /// are drained the completion stream terminates (and no further plan
+    /// can be [`Server::apply`]d).
     pub fn shutdown(&mut self) {
-        for r in &mut self.replicas {
-            r.close();
+        for g in &mut self.groups {
+            g.close();
         }
-        for r in &mut self.replicas {
-            r.join();
+        for g in &mut self.groups {
+            g.join();
         }
         self.completion_tx = None;
     }
@@ -583,17 +598,18 @@ impl Drop for Server {
 mod tests {
     use super::*;
     use crate::coordinator::Metrics;
+    use std::sync::atomic::AtomicUsize;
 
-    /// Mock with failure injection on every k-th batch (per replica).
+    /// Mock with failure injection on every k-th batch (per worker).
     struct FlakyMock {
         delay: Duration,
         fail_every: usize,
-        calls: std::sync::atomic::AtomicUsize,
+        calls: AtomicUsize,
     }
 
     impl InferBackend for FlakyMock {
         fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-            let call = self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            let call = self.calls.fetch_add(1, Ordering::SeqCst);
             if self.fail_every > 0 && (call + 1) % self.fail_every == 0 {
                 anyhow::bail!("injected failure on call {call}");
             }
@@ -601,18 +617,15 @@ mod tests {
         }
     }
 
-    fn single(queue_depth: usize, max_batch: usize) -> ServerConfig {
-        ServerConfig {
-            batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
-            queue_depth,
-            replicas: 1,
-            policy: Policy::RoundRobin,
-        }
+    fn single(queue_depth: usize, max_batch: usize) -> Deployment {
+        Deployment::replicated(1)
+            .with_batcher(BatcherConfig { max_batch, max_wait: Duration::from_millis(1) })
+            .with_queue_depth(queue_depth)
     }
 
     #[test]
     fn end_to_end_all_requests_complete() {
-        let mut srv = Server::start(|_| MockBackend::instant(), single(64, 4));
+        let mut srv = Server::deploy(|_| MockBackend::instant(), single(64, 4));
         let n = 40;
         for i in 0..n {
             srv.submit_blocking(i, vec![i as f32, 1.0]).unwrap();
@@ -623,7 +636,7 @@ mod tests {
         for _ in 0..n {
             let c = srv.next_completion().unwrap();
             assert_eq!(c.output[0], c.id as f32 + 1.0);
-            assert_eq!(c.replica, 0);
+            assert_eq!((c.group, c.stage), (0, 0));
             seen[c.id as usize] = true;
             metrics.record(c.latency, c.batch_size);
         }
@@ -634,15 +647,12 @@ mod tests {
 
     #[test]
     fn batching_actually_batches() {
-        let cfg = ServerConfig {
-            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
-            queue_depth: 64,
-            replicas: 1,
-            policy: Policy::RoundRobin,
-        };
-        let mut srv = Server::start(
+        let plan = Deployment::replicated(1)
+            .with_batcher(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) })
+            .with_queue_depth(64);
+        let mut srv = Server::deploy(
             |_| MockBackend::with_service(Duration::from_millis(5), Duration::ZERO),
-            cfg,
+            plan,
         );
         for i in 0..16 {
             srv.submit_blocking(i, vec![1.0]).unwrap();
@@ -658,11 +668,11 @@ mod tests {
 
     #[test]
     fn failure_injection_drops_batch_but_server_survives() {
-        let mut srv = Server::start(
+        let mut srv = Server::deploy(
             |_| FlakyMock {
                 delay: Duration::ZERO,
                 fail_every: 3,
-                calls: std::sync::atomic::AtomicUsize::new(0),
+                calls: AtomicUsize::new(0),
             },
             single(64, 1),
         );
@@ -681,7 +691,7 @@ mod tests {
 
     #[test]
     fn backpressure_sheds_with_queue_full() {
-        let mut srv = Server::start(
+        let mut srv = Server::deploy(
             |_| MockBackend::with_service(Duration::from_millis(50), Duration::ZERO),
             single(2, 1),
         );
@@ -704,13 +714,11 @@ mod tests {
         // 3-stage chain of instant mocks at batch 1: each stage maps
         // [x, ...] -> [sum, 1], so the final output is input + 2 — proof
         // the frame passed through every stage exactly once, in order
-        let cfg = ServerConfig {
-            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
-            queue_depth: 16,
-            replicas: 3,
-            policy: Policy::RoundRobin, // ignored by start_chain
-        };
-        let mut srv = Server::start_chain(|_| MockBackend::instant(), cfg);
+        let plan = Deployment::chain(3)
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) })
+            .with_queue_depth(16);
+        let mut srv = Server::deploy(|_| MockBackend::instant(), plan);
+        assert_eq!(srv.group_count(), 1);
         assert_eq!(srv.replica_count(), 3);
         for i in 0..20 {
             srv.submit_blocking(i, vec![i as f32]).unwrap();
@@ -720,7 +728,8 @@ mod tests {
         while let Some(c) = srv.next_completion() {
             got += 1;
             assert_eq!(c.output[0], c.id as f32 + 2.0, "frame {} skipped a stage", c.id);
-            assert_eq!(c.replica, 2, "completions come from the last stage");
+            assert_eq!(c.group, 0);
+            assert_eq!(c.stage, 2, "completions come from the last stage");
             assert_eq!(c.stage_latencies.len(), 3, "one latency per stage");
             let total: Duration = c.stage_latencies.iter().sum();
             assert!(total <= c.latency + Duration::from_millis(5));
@@ -729,20 +738,17 @@ mod tests {
     }
 
     #[test]
-    fn reconfigure_swaps_fleet_without_losing_completions() {
-        let mut srv = Server::start(|_| MockBackend::instant(), single(64, 2));
+    fn apply_swaps_fleet_without_losing_completions() {
+        let mut srv = Server::deploy(|_| MockBackend::instant(), single(64, 2));
         for i in 0..10 {
             srv.submit_blocking(i, vec![i as f32]).unwrap();
         }
-        // drain-and-swap to a 3-replica fleet on the same completion stream
-        let cfg = ServerConfig {
-            batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(1) },
-            queue_depth: 64,
-            replicas: 3,
-            policy: Policy::RoundRobin,
-        };
-        srv.reconfigure(|_| MockBackend::instant(), cfg).unwrap();
-        assert_eq!(srv.replica_count(), 3);
+        // grow to a 3-group fleet on the same completion stream
+        let plan = Deployment::replicated(3)
+            .with_batcher(BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(1) })
+            .with_queue_depth(64);
+        srv.apply(|_| MockBackend::instant(), plan).unwrap();
+        assert_eq!(srv.group_count(), 3);
         for i in 10..30 {
             srv.submit_blocking(i, vec![i as f32]).unwrap();
         }
@@ -757,27 +763,133 @@ mod tests {
     }
 
     #[test]
-    fn reconfigure_after_shutdown_is_an_error() {
-        let mut srv = Server::start(|_| MockBackend::instant(), single(8, 1));
+    fn apply_keeps_unchanged_groups_running_without_respawn() {
+        // count backend constructions: a kept group must not rebuild one
+        static BUILDS: AtomicUsize = AtomicUsize::new(0);
+        let plan = |n: usize| {
+            let mut p = Deployment::replicated(n).with_queue_depth(16);
+            for (g, grp) in p.groups.iter_mut().enumerate() {
+                grp.tag = Some(format!("keep-{g}"));
+            }
+            p
+        };
+        let mut srv = Server::deploy(
+            |_| {
+                BUILDS.fetch_add(1, Ordering::SeqCst);
+                MockBackend::instant()
+            },
+            plan(2),
+        );
+        // give the spawned workers time to run their factories
+        srv.submit_blocking(0, vec![1.0]).unwrap();
+        srv.submit_blocking(1, vec![1.0]).unwrap();
+        let _ = srv.next_completion();
+        let _ = srv.next_completion();
+        let before = BUILDS.load(Ordering::SeqCst);
+        assert!(before >= 2, "two workers must have built backends");
+        // a live retune on group 0 must survive the apply below
+        let tuned = BatcherConfig { max_batch: 11, max_wait: Duration::from_micros(900) };
+        assert!(srv.set_batcher(0, 0, tuned));
+        // same tags + one new group: only the new group spawns a backend
+        srv.apply(
+            |_| {
+                BUILDS.fetch_add(1, Ordering::SeqCst);
+                MockBackend::instant()
+            },
+            plan(3),
+        )
+        .unwrap();
+        assert_eq!(srv.group_count(), 3);
+        srv.submit_blocking(2, vec![1.0]).unwrap();
+        let _ = srv.next_completion();
+        let after = BUILDS.load(Ordering::SeqCst);
+        assert!(
+            after <= before + 1,
+            "kept groups respawned backends: {before} -> {after}"
+        );
+        assert_eq!(srv.batcher_config(0, 0), Some(tuned), "live retune lost across apply");
         srv.shutdown();
-        let err = srv.reconfigure(|_| MockBackend::instant(), single(8, 1));
-        assert!(err.is_err(), "reconfiguring a shut-down server must fail");
     }
 
     #[test]
-    fn reconfigure_chain_splices_a_new_stage_count() {
-        let cfg = |k: usize| ServerConfig {
-            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
-            queue_depth: 16,
-            replicas: k,
-            policy: Policy::RoundRobin, // ignored by the chain paths
+    fn apply_respawns_a_dead_group_even_when_the_spec_matches() {
+        // group 1's first backend construction panics, killing its worker;
+        // re-applying the *identical* plan is the recovery action and must
+        // respawn the dead group rather than keep the corpse as a "match"
+        static G1_BUILDS: AtomicUsize = AtomicUsize::new(0);
+        let plan = || {
+            let mut p = Deployment::replicated(2).with_queue_depth(8);
+            for (g, grp) in p.groups.iter_mut().enumerate() {
+                grp.tag = Some(format!("heal-{g}"));
+            }
+            p
         };
-        let mut srv = Server::start_chain(|_| MockBackend::instant(), cfg(3));
+        let factory = |id: crate::coordinator::WorkerId| {
+            if id.group == 1 && G1_BUILDS.fetch_add(1, Ordering::SeqCst) == 0 {
+                panic!("injected backend construction failure");
+            }
+            MockBackend::instant()
+        };
+        let mut srv = Server::deploy(factory, plan());
+        // let group 1's worker thread hit the panic
+        std::thread::sleep(Duration::from_millis(100));
+        srv.apply(factory, plan()).unwrap();
+        for i in 0..20 {
+            srv.submit_blocking(i, vec![1.0]).unwrap();
+        }
+        srv.shutdown();
+        let mut per_group = [0usize; 2];
+        while let Some(c) = srv.next_completion() {
+            per_group[c.group] += 1;
+        }
+        assert_eq!(per_group[0] + per_group[1], 20);
+        assert!(per_group[1] > 0, "dead group was kept, not respawned: {per_group:?}");
+    }
+
+    #[test]
+    fn apply_repositions_kept_groups_completion_stamps() {
+        // group tagged "b" starts at position 1 and moves to position 0:
+        // completions after the apply must carry the new group index
+        let mk = |tags: &[&str]| {
+            let mut p = Deployment::replicated(tags.len()).with_queue_depth(16);
+            for (g, grp) in p.groups.iter_mut().enumerate() {
+                grp.tag = Some(tags[g].to_string());
+            }
+            p
+        };
+        let mut srv = Server::deploy(|_| MockBackend::instant(), mk(&["a", "b"]));
+        srv.apply(|_| MockBackend::instant(), mk(&["b"])).unwrap();
+        assert_eq!(srv.group_count(), 1);
+        srv.submit_blocking(7, vec![1.0]).unwrap();
+        srv.shutdown();
+        let c = srv.next_completion().expect("completion");
+        assert_eq!(c.group, 0, "kept group must stamp its new position");
+    }
+
+    #[test]
+    fn apply_after_shutdown_is_an_error() {
+        let mut srv = Server::deploy(|_| MockBackend::instant(), single(8, 1));
+        srv.shutdown();
+        let err = srv.apply(|_| MockBackend::instant(), single(8, 1));
+        assert!(err.is_err(), "applying to a shut-down server must fail");
+    }
+
+    #[test]
+    fn apply_splices_a_new_chain_length() {
+        let plan = |k: usize| {
+            Deployment::chain(k)
+                .with_batcher(BatcherConfig {
+                    max_batch: 1,
+                    max_wait: Duration::from_millis(1),
+                })
+                .with_queue_depth(16)
+        };
+        let mut srv = Server::deploy(|_| MockBackend::instant(), plan(3));
         for i in 0..10 {
             srv.submit_blocking(i, vec![i as f32]).unwrap();
         }
         // splice down to a 2-stage chain (one device lost, plan repaired)
-        srv.reconfigure_chain(|_| MockBackend::instant(), cfg(2)).unwrap();
+        srv.apply(|_| MockBackend::instant(), plan(2)).unwrap();
         assert_eq!(srv.replica_count(), 2);
         for i in 100..110 {
             srv.submit_blocking(i, vec![i as f32]).unwrap();
@@ -801,37 +913,35 @@ mod tests {
 
     #[test]
     fn live_batcher_retune_roundtrips() {
-        let srv = Server::start(|_| MockBackend::instant(), single(8, 4));
-        let cur = srv.batcher_config(0).unwrap();
+        let srv = Server::deploy(|_| MockBackend::instant(), single(8, 4));
+        let cur = srv.batcher_config(0, 0).unwrap();
         assert_eq!(cur.max_batch, 4);
         let next = BatcherConfig { max_batch: 9, max_wait: Duration::from_micros(700) };
-        assert!(srv.set_batcher(0, next));
-        let got = srv.batcher_config(0).unwrap();
+        assert!(srv.set_batcher(0, 0, next));
+        let got = srv.batcher_config(0, 0).unwrap();
         assert_eq!(got.max_batch, 9);
         assert_eq!(got.max_wait, Duration::from_micros(700));
-        assert!(!srv.set_batcher(5, next), "out-of-range index must report false");
-        assert!(srv.batcher_config(5).is_none());
+        assert!(!srv.set_batcher(5, 0, next), "out-of-range group must report false");
+        assert!(!srv.set_batcher(0, 3, next), "out-of-range stage must report false");
+        assert!(srv.batcher_config(5, 0).is_none());
     }
 
     #[test]
-    fn full_sibling_does_not_shed_while_another_replica_has_room() {
-        // replica 0 is blocked for a long time; round-robin would prefer it
-        // every other request, but the router falls through to replica 1
-        let cfg = ServerConfig {
-            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(0) },
-            queue_depth: 1,
-            replicas: 2,
-            policy: Policy::RoundRobin,
-        };
-        let mut srv = Server::start(
-            |i| {
-                if i == 0 {
+    fn full_sibling_does_not_shed_while_another_group_has_room() {
+        // group 0 is blocked for a long time; round-robin would prefer it
+        // every other request, but the router falls through to group 1
+        let plan = Deployment::replicated(2)
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(0) })
+            .with_queue_depth(1);
+        let mut srv = Server::deploy(
+            |id| {
+                if id.group == 0 {
                     MockBackend::with_service(Duration::from_millis(300), Duration::ZERO)
                 } else {
                     MockBackend::instant()
                 }
             },
-            cfg,
+            plan,
         );
         let mut ok = 0;
         for i in 0..12 {
@@ -840,8 +950,50 @@ mod tests {
             }
             std::thread::sleep(Duration::from_millis(2));
         }
-        // replica 0 absorbs at most 2 (1 executing + 1 queued); the rest
-        // must overflow to replica 1 instead of shedding
+        // group 0 absorbs at most 2 (1 executing + 1 queued); the rest
+        // must overflow to group 1 instead of shedding
         assert!(ok >= 10, "only {ok}/12 accepted");
+    }
+
+    #[test]
+    fn replicated_chains_serve_all_groups_end_to_end() {
+        // 2 groups × 2 stages: every frame traverses exactly one group's
+        // two stages (output = input + 1) and both groups serve under
+        // round-robin
+        let plan = Deployment::replicated_chains(2, 2)
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) })
+            .with_queue_depth(32);
+        let mut srv = Server::deploy(|_| MockBackend::instant(), plan);
+        assert_eq!(srv.group_count(), 2);
+        assert_eq!(srv.replica_count(), 4);
+        let n = 40u64;
+        for i in 0..n {
+            srv.submit_blocking(i, vec![i as f32]).unwrap();
+        }
+        srv.shutdown();
+        let mut per_group = [0usize; 2];
+        let mut got = 0;
+        while let Some(c) = srv.next_completion() {
+            got += 1;
+            assert_eq!(c.output[0], c.id as f32 + 1.0, "frame {} broke its chain", c.id);
+            assert_eq!(c.stage, 1, "completions come from the last stage");
+            assert_eq!(c.stage_latencies.len(), 2);
+            per_group[c.group] += 1;
+        }
+        assert_eq!(got, n as usize, "replicated chains dropped frames");
+        assert!(per_group[0] > 0 && per_group[1] > 0, "a group idled: {per_group:?}");
+    }
+
+    #[test]
+    fn submit_error_is_anyhow_compatible() {
+        // the satellite contract: callers can `?` a SubmitError into
+        // anyhow::Result instead of pattern-matching
+        fn shed() -> anyhow::Result<()> {
+            Err(SubmitError::QueueFull(Request::new(3, vec![])))?;
+            Ok(())
+        }
+        let err = shed().unwrap_err();
+        assert!(format!("{err}").contains("request 3"), "{err}");
+        assert!(format!("{err}").contains("shed"), "{err}");
     }
 }

@@ -11,15 +11,20 @@
 //! FPGA device models, the CNV / ResNet-50 topology zoo, the FINN folding and
 //! resource model, the physical RAM mapper, four packing engines, a
 //! cycle-level GALS streamer simulator, a timing-closure model, a dataflow
-//! pipeline simulator, and a PJRT-backed inference runtime behind a
-//! multi-replica sharded serving coordinator (policy router, per-replica
-//! dynamic batchers, admission control, fleet latency metrics), plus a
-//! pipeline-parallel multi-device sharding subsystem ([`sharding`]) that
-//! partitions one network across a heterogeneous device fleet and serves
-//! it as a staged pipeline, and an adaptive control plane ([`control`])
-//! that closes the loop from fleet metrics back to fleet shape: an
-//! SLO-driven autoscaler, live batching-window adaptation, and
-//! failure-driven re-partition with cached-manifest migration.
+//! pipeline simulator, and a PJRT-backed inference runtime behind the
+//! unified `Deployment` serving coordinator ([`coordinator`]): one fleet
+//! abstraction — N chain groups × k stages — covering flat replicated
+//! fleets, single pipeline chains and replicated chains, with a
+//! group-scheduling policy router, per-worker dynamic batchers, admission
+//! control, group-granular live reshaping and fleet/group/stage latency
+//! metrics; plus a pipeline-parallel multi-device sharding subsystem
+//! ([`sharding`]) that partitions one network across a heterogeneous
+//! device fleet and serves it as chain groups, and an adaptive control
+//! plane ([`control`]) that closes the loop from fleet metrics back to
+//! fleet shape: an SLO-driven whole-group autoscaler, live
+//! batching-window adaptation co-tuned per chain, failure-driven
+//! re-partition with cached-manifest migration, and an on-disk
+//! control-event journal that replays alongside arrival traces.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 

@@ -8,8 +8,8 @@
 //! fcmp perf     --network ... [--mhz 195]
 //! fcmp gals     [--nb 4] [--rf 2.0] [--depth 128] [--cycles 10000] [--static]
 //! fcmp golden   [--artifacts artifacts] [--model all|cnv_w1a1|cnv_w2a2|rn50_lite_w1a2]
-//! fcmp serve    [--backend mock|pjrt] [--model cnv_w1a1] [--replicas 1]
-//!               [--policy round-robin|jsq|weighted]
+//! fcmp serve    [--backend mock|pjrt] [--model cnv_w1a1] [--chains 1]
+//!               [--stages 1] [--policy round-robin|jsq|weighted]
 //!               [--trace poisson|bursty|heavy|diurnal|uniform|file:PATH]
 //!               [--trace-out PATH] [--requests 256] [--rate 400] [--batch 4]
 //!               [--queue 64] [--devices u250,u280,7020,7012s]
@@ -17,24 +17,26 @@
 //! fcmp shard    --network cnv-w2a2 --devices 7012s,7012s [--shards 2]
 //!               [--hb 4] [--engine ga|ffd] [--generations 40]
 //!               [--link-gbps 100] [--link-us 2] [--frames 400] [--fifo 8]
-//!               [--serve] [--requests 256] [--rate FPS*0.8] [--kill-stage I]
+//!               [--serve] [--chains 1] [--requests 256]
+//!               [--rate N*FPS*0.8] [--kill-stage I]
 //! fcmp autoscale [--trace flash|diurnal|...|file:PATH] [--requests 600]
-//!               [--rate 300] [--devices 7020,7020,7020,7020] [--replicas 1]
-//!               [--min 1] [--max POOL] [--shed-out 0.02] [--p99-out MS]
-//!               [--util-in 0.25] [--cooldown 3] [--tick-ms 25] [--window 3]
-//!               [--slo-p99 MS] [--kill T:R,...] [--static]
+//!               [--rate 300] [--devices 7020,7020,7020,7020] [--chains 1]
+//!               [--stages 1] [--min 1] [--max POOL/STAGES]
+//!               [--shed-out 0.02] [--p99-out MS] [--util-in 0.25]
+//!               [--cooldown 3] [--tick-ms 25] [--window 3] [--slo-p99 MS]
+//!               [--kill T:G,...] [--static] [--events-out PATH]
 //!               [--require-scale-cycle]
 //! fcmp dse      --network ... --device ... [--budget 0.85]
 //! ```
 
 use fcmp::control::{
-    replan, run_loop, splice_mock_chain, AutoscalerConfig, ControlledFleet, FailureEvent,
-    LoopConfig, SignalConfig, SloConfig,
+    replan, run_loop, save_events, splice_mock_chain, AutoscalerConfig, ControlledFleet,
+    FailureEvent, LoopConfig, SignalConfig, SloConfig,
 };
 use fcmp::coordinator::{
-    bursty, diurnal, flash_crowd, fleet_weights, heavy_tail, poisson, replica_fps,
-    shard_service_times, uniform, BatcherConfig, MockBackend, Policy, ReplicaSpec, Server,
-    ServerConfig, Trace,
+    bursty, chain_fps, diurnal, flash_crowd, group_weights, heavy_tail,
+    mock_chain_service_from_fps, poisson, replica_fps, shard_service_times, uniform,
+    BatcherConfig, Deployment, MockBackend, Policy, ReplicaSpec, Server, Trace, WorkerId,
 };
 use fcmp::device;
 use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
@@ -304,26 +306,27 @@ fn trace_by_name(name: &str, n: usize, rate: f64, seed: u64) -> anyhow::Result<T
     })
 }
 
-/// Parse a failure-injection schedule: `T:R[,T:R...]` (at `T` seconds,
-/// kill active replica `R`).
+/// Parse a failure-injection schedule: `T:G[,T:G...]` (at `T` seconds,
+/// kill active chain group `G`).
 fn parse_failures(spec: &str) -> anyhow::Result<Vec<FailureEvent>> {
     let mut out = Vec::new();
     for part in spec.split(',') {
-        let (t, r) = part
+        let (t, g) = part
             .split_once(':')
-            .ok_or_else(|| anyhow::anyhow!("--kill wants T:R[,T:R...], got {part:?}"))?;
+            .ok_or_else(|| anyhow::anyhow!("--kill wants T:G[,T:G...], got {part:?}"))?;
         out.push(FailureEvent {
             at_s: t.parse().map_err(|_| anyhow::anyhow!("bad --kill time {t:?}"))?,
-            replica: r.parse().map_err(|_| anyhow::anyhow!("bad --kill replica {r:?}"))?,
+            group: g.parse().map_err(|_| anyhow::anyhow!("bad --kill group {g:?}"))?,
         });
     }
     Ok(out)
 }
 
 /// `fcmp autoscale`: the adaptive control plane end to end — replay a
-/// trace through a mock fleet while the autoscaler reshapes it, the SLO
-/// controller retunes batching windows, and the failure schedule kills
-/// replicas mid-run.
+/// trace through a mock fleet of chain groups while the autoscaler
+/// reshapes it whole groups at a time, the SLO controller retunes
+/// batching windows per group, and the failure schedule kills chain
+/// groups mid-run.
 fn cmd_autoscale(a: &Args) -> anyhow::Result<()> {
     let (net, model) = serve_model(a.get_or("model", "cnv_w1a1")).ok_or_else(|| {
         anyhow::anyhow!("unknown model (cnv_w1a1|cnv_w2a2|rn50_lite_w1a2 or aliases)")
@@ -338,13 +341,16 @@ fn cmd_autoscale(a: &Args) -> anyhow::Result<()> {
         println!("recorded trace ({} arrivals) to {out}", trace.len());
     }
 
-    // device pool: the first --replicas entries start active, the rest are
-    // the standby pool scale-out draws from (capacity-ranked)
+    // topology + device pool: the first --chains × --stages entries start
+    // active (grouped consecutively into chains), the rest are the standby
+    // pool whole-group scale-out draws from (capacity-ranked, --stages
+    // devices at a time)
+    let stages = a.get_usize("stages", 1).max(1);
+    let chains = a.get_usize("chains", a.get_usize("replicas", 1)).max(1);
     let dev_names: Vec<&str> = a.get_or("devices", "7020,7020,7020,7020").split(',').collect();
-    let init = a.get_usize("replicas", 1).max(1);
     anyhow::ensure!(
-        init <= dev_names.len(),
-        "--replicas {init} exceeds the {}-device pool",
+        chains * stages <= dev_names.len(),
+        "--chains {chains} x --stages {stages} exceeds the {}-device pool",
         dev_names.len()
     );
     let mut pool = Vec::with_capacity(dev_names.len());
@@ -353,8 +359,9 @@ fn cmd_autoscale(a: &Args) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown device {name} in --devices"))?;
         pool.push(ReplicaSpec::paper_point(dev));
     }
-    let standby = pool.split_off(init);
-    let active = pool;
+    let standby = pool.split_off(chains * stages);
+    let active: Vec<Vec<ReplicaSpec>> =
+        pool.chunks(stages).map(|c| c.to_vec()).collect();
 
     let batcher = BatcherConfig {
         max_batch: a.get_usize("batch", 4),
@@ -362,7 +369,7 @@ fn cmd_autoscale(a: &Args) -> anyhow::Result<()> {
     };
     let queue_depth = a.get_usize("queue", 32);
     let service_us = a.get_f64("service-us", 1800.0);
-    let mut fleet = ControlledFleet::start(
+    let mut fleet = ControlledFleet::start_chained(
         net.clone(),
         active,
         standby,
@@ -372,8 +379,8 @@ fn cmd_autoscale(a: &Args) -> anyhow::Result<()> {
     );
 
     let scaler = AutoscalerConfig {
-        min_replicas: a.get_usize("min", 1),
-        max_replicas: a.get_usize("max", dev_names.len()),
+        min_groups: a.get_usize("min", 1),
+        max_groups: a.get_usize("max", dev_names.len() / stages),
         shed_out: a.get_f64("shed-out", 0.02),
         p99_out_ms: a.get_f64("p99-out", f64::INFINITY),
         util_in: a.get_f64("util-in", 0.25),
@@ -399,8 +406,8 @@ fn cmd_autoscale(a: &Args) -> anyhow::Result<()> {
     };
 
     println!(
-        "autoscale [{model}]: {init} of {} devices active, trace {trace_name} \
-         ({:.0} req/s offered), tick {:?}, window {} ticks",
+        "autoscale [{model}]: {chains} group(s) x {stages} stage(s) active of {} devices, \
+         trace {trace_name} ({:.0} req/s offered), tick {:?}, window {} ticks",
         dev_names.len(),
         trace.offered_rate(),
         lcfg.tick,
@@ -417,16 +424,20 @@ fn cmd_autoscale(a: &Args) -> anyhow::Result<()> {
             println!("  {e}");
         }
     }
+    if let Some(out) = a.get("events-out") {
+        save_events(&rep.events, Path::new(out))?;
+        println!("journaled {} control events to {out}", rep.events.len());
+    }
     println!(
         "result: submitted {} shed {} ({:.1}% of offered) completed {} | \
-         replicas {} -> {} (peak {}) over {} ticks",
+         chain groups {} -> {} (peak {}) over {} ticks",
         rep.submitted,
         rep.shed,
         100.0 * rep.shed_rate(),
         rep.completed,
-        rep.initial_replicas,
-        rep.final_replicas,
-        rep.max_replicas_seen,
+        rep.initial_groups,
+        rep.final_groups,
+        rep.max_groups_seen,
         rep.ticks
     );
     println!("{}", rep.summary);
@@ -445,16 +456,16 @@ fn cmd_autoscale(a: &Args) -> anyhow::Result<()> {
         let first_out = rep
             .events
             .iter()
-            .find_map(|e| match e {
-                fcmp::control::ControlEvent::ScaleOut { tick, .. } => Some(*tick),
+            .find_map(|e| match e.kind {
+                fcmp::control::ControlEventKind::ScaleOut { .. } => Some(e.tick),
                 _ => None,
             })
             .unwrap();
         let first_in = rep
             .events
             .iter()
-            .find_map(|e| match e {
-                fcmp::control::ControlEvent::ScaleIn { tick, .. } => Some(*tick),
+            .find_map(|e| match e.kind {
+                fcmp::control::ControlEventKind::ScaleIn { .. } => Some(e.tick),
                 _ => None,
             })
             .unwrap();
@@ -470,7 +481,10 @@ fn cmd_autoscale(a: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     let backend = a.get_or("backend", "mock");
-    let replicas = a.get_usize("replicas", 1).max(1);
+    // topology: --chains N groups of --stages k each (N×1 is the flat
+    // replicated fleet; --replicas R is the flat-fleet alias for -chains)
+    let chains = a.get_usize("chains", a.get_usize("replicas", 1)).max(1);
+    let stages = a.get_usize("stages", 1).max(1);
     let n = a.get_usize("requests", 256);
     let rate = a.get_f64("rate", 400.0); // offered requests/s
     let seed = a.get_usize("seed", 2020) as u64;
@@ -481,31 +495,49 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         anyhow::anyhow!("unknown model (cnv_w1a1|cnv_w2a2|rn50_lite_w1a2 or aliases)")
     })?;
 
-    // heterogeneous fleet: replica i runs on the i-th of --devices (cycled)
-    // at the paper's Table V operating point (--point paper) or at the
-    // actually-packed design point (--point packed, cross-replica cached);
-    // the analytic sim/timing model turns each point into the capacity
-    // weight of the `weighted` policy
+    // heterogeneous fleet: worker (g, s) runs on entry g*stages+s of
+    // --devices (cycled) at the paper's Table V operating point (--point
+    // paper) or at the actually-packed design point (--point packed,
+    // cross-replica cached); the analytic sim/timing model turns each
+    // chain group's points into the capacity weight of `weighted`
     let point = a.get_or("point", "paper");
     let dev_names: Vec<&str> = a.get_or("devices", "u250,u280,7020,7012s").split(',').collect();
-    let mut specs = Vec::with_capacity(replicas);
-    for i in 0..replicas {
-        let name = dev_names[i % dev_names.len()];
-        let dev = device::by_name(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown device {name} in --devices"))?;
-        specs.push(match point {
-            "paper" => ReplicaSpec::paper_point(dev),
-            "packed" => ReplicaSpec::packed_point(
-                &net,
-                dev,
-                a.get_usize("hb", 4),
-                a.get_usize("generations", 40),
-                seed,
-            ),
-            other => anyhow::bail!("unknown --point {other} (paper|packed)"),
-        });
+    let mut specs: Vec<Vec<ReplicaSpec>> = Vec::with_capacity(chains);
+    for g in 0..chains {
+        let mut group = Vec::with_capacity(stages);
+        for s in 0..stages {
+            let name = dev_names[(g * stages + s) % dev_names.len()];
+            let dev = device::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown device {name} in --devices"))?;
+            group.push(match point {
+                "paper" => ReplicaSpec::paper_point(dev),
+                "packed" => ReplicaSpec::packed_point(
+                    &net,
+                    dev,
+                    a.get_usize("hb", 4),
+                    a.get_usize("generations", 40),
+                    seed,
+                ),
+                other => anyhow::bail!("unknown --point {other} (paper|packed)"),
+            });
+        }
+        specs.push(group);
     }
-    let weights = fleet_weights(&net, &specs);
+    // per-stage mock service via the shared calibration (the same one
+    // the control plane's ControlledFleet uses): a k-stage chain splits
+    // the network, so each stage serves in 1/k of its device's
+    // full-network interval; the fastest device anchors --service-us
+    let service_us = a.get_f64("service-us", 400.0);
+    let fps: Vec<Vec<f64>> = specs
+        .iter()
+        .map(|g| g.iter().map(|s| replica_fps(&net, s)).collect())
+        .collect();
+    let ref_fps = fps.iter().flatten().copied().fold(0.0f64, f64::max).max(1e-9);
+    let svc: Vec<Vec<Duration>> = fps
+        .iter()
+        .map(|g| mock_chain_service_from_fps(g, service_us, ref_fps))
+        .collect();
+    let weights = group_weights(&svc.iter().map(|g| chain_fps(g)).collect::<Vec<f64>>());
     let policy = Policy::by_name(a.get_or("policy", "round-robin"), weights.clone())
         .ok_or_else(|| anyhow::anyhow!("unknown policy (round-robin|jsq|weighted)"))?;
     let policy_name = policy.name();
@@ -515,50 +547,52 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         trace.save(Path::new(out))?;
         println!("recorded trace ({} arrivals) to {out}", trace.len());
     }
-    let cfg = ServerConfig {
-        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(2) },
-        queue_depth,
-        replicas,
-        policy,
-    };
+    let plan = Deployment::replicated_chains(chains, stages)
+        .with_policy(policy)
+        .with_batcher(BatcherConfig { max_batch, max_wait: Duration::from_millis(2) })
+        .with_queue_depth(queue_depth);
 
-    println!("fleet: {replicas} replicas, policy {policy_name}, trace {trace_name}");
-    for (i, s) in specs.iter().enumerate() {
-        println!(
-            "  replica {i}: {} (R_F={:.1}, LUT {:.0}%) — analytic {:.0} FPS, weight {:.2}",
-            s.device.name,
-            s.rf,
-            100.0 * s.lut_util,
-            replica_fps(&net, s),
-            weights[i]
-        );
+    println!(
+        "fleet: {chains} chain group(s) x {stages} stage(s), policy {policy_name}, \
+         trace {trace_name}"
+    );
+    for (g, group) in specs.iter().enumerate() {
+        println!("  group {g} (weight {:.2}):", weights[g]);
+        for (s, spec) in group.iter().enumerate() {
+            println!(
+                "    stage {s}: {} (R_F={:.1}, LUT {:.0}%) — analytic {:.0} FPS",
+                spec.device.name,
+                spec.rf,
+                100.0 * spec.lut_util,
+                fps[g][s]
+            );
+        }
     }
 
     let (mut srv, fm) = match backend {
         "mock" => {
-            // mock service time tracks the analytic capacity: replica i
-            // serves one item in `--service-us / weight_i`, so the fleet's
-            // heterogeneity is observable without hardware
-            let service_us = a.get_f64("service-us", 400.0);
-            let svc: Vec<Duration> = weights
-                .iter()
-                .map(|w| Duration::from_secs_f64(service_us * 1e-6 / w.max(1e-3)))
-                .collect();
-            let mut srv = Server::start(
-                move |i| MockBackend::with_service(Duration::ZERO, svc[i]),
-                cfg,
+            let mut srv = Server::deploy(
+                move |id: WorkerId| {
+                    MockBackend::with_service(Duration::ZERO, svc[id.group][id.stage])
+                },
+                plan,
             );
             let fm = srv.replay(&trace, 8, seed);
             (srv, fm)
         }
         "pjrt" => {
+            anyhow::ensure!(
+                stages == 1,
+                "--backend pjrt serves flat fleets only (--stages 1): pipeline stages \
+                 need per-shard artifacts, which the AOT exporter does not emit yet"
+            );
             let arts = Path::new(a.get_or("artifacts", "artifacts")).to_path_buf();
             let probe = runtime::Engine::load(&arts, model)?;
             let per = probe.manifest.input_elements_per_sample() as usize;
             drop(probe);
-            let mut srv = Server::start(
+            let mut srv = Server::deploy(
                 move |_| runtime::Engine::load(&arts, model).expect("engine"),
-                cfg,
+                plan,
             );
             let fm = srv.replay(&trace, per, seed);
             (srv, fm)
@@ -567,7 +601,7 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     };
     srv.shutdown();
     println!(
-        "serve [{model} x{replicas} {policy_name}/{trace_name}] offered {:.0} req/s:",
+        "serve [{model} {chains}x{stages} {policy_name}/{trace_name}] offered {:.0} req/s:",
         trace.offered_rate()
     );
     println!("{}", fm.summary());
@@ -678,24 +712,30 @@ fn cmd_shard(a: &Args) -> anyhow::Result<()> {
     );
 
     if a.has_flag("serve") {
+        // --chains N serves N parallel copies of the k-stage chain behind
+        // the router (the replicated-chain topology): offered capacity
+        // scales with N while each frame still traverses one full chain
+        let chains = a.get_usize("chains", 1).max(1);
         let requests = a.get_usize("requests", 256);
-        let rate = a.get_f64("rate", plan.fps * 0.8);
+        let cap = plan.fps * 0.8 * chains as f64;
+        let rate = a.get_f64("rate", cap);
         let batcher = BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) };
         let svc = shard_service_times(&plan);
-        let scfg = ServerConfig {
-            batcher,
-            queue_depth: fifo as usize,
-            replicas: plan.shards.len(),
-            policy: Policy::StageChain,
-        };
-        let mut srv = Server::start_chain(
-            move |i| MockBackend::with_service(Duration::ZERO, svc[i]),
-            scfg,
+        let dep = Deployment::replicated_chains(chains, plan.shards.len())
+            .with_batcher(batcher)
+            .with_queue_depth(fifo as usize);
+        let svc_backend = svc.clone();
+        let mut srv = Server::deploy(
+            move |id: WorkerId| {
+                MockBackend::with_service(Duration::ZERO, svc_backend[id.stage])
+            },
+            dep,
         );
         let trace = poisson(requests, rate, cfg_seed(a));
         let fm = srv.replay(&trace, 8, cfg_seed(a));
         println!(
-            "\nchain serve [{} stages, {:.0} req/s offered]:",
+            "\nchain serve [{} chain(s) x {} stages, {:.0} req/s offered]:",
+            chains,
             plan.shards.len(),
             trace.offered_rate()
         );
@@ -738,7 +778,8 @@ fn cmd_shard(a: &Args) -> anyhow::Result<()> {
                         fifo as usize,
                         Duration::from_millis(2),
                     )?;
-                    let rate2 = a.get_f64("rate", new_plan.fps * 0.8).min(new_plan.fps * 0.8);
+                    let cap2 = new_plan.fps * 0.8 * chains as f64;
+                    let rate2 = a.get_f64("rate", cap2).min(cap2);
                     let trace2 = poisson(requests, rate2.max(1.0), cfg_seed(a) + 1);
                     let fm2 = srv.replay(&trace2, 8, cfg_seed(a) + 1);
                     println!(
@@ -822,27 +863,33 @@ subcommands:
   perf    analytic FPS/latency of an accelerator (--network, --mhz)
   gals    cycle-level GALS streamer simulation (--nb, --rf, --static)
   golden  verify PJRT runtime against python golden outputs
-  serve   multi-replica sharded inference serving (--replicas N --policy
-          round-robin|jsq|weighted --trace poisson|bursty|heavy|diurnal|
-          file:PATH [--trace-out PATH] --backend mock|pjrt --point
-          paper|packed); weighted capacity comes from the sim/timing model
-          of each replica's --devices entry
+  serve   unified Deployment serving (--chains N --stages k: N parallel
+          k-stage chain groups behind the router; N x 1 is the flat
+          replicated fleet, 1 x k a single pipeline chain, N x k the
+          replicated-chain shape) --policy round-robin|jsq|weighted
+          --trace poisson|bursty|heavy|diurnal|file:PATH [--trace-out
+          PATH] --backend mock|pjrt --point paper|packed; weighted
+          capacity comes from the sim/timing model of each chain group's
+          --devices entries, and the summary reports per-group e2e p99
   shard   pipeline-parallel multi-device sharding: partition one network
           over --devices a,b,... [--shards k] into contiguous stage shards
           (per-shard FCMP packing, --hb/--generations/--engine ga|ffd),
           model the cut links (--link-gbps/--link-us), simulate the staged
-          pipeline (--frames/--fifo) and optionally serve it as a stage
-          chain (--serve --requests N --rate R); --kill-stage I simulates
-          losing shard I's device mid-serve, re-partitions the survivors
-          (migrating cached packed manifests) and splices the repaired
-          plan into the running chain
-  autoscale  adaptive control plane on a mock fleet: SLO-driven
-          autoscaling (--shed-out/--p99-out/--util-in/--cooldown, bounds
-          --min/--max), live SLO batching (--slo-p99 MS), failure
-          injection (--kill T:R,...), driven by --trace
-          flash[:M[:S[:L]]]|diurnal|...|file:PATH; --static disables the
-          autoscaler (baseline arm), --require-scale-cycle makes the run
-          fail unless it scaled out then back in (CI smoke)
+          pipeline (--frames/--fifo) and optionally serve it (--serve
+          --chains N --requests R: N replicated copies of the k-stage
+          chain); --kill-stage I simulates losing shard I's device
+          mid-serve, re-partitions the survivors (migrating cached packed
+          manifests) and splices the repaired plan into the running chains
+  autoscale  adaptive control plane on a mock fleet of chain groups
+          (--chains N x --stages k): SLO-driven whole-group autoscaling
+          (--shed-out/--p99-out/--util-in/--cooldown, bounds --min/--max
+          in groups), live SLO batching co-tuned per group (--slo-p99 MS),
+          failure injection (--kill T:G,... kills chain group G), driven
+          by --trace flash[:M[:S[:L]]]|diurnal|...|file:PATH; --static
+          disables the autoscaler (baseline arm), --events-out PATH
+          journals the ControlEvent history in the trace file convention,
+          --require-scale-cycle makes the run fail unless it scaled out
+          then back in (CI smoke)
   dse     folding design-space exploration (--network, --device, --budget)
   floorplan  SLR floorplan of a network on a multi-die device (Fig. 5)";
 

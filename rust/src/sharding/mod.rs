@@ -24,12 +24,17 @@
 //! * [`crate::sim::pipeline::simulate_sharded`] — discrete-event
 //!   validation that the staged pipeline's steady state matches
 //!   [`ShardPlan::fps`].
-//! * [`crate::coordinator::Server::start_chain`] — serves a plan as a
-//!   stage chain: every frame traverses shard 0..k-1 in order over
-//!   bounded queues, with per-stage and end-to-end latency metrics.
+//! * [`crate::coordinator::Server::deploy`] with a
+//!   [`crate::coordinator::Deployment::chain`] plan — serves a plan as a
+//!   chain group: every frame traverses shard 0..k-1 in order over
+//!   bounded queues, with per-stage, per-group and end-to-end latency
+//!   metrics; [`crate::coordinator::Deployment::replicated_chains`] puts
+//!   N parallel copies of the chain behind the router once one
+//!   pipeline's bottleneck is the throughput limit.
 //!
 //! CLI: `fcmp shard --network cnv-w2a2 --devices zynq7012s,zynq7012s
-//! --shards 2`; bench: `shard_scaling` → `BENCH_sharding.json`.
+//! --shards 2 [--serve --chains N]`; bench: `shard_scaling` →
+//! `BENCH_sharding.json`.
 
 pub mod link;
 pub mod partition;

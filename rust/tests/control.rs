@@ -1,23 +1,25 @@
 //! Control-plane acceptance: (a) the autoscaler absorbs a flash crowd
 //! that a static fleet sheds, scaling out within cooldown bounds and back
 //! in afterwards; (b) the SLO controller brings p99 under budget on a
-//! backlogged replica without giving up steady-state throughput; (c)
+//! backlogged worker without giving up steady-state throughput; (c)
 //! losing a device of a sharded plan triggers re-partition onto the
 //! survivor — migrating cached packed manifests with zero re-packs when
 //! the cache is warm — or a clean infeasibility report, and the repaired
-//! plan splices into a running chain; plus packing-cache behavior under
-//! control-plane churn.
+//! plan splices into a running chain; (d) scaling works in whole chain
+//! groups of the `Deployment` topology, never lone mid-chain workers;
+//! plus packing-cache behavior under control-plane churn and the
+//! on-disk `ControlEvent` journal round-trip.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use fcmp::control::{
-    replan, run_loop, splice_mock_chain, AutoscalerConfig, ControlEvent, ControlledFleet,
-    FailureEvent, LoopConfig, SignalConfig, SloConfig,
+    load_events, replan, run_loop, save_events, splice_mock_chain, AutoscalerConfig,
+    ControlEventKind, ControlledFleet, FailureEvent, LoopConfig, SignalConfig, SloConfig,
 };
 use fcmp::coordinator::{
-    flash_crowd, poisson, shard_service_times, BatcherConfig, MockBackend, Policy,
-    ReplicaSpec, Server, ServerConfig,
+    flash_crowd, poisson, shard_service_times, BatcherConfig, Deployment, MockBackend,
+    ReplicaSpec, Server, WorkerId,
 };
 use fcmp::device::{zynq_7012s, zynq_7020};
 use fcmp::nn::{cnv, CnvVariant};
@@ -34,7 +36,7 @@ fn specs_7020(k: usize) -> Vec<ReplicaSpec> {
 fn autoscaler_absorbs_a_flash_crowd_a_static_fleet_sheds() {
     let net = cnv(CnvVariant::W1A1);
     // base 200 req/s, 5x burst over [0.5, 1.0), ~1 s quiet tail; one
-    // replica sustains 500 req/s (2 ms/item), so the burst needs ~2-3
+    // group sustains 500 req/s (2 ms/item), so the burst needs ~2-3
     let trace = flash_crowd(800, 200.0, 5.0, 0.5, 0.5, 7);
     let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
     let service_us = 2_000.0;
@@ -48,7 +50,7 @@ fn autoscaler_absorbs_a_flash_crowd_a_static_fleet_sheds() {
         ..LoopConfig::default()
     };
 
-    // static arm: 1 replica, no controller
+    // static arm: 1 group, no controller
     let mut static_fleet =
         ControlledFleet::start(net.clone(), specs_7020(1), vec![], service_us, batcher, 32);
     let static_rep = run_loop(&mut static_fleet, &trace, &base_cfg);
@@ -59,8 +61,8 @@ fn autoscaler_absorbs_a_flash_crowd_a_static_fleet_sheds() {
         ControlledFleet::start(net, specs_7020(1), specs_7020(3), service_us, batcher, 32);
     let auto_cfg = LoopConfig {
         autoscaler: Some(AutoscalerConfig {
-            min_replicas: 1,
-            max_replicas: 4,
+            min_groups: 1,
+            max_groups: 4,
             shed_out: 0.02,
             p99_out_ms: f64::INFINITY,
             util_in: 0.2,
@@ -80,7 +82,7 @@ fn autoscaler_absorbs_a_flash_crowd_a_static_fleet_sheds() {
     );
     assert!(auto_rep.scale_outs() >= 1, "no scale-out under a 5x flash crowd");
     assert!(
-        auto_rep.max_replicas_seen > auto_rep.initial_replicas,
+        auto_rep.max_groups_seen > auto_rep.initial_groups,
         "fleet never grew: {:?}",
         auto_rep.events
     );
@@ -110,10 +112,119 @@ fn autoscaler_absorbs_a_flash_crowd_a_static_fleet_sheds() {
     // and the quiet tail scales the fleet back in
     assert!(auto_rep.scale_ins() >= 1, "no scale-in over the quiet tail: {:?}", auto_rep.events);
     assert!(
-        auto_rep.final_replicas < auto_rep.max_replicas_seen,
+        auto_rep.final_groups < auto_rep.max_groups_seen,
         "fleet ended at its peak size {}",
-        auto_rep.final_replicas
+        auto_rep.final_groups
     );
+    // every journaled event timestamps its position in the run
+    assert!(auto_rep.events.iter().all(|e| e.at_s >= 0.0 && e.at_s.is_finite()));
+}
+
+/// (d) Group-granular scaling (acceptance): on a fleet of 2-stage chain
+/// groups, the autoscaler adds and retires whole groups — devices move
+/// in multiples of the chain depth and no partial chain ever serves.
+#[test]
+fn autoscaler_scales_whole_chain_groups_not_lone_replicas() {
+    let net = cnv(CnvVariant::W1A1);
+    // one active 2-stage group; 5 standby devices fund at most two more
+    // whole groups (the 5th device can never serve alone). Each stage
+    // serves in 1 ms (2 ms device service / 2 stages), so one group
+    // sustains ~1000 req/s; the 4x burst over 350 req/s needs a second
+    // group.
+    let trace = flash_crowd(900, 350.0, 4.0, 0.4, 0.5, 13);
+    let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
+    let mut fleet = ControlledFleet::start_chained(
+        net,
+        vec![specs_7020(2)],
+        specs_7020(5),
+        2_000.0,
+        batcher,
+        32,
+    );
+    assert_eq!((fleet.group_count(), fleet.stages()), (1, 2));
+    let cfg = LoopConfig {
+        tick: Duration::from_millis(20),
+        signal: SignalConfig { window_ticks: 2 },
+        autoscaler: Some(AutoscalerConfig {
+            min_groups: 1,
+            max_groups: 3,
+            shed_out: 0.02,
+            p99_out_ms: f64::INFINITY,
+            util_in: 0.2,
+            cooldown_ticks: 2,
+            step: 1,
+        }),
+        trailing_ticks: 10,
+        input_len: 4,
+        seed: 13,
+        ..LoopConfig::default()
+    };
+    let rep = run_loop(&mut fleet, &trace, &cfg);
+    let final_groups = fleet.group_count();
+    let final_standby = fleet.standby_len();
+    fleet.shutdown();
+
+    assert!(rep.scale_outs() >= 1, "no scale-out under a 4x flash crowd: {:?}", rep.events);
+    assert!(rep.max_groups_seen >= 2, "fleet never added a chain group");
+    // the devices moved in whole-group multiples of the chain depth:
+    // active + standby always partitions the original 7-device pool with
+    // active a multiple of 2
+    assert_eq!(final_groups * 2 + final_standby, 7);
+    // every scale event is a whole-group delta
+    for e in &rep.events {
+        match e.kind {
+            ControlEventKind::ScaleOut { from, to } => assert!(to > from),
+            ControlEventKind::ScaleIn { from, to } => assert!(to < from),
+            _ => {}
+        }
+    }
+    // the quiet tail folds back toward one group
+    assert!(rep.scale_ins() >= 1, "no scale-in over the quiet tail: {:?}", rep.events);
+    assert_eq!(rep.completed, rep.submitted, "accepted requests must drain");
+}
+
+/// The journal of a real controlled run round-trips through disk in the
+/// trace-file convention (satellite: control-plane persistence).
+#[test]
+fn control_event_journal_roundtrips_for_a_real_run() {
+    let net = cnv(CnvVariant::W1A1);
+    let trace = flash_crowd(500, 250.0, 5.0, 0.3, 0.4, 31);
+    let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
+    let mut fleet =
+        ControlledFleet::start(net, specs_7020(1), specs_7020(2), 2_000.0, batcher, 32);
+    let cfg = LoopConfig {
+        tick: Duration::from_millis(20),
+        signal: SignalConfig { window_ticks: 2 },
+        autoscaler: Some(AutoscalerConfig {
+            min_groups: 1,
+            max_groups: 3,
+            shed_out: 0.02,
+            p99_out_ms: f64::INFINITY,
+            util_in: 0.2,
+            cooldown_ticks: 2,
+            step: 1,
+        }),
+        trailing_ticks: 8,
+        input_len: 4,
+        seed: 31,
+        ..LoopConfig::default()
+    };
+    let rep = run_loop(&mut fleet, &trace, &cfg);
+    fleet.shutdown();
+    assert!(!rep.events.is_empty(), "the burst must produce journalable events");
+
+    let path = std::env::temp_dir().join("fcmp_control_journal_test.txt");
+    save_events(&rep.events, &path).unwrap();
+    let back = load_events(&path).unwrap();
+    assert_eq!(back.len(), rep.events.len());
+    for (a, b) in rep.events.iter().zip(&back) {
+        assert_eq!(a.tick, b.tick);
+        assert_eq!(a.kind, b.kind);
+        assert!((a.at_s - b.at_s).abs() < 1e-6);
+    }
+    // journal times are monotone like a trace's arrivals
+    assert!(back.windows(2).all(|w| w[1].at_s >= w[0].at_s));
+    let _ = std::fs::remove_file(&path);
 }
 
 /// (b) SLO batching: an over-wide batching window inflates p99 far past
@@ -173,7 +284,10 @@ fn slo_controller_brings_p99_under_budget_without_throughput_loss() {
     let mut fleet = mk_fleet();
     let warm_rep = run_loop(&mut fleet, &warm, &slo_cfg);
     assert!(
-        warm_rep.events.iter().any(|e| matches!(e, ControlEvent::SloAdjust { .. })),
+        warm_rep
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, ControlEventKind::SloAdjust { .. })),
         "controller never adjusted the batcher"
     );
     let probe_rep = run_loop(&mut fleet, &probe, &slo_cfg);
@@ -211,21 +325,18 @@ fn device_loss_repartitions_onto_survivor_migrating_cached_manifests() {
     // full-range packed point — exactly what repair will need
     assert!(fits_packed(&net, &devs[0], cfg), "W1A1 must fit a 7020 packed");
 
-    // serve the plan as a 2-stage chain
+    // serve the plan as a 2-stage chain group
     let svc: Vec<Duration> = shard_service_times(&plan)
         .iter()
         .map(|d| Duration::from_micros((d.as_micros() as u64).clamp(50, 500)))
         .collect();
     let batcher = BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) };
-    let scfg = ServerConfig {
-        batcher,
-        queue_depth: 16,
-        replicas: plan.shards.len(),
-        policy: Policy::StageChain,
-    };
-    let mut srv = Server::start_chain(
-        move |i| MockBackend::with_service(Duration::ZERO, svc[i]),
-        scfg,
+    let dep = Deployment::chain(plan.shards.len())
+        .with_batcher(batcher)
+        .with_queue_depth(16);
+    let mut srv = Server::deploy(
+        move |id: WorkerId| MockBackend::with_service(Duration::ZERO, svc[id.stage]),
+        dep,
     );
     for i in 0..20u64 {
         srv.submit_blocking(i, vec![i as f32]).unwrap();
@@ -245,10 +356,11 @@ fn device_loss_repartitions_onto_survivor_migrating_cached_manifests() {
 
     // splice the repaired plan into the running server and keep serving
     splice_mock_chain(&mut srv, new_plan, batcher, 16, Duration::from_millis(2)).unwrap();
+    assert_eq!(srv.group_count(), 1);
     assert_eq!(srv.replica_count(), 1);
     // the spliced stage is the bottleneck of its own 1-stage chain, so
     // co-tuning must have set it to serve greedily (batch 1, no window)
-    let spliced = srv.batcher_config(0).expect("spliced stage");
+    let spliced = srv.batcher_config(0, 0).expect("spliced stage");
     assert_eq!(spliced.max_batch, 1);
     assert_eq!(spliced.max_wait, Duration::ZERO);
     for i in 100..120u64 {
@@ -340,7 +452,7 @@ fn packing_cache_churn_converges_on_one_design_per_key() {
 #[test]
 fn failure_injection_is_journaled_and_recovered_from() {
     let net = cnv(CnvVariant::W1A1);
-    // steady 700 req/s saturates one 500 req/s replica but not two;
+    // steady 700 req/s saturates one 500 req/s group but not two;
     // killing one at 0.3 s forces sheds, and the autoscaler pulls the
     // standby device in
     let trace = poisson(600, 700.0, 23);
@@ -351,15 +463,15 @@ fn failure_injection_is_journaled_and_recovered_from() {
         tick: Duration::from_millis(20),
         signal: SignalConfig { window_ticks: 2 },
         autoscaler: Some(AutoscalerConfig {
-            min_replicas: 1,
-            max_replicas: 3,
+            min_groups: 1,
+            max_groups: 3,
             shed_out: 0.02,
             p99_out_ms: f64::INFINITY,
             util_in: 0.0, // scale-in disabled: the kill target must exist
             cooldown_ticks: 2,
             step: 1,
         }),
-        failures: vec![FailureEvent { at_s: 0.3, replica: 1 }],
+        failures: vec![FailureEvent { at_s: 0.3, group: 1 }],
         trailing_ticks: 4,
         input_len: 4,
         seed: 23,
@@ -368,10 +480,15 @@ fn failure_injection_is_journaled_and_recovered_from() {
     let rep = run_loop(&mut fleet, &trace, &cfg);
     fleet.shutdown();
     assert_eq!(rep.failures(), 1, "the scheduled kill must fire: {:?}", rep.events);
-    let failure_pos =
-        rep.events.iter().position(|e| matches!(e, ControlEvent::Failure { .. })).unwrap();
+    let failure_pos = rep
+        .events
+        .iter()
+        .position(|e| matches!(e.kind, ControlEventKind::Failure { .. }))
+        .unwrap();
     assert!(
-        rep.events[failure_pos..].iter().any(|e| matches!(e, ControlEvent::ScaleOut { .. })),
+        rep.events[failure_pos..]
+            .iter()
+            .any(|e| matches!(e.kind, ControlEventKind::ScaleOut { .. })),
         "no scale-out after the failure: {:?}",
         rep.events
     );

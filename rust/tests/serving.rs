@@ -1,23 +1,21 @@
-//! Serving-path integration tests on the deterministic mock backend: exact
-//! dispatch counts per scheduling policy, admission-control shedding and
-//! the typed QueueFull/Closed error split, shutdown-drain semantics, and a
-//! property test that fleet completions are a permutation of submissions
-//! under every policy.
+//! Serving-path integration tests on the deterministic mock backend over
+//! the unified `Deployment` API: exact dispatch counts per scheduling
+//! policy, admission-control shedding and the typed QueueFull/Closed
+//! error split, shutdown-drain semantics, and a property test that fleet
+//! completions are a permutation of submissions under every policy.
 
 use std::time::Duration;
 
 use fcmp::coordinator::{
-    BatcherConfig, Completion, MockBackend, Policy, Server, ServerConfig, SubmitError,
+    BatcherConfig, Completion, Deployment, MockBackend, Policy, Server, SubmitError,
 };
 use fcmp::util::prop;
 
-fn cfg(replicas: usize, policy: Policy, queue_depth: usize, max_batch: usize) -> ServerConfig {
-    ServerConfig {
-        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
-        queue_depth,
-        replicas,
-        policy,
-    }
+fn plan(groups: usize, policy: Policy, queue_depth: usize, max_batch: usize) -> Deployment {
+    Deployment::replicated(groups)
+        .with_policy(policy)
+        .with_batcher(BatcherConfig { max_batch, max_wait: Duration::from_millis(1) })
+        .with_queue_depth(queue_depth)
 }
 
 /// Drain every remaining completion (call after `shutdown`).
@@ -31,23 +29,23 @@ fn drain(srv: &mut Server) -> Vec<Completion> {
 
 #[test]
 fn round_robin_splits_exactly_evenly() {
-    let mut srv = Server::start(|_| MockBackend::instant(), cfg(2, Policy::RoundRobin, 64, 1));
+    let mut srv = Server::deploy(|_| MockBackend::instant(), plan(2, Policy::RoundRobin, 64, 1));
     for i in 0..40 {
         srv.submit_blocking(i, vec![i as f32]).unwrap();
     }
     srv.shutdown();
     let cs = drain(&mut srv);
     assert_eq!(cs.len(), 40);
-    let c0 = cs.iter().filter(|c| c.replica == 0).count();
+    let c0 = cs.iter().filter(|c| c.group == 0).count();
     assert_eq!(c0, 20, "round-robin must alternate exactly");
 }
 
 #[test]
 fn weighted_matches_capacity_ratio_exactly() {
     // SWRR with weights 3:1 dispatches exactly 30/10 over 40 requests
-    let mut srv = Server::start(
+    let mut srv = Server::deploy(
         |_| MockBackend::instant(),
-        cfg(2, Policy::Weighted(vec![3.0, 1.0]), 64, 1),
+        plan(2, Policy::Weighted(vec![3.0, 1.0]), 64, 1),
     );
     for i in 0..40 {
         srv.submit_blocking(i, vec![1.0]).unwrap();
@@ -55,23 +53,23 @@ fn weighted_matches_capacity_ratio_exactly() {
     srv.shutdown();
     let cs = drain(&mut srv);
     assert_eq!(cs.len(), 40);
-    let c0 = cs.iter().filter(|c| c.replica == 0).count();
+    let c0 = cs.iter().filter(|c| c.group == 0).count();
     assert_eq!(c0, 30, "weighted 3:1 must dispatch 30/10");
 }
 
 #[test]
-fn jsq_steers_load_away_from_the_slow_replica() {
-    // replica 0 takes 50 ms per batch, replica 1 is instant; paced arrivals
+fn jsq_steers_load_away_from_the_slow_group() {
+    // group 0 takes 50 ms per batch, group 1 is instant; paced arrivals
     // let JSQ observe the asymmetry through the outstanding counters
-    let mut srv = Server::start(
-        |i| {
-            if i == 0 {
+    let mut srv = Server::deploy(
+        |id| {
+            if id.group == 0 {
                 MockBackend::with_service(Duration::from_millis(50), Duration::ZERO)
             } else {
                 MockBackend::instant()
             }
         },
-        cfg(2, Policy::JoinShortestQueue, 64, 1),
+        plan(2, Policy::JoinShortestQueue, 64, 1),
     );
     for i in 0..30 {
         srv.submit_blocking(i, vec![1.0]).unwrap();
@@ -80,16 +78,16 @@ fn jsq_steers_load_away_from_the_slow_replica() {
     srv.shutdown();
     let cs = drain(&mut srv);
     assert_eq!(cs.len(), 30);
-    let c0 = cs.iter().filter(|c| c.replica == 0).count();
+    let c0 = cs.iter().filter(|c| c.group == 0).count();
     let c1 = cs.len() - c0;
-    assert!(c1 >= 2 * c0, "JSQ sent {c0} to the slow replica, {c1} to the fast one");
+    assert!(c1 >= 2 * c0, "JSQ sent {c0} to the slow group, {c1} to the fast one");
 }
 
 #[test]
 fn overload_sheds_with_queue_full_and_recovers() {
-    let mut srv = Server::start(
+    let mut srv = Server::deploy(
         |_| MockBackend::with_service(Duration::from_millis(30), Duration::ZERO),
-        cfg(1, Policy::RoundRobin, 2, 1),
+        plan(1, Policy::RoundRobin, 2, 1),
     );
     // burst far beyond queue capacity: the excess must shed as QueueFull
     let mut shed = 0;
@@ -114,7 +112,7 @@ fn overload_sheds_with_queue_full_and_recovers() {
 
 #[test]
 fn closed_error_is_distinct_from_queue_full() {
-    let mut srv = Server::start(|_| MockBackend::instant(), cfg(2, Policy::RoundRobin, 4, 1));
+    let mut srv = Server::deploy(|_| MockBackend::instant(), plan(2, Policy::RoundRobin, 4, 1));
     srv.submit(0, vec![1.0]).unwrap();
     srv.shutdown();
     match srv.submit(1, vec![2.0]) {
@@ -124,23 +122,25 @@ fn closed_error_is_distinct_from_queue_full() {
         }
         other => panic!("want Closed after shutdown, got {other:?}"),
     }
-    // the error is a real std error with distinct messages per variant
+    // the error is a real std error with distinct messages per variant,
+    // and `?` converts it straight into anyhow::Result
     let closed = srv.submit(2, vec![1.0]).unwrap_err();
     assert!(closed.is_closed());
     assert!(format!("{closed}").contains("shut down"));
-    assert_eq!(closed.into_request().id, 2);
+    let as_anyhow: anyhow::Error = closed.into();
+    assert!(format!("{as_anyhow}").contains("request 2"));
 }
 
 #[test]
 fn shutdown_drains_every_in_flight_request() {
-    let mut srv = Server::start(
+    let mut srv = Server::deploy(
         |_| MockBackend::with_service(Duration::from_millis(1), Duration::from_millis(1)),
-        cfg(3, Policy::RoundRobin, 128, 4),
+        plan(3, Policy::RoundRobin, 128, 4),
     );
     for i in 0..90 {
         srv.submit_blocking(i, vec![i as f32, 2.0]).unwrap();
     }
-    // shutdown must wait for all three replicas to drain their queues
+    // shutdown must wait for all three groups to drain their queues
     srv.shutdown();
     let cs = drain(&mut srv);
     assert_eq!(cs.len(), 90, "shutdown dropped in-flight requests");
@@ -150,13 +150,14 @@ fn shutdown_drains_every_in_flight_request() {
     for c in &cs {
         // mock output[0] = sum of the request's inputs = id + 2
         assert_eq!(c.output[0], c.id as f32 + 2.0, "wrong output for {}", c.id);
-        assert!(c.replica < 3);
+        assert!(c.group < 3);
+        assert_eq!(c.stage, 0, "flat groups complete at their only stage");
     }
 }
 
 #[test]
 fn prop_fleet_completions_are_a_permutation_of_submissions() {
-    // random (n, replicas, policy) cases; under every policy, every
+    // random (n, groups, policy) cases; under every policy, every
     // submitted id comes back exactly once with the right output
     prop::check(
         2024,
@@ -164,23 +165,21 @@ fn prop_fleet_completions_are_a_permutation_of_submissions() {
         |r| vec![1 + r.below(50), 1 + r.below(4), r.below(3)],
         |v: &Vec<u64>| {
             let n = v.first().copied().unwrap_or(8).clamp(1, 50);
-            let replicas = v.get(1).copied().unwrap_or(1).clamp(1, 4) as usize;
+            let groups = v.get(1).copied().unwrap_or(1).clamp(1, 4) as usize;
             let policy = match v.get(2).copied().unwrap_or(0) % 3 {
                 0 => Policy::RoundRobin,
                 1 => Policy::JoinShortestQueue,
-                _ => Policy::Weighted((1..=replicas).map(|i| i as f64).collect()),
+                _ => Policy::Weighted((1..=groups).map(|i| i as f64).collect()),
             };
-            let mut srv = Server::start(
+            let mut srv = Server::deploy(
                 |_| MockBackend::instant(),
-                ServerConfig {
-                    batcher: BatcherConfig {
+                Deployment::replicated(groups)
+                    .with_policy(policy)
+                    .with_batcher(BatcherConfig {
                         max_batch: 4,
                         max_wait: Duration::from_micros(200),
-                    },
-                    queue_depth: 64,
-                    replicas,
-                    policy,
-                },
+                    })
+                    .with_queue_depth(64),
             );
             for i in 0..n {
                 if srv.submit_blocking(i, vec![i as f32]).is_err() {
@@ -193,8 +192,8 @@ fn prop_fleet_completions_are_a_permutation_of_submissions() {
                 if c.output[0] != c.id as f32 {
                     return Err(format!("output mismatch for id {}", c.id));
                 }
-                if c.replica >= replicas {
-                    return Err(format!("completion from unknown replica {}", c.replica));
+                if c.group >= groups {
+                    return Err(format!("completion from unknown group {}", c.group));
                 }
                 ids.push(c.id);
             }

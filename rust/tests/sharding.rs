@@ -1,14 +1,16 @@
 //! Pipeline-parallel sharding: end-to-end acceptance (the 2×7012S CNV
 //! port the single device cannot host), partition invariant property
 //! tests (contiguous, exhaustive, non-overlapping, bottleneck-optimal),
-//! staged-pipeline sim vs analytic model, and stage-chain serving through
-//! the coordinator with per-stage + end-to-end latency metrics.
+//! staged-pipeline sim vs analytic model, and chain-group serving through
+//! the unified `Deployment` coordinator — single chains, flat-fleet
+//! equivalence with the pre-`Deployment` router, and the replicated-chain
+//! topology whose throughput beats one chain's.
 
 use std::time::Duration;
 
 use fcmp::coordinator::{
-    shard_service_times, BatcherConfig, FleetMetrics, MockBackend, Policy, Server,
-    ServerConfig, SubmitError,
+    shard_service_times, BatcherConfig, Deployment, FleetMetrics, MockBackend, Policy,
+    Server, SubmitError, WorkerId,
 };
 use fcmp::device::{self, Device};
 use fcmp::nn::{cnv, CnvVariant};
@@ -139,7 +141,8 @@ fn prop_partition_cover_invariants_and_bottleneck_optimality() {
 /// A frame must traverse every shard in order: with batch-1 instant mocks
 /// each stage maps `[x, ..] -> [sum, 1]`, so after k stages the output is
 /// `input + k - 1`; the completion carries k per-stage latencies and the
-/// fleet metrics report a per-stage breakdown plus an end-to-end p99.
+/// fleet metrics report a per-stage breakdown plus per-group and
+/// fleet-wide end-to-end p99.
 #[test]
 fn chain_frames_traverse_all_shards_in_order_with_e2e_p99() {
     let net = cnv(CnvVariant::W2A2);
@@ -153,15 +156,12 @@ fn chain_frames_traverse_all_shards_in_order_with_e2e_p99() {
         .iter()
         .map(|d| Duration::from_micros((d.as_micros() as u64).clamp(50, 500)))
         .collect();
-    let cfg = ServerConfig {
-        batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
-        queue_depth: 32,
-        replicas: k,
-        policy: Policy::StageChain,
-    };
-    let mut srv = Server::start_chain(
-        move |i| MockBackend::with_service(Duration::ZERO, svc[i]),
-        cfg,
+    let dep = Deployment::chain(k)
+        .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) })
+        .with_queue_depth(32);
+    let mut srv = Server::deploy(
+        move |id: WorkerId| MockBackend::with_service(Duration::ZERO, svc[id.stage]),
+        dep,
     );
     let n = 40u64;
     for i in 0..n {
@@ -169,7 +169,7 @@ fn chain_frames_traverse_all_shards_in_order_with_e2e_p99() {
     }
     srv.shutdown();
 
-    let mut fm = FleetMetrics::new(k);
+    let mut fm = FleetMetrics::new(&[k]);
     fm.start();
     let mut seen = 0;
     while let Some(c) = srv.next_completion() {
@@ -180,7 +180,8 @@ fn chain_frames_traverse_all_shards_in_order_with_e2e_p99() {
             "frame {} did not traverse all {k} shards in order",
             c.id
         );
-        assert_eq!(c.replica, k - 1, "completions must come from the last shard");
+        assert_eq!(c.group, 0, "one chain, one group");
+        assert_eq!(c.stage, k - 1, "completions must come from the last shard");
         assert_eq!(c.stage_latencies.len(), k);
         fm.record(&c);
     }
@@ -189,6 +190,9 @@ fn chain_frames_traverse_all_shards_in_order_with_e2e_p99() {
     let s = fm.summary();
     let fleet = s.fleet.expect("end-to-end summary");
     assert!(fleet.latency_ms.p99 > 0.0, "end-to-end p99 must be reported");
+    let group = s.per_group[0].as_ref().expect("per-group e2e summary");
+    assert_eq!(group.requests, n as usize);
+    assert!((group.latency_ms.p99 - fleet.latency_ms.p99).abs() < 1e-9);
     assert_eq!(s.per_replica.len(), k);
     for (i, stage) in s.per_replica.iter().enumerate() {
         let stage = stage.as_ref().unwrap_or_else(|| panic!("stage {i} idle"));
@@ -202,26 +206,23 @@ fn chain_frames_traverse_all_shards_in_order_with_e2e_p99() {
 /// routes a frame into a mid-chain stage.
 #[test]
 fn chain_backpressure_sheds_at_stage_zero_only() {
-    let cfg = ServerConfig {
-        batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(0) },
-        queue_depth: 1,
-        replicas: 3,
-        policy: Policy::StageChain,
-    };
-    let mut srv = Server::start_chain(
-        |i| {
-            if i == 0 {
+    let dep = Deployment::chain(3)
+        .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(0) })
+        .with_queue_depth(1);
+    let mut srv = Server::deploy(
+        |id: WorkerId| {
+            if id.stage == 0 {
                 MockBackend::with_service(Duration::from_millis(40), Duration::ZERO)
             } else {
                 MockBackend::instant()
             }
         },
-        cfg,
+        dep,
     );
     let mut shed = 0;
     for i in 0..30 {
         match srv.submit(i, vec![1.0]) {
-            Ok(stage) => assert_eq!(stage, 0, "chains must ingest at stage 0"),
+            Ok(group) => assert_eq!(group, 0, "a single chain is group 0"),
             Err(e @ SubmitError::QueueFull(_)) => {
                 assert!(!e.is_closed());
                 shed += 1;
@@ -237,6 +238,104 @@ fn chain_backpressure_sheds_at_stage_zero_only() {
         completed += 1;
     }
     assert_eq!(completed, 30 - shed, "accepted frames must all drain");
+}
+
+/// Deployment equivalence (acceptance): a plan of N 1-stage groups
+/// reproduces the PR-2 flat-fleet dispatch *exactly* — round-robin
+/// alternates, SWRR honours the 3:1 ratio, and a chain-shaped metrics
+/// collector is not involved anywhere.
+#[test]
+fn flat_deployment_reproduces_replicated_fleet_dispatch_exactly() {
+    // round-robin over 2 one-stage groups: exact alternation, so the two
+    // groups split 40 requests 20/20 like the old replicated router
+    let rr = Deployment::replicated(2)
+        .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) })
+        .with_queue_depth(64);
+    let mut srv = Server::deploy(|_| MockBackend::instant(), rr);
+    for i in 0..40 {
+        srv.submit_blocking(i, vec![1.0]).unwrap();
+    }
+    srv.shutdown();
+    let mut counts = [0usize; 2];
+    while let Some(c) = srv.next_completion() {
+        assert!(c.stage_latencies.is_empty(), "flat groups must not report chain hops");
+        assert_eq!(c.stage, 0);
+        counts[c.group] += 1;
+    }
+    assert_eq!(counts, [20, 20], "round-robin dispatch drifted from the flat fleet");
+
+    // weighted 3:1 over 2 groups of 1 stage: SWRR dispatches 30/10
+    // exactly as the PR-2 router did over replicas
+    let sw = Deployment::replicated(2)
+        .with_policy(Policy::Weighted(vec![3.0, 1.0]))
+        .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) })
+        .with_queue_depth(64);
+    let mut srv = Server::deploy(|_| MockBackend::instant(), sw);
+    for i in 0..40 {
+        srv.submit_blocking(i, vec![1.0]).unwrap();
+    }
+    srv.shutdown();
+    let mut counts = [0usize; 2];
+    while let Some(c) = srv.next_completion() {
+        counts[c.group] += 1;
+    }
+    assert_eq!(counts, [30, 10], "SWRR dispatch drifted from the flat fleet");
+}
+
+/// Replicated chains (acceptance): two parallel copies of a 2-stage chain
+/// complete strictly more of an offered load than one copy can, shed
+/// strictly less, and report per-group end-to-end p99 — the topology the
+/// old start/start_chain split could not express.
+#[test]
+fn replicated_chains_beat_one_chain_throughput() {
+    // each stage serves 2 ms/frame: one 2-stage chain sustains ~500
+    // frames/s; offer ~800/s so a single chain must shed while two chains
+    // (~1000/s aggregate) absorb nearly everything
+    let stage_service = Duration::from_millis(2);
+    let requests = 240usize;
+    let rate = 800.0;
+    let run = |chains: usize| {
+        let dep = Deployment::replicated_chains(chains, 2)
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) })
+            .with_queue_depth(8);
+        let mut srv = Server::deploy(
+            move |_| MockBackend::with_service(Duration::ZERO, stage_service),
+            dep,
+        );
+        let trace = fcmp::coordinator::uniform(requests, rate);
+        let fm = srv.replay(&trace, 4, 99);
+        srv.shutdown();
+        fm
+    };
+    let one = run(1);
+    let two = run(2);
+    let one_summary = one.summary();
+    let two_summary = two.summary();
+    assert!(
+        one.shed() > 0,
+        "one chain absorbed the whole 1.6x-overload trace — the scenario lost its signal"
+    );
+    assert!(
+        two.completed() > one.completed(),
+        "2 chains completed {} <= 1 chain's {}",
+        two.completed(),
+        one.completed()
+    );
+    assert!(
+        two.shed() < one.shed(),
+        "2 chains shed {} >= 1 chain's {}",
+        two.shed(),
+        one.shed()
+    );
+    // the replicated-chain summary carries a per-group e2e p99 per copy
+    assert_eq!(two_summary.per_group.len(), 2);
+    for (g, s) in two_summary.per_group.iter().enumerate() {
+        let s = s.as_ref().unwrap_or_else(|| panic!("group {g} idled"));
+        assert!(s.latency_ms.p99 > 0.0);
+        assert!(s.requests > 0);
+    }
+    assert_eq!(two_summary.per_replica.len(), 4, "2 groups x 2 stages");
+    assert_eq!(one_summary.per_group.len(), 1);
 }
 
 /// Link modelling plumbs through the plan: a bandwidth-starved link caps
