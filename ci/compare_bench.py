@@ -44,7 +44,7 @@ def row_key(row):
             continue
         if isinstance(v, str):
             parts.append(f"{k}={v}")
-        elif isinstance(v, int) and k in ("replicas", "shards", "chains", "stages"):
+        elif isinstance(v, int) and k in ("replicas", "shards", "chains", "stages", "window"):
             parts.append(f"{k}={v}")
     return "|".join(parts)
 

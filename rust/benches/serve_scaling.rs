@@ -5,15 +5,26 @@
 //! on a 99%-full U280). Reports fleet throughput, shed counts and latency
 //! percentiles per cell.
 //!
-//! Flags: `--smoke` shrinks the trace for CI; `--json` writes the cells to
+//! Three arms share one row format:
+//!
+//! * `sync` — the original open-loop trace replay (window 1, blocking
+//!   backends): the scaling-with-replicas signal.
+//! * `closed-sync` — closed-loop (submit_blocking to saturation) on the
+//!   blocking mock at window 1: the saturated-throughput baseline.
+//! * `async-window` — the same closed loop on an overlapping backend
+//!   (transfer ∥ compute) across window ∈ {1, 2, 4}: window 1 must match
+//!   `closed-sync` within noise, window 4 at one replica should approach
+//!   the 2× analytic overlap speedup.
+//!
+//! Flags: `--smoke` shrinks the load for CI; `--json` writes the cells to
 //! `BENCH_serving.json` (the serving perf-trajectory artifact).
 
 use std::path::Path;
 use std::time::Duration;
 
 use fcmp::coordinator::{
-    bursty, diurnal, heavy_tail, poisson, BatcherConfig, Deployment, MockBackend, Policy,
-    Server, Trace, WorkerId,
+    bursty, diurnal, heavy_tail, poisson, BatcherConfig, Deployment, Metrics, MockBackend,
+    PipelinedMockBackend, Policy, Server, Trace, WorkerId,
 };
 use fcmp::util::args::Args;
 use fcmp::util::bench::Table;
@@ -30,8 +41,15 @@ const SPEEDS: [f64; 4] = [1.0, 0.5, 1.5, 0.75];
 /// trace — the scaling signal.
 const PER_ITEM_US: f64 = 1800.0;
 
+/// Per-item service of the closed-loop arms, microseconds. The async arm
+/// splits it into equal transfer and compute legs, so the analytic overlap
+/// speedup at window 2+ is exactly 2×.
+const CLOSED_ITEM_US: f64 = 500.0;
+
 struct Cell {
+    arm: &'static str,
     replicas: usize,
+    window: usize,
     policy: &'static str,
     trace: &'static str,
     offered_rps: f64,
@@ -55,7 +73,8 @@ fn run_cell(
     let plan = Deployment::replicated(replicas)
         .with_policy(policy)
         .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) })
-        .with_queue_depth(32);
+        .with_queue_depth(32)
+        .with_window(1);
     let svc: Vec<Duration> = weights
         .iter()
         .map(|w| Duration::from_secs_f64(PER_ITEM_US * 1e-6 / w))
@@ -78,7 +97,9 @@ fn run_cell(
         None => (0, 0.0, 0.0, 0.0, 0.0),
     };
     Cell {
+        arm: "sync",
         replicas,
+        window: 1,
         policy: policy_name,
         trace: trace_name,
         offered_rps: trace.offered_rate(),
@@ -92,6 +113,68 @@ fn run_cell(
     }
 }
 
+/// Closed-loop cell: `n` requests through `submit_blocking` (backpressure
+/// paces the submitter, nothing sheds), wall-clocked end to end. `window`
+/// only matters on the overlapping backend — that contrast *is* the arm.
+fn run_closed_cell(
+    arm: &'static str,
+    replicas: usize,
+    window: usize,
+    policy_name: &'static str,
+    n: usize,
+) -> Cell {
+    let weights: Vec<f64> = (0..replicas).map(|i| SPEEDS[i % SPEEDS.len()]).collect();
+    let policy = Policy::by_name(policy_name, weights.clone()).expect("policy name");
+    let plan = Deployment::replicated(replicas)
+        .with_policy(policy)
+        .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(200) })
+        .with_queue_depth(32)
+        .with_window(window);
+    let overlapping = arm == "async-window";
+    let svc: Vec<Duration> = weights
+        .iter()
+        .map(|w| Duration::from_secs_f64(CLOSED_ITEM_US * 1e-6 / w))
+        .collect();
+    let mut srv = Server::deploy(
+        move |id: WorkerId| -> Box<dyn fcmp::coordinator::InferBackend> {
+            let s = svc[id.group];
+            if overlapping {
+                Box::new(PipelinedMockBackend::overlapped(s / 2, s / 2))
+            } else {
+                Box::new(MockBackend::with_service(Duration::ZERO, s))
+            }
+        },
+        plan,
+    );
+    let mut m = Metrics::new();
+    m.start();
+    for i in 0..n {
+        srv.submit_blocking(i as u64, vec![1.0]).expect("closed-loop submit");
+    }
+    srv.shutdown();
+    let mut completed = 0usize;
+    while let Some(c) = srv.next_completion() {
+        m.record(c.latency, c.batch_size);
+        completed += 1;
+    }
+    let s = m.try_summary().expect("closed-loop cell completed nothing");
+    Cell {
+        arm,
+        replicas,
+        window,
+        policy: policy_name,
+        trace: "closed",
+        offered_rps: 0.0,
+        submitted: n,
+        completed,
+        shed: 0,
+        throughput_fps: s.throughput_fps,
+        p50_ms: s.latency_ms.median,
+        p95_ms: s.latency_ms.p95,
+        p99_ms: s.latency_ms.p99,
+    }
+}
+
 fn cells_json(cells: &[Cell]) -> String {
     let mut out = String::from("[");
     for (k, c) in cells.iter().enumerate() {
@@ -99,10 +182,12 @@ fn cells_json(cells: &[Cell]) -> String {
             out.push(',');
         }
         out.push_str(&format!(
-            "{{\"replicas\":{},\"policy\":{:?},\"trace\":{:?},\"offered_rps\":{:.1},\
-             \"submitted\":{},\"completed\":{},\"shed\":{},\"throughput_fps\":{:.1},\
-             \"p50_ms\":{:.3},\"p95_ms\":{:.3},\"p99_ms\":{:.3}}}",
+            "{{\"arm\":{:?},\"replicas\":{},\"window\":{},\"policy\":{:?},\"trace\":{:?},\
+             \"offered_rps\":{:.1},\"submitted\":{},\"completed\":{},\"shed\":{},\
+             \"throughput_fps\":{:.1},\"p50_ms\":{:.3},\"p95_ms\":{:.3},\"p99_ms\":{:.3}}}",
+            c.arm,
             c.replicas,
+            c.window,
             c.policy,
             c.trace,
             c.offered_rps,
@@ -124,6 +209,7 @@ fn main() {
     let smoke = args.has_flag("smoke");
     let n = if smoke { 120 } else { 360 };
     let rate = 900.0;
+    let closed_n = if smoke { 240 } else { 720 };
 
     let traces: Vec<(&'static str, Trace)> = vec![
         ("poisson", poisson(n, rate, 42)),
@@ -136,26 +222,42 @@ fn main() {
 
     let mut cells: Vec<Cell> = Vec::new();
     let mut t = Table::new([
-        "replicas", "policy", "trace", "offered", "completed", "shed", "fps", "p50 ms",
-        "p95 ms", "p99 ms",
+        "arm", "replicas", "win", "policy", "trace", "offered", "completed", "shed", "fps",
+        "p50 ms", "p95 ms", "p99 ms",
     ]);
+    let push = |t: &mut Table, cells: &mut Vec<Cell>, c: Cell| {
+        t.row([
+            c.arm.to_string(),
+            format!("{}", c.replicas),
+            format!("{}", c.window),
+            c.policy.to_string(),
+            c.trace.to_string(),
+            format!("{:.0}", c.offered_rps),
+            format!("{}", c.completed),
+            format!("{}", c.shed),
+            format!("{:.0}", c.throughput_fps),
+            format!("{:.2}", c.p50_ms),
+            format!("{:.2}", c.p95_ms),
+            format!("{:.2}", c.p99_ms),
+        ]);
+        cells.push(c);
+    };
     for &replicas in &[1usize, 2, 4] {
         for policy in policies {
             for (tname, trace) in &traces {
                 let c = run_cell(replicas, policy, *tname, trace);
-                t.row([
-                    format!("{}", c.replicas),
-                    c.policy.to_string(),
-                    c.trace.to_string(),
-                    format!("{:.0}", c.offered_rps),
-                    format!("{}", c.completed),
-                    format!("{}", c.shed),
-                    format!("{:.0}", c.throughput_fps),
-                    format!("{:.2}", c.p50_ms),
-                    format!("{:.2}", c.p95_ms),
-                    format!("{:.2}", c.p99_ms),
-                ]);
-                cells.push(c);
+                push(&mut t, &mut cells, c);
+            }
+        }
+    }
+    // closed-loop arms: the in-flight-window contrast
+    for &replicas in &[1usize, 2, 4] {
+        for policy in policies {
+            let c = run_closed_cell("closed-sync", replicas, 1, policy, closed_n);
+            push(&mut t, &mut cells, c);
+            for &window in &[1usize, 2, 4] {
+                let c = run_closed_cell("async-window", replicas, window, policy, closed_n);
+                push(&mut t, &mut cells, c);
             }
         }
     }
@@ -169,7 +271,10 @@ fn main() {
             let find = |r: usize| {
                 cells
                     .iter()
-                    .find(|c| c.replicas == r && c.policy == policy && c.trace == *tname)
+                    .find(|c| {
+                        c.arm == "sync" && c.replicas == r && c.policy == policy
+                            && c.trace == *tname
+                    })
                     .expect("cell")
             };
             let (c1, c4) = (find(1), find(4));
@@ -188,6 +293,35 @@ fn main() {
                     c4.completed, c1.completed
                 );
             }
+        }
+    }
+
+    // overlap signal: at one replica, window 4 on the overlapping backend
+    // should run ≥1.5× the throughput of window 1 (analytic bound 2.0 for
+    // equal legs) — soft check, same wall-clock-noise rationale
+    for policy in policies {
+        let find = |w: usize| {
+            cells
+                .iter()
+                .find(|c| {
+                    c.arm == "async-window" && c.replicas == 1 && c.window == w
+                        && c.policy == policy
+                })
+                .expect("cell")
+        };
+        let (w1, w4) = (find(1), find(4));
+        println!(
+            "overlap {policy}: fps {:.0} (w1) -> {:.0} (w4), {:.2}x",
+            w1.throughput_fps,
+            w4.throughput_fps,
+            w4.throughput_fps / w1.throughput_fps.max(1e-9)
+        );
+        if w4.throughput_fps < 1.5 * w1.throughput_fps {
+            eprintln!(
+                "WARNING {policy}: async window 4 at {:.0} fps < 1.5x window 1's {:.0} — \
+                 the in-flight window is not overlapping transfer with compute",
+                w4.throughput_fps, w1.throughput_fps
+            );
         }
     }
 

@@ -417,6 +417,7 @@ fn fleet_plan(
         policy: Policy::Weighted(group_weights(
             &svc.iter().map(|s| chain_fps(s)).collect::<Vec<f64>>(),
         )),
+        window: 2,
     };
     (svc, plan)
 }
@@ -833,7 +834,7 @@ pub fn run_loop(fleet: &mut ControlledFleet, trace: &Trace, cfg: &LoopConfig) ->
                 fm.record_submitted();
                 tap.record_submitted();
             }
-            Err(SubmitError::QueueFull(_)) => {
+            Err(SubmitError::QueueFull(_)) | Err(SubmitError::Timeout(_)) => {
                 fm.record_shed();
                 tap.record_shed();
             }
@@ -896,6 +897,7 @@ pub fn run_loop(fleet: &mut ControlledFleet, trace: &Trace, cfg: &LoopConfig) ->
             max_groups_seen = max_groups_seen.max(to);
         }
     }
+    fm.set_hot(fleet.srv.hot_stats());
     ControlReport {
         summary: fm.summary(),
         events,

@@ -172,6 +172,7 @@ pub fn splice_mock_chain(
         batcher,
         queue_depth,
         policy: Policy::RoundRobin,
+        window: 2,
     };
     let svc_backend = svc.clone();
     srv.apply(

@@ -85,12 +85,54 @@ pub struct Batch {
     pub formed_at: Instant,
 }
 
-/// Drain the next batch from `rx`. Blocks for the first request; then
-/// gathers more until `max_batch` or `max_wait` elapses. Returns `None`
-/// when the channel is closed and empty.
+/// Drain the next batch from `rx`. **Parks** on the channel for the
+/// first request (zero CPU at an idle fleet); then gathers more until
+/// `max_batch` or `max_wait` elapses. Returns `None` when the channel is
+/// closed and empty. A worker with batches in flight must not park here
+/// — it uses [`poll_batch`] so it can reap completions promptly.
 pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Batch> {
     let first = rx.recv().ok()?;
     let deadline = Instant::now() + cfg.max_wait;
+    let requests = gather(rx, cfg, first, deadline);
+    Some(Batch { requests, formed_at: Instant::now() })
+}
+
+/// Outcome of one bounded [`poll_batch`] window.
+pub enum BatchPoll {
+    /// A batch formed within the window.
+    Batch(Batch),
+    /// The window elapsed with no request arriving.
+    Idle,
+    /// The channel is closed and empty.
+    Closed,
+}
+
+/// Like [`next_batch`] but bounded: wait at most `limit` for the first
+/// request, then gather stragglers until `max_batch`, `max_wait`, or the
+/// end of the window — whichever comes first. The submit/reap worker
+/// loop calls this while it has batches in flight, sizing `limit` to the
+/// oldest batch's expected completion so batch `N+1` forms while batch
+/// `N` executes without delaying its reap.
+pub fn poll_batch(rx: &Receiver<Request>, cfg: &BatcherConfig, limit: Duration) -> BatchPoll {
+    let window_end = Instant::now() + limit;
+    let first = match rx.recv_timeout(limit) {
+        Ok(r) => r,
+        Err(RecvTimeoutError::Timeout) => return BatchPoll::Idle,
+        Err(RecvTimeoutError::Disconnected) => return BatchPoll::Closed,
+    };
+    let deadline = (Instant::now() + cfg.max_wait).min(window_end);
+    let requests = gather(rx, cfg, first, deadline);
+    BatchPoll::Batch(Batch { requests, formed_at: Instant::now() })
+}
+
+/// Shared straggler-gathering tail: drain `rx` after `first` until
+/// `max_batch` or `deadline`.
+fn gather(
+    rx: &Receiver<Request>,
+    cfg: &BatcherConfig,
+    first: Request,
+    deadline: Instant,
+) -> Vec<Request> {
     let mut requests = vec![first];
     while requests.len() < cfg.max_batch {
         let now = Instant::now();
@@ -103,7 +145,7 @@ pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Batch> 
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    Some(Batch { requests, formed_at: Instant::now() })
+    requests
 }
 
 #[cfg(test)]
@@ -168,6 +210,57 @@ mod tests {
         let c = s.load();
         assert_eq!(c.max_batch, u16::MAX as usize);
         assert_eq!(c.max_wait, Duration::from_secs(1));
+    }
+
+    #[test]
+    fn poll_batch_reports_idle_after_the_window() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let cfg = BatcherConfig::default();
+        let t0 = Instant::now();
+        match poll_batch(&rx, &cfg, Duration::from_millis(5)) {
+            BatchPoll::Idle => {}
+            _ => panic!("empty open channel must report Idle"),
+        }
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(4), "returned early: {waited:?}");
+        assert!(waited < Duration::from_millis(200), "overstayed the window: {waited:?}");
+        drop(tx);
+    }
+
+    #[test]
+    fn poll_batch_reports_closed_and_forms_batches() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..3 {
+            tx.send(req(i)).unwrap();
+        }
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
+        match poll_batch(&rx, &cfg, Duration::from_millis(50)) {
+            BatchPoll::Batch(b) => {
+                assert_eq!(b.requests.len(), 3);
+                assert_eq!(b.requests[0].id, 0);
+            }
+            _ => panic!("queued requests must form a batch"),
+        }
+        drop(tx);
+        match poll_batch(&rx, &cfg, Duration::from_millis(50)) {
+            BatchPoll::Closed => {}
+            _ => panic!("closed empty channel must report Closed"),
+        }
+    }
+
+    #[test]
+    fn poll_batch_window_caps_the_straggler_wait() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(0)).unwrap();
+        // max_wait far beyond the polling window: the window must win
+        let cfg = BatcherConfig { max_batch: 64, max_wait: Duration::from_secs(5) };
+        let t0 = Instant::now();
+        match poll_batch(&rx, &cfg, Duration::from_millis(10)) {
+            BatchPoll::Batch(b) => assert_eq!(b.requests.len(), 1),
+            _ => panic!("queued request must form a batch"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(1), "gather ignored the window cap");
+        drop(tx);
     }
 
     #[test]

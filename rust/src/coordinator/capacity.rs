@@ -153,6 +153,27 @@ pub fn mock_chain_service_from_fps(
     stage_fps.iter().map(|&f| mock_service_from_fps(f, service_us, ref_fps) / k).collect()
 }
 
+/// Analytic speedup of the async in-flight window over the synchronous
+/// worker for a backend whose per-item service splits into a host→device
+/// transfer leg (`xfer_s`) and a compute leg (`compute_s`).
+///
+/// With `window <= 1` the worker reaps each batch before submitting the
+/// next, so every item pays `xfer + compute` — speedup 1.0. With a window
+/// of 2+ the next batch's transfer overlaps the current batch's compute
+/// (double buffering), so the steady-state interval collapses to the
+/// longer leg and the speedup is `(xfer + compute) / max(xfer, compute)`
+/// — up to 2.0 when the legs are balanced. Windows beyond 2 add no
+/// further analytic speedup (one transfer can hide behind one compute);
+/// they only absorb jitter.
+pub fn overlap_speedup(xfer_s: f64, compute_s: f64, window: usize) -> f64 {
+    let seq = xfer_s + compute_s;
+    if window <= 1 || seq <= 0.0 {
+        1.0
+    } else {
+        seq / xfer_s.max(compute_s)
+    }
+}
+
 /// Per-stage service times of a sharded pipeline plan — shard `j` serves
 /// one frame every `seconds_per_frame(j)`. Calibrates the mock backends
 /// of chain-group deployments ([`crate::coordinator::Server::deploy`]
@@ -279,6 +300,20 @@ mod tests {
         let spec = ReplicaSpec::packed_point(&net, zynq_7020(), 4, 0, 987_654);
         assert_eq!(spec.rf, 2.0);
         assert!(spec.lut_util > 0.0 && spec.lut_util <= 1.0);
+    }
+
+    #[test]
+    fn overlap_speedup_peaks_at_balanced_legs() {
+        // balanced legs: double buffering hides half the work
+        assert!((overlap_speedup(1.0, 1.0, 2) - 2.0).abs() < 1e-12);
+        // lopsided legs: bounded by the dominant leg
+        assert!((overlap_speedup(1.0, 3.0, 2) - 4.0 / 3.0).abs() < 1e-12);
+        assert!((overlap_speedup(3.0, 1.0, 4) - 4.0 / 3.0).abs() < 1e-12);
+        // window 1 is the synchronous worker, and degenerate inputs are 1.0
+        assert_eq!(overlap_speedup(1.0, 1.0, 1), 1.0);
+        assert_eq!(overlap_speedup(0.0, 0.0, 4), 1.0);
+        // deeper windows add nothing beyond double buffering
+        assert_eq!(overlap_speedup(1.0, 2.0, 2), overlap_speedup(1.0, 2.0, 8));
     }
 
     #[test]

@@ -83,6 +83,12 @@ pub struct Deployment {
     pub queue_depth: usize,
     /// Scheduling policy picking the *chain group* each request enters.
     pub policy: Policy,
+    /// Per-worker in-flight window: how many batches a stage may have
+    /// submitted to its backend before it must reap one. `1` reproduces
+    /// the old fully synchronous worker; `2`+ lets batch `N+1` form (and
+    /// transfer, for backends that overlap) while batch `N` executes —
+    /// the zero-stall pipeline. Clamped to at least 1 at deploy.
+    pub window: usize,
 }
 
 impl Default for Deployment {
@@ -92,6 +98,7 @@ impl Default for Deployment {
             batcher: BatcherConfig::default(),
             queue_depth: 256,
             policy: Policy::RoundRobin,
+            window: 2,
         }
     }
 }
@@ -136,6 +143,13 @@ impl Deployment {
         self
     }
 
+    /// Same plan with per-worker in-flight window `window` (see
+    /// [`Deployment::window`]).
+    pub fn with_window(mut self, window: usize) -> Deployment {
+        self.window = window;
+        self
+    }
+
     /// Number of chain groups (after normalization: at least 1).
     pub fn group_count(&self) -> usize {
         self.groups.len().max(1)
@@ -169,6 +183,7 @@ impl Deployment {
             g.stages = g.stages.max(1);
         }
         self.queue_depth = self.queue_depth.max(1);
+        self.window = self.window.max(1);
         self
     }
 
@@ -180,6 +195,7 @@ impl Deployment {
             stages: self.groups.get(g).map(|grp| grp.stages.max(1)).unwrap_or(1),
             batcher: self.group_batcher(g),
             queue_depth: self.queue_depth.max(1),
+            window: self.window.max(1),
         }
     }
 }
@@ -192,6 +208,7 @@ pub(crate) struct GroupKey {
     pub(crate) stages: usize,
     pub(crate) batcher: BatcherConfig,
     pub(crate) queue_depth: usize,
+    pub(crate) window: usize,
 }
 
 #[cfg(test)]
@@ -245,6 +262,16 @@ mod tests {
         // a queue-depth change invalidates every key (full swap on apply)
         let deeper = base.clone().with_queue_depth(base.queue_depth + 1);
         assert_ne!(base.group_key(0), deeper.group_key(0));
+        // so does an in-flight-window change (workers must respawn)
+        let wider = base.clone().with_window(base.window + 2);
+        assert_ne!(base.group_key(0), wider.group_key(0));
+    }
+
+    #[test]
+    fn window_defaults_and_clamps() {
+        assert_eq!(Deployment::default().window, 2);
+        assert_eq!(Deployment::replicated(2).with_window(0).normalized().window, 1);
+        assert_eq!(Deployment::chain(2).with_window(4).window, 4);
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Hot-path instrumentation and the recycling request-buffer pool — the
+//! allocation-free steady state of the zero-stall execution path.
+//!
+//! Two pieces:
+//!
+//! * [`BufferPool`] recycles the per-request `Vec<f32>` payload buffers.
+//!   A replay loop `get`s a buffer, fills it, and submits; the worker
+//!   returns the buffer to the pool after the batch completes (and
+//!   completion outputs can flow back too). Once the pool is warm the
+//!   submit path performs **zero heap allocations per request** — the
+//!   miss counter is the proof, and a test asserts it stays flat.
+//! * [`HotCounters`] / [`HotPathStats`]: relaxed atomic counters on the
+//!   router and backoff paths (submits, first-try accepts, fallback
+//!   scans, backoff sleeps) merged with the pool's counters into one
+//!   profile snapshot surfaced in
+//!   [`crate::coordinator::FleetSummary::hot`].
+//!
+//! The counters are `Relaxed`: they are a profile, not a synchronization
+//! edge, and the hot path must not pay for ordering it does not need.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, TryLockError};
+
+/// Cumulative hot-path profile: router dispatch counters plus buffer-pool
+/// traffic. Snapshot of monotone counters — diff two snapshots to profile
+/// an interval.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HotPathStats {
+    /// Dispatch attempts through the router core.
+    pub submits: u64,
+    /// Dispatches accepted by the policy's preferred group on the first
+    /// `try_send` — the no-bookkeeping fast path.
+    pub accepted_first_try: u64,
+    /// Dispatches that fell through to the sorted sibling scan (preferred
+    /// entry full or closed).
+    pub fallback_scans: u64,
+    /// Backoff sleeps taken by blocking/deadline submits while every
+    /// entry queue stayed full.
+    pub backoff_sleeps: u64,
+    /// Pool `get`s served from a recycled buffer.
+    pub pool_hits: u64,
+    /// Pool `get`s that had to allocate fresh (cold pool, or more buffers
+    /// in flight than the pool has seen back).
+    pub pool_misses: u64,
+    /// Buffers returned to the pool.
+    pub pool_returns: u64,
+    /// Returned buffers dropped because their capacity was below the
+    /// pool's request high-water mark (e.g. small completion outputs) or
+    /// the pool was full.
+    pub pool_rejected: u64,
+    /// Lock contention events on the pool (a `get`/`put` that had to wait
+    /// behind another thread).
+    pub lock_waits: u64,
+}
+
+/// Router-side half of [`HotPathStats`] (the pool keeps its own).
+#[derive(Debug, Default)]
+pub(crate) struct HotCounters {
+    pub(crate) submits: AtomicU64,
+    pub(crate) accepted_first_try: AtomicU64,
+    pub(crate) fallback_scans: AtomicU64,
+    pub(crate) backoff_sleeps: AtomicU64,
+}
+
+impl HotCounters {
+    /// Snapshot the router counters into a [`HotPathStats`] with zeroed
+    /// pool fields (the pool merges its own via [`BufferPool::merge_into`]).
+    pub(crate) fn snapshot(&self) -> HotPathStats {
+        HotPathStats {
+            submits: self.submits.load(Ordering::Relaxed),
+            accepted_first_try: self.accepted_first_try.load(Ordering::Relaxed),
+            fallback_scans: self.fallback_scans.load(Ordering::Relaxed),
+            backoff_sleeps: self.backoff_sleeps.load(Ordering::Relaxed),
+            ..HotPathStats::default()
+        }
+    }
+}
+
+/// Recycling pool of request payload buffers (`Vec<f32>`).
+///
+/// `get(len)` pops a recycled buffer (cleared, with its capacity intact)
+/// or allocates fresh on a miss; `put` returns a buffer for reuse. The
+/// pool tracks the largest length ever requested and rejects returned
+/// buffers with less capacity, so a recycled buffer never triggers a
+/// regrow on the submit path — after one warm cycle, steady state is
+/// allocation-free and the miss counter stays flat.
+///
+/// A plain mutex guards the free list: a push/pop critical section is a
+/// few nanoseconds, contention merely shows up in
+/// [`HotPathStats::lock_waits`] (never a dropped buffer), and the router
+/// dispatch path itself never touches the pool.
+#[derive(Debug)]
+pub struct BufferPool {
+    free: Mutex<Vec<Vec<f32>>>,
+    /// Max buffers kept; returns beyond it are dropped (counted).
+    capacity: usize,
+    /// High-water mark of requested lengths; smaller returned buffers are
+    /// rejected so `get` never hands out a buffer that must regrow.
+    target_len: AtomicUsize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    returns: AtomicU64,
+    rejected: AtomicU64,
+    lock_waits: AtomicU64,
+}
+
+impl BufferPool {
+    /// Empty pool keeping at most `capacity` free buffers.
+    pub fn new(capacity: usize) -> BufferPool {
+        BufferPool {
+            free: Mutex::new(Vec::with_capacity(capacity.min(4096))),
+            capacity: capacity.max(1),
+            target_len: AtomicUsize::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            returns: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            lock_waits: AtomicU64::new(0),
+        }
+    }
+
+    /// Pre-fill with `count` buffers of capacity `len` (counted as
+    /// neither hits nor misses) — lets a test or a latency-critical
+    /// caller start in the warm, allocation-free regime.
+    pub fn prime(&self, count: usize, len: usize) {
+        self.target_len.fetch_max(len, Ordering::Relaxed);
+        let mut free = self.lock();
+        for _ in 0..count.min(self.capacity.saturating_sub(free.len())) {
+            free.push(Vec::with_capacity(len));
+        }
+    }
+
+    /// A cleared buffer with capacity at least `len` in steady state
+    /// (recycled when possible, freshly allocated on a miss).
+    pub fn get(&self, len: usize) -> Vec<f32> {
+        self.target_len.fetch_max(len, Ordering::Relaxed);
+        let popped = self.lock().pop();
+        match popped {
+            Some(mut buf) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                buf.clear();
+                if buf.capacity() < len {
+                    // only possible for buffers primed/returned before the
+                    // high-water mark rose to `len`; counted as a miss
+                    // because it reallocates
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    buf.reserve(len - buf.capacity());
+                }
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(len)
+            }
+        }
+    }
+
+    /// Return a buffer for reuse. Undersized buffers (capacity below the
+    /// request high-water mark) and returns beyond the pool capacity are
+    /// dropped and counted — recycling them would just reintroduce a
+    /// regrow allocation on the next `get`.
+    pub fn put(&self, buf: Vec<f32>) {
+        if buf.capacity() < self.target_len.load(Ordering::Relaxed) {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let mut free = self.lock();
+        if free.len() >= self.capacity {
+            drop(free);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        free.push(buf);
+        drop(free);
+        self.returns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Free buffers currently pooled.
+    pub fn free_count(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Merge the pool counters into `stats` (see [`HotPathStats`]).
+    pub fn merge_into(&self, stats: &mut HotPathStats) {
+        stats.pool_hits += self.hits.load(Ordering::Relaxed);
+        stats.pool_misses += self.misses.load(Ordering::Relaxed);
+        stats.pool_returns += self.returns.load(Ordering::Relaxed);
+        stats.pool_rejected += self.rejected.load(Ordering::Relaxed);
+        stats.lock_waits += self.lock_waits.load(Ordering::Relaxed);
+    }
+
+    /// Lock the free list, counting contention; a poisoned lock (worker
+    /// panicked elsewhere) still yields the list — a pool of plain
+    /// buffers has no invariant a panic can break.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Vec<f32>>> {
+        match self.free.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                self.lock_waits.fetch_add(1, Ordering::Relaxed);
+                match self.free.lock() {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                }
+            }
+            Err(TryLockError::Poisoned(poisoned)) => poisoned.into_inner(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_get_misses_then_recycles() {
+        let pool = BufferPool::new(8);
+        let buf = pool.get(16);
+        assert_eq!(buf.capacity(), 16);
+        let mut s = HotPathStats::default();
+        pool.merge_into(&mut s);
+        assert_eq!((s.pool_hits, s.pool_misses), (0, 1));
+        pool.put(buf);
+        let buf2 = pool.get(16);
+        assert!(buf2.capacity() >= 16);
+        assert!(buf2.is_empty(), "recycled buffers come back cleared");
+        let mut s = HotPathStats::default();
+        pool.merge_into(&mut s);
+        assert_eq!((s.pool_hits, s.pool_misses, s.pool_returns), (1, 1, 1));
+    }
+
+    #[test]
+    fn primed_pool_never_misses_within_capacity() {
+        let pool = BufferPool::new(32);
+        pool.prime(8, 8);
+        assert_eq!(pool.free_count(), 8);
+        for _ in 0..50 {
+            let mut b = pool.get(8);
+            b.extend([1.0; 8]);
+            pool.put(b);
+        }
+        let mut s = HotPathStats::default();
+        pool.merge_into(&mut s);
+        assert_eq!(s.pool_misses, 0, "warm pool must stay allocation-free");
+        assert_eq!(s.pool_hits, 50);
+    }
+
+    #[test]
+    fn undersized_returns_are_rejected() {
+        let pool = BufferPool::new(8);
+        let b = pool.get(32); // raises the high-water mark
+        pool.put(b);
+        pool.put(Vec::with_capacity(2)); // e.g. a tiny completion output
+        assert_eq!(pool.free_count(), 1);
+        let mut s = HotPathStats::default();
+        pool.merge_into(&mut s);
+        assert_eq!(s.pool_rejected, 1);
+        // the next get therefore never hands out an undersized buffer
+        assert!(pool.get(32).capacity() >= 32);
+    }
+
+    #[test]
+    fn pool_capacity_bounds_retained_buffers() {
+        let pool = BufferPool::new(2);
+        for _ in 0..5 {
+            pool.put(Vec::with_capacity(4));
+        }
+        assert_eq!(pool.free_count(), 2);
+        let mut s = HotPathStats::default();
+        pool.merge_into(&mut s);
+        assert_eq!(s.pool_returns, 2);
+        assert_eq!(s.pool_rejected, 3);
+    }
+
+    #[test]
+    fn grown_request_on_a_small_recycled_buffer_counts_as_miss() {
+        let pool = BufferPool::new(8);
+        pool.prime(1, 4);
+        let b = pool.get(16); // primed-at-4 buffer must regrow
+        assert!(b.capacity() >= 16);
+        let mut s = HotPathStats::default();
+        pool.merge_into(&mut s);
+        assert_eq!((s.pool_hits, s.pool_misses), (1, 1));
+    }
+}

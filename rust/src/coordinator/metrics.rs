@@ -1,19 +1,30 @@
 //! Serving metrics: latency percentiles, throughput and batch-size
 //! statistics — fleet-wide, per chain group (end-to-end) and per worker
 //! (per-stage transit for chains) — plus the admission-control counters
-//! (submitted / shed) the overload experiments report.
+//! (submitted / shed) the overload experiments report and the hot-path
+//! profile ([`crate::coordinator::HotPathStats`]).
+//!
+//! Latencies stream into fixed-bucket log-scale histograms
+//! ([`crate::util::hist::LogHistogram`]) rather than a growing `Vec`:
+//! recording a completion is allocation-free and summarizing never
+//! sorts. Percentiles are exact to within one bucket width (±2.2 %
+//! relative); count, mean, stddev, min and max stay exact.
 
 use std::time::Duration;
 
+use super::hotpath::HotPathStats;
 use super::Completion;
-use crate::util::stats::{summarize, Summary};
+use crate::util::hist::LogHistogram;
+use crate::util::stats::Summary;
 
 /// Collects per-request completions for one stream (one worker, one chain
 /// group, or the whole fleet when driven through [`FleetMetrics`]).
+/// Fixed-size: a `LogHistogram` plus a few counters, no per-completion
+/// growth.
 #[derive(Default)]
 pub struct Metrics {
-    latencies_ms: Vec<f64>,
-    batch_sizes: Vec<usize>,
+    hist: LogHistogram,
+    batch_sum: u64,
     started: Option<std::time::Instant>,
     finished: Option<std::time::Instant>,
 }
@@ -46,39 +57,42 @@ impl Metrics {
         self.started = Some(std::time::Instant::now());
     }
 
-    /// Record one completion.
+    /// Record one completion: two array writes into the histogram plus
+    /// counter bumps — no allocation, no growth.
     pub fn record(&mut self, latency: Duration, batch_size: usize) {
-        self.latencies_ms.push(latency.as_secs_f64() * 1e3);
-        self.batch_sizes.push(batch_size);
+        self.hist.record(latency.as_secs_f64() * 1e3);
+        self.batch_sum += batch_size as u64;
         self.finished = Some(std::time::Instant::now());
     }
 
     /// Completions recorded so far.
     pub fn count(&self) -> usize {
-        self.latencies_ms.len()
+        self.hist.count() as usize
     }
 
     /// Summarize; panics when nothing was recorded (see
-    /// [`Metrics::try_summary`] for the non-panicking form).
+    /// [`Metrics::try_summary`] for the non-panicking form). Percentiles
+    /// come from the histogram (within one bucket width of exact);
+    /// mean/min/max/stddev are exact.
     pub fn summary(&self) -> ServeSummary {
-        assert!(!self.latencies_ms.is_empty(), "no completions recorded");
+        let n = self.count();
+        assert!(n > 0, "no completions recorded");
         let wall = match (self.started, self.finished) {
             (Some(a), Some(b)) => (b - a).as_secs_f64(),
             _ => 0.0,
         };
         ServeSummary {
-            requests: self.latencies_ms.len(),
+            requests: n,
             wall_s: wall,
-            throughput_fps: self.latencies_ms.len() as f64 / wall.max(1e-9),
-            latency_ms: summarize(&self.latencies_ms),
-            mean_batch: self.batch_sizes.iter().sum::<usize>() as f64
-                / self.batch_sizes.len() as f64,
+            throughput_fps: n as f64 / wall.max(1e-9),
+            latency_ms: self.hist.summary(),
+            mean_batch: self.batch_sum as f64 / n as f64,
         }
     }
 
     /// Summarize, or `None` when nothing was recorded (idle workers).
     pub fn try_summary(&self) -> Option<ServeSummary> {
-        if self.latencies_ms.is_empty() {
+        if self.count() == 0 {
             None
         } else {
             Some(self.summary())
@@ -119,6 +133,7 @@ pub struct FleetMetrics {
     sizes: Vec<usize>,
     submitted: usize,
     shed: usize,
+    hot: HotPathStats,
 }
 
 /// Fleet summary: the fleet-wide view, the per-chain-group end-to-end
@@ -141,6 +156,11 @@ pub struct FleetSummary {
     pub submitted: usize,
     /// Requests shed because every group entry queue was full.
     pub shed: usize,
+    /// Hot-path profile: submit fast-path hit rate, fallback scans,
+    /// backoff sleeps and buffer-pool recycling counters (see
+    /// [`crate::coordinator::HotPathStats`]). All zero unless the driver
+    /// installed a snapshot via [`FleetMetrics::set_hot`].
+    pub hot: HotPathStats,
 }
 
 impl FleetMetrics {
@@ -162,6 +182,7 @@ impl FleetMetrics {
             sizes: group_sizes.iter().map(|&k| k.max(1)).collect(),
             submitted: 0,
             shed: 0,
+            hot: HotPathStats::default(),
         }
     }
 
@@ -240,6 +261,13 @@ impl FleetMetrics {
         self.shed
     }
 
+    /// Install a hot-path profile snapshot (typically
+    /// [`crate::coordinator::Server::hot_stats`] taken at the end of the
+    /// run) so it rides along in the [`FleetSummary`].
+    pub fn set_hot(&mut self, hot: HotPathStats) {
+        self.hot = hot;
+    }
+
     /// Summarize fleet, groups and workers.
     pub fn summary(&self) -> FleetSummary {
         FleetSummary {
@@ -248,6 +276,7 @@ impl FleetMetrics {
             per_replica: self.per_replica.iter().map(Metrics::try_summary).collect(),
             submitted: self.submitted,
             shed: self.shed,
+            hot: self.hot,
         }
     }
 }
@@ -278,6 +307,21 @@ impl std::fmt::Display for FleetSummary {
                 None => write!(f, "\n  replica {i}: idle")?,
             }
         }
+        if self.hot.submits > 0 {
+            write!(
+                f,
+                "\n  hot path: {} submits ({} first-try, {} fallback scans, {} backoff sleeps) | pool: {} hits {} misses {} returns ({} rejected, {} lock waits)",
+                self.hot.submits,
+                self.hot.accepted_first_try,
+                self.hot.fallback_scans,
+                self.hot.backoff_sleeps,
+                self.hot.pool_hits,
+                self.hot.pool_misses,
+                self.hot.pool_returns,
+                self.hot.pool_rejected,
+                self.hot.lock_waits,
+            )?;
+        }
         Ok(())
     }
 }
@@ -285,6 +329,12 @@ impl std::fmt::Display for FleetSummary {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Percentiles now come off the log histogram, whose bucket width is
+    /// ±2.2 % relative — assert within 3 % instead of exactly.
+    fn close(got: f64, want: f64) -> bool {
+        (got - want).abs() <= want * 0.03
+    }
 
     #[test]
     fn summary_math() {
@@ -406,8 +456,8 @@ mod tests {
         }
         let s = fm.summary();
         // the fleet and the group see the end-to-end latency...
-        assert!((s.fleet.as_ref().unwrap().latency_ms.median - 60.0).abs() < 1e-9);
-        assert!((s.per_group[0].as_ref().unwrap().latency_ms.median - 60.0).abs() < 1e-9);
+        assert!(close(s.fleet.as_ref().unwrap().latency_ms.median, 60.0));
+        assert!(close(s.per_group[0].as_ref().unwrap().latency_ms.median, 60.0));
         // ...while each stage collector sees its own transit latency, so
         // the bottleneck stage is visible in the per-worker percentiles
         let stage_medians: Vec<f64> = s
@@ -415,9 +465,9 @@ mod tests {
             .iter()
             .map(|r| r.as_ref().unwrap().latency_ms.median)
             .collect();
-        assert!((stage_medians[0] - 10.0).abs() < 1e-9);
-        assert!((stage_medians[1] - 40.0).abs() < 1e-9);
-        assert!((stage_medians[2] - 10.0).abs() < 1e-9);
+        assert!(close(stage_medians[0], 10.0), "{stage_medians:?}");
+        assert!(close(stage_medians[1], 40.0), "{stage_medians:?}");
+        assert!(close(stage_medians[2], 10.0), "{stage_medians:?}");
         // each stage reports its own batch size, not the final stage's
         let stage_batches: Vec<f64> = s
             .per_replica
@@ -450,9 +500,52 @@ mod tests {
         assert_eq!(s.per_replica.len(), 4);
         let g0 = s.per_group[0].as_ref().unwrap();
         let g1 = s.per_group[1].as_ref().unwrap();
-        assert!((g0.latency_ms.p99 - 20.0).abs() < 1e-9, "{}", g0.latency_ms.p99);
-        assert!((g1.latency_ms.p99 - 40.0).abs() < 1e-9, "{}", g1.latency_ms.p99);
+        assert!(close(g0.latency_ms.p99, 20.0), "{}", g0.latency_ms.p99);
+        assert!(close(g1.latency_ms.p99, 40.0), "{}", g1.latency_ms.p99);
         // group 1's stages land in flat worker slots 2 and 3
-        assert!((s.per_replica[2].as_ref().unwrap().latency_ms.median - 20.0).abs() < 1e-9);
+        assert!(close(s.per_replica[2].as_ref().unwrap().latency_ms.median, 20.0));
+    }
+
+    #[test]
+    fn histogram_summary_tracks_exact_percentiles() {
+        // cross-check the Metrics-level view against the exact sorted
+        // computation (the histogram itself is cross-checked at scale in
+        // util::hist); min/max/mean are exact, percentiles within bucket
+        // tolerance
+        let mut m = Metrics::new();
+        m.start();
+        let samples: Vec<f64> = (1..=200).map(|i| i as f64 * 0.37).collect();
+        for &ms in &samples {
+            m.record(Duration::from_secs_f64(ms * 1e-3), 1);
+        }
+        let got = m.summary().latency_ms;
+        let exact = crate::util::stats::summarize(&samples);
+        assert_eq!(got.min, exact.min);
+        assert_eq!(got.max, exact.max);
+        assert!((got.mean - exact.mean).abs() < 1e-6);
+        assert!(close(got.median, exact.median), "{} vs {}", got.median, exact.median);
+        assert!(close(got.p95, exact.p95), "{} vs {}", got.p95, exact.p95);
+        assert!(close(got.p99, exact.p99), "{} vs {}", got.p99, exact.p99);
+    }
+
+    #[test]
+    fn hot_path_profile_rides_the_fleet_summary() {
+        let mut fm = FleetMetrics::flat(1);
+        fm.start();
+        fm.record(&completion(0, 0, 5, 1));
+        // before a snapshot is installed the line is suppressed
+        assert!(!format!("{}", fm.summary()).contains("hot path"));
+        let hot = HotPathStats {
+            submits: 10,
+            accepted_first_try: 9,
+            pool_hits: 7,
+            pool_misses: 3,
+            ..HotPathStats::default()
+        };
+        fm.set_hot(hot);
+        let s = fm.summary();
+        assert_eq!(s.hot, hot);
+        let text = format!("{s}");
+        assert!(text.contains("hot path: 10 submits (9 first-try"), "{text}");
     }
 }

@@ -39,7 +39,16 @@
 //! scheduling), `replica` (stage worker, private), [`capacity`] (analytic
 //! capacity weights), [`server`] (router, admission control, group
 //! diffing, shutdown-drain), [`batcher`] (size-or-deadline batching),
-//! [`metrics`] (latency percentiles), [`workload`] (arrival traces).
+//! [`metrics`] (latency histograms), [`hotpath`] (request buffer
+//! recycling + hot-path profile counters), [`workload`] (arrival traces).
+//!
+//! The request path is a **zero-stall execution path**: submits go
+//! through a cheaply-cloneable [`SubmitHandle`] whose hot path is an
+//! atomic load plus a bounded-channel `try_send` (no router lock), each
+//! worker keeps up to [`Deployment::window`] batches in flight so the
+//! next batch forms and transfers while the current one computes, and
+//! request payload buffers recycle through a [`BufferPool`] so the
+//! steady state allocates nothing per request.
 //!
 //! The fleet shape is **not** static: [`Server::apply`] diffs a new plan
 //! against the running one at chain-group granularity — unchanged groups
@@ -51,6 +60,7 @@
 pub mod batcher;
 pub mod capacity;
 pub mod deployment;
+pub mod hotpath;
 pub mod metrics;
 pub mod policy;
 mod replica;
@@ -60,12 +70,17 @@ pub mod workload;
 pub use batcher::{Batch, BatcherConfig, SharedBatcher};
 pub use capacity::{
     chain_fps, fleet_weights, group_weights, mock_chain_service, mock_chain_service_from_fps,
-    mock_service_from_fps, mock_service_time, replica_fps, shard_service_times, ReplicaSpec,
+    mock_service_from_fps, mock_service_time, overlap_speedup, replica_fps, shard_service_times,
+    ReplicaSpec,
 };
 pub use deployment::{ChainGroup, Deployment, WorkerId};
+pub use hotpath::{BufferPool, HotPathStats};
 pub use metrics::{FleetMetrics, FleetSummary, Metrics, ServeSummary};
 pub use policy::{Policy, Scheduler};
-pub use server::{InferBackend, MockBackend, Server, SubmitError};
+pub use server::{
+    BatchHandle, InferBackend, MockBackend, PipelinedMockBackend, Server, SubmitError,
+    SubmitHandle,
+};
 pub use workload::{bursty, diurnal, flash_crowd, heavy_tail, poisson, uniform, Trace};
 
 use std::time::{Duration, Instant};

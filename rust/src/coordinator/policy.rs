@@ -24,6 +24,8 @@
 //!   [`crate::coordinator::capacity::chain_fps`] over
 //!   [`crate::coordinator::capacity::shard_service_times`].
 
+use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
+
 /// Which chain group the router hands the next request to.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Policy {
@@ -59,16 +61,49 @@ impl Policy {
     }
 }
 
-/// Mutable picker state for one deployment: owns the round-robin cursor
-/// and the SWRR credit vector so [`Policy`] itself stays an immutable
-/// description.
-#[derive(Clone, Debug)]
+/// Picker state for one deployment: owns the round-robin cursor and the
+/// SWRR credit vector so [`Policy`] itself stays an immutable
+/// description. All state is atomic, so [`Scheduler::pick`] takes
+/// `&self` and concurrent submitters (cloned
+/// [`crate::coordinator::SubmitHandle`]s) never serialize on a lock.
+/// Single-threaded call sequences are **bit-identical** to the old
+/// mutable scheduler: the RR cursor is one `fetch_add`, and SWRR credits
+/// are fixed-point integers (`weight × 2^20`, exact for the rational
+/// weights the capacity model emits at test precision), updated
+/// add-then-scan exactly as before with ties to the lowest index. Under
+/// concurrency interleaved SWRR picks may reorder, but credits are
+/// conserved, so long-run dispatch shares still match the weights.
+#[derive(Debug)]
 pub struct Scheduler {
     policy: Policy,
     groups: usize,
-    rr_next: usize,
-    weights: Vec<f64>,
-    swrr_credit: Vec<f64>,
+    rr_next: AtomicUsize,
+    /// Fixed-point weights (`round(w × FP_SCALE)`, clamped ≥ 1).
+    w_fp: Vec<i64>,
+    /// `Σ w_fp` — subtracted from the winner's credit each pick.
+    total_fp: i64,
+    swrr_credit: Vec<AtomicI64>,
+}
+
+/// Fixed-point scale for SWRR credits: 2^20 keeps three decimal digits
+/// of weight resolution exact while leaving 43 bits of credit headroom.
+const FP_SCALE: f64 = (1u64 << 20) as f64;
+
+impl Clone for Scheduler {
+    fn clone(&self) -> Scheduler {
+        Scheduler {
+            policy: self.policy.clone(),
+            groups: self.groups,
+            rr_next: AtomicUsize::new(self.rr_next.load(Ordering::Relaxed)),
+            w_fp: self.w_fp.clone(),
+            total_fp: self.total_fp,
+            swrr_credit: self
+                .swrr_credit
+                .iter()
+                .map(|c| AtomicI64::new(c.load(Ordering::Relaxed)))
+                .collect(),
+        }
+    }
 }
 
 impl Scheduler {
@@ -88,12 +123,16 @@ impl Scheduler {
                 *w = 1e-3;
             }
         }
+        let w_fp: Vec<i64> =
+            weights.iter().map(|w| ((w * FP_SCALE).round() as i64).max(1)).collect();
+        let total_fp = w_fp.iter().sum();
         Scheduler {
             policy,
             groups,
-            rr_next: 0,
-            swrr_credit: vec![0.0; groups],
-            weights,
+            rr_next: AtomicUsize::new(0),
+            w_fp,
+            total_fp,
+            swrr_credit: (0..groups).map(|_| AtomicI64::new(0)).collect(),
         }
     }
 
@@ -108,17 +147,13 @@ impl Scheduler {
     /// [`Policy::JoinShortestQueue`] reads it, so callers running a
     /// load-blind policy may pass an empty slice to skip the snapshot
     /// (JSQ treats an empty slice as all-idle and picks 0).
-    pub fn pick(&mut self, outstanding: &[usize]) -> usize {
+    pub fn pick(&self, outstanding: &[usize]) -> usize {
         debug_assert!(
             outstanding.is_empty() || outstanding.len() == self.groups,
             "load snapshot arity mismatch"
         );
         match self.policy {
-            Policy::RoundRobin => {
-                let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.groups;
-                i
-            }
+            Policy::RoundRobin => self.rr_next.fetch_add(1, Ordering::Relaxed) % self.groups,
             Policy::JoinShortestQueue => {
                 let mut best = 0;
                 for i in 1..outstanding.len().min(self.groups) {
@@ -129,15 +164,18 @@ impl Scheduler {
                 best
             }
             Policy::Weighted(_) => {
-                let total: f64 = self.weights.iter().sum();
                 let mut best = 0;
+                let mut best_credit = i64::MIN;
                 for i in 0..self.groups {
-                    self.swrr_credit[i] += self.weights[i];
-                    if self.swrr_credit[i] > self.swrr_credit[best] {
+                    let credit =
+                        self.swrr_credit[i].fetch_add(self.w_fp[i], Ordering::Relaxed)
+                            + self.w_fp[i];
+                    if credit > best_credit {
+                        best_credit = credit;
                         best = i;
                     }
                 }
-                self.swrr_credit[best] -= total;
+                self.swrr_credit[best].fetch_sub(self.total_fp, Ordering::Relaxed);
                 best
             }
         }
@@ -150,14 +188,14 @@ mod tests {
 
     #[test]
     fn round_robin_cycles() {
-        let mut s = Scheduler::new(Policy::RoundRobin, 3);
+        let s = Scheduler::new(Policy::RoundRobin, 3);
         let picks: Vec<usize> = (0..7).map(|_| s.pick(&[0, 0, 0])).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
     }
 
     #[test]
     fn jsq_picks_least_outstanding_with_low_index_ties() {
-        let mut s = Scheduler::new(Policy::JoinShortestQueue, 3);
+        let s = Scheduler::new(Policy::JoinShortestQueue, 3);
         assert_eq!(s.pick(&[4, 1, 2]), 1);
         assert_eq!(s.pick(&[0, 0, 0]), 0);
         assert_eq!(s.pick(&[2, 1, 1]), 1);
@@ -167,7 +205,7 @@ mod tests {
     #[test]
     fn swrr_matches_weight_ratio_exactly() {
         // weights 3:1 => pattern of period 4 with 3 picks of group 0
-        let mut s = Scheduler::new(Policy::Weighted(vec![3.0, 1.0]), 2);
+        let s = Scheduler::new(Policy::Weighted(vec![3.0, 1.0]), 2);
         let picks: Vec<usize> = (0..40).map(|_| s.pick(&[0, 0])).collect();
         let c0 = picks.iter().filter(|&&p| p == 0).count();
         assert_eq!(c0, 30, "picks {picks:?}");
@@ -181,7 +219,7 @@ mod tests {
 
     #[test]
     fn swrr_equal_weights_degenerates_to_round_robin() {
-        let mut s = Scheduler::new(Policy::Weighted(vec![1.0, 1.0, 1.0]), 3);
+        let s = Scheduler::new(Policy::Weighted(vec![1.0, 1.0, 1.0]), 3);
         let picks: Vec<usize> = (0..6).map(|_| s.pick(&[0, 0, 0])).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
@@ -189,12 +227,12 @@ mod tests {
     #[test]
     fn weight_vector_is_normalized_to_group_count() {
         // short vector pads with 1.0; bad weights are clamped positive
-        let mut s = Scheduler::new(Policy::Weighted(vec![2.0]), 3);
+        let s = Scheduler::new(Policy::Weighted(vec![2.0]), 3);
         let picks: Vec<usize> = (0..8).map(|_| s.pick(&[0, 0, 0])).collect();
         for g in 0..3 {
             assert!(picks.contains(&g), "group {g} starved: {picks:?}");
         }
-        let mut s = Scheduler::new(Policy::Weighted(vec![-1.0, f64::NAN, 1.0]), 3);
+        let s = Scheduler::new(Policy::Weighted(vec![-1.0, f64::NAN, 1.0]), 3);
         let picks: Vec<usize> = (0..2000).map(|_| s.pick(&[0, 0, 0])).collect();
         assert!(picks.contains(&0) && picks.contains(&1));
     }
@@ -218,7 +256,7 @@ mod tests {
             Policy::JoinShortestQueue,
             Policy::Weighted(vec![2.5]),
         ] {
-            let mut s = Scheduler::new(policy, 1);
+            let s = Scheduler::new(policy, 1);
             for _ in 0..10 {
                 assert_eq!(s.pick(&[5]), 0);
             }
@@ -227,10 +265,38 @@ mod tests {
 
     #[test]
     fn deterministic_for_identical_call_sequences() {
-        let mut a = Scheduler::new(Policy::Weighted(vec![1.5, 0.5, 1.0]), 3);
-        let mut b = Scheduler::new(Policy::Weighted(vec![1.5, 0.5, 1.0]), 3);
+        let a = Scheduler::new(Policy::Weighted(vec![1.5, 0.5, 1.0]), 3);
+        let b = Scheduler::new(Policy::Weighted(vec![1.5, 0.5, 1.0]), 3);
         for _ in 0..100 {
             assert_eq!(a.pick(&[1, 2, 3]), b.pick(&[1, 2, 3]));
         }
+    }
+
+    #[test]
+    fn concurrent_weighted_picks_conserve_the_ratio() {
+        use std::sync::Arc;
+        // 4 submitters hammer one shared scheduler; interleavings may
+        // reorder individual picks but the dispatch share must still
+        // match the 3:1 weights (credits are conserved atomically)
+        let s = Arc::new(Scheduler::new(Policy::Weighted(vec![3.0, 1.0]), 2));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || (0..1000).filter(|_| s.pick(&[]) == 0).count())
+            })
+            .collect();
+        let zero: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let frac = zero as f64 / 4000.0;
+        assert!((frac - 0.75).abs() < 0.05, "group-0 share drifted to {frac}");
+    }
+
+    #[test]
+    fn cloned_scheduler_snapshots_cursor_state() {
+        let a = Scheduler::new(Policy::RoundRobin, 3);
+        assert_eq!(a.pick(&[]), 0);
+        let b = a.clone();
+        // both resume from the snapshot independently
+        assert_eq!(a.pick(&[]), 1);
+        assert_eq!(b.pick(&[]), 1);
     }
 }

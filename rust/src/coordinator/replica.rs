@@ -13,25 +13,18 @@
 //! each output as the next stage's [`Request`] over that stage's bounded
 //! queue — the blocking send *is* the inter-device FIFO backpressure.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::batcher::{next_batch, BatcherConfig, SharedBatcher};
+use super::batcher::{next_batch, poll_batch, BatchPoll, BatcherConfig, SharedBatcher};
 use super::deployment::WorkerId;
-use super::server::InferBackend;
+use super::hotpath::BufferPool;
+use super::server::{BatchHandle, InferBackend};
 use super::{Completion, Request};
-
-/// Outcome of a non-blocking submit to one replica. The request rides back
-/// in the error so the router can try another group without copying.
-pub(crate) enum TrySubmit {
-    /// The replica's bounded queue is full (transient overload).
-    Full(Request),
-    /// The replica stopped accepting work (shutdown or dead worker).
-    Closed(Request),
-}
 
 /// Where a replica's outputs go.
 pub(crate) enum Sink {
@@ -44,7 +37,8 @@ pub(crate) enum Sink {
     },
     /// Mid-chain stage: forward each output as the next stage's request.
     /// The downstream outstanding counter is incremented before the
-    /// send, the same discipline as [`Replica::try_submit`].
+    /// send, the same increment-before-send discipline the router uses
+    /// at group entries.
     Forward { next: SyncSender<Request>, next_outstanding: Arc<AtomicUsize> },
 }
 
@@ -59,24 +53,48 @@ pub(crate) struct Replica {
     worker: Option<JoinHandle<()>>,
 }
 
+/// One submitted-but-not-reaped batch in the worker's in-flight window.
+struct Inflight {
+    requests: Vec<Request>,
+    /// The payload buffers moved out of the requests — held until the
+    /// reap so they can flow back to the pool, never freed per batch.
+    inputs: Vec<Vec<f32>>,
+    handle: BatchHandle,
+}
+
+/// Floor for the in-flight polling window so a near-due batch never
+/// degenerates the batcher into a zero-wait spin.
+const MIN_POLL: Duration = Duration::from_micros(500);
+
 impl Replica {
-    /// Spawn the worker for `id`. The worker loops `next_batch ->
-    /// infer_batch -> sink` until the request channel is closed *and*
-    /// drained, so a group drain never drops accepted requests. A failed
-    /// batch is dropped (its completions never appear) but the replica
-    /// keeps serving. The thread name reflects the spawn-time position;
-    /// completions track the group's live position via [`Sink::Complete`].
+    /// Spawn the worker for `id`. The worker runs a **submit/reap loop**:
+    /// it keeps up to `window` batches submitted to the backend at once
+    /// (via [`InferBackend::submit_batch`]) so batch `N+1` can form — and
+    /// transfer, for overlapping backends — while batch `N` executes.
+    /// `window == 1` reproduces the old fully synchronous worker. When
+    /// nothing is in flight the worker parks on its request channel (no
+    /// idle spin); with work in flight it polls the batcher with a window
+    /// sized to the oldest batch's expected completion. On close the loop
+    /// runs an explicit **drain barrier**: every submitted batch is
+    /// reaped in FIFO order before the thread exits, so a group drain
+    /// never drops accepted requests. A failed batch is dropped (its
+    /// completions never appear) but the replica keeps serving. The
+    /// thread name reflects the spawn-time position; completions track
+    /// the group's live position via [`Sink::Complete`].
     pub(crate) fn spawn<B, F>(
         id: WorkerId,
         make_backend: F,
         batcher: BatcherConfig,
         queue_depth: usize,
+        window: usize,
         sink: Sink,
+        pool: Arc<BufferPool>,
     ) -> Replica
     where
         B: InferBackend,
         F: FnOnce() -> B + Send + 'static,
     {
+        let window = window.max(1);
         let (tx, rx) = sync_channel::<Request>(queue_depth.max(1));
         let outstanding = Arc::new(AtomicUsize::new(0));
         let counter = Arc::clone(&outstanding);
@@ -86,67 +104,69 @@ impl Replica {
             .name(format!("fcmp-g{}-s{}", id.group, id.stage))
             .spawn(move || {
                 let backend = make_backend();
-                while let Some(mut batch) = next_batch(&rx, &shared_worker.load()) {
+                let mut inflight: VecDeque<Inflight> = VecDeque::with_capacity(window);
+                loop {
+                    // reap everything already done, oldest first
+                    while inflight.front().is_some_and(|fl| fl.handle.is_ready()) {
+                        let fl = inflight.pop_front().expect("non-empty front");
+                        reap(fl, &sink, id, &counter, &pool);
+                    }
+                    // window full: the oldest batch gates further submits
+                    if inflight.len() >= window {
+                        if let Some(fl) = inflight.pop_front() {
+                            reap(fl, &sink, id, &counter, &pool);
+                        }
+                        continue;
+                    }
+                    let cfg = shared_worker.load();
+                    let batch = if inflight.is_empty() {
+                        // idle: park on the channel, zero CPU
+                        match next_batch(&rx, &cfg) {
+                            Some(b) => b,
+                            None => break,
+                        }
+                    } else {
+                        // bounded poll: back to reaping by the time the
+                        // oldest in-flight batch is expected to finish
+                        let limit = inflight
+                            .front()
+                            .and_then(|fl| fl.handle.eta())
+                            .unwrap_or(cfg.max_wait)
+                            .max(MIN_POLL);
+                        match poll_batch(&rx, &cfg, limit) {
+                            BatchPoll::Batch(b) => b,
+                            BatchPoll::Idle => continue,
+                            BatchPoll::Closed => break,
+                        }
+                    };
+                    let mut batch = batch;
                     // move inputs out (no per-request copy on the hot path)
                     let inputs: Vec<Vec<f32>> = batch
                         .requests
                         .iter_mut()
                         .map(|r| std::mem::take(&mut r.input))
                         .collect();
-                    let n = batch.requests.len();
-                    match backend.infer_batch(&inputs) {
-                        Ok(outputs) => match &sink {
-                            Sink::Complete { tx, group } => {
-                                for (req, output) in
-                                    batch.requests.into_iter().zip(outputs)
-                                {
-                                    let mut stage_latencies = req.stage_latencies;
-                                    let mut stage_batches = req.stage_batches;
-                                    // chain frames log the final hop too, so
-                                    // len == chain length; 1-stage-group
-                                    // completions keep the empty marker
-                                    if !stage_latencies.is_empty() {
-                                        stage_latencies.push(req.stage_arrival.elapsed());
-                                        stage_batches.push(n);
-                                    }
-                                    let _ = tx.send(Completion {
-                                        id: req.id,
-                                        output,
-                                        latency: req.arrival.elapsed(),
-                                        batch_size: n,
-                                        group: group.load(Ordering::SeqCst),
-                                        stage: id.stage,
-                                        stage_latencies,
-                                        stage_batches,
-                                    });
-                                }
-                            }
-                            Sink::Forward { next, next_outstanding } => {
-                                for (mut req, output) in
-                                    batch.requests.into_iter().zip(outputs)
-                                {
-                                    req.stage_latencies.push(req.stage_arrival.elapsed());
-                                    req.stage_batches.push(n);
-                                    req.input = output;
-                                    req.stage_arrival = Instant::now();
-                                    next_outstanding.fetch_add(1, Ordering::SeqCst);
-                                    // blocking send: the bounded downstream
-                                    // queue is the inter-stage FIFO, so a
-                                    // full next stage backpressures this one
-                                    if next.send(req).is_err() {
-                                        next_outstanding.fetch_sub(1, Ordering::SeqCst);
-                                    }
-                                }
-                            }
-                        },
+                    match backend.submit_batch(&inputs) {
+                        Ok(handle) => inflight.push_back(Inflight {
+                            requests: batch.requests,
+                            inputs,
+                            handle,
+                        }),
                         Err(e) => {
                             eprintln!(
-                                "worker g{}.s{}: batch failed: {e:#}",
+                                "worker g{}.s{}: submit failed: {e:#}",
                                 id.group, id.stage
                             );
+                            counter.fetch_sub(batch.requests.len(), Ordering::SeqCst);
+                            for input in inputs {
+                                pool.put(input);
+                            }
                         }
                     }
-                    counter.fetch_sub(n, Ordering::SeqCst);
+                }
+                // drain barrier: reap every submitted batch in FIFO order
+                for fl in inflight {
+                    reap(fl, &sink, id, &counter, &pool);
                 }
             })
             .expect("spawn replica worker");
@@ -164,7 +184,7 @@ impl Replica {
     /// even then, so liveness checks must ask the thread, not the
     /// channel.
     pub(crate) fn is_dead(&self) -> bool {
-        self.tx.is_some() && self.worker.as_ref().map_or(false, |h| h.is_finished())
+        self.tx.is_some() && self.worker.as_ref().is_some_and(|h| h.is_finished())
     }
 
     /// Snapshot of the replica's current batching settings.
@@ -190,50 +210,6 @@ impl Replica {
         Arc::clone(&self.outstanding)
     }
 
-    /// Non-blocking submit. The counter is incremented *before* the send
-    /// (and rolled back on failure) so the worker can never decrement a
-    /// counter that has not yet seen its increment — a decrement-first
-    /// interleaving would wrap the `AtomicUsize` and corrupt the JSQ load
-    /// signal. The transient +1 on the failure path is harmless.
-    pub(crate) fn try_submit(&self, req: Request) -> Result<(), TrySubmit> {
-        match &self.tx {
-            None => Err(TrySubmit::Closed(req)),
-            Some(tx) => {
-                self.outstanding.fetch_add(1, Ordering::SeqCst);
-                match tx.try_send(req) {
-                    Ok(()) => Ok(()),
-                    Err(TrySendError::Full(r)) => {
-                        self.outstanding.fetch_sub(1, Ordering::SeqCst);
-                        Err(TrySubmit::Full(r))
-                    }
-                    Err(TrySendError::Disconnected(r)) => {
-                        self.outstanding.fetch_sub(1, Ordering::SeqCst);
-                        Err(TrySubmit::Closed(r))
-                    }
-                }
-            }
-        }
-    }
-
-    /// Blocking submit: parks on the bounded queue until the worker frees a
-    /// slot. Same increment-before-send counter discipline as
-    /// [`Replica::try_submit`]; only a dead replica makes it fail.
-    pub(crate) fn submit_wait(&self, req: Request) -> Result<(), TrySubmit> {
-        match &self.tx {
-            None => Err(TrySubmit::Closed(req)),
-            Some(tx) => {
-                self.outstanding.fetch_add(1, Ordering::SeqCst);
-                match tx.send(req) {
-                    Ok(()) => Ok(()),
-                    Err(e) => {
-                        self.outstanding.fetch_sub(1, Ordering::SeqCst);
-                        Err(TrySubmit::Closed(e.0))
-                    }
-                }
-            }
-        }
-    }
-
     /// Stop accepting requests; the worker drains what is already queued.
     pub(crate) fn close(&mut self) {
         self.tx = None;
@@ -245,4 +221,62 @@ impl Replica {
             let _ = h.join();
         }
     }
+}
+
+/// Complete one in-flight batch: wait for its handle, emit through the
+/// sink, recycle the input buffers, and release the outstanding count.
+/// The counter is decremented *after* emission (same ordering as the old
+/// synchronous loop), so JSQ never undercounts work still being routed.
+fn reap(fl: Inflight, sink: &Sink, id: WorkerId, counter: &AtomicUsize, pool: &BufferPool) {
+    let Inflight { requests, inputs, handle } = fl;
+    let n = requests.len();
+    match handle.wait() {
+        Ok(outputs) => match sink {
+            Sink::Complete { tx, group } => {
+                for (req, output) in requests.into_iter().zip(outputs) {
+                    let mut stage_latencies = req.stage_latencies;
+                    let mut stage_batches = req.stage_batches;
+                    // chain frames log the final hop too, so len == chain
+                    // length; 1-stage-group completions keep the empty
+                    // marker
+                    if !stage_latencies.is_empty() {
+                        stage_latencies.push(req.stage_arrival.elapsed());
+                        stage_batches.push(n);
+                    }
+                    let _ = tx.send(Completion {
+                        id: req.id,
+                        output,
+                        latency: req.arrival.elapsed(),
+                        batch_size: n,
+                        group: group.load(Ordering::SeqCst),
+                        stage: id.stage,
+                        stage_latencies,
+                        stage_batches,
+                    });
+                }
+            }
+            Sink::Forward { next, next_outstanding } => {
+                for (mut req, output) in requests.into_iter().zip(outputs) {
+                    req.stage_latencies.push(req.stage_arrival.elapsed());
+                    req.stage_batches.push(n);
+                    req.input = output;
+                    req.stage_arrival = Instant::now();
+                    next_outstanding.fetch_add(1, Ordering::SeqCst);
+                    // blocking send: the bounded downstream queue is the
+                    // inter-stage FIFO, so a full next stage
+                    // backpressures this one
+                    if next.send(req).is_err() {
+                        next_outstanding.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+        },
+        Err(e) => {
+            eprintln!("worker g{}.s{}: batch failed: {e:#}", id.group, id.stage);
+        }
+    }
+    for input in inputs {
+        pool.put(input);
+    }
+    counter.fetch_sub(n, Ordering::SeqCst);
 }

@@ -39,20 +39,100 @@
 //! path with [`MockBackend`] (no PJRT); `examples/serve_cifar.rs` and
 //! `fcmp serve --backend pjrt` plug in the real [`crate::runtime::Engine`].
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
 use super::batcher::BatcherConfig;
 use super::deployment::{Deployment, GroupKey, WorkerId};
+use super::hotpath::{BufferPool, HotCounters, HotPathStats};
 use super::metrics::FleetMetrics;
 use super::policy::{Policy, Scheduler};
-use super::replica::{Replica, Sink, TrySubmit};
+use super::replica::{Replica, Sink};
 use super::workload::Trace;
 use super::{Completion, Request};
 use crate::util::rng::Rng;
 use crate::Result;
+
+/// The pending result of one submitted batch — what
+/// [`InferBackend::submit_batch`] hands the worker's submit/reap loop.
+///
+/// Three flavors cover every backend style:
+/// * [`BatchHandle::ready`] — the work already ran (the default blocking
+///   wrapper around [`InferBackend::infer_batch`]).
+/// * [`BatchHandle::completes_at`] — the result is computed but embargoed
+///   until a known completion instant (simulated device compute
+///   overlapping the next batch's transfer — [`PipelinedMockBackend`]).
+/// * [`BatchHandle::wait_with`] — the result needs a blocking call to
+///   collect (a real async device queue).
+pub struct BatchHandle(HandleInner);
+
+enum HandleInner {
+    Ready(Result<Vec<Vec<f32>>>),
+    At { ready_at: Instant, result: Result<Vec<Vec<f32>>> },
+    Wait(Box<dyn FnOnce() -> Result<Vec<Vec<f32>>> + Send>),
+}
+
+impl BatchHandle {
+    /// A handle whose result is available immediately.
+    pub fn ready(result: Result<Vec<Vec<f32>>>) -> BatchHandle {
+        BatchHandle(HandleInner::Ready(result))
+    }
+
+    /// A handle whose result becomes available at `ready_at`;
+    /// [`BatchHandle::wait`] sleeps out the remainder.
+    pub fn completes_at(ready_at: Instant, result: Result<Vec<Vec<f32>>>) -> BatchHandle {
+        BatchHandle(HandleInner::At { ready_at, result })
+    }
+
+    /// A handle that produces its result by running `collect` (a blocking
+    /// completion call into the device runtime) at reap time.
+    pub fn wait_with(
+        collect: impl FnOnce() -> Result<Vec<Vec<f32>>> + Send + 'static,
+    ) -> BatchHandle {
+        BatchHandle(HandleInner::Wait(Box::new(collect)))
+    }
+
+    /// Would [`BatchHandle::wait`] return without blocking? (`Wait`
+    /// handles are conservatively never "ready".)
+    pub fn is_ready(&self) -> bool {
+        match &self.0 {
+            HandleInner::Ready(_) => true,
+            HandleInner::At { ready_at, .. } => Instant::now() >= *ready_at,
+            HandleInner::Wait(_) => false,
+        }
+    }
+
+    /// Expected time until the result is available: zero when ready,
+    /// `None` when unknown (`Wait` handles). The worker sizes its batcher
+    /// polling window with this.
+    pub fn eta(&self) -> Option<Duration> {
+        match &self.0 {
+            HandleInner::Ready(_) => Some(Duration::ZERO),
+            HandleInner::At { ready_at, .. } => {
+                Some(ready_at.saturating_duration_since(Instant::now()))
+            }
+            HandleInner::Wait(_) => None,
+        }
+    }
+
+    /// Block until the batch result is available and return it.
+    pub fn wait(self) -> Result<Vec<Vec<f32>>> {
+        match self.0 {
+            HandleInner::Ready(result) => result,
+            HandleInner::At { ready_at, result } => {
+                let now = Instant::now();
+                if ready_at > now {
+                    std::thread::sleep(ready_at - now);
+                }
+                result
+            }
+            HandleInner::Wait(collect) => collect(),
+        }
+    }
+}
 
 /// Anything that can run a batch of inputs. The backend is constructed
 /// *inside* each worker thread (PJRT handles are not `Send`), so only the
@@ -61,11 +141,37 @@ pub trait InferBackend: 'static {
     /// Run one batch; `inputs[i]` is a flattened sample, the result must
     /// hold one output row per input row.
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// Start one batch and return a completion handle, letting the worker
+    /// keep up to [`Deployment::window`] batches in flight. `inputs` is
+    /// only valid for the duration of the call: an overlapping backend
+    /// must copy (the "transfer") before returning, and the returned
+    /// handle must not borrow it. The default wraps the blocking
+    /// [`InferBackend::infer_batch`] — the batch runs to completion right
+    /// here and the handle is immediately ready — so purely synchronous
+    /// backends ([`MockBackend`], the PJRT engine) behave identically
+    /// under any window.
+    fn submit_batch(&self, inputs: &[Vec<f32>]) -> Result<BatchHandle> {
+        Ok(BatchHandle::ready(self.infer_batch(inputs)))
+    }
 }
 
 impl InferBackend for crate::runtime::Engine {
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.infer(inputs)
+    }
+}
+
+/// Boxed backends work too (factories that pick a backend at runtime).
+/// Both methods delegate, so a boxed overlapping backend keeps its
+/// overlap — the default `submit_batch` would silently serialize it.
+impl InferBackend for Box<dyn InferBackend> {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        (**self).infer_batch(inputs)
+    }
+
+    fn submit_batch(&self, inputs: &[Vec<f32>]) -> Result<BatchHandle> {
+        (**self).submit_batch(inputs)
     }
 }
 
@@ -106,6 +212,66 @@ impl InferBackend for MockBackend {
     }
 }
 
+/// Mock backend with a two-phase service model that rewards in-flight
+/// windows: each batch costs `xfer_per_item · k` of *transfer* (occupies
+/// the submitter — the host-to-device copy) plus `compute_per_item · k`
+/// of *device compute* (occupies a single serial device queue). Under
+/// [`InferBackend::submit_batch`] the transfer of batch `N+1` overlaps
+/// the compute of batch `N`, exactly like a filled hardware pipeline, so
+/// with `xfer == compute` a window ≥ 2 doubles throughput; the blocking
+/// [`InferBackend::infer_batch`] path runs the two phases back-to-back
+/// (what a window of 1 degenerates to). Outputs match [`MockBackend`]:
+/// `[Σ inputs, batch_size]`.
+#[derive(Debug)]
+pub struct PipelinedMockBackend {
+    /// Per-request transfer time (blocks the submitting worker).
+    pub xfer_per_item: Duration,
+    /// Per-request device compute time (serial device queue).
+    pub compute_per_item: Duration,
+    /// When the simulated device queue drains (backends are thread-local
+    /// to their worker, so a `Cell` suffices).
+    device_free: Cell<Option<Instant>>,
+}
+
+impl PipelinedMockBackend {
+    /// A backend whose transfer and compute phases can overlap across
+    /// consecutive batches.
+    pub fn overlapped(xfer_per_item: Duration, compute_per_item: Duration) -> Self {
+        PipelinedMockBackend { xfer_per_item, compute_per_item, device_free: Cell::new(None) }
+    }
+
+    fn outputs(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        inputs.iter().map(|x| vec![x.iter().sum::<f32>(), inputs.len() as f32]).collect()
+    }
+}
+
+impl InferBackend for PipelinedMockBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let k = inputs.len() as u32;
+        let service = (self.xfer_per_item + self.compute_per_item) * k;
+        if !service.is_zero() {
+            std::thread::sleep(service);
+        }
+        Ok(Self::outputs(inputs))
+    }
+
+    fn submit_batch(&self, inputs: &[Vec<f32>]) -> Result<BatchHandle> {
+        let k = inputs.len() as u32;
+        let xfer = self.xfer_per_item * k;
+        if !xfer.is_zero() {
+            // the transfer occupies the submitter (and "copies" inputs —
+            // we compute the outputs eagerly, honoring the borrow rule)
+            std::thread::sleep(xfer);
+        }
+        let outputs = Self::outputs(inputs);
+        let now = Instant::now();
+        let start = self.device_free.get().map_or(now, |free| free.max(now));
+        let ready_at = start + self.compute_per_item * k;
+        self.device_free.set(Some(ready_at));
+        Ok(BatchHandle::completes_at(ready_at, Ok(outputs)))
+    }
+}
+
 /// Typed submit failure. The rejected request rides back in the error so
 /// callers can retry without rebuilding the input buffer, and the two
 /// variants make transient overload distinguishable from terminal shutdown.
@@ -119,13 +285,17 @@ pub enum SubmitError {
     /// The server is shut down (or every worker died). Retrying cannot
     /// succeed.
     Closed(Request),
+    /// A deadline-capped submit ([`Server::submit_within`]) exhausted its
+    /// backoff budget with every entry queue still full. Retrying later
+    /// can succeed — the fleet is overloaded, not gone.
+    Timeout(Request),
 }
 
 impl SubmitError {
     /// Recover the rejected request (e.g. to retry it later).
     pub fn into_request(self) -> Request {
         match self {
-            SubmitError::QueueFull(r) | SubmitError::Closed(r) => r,
+            SubmitError::QueueFull(r) | SubmitError::Closed(r) | SubmitError::Timeout(r) => r,
         }
     }
 
@@ -143,6 +313,9 @@ impl std::fmt::Display for SubmitError {
             }
             SubmitError::Closed(r) => {
                 write!(f, "request {} rejected: server is shut down", r.id)
+            }
+            SubmitError::Timeout(r) => {
+                write!(f, "request {} timed out: entry queues stayed full past the deadline", r.id)
             }
         }
     }
@@ -195,16 +368,272 @@ impl Group {
     }
 }
 
+/// One chain group as the router sees it: the entry stage's bounded
+/// sender, its outstanding counter (incremented before every send, the
+/// same discipline the old per-replica submit used), and every stage's
+/// counter for the group load signal.
+struct GroupEntry {
+    tx: SyncSender<Request>,
+    entry_outstanding: Arc<AtomicUsize>,
+    stage_outstanding: Vec<Arc<AtomicUsize>>,
+}
+
+impl GroupEntry {
+    /// Outstanding requests across the group's stages (JSQ / fallback
+    /// ordering signal).
+    fn load(&self) -> usize {
+        self.stage_outstanding.iter().map(|c| c.load(Ordering::SeqCst)).sum()
+    }
+}
+
+/// The lock-free submit path, shared by [`Server`] and every cloned
+/// [`SubmitHandle`]. The steady-state dispatch is: one atomic policy
+/// pick, one counter increment, one bounded-channel `try_send` — no
+/// locks, no allocation, no `&mut`. The [`Server`] holds the only strong
+/// `Arc`; handles hold `Weak`s, so replacing the router (on
+/// [`Server::apply`] / [`Server::shutdown`]) drops the entry senders at
+/// once — worker channels can disconnect and drain — and stale handles
+/// report [`SubmitError::Closed`].
+struct RouterCore {
+    entries: Vec<GroupEntry>,
+    scheduler: Scheduler,
+    counters: Arc<HotCounters>,
+}
+
+/// Exponential-backoff bounds for blocking/deadline submits parked-out on
+/// a saturated fleet.
+const BACKOFF_START: Duration = Duration::from_micros(50);
+const BACKOFF_CAP: Duration = Duration::from_millis(5);
+
+impl RouterCore {
+    /// A router with no entries: every dispatch reports `Closed`. Swapped
+    /// in *before* a shutdown/reshape closes worker queues, so the old
+    /// core's entry senders drop and the workers' channels can disconnect.
+    fn detached(policy: Policy, counters: Arc<HotCounters>) -> RouterCore {
+        RouterCore { entries: Vec::new(), scheduler: Scheduler::new(policy, 1), counters }
+    }
+
+    /// Non-blocking entry submit with increment-before-send counter
+    /// discipline (a decrement-first interleaving could wrap the counter
+    /// and corrupt the JSQ load signal; the transient +1 on failure is
+    /// harmless).
+    fn try_entry(&self, g: usize, req: Request) -> std::result::Result<(), (Request, bool)> {
+        let e = &self.entries[g];
+        e.entry_outstanding.fetch_add(1, Ordering::SeqCst);
+        match e.tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(r)) => {
+                e.entry_outstanding.fetch_sub(1, Ordering::SeqCst);
+                Err((r, true))
+            }
+            Err(TrySendError::Disconnected(r)) => {
+                e.entry_outstanding.fetch_sub(1, Ordering::SeqCst);
+                Err((r, false))
+            }
+        }
+    }
+
+    /// Route a request: the policy's preferred group first; only if its
+    /// entry queue is full (or its workers died) fall through to the
+    /// remaining groups in ascending-load order, so a full preferred
+    /// entry does not shed while a sibling group has room. The common
+    /// accepted-first-try case is the allocation-free hot path (JSQ's
+    /// argmin runs inline over the atomic counters — no load snapshot
+    /// `Vec`). A single-group deployment has no siblings, so a full entry
+    /// queue sheds immediately — frames can never enter a chain
+    /// mid-pipeline.
+    fn dispatch(&self, req: Request) -> std::result::Result<usize, SubmitError> {
+        self.counters.submits.fetch_add(1, Ordering::Relaxed);
+        if self.entries.is_empty() {
+            return Err(SubmitError::Closed(req));
+        }
+        let first = match self.scheduler.policy() {
+            Policy::JoinShortestQueue => {
+                let mut best = 0;
+                let mut best_load = usize::MAX;
+                for (g, e) in self.entries.iter().enumerate() {
+                    let load = e.load();
+                    if load < best_load {
+                        best_load = load;
+                        best = g;
+                    }
+                }
+                best
+            }
+            _ => self.scheduler.pick(&[]),
+        };
+        let mut saw_full = false;
+        let mut req = match self.try_entry(first, req) {
+            Ok(()) => {
+                self.counters.accepted_first_try.fetch_add(1, Ordering::Relaxed);
+                return Ok(first);
+            }
+            Err((r, full)) => {
+                saw_full |= full;
+                r
+            }
+        };
+        // cold path: scan the siblings in ascending-load order (the sort
+        // allocates, but only when the preferred entry already failed)
+        self.counters.fallback_scans.fetch_add(1, Ordering::Relaxed);
+        let mut rest: Vec<usize> = (0..self.entries.len()).filter(|&g| g != first).collect();
+        rest.sort_by_key(|&g| (self.entries[g].load(), g));
+        for g in rest {
+            match self.try_entry(g, req) {
+                Ok(()) => return Ok(g),
+                Err((r, full)) => {
+                    saw_full |= full;
+                    req = r;
+                }
+            }
+        }
+        if saw_full {
+            Err(SubmitError::QueueFull(req))
+        } else {
+            Err(SubmitError::Closed(req))
+        }
+    }
+
+    /// Blocking entry submit (parks on the bounded queue); fails only on
+    /// a disconnected (dead) worker.
+    fn wait_entry(&self, g: usize, req: Request) -> std::result::Result<(), Request> {
+        let e = &self.entries[g];
+        e.entry_outstanding.fetch_add(1, Ordering::SeqCst);
+        match e.tx.send(req) {
+            Ok(()) => Ok(()),
+            Err(err) => {
+                e.entry_outstanding.fetch_sub(1, Ordering::SeqCst);
+                Err(err.0)
+            }
+        }
+    }
+
+    /// Shared blocking-submit loop. With no deadline it parks on the
+    /// least-loaded entry queue (the worker wakes it when a slot frees),
+    /// falling back to bounded exponential backoff only on the
+    /// dead-group-looks-idle race. With a deadline it polls
+    /// [`RouterCore::dispatch`] under the same backoff schedule and
+    /// returns [`SubmitError::Timeout`] once the deadline passes — `std`
+    /// bounded channels have no `send_timeout`, so the deadline path
+    /// never parks unboundedly.
+    fn submit_until(
+        &self,
+        req: Request,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<usize, SubmitError> {
+        let mut req = req;
+        let mut backoff = BACKOFF_START;
+        loop {
+            req = match self.dispatch(req) {
+                Ok(g) => return Ok(g),
+                Err(SubmitError::Closed(r)) => return Err(SubmitError::Closed(r)),
+                Err(SubmitError::QueueFull(r)) | Err(SubmitError::Timeout(r)) => r,
+            };
+            match deadline {
+                None => {
+                    let g = (0..self.entries.len())
+                        .min_by_key(|&g| (self.entries[g].load(), g))
+                        .expect("dispatch returned QueueFull, so entries exist");
+                    req = match self.wait_entry(g, req) {
+                        Ok(()) => return Ok(g),
+                        Err(r) => {
+                            // a dead group can look idle; back off so the
+                            // retry loop cannot spin between dispatch and
+                            // the park
+                            self.counters.backoff_sleeps.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(backoff);
+                            backoff = (backoff * 2).min(BACKOFF_CAP);
+                            r
+                        }
+                    };
+                }
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(SubmitError::Timeout(req));
+                    }
+                    self.counters.backoff_sleeps.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(backoff.min(deadline - now));
+                    backoff = (backoff * 2).min(BACKOFF_CAP);
+                }
+            }
+        }
+    }
+}
+
+/// A cheaply-cloneable, `Send + Sync` submit endpoint: the lock-free hot
+/// path of the zero-stall design, detached from the [`Server`]'s `&mut`
+/// lifecycle API so any number of threads can submit concurrently.
+/// Handles hold a `Weak` reference to the router — after a
+/// [`Server::apply`] or [`Server::shutdown`] replaces it, every
+/// outstanding handle reports [`SubmitError::Closed`] (grab a fresh one
+/// with [`Server::submit_handle`]). The handle also exposes the server's
+/// [`BufferPool`] so submitters can recycle payload buffers.
+#[derive(Clone)]
+pub struct SubmitHandle {
+    core: Weak<RouterCore>,
+    pool: Arc<BufferPool>,
+}
+
+impl SubmitHandle {
+    /// Non-blocking submit; see [`Server::submit`].
+    pub fn submit(&self, id: u64, input: Vec<f32>) -> std::result::Result<usize, SubmitError> {
+        match self.core.upgrade() {
+            Some(core) => core.dispatch(Request::new(id, input)),
+            None => Err(SubmitError::Closed(Request::new(id, input))),
+        }
+    }
+
+    /// Blocking submit; see [`Server::submit_blocking`].
+    pub fn submit_blocking(
+        &self,
+        id: u64,
+        input: Vec<f32>,
+    ) -> std::result::Result<usize, SubmitError> {
+        match self.core.upgrade() {
+            Some(core) => core.submit_until(Request::new(id, input), None),
+            None => Err(SubmitError::Closed(Request::new(id, input))),
+        }
+    }
+
+    /// Deadline-capped blocking submit; see [`Server::submit_within`].
+    pub fn submit_within(
+        &self,
+        id: u64,
+        input: Vec<f32>,
+        timeout: Duration,
+    ) -> std::result::Result<usize, SubmitError> {
+        match self.core.upgrade() {
+            Some(core) => {
+                core.submit_until(Request::new(id, input), Some(Instant::now() + timeout))
+            }
+            None => Err(SubmitError::Closed(Request::new(id, input))),
+        }
+    }
+
+    /// The fleet's shared request-buffer pool (recycle payload `Vec`s
+    /// through it to keep the submit path allocation-free).
+    pub fn buffer_pool(&self) -> &BufferPool {
+        &self.pool
+    }
+}
+
 /// A running inference server: the live realization of a [`Deployment`].
 pub struct Server {
     groups: Vec<Group>,
-    scheduler: Scheduler,
     plan: Deployment,
     completions: Receiver<Completion>,
     /// Kept open across [`Server::apply`] so a reshaped fleet keeps
     /// feeding the same completion stream; dropped on [`Server::shutdown`]
     /// so the stream terminates once drained.
     completion_tx: Option<Sender<Completion>>,
+    /// The lock-free submit path. The server holds the only strong `Arc`
+    /// (handles hold `Weak`s): swapping in a detached core is how
+    /// shutdown/reshape releases the entry senders so worker channels can
+    /// disconnect and drain.
+    router: Arc<RouterCore>,
+    pool: Arc<BufferPool>,
+    counters: Arc<HotCounters>,
 }
 
 impl Server {
@@ -221,17 +650,40 @@ impl Server {
         // queues; a bounded completion channel can deadlock shutdown (worker
         // blocks on send while the owner blocks on join without draining)
         let (ctx, crx) = channel::<Completion>();
+        let counters = Arc::new(HotCounters::default());
+        let pool = Arc::new(BufferPool::new(Self::pool_capacity(&plan)));
         let factory = Arc::new(make_backend);
         let groups: Vec<Group> = (0..plan.groups.len())
-            .map(|g| Self::spawn_group(&factory, &plan, g, &ctx))
+            .map(|g| Self::spawn_group(&factory, &plan, g, &ctx, &pool))
             .collect();
-        Server {
-            scheduler: Scheduler::new(plan.policy.clone(), groups.len()),
+        let router = Arc::new(RouterCore::detached(plan.policy.clone(), Arc::clone(&counters)));
+        let mut srv = Server {
             groups,
             plan,
             completions: crx,
             completion_tx: Some(ctx),
+            router,
+            pool,
+            counters,
+        };
+        srv.rebuild_router();
+        srv
+    }
+
+    /// How many free payload buffers the pool may retain: enough to cover
+    /// every buffer that can be in flight at once (queued + windowed per
+    /// stage) plus headroom, capped so a pathological plan cannot pin
+    /// unbounded memory.
+    fn pool_capacity(plan: &Deployment) -> usize {
+        let mut total = 64usize;
+        for g in 0..plan.groups.len() {
+            let stages = plan.groups[g].stages.max(1);
+            let max_batch = plan.group_batcher(g).max_batch.max(1);
+            total = total.saturating_add(
+                stages * (plan.queue_depth.max(1) + plan.window.max(1) * max_batch),
+            );
         }
+        total.min(16384)
     }
 
     /// **Group-granular drain-and-swap** (the control plane's actuation
@@ -260,6 +712,11 @@ impl Server {
         };
         let plan = plan.normalized();
         let factory = Arc::new(make_backend);
+        // detach the router first: the old core holds clones of every
+        // entry sender, and leaving groups can only drain once those
+        // drop. Outstanding SubmitHandles go Closed here by design.
+        self.router =
+            Arc::new(RouterCore::detached(plan.policy.clone(), Arc::clone(&self.counters)));
         // match running groups to new slots by key: first unused match, in
         // plan order, so N identical untagged groups keep min(old, new).
         // A group with any dead worker never matches — re-applying the
@@ -273,7 +730,7 @@ impl Server {
             let hit = pool
                 .iter_mut()
                 .find(|s| {
-                    s.as_ref().map_or(false, |grp| grp.key == key && !grp.has_dead_worker())
+                    s.as_ref().is_some_and(|grp| grp.key == key && !grp.has_dead_worker())
                 })
                 .and_then(Option::take);
             slots.push(hit);
@@ -296,12 +753,33 @@ impl Server {
                     grp.pos.store(g, Ordering::SeqCst);
                     grp
                 }
-                None => Self::spawn_group(&factory, &plan, g, &ctx),
+                None => Self::spawn_group(&factory, &plan, g, &ctx, &self.pool),
             })
             .collect();
-        self.scheduler = Scheduler::new(plan.policy.clone(), self.groups.len());
         self.plan = plan;
+        self.rebuild_router();
         Ok(())
+    }
+
+    /// Point the lock-free submit path at the current groups (fresh
+    /// scheduler state, fresh entry senders). Called after every
+    /// deploy/apply; [`SubmitHandle`]s minted before this keep the old
+    /// `Weak` and report `Closed`.
+    fn rebuild_router(&mut self) {
+        let entries = self
+            .groups
+            .iter()
+            .map(|g| GroupEntry {
+                tx: g.replicas[0].sender().expect("fresh group entry is open"),
+                entry_outstanding: g.replicas[0].outstanding_handle(),
+                stage_outstanding: g.replicas.iter().map(Replica::outstanding_handle).collect(),
+            })
+            .collect();
+        self.router = Arc::new(RouterCore {
+            entries,
+            scheduler: Scheduler::new(self.plan.policy.clone(), self.groups.len().max(1)),
+            counters: Arc::clone(&self.counters),
+        });
     }
 
     /// Spawn chain group `g` of `plan`, feeding final-stage completions
@@ -312,6 +790,7 @@ impl Server {
         plan: &Deployment,
         g: usize,
         ctx: &Sender<Completion>,
+        pool: &Arc<BufferPool>,
     ) -> Group
     where
         B: InferBackend,
@@ -329,7 +808,15 @@ impl Server {
                 None => Sink::Complete { tx: ctx.clone(), group: Arc::clone(&pos) },
                 Some((next, next_outstanding)) => Sink::Forward { next, next_outstanding },
             };
-            let r = Replica::spawn(id, move || (*f)(id), batcher, plan.queue_depth, sink);
+            let r = Replica::spawn(
+                id,
+                move || (*f)(id),
+                batcher,
+                plan.queue_depth,
+                plan.window,
+                sink,
+                Arc::clone(pool),
+            );
             downstream =
                 Some((r.sender().expect("fresh replica is open"), r.outstanding_handle()));
             replicas.push(r);
@@ -395,6 +882,13 @@ impl Server {
         self.groups.iter().map(Group::outstanding).collect()
     }
 
+    /// Number of chain groups with at least one dead worker (a panicked
+    /// backend, never a normal drain). Such a group cannot carry frames
+    /// end-to-end; re-applying the plan respawns it.
+    pub fn dead_groups(&self) -> usize {
+        self.groups.iter().filter(|g| g.has_dead_worker()).count()
+    }
+
     /// Every worker died without a shutdown (panicked backends). The
     /// completion channel stays open (the server holds a sender for
     /// [`Server::apply`]), so this probe — not channel disconnection — is
@@ -405,9 +899,12 @@ impl Server {
 
     /// Non-blocking submit. Returns the chain-group index the request
     /// entered (frames always enter at the group's stage 0), or a typed
-    /// [`SubmitError`] (overload shed vs shutdown).
+    /// [`SubmitError`] (overload shed vs shutdown). Delegates to the
+    /// lock-free router core — `&mut self` is kept only for API
+    /// continuity; concurrent submitters should clone a
+    /// [`Server::submit_handle`].
     pub fn submit(&mut self, id: u64, input: Vec<f32>) -> std::result::Result<usize, SubmitError> {
-        self.dispatch(Request::new(id, input))
+        self.router.dispatch(Request::new(id, input))
     }
 
     /// Blocking submit: when every group entry is full it parks on the
@@ -419,80 +916,44 @@ impl Server {
         id: u64,
         input: Vec<f32>,
     ) -> std::result::Result<usize, SubmitError> {
-        let mut req = Request::new(id, input);
-        loop {
-            req = match self.dispatch(req) {
-                Ok(g) => return Ok(g),
-                Err(SubmitError::Closed(r)) => return Err(SubmitError::Closed(r)),
-                Err(SubmitError::QueueFull(r)) => r,
-            };
-            let g = self
-                .groups
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, grp)| grp.outstanding())
-                .map(|(g, _)| g)
-                .unwrap();
-            req = match self.groups[g].replicas[0].submit_wait(req) {
-                Ok(()) => return Ok(g),
-                // a dead group can look idle; back off briefly so the
-                // retry loop cannot spin between dispatch and submit_wait
-                Err(TrySubmit::Full(r)) | Err(TrySubmit::Closed(r)) => {
-                    std::thread::sleep(Duration::from_micros(200));
-                    r
-                }
-            };
-        }
+        self.router.submit_until(Request::new(id, input), None)
     }
 
-    /// Route a request: the policy's preferred group first; only if its
-    /// entry queue is full (or its workers died) fall through to the
-    /// remaining groups in ascending-load order, so a full preferred
-    /// entry does not shed while a sibling group has room. The common
-    /// accepted-first-try case pays no fallback bookkeeping. A
-    /// single-group deployment (one chain) has no siblings, so a full
-    /// entry queue sheds immediately — frames can never enter a chain
-    /// mid-pipeline.
-    fn dispatch(&mut self, req: Request) -> std::result::Result<usize, SubmitError> {
-        // the load snapshot costs one atomic load per worker plus a Vec;
-        // take it up front only for the policy that reads it (JSQ) — the
-        // fallback path below re-derives it on demand
-        let mut loads: Vec<usize> =
-            if matches!(self.scheduler.policy(), Policy::JoinShortestQueue) {
-                self.group_outstanding()
-            } else {
-                Vec::new()
-            };
-        let first = self.scheduler.pick(&loads);
-        let mut saw_full = false;
-        let mut req = match self.groups[first].replicas[0].try_submit(req) {
-            Ok(()) => return Ok(first),
-            Err(TrySubmit::Full(r)) => {
-                saw_full = true;
-                r
-            }
-            Err(TrySubmit::Closed(r)) => r,
-        };
-        if loads.is_empty() {
-            loads = self.group_outstanding();
-        }
-        let mut rest: Vec<usize> = (0..self.groups.len()).filter(|&g| g != first).collect();
-        rest.sort_by_key(|&g| (loads[g], g));
-        for g in rest {
-            match self.groups[g].replicas[0].try_submit(req) {
-                Ok(()) => return Ok(g),
-                Err(TrySubmit::Full(r)) => {
-                    saw_full = true;
-                    req = r;
-                }
-                Err(TrySubmit::Closed(r)) => req = r,
-            }
-        }
-        if saw_full {
-            Err(SubmitError::QueueFull(req))
-        } else {
-            Err(SubmitError::Closed(req))
-        }
+    /// Blocking submit with a total-deadline cap: retries under bounded
+    /// exponential backoff while the fleet is saturated and returns
+    /// [`SubmitError::Timeout`] (request included, retryable) once
+    /// `timeout` elapses — so trace replay at overload cannot spin a core
+    /// or park forever.
+    pub fn submit_within(
+        &mut self,
+        id: u64,
+        input: Vec<f32>,
+        timeout: Duration,
+    ) -> std::result::Result<usize, SubmitError> {
+        self.router.submit_until(Request::new(id, input), Some(Instant::now() + timeout))
+    }
+
+    /// A cheaply-cloneable, thread-safe submit endpoint sharing this
+    /// server's router and buffer pool. Valid until the next
+    /// [`Server::apply`] or [`Server::shutdown`] replaces the router
+    /// (stale handles report [`SubmitError::Closed`]).
+    pub fn submit_handle(&self) -> SubmitHandle {
+        SubmitHandle { core: Arc::downgrade(&self.router), pool: Arc::clone(&self.pool) }
+    }
+
+    /// Cumulative hot-path profile: router dispatch counters merged with
+    /// the buffer pool's hit/miss/return traffic. Counters are monotone —
+    /// diff two snapshots to profile an interval.
+    pub fn hot_stats(&self) -> HotPathStats {
+        let mut stats = self.counters.snapshot();
+        self.pool.merge_into(&mut stats);
+        stats
+    }
+
+    /// The fleet's shared request-buffer pool (prime it before a
+    /// latency-critical run to start in the allocation-free regime).
+    pub fn buffer_pool(&self) -> &BufferPool {
+        &self.pool
     }
 
     /// Receive the next completion (blocks until one arrives, or returns
@@ -521,6 +982,18 @@ impl Server {
     /// percentiles alongside the per-stage breakdown. The server stays
     /// running; callers decide when to [`Server::shutdown`].
     pub fn replay(&mut self, trace: &Trace, input_len: usize, seed: u64) -> FleetMetrics {
+        let mut fm = self.replay_inner(trace, input_len, seed);
+        fm.set_hot(self.hot_stats());
+        fm
+    }
+
+    /// The replay loop proper. Payload buffers cycle through the fleet's
+    /// [`BufferPool`]: each submit fills a recycled buffer, workers
+    /// return input buffers after their batch completes, and drained
+    /// completion outputs flow back too — so once the pool is warm the
+    /// steady-state submit path allocates nothing per request (the
+    /// pool-miss counter in [`Server::hot_stats`] is the proof).
+    fn replay_inner(&mut self, trace: &Trace, input_len: usize, seed: u64) -> FleetMetrics {
         let mut rng = Rng::new(seed);
         let mut fm = FleetMetrics::new(&self.group_sizes());
         fm.start();
@@ -533,7 +1006,10 @@ impl Server {
                 }
                 let wait = Duration::from_secs_f64((due - now).min(0.005));
                 match self.completions.recv_timeout(wait) {
-                    Ok(c) => fm.record(&c),
+                    Ok(c) => {
+                        fm.record(&c);
+                        self.pool.put(c.output);
+                    }
                     // every worker died (panicked backend): nothing will
                     // ever complete, so stop replaying instead of spinning
                     Err(RecvTimeoutError::Timeout) => {
@@ -544,10 +1020,15 @@ impl Server {
                     Err(RecvTimeoutError::Disconnected) => return fm,
                 }
             }
-            let input: Vec<f32> = (0..input_len).map(|_| rng.below(256) as f32).collect();
+            let mut input = self.pool.get(input_len);
+            input.extend((0..input_len).map(|_| rng.below(256) as f32));
             match self.submit(i as u64, input) {
                 Ok(_) => fm.record_submitted(),
-                Err(SubmitError::QueueFull(_)) => fm.record_shed(),
+                Err(SubmitError::QueueFull(r)) | Err(SubmitError::Timeout(r)) => {
+                    fm.record_shed();
+                    // the shed request's buffer goes straight back
+                    self.pool.put(r.input);
+                }
                 Err(SubmitError::Closed(_)) => return fm,
             }
         }
@@ -558,6 +1039,7 @@ impl Server {
             match self.completions.recv_timeout(Duration::from_millis(50)) {
                 Ok(c) => {
                     fm.record(&c);
+                    self.pool.put(c.output);
                     last_progress = Instant::now();
                 }
                 Err(RecvTimeoutError::Disconnected) => break,
@@ -578,6 +1060,14 @@ impl Server {
     /// are drained the completion stream terminates (and no further plan
     /// can be [`Server::apply`]d).
     pub fn shutdown(&mut self) {
+        // the router holds clones of every entry sender: swap in a
+        // detached core first so the worker channels can actually
+        // disconnect once the groups close (outstanding SubmitHandles go
+        // Closed, which is exactly the contract)
+        self.router = Arc::new(RouterCore::detached(
+            self.plan.policy.clone(),
+            Arc::clone(&self.counters),
+        ));
         for g in &mut self.groups {
             g.close();
         }
@@ -995,5 +1485,118 @@ mod tests {
         let err = shed().unwrap_err();
         assert!(format!("{err}").contains("request 3"), "{err}");
         assert!(format!("{err}").contains("shed"), "{err}");
+        // the timeout variant is retryable, not terminal
+        let t = SubmitError::Timeout(Request::new(9, vec![]));
+        assert!(!t.is_closed());
+        assert_eq!(t.into_request().id, 9);
+    }
+
+    #[test]
+    fn batch_handle_flavors_report_readiness() {
+        let h = BatchHandle::ready(Ok(vec![vec![1.0]]));
+        assert!(h.is_ready());
+        assert_eq!(h.eta(), Some(Duration::ZERO));
+        assert_eq!(h.wait().unwrap(), vec![vec![1.0]]);
+        let h = BatchHandle::completes_at(
+            Instant::now() + Duration::from_millis(40),
+            Ok(vec![vec![3.0]]),
+        );
+        assert!(!h.is_ready());
+        assert!(h.eta().unwrap() > Duration::ZERO);
+        let t0 = Instant::now();
+        assert_eq!(h.wait().unwrap(), vec![vec![3.0]]);
+        assert!(t0.elapsed() >= Duration::from_millis(35), "wait returned early");
+        let h = BatchHandle::wait_with(|| Ok(vec![vec![2.0]]));
+        assert!(!h.is_ready(), "Wait handles are conservatively never ready");
+        assert!(h.eta().is_none());
+        assert_eq!(h.wait().unwrap(), vec![vec![2.0]]);
+    }
+
+    #[test]
+    fn pipelined_mock_overlaps_compute_with_the_next_transfer() {
+        let be = PipelinedMockBackend::overlapped(
+            Duration::from_millis(10),
+            Duration::from_millis(10),
+        );
+        // two back-to-back submits: batch 2's transfer overlaps batch 1's
+        // compute, so the pair finishes in ~3 legs (30ms), not 4 (40ms)
+        let t0 = Instant::now();
+        let h1 = be.submit_batch(&[vec![1.0]]).unwrap();
+        let h2 = be.submit_batch(&[vec![2.0]]).unwrap();
+        assert_eq!(h1.wait().unwrap()[0], vec![1.0, 1.0]);
+        assert_eq!(h2.wait().unwrap()[0], vec![2.0, 1.0]);
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= Duration::from_millis(28), "finished too fast: {elapsed:?}");
+        assert!(elapsed < Duration::from_millis(38), "no overlap happened: {elapsed:?}");
+        // the blocking path is strictly sequential
+        let t1 = Instant::now();
+        be.infer_batch(&[vec![1.0]]).unwrap();
+        assert!(t1.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn submit_within_times_out_under_saturation_and_keeps_the_request() {
+        let mut srv = Server::deploy(
+            |_| MockBackend::with_service(Duration::from_millis(300), Duration::ZERO),
+            single(1, 1),
+        );
+        // saturate: one batch executing plus a queue of depth 1
+        let mut accepted = 0;
+        for i in 0..10 {
+            if srv.submit(i, vec![1.0]).is_ok() {
+                accepted += 1;
+            }
+        }
+        assert!(accepted >= 1);
+        let t0 = Instant::now();
+        match srv.submit_within(99, vec![7.0], Duration::from_millis(40)) {
+            Err(SubmitError::Timeout(r)) => {
+                assert_eq!(r.id, 99, "timeout must hand the request back");
+                assert_eq!(r.input, vec![7.0]);
+            }
+            Ok(_) => panic!("saturated fleet accepted within the deadline"),
+            Err(other) => panic!("expected Timeout, got {other}"),
+        }
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(40), "gave up early: {waited:?}");
+        assert!(
+            waited < Duration::from_millis(250),
+            "timed-out submit waited for service completion: {waited:?}"
+        );
+        let stats = srv.hot_stats();
+        assert!(stats.backoff_sleeps > 0, "deadline path must back off, not spin");
+    }
+
+    #[test]
+    fn submit_handle_is_concurrent_and_goes_closed_after_shutdown() {
+        let mut srv = Server::deploy(|_| MockBackend::instant(), single(256, 4));
+        let handle = srv.submit_handle();
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let mut ok = 0usize;
+                    for i in 0..50u64 {
+                        if h.submit_blocking(t * 1000 + i, vec![1.0]).is_ok() {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect();
+        let accepted: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
+        assert_eq!(accepted, 200, "live handle must accept every blocking submit");
+        let mut got = 0;
+        for _ in 0..accepted {
+            assert!(srv.next_completion().is_some());
+            got += 1;
+        }
+        assert_eq!(got, 200);
+        srv.shutdown();
+        match handle.submit(9999, vec![1.0]) {
+            Err(SubmitError::Closed(r)) => assert_eq!(r.id, 9999),
+            other => panic!("stale handle must be Closed, got {:?}", other.is_ok()),
+        }
     }
 }

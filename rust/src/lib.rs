@@ -26,6 +26,13 @@
 //! re-partition with cached-manifest migration, and an on-disk
 //! control-event journal that replays alongside arrival traces.
 //!
+//! The request path itself is a zero-stall pipeline: lock-free submits
+//! through cloneable handles, per-worker async in-flight windows that
+//! overlap batch formation and transfer with compute, recycled request
+//! buffers and histogram-backed metrics for an allocation-free steady
+//! state (see the hot-path profile in
+//! [`coordinator::HotPathStats`]).
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
 pub mod config;

@@ -8,11 +8,12 @@
 //! fcmp perf     --network ... [--mhz 195]
 //! fcmp gals     [--nb 4] [--rf 2.0] [--depth 128] [--cycles 10000] [--static]
 //! fcmp golden   [--artifacts artifacts] [--model all|cnv_w1a1|cnv_w2a2|rn50_lite_w1a2]
-//! fcmp serve    [--backend mock|pjrt] [--model cnv_w1a1] [--chains 1]
+//! fcmp serve    [--backend mock|pipelined|pjrt] [--model cnv_w1a1] [--chains 1]
 //!               [--stages 1] [--policy round-robin|jsq|weighted]
 //!               [--trace poisson|bursty|heavy|diurnal|uniform|file:PATH]
 //!               [--trace-out PATH] [--requests 256] [--rate 400] [--batch 4]
-//!               [--queue 64] [--devices u250,u280,7020,7012s]
+//!               [--queue 64] [--window 2] [--xfer-frac 0.5]
+//!               [--devices u250,u280,7020,7012s]
 //!               [--service-us 400] [--point paper|packed]
 //! fcmp shard    --network cnv-w2a2 --devices 7012s,7012s [--shards 2]
 //!               [--hb 4] [--engine ga|ffd] [--generations 40]
@@ -35,8 +36,9 @@ use fcmp::control::{
 };
 use fcmp::coordinator::{
     bursty, chain_fps, diurnal, flash_crowd, group_weights, heavy_tail,
-    mock_chain_service_from_fps, poisson, replica_fps, shard_service_times, uniform,
-    BatcherConfig, Deployment, MockBackend, Policy, ReplicaSpec, Server, Trace, WorkerId,
+    mock_chain_service_from_fps, overlap_speedup, poisson, replica_fps, shard_service_times,
+    uniform, BatcherConfig, Deployment, MockBackend, PipelinedMockBackend, Policy, ReplicaSpec,
+    Server, Trace, WorkerId,
 };
 use fcmp::device;
 use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
@@ -490,6 +492,7 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     let seed = a.get_usize("seed", 2020) as u64;
     let max_batch = a.get_usize("batch", 4);
     let queue_depth = a.get_usize("queue", 64);
+    let window = a.get_usize("window", 2).max(1);
     let trace_name = a.get_or("trace", "poisson");
     let (net, model) = serve_model(a.get_or("model", "cnv_w1a1")).ok_or_else(|| {
         anyhow::anyhow!("unknown model (cnv_w1a1|cnv_w2a2|rn50_lite_w1a2 or aliases)")
@@ -550,11 +553,12 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     let plan = Deployment::replicated_chains(chains, stages)
         .with_policy(policy)
         .with_batcher(BatcherConfig { max_batch, max_wait: Duration::from_millis(2) })
-        .with_queue_depth(queue_depth);
+        .with_queue_depth(queue_depth)
+        .with_window(window);
 
     println!(
         "fleet: {chains} chain group(s) x {stages} stage(s), policy {policy_name}, \
-         trace {trace_name}"
+         trace {trace_name}, window {window}"
     );
     for (g, group) in specs.iter().enumerate() {
         println!("  group {g} (weight {:.2}):", weights[g]);
@@ -580,6 +584,31 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
             let fm = srv.replay(&trace, 8, seed);
             (srv, fm)
         }
+        "pipelined" => {
+            // same calibrated per-stage service, split into an overlapping
+            // transfer leg and a compute leg: --window 2+ hides the
+            // transfer behind the previous batch's compute
+            let xfer_frac = a.get_f64("xfer-frac", 0.5).clamp(0.0, 1.0);
+            let speedup = overlap_speedup(xfer_frac, 1.0 - xfer_frac, window);
+            println!(
+                "pipelined backend: {:.0}% transfer / {:.0}% compute per item, \
+                 analytic overlap speedup {speedup:.2}x at window {window}",
+                100.0 * xfer_frac,
+                100.0 * (1.0 - xfer_frac)
+            );
+            let mut srv = Server::deploy(
+                move |id: WorkerId| {
+                    let s = svc[id.group][id.stage];
+                    PipelinedMockBackend::overlapped(
+                        s.mul_f64(xfer_frac),
+                        s.mul_f64(1.0 - xfer_frac),
+                    )
+                },
+                plan,
+            );
+            let fm = srv.replay(&trace, 8, seed);
+            (srv, fm)
+        }
         "pjrt" => {
             anyhow::ensure!(
                 stages == 1,
@@ -597,7 +626,7 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
             let fm = srv.replay(&trace, per, seed);
             (srv, fm)
         }
-        other => anyhow::bail!("unknown backend {other} (mock|pjrt)"),
+        other => anyhow::bail!("unknown backend {other} (mock|pipelined|pjrt)"),
     };
     srv.shutdown();
     println!(
@@ -868,9 +897,12 @@ subcommands:
           replicated fleet, 1 x k a single pipeline chain, N x k the
           replicated-chain shape) --policy round-robin|jsq|weighted
           --trace poisson|bursty|heavy|diurnal|file:PATH [--trace-out
-          PATH] --backend mock|pjrt --point paper|packed; weighted
-          capacity comes from the sim/timing model of each chain group's
-          --devices entries, and the summary reports per-group e2e p99
+          PATH] --backend mock|pipelined|pjrt --point paper|packed;
+          weighted capacity comes from the sim/timing model of each chain
+          group's --devices entries, and the summary reports per-group
+          e2e p99 plus the hot-path profile; --window W keeps up to W
+          batches in flight per worker (pipelined backends overlap
+          transfer with compute, --xfer-frac splits the service time)
   shard   pipeline-parallel multi-device sharding: partition one network
           over --devices a,b,... [--shards k] into contiguous stage shards
           (per-shard FCMP packing, --hb/--generations/--engine ga|ffd),

@@ -1,0 +1,291 @@
+//! Fixed-bucket log-scale latency histogram — the allocation-free
+//! replacement for the sort-the-whole-vector percentile path in
+//! [`crate::coordinator::metrics`].
+//!
+//! The old [`crate::util::stats::summarize`] keeps every sample in a
+//! `Vec<f64>` and sorts it at summary time: one heap push per completion
+//! on the hot path and an `O(n log n)` sort per report. A
+//! [`LogHistogram`] records a sample with two array writes and a handful
+//! of float ops into a fixed 512-bucket table, so the steady-state
+//! recording path never allocates and summarizing is an `O(buckets)`
+//! walk.
+//!
+//! **Error bound.** Buckets are geometric with [`BUCKETS_PER_OCTAVE`]
+//! buckets per factor of two, i.e. a bucket width of `2^(1/16) ≈ 1.0443`.
+//! A percentile is reported as the geometric midpoint of its bucket
+//! (clamped to the exact observed `[min, max]`), so the reported value is
+//! within half a bucket — **±2.2 % relative** — of the exact order
+//! statistic. Count, mean, min, max and the stddev (via `Σx²`) are exact.
+//! The covered range is `[1e-3, ~4.3e6]` in the caller's unit
+//! (milliseconds for the serving metrics: 1 µs up to ~72 minutes);
+//! values outside clamp into the edge buckets but still update the exact
+//! min/max/mean.
+
+use crate::util::stats::Summary;
+
+/// Geometric buckets per factor of two; the bucket width is
+/// `2^(1/BUCKETS_PER_OCTAVE)`.
+pub const BUCKETS_PER_OCTAVE: usize = 16;
+
+/// Total bucket count: 32 octaves × 16 buckets.
+pub const BUCKETS: usize = 32 * BUCKETS_PER_OCTAVE;
+
+/// Lower edge of bucket 0 (values at or below it land there).
+const MIN_TRACKED: f64 = 1e-3;
+
+/// Streaming log-scale histogram with exact moments.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    sumsq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    /// Empty histogram (the bucket table is the only allocation it will
+    /// ever make).
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v <= MIN_TRACKED {
+            return 0;
+        }
+        let idx = ((v / MIN_TRACKED).log2() * BUCKETS_PER_OCTAVE as f64) as usize;
+        idx.min(BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` — the value a percentile landing
+    /// in that bucket is reported as (before min/max clamping).
+    fn representative(i: usize) -> f64 {
+        MIN_TRACKED * ((i as f64 + 0.5) / BUCKETS_PER_OCTAVE as f64).exp2()
+    }
+
+    /// Record one sample. Negative and non-finite values are clamped to
+    /// zero (they land in the bottom bucket and pull the exact min down
+    /// to 0). No allocation.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.counts[Self::bucket_of(v)] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.sumsq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Exact mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Exact minimum observed (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum observed (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Population standard deviation from the exact `Σx`/`Σx²` moments.
+    pub fn stddev(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        (self.sumsq / self.total as f64 - mean * mean).max(0.0).sqrt()
+    }
+
+    /// Percentile `p` in `[0, 100]`: the representative of the bucket
+    /// holding the `ceil(p/100 · n)`-th smallest sample, clamped to the
+    /// exact observed `[min, max]` — within half a bucket width (±2.2 %)
+    /// of the exact order statistic. Returns 0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let target = ((p / 100.0 * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Full [`Summary`]: exact n/mean/stddev/min/max, bucketed
+    /// median/p95/p99. Panics when empty (mirrors
+    /// [`crate::util::stats::summarize`]).
+    pub fn summary(&self) -> Summary {
+        assert!(self.total > 0, "summary of empty histogram");
+        Summary {
+            n: self.total as usize,
+            mean: self.mean(),
+            median: self.percentile(50.0),
+            stddev: self.stddev(),
+            min: self.min(),
+            max: self.max(),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::{percentile, summarize};
+
+    /// Relative tolerance: one bucket width `2^(1/16) − 1 ≈ 4.4 %` covers
+    /// the half-bucket representative error on both of two adjacent order
+    /// statistics the exact linear interpolation can fall between.
+    const TOL: f64 = 0.045;
+
+    fn close(got: f64, want: f64) -> bool {
+        if want == 0.0 {
+            return got.abs() < 1e-12;
+        }
+        (got / want - 1.0).abs() <= TOL
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_summary_panics() {
+        LogHistogram::new().summary();
+    }
+
+    #[test]
+    fn moments_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.mean(), 2.5);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 4.0);
+        let exact = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((h.stddev() - exact.stddev).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_samples_collapse_to_the_value() {
+        let mut h = LogHistogram::new();
+        for _ in 0..100 {
+            h.record(7.5);
+        }
+        // min == max clamps every percentile to the exact value
+        assert_eq!(h.percentile(50.0), 7.5);
+        assert_eq!(h.percentile(99.0), 7.5);
+    }
+
+    #[test]
+    fn percentiles_track_exact_sorted_values_within_one_bucket() {
+        // the acceptance cross-check: p50/p95/p99 of a heavy-tailed
+        // sample agree with the exact sorted-vector percentiles within
+        // one bucket width
+        let mut rng = Rng::new(99);
+        let mut h = LogHistogram::new();
+        let mut exact = Vec::new();
+        for _ in 0..5000 {
+            // log-uniform over ~[0.1, 1000] ms
+            let u = rng.below(1_000_000) as f64 / 1_000_000.0;
+            let v = 0.1 * 10f64.powf(4.0 * u);
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [50.0, 90.0, 95.0, 99.0] {
+            let want = percentile(&exact, p);
+            let got = h.percentile(p);
+            assert!(close(got, want), "p{p}: hist {got} vs exact {want}");
+        }
+        let s = h.summary();
+        let es = summarize(&exact);
+        assert!(close(s.median, es.median));
+        assert!(close(s.p95, es.p95));
+        assert!(close(s.p99, es.p99));
+        assert!((s.mean - es.mean).abs() < 1e-9, "mean must stay exact");
+        assert_eq!(s.max, es.max, "max must stay exact");
+    }
+
+    #[test]
+    fn extreme_and_degenerate_values_stay_bounded() {
+        let mut h = LogHistogram::new();
+        h.record(-5.0); // clamps to 0, bottom bucket
+        h.record(0.0);
+        h.record(f64::NAN); // clamps to 0
+        h.record(1e12); // beyond the top bucket edge
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e12);
+        // percentiles stay inside the exact observed range
+        let p99 = h.percentile(99.0);
+        assert!((0.0..=1e12).contains(&p99));
+        assert_eq!(h.percentile(100.0), 1e12, "p100 clamps up to the exact max");
+        assert_eq!(h.percentile(0.0), 0.0, "p0 clamps down to the exact min");
+    }
+
+    #[test]
+    fn bucket_of_is_monotone() {
+        let mut last = 0;
+        let mut v = 5e-4;
+        while v < 1e7 {
+            let b = LogHistogram::bucket_of(v);
+            assert!(b >= last, "bucket index regressed at {v}");
+            assert!(b < BUCKETS);
+            last = b;
+            v *= 1.31;
+        }
+    }
+}

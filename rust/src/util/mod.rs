@@ -5,6 +5,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod hist;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,13 +1,17 @@
 //! Serving-path integration tests on the deterministic mock backend over
 //! the unified `Deployment` API: exact dispatch counts per scheduling
-//! policy, admission-control shedding and the typed QueueFull/Closed
-//! error split, shutdown-drain semantics, and a property test that fleet
-//! completions are a permutation of submissions under every policy.
+//! policy, admission-control shedding and the typed QueueFull/Closed/
+//! Timeout error split, shutdown-drain semantics (including the async
+//! in-flight window's drain barrier and mid-drain worker death), the
+//! allocation-free steady state, and property tests that fleet
+//! completions are a permutation of submissions under every policy and
+//! window.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use fcmp::coordinator::{
-    BatcherConfig, Completion, Deployment, MockBackend, Policy, Server, SubmitError,
+    uniform, BatcherConfig, Completion, Deployment, InferBackend, MockBackend,
+    PipelinedMockBackend, Policy, Server, SubmitError,
 };
 use fcmp::util::prop;
 
@@ -98,6 +102,7 @@ fn overload_sheds_with_queue_full_and_recovers() {
                 assert!(!e.is_closed());
                 shed += 1;
             }
+            Err(SubmitError::Timeout(_)) => panic!("plain submit never waits, never times out"),
             Err(SubmitError::Closed(_)) => panic!("open server must never report Closed"),
         }
     }
@@ -153,6 +158,194 @@ fn shutdown_drains_every_in_flight_request() {
         assert!(c.group < 3);
         assert_eq!(c.stage, 0, "flat groups complete at their only stage");
     }
+}
+
+#[test]
+fn prop_windowed_drain_completes_every_accepted_submission() {
+    // the drain-barrier property across in-flight windows: for every
+    // window in {1, 2, 4}, with overlapping backends of *different*
+    // speeds per group (jittering completion order across the fleet),
+    // every accepted submission comes back exactly once with the right
+    // output
+    prop::check(
+        7031,
+        9,
+        |r| vec![8 + r.below(40), r.below(3), r.below(3)],
+        |v: &Vec<u64>| {
+            let n = v.first().copied().unwrap_or(16).clamp(1, 48);
+            let window = 1usize << (v.get(1).copied().unwrap_or(1) % 3); // 1, 2, 4
+            let policy = match v.get(2).copied().unwrap_or(0) % 3 {
+                0 => Policy::RoundRobin,
+                1 => Policy::JoinShortestQueue,
+                _ => Policy::Weighted(vec![2.0, 1.0]),
+            };
+            let mut srv = Server::deploy(
+                |id| {
+                    // group 0 transfer-bound, group 1 compute-bound, and
+                    // unequal totals: completions interleave unevenly
+                    if id.group == 0 {
+                        PipelinedMockBackend::overlapped(
+                            Duration::from_micros(400),
+                            Duration::from_micros(100),
+                        )
+                    } else {
+                        PipelinedMockBackend::overlapped(
+                            Duration::from_micros(100),
+                            Duration::from_micros(700),
+                        )
+                    }
+                },
+                Deployment::replicated(2)
+                    .with_policy(policy)
+                    .with_batcher(BatcherConfig {
+                        max_batch: 3,
+                        max_wait: Duration::from_micros(200),
+                    })
+                    .with_queue_depth(16)
+                    .with_window(window),
+            );
+            for i in 0..n {
+                if srv.submit_blocking(i, vec![i as f32]).is_err() {
+                    return Err("server closed during submit".to_string());
+                }
+            }
+            srv.shutdown();
+            let mut ids = Vec::new();
+            while let Some(c) = srv.next_completion() {
+                if c.output[0] != c.id as f32 {
+                    return Err(format!("output mismatch for id {}", c.id));
+                }
+                ids.push(c.id);
+            }
+            ids.sort_unstable();
+            let want: Vec<u64> = (0..n).collect();
+            if ids == want {
+                Ok(())
+            } else {
+                Err(format!("window {window}: ids {ids:?} != 0..{n}"))
+            }
+        },
+    );
+}
+
+/// Panics (poisoned-thread style) on any batch carrying the magic value,
+/// exercising worker death with batches still in the in-flight window.
+struct PoisonBackend;
+
+impl InferBackend for PoisonBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> fcmp::Result<Vec<Vec<f32>>> {
+        if inputs.iter().any(|x| x.first() == Some(&-1.0)) {
+            panic!("poisoned batch");
+        }
+        std::thread::sleep(Duration::from_micros(200) * inputs.len() as u32);
+        Ok(inputs.iter().map(|x| vec![x.iter().sum()]).collect())
+    }
+}
+
+#[test]
+fn mid_drain_worker_panic_never_hangs_shutdown() {
+    // a worker that dies with requests queued and in flight must not
+    // deadlock the drain barrier: the other group keeps completing, the
+    // dead group's accepted-but-unserved requests are lost (bounded by
+    // its queue depth + in-flight window), and shutdown returns
+    let queue_depth = 4;
+    let mut srv = Server::deploy(
+        |_| PoisonBackend,
+        Deployment::replicated(2)
+            .with_policy(Policy::RoundRobin)
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) })
+            .with_queue_depth(queue_depth)
+            .with_window(2),
+    );
+    let n: u64 = 30;
+    let mut accepted = 0usize;
+    for i in 0..n {
+        // round-robin sends the poison into one group's worker
+        let input = if i == 0 { vec![-1.0] } else { vec![i as f32] };
+        if srv.submit(i, input).is_ok() {
+            accepted += 1;
+        }
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    assert!(srv.dead_groups() > 0, "poison must kill a worker");
+    srv.shutdown();
+    let cs = drain(&mut srv);
+    assert!(
+        !cs.iter().any(|c| c.id == 0),
+        "the poisoned request must never complete"
+    );
+    for c in &cs {
+        assert_eq!(c.output[0], c.id as f32, "wrong output for {}", c.id);
+    }
+    // everything except the poison and what died inside the dead worker's
+    // queue + window survives
+    let lost_bound = queue_depth + 2 + 1;
+    assert!(
+        cs.len() + lost_bound >= accepted,
+        "{} completions for {accepted} accepted (bound {lost_bound})",
+        cs.len()
+    );
+    assert!(cs.len() >= (n as usize) / 2, "the healthy group must keep serving");
+}
+
+#[test]
+fn steady_state_submit_path_allocates_nothing() {
+    // prime the pool above the fleet's concurrency, replay a trace, and
+    // assert every request buffer was recycled: zero pool misses means
+    // zero per-request heap allocations on the submit path
+    let input_len = 8;
+    let mut srv = Server::deploy(
+        |_| MockBackend::instant(),
+        Deployment::replicated(2)
+            .with_policy(Policy::RoundRobin)
+            .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(200) })
+            .with_queue_depth(32),
+    );
+    srv.buffer_pool().prime(64, input_len);
+    let fm = srv.replay(&uniform(300, 4000.0), input_len, 42);
+    assert_eq!(fm.completed(), 300);
+    let hot = fm.summary().hot;
+    assert_eq!(hot.submits, 300);
+    assert_eq!(hot.pool_misses, 0, "steady-state submit path allocated: {hot:?}");
+    assert!(hot.pool_hits >= 300, "every request must draw from the pool: {hot:?}");
+    assert!(hot.pool_returns > 0, "worker reaps must recycle buffers: {hot:?}");
+    srv.shutdown();
+}
+
+#[test]
+fn deeper_window_overlaps_transfer_with_compute() {
+    // one replica, balanced 3ms transfer / 3ms compute legs: window 1
+    // pays both legs per batch, window 4 hides the transfer behind the
+    // previous batch's compute, so the same load finishes markedly faster
+    let run = |window: usize| -> Duration {
+        let mut srv = Server::deploy(
+            |_| {
+                PipelinedMockBackend::overlapped(
+                    Duration::from_millis(3),
+                    Duration::from_millis(3),
+                )
+            },
+            Deployment::replicated(1)
+                .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(100) })
+                .with_queue_depth(64)
+                .with_window(window),
+        );
+        let t0 = Instant::now();
+        for i in 0..64 {
+            srv.submit_blocking(i, vec![1.0]).unwrap();
+        }
+        srv.shutdown();
+        let n = drain(&mut srv).len();
+        let wall = t0.elapsed();
+        assert_eq!(n, 64);
+        wall
+    };
+    let w1 = run(1);
+    let w4 = run(4);
+    assert!(
+        w1.as_secs_f64() >= 1.25 * w4.as_secs_f64(),
+        "window 4 ({w4:?}) must beat window 1 ({w1:?}) by ≥1.25x on balanced legs"
+    );
 }
 
 #[test]

@@ -227,6 +227,7 @@ fn chain_backpressure_sheds_at_stage_zero_only() {
                 assert!(!e.is_closed());
                 shed += 1;
             }
+            Err(SubmitError::Timeout(_)) => panic!("plain submit never waits, never times out"),
             Err(SubmitError::Closed(_)) => panic!("open chain must shed, not close"),
         }
     }
