@@ -31,20 +31,38 @@ THROUGHPUT_FIELDS = {
     "fps", "vs_analytic",
 }
 SKIP_FIELDS = {"partition_ms"}  # machine-speed dependent, not a serving metric
+INT_IDENTITY = ("replicas", "shards", "chains", "stages", "window")
 
 
-def row_key(row):
+def identity_fields(row):
+    """The fields of ``row`` that participate in its join key."""
+    out = set()
+    for k, v in row.items():
+        if isinstance(v, bool):
+            continue
+        if isinstance(v, str):
+            out.add(k)
+        elif isinstance(v, int) and k in INT_IDENTITY:
+            out.add(k)
+    return out
+
+
+def row_key(row, fields=None):
     # identity = string fields + structural cardinalities; booleans like
     # `feasible` are OUTCOMES, not identity — a feasibility flip must
-    # compare against the old row and warn, not dodge the join
+    # compare against the old row and warn, not dodge the join. When
+    # `fields` is given (schema-change reconciliation) only those
+    # identity fields are keyed on.
     parts = []
     for k in sorted(row):
         v = row[k]
         if isinstance(v, bool):
             continue
+        if fields is not None and k not in fields:
+            continue
         if isinstance(v, str):
             parts.append(f"{k}={v}")
-        elif isinstance(v, int) and k in ("replicas", "shards", "chains", "stages", "window"):
+        elif isinstance(v, int) and k in INT_IDENTITY:
             parts.append(f"{k}={v}")
     return "|".join(parts)
 
@@ -54,10 +72,53 @@ def load(path):
         rows = json.load(f)
     if not isinstance(rows, list):
         raise ValueError(f"{path}: expected a JSON array of rows")
-    return {row_key(r): r for r in rows}
+    return rows
 
 
-def main():
+def index_rows(rows, fields=None):
+    return {row_key(r, fields): r for r in rows}
+
+
+def reconcile_schemas(prev_rows, curr_rows, label):
+    """Index both row lists for the join, detecting identity-schema drift.
+
+    A bench that adds or renames an identity field (say a new ``policy``
+    column) would otherwise make *every* row key miss — each row reports
+    as "new", no metric is compared, and a regression sails through
+    silently. Instead: say so loudly with a ``::notice``, then join on
+    the intersection of the two schemas so the shared identity still
+    anchors a comparison.
+    """
+    prev_fields = set()
+    for r in prev_rows:
+        prev_fields |= identity_fields(r)
+    curr_fields = set()
+    for r in curr_rows:
+        curr_fields |= identity_fields(r)
+    if prev_fields == curr_fields:
+        return index_rows(prev_rows), index_rows(curr_rows)
+
+    added = sorted(curr_fields - prev_fields)
+    removed = sorted(prev_fields - curr_fields)
+    shared = prev_fields & curr_fields
+    print(f"::notice::{label}: bench identity schema changed — "
+          f"added {added or 'none'}, removed {removed or 'none'}; "
+          f"joining rows on the shared fields {sorted(shared)}")
+    if not shared:
+        print(f"::notice::{label}: no identity fields in common — "
+              f"treating every row as new")
+        return {}, index_rows(curr_rows)
+    prev = index_rows(prev_rows, shared)
+    curr = index_rows(curr_rows, shared)
+    collapsed = (len(prev_rows) - len(prev)) + (len(curr_rows) - len(curr))
+    if collapsed:
+        print(f"::notice::{label}: {collapsed} row(s) collapsed onto the "
+              f"shared identity key — their metrics compare against the "
+              f"last row with that key")
+    return prev, curr
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("previous")
     ap.add_argument("current")
@@ -66,7 +127,7 @@ def main():
     ap.add_argument("--tp-tol", type=float, default=0.7,
                     help="warn when throughput falls below this ratio")
     ap.add_argument("--label", default="bench")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     # A missing *baseline* is expected on the first run of a new bench
     # artifact (nothing to download yet): warn-and-pass. A missing or
@@ -76,17 +137,19 @@ def main():
               f"({args.previous}) — first run of this bench, comparison skipped")
         return 0
     try:
-        prev = load(args.previous)
+        prev_rows = load(args.previous)
     except (OSError, ValueError) as e:
         print(f"::warning::{args.label}: baseline unreadable ({e}) — "
               f"comparison skipped")
         return 0
     try:
-        curr = load(args.current)
+        curr_rows = load(args.current)
     except (OSError, ValueError) as e:
         print(f"::error::{args.label}: current bench artifact missing or "
               f"corrupt ({e})")
         return 1
+
+    prev, curr = reconcile_schemas(prev_rows, curr_rows, args.label)
 
     warned = 0
     for key, crow in sorted(curr.items()):

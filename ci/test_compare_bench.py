@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Tests for compare_bench.py — in particular the identity-schema-change
+path: a bench that renames or adds an identity field must emit an
+explicit ``::notice`` and still compare metrics on the shared fields,
+never silently report every row as "new".
+
+Runs under pytest, or standalone: ``python3 ci/test_compare_bench.py``.
+"""
+
+import io
+import json
+import os
+import sys
+import tempfile
+from contextlib import redirect_stdout
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import compare_bench  # noqa: E402
+
+
+def _run(prev_rows, curr_rows, *extra):
+    """Drive main() over two temp artifacts; return (exit_code, stdout)."""
+    with tempfile.TemporaryDirectory() as td:
+        prev = os.path.join(td, "prev.json")
+        curr = os.path.join(td, "curr.json")
+        with open(prev, "w") as f:
+            json.dump(prev_rows, f)
+        with open(curr, "w") as f:
+            json.dump(curr_rows, f)
+        buf = io.StringIO()
+        with redirect_stdout(buf):
+            code = compare_bench.main([prev, curr, "--label", "t", *extra])
+        return code, buf.getvalue()
+
+
+def test_identical_schema_flags_regression():
+    prev = [{"arm": "a", "chains": 2, "throughput_fps": 1000.0, "p99_ms": 5.0}]
+    curr = [{"arm": "a", "chains": 2, "throughput_fps": 100.0, "p99_ms": 50.0}]
+    code, out = _run(prev, curr)
+    assert code == 0
+    assert "::warning::t regression" in out
+    assert "throughput_fps" in out and "p99_ms" in out
+    assert "schema changed" not in out
+
+
+def test_schema_change_emits_notice_and_still_compares():
+    # the old artifact had no `policy` identity column; the new one does.
+    # Before the fix every row was "new" and the 10x throughput collapse
+    # sailed through without a single warning.
+    prev = [{"arm": "a", "chains": 2, "throughput_fps": 1000.0}]
+    curr = [{"arm": "a", "policy": "rr", "chains": 2, "throughput_fps": 100.0}]
+    code, out = _run(prev, curr)
+    assert code == 0
+    assert "::notice::t: bench identity schema changed" in out
+    assert "added ['policy']" in out
+    assert "::warning::t regression" in out and "throughput_fps" in out
+    assert "new row" not in out
+
+
+def test_schema_change_removed_field_reported():
+    prev = [{"arm": "a", "trace": "poisson", "completed": 500}]
+    curr = [{"arm": "a", "completed": 480}]
+    code, out = _run(prev, curr)
+    assert code == 0
+    assert "removed ['trace']" in out
+    # 480/500 = 0.96 is inside --tp-tol: joined on the shared field, no warn
+    assert "::warning::" not in out
+
+
+def test_disjoint_schemas_treat_rows_as_new():
+    prev = [{"old_name": "x", "fps": 10.0}]
+    curr = [{"new_name": "y", "fps": 10.0}]
+    code, out = _run(prev, curr)
+    assert code == 0
+    assert "no identity fields in common" in out
+    assert "new row" in out
+
+
+def test_unchanged_rows_stay_quiet():
+    rows = [
+        {"arm": "a", "chains": 2, "throughput_fps": 1000.0, "p99_ms": 5.0},
+        {"arm": "b", "chains": 4, "throughput_fps": 2000.0, "p99_ms": 3.0},
+    ]
+    code, out = _run(rows, rows)
+    assert code == 0
+    assert "::warning::" not in out
+    assert "compared 2 rows" in out
+
+
+def test_missing_baseline_is_a_pass():
+    with tempfile.TemporaryDirectory() as td:
+        curr = os.path.join(td, "curr.json")
+        with open(curr, "w") as f:
+            json.dump([{"arm": "a", "fps": 1.0}], f)
+        buf = io.StringIO()
+        with redirect_stdout(buf):
+            code = compare_bench.main(
+                [os.path.join(td, "nope.json"), curr, "--label", "t"])
+        assert code == 0
+        assert "no baseline artifact" in buf.getvalue()
+
+
+def test_corrupt_current_fails():
+    with tempfile.TemporaryDirectory() as td:
+        prev = os.path.join(td, "prev.json")
+        curr = os.path.join(td, "curr.json")
+        with open(prev, "w") as f:
+            json.dump([], f)
+        with open(curr, "w") as f:
+            f.write("{not json")
+        buf = io.StringIO()
+        with redirect_stdout(buf):
+            code = compare_bench.main([prev, curr, "--label", "t"])
+        assert code == 1
+        assert "::error::" in buf.getvalue()
+
+
+def test_bool_outcome_flip_warns_despite_schema_change():
+    prev = [{"arm": "a", "feasible": True, "fps": 5.0}]
+    curr = [{"arm": "a", "mode": "packed", "feasible": False, "fps": 5.0}]
+    code, out = _run(prev, curr)
+    assert code == 0
+    assert "flipped true -> false" in out
+
+
+def main():
+    failures = 0
+    tests = [(n, f) for n, f in sorted(globals().items())
+             if n.startswith("test_") and callable(f)]
+    for name, fn in tests:
+        try:
+            fn()
+            print(f"ok   {name}")
+        except AssertionError as e:
+            failures += 1
+            print(f"FAIL {name}: {e}")
+    print(f"{len(tests) - failures}/{len(tests)} passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,280 @@
+//! Bench: the discrete-event fleet simulator at scales the thread-backed
+//! server cannot reach — the point of simulating is sweeping topologies
+//! that would need thousands of OS threads and minutes of wall time.
+//!
+//! Arms:
+//!
+//! * `flat-rr-1000`  — 1000 flat chain groups, round-robin, 1M requests.
+//!   The acceptance arm: it must finish in under 10 s of wall clock
+//!   (checked loudly on stderr), and it runs at FULL size even under
+//!   `--smoke` — shrinking it would defeat the point.
+//! * `flat-jsq`      — join-shortest-queue over a smaller fleet (JSQ
+//!   inspects every group's load per arrival, so it is the policy whose
+//!   dispatch cost grows with fleet size);
+//! * `chain-swrr`    — replicated 4-stage chains under the weighted
+//!   policy (stresses inter-stage links, blocked-forward backpressure
+//!   and in-flight windows);
+//! * `auto-diurnal`  — a replicated-chain fleet with the autoscaler and
+//!   virtual-tick control plane riding a diurnal trace (the control-path
+//!   arm; must scale out at the peak and back in at the trough).
+//!
+//! Flags: `--smoke` shrinks the non-acceptance arms for CI; `--json`
+//! writes the cells to `BENCH_fleetsim.json`.
+
+use std::path::Path;
+use std::time::Duration;
+
+use fcmp::control::{AutoscalerConfig, SignalConfig};
+use fcmp::coordinator::{diurnal, poisson, BatcherConfig, Deployment, Policy, Trace};
+use fcmp::sim::{FleetSim, SimBackend, SimConfig, SimControl};
+use fcmp::util::args::Args;
+use fcmp::util::bench::Table;
+
+struct Cell {
+    arm: &'static str,
+    policy: &'static str,
+    trace: &'static str,
+    chains: usize,
+    stages: usize,
+    window: usize,
+    requests: usize,
+    completed: usize,
+    shed: usize,
+    virtual_s: f64,
+    wall_s: f64,
+    sim_fps: f64,
+    events: u64,
+    p99_ms: f64,
+    groups_peak: usize,
+    groups_final: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_arm(
+    arm: &'static str,
+    plan: Deployment,
+    backend: SimBackend,
+    standby: usize,
+    control: Option<SimControl>,
+    trace: &Trace,
+    trace_name: &'static str,
+) -> Cell {
+    let chains = plan.groups.len();
+    let stages = plan.groups.first().map_or(1, |g| g.stages);
+    let window = plan.window;
+    let policy = plan.policy.name();
+    let cfg = SimConfig { input_len: 4, seed: 42, control };
+    let t0 = std::time::Instant::now();
+    let rep = FleetSim::uniform_with_standby(plan, backend, standby, cfg).run(trace);
+    let wall = t0.elapsed().as_secs_f64();
+    let p99_ms = rep.summary.fleet.as_ref().map_or(0.0, |f| f.latency_ms.p99);
+    Cell {
+        arm,
+        policy,
+        trace: trace_name,
+        chains,
+        stages,
+        window,
+        requests: trace.arrivals_s.len(),
+        completed: rep.completed,
+        shed: rep.shed,
+        virtual_s: rep.sim_seconds,
+        wall_s: wall,
+        sim_fps: rep.submitted as f64 / wall.max(1e-9),
+        events: rep.events_processed,
+        p99_ms,
+        groups_peak: rep.max_groups_seen,
+        groups_final: rep.final_groups,
+    }
+}
+
+fn cells_json(cells: &[Cell]) -> String {
+    let mut out = String::from("[");
+    for (k, c) in cells.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"arm\":{:?},\"policy\":{:?},\"trace\":{:?},\"chains\":{},\"stages\":{},\
+             \"window\":{},\"requests\":{},\"completed\":{},\"shed\":{},\
+             \"virtual_s\":{:.4},\"wall_s\":{:.3},\"sim_fps\":{:.0},\"events\":{},\
+             \"p99_ms\":{:.3},\"groups_peak\":{},\"groups_final\":{}}}",
+            c.arm,
+            c.policy,
+            c.trace,
+            c.chains,
+            c.stages,
+            c.window,
+            c.requests,
+            c.completed,
+            c.shed,
+            c.virtual_s,
+            c.wall_s,
+            c.sim_fps,
+            c.events,
+            c.p99_ms,
+            c.groups_peak,
+            c.groups_final
+        ));
+    }
+    out.push(']');
+    out
+}
+
+fn mock(per_item_us: f64) -> SimBackend {
+    SimBackend::Mock {
+        base: Duration::ZERO,
+        per_item: Duration::from_secs_f64(per_item_us * 1e-6),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    let batcher = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) };
+
+    // acceptance arm: 1000 groups x 1M requests, full size even in smoke.
+    // Each group serves 5000 req/s (200 µs/item); RR spreads 2M req/s
+    // offered to 2000 req/s per group, comfortably under capacity.
+    let big_trace = poisson(1_000_000, 2.0e6, 42);
+    let big = run_arm(
+        "flat-rr-1000",
+        Deployment::replicated(1000)
+            .with_policy(Policy::RoundRobin)
+            .with_batcher(batcher)
+            .with_queue_depth(64)
+            .with_window(2),
+        mock(200.0),
+        0,
+        None,
+        &big_trace,
+        "poisson",
+    );
+    if big.wall_s >= 10.0 {
+        eprintln!(
+            "WARNING flat-rr-1000 took {:.1} s wall for {} requests — the \
+             acceptance bound is < 10 s (noisy runner, or a sim perf regression)",
+            big.wall_s, big.requests
+        );
+    }
+
+    // JSQ pays O(groups) per arrival, so its fleet stays moderate
+    let (jsq_groups, jsq_n) = if smoke { (64, 100_000) } else { (128, 400_000) };
+    let jsq_trace = poisson(jsq_n, 2_000.0 * jsq_groups as f64, 43);
+    let jsq = run_arm(
+        "flat-jsq",
+        Deployment::replicated(jsq_groups)
+            .with_policy(Policy::JoinShortestQueue)
+            .with_batcher(batcher)
+            .with_queue_depth(64)
+            .with_window(2),
+        mock(200.0),
+        0,
+        None,
+        &jsq_trace,
+        "poisson",
+    );
+
+    // replicated 4-stage chains under SWRR: per-stage 50 µs, so a chain
+    // still sustains 5000 req/s end to end (bottleneck = slowest stage)
+    let (chain_groups, chain_n) = if smoke { (32, 100_000) } else { (128, 400_000) };
+    let chain_trace = poisson(chain_n, 2_000.0 * chain_groups as f64, 44);
+    let chain = run_arm(
+        "chain-swrr",
+        Deployment::replicated_chains(chain_groups, 4)
+            .with_policy(Policy::Weighted(vec![1.0; chain_groups]))
+            .with_batcher(batcher)
+            .with_queue_depth(64)
+            .with_window(2),
+        mock(50.0),
+        0,
+        None,
+        &chain_trace,
+        "poisson",
+    );
+
+    // control-path arm: 2-stage chains, 1 active + 3 standby, diurnal
+    // trace whose peak (2000 req/s) overruns one chain (1000 req/s at
+    // 1 ms/item) so the autoscaler must scale out, then back in at the
+    // trough (500 req/s)
+    let auto_n = if smoke { 20_000 } else { 60_000 };
+    let auto_trace = diurnal(auto_n, 500.0, 2_000.0, 8.0, 45);
+    let auto = run_arm(
+        "auto-diurnal",
+        Deployment::replicated_chains(1, 2)
+            .with_policy(Policy::RoundRobin)
+            .with_batcher(batcher)
+            .with_queue_depth(64)
+            .with_window(2),
+        mock(500.0),
+        3,
+        Some(SimControl {
+            tick: Duration::from_millis(25),
+            signal: SignalConfig { window_ticks: 3 },
+            autoscaler: Some(AutoscalerConfig {
+                min_groups: 1,
+                max_groups: 4,
+                shed_out: 0.02,
+                p99_out_ms: f64::INFINITY,
+                util_in: 0.25,
+                cooldown_ticks: 3,
+                step: 1,
+            }),
+            slo: None,
+            trailing_ticks: 8,
+        }),
+        &auto_trace,
+        "diurnal",
+    );
+    if auto.groups_peak <= 1 {
+        eprintln!(
+            "WARNING auto-diurnal never scaled past 1 chain group under a 2x \
+             overload peak — the simulated control plane is not reacting"
+        );
+    }
+    if auto.groups_final >= auto.groups_peak && auto.groups_peak > 1 {
+        eprintln!(
+            "WARNING auto-diurnal finished at {} groups (peak {}) — expected a \
+             scale-in at the trough",
+            auto.groups_final, auto.groups_peak
+        );
+    }
+
+    let cells = vec![big, jsq, chain, auto];
+
+    let mut t = Table::new([
+        "arm", "policy", "chains", "stages", "req", "completed", "shed", "virt s",
+        "wall s", "sim req/s", "events", "p99 ms", "g peak", "g final",
+    ]);
+    for c in &cells {
+        t.row([
+            c.arm.to_string(),
+            c.policy.to_string(),
+            format!("{}", c.chains),
+            format!("{}", c.stages),
+            format!("{}", c.requests),
+            format!("{}", c.completed),
+            format!("{}", c.shed),
+            format!("{:.3}", c.virtual_s),
+            format!("{:.2}", c.wall_s),
+            format!("{:.0}", c.sim_fps),
+            format!("{}", c.events),
+            format!("{:.2}", c.p99_ms),
+            format!("{}", c.groups_peak),
+            format!("{}", c.groups_final),
+        ]);
+    }
+    println!("== Fleet DES sweep (virtual-clock Deployment execution) ==");
+    println!("{}", t.render());
+    println!(
+        "headline: {} requests across {} chain groups in {:.2} s wall \
+         ({:.0} simulated req/s of wall time)",
+        big.requests, big.chains, big.wall_s, big.sim_fps
+    );
+
+    if args.has_flag("json") {
+        let path = Path::new("BENCH_fleetsim.json");
+        std::fs::write(path, cells_json(&cells)).expect("writing BENCH_fleetsim.json");
+        println!("wrote {} ({} cells)", path.display(), cells.len());
+    }
+}

@@ -1,0 +1,84 @@
+//! Dispatch-order seam shared by the thread-backed router and the
+//! discrete-event fleet simulator.
+//!
+//! [`crate::coordinator::Server`]'s lock-free `RouterCore` and
+//! [`crate::sim::fleet::FleetSim`] must pick chain groups in *exactly*
+//! the same order or differential tests can never line up accepted/shed
+//! counts. The two functions here are that order, factored out of the
+//! router's hot path: first choice by policy (with JSQ's inline argmin
+//! over live load), then the least-loaded fallback scan used when the
+//! preferred group's queue is full. Both are pure given a load snapshot
+//! function, so the simulator can drive them from virtual-time state
+//! while the router drives them from live atomics.
+
+use super::policy::{Policy, Scheduler};
+
+/// Pick the preferred chain group for the next request.
+///
+/// Join-shortest-queue reads the load snapshot inline (argmin, strict
+/// `<`, ties to the lowest index); every other policy delegates to the
+/// scheduler's atomic state (RR cursor / SWRR credits), which never
+/// looks at load.
+pub fn preferred_group(
+    scheduler: &Scheduler,
+    groups: usize,
+    load: impl Fn(usize) -> usize,
+) -> usize {
+    match scheduler.policy() {
+        Policy::JoinShortestQueue => {
+            let mut best = 0usize;
+            let mut best_load = usize::MAX;
+            for g in 0..groups {
+                let l = load(g);
+                if l < best_load {
+                    best_load = l;
+                    best = g;
+                }
+            }
+            best
+        }
+        _ => scheduler.pick(&[]),
+    }
+}
+
+/// Fallback scan order after the preferred group rejected a request:
+/// every other group, least-loaded first, ties to the lowest index.
+pub fn fallback_order(first: usize, groups: usize, load: impl Fn(usize) -> usize) -> Vec<usize> {
+    let mut rest: Vec<usize> = (0..groups).filter(|&g| g != first).collect();
+    rest.sort_by_key(|&g| (load(g), g));
+    rest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsq_argmin_ties_low() {
+        let s = Scheduler::new(Policy::JoinShortestQueue, 4);
+        let loads = [3usize, 1, 1, 2];
+        assert_eq!(preferred_group(&s, 4, |g| loads[g]), 1);
+        // strictly-less comparison: a later equal load never wins
+        let flat = [5usize; 4];
+        assert_eq!(preferred_group(&s, 4, |g| flat[g]), 0);
+    }
+
+    #[test]
+    fn rr_ignores_load() {
+        let s = Scheduler::new(Policy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|_| preferred_group(&s, 3, |_| 9)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn fallback_sorts_by_load_then_index() {
+        let loads = [7usize, 2, 5, 2, 0];
+        assert_eq!(fallback_order(2, 5, |g| loads[g]), vec![4, 1, 3, 0]);
+    }
+
+    #[test]
+    fn fallback_excludes_first_even_when_least_loaded() {
+        let loads = [0usize, 9, 9];
+        assert_eq!(fallback_order(0, 3, |g| loads[g]), vec![1, 2]);
+    }
+}

@@ -27,6 +27,10 @@ pub struct Metrics {
     batch_sum: u64,
     started: Option<std::time::Instant>,
     finished: Option<std::time::Instant>,
+    /// Virtual-time span override (seconds). Wall-clock `Instant`s are
+    /// meaningless to a discrete-event driver, so the simulator sets the
+    /// span explicitly and `summary` prefers it over `started..finished`.
+    span_override: Option<f64>,
 }
 
 /// Final serving summary for one stream: request count, wall-clock span,
@@ -57,6 +61,16 @@ impl Metrics {
         self.started = Some(std::time::Instant::now());
     }
 
+    /// Override the measurement span with `span_s` virtual seconds.
+    ///
+    /// Virtual-time drivers ([`crate::sim::fleet::FleetSim`]) record
+    /// simulated latencies but cannot use wall-clock `Instant`s for the
+    /// wall span; this pins `wall_s` (and hence `throughput_fps`) to the
+    /// simulated clock instead.
+    pub fn set_span_s(&mut self, span_s: f64) {
+        self.span_override = Some(span_s.max(0.0));
+    }
+
     /// Record one completion: two array writes into the histogram plus
     /// counter bumps — no allocation, no growth.
     pub fn record(&mut self, latency: Duration, batch_size: usize) {
@@ -77,10 +91,10 @@ impl Metrics {
     pub fn summary(&self) -> ServeSummary {
         let n = self.count();
         assert!(n > 0, "no completions recorded");
-        let wall = match (self.started, self.finished) {
+        let wall = self.span_override.unwrap_or(match (self.started, self.finished) {
             (Some(a), Some(b)) => (b - a).as_secs_f64(),
             _ => 0.0,
-        };
+        });
         ServeSummary {
             requests: n,
             wall_s: wall,
@@ -199,6 +213,20 @@ impl FleetMetrics {
         }
         for m in &mut self.per_replica {
             m.start();
+        }
+    }
+
+    /// Override the measurement span on every collector with `span_s`
+    /// virtual seconds (see [`Metrics::set_span_s`]). Used by the
+    /// discrete-event simulator so throughput reads in simulated, not
+    /// host, time.
+    pub fn set_span_s(&mut self, span_s: f64) {
+        self.fleet.set_span_s(span_s);
+        for m in &mut self.per_group {
+            m.set_span_s(span_s);
+        }
+        for m in &mut self.per_replica {
+            m.set_span_s(span_s);
         }
     }
 

@@ -60,6 +60,7 @@
 pub mod batcher;
 pub mod capacity;
 pub mod deployment;
+pub mod dispatch;
 pub mod hotpath;
 pub mod metrics;
 pub mod policy;

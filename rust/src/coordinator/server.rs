@@ -447,21 +447,9 @@ impl RouterCore {
         if self.entries.is_empty() {
             return Err(SubmitError::Closed(req));
         }
-        let first = match self.scheduler.policy() {
-            Policy::JoinShortestQueue => {
-                let mut best = 0;
-                let mut best_load = usize::MAX;
-                for (g, e) in self.entries.iter().enumerate() {
-                    let load = e.load();
-                    if load < best_load {
-                        best_load = load;
-                        best = g;
-                    }
-                }
-                best
-            }
-            _ => self.scheduler.pick(&[]),
-        };
+        let first = super::dispatch::preferred_group(&self.scheduler, self.entries.len(), |g| {
+            self.entries[g].load()
+        });
         let mut saw_full = false;
         let mut req = match self.try_entry(first, req) {
             Ok(()) => {
@@ -476,8 +464,9 @@ impl RouterCore {
         // cold path: scan the siblings in ascending-load order (the sort
         // allocates, but only when the preferred entry already failed)
         self.counters.fallback_scans.fetch_add(1, Ordering::Relaxed);
-        let mut rest: Vec<usize> = (0..self.entries.len()).filter(|&g| g != first).collect();
-        rest.sort_by_key(|&g| (self.entries[g].load(), g));
+        let rest = super::dispatch::fallback_order(first, self.entries.len(), |g| {
+            self.entries[g].load()
+        });
         for g in rest {
             match self.try_entry(g, req) {
                 Ok(()) => return Ok(g),

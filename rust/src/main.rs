@@ -27,6 +27,15 @@
 //!               [--cooldown 3] [--tick-ms 25] [--window 3] [--slo-p99 MS]
 //!               [--kill T:G,...] [--static] [--events-out PATH]
 //!               [--require-scale-cycle]
+//! fcmp simulate [--chains 4] [--stages 1] [--requests 100000] [--rate 2000]
+//!               [--trace poisson|bursty|heavy|diurnal|uniform|file:PATH]
+//!               [--policy round-robin|jsq|weighted] [--batch 4] [--wait-ms 2]
+//!               [--queue 64] [--window 2] [--service-us 400] [--base-us 0]
+//!               [--backend mock|pipelined] [--xfer-frac 0.5] [--seed 2020]
+//!               [--autoscale] [--max 4*CHAINS] [--min 1] [--shed-out 0.02]
+//!               [--p99-out MS] [--util-in 0.25] [--cooldown 3] [--step 1]
+//!               [--tick-ms 25] [--signal-window 3] [--slo-p99 MS]
+//!               [--trailing 8] [--events-out PATH] [--require-scale-cycle]
 //! fcmp dse      --network ... --device ... [--budget 0.85]
 //! ```
 
@@ -45,6 +54,7 @@ use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
 use fcmp::nn::{cnv, resnet50, CnvVariant, Network};
 use fcmp::packing::{anneal::Anneal, ffd::Ffd, Packer};
 use fcmp::sharding::{self, LinkSpec, PartitionConfig};
+use fcmp::sim::{FleetSim, SimBackend, SimConfig, SimControl};
 use fcmp::util::args::Args;
 use fcmp::{folding, report, runtime, sim};
 use std::path::Path;
@@ -829,6 +839,140 @@ fn cfg_seed(a: &Args) -> u64 {
     a.get_usize("seed", 2020) as u64
 }
 
+/// `fcmp simulate`: the discrete-event fleet simulator — the same
+/// Deployment topology, policies, batching and control plane as `serve` /
+/// `autoscale`, but on a virtual clock: thousands of chain groups and
+/// millions of requests simulate in wall-clock seconds, bit-reproducibly.
+fn cmd_simulate(a: &Args) -> anyhow::Result<()> {
+    let chains = a.get_usize("chains", a.get_usize("replicas", 4)).max(1);
+    let stages = a.get_usize("stages", 1).max(1);
+    let n = a.get_usize("requests", 100_000);
+    let rate = a.get_f64("rate", 2000.0);
+    let seed = cfg_seed(a);
+    let trace_name = a.get_or("trace", "poisson");
+    let trace = trace_by_name(trace_name, n, rate, seed)?;
+
+    let policy = Policy::by_name(a.get_or("policy", "round-robin"), vec![1.0; chains])
+        .ok_or_else(|| anyhow::anyhow!("unknown policy (round-robin|jsq|weighted)"))?;
+    let policy_name = policy.name();
+    let batcher = BatcherConfig {
+        max_batch: a.get_usize("batch", 4),
+        max_wait: Duration::from_secs_f64(a.get_f64("wait-ms", 2.0) * 1e-3),
+    };
+    let window = a.get_usize("window", 2).max(1);
+    let plan = Deployment::replicated_chains(chains, stages)
+        .with_policy(policy)
+        .with_batcher(batcher)
+        .with_queue_depth(a.get_usize("queue", 64))
+        .with_window(window);
+
+    // one chain splits the model across its stages, so each stage serves
+    // in 1/k of the full-network interval (the serve-path calibration)
+    let per_item = Duration::from_secs_f64(a.get_f64("service-us", 400.0) * 1e-6 / stages as f64);
+    let backend = match a.get_or("backend", "mock") {
+        "mock" => SimBackend::Mock {
+            base: Duration::from_secs_f64(a.get_f64("base-us", 0.0) * 1e-6),
+            per_item,
+        },
+        "pipelined" => {
+            let f = a.get_f64("xfer-frac", 0.5).clamp(0.0, 1.0);
+            SimBackend::Pipelined {
+                xfer_per_item: per_item.mul_f64(f),
+                compute_per_item: per_item.mul_f64(1.0 - f),
+            }
+        }
+        other => anyhow::bail!("unknown backend {other} (mock|pipelined)"),
+    };
+
+    let autoscale = a.has_flag("autoscale");
+    let max_groups = a.get_usize("max", if autoscale { chains.max(1) * 4 } else { chains });
+    let slo = a.get("slo-p99").map(|_| SloConfig {
+        p99_budget_ms: a.get_f64("slo-p99", 50.0),
+        ..SloConfig::default()
+    });
+    let control = if autoscale || slo.is_some() {
+        Some(SimControl {
+            tick: Duration::from_millis(a.get_usize("tick-ms", 25) as u64),
+            signal: SignalConfig { window_ticks: a.get_usize("signal-window", 3) },
+            autoscaler: autoscale.then(|| AutoscalerConfig {
+                min_groups: a.get_usize("min", 1),
+                max_groups,
+                shed_out: a.get_f64("shed-out", 0.02),
+                p99_out_ms: a.get_f64("p99-out", f64::INFINITY),
+                util_in: a.get_f64("util-in", 0.25),
+                cooldown_ticks: a.get_usize("cooldown", 3),
+                step: a.get_usize("step", 1),
+            }),
+            slo,
+            trailing_ticks: a.get_usize("trailing", 8),
+        })
+    } else {
+        None
+    };
+    let standby = max_groups.saturating_sub(chains);
+    let cfg = SimConfig { input_len: a.get_usize("input-len", 8), seed, control };
+
+    println!(
+        "simulate: {chains} chain group(s) x {stages} stage(s) (+{standby} standby), \
+         policy {policy_name}, trace {trace_name} ({:.0} req/s offered), window {window}",
+        trace.offered_rate()
+    );
+    let t0 = std::time::Instant::now();
+    let rep = FleetSim::uniform_with_standby(plan, backend, standby, cfg).run(&trace);
+    let wall = t0.elapsed();
+
+    if !rep.events.is_empty() {
+        println!("events:");
+        for e in &rep.events {
+            println!("  {e}");
+        }
+    }
+    if let Some(out) = a.get("events-out") {
+        save_events(&rep.events, Path::new(out))?;
+        println!("journaled {} control events to {out}", rep.events.len());
+    }
+    println!(
+        "result: submitted {} shed {} completed {} | chain groups {} -> {} (peak {}) \
+         over {} ticks",
+        rep.submitted,
+        rep.shed,
+        rep.completed,
+        rep.initial_groups,
+        rep.final_groups,
+        rep.max_groups_seen,
+        rep.ticks
+    );
+    println!(
+        "clock: {:.3} simulated s in {:.0} ms wall ({} events, {:.0} req/s of wall time)",
+        rep.sim_seconds,
+        wall.as_secs_f64() * 1e3,
+        rep.events_processed,
+        rep.submitted as f64 / wall.as_secs_f64().max(1e-9)
+    );
+    println!("{}", rep.summary);
+
+    if a.has_flag("require-scale-cycle") {
+        let first_out = rep.events.iter().find_map(|e| match e.kind {
+            fcmp::control::ControlEventKind::ScaleOut { .. } => Some(e.tick),
+            _ => None,
+        });
+        let first_in = rep.events.iter().find_map(|e| match e.kind {
+            fcmp::control::ControlEventKind::ScaleIn { .. } => Some(e.tick),
+            _ => None,
+        });
+        let (out_tick, in_tick) = match (first_out, first_in) {
+            (Some(o), Some(i)) => (o, i),
+            _ => anyhow::bail!("--require-scale-cycle: no scale-out/scale-in pair occurred"),
+        };
+        anyhow::ensure!(
+            out_tick < in_tick,
+            "--require-scale-cycle: scale-in (tick {in_tick}) preceded scale-out (tick {out_tick})"
+        );
+        println!("scale cycle OK: out at tick {out_tick}, in at tick {in_tick}");
+    }
+    Ok(())
+}
+
 fn cmd_floorplan(a: &Args) -> anyhow::Result<()> {
     let net = network_by_name(a.get_or("network", "rn50-w1"))
         .ok_or_else(|| anyhow::anyhow!("unknown network"))?;
@@ -922,6 +1066,16 @@ subcommands:
           journals the ControlEvent history in the trace file convention,
           --require-scale-cycle makes the run fail unless it scaled out
           then back in (CI smoke)
+  simulate  discrete-event fleet simulator: the serve/autoscale Deployment
+          semantics (bounded queues, batchers, in-flight windows,
+          round-robin|jsq|weighted admission, chain links, virtual-tick
+          control plane) on a virtual clock — thousands of chain groups
+          and millions of requests in wall-clock seconds, bit-reproducible
+          for a given --seed; --chains N x --stages k [--max G] standby
+          pool, --backend mock|pipelined [--xfer-frac], --service-us per
+          request, --autoscale [--min/--shed-out/--p99-out/--util-in/
+          --cooldown/--step], --slo-p99 MS, --tick-ms/--signal-window/
+          --trailing, --events-out PATH, --require-scale-cycle (CI smoke)
   dse     folding design-space exploration (--network, --device, --budget)
   floorplan  SLR floorplan of a network on a multi-die device (Fig. 5)";
 
@@ -936,6 +1090,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("shard") => cmd_shard(&args),
         Some("autoscale") => cmd_autoscale(&args),
+        Some("simulate") => cmd_simulate(&args),
         Some("dse") => cmd_dse(&args),
         Some("floorplan") => cmd_floorplan(&args),
         _ => {

@@ -1,0 +1,161 @@
+//! Deterministic discrete-event queue: the clock core of the fleet
+//! simulator ([`crate::sim::fleet`]).
+//!
+//! Events are ordered by `(time_ns, seq)` — virtual nanoseconds first,
+//! then a monotone submission sequence number breaking same-instant ties
+//! FIFO. The tie-break is what makes the simulator bit-deterministic:
+//! two events scheduled for the same instant always pop in the order
+//! they were scheduled, independent of heap internals, platform, or how
+//! many OS threads the test harness runs. [`EventQueue::pop`] asserts
+//! that popped timestamps never go backwards — the no-event-processed-
+//! out-of-order invariant the fuzz suite leans on.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scheduled entry. Ordering ignores the payload entirely: the heap
+/// is keyed on `(time_ns, seq)` alone, so the payload type needs no
+/// `Ord`.
+struct Entry<E> {
+    time_ns: u64,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_ns == other.time_ns && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse so the earliest (time, seq)
+        // pops first
+        (other.time_ns, other.seq).cmp(&(self.time_ns, self.seq))
+    }
+}
+
+/// A deterministic min-queue of timestamped events.
+///
+/// `schedule` may insert at any (non-past-relative-to-pop) time;
+/// same-time events pop in scheduling order. The queue tracks the last
+/// popped timestamp and panics if time would run backwards — a
+/// scheduling bug in the driver, never a recoverable condition.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    next_seq: u64,
+    last_popped: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    /// An empty queue at virtual time zero.
+    pub fn new() -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0, last_popped: 0 }
+    }
+
+    /// Schedule `ev` at `time_ns` and return its sequence number (the
+    /// FIFO tie-break key; also usable as a stable event identity).
+    pub fn schedule(&mut self, time_ns: u64, ev: E) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry { time_ns, seq, ev });
+        seq
+    }
+
+    /// Pop the earliest event as `(time_ns, seq, event)`.
+    ///
+    /// # Panics
+    /// If the popped timestamp precedes the previously popped one (the
+    /// driver scheduled an event in the past).
+    pub fn pop(&mut self) -> Option<(u64, u64, E)> {
+        let e = self.heap.pop()?;
+        assert!(
+            e.time_ns >= self.last_popped,
+            "event time ran backwards: {} after {}",
+            e.time_ns,
+            self.last_popped
+        );
+        self.last_popped = e.time_ns;
+        Some((e.time_ns, e.seq, e.ev))
+    }
+
+    /// Timestamp of the next event, if any.
+    pub fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.time_ns)
+    }
+
+    /// Events currently scheduled.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no events are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30, "c");
+        q.schedule(10, "a");
+        q.schedule(20, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, _, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn same_instant_ties_break_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.schedule(5, i);
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|(_, _, e)| e)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn interleaved_schedules_stay_monotone() {
+        let mut q = EventQueue::new();
+        q.schedule(10, 0u64);
+        let (t, _, _) = q.pop().unwrap();
+        assert_eq!(t, 10);
+        // scheduling at the current time is fine; popping stays monotone
+        q.schedule(10, 1);
+        q.schedule(15, 2);
+        assert_eq!(q.peek_time(), Some(10));
+        assert_eq!(q.pop().unwrap().0, 10);
+        assert_eq!(q.pop().unwrap().0, 15);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "ran backwards")]
+    fn scheduling_in_the_past_is_caught_at_pop() {
+        let mut q = EventQueue::new();
+        q.schedule(100, ());
+        q.pop();
+        q.schedule(50, ());
+        q.pop();
+    }
+}

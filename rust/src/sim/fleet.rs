@@ -1,0 +1,939 @@
+//! Deterministic discrete-event simulator for an entire [`Deployment`].
+//!
+//! The thread-backed [`crate::coordinator::Server`] runs every stage of
+//! every chain group as a real OS thread, which caps experiments at tens
+//! of workers and seconds of simulated time. `FleetSim` executes the
+//! *same* fleet semantics — ordered chain groups, per-stage bounded
+//! queues, size-or-deadline batchers, per-worker in-flight windows,
+//! RR/JSQ/SWRR admission via the shared
+//! [`crate::coordinator::dispatch`] seam, store-and-forward or
+//! overlapped micro-batch stage links, and the control plane's
+//! [`SignalTap`]/[`Autoscaler`]/[`SloController`] on simulated ticks —
+//! as a single-threaded event loop over a virtual nanosecond clock
+//! ([`crate::sim::event::EventQueue`]). A thousand chain groups over a
+//! million requests simulate in wall-clock seconds, and the run is
+//! bit-deterministic: same seed + trace ⇒ identical event order,
+//! [`FleetSummary`] and [`ControlEvent`] journal, regardless of host
+//! load or test-harness threading.
+//!
+//! ## Clock model
+//!
+//! Virtual time is `u64` nanoseconds. Three event kinds drive the loop:
+//! trace **arrivals** (admission + synthetic input draw, mirroring
+//! `Server::replay`), worker **wakes** (batch deadline expiry, transfer
+//! completion, batch ready — the worker state machine re-evaluates
+//! idempotently at each wake), and control **ticks** (signal window
+//! close + autoscale/SLO actuation, mirroring `control::run_loop`'s
+//! arrival/drain/trailing phases). Same-instant events process in
+//! scheduling order, which is itself deterministic.
+//!
+//! ## Sharing seam with the thread-backed coordinator
+//!
+//! Nothing policy-shaped is duplicated: group choice and fallback order
+//! come from [`crate::coordinator::dispatch`] (the router's own hot
+//! path), batching settings are [`BatcherConfig`] snapshots with the
+//! same µs truncation as `SharedBatcher`, metrics flow through the real
+//! [`FleetMetrics`] (with a virtual-time span override), and the
+//! control loop drives the real [`SignalTap`], [`Autoscaler`] and
+//! [`SloController`] — so a controller change is exercised identically
+//! by both backends. `tests/fleet_sim.rs` keeps the two backends honest
+//! with differential runs on small fleets.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::control::{
+    Autoscaler, AutoscalerConfig, ControlEvent, ControlEventKind, ScaleDecision, SignalConfig,
+    SignalTap, SloConfig, SloController,
+};
+use crate::coordinator::dispatch::{fallback_order, preferred_group};
+use crate::coordinator::{
+    chain_fps, BatcherConfig, Completion, Deployment, FleetMetrics, FleetSummary, Policy,
+    Scheduler, Trace,
+};
+use crate::sim::event::EventQueue;
+use crate::util::rng::Rng;
+
+/// Service-time model for one simulated worker, mirroring the two mock
+/// backends the thread-backed server tests with.
+#[derive(Clone, Copy, Debug)]
+pub enum SimBackend {
+    /// Store-and-forward: the worker blocks for the whole batch service
+    /// (`base + per_item · k`), exactly like
+    /// [`crate::coordinator::MockBackend`] — the in-flight window never
+    /// fills because the worker is busy until the batch is done.
+    Mock {
+        /// Fixed per-batch overhead.
+        base: Duration,
+        /// Marginal service time per batched frame.
+        per_item: Duration,
+    },
+    /// Overlapped micro-batch transfer: the worker is only occupied for
+    /// the transfer (`xfer_per_item · k`), then the batch computes on a
+    /// serial device queue (`compute_per_item · k` after the device
+    /// frees), exactly like
+    /// [`crate::coordinator::PipelinedMockBackend`] — up to
+    /// [`Deployment::window`] batches overlap transfer with compute.
+    Pipelined {
+        /// Per-frame host→device transfer time (occupies the worker).
+        xfer_per_item: Duration,
+        /// Per-frame device compute time (overlaps the next transfer).
+        compute_per_item: Duration,
+    },
+}
+
+impl SimBackend {
+    /// Effective per-frame service interval — the analytic capacity
+    /// figure used for SWRR weights, SLO chain co-tuning and
+    /// slowest-first scale-in ranking.
+    pub fn service_per_item(&self) -> Duration {
+        match *self {
+            SimBackend::Mock { per_item, .. } => per_item,
+            SimBackend::Pipelined { xfer_per_item, compute_per_item } => {
+                xfer_per_item.max(compute_per_item)
+            }
+        }
+    }
+}
+
+/// Virtual-tick control plane for a simulated fleet, mirroring
+/// [`crate::control::LoopConfig`]'s knobs.
+#[derive(Clone, Debug)]
+pub struct SimControl {
+    /// Virtual control-tick period.
+    pub tick: Duration,
+    /// Signal-window configuration for the [`SignalTap`].
+    pub signal: SignalConfig,
+    /// Whole-group autoscaler; `None` disables scaling.
+    pub autoscaler: Option<AutoscalerConfig>,
+    /// SLO batching-window controller; `None` disables retuning.
+    pub slo: Option<SloConfig>,
+    /// Idle ticks appended after the fleet drains (the thread loop's
+    /// trailing scale-in observation window).
+    pub trailing_ticks: usize,
+}
+
+impl Default for SimControl {
+    fn default() -> SimControl {
+        SimControl {
+            tick: Duration::from_millis(25),
+            signal: SignalConfig::default(),
+            autoscaler: None,
+            slo: None,
+            trailing_ticks: 8,
+        }
+    }
+}
+
+/// Simulator run configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Synthetic input length per request (mirrors `Server::replay`'s
+    /// `input_len`: the RNG draws `input_len` bytes per arrival).
+    pub input_len: usize,
+    /// Seed for the synthetic-input stream.
+    pub seed: u64,
+    /// Control plane on virtual ticks; `None` runs open-loop.
+    pub control: Option<SimControl>,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig { input_len: 8, seed: 2020, control: None }
+    }
+}
+
+/// Result of a simulated fleet run: the same [`FleetSummary`] and
+/// [`ControlEvent`] journal shapes the thread-backed server emits, plus
+/// simulator-side counters the fuzz/determinism suites assert on.
+#[derive(Debug)]
+pub struct SimReport {
+    /// Fleet/group/stage latency + throughput summary (virtual-time
+    /// span). Groups are indexed by *backend slot* (standby slots
+    /// included), so rows stay stable across scale events.
+    pub summary: FleetSummary,
+    /// Journal of autoscale/SLO actuations, in tick order.
+    pub events: Vec<ControlEvent>,
+    /// Control ticks executed.
+    pub ticks: usize,
+    /// Routable chain groups at t = 0.
+    pub initial_groups: usize,
+    /// Routable chain groups when the run ended.
+    pub final_groups: usize,
+    /// High-water mark of routable chain groups.
+    pub max_groups_seen: usize,
+    /// Requests accepted by admission control.
+    pub submitted: usize,
+    /// Requests shed (every routable entry queue full).
+    pub shed: usize,
+    /// Requests completed (must equal `submitted` at end of run).
+    pub completed: usize,
+    /// Virtual seconds elapsed at the last event.
+    pub sim_seconds: f64,
+    /// Events processed by the loop.
+    pub events_processed: u64,
+    /// FNV-1a hash over the processed `(time, seq, kind)` stream — a
+    /// fingerprint of the exact event ordering for determinism tests.
+    pub order_hash: u64,
+    /// High-water mark of any stage's bounded-queue occupancy.
+    pub max_queue_seen: usize,
+}
+
+/// One request in flight through the simulated fleet. Only the payload
+/// *sum* is carried: every simulated stage computes `[Σ inputs, k]` like
+/// the mock backends, so the scalar is enough to reproduce outputs.
+#[derive(Debug)]
+struct SimReq {
+    id: u64,
+    sum: f32,
+    arrival: u64,
+    stage_arrival: u64,
+    stage_latencies: Vec<Duration>,
+    stage_batches: Vec<usize>,
+}
+
+/// A submitted batch waiting on its virtual completion time.
+struct Flight {
+    ready_at: u64,
+    reqs: Vec<SimReq>,
+}
+
+/// An open batch-formation window (the batcher's gather phase).
+struct Gather {
+    reqs: Vec<SimReq>,
+    /// Closes at this time even if under-full (`max_wait` expiry).
+    deadline: u64,
+    /// `max_batch` snapshot taken when the gather opened (live retunes
+    /// apply from the *next* batch, like `SharedBatcher`).
+    cap: usize,
+}
+
+/// One simulated stage worker: bounded entry queue, batcher, in-flight
+/// window and the store-and-forward / overlapped service model.
+struct SimWorker {
+    backend: SimBackend,
+    cfg: BatcherConfig,
+    queue: VecDeque<SimReq>,
+    gather: Option<Gather>,
+    in_flight: VecDeque<Flight>,
+    busy_until: u64,
+    device_free: u64,
+    /// Queued + gathering + executing + forwarded-but-unacked frames —
+    /// the JSQ load signal, mirroring the router's `stage_outstanding`.
+    outstanding: usize,
+    /// Frames that completed here but found the downstream queue full:
+    /// the upstream worker stalls (the thread worker blocks in `send`)
+    /// until the downstream stage drains.
+    blocked: VecDeque<SimReq>,
+}
+
+impl SimWorker {
+    fn new(backend: SimBackend, cfg: BatcherConfig) -> SimWorker {
+        SimWorker {
+            backend,
+            cfg: truncate_cfg(cfg),
+            queue: VecDeque::new(),
+            gather: None,
+            in_flight: VecDeque::new(),
+            busy_until: 0,
+            device_free: 0,
+            outstanding: 0,
+            blocked: VecDeque::new(),
+        }
+    }
+}
+
+/// One simulated chain group (a backend slot — it keeps its identity and
+/// metrics row whether routable or standby).
+struct SimGroup {
+    workers: Vec<SimWorker>,
+    /// Per-stage service interval (for SWRR weights / SLO co-tuning).
+    service: Vec<Duration>,
+    /// Analytic chain capacity (slowest-first scale-in, fastest-first
+    /// scale-out).
+    fps: f64,
+    /// MIMD state for chain SLO co-tuning (mirrors `run_loop`'s
+    /// `slo_base`).
+    slo_base: BatcherConfig,
+}
+
+enum Ev {
+    /// Trace arrival `idx` reaches admission control.
+    Arrival(usize),
+    /// Re-evaluate worker `(group, stage)` — deadline, transfer done, or
+    /// batch ready.
+    Wake(usize, usize),
+    /// Control tick: close the signal window, maybe actuate.
+    Tick,
+}
+
+fn ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+fn secs(t: u64) -> f64 {
+    t as f64 / 1e9
+}
+
+/// Mirror `SharedBatcher`'s packed representation: waits are stored at
+/// µs granularity and batch sizes clamp to 1..=65535, so the simulated
+/// worker sees exactly what a thread worker would read back.
+fn truncate_cfg(cfg: BatcherConfig) -> BatcherConfig {
+    BatcherConfig {
+        max_batch: cfg.max_batch.clamp(1, 65_535),
+        max_wait: Duration::from_micros(cfg.max_wait.as_micros().min(u64::MAX as u128) as u64),
+    }
+}
+
+/// Discrete-event executor for a [`Deployment`]. Build with
+/// [`FleetSim::new`] (per-slot backends, extra slots = autoscale
+/// standby) or [`FleetSim::uniform`], then [`FleetSim::run`] a trace.
+pub struct FleetSim {
+    groups: Vec<SimGroup>,
+    /// Routable group slots, in router order.
+    active: Vec<usize>,
+    /// Slots available to scale out into.
+    standby: Vec<usize>,
+    policy: Policy,
+    scheduler: Scheduler,
+    queue_depth: usize,
+    window: usize,
+    cfg: SimConfig,
+
+    q: EventQueue<Ev>,
+    now: u64,
+    rng: Rng,
+    trace: Vec<u64>,
+    arrivals_done: bool,
+
+    fm: FleetMetrics,
+    tap: SignalTap,
+    scaler: Option<Autoscaler>,
+    slo: Option<SloController>,
+    events: Vec<ControlEvent>,
+    trailing_left: usize,
+    tick_ns: u64,
+
+    initial_groups: usize,
+    accepted: usize,
+    shed: usize,
+    completed: usize,
+    done: Vec<bool>,
+    last_completion: u64,
+    max_groups_seen: usize,
+    max_queue_seen: usize,
+    events_processed: u64,
+    order_hash: u64,
+}
+
+impl FleetSim {
+    /// Build a simulator for `plan` with one [`SimBackend`] per worker:
+    /// `backends[g][s]` serves stage `s` of group slot `g`. Slots beyond
+    /// `plan.groups.len()` are standby capacity the autoscaler can scale
+    /// out into (they take the plan's default batcher). Panics if the
+    /// initial slots don't match the plan's stage counts.
+    pub fn new(plan: Deployment, backends: Vec<Vec<SimBackend>>, cfg: SimConfig) -> FleetSim {
+        let plan = plan.normalized();
+        assert!(
+            backends.len() >= plan.groups.len(),
+            "need at least one backend slot per plan group"
+        );
+        let mut groups = Vec::with_capacity(backends.len());
+        for (g, stages) in backends.iter().enumerate() {
+            assert!(!stages.is_empty(), "backend slot {g} has no stages");
+            let batcher = if g < plan.groups.len() {
+                assert_eq!(
+                    stages.len(),
+                    plan.groups[g].stages,
+                    "backend slot {g} stage count != plan"
+                );
+                plan.group_batcher(g)
+            } else {
+                plan.batcher
+            };
+            let workers: Vec<SimWorker> =
+                stages.iter().map(|&b| SimWorker::new(b, batcher)).collect();
+            let service: Vec<Duration> = stages.iter().map(|b| b.service_per_item()).collect();
+            let fps = chain_fps(&service);
+            groups.push(SimGroup { workers, service, fps, slo_base: truncate_cfg(batcher) });
+        }
+        let active: Vec<usize> = (0..plan.groups.len()).collect();
+        let standby: Vec<usize> = (plan.groups.len()..groups.len()).collect();
+        let shape: Vec<usize> = groups.iter().map(|g| g.workers.len()).collect();
+        let scheduler = Self::build_scheduler(&plan.policy, &groups, &active);
+        let (tap, scaler, slo, trailing, tick_ns) = match &cfg.control {
+            Some(c) => (
+                SignalTap::new(c.signal),
+                c.autoscaler.map(Autoscaler::new),
+                c.slo.map(SloController::new),
+                c.trailing_ticks,
+                ns(c.tick).max(1),
+            ),
+            None => (SignalTap::new(SignalConfig::default()), None, None, 0, 0),
+        };
+        let initial = active.len();
+        FleetSim {
+            queue_depth: plan.queue_depth,
+            window: plan.window,
+            policy: plan.policy.clone(),
+            scheduler,
+            groups,
+            active,
+            standby,
+            rng: Rng::new(cfg.seed),
+            cfg,
+            q: EventQueue::new(),
+            now: 0,
+            trace: Vec::new(),
+            arrivals_done: false,
+            fm: FleetMetrics::new(&shape),
+            tap,
+            scaler,
+            slo,
+            events: Vec::new(),
+            trailing_left: trailing,
+            tick_ns,
+            initial_groups: initial,
+            accepted: 0,
+            shed: 0,
+            completed: 0,
+            done: Vec::new(),
+            last_completion: 0,
+            max_groups_seen: initial,
+            max_queue_seen: 0,
+            events_processed: 0,
+            order_hash: 0xcbf2_9ce4_8422_2325, // FNV-1a offset basis
+        }
+    }
+
+    /// Build a simulator serving every worker with the same backend.
+    pub fn uniform(plan: Deployment, backend: SimBackend, cfg: SimConfig) -> FleetSim {
+        let plan = plan.normalized();
+        let backends = plan.group_sizes().iter().map(|&k| vec![backend; k]).collect();
+        FleetSim::new(plan, backends, cfg)
+    }
+
+    /// Build a simulator with `standby` extra single-profile group slots
+    /// beyond the plan (each shaped like the plan's first group) for the
+    /// autoscaler to grow into.
+    pub fn uniform_with_standby(
+        plan: Deployment,
+        backend: SimBackend,
+        standby: usize,
+        cfg: SimConfig,
+    ) -> FleetSim {
+        let plan = plan.normalized();
+        let stages0 = plan.groups[0].stages;
+        let mut backends: Vec<Vec<SimBackend>> =
+            plan.group_sizes().iter().map(|&k| vec![backend; k]).collect();
+        for _ in 0..standby {
+            backends.push(vec![backend; stages0]);
+        }
+        FleetSim::new(plan, backends, cfg)
+    }
+
+    fn build_scheduler(policy: &Policy, groups: &[SimGroup], active: &[usize]) -> Scheduler {
+        let policy = match policy {
+            Policy::Weighted(_) => {
+                Policy::Weighted(active.iter().map(|&gi| groups[gi].fps.max(1e-6)).collect())
+            }
+            p => p.clone(),
+        };
+        Scheduler::new(policy, active.len().max(1))
+    }
+
+    /// Run the simulator over `trace`, consuming it like
+    /// `Server::replay`: one synthetic request per arrival, admission
+    /// through the shared dispatch seam, then drain (control ticks keep
+    /// firing) plus the configured trailing ticks.
+    pub fn run(mut self, trace: &Trace) -> SimReport {
+        self.trace = trace.arrivals_s.iter().map(|&s| (s.max(0.0) * 1e9).round() as u64).collect();
+        self.done = vec![false; self.trace.len()];
+        self.fm.start();
+        self.arrivals_done = self.trace.is_empty();
+        if let Some(&t0) = self.trace.first() {
+            self.q.schedule(t0, Ev::Arrival(0));
+        }
+        if self.cfg.control.is_some() {
+            self.q.schedule(self.tick_ns, Ev::Tick);
+        }
+        while let Some((t, seq, ev)) = self.q.pop() {
+            self.now = t;
+            self.events_processed += 1;
+            match ev {
+                Ev::Arrival(idx) => {
+                    self.hash_event(t, seq, 1, idx as u64);
+                    self.on_arrival(idx);
+                }
+                Ev::Wake(g, s) => {
+                    self.hash_event(t, seq, 2, ((g as u64) << 16) | s as u64);
+                    self.advance(g, s);
+                }
+                Ev::Tick => {
+                    self.hash_event(t, seq, 3, 0);
+                    self.on_tick();
+                }
+            }
+        }
+        assert_eq!(
+            self.completed, self.accepted,
+            "accepted requests must all complete before the event queue drains"
+        );
+        let span = secs(self.last_completion);
+        self.fm.set_span_s(span);
+        SimReport {
+            summary: self.fm.summary(),
+            events: self.events,
+            ticks: self.tap.ticks(),
+            initial_groups: self.initial_groups,
+            final_groups: self.active.len(),
+            max_groups_seen: self.max_groups_seen,
+            submitted: self.accepted,
+            shed: self.shed,
+            completed: self.completed,
+            sim_seconds: secs(self.now),
+            events_processed: self.events_processed,
+            order_hash: self.order_hash,
+            max_queue_seen: self.max_queue_seen,
+        }
+    }
+
+    fn hash_event(&mut self, t: u64, seq: u64, kind: u64, payload: u64) {
+        let mut h = self.order_hash;
+        for w in [t, seq, kind, payload] {
+            for b in w.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        self.order_hash = h;
+    }
+
+    fn group_load(&self, gi: usize) -> usize {
+        self.groups[gi].workers.iter().map(|w| w.outstanding).sum()
+    }
+
+    // ---- admission -----------------------------------------------------
+
+    fn on_arrival(&mut self, idx: usize) {
+        // synthetic input draw in arrival order, mirroring replay: the
+        // RNG advances even for requests that end up shed
+        let mut sum = 0.0f32;
+        for _ in 0..self.cfg.input_len {
+            sum += self.rng.below(256) as f32;
+        }
+        let n = self.active.len();
+        let first = preferred_group(&self.scheduler, n, |i| self.group_load(self.active[i]));
+        let mut placed = self.try_admit(self.active[first], idx as u64, sum);
+        if placed.is_none() {
+            for i in fallback_order(first, n, |i| self.group_load(self.active[i])) {
+                placed = self.try_admit(self.active[i], idx as u64, sum);
+                if placed.is_some() {
+                    break;
+                }
+            }
+        }
+        match placed {
+            Some(gi) => {
+                self.accepted += 1;
+                self.fm.record_submitted();
+                self.tap.record_submitted();
+                self.advance(gi, 0);
+            }
+            None => {
+                self.shed += 1;
+                self.fm.record_shed();
+                self.tap.record_shed();
+            }
+        }
+        if idx + 1 < self.trace.len() {
+            let t = self.trace[idx + 1].max(self.now);
+            self.q.schedule(t, Ev::Arrival(idx + 1));
+        } else {
+            self.arrivals_done = true;
+        }
+    }
+
+    /// Mirror `RouterCore::try_entry`: admit into the group's stage-0
+    /// bounded queue, or report full.
+    fn try_admit(&mut self, gi: usize, id: u64, sum: f32) -> Option<usize> {
+        let depth = self.queue_depth;
+        let w = &mut self.groups[gi].workers[0];
+        if w.queue.len() >= depth {
+            return None;
+        }
+        w.outstanding += 1;
+        w.queue.push_back(SimReq {
+            id,
+            sum,
+            arrival: self.now,
+            stage_arrival: self.now,
+            stage_latencies: Vec::new(),
+            stage_batches: Vec::new(),
+        });
+        self.max_queue_seen = self.max_queue_seen.max(w.queue.len());
+        Some(gi)
+    }
+
+    // ---- worker state machine ------------------------------------------
+
+    /// Re-evaluate worker `(gi, s)` at the current virtual time. The
+    /// steps mirror one iteration of the thread worker loop: finish any
+    /// blocked downstream forward, reap ready batches oldest-first,
+    /// close a due/full gather, then open a new gather if idle work is
+    /// queued. Idempotent: spurious wakes are no-ops.
+    fn advance(&mut self, gi: usize, s: usize) {
+        loop {
+            if !self.drain_blocked(gi, s) {
+                return; // still stalled on a full downstream queue
+            }
+            if let Some(flight) = self.pop_ready_flight(gi, s) {
+                self.complete_batch(gi, s, flight.reqs);
+                continue; // forwards may have unblocked/reblocked us
+            }
+            self.feed_gather(gi, s);
+            if self.close_gather_if_due(gi, s) {
+                continue; // submit may free the queue for a new gather
+            }
+            if !self.open_gather(gi, s) {
+                return;
+            }
+        }
+    }
+
+    /// Move blocked forwards into the downstream queue while it has
+    /// room. Returns false while any remain (upstream worker stalled).
+    fn drain_blocked(&mut self, gi: usize, s: usize) -> bool {
+        if self.groups[gi].workers[s].blocked.is_empty() {
+            return true;
+        }
+        let depth = self.queue_depth;
+        let mut moved = false;
+        loop {
+            let (up, down) = self.groups[gi].workers.split_at_mut(s + 1);
+            let w = &mut up[s];
+            let d = &mut down[0];
+            if w.blocked.is_empty() || d.queue.len() >= depth {
+                break;
+            }
+            let req = w.blocked.pop_front().unwrap();
+            w.outstanding -= 1; // left the upstream stage for real
+            d.queue.push_back(req);
+            moved = true;
+        }
+        let qlen = self.groups[gi].workers[s + 1].queue.len();
+        self.max_queue_seen = self.max_queue_seen.max(qlen);
+        if moved {
+            self.advance(gi, s + 1);
+        }
+        self.groups[gi].workers[s].blocked.is_empty()
+    }
+
+    fn pop_ready_flight(&mut self, gi: usize, s: usize) -> Option<Flight> {
+        let w = &mut self.groups[gi].workers[s];
+        if w.in_flight.front().is_some_and(|f| f.ready_at <= self.now) {
+            w.in_flight.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Absorb queued frames into an open gather (the thread worker's
+    /// recv-with-deadline picks stragglers straight off the channel).
+    fn feed_gather(&mut self, gi: usize, s: usize) {
+        let w = &mut self.groups[gi].workers[s];
+        if let Some(g) = w.gather.as_mut() {
+            while g.reqs.len() < g.cap {
+                match w.queue.pop_front() {
+                    Some(r) => g.reqs.push(r),
+                    None => break,
+                }
+            }
+        }
+    }
+
+    /// Close the open gather when full or past its deadline; submit the
+    /// batch to the backend. Returns true if a batch was submitted.
+    fn close_gather_if_due(&mut self, gi: usize, s: usize) -> bool {
+        let w = &mut self.groups[gi].workers[s];
+        let due = match w.gather.as_ref() {
+            Some(g) => g.reqs.len() >= g.cap || self.now >= g.deadline,
+            None => return false,
+        };
+        if !due {
+            return false;
+        }
+        let g = w.gather.take().unwrap();
+        self.submit_batch(gi, s, g.reqs);
+        true
+    }
+
+    /// Open a new gather if the worker is free (not mid-service, window
+    /// has room) and frames are queued. Returns true if progress was
+    /// made (a gather opened — it may close immediately on the next loop
+    /// iteration if already full or zero-wait).
+    fn open_gather(&mut self, gi: usize, s: usize) -> bool {
+        let depth_window = self.window;
+        let w = &mut self.groups[gi].workers[s];
+        if w.gather.is_some()
+            || w.busy_until > self.now
+            || w.in_flight.len() >= depth_window
+            || w.queue.is_empty()
+        {
+            return false;
+        }
+        let cfg = w.cfg;
+        let mut reqs = Vec::with_capacity(cfg.max_batch.min(w.queue.len()));
+        while reqs.len() < cfg.max_batch {
+            match w.queue.pop_front() {
+                Some(r) => reqs.push(r),
+                None => break,
+            }
+        }
+        let deadline = self.now + ns(cfg.max_wait);
+        w.gather = Some(Gather { reqs, deadline, cap: cfg.max_batch });
+        if deadline > self.now {
+            self.q.schedule(deadline, Ev::Wake(gi, s));
+        }
+        // frames left the bounded queue: a stalled upstream stage can
+        // push its blocked forwards now
+        if s > 0 && !self.groups[gi].workers[s - 1].blocked.is_empty() {
+            self.advance(gi, s - 1);
+        }
+        true
+    }
+
+    /// Submit a formed batch to the worker's backend: store-and-forward
+    /// occupies the worker for the whole service; overlapped transfer
+    /// frees it after `xfer · k` while the device queue computes.
+    fn submit_batch(&mut self, gi: usize, s: usize, reqs: Vec<SimReq>) {
+        let k = reqs.len() as u32;
+        let w = &mut self.groups[gi].workers[s];
+        match w.backend {
+            SimBackend::Mock { base, per_item } => {
+                let ready = self.now + ns(base) + ns(per_item) * k as u64;
+                w.busy_until = ready;
+                w.in_flight.push_back(Flight { ready_at: ready, reqs });
+                self.q.schedule(ready, Ev::Wake(gi, s));
+            }
+            SimBackend::Pipelined { xfer_per_item, compute_per_item } => {
+                let tx_done = self.now + ns(xfer_per_item) * k as u64;
+                let start = w.device_free.max(tx_done);
+                let ready = start + ns(compute_per_item) * k as u64;
+                w.device_free = ready;
+                w.busy_until = tx_done;
+                w.in_flight.push_back(Flight { ready_at: ready, reqs });
+                self.q.schedule(tx_done, Ev::Wake(gi, s));
+                self.q.schedule(ready, Ev::Wake(gi, s));
+            }
+        }
+    }
+
+    /// Process a ready batch: final stages emit completions into the
+    /// metrics/signal streams; mid-chain stages stamp the per-stage
+    /// latency and forward each frame into the next stage's bounded
+    /// queue (parking in `blocked` — upstream stall — when it is full).
+    fn complete_batch(&mut self, gi: usize, s: usize, reqs: Vec<SimReq>) {
+        let k = reqs.len();
+        let last = s + 1 == self.groups[gi].workers.len();
+        if last {
+            for mut req in reqs {
+                if !req.stage_latencies.is_empty() {
+                    let hop = Duration::from_nanos(self.now - req.stage_arrival);
+                    req.stage_latencies.push(hop);
+                    req.stage_batches.push(k);
+                }
+                let c = Completion {
+                    id: req.id,
+                    output: vec![req.sum, k as f32],
+                    latency: Duration::from_nanos(self.now - req.arrival),
+                    batch_size: k,
+                    group: gi,
+                    stage: s,
+                    stage_latencies: req.stage_latencies,
+                    stage_batches: req.stage_batches,
+                };
+                self.fm.record(&c);
+                self.tap.record_completion(c.latency);
+                let idx = req.id as usize;
+                assert!(!self.done[idx], "request {idx} completed twice");
+                self.done[idx] = true;
+                self.completed += 1;
+                self.last_completion = self.now;
+            }
+            self.groups[gi].workers[s].outstanding -= k;
+        } else {
+            let depth = self.queue_depth;
+            let mut forwarded_any = false;
+            for mut req in reqs {
+                let hop = Duration::from_nanos(self.now - req.stage_arrival);
+                req.stage_latencies.push(hop);
+                req.stage_batches.push(k);
+                req.stage_arrival = self.now;
+                // the stage's output row is [Σ inputs, k]; its sum —
+                // the next stage's input sum — is Σ + k
+                req.sum += k as f32;
+                let (up, down) = self.groups[gi].workers.split_at_mut(s + 1);
+                let w = &mut up[s];
+                let d = &mut down[0];
+                // increment-before-send, like the chain Forward sink
+                d.outstanding += 1;
+                if w.blocked.is_empty() && d.queue.len() < depth {
+                    w.outstanding -= 1;
+                    d.queue.push_back(req);
+                    self.max_queue_seen = self.max_queue_seen.max(d.queue.len());
+                    forwarded_any = true;
+                } else {
+                    w.blocked.push_back(req);
+                }
+            }
+            if forwarded_any {
+                self.advance(gi, s + 1);
+            }
+        }
+    }
+
+    // ---- control plane on virtual ticks --------------------------------
+
+    /// One control tick, mirroring `control::run_loop::control_tick`:
+    /// observe utilization, close the signal window, autoscale, then
+    /// SLO-retune batching per routable group.
+    fn on_tick(&mut self) {
+        let at_s = secs(self.now);
+        let outstanding: Vec<usize> = self
+            .active
+            .iter()
+            .flat_map(|&gi| self.groups[gi].workers.iter().map(|w| w.outstanding))
+            .collect();
+        self.tap.observe_utilization(&outstanding, self.queue_depth);
+        let sig = self.tap.tick();
+        let decision = self.scaler.as_mut().map(|sc| sc.decide(&sig, self.active.len()));
+        match decision {
+            Some(ScaleDecision::Out(k)) => {
+                let from = self.active.len();
+                let added = self.scale_out(k);
+                if added > 0 {
+                    self.scaler.as_mut().unwrap().note_action(sig.tick);
+                    self.events.push(ControlEvent {
+                        tick: sig.tick,
+                        at_s,
+                        kind: ControlEventKind::ScaleOut { from, to: from + added },
+                    });
+                }
+            }
+            Some(ScaleDecision::In(k)) => {
+                let from = self.active.len();
+                let removed = self.scale_in(k);
+                if removed > 0 {
+                    self.scaler.as_mut().unwrap().note_action(sig.tick);
+                    self.events.push(ControlEvent {
+                        tick: sig.tick,
+                        at_s,
+                        kind: ControlEventKind::ScaleIn { from, to: from - removed },
+                    });
+                }
+            }
+            Some(ScaleDecision::Hold) | None => {}
+        }
+        if let Some(sl) = self.slo.take() {
+            for pos in 0..self.active.len() {
+                let gi = self.active[pos];
+                if self.groups[gi].workers.len() == 1 {
+                    let cur = self.groups[gi].workers[0].cfg;
+                    let next = truncate_cfg(sl.adjust(sig.p99_ms, cur));
+                    if next != cur {
+                        self.groups[gi].workers[0].cfg = next;
+                        self.events.push(ControlEvent {
+                            tick: sig.tick,
+                            at_s,
+                            kind: ControlEventKind::SloAdjust {
+                                group: pos,
+                                stage: 0,
+                                max_batch: next.max_batch,
+                                max_wait: next.max_wait,
+                            },
+                        });
+                    }
+                } else {
+                    let next = sl.adjust(sig.p99_ms, self.groups[gi].slo_base);
+                    self.groups[gi].slo_base = next;
+                    let tuned = sl.co_tune_chain(&self.groups[gi].service, next);
+                    for (stage, t) in tuned.into_iter().enumerate() {
+                        let t = truncate_cfg(t);
+                        if stage < self.groups[gi].workers.len()
+                            && t != self.groups[gi].workers[stage].cfg
+                        {
+                            self.groups[gi].workers[stage].cfg = t;
+                            self.events.push(ControlEvent {
+                                tick: sig.tick,
+                                at_s,
+                                kind: ControlEventKind::SloAdjust {
+                                    group: pos,
+                                    stage,
+                                    max_batch: t.max_batch,
+                                    max_wait: t.max_wait,
+                                },
+                            });
+                        }
+                    }
+                }
+            }
+            self.slo = Some(sl);
+        }
+        let drained = self.arrivals_done && self.completed == self.accepted;
+        if !drained {
+            self.q.schedule(self.now + self.tick_ns, Ev::Tick);
+        } else if self.trailing_left > 0 {
+            self.trailing_left -= 1;
+            self.q.schedule(self.now + self.tick_ns, Ev::Tick);
+        }
+    }
+
+    /// Activate up to `want` standby slots, fastest capacity first (ties
+    /// to the lowest slot index) — the simulated analogue of
+    /// capacity-ranked placement. Returns how many were activated.
+    fn scale_out(&mut self, want: usize) -> usize {
+        let take = want.min(self.standby.len());
+        if take == 0 {
+            return 0;
+        }
+        let groups = &self.groups;
+        self.standby.sort_by(|&a, &b| {
+            groups[b].fps.partial_cmp(&groups[a].fps).unwrap().then(a.cmp(&b))
+        });
+        for _ in 0..take {
+            let gi = self.standby.remove(0);
+            self.active.push(gi);
+        }
+        self.scheduler = Self::build_scheduler(&self.policy, &self.groups, &self.active);
+        self.max_groups_seen = self.max_groups_seen.max(self.active.len());
+        take
+    }
+
+    /// Retire up to `want` routable groups, slowest capacity first (ties
+    /// to the newest slot — highest router position), never below one.
+    /// Retired groups finish their in-flight work (virtual drain) but
+    /// receive no new admissions; their slots return to standby.
+    fn scale_in(&mut self, want: usize) -> usize {
+        let removable = self.active.len().saturating_sub(1);
+        let take = want.min(removable);
+        if take == 0 {
+            return 0;
+        }
+        for _ in 0..take {
+            let mut victim_pos = 0usize;
+            for pos in 1..self.active.len() {
+                let (v, p) = (self.active[victim_pos], self.active[pos]);
+                if self.groups[p].fps < self.groups[v].fps
+                    || (self.groups[p].fps == self.groups[v].fps && pos > victim_pos)
+                {
+                    victim_pos = pos;
+                }
+            }
+            let gi = self.active.remove(victim_pos);
+            self.standby.push(gi);
+        }
+        self.scheduler = Self::build_scheduler(&self.policy, &self.groups, &self.active);
+        take
+    }
+}

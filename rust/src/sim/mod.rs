@@ -6,9 +6,21 @@
 //! the stream simulation validates it and sizes the bypass FIFOs: with a
 //! too-shallow FIFO the join stalls the whole pipeline and throughput drops
 //! below the analytic bound.
+//!
+//! Beyond the single-chain ns-domain engine ([`pipeline`]), the [`event`] +
+//! [`fleet`] pair generalizes simulation to a whole serving fleet: a
+//! deterministic discrete-event executor for any
+//! [`crate::coordinator::Deployment`] (bounded queues, batchers, in-flight
+//! windows, RR/JSQ/SWRR admission, chain links, virtual-tick control
+//! plane) that sweeps thousands of chain groups and millions of requests
+//! in wall-clock seconds.
 
+pub mod event;
+pub mod fleet;
 pub mod pipeline;
 
+pub use event::EventQueue;
+pub use fleet::{FleetSim, SimBackend, SimConfig, SimControl, SimReport};
 pub use pipeline::{
     simulate_chain, simulate_network, simulate_sharded, ChainResult, ChainStage,
     PipelineResult, ShardedResult,

@@ -1,0 +1,322 @@
+//! The discrete-event fleet simulator vs. the thread-backed server.
+//!
+//! Three suites keep `FleetSim` honest:
+//!
+//! * **Differential**: small no-overload fleets where admission outcomes
+//!   are structurally determined (queue depth ≥ trace length, offered
+//!   rate under capacity) — the DES and `Server::deploy` + `replay` must
+//!   agree on accepted/shed *exactly*, on throughput and fleet p99
+//!   within a loose band (the threaded side sleeps on real clocks and a
+//!   shared CI runner is noisy), and — for the load-blind policies — on
+//!   the exact per-group dispatch counts.
+//! * **Determinism**: same seed + trace ⇒ bit-identical event-order
+//!   hash, `FleetSummary` and `ControlEvent` journal, run-to-run and
+//!   across OS threads (the simulator must not read host time or
+//!   iteration-order-unstable containers).
+//! * **Fuzz**: randomized valid topologies under bursty traces preserve
+//!   the conservation invariants (every offered request is accepted or
+//!   shed exactly once, every accepted request completes, bounded
+//!   queues never exceed their depth). Timestamp monotonicity and
+//!   exactly-once completion are asserted inside the simulator itself,
+//!   so any violation panics the run.
+
+use std::time::Duration;
+
+use fcmp::control::{AutoscalerConfig, SignalConfig, SloConfig};
+use fcmp::coordinator::{
+    bursty, diurnal, poisson, BatcherConfig, Deployment, FleetSummary, MockBackend, Policy,
+    Server, Trace,
+};
+use fcmp::sim::{FleetSim, SimBackend, SimConfig, SimControl, SimReport};
+use fcmp::util::prop;
+use fcmp::util::rng::Rng;
+
+fn mock_sim(per_item: Duration) -> SimBackend {
+    SimBackend::Mock { base: Duration::ZERO, per_item }
+}
+
+/// Run the same plan + trace + seed through the thread-backed server and
+/// the DES.
+fn run_pair(plan: Deployment, per_item: Duration, trace: &Trace) -> (FleetSummary, SimReport) {
+    let mut srv =
+        Server::deploy(move |_| MockBackend::with_service(Duration::ZERO, per_item), plan.clone());
+    let fm = srv.replay(trace, 8, 77);
+    srv.shutdown();
+    let cfg = SimConfig { input_len: 8, seed: 77, control: None };
+    let rep = FleetSim::uniform(plan, mock_sim(per_item), cfg).run(trace);
+    (fm.summary(), rep)
+}
+
+/// The differential contract for a no-overload configuration.
+///
+/// `groups_exact` additionally requires identical per-group completion
+/// counts — valid for load-blind policies (RR, equal-weight SWRR) where
+/// the dispatch sequence is a pure function of the submit order; JSQ
+/// reads live load, which legitimately differs between real and virtual
+/// clocks.
+fn assert_pair(name: &str, n: usize, groups_exact: bool, srv: &FleetSummary, sim: &SimReport) {
+    assert_eq!(srv.submitted, n, "{name}: server accepted");
+    assert_eq!(srv.shed, 0, "{name}: server shed");
+    assert_eq!(sim.submitted, n, "{name}: sim accepted");
+    assert_eq!(sim.shed, 0, "{name}: sim shed");
+    assert_eq!(sim.completed, n, "{name}: sim completed");
+    let sf = srv.fleet.as_ref().expect("server summary");
+    let mf = sim.summary.fleet.as_ref().expect("sim summary");
+    assert_eq!(sf.requests, mf.requests, "{name}: completion counts");
+
+    let ratio = mf.throughput_fps / sf.throughput_fps.max(1e-9);
+    assert!(
+        (0.35..=3.0).contains(&ratio),
+        "{name}: sim throughput {:.0} fps vs server {:.0} fps (ratio {ratio:.2})",
+        mf.throughput_fps,
+        sf.throughput_fps
+    );
+    let (sp99, mp99) = (sf.latency_ms.p99, mf.latency_ms.p99);
+    assert!(
+        sp99 <= mp99 * 5.0 + 25.0 && mp99 <= sp99 * 5.0 + 25.0,
+        "{name}: fleet p99 diverged — server {sp99:.2} ms vs sim {mp99:.2} ms"
+    );
+
+    if groups_exact {
+        let per = |s: &FleetSummary| -> Vec<usize> {
+            s.per_group.iter().map(|g| g.as_ref().map_or(0, |x| x.requests)).collect()
+        };
+        assert_eq!(
+            per(srv),
+            per(&sim.summary),
+            "{name}: per-group dispatch counts must match exactly"
+        );
+    } else {
+        // JSQ spreads by live load: still every group must have served
+        // something under a smooth trace over identical workers
+        for (g, s) in sim.summary.per_group.iter().enumerate() {
+            assert!(s.is_some(), "{name}: sim group {g} served nothing");
+        }
+    }
+}
+
+fn policies(groups: usize) -> [(Policy, bool, &'static str); 3] {
+    [
+        (Policy::RoundRobin, true, "rr"),
+        (Policy::JoinShortestQueue, false, "jsq"),
+        (Policy::Weighted(vec![1.0; groups]), true, "swrr"),
+    ]
+}
+
+#[test]
+fn differential_flat_fleet() {
+    // 3 flat groups at 300 µs/item: capacity ~10k req/s vs 1.5k offered
+    let n = 400;
+    let trace = poisson(n, 1_500.0, 11);
+    for (policy, exact, pname) in policies(3) {
+        let plan = Deployment::replicated(3)
+            .with_policy(policy)
+            .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) })
+            .with_queue_depth(n)
+            .with_window(2);
+        let (srv, sim) = run_pair(plan, Duration::from_micros(300), &trace);
+        assert_pair(&format!("flat/{pname}"), n, exact, &srv, &sim);
+    }
+}
+
+#[test]
+fn differential_single_chain() {
+    // one 3-stage chain at 200 µs/stage: capacity 5k req/s vs 1.2k offered
+    let n = 360;
+    let trace = poisson(n, 1_200.0, 12);
+    for (policy, _, pname) in policies(1) {
+        let plan = Deployment::chain(3)
+            .with_policy(policy)
+            .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) })
+            .with_queue_depth(n)
+            .with_window(2);
+        let (srv, sim) = run_pair(plan, Duration::from_micros(200), &trace);
+        // a single group makes every policy's dispatch trivially exact
+        assert_pair(&format!("chain/{pname}"), n, true, &srv, &sim);
+    }
+}
+
+#[test]
+fn differential_replicated_chains() {
+    // 2 chains x 2 stages at 250 µs/stage: capacity 8k req/s vs 1.5k
+    let n = 400;
+    let trace = poisson(n, 1_500.0, 13);
+    for (policy, exact, pname) in policies(2) {
+        let plan = Deployment::replicated_chains(2, 2)
+            .with_policy(policy)
+            .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) })
+            .with_queue_depth(n)
+            .with_window(2);
+        let (srv, sim) = run_pair(plan, Duration::from_micros(250), &trace);
+        assert_pair(&format!("repchain/{pname}"), n, exact, &srv, &sim);
+    }
+}
+
+#[test]
+fn same_seed_same_trace_is_bit_identical() {
+    // seeds drawn by the property harness; each case runs the identical
+    // autoscaled + SLO-tuned sim three times — twice here, once on a
+    // fresh OS thread — and demands bit-equality of the order hash, the
+    // summary and the control-event journal
+    prop::check(
+        0xF1EE7,
+        5,
+        |r: &mut Rng| r.next_u64(),
+        |&seed| {
+            let run = move || {
+                let trace = diurnal(1_500, 300.0, 1_500.0, 2.0, seed);
+                let plan = Deployment::replicated_chains(1, 2)
+                    .with_policy(Policy::RoundRobin)
+                    .with_batcher(BatcherConfig {
+                        max_batch: 4,
+                        max_wait: Duration::from_millis(1),
+                    })
+                    .with_queue_depth(16)
+                    .with_window(2);
+                let control = SimControl {
+                    tick: Duration::from_millis(20),
+                    signal: SignalConfig { window_ticks: 2 },
+                    autoscaler: Some(AutoscalerConfig {
+                        min_groups: 1,
+                        max_groups: 3,
+                        shed_out: 0.02,
+                        p99_out_ms: f64::INFINITY,
+                        util_in: 0.3,
+                        cooldown_ticks: 2,
+                        step: 1,
+                    }),
+                    slo: Some(SloConfig { p99_budget_ms: 8.0, ..SloConfig::default() }),
+                    trailing_ticks: 6,
+                };
+                let cfg = SimConfig { input_len: 4, seed, control: Some(control) };
+                let rep = FleetSim::uniform_with_standby(
+                    plan,
+                    mock_sim(Duration::from_micros(800)),
+                    2,
+                    cfg,
+                )
+                .run(&trace);
+                (
+                    rep.order_hash,
+                    rep.events_processed,
+                    format!("{:?}", rep.summary),
+                    format!("{:?}", rep.events),
+                )
+            };
+            let a = run();
+            let b = run();
+            let c = std::thread::spawn(run).join().expect("sim thread");
+            if a != b {
+                return Err(format!(
+                    "seed {seed:#x}: two in-thread runs diverged \
+                     (hash {:#x} vs {:#x})",
+                    a.0, b.0
+                ));
+            }
+            if a != c {
+                return Err(format!(
+                    "seed {seed:#x}: cross-thread run diverged \
+                     (hash {:#x} vs {:#x})",
+                    a.0, c.0
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn random_topologies_preserve_invariants() {
+    prop::check(
+        0xBEEF,
+        40,
+        |r: &mut Rng| r.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+            let groups = 1 + r.below(4) as usize;
+            let stages = 1 + r.below(3) as usize;
+            let queue_depth = 1 + r.below(8) as usize;
+            let window = 1 + r.below(3) as usize;
+            let max_batch = 1 + r.below(6) as usize;
+            let max_wait = Duration::from_micros(r.below(2_000));
+            let per_item = Duration::from_micros(50 + r.below(450));
+            let policy = match r.below(3) {
+                0 => Policy::RoundRobin,
+                1 => Policy::JoinShortestQueue,
+                _ => Policy::Weighted(vec![1.0; groups]),
+            };
+            let backend = if r.chance(0.5) {
+                SimBackend::Mock { base: Duration::from_micros(r.below(100)), per_item }
+            } else {
+                SimBackend::Pipelined {
+                    xfer_per_item: per_item.mul_f64(0.5),
+                    compute_per_item: per_item.mul_f64(0.5),
+                }
+            };
+            let control = r.chance(0.5).then(|| SimControl {
+                tick: Duration::from_millis(1 + r.below(30)),
+                signal: SignalConfig { window_ticks: 1 + r.below(4) as usize },
+                autoscaler: r.chance(0.7).then(|| AutoscalerConfig {
+                    min_groups: 1,
+                    max_groups: groups + 2,
+                    shed_out: 0.02,
+                    p99_out_ms: f64::INFINITY,
+                    util_in: 0.3,
+                    cooldown_ticks: 1 + r.below(3) as usize,
+                    step: 1,
+                }),
+                slo: r
+                    .chance(0.5)
+                    .then(|| SloConfig { p99_budget_ms: 4.0, ..SloConfig::default() }),
+                trailing_ticks: r.below(6) as usize,
+            });
+            let standby = if control.is_some() { r.below(3) as usize } else { 0 };
+            let n = 50 + r.below(350) as usize;
+            let rate = 200.0 + r.below(4_000) as f64;
+            let trace = bursty(n, rate, rate * 6.0, 24, seed);
+
+            let plan = Deployment::replicated_chains(groups, stages)
+                .with_policy(policy)
+                .with_batcher(BatcherConfig { max_batch, max_wait })
+                .with_queue_depth(queue_depth)
+                .with_window(window);
+            let cfg = SimConfig { input_len: 4, seed, control };
+            // timestamp monotonicity and exactly-once completion are
+            // panics inside the sim; the checks below are the
+            // conservation laws the report must satisfy
+            let rep = FleetSim::uniform_with_standby(plan, backend, standby, cfg).run(&trace);
+
+            if rep.submitted + rep.shed != n {
+                return Err(format!(
+                    "offered {} != accepted {} + shed {}",
+                    n, rep.submitted, rep.shed
+                ));
+            }
+            if rep.completed != rep.submitted {
+                return Err(format!(
+                    "accepted {} but completed {}",
+                    rep.submitted, rep.completed
+                ));
+            }
+            if rep.max_queue_seen > queue_depth {
+                return Err(format!(
+                    "queue occupancy {} exceeded bound {}",
+                    rep.max_queue_seen, queue_depth
+                ));
+            }
+            if rep.submitted == 0 {
+                return Err("first arrival into an empty fleet can never shed".into());
+            }
+            if rep.summary.submitted != rep.submitted || rep.summary.shed != rep.shed {
+                return Err("summary counters disagree with the report".into());
+            }
+            if rep.summary.fleet.is_none() {
+                return Err("completions recorded but fleet summary empty".into());
+            }
+            if rep.events_processed == 0 {
+                return Err("event loop processed nothing".into());
+            }
+            Ok(())
+        },
+    );
+}
