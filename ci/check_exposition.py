@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus textfile exposition written by ``--metrics-out``.
+
+The serving drivers rewrite ``PATH`` (Prometheus text) and append one
+JSON object per emission to ``PATH.jsonl``. This checker enforces the
+textfile grammar the way a node-exporter textfile collector would:
+
+* every line is a ``# HELP``/``# TYPE`` comment or a
+  ``name[{labels}] value`` sample;
+* every sample's metric family has a preceding ``# TYPE`` of ``counter``
+  or ``gauge``;
+* every sample value parses as a finite float, counters non-negative;
+* the required families are present (the fleet cannot serve without
+  admitting, completing, and pooling);
+* if the JSONL trajectory exists, every line parses as JSON and the
+  snapshot timestamps never go backwards.
+
+Exit 1 on any violation: an unparsable exposition means the observability
+surface itself broke, which is exactly what this step guards.
+"""
+
+import argparse
+import json
+import math
+import os
+import re
+import sys
+
+SAMPLE_RE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)'          # metric name
+    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="[^"]*"'    # optional {label="v",...}
+    r'(?:,[a-zA-Z_][a-zA-Z0-9_]*="[^"]*")*\})?'
+    r' (\S+)$'                               # value
+)
+HELP_RE = re.compile(r"^# HELP ([a-zA-Z_:][a-zA-Z0-9_:]*) .+$")
+TYPE_RE = re.compile(r"^# TYPE ([a-zA-Z_:][a-zA-Z0-9_:]*) (counter|gauge)$")
+
+REQUIRED = (
+    "fcmp_submitted_total",
+    "fcmp_completed_total",
+    "fcmp_pool_misses_total",
+)
+
+
+def check_prom(path, errors):
+    with open(path) as f:
+        text = f.read()
+    if not text.strip():
+        errors.append(f"{path}: empty exposition")
+        return
+    types = {}
+    seen = set()
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line:
+            continue
+        if line.startswith("#"):
+            if HELP_RE.match(line):
+                continue
+            m = TYPE_RE.match(line)
+            if m:
+                types[m.group(1)] = m.group(2)
+                continue
+            errors.append(f"{path}:{ln}: malformed comment line: {line!r}")
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"{path}:{ln}: malformed sample line: {line!r}")
+            continue
+        name, _, value = m.groups()
+        seen.add(name)
+        if name not in types:
+            errors.append(f"{path}:{ln}: sample {name} has no preceding # TYPE")
+            continue
+        try:
+            v = float(value)
+        except ValueError:
+            errors.append(f"{path}:{ln}: non-numeric value {value!r}")
+            continue
+        if not math.isfinite(v):
+            errors.append(f"{path}:{ln}: non-finite value for {name}")
+        elif types[name] == "counter" and v < 0:
+            errors.append(f"{path}:{ln}: negative counter {name} = {v}")
+    for name in REQUIRED:
+        if name not in seen:
+            errors.append(f"{path}: required family {name} missing")
+
+
+def check_jsonl(path, errors):
+    last_t = None
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                snap = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"{path}:{ln}: bad JSON ({e})")
+                continue
+            t = snap.get("t_s")
+            if not isinstance(t, (int, float)):
+                errors.append(f"{path}:{ln}: snapshot lacks a numeric t_s")
+                continue
+            if last_t is not None and t < last_t:
+                errors.append(
+                    f"{path}:{ln}: snapshot time went backwards "
+                    f"({last_t} -> {t})"
+                )
+            last_t = t
+    if last_t is None:
+        errors.append(f"{path}: no snapshots in trajectory")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prom", help="Prometheus textfile written by --metrics-out")
+    ap.add_argument(
+        "--jsonl",
+        help="JSONL trajectory (default: PROM.jsonl, checked when present)",
+    )
+    args = ap.parse_args(argv)
+
+    errors = []
+    if not os.path.exists(args.prom):
+        errors.append(f"{args.prom}: exposition file was never written")
+    else:
+        check_prom(args.prom, errors)
+        jsonl = args.jsonl or args.prom + ".jsonl"
+        if os.path.exists(jsonl):
+            check_jsonl(jsonl, errors)
+        elif args.jsonl:
+            errors.append(f"{jsonl}: trajectory file was never written")
+
+    for e in errors:
+        print(f"::error::exposition: {e}")
+    if not errors:
+        print(f"exposition OK: {args.prom} parses as Prometheus text")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

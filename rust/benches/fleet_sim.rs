@@ -26,6 +26,7 @@ use std::time::Duration;
 
 use fcmp::control::{AutoscalerConfig, SignalConfig};
 use fcmp::coordinator::{diurnal, poisson, BatcherConfig, Deployment, Policy, Trace};
+use fcmp::obs::ObsConfig;
 use fcmp::sim::{FleetSim, SimBackend, SimConfig, SimControl};
 use fcmp::util::args::Args;
 use fcmp::util::bench::Table;
@@ -58,12 +59,18 @@ fn run_arm(
     control: Option<SimControl>,
     trace: &Trace,
     trace_name: &'static str,
+    trace_sample: f64,
 ) -> Cell {
     let chains = plan.groups.len();
     let stages = plan.groups.first().map_or(1, |g| g.stages);
     let window = plan.window;
     let policy = plan.policy.name();
-    let cfg = SimConfig { input_len: 4, seed: 42, control };
+    let cfg = SimConfig {
+        input_len: 4,
+        seed: 42,
+        control,
+        obs: ObsConfig { sample: trace_sample, ..ObsConfig::default() },
+    };
     let t0 = std::time::Instant::now();
     let rep = FleetSim::uniform_with_standby(plan, backend, standby, cfg).run(trace);
     let wall = t0.elapsed().as_secs_f64();
@@ -149,6 +156,7 @@ fn main() {
         None,
         &big_trace,
         "poisson",
+        0.0,
     );
     if big.wall_s >= 10.0 {
         eprintln!(
@@ -173,6 +181,7 @@ fn main() {
         None,
         &jsq_trace,
         "poisson",
+        0.0,
     );
 
     // replicated 4-stage chains under SWRR: per-stage 50 µs, so a chain
@@ -191,7 +200,33 @@ fn main() {
         None,
         &chain_trace,
         "poisson",
+        0.0,
     );
+
+    // the same chain sweep with the span tracer armed at 1% (rings only):
+    // the observability-overhead arm — sim_fps must hold against
+    // chain-swrr across runs
+    let chain_traced = run_arm(
+        "chain-swrr-traced",
+        Deployment::replicated_chains(chain_groups, 4)
+            .with_policy(Policy::Weighted(vec![1.0; chain_groups]))
+            .with_batcher(batcher)
+            .with_queue_depth(64)
+            .with_window(2),
+        mock(50.0),
+        0,
+        None,
+        &chain_trace,
+        "poisson",
+        0.01,
+    );
+    if chain_traced.sim_fps < 0.7 * chain.sim_fps {
+        eprintln!(
+            "WARNING chain-swrr-traced ran at {:.0} sim req/s vs untraced {:.0} — \
+             1% span sampling is costing more than 30% of sim throughput",
+            chain_traced.sim_fps, chain.sim_fps
+        );
+    }
 
     // control-path arm: 2-stage chains, 1 active + 3 standby, diurnal
     // trace whose peak (2000 req/s) overruns one chain (1000 req/s at
@@ -225,6 +260,7 @@ fn main() {
         }),
         &auto_trace,
         "diurnal",
+        0.0,
     );
     if auto.groups_peak <= 1 {
         eprintln!(
@@ -240,7 +276,7 @@ fn main() {
         );
     }
 
-    let cells = vec![big, jsq, chain, auto];
+    let cells = vec![big, jsq, chain, chain_traced, auto];
 
     let mut t = Table::new([
         "arm", "policy", "chains", "stages", "req", "completed", "shed", "virt s",

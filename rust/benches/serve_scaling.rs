@@ -26,6 +26,7 @@ use fcmp::coordinator::{
     bursty, diurnal, heavy_tail, poisson, BatcherConfig, Deployment, Metrics, MockBackend,
     PipelinedMockBackend, Policy, Server, Trace, WorkerId,
 };
+use fcmp::obs::ObsConfig;
 use fcmp::util::args::Args;
 use fcmp::util::bench::Table;
 
@@ -62,11 +63,14 @@ struct Cell {
     p99_ms: f64,
 }
 
+/// `trace_sample > 0` arms the span tracer (rings only, no sink): the
+/// `sync-traced` arm measures the observability overhead against `sync`.
 fn run_cell(
     replicas: usize,
     policy_name: &'static str,
     trace_name: &'static str,
     trace: &Trace,
+    trace_sample: f64,
 ) -> Cell {
     let weights: Vec<f64> = (0..replicas).map(|i| SPEEDS[i % SPEEDS.len()]).collect();
     let policy = Policy::by_name(policy_name, weights.clone()).expect("policy name");
@@ -79,9 +83,10 @@ fn run_cell(
         .iter()
         .map(|w| Duration::from_secs_f64(PER_ITEM_US * 1e-6 / w))
         .collect();
-    let mut srv = Server::deploy(
+    let mut srv = Server::deploy_with_obs(
         move |id: WorkerId| MockBackend::with_service(Duration::ZERO, svc[id.group]),
         plan,
+        &ObsConfig { sample: trace_sample, ..ObsConfig::default() },
     );
     let fm = srv.replay(trace, 4, 7);
     srv.shutdown();
@@ -97,7 +102,7 @@ fn run_cell(
         None => (0, 0.0, 0.0, 0.0, 0.0),
     };
     Cell {
-        arm: "sync",
+        arm: if trace_sample > 0.0 { "sync-traced" } else { "sync" },
         replicas,
         window: 1,
         policy: policy_name,
@@ -245,9 +250,18 @@ fn main() {
     for &replicas in &[1usize, 2, 4] {
         for policy in policies {
             for (tname, trace) in &traces {
-                let c = run_cell(replicas, policy, *tname, trace);
+                let c = run_cell(replicas, policy, *tname, trace, 0.0);
                 push(&mut t, &mut cells, c);
             }
+        }
+    }
+    // tracing-overhead arm: the same replay with the span tracer armed at
+    // 1% (round-robin only — the overhead sits on the submit/dispatch
+    // path, not in the policy)
+    for &replicas in &[1usize, 2, 4] {
+        for (tname, trace) in &traces {
+            let c = run_cell(replicas, "round-robin", *tname, trace, 0.01);
+            push(&mut t, &mut cells, c);
         }
     }
     // closed-loop arms: the in-flight-window contrast
@@ -293,6 +307,34 @@ fn main() {
                     c4.completed, c1.completed
                 );
             }
+        }
+    }
+
+    // tracing-overhead signal: the 1%-sampled arm must complete as much
+    // of the offered load as the untraced one (same soft-check rationale)
+    for (tname, _) in &traces {
+        let find = |arm: &str| {
+            cells
+                .iter()
+                .find(|c| {
+                    c.arm == arm
+                        && c.replicas == 4
+                        && c.policy == "round-robin"
+                        && c.trace == *tname
+                })
+                .expect("cell")
+        };
+        let (plain, traced) = (find("sync"), find("sync-traced"));
+        println!(
+            "tracing round-robin/{tname}: completed {} -> {} (fps {:.0} -> {:.0})",
+            plain.completed, traced.completed, plain.throughput_fps, traced.throughput_fps
+        );
+        if traced.completed + 8 < plain.completed {
+            eprintln!(
+                "WARNING round-robin/{tname}: tracing at 1% completed {} < untraced {} — \
+                 span sampling is costing throughput",
+                traced.completed, plain.completed
+            );
         }
     }
 

@@ -111,9 +111,46 @@ impl Default for LoopConfig {
     }
 }
 
+/// The windowed signals a decision was looking at when it fired — the
+/// "why" next to the journal's "what", so a scaling history reads
+/// without replaying the run. Values are quantized at construction
+/// (rates/utilization to 1e-6, p99 to 1e-4 ms) so the text journal
+/// round-trips them exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SignalCtx {
+    /// Windowed shed rate at decision time.
+    pub shed_rate: f64,
+    /// Windowed latency p99 (ms); `None` when the window saw no
+    /// completions.
+    pub p99_ms: Option<f64>,
+    /// Windowed max replica utilization.
+    pub util: f64,
+}
+
+/// Quantize onto a `1/scale` grid whose decimal rendering parses back
+/// to the same `f64` ([`save_events`] relies on it).
+fn quant(v: f64, scale: f64) -> f64 {
+    if v.is_finite() {
+        (v * scale).round() / scale
+    } else {
+        0.0
+    }
+}
+
+impl SignalCtx {
+    /// Capture the decision-relevant slice of a closed signal window.
+    pub fn from_signals(sig: &ControlSignals) -> SignalCtx {
+        SignalCtx {
+            shed_rate: quant(sig.shed_rate, 1e6),
+            p99_ms: sig.p99_ms.map(|p| quant(p, 1e4)),
+            util: quant(sig.max_utilization, 1e6),
+        }
+    }
+}
+
 /// One journaled control-plane decision: when it fired (control tick and
 /// wall-clock seconds into the run, so the journal aligns with the
-/// arrival trace's time base) and what it did.
+/// arrival trace's time base), what it did, and what it saw.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ControlEvent {
     /// Control tick the decision fired on.
@@ -122,6 +159,10 @@ pub struct ControlEvent {
     pub at_s: f64,
     /// The decision itself.
     pub kind: ControlEventKind,
+    /// Signals observed at decision time (all-zero for events that fire
+    /// outside a signal window, e.g. scheduled failures, and for
+    /// journals archived before the context fields existed).
+    pub ctx: SignalCtx,
 }
 
 /// What a [`ControlEvent`] did.
@@ -182,38 +223,45 @@ impl std::fmt::Display for ControlEvent {
     }
 }
 
-/// Write a control-event journal as `fcmp-events v1`: a comment header
-/// followed by one event per line (`at_s tick kind args…`), the same
+/// Write a control-event journal as `fcmp-events v2`: a comment header
+/// followed by one event per line (`at_s tick kind args… shed_rate p99
+/// util`, with `-` for a p99 the window never observed), the same
 /// text-file convention as [`Trace::save`] — so a run's scaling history
-/// is archived next to its arrival trace and replays with it.
+/// is archived next to its arrival trace and replays with it. The three
+/// trailing tokens are the [`SignalCtx`]; quantization at capture makes
+/// the decimal rendering round-trip bit-exactly.
 pub fn save_events(events: &[ControlEvent], path: &Path) -> crate::Result<()> {
-    let mut out = String::with_capacity(events.len() * 40 + 32);
-    out.push_str("# fcmp-events v1\n");
+    let mut out = String::with_capacity(events.len() * 64 + 32);
+    out.push_str("# fcmp-events v2\n");
     for e in events {
         match &e.kind {
             ControlEventKind::ScaleOut { from, to } => {
-                out.push_str(&format!("{:.6} {} scale-out {from} {to}\n", e.at_s, e.tick));
+                out.push_str(&format!("{:.6} {} scale-out {from} {to}", e.at_s, e.tick));
             }
             ControlEventKind::ScaleIn { from, to } => {
-                out.push_str(&format!("{:.6} {} scale-in {from} {to}\n", e.at_s, e.tick));
+                out.push_str(&format!("{:.6} {} scale-in {from} {to}", e.at_s, e.tick));
             }
             ControlEventKind::SloAdjust { group, stage, max_batch, max_wait } => {
                 // nanoseconds: co-tuned windows derived from analytic
                 // service intervals carry sub-microsecond components, and
                 // the journal must round-trip them exactly
                 out.push_str(&format!(
-                    "{:.6} {} slo-adjust {group} {stage} {max_batch} {}\n",
+                    "{:.6} {} slo-adjust {group} {stage} {max_batch} {}",
                     e.at_s,
                     e.tick,
                     max_wait.as_nanos()
                 ));
             }
             ControlEventKind::Failure { group, survivors } => {
-                out.push_str(&format!(
-                    "{:.6} {} failure {group} {survivors}\n",
-                    e.at_s, e.tick
-                ));
+                out.push_str(&format!("{:.6} {} failure {group} {survivors}", e.at_s, e.tick));
             }
+        }
+        match e.ctx.p99_ms {
+            Some(p99) => out.push_str(&format!(
+                " {:.6} {p99:.4} {:.6}\n",
+                e.ctx.shed_rate, e.ctx.util
+            )),
+            None => out.push_str(&format!(" {:.6} - {:.6}\n", e.ctx.shed_rate, e.ctx.util)),
         }
     }
     std::fs::write(path, out)?;
@@ -222,6 +270,9 @@ pub fn save_events(events: &[ControlEvent], path: &Path) -> crate::Result<()> {
 
 /// Read a journal written by [`save_events`] (`#` comments and blank
 /// lines are ignored). Events must carry finite, non-negative times.
+/// Both journal generations load: v2 lines carry the three
+/// [`SignalCtx`] tokens, v1 lines (archived before the context existed)
+/// get an all-zero context.
 pub fn load_events(path: &Path) -> crate::Result<Vec<ControlEvent>> {
     let text = std::fs::read_to_string(path)?;
     let mut out = Vec::new();
@@ -266,13 +317,35 @@ pub fn load_events(path: &Path) -> crate::Result<Vec<ControlEvent>> {
             }
             _ => return Err(bad()),
         };
-        anyhow::ensure!(
-            toks.len() == want,
-            "{}:{}: trailing fields in control event",
-            path.display(),
-            ln + 1
-        );
-        out.push(ControlEvent { tick, at_s, kind });
+        let ctx = if toks.len() == want + 3 {
+            let fnum = |i: usize| -> crate::Result<f64> {
+                let v: f64 = toks[i].parse().map_err(|_| bad())?;
+                anyhow::ensure!(
+                    v.is_finite(),
+                    "{}:{}: signal context must be finite",
+                    path.display(),
+                    ln + 1
+                );
+                Ok(v)
+            };
+            SignalCtx {
+                shed_rate: fnum(want)?,
+                p99_ms: match toks[want + 1] {
+                    "-" => None,
+                    _ => Some(fnum(want + 1)?),
+                },
+                util: fnum(want + 2)?,
+            }
+        } else {
+            anyhow::ensure!(
+                toks.len() == want,
+                "{}:{}: trailing fields in control event",
+                path.display(),
+                ln + 1
+            );
+            SignalCtx::default()
+        };
+        out.push(ControlEvent { tick, at_s, kind, ctx });
     }
     Ok(out)
 }
@@ -650,6 +723,12 @@ fn control_tick(
 ) {
     tap.observe_utilization(&fleet.srv.outstanding(), fleet.queue_depth);
     let sig = tap.tick();
+    let ctx = SignalCtx::from_signals(&sig);
+    // anomaly triggers read the closed window: a p99 budget breach, a
+    // shed burst or a dead chain group flushes the flight-recorder rings
+    if fleet.srv.obs().active() {
+        fleet.srv.obs().recorder().observe(sig.p99_ms, sig.shed, fleet.srv.dead_groups());
+    }
     if let Some(sc) = scaler.as_mut() {
         match sc.decide(&sig, fleet.group_count()) {
             ScaleDecision::Out(k) => {
@@ -664,6 +743,7 @@ fn control_tick(
                             tick: sig.tick,
                             at_s,
                             kind: ControlEventKind::ScaleOut { from, to: from + added },
+                            ctx,
                         });
                     }
                 }
@@ -677,6 +757,7 @@ fn control_tick(
                             tick: sig.tick,
                             at_s,
                             kind: ControlEventKind::ScaleIn { from, to: from - removed },
+                            ctx,
                         });
                     }
                 }
@@ -701,6 +782,7 @@ fn control_tick(
                                 max_batch: next.max_batch,
                                 max_wait: next.max_wait,
                             },
+                            ctx,
                         });
                     }
                 }
@@ -725,6 +807,7 @@ fn control_tick(
                                     max_batch: t.max_batch,
                                     max_wait: t.max_wait,
                                 },
+                                ctx,
                             });
                         }
                     }
@@ -756,6 +839,8 @@ fn fire_due_failures(
                     group: f.group,
                     survivors: fleet.group_count(),
                 },
+                // failures fire on the wall clock, between windows
+                ctx: SignalCtx::default(),
             });
         }
     }
@@ -1059,6 +1144,9 @@ mod tests {
                 tick: 4,
                 at_s: 0.1125,
                 kind: ControlEventKind::ScaleOut { from: 1, to: 2 },
+                // values on the quantization grid, as the capture path
+                // produces them (rates 1e-6, p99 1e-4)
+                ctx: SignalCtx { shed_rate: 0.333_333, p99_ms: Some(12.345_7), util: 0.876_543 },
             },
             ControlEvent {
                 tick: 9,
@@ -1071,16 +1159,20 @@ mod tests {
                     // must carry it through the round-trip exactly
                     max_wait: Duration::from_nanos(1_500_417),
                 },
+                // an idle window: no completions, no p99
+                ctx: SignalCtx { shed_rate: 0.0, p99_ms: None, util: 0.25 },
             },
             ControlEvent {
                 tick: 12,
                 at_s: 0.31,
                 kind: ControlEventKind::Failure { group: 0, survivors: 1 },
+                ctx: SignalCtx::default(),
             },
             ControlEvent {
                 tick: 20,
                 at_s: 0.5,
                 kind: ControlEventKind::ScaleIn { from: 2, to: 1 },
+                ctx: SignalCtx { shed_rate: 0.0, p99_ms: Some(1.5), util: 0.05 },
             },
         ];
         let path = std::env::temp_dir().join("fcmp_events_roundtrip_test.txt");
@@ -1090,8 +1182,25 @@ mod tests {
         for (a, b) in events.iter().zip(&back) {
             assert_eq!(a.tick, b.tick);
             assert_eq!(a.kind, b.kind);
+            assert_eq!(a.ctx, b.ctx, "signal context must round-trip bit-exactly");
             assert!((a.at_s - b.at_s).abs() < 1e-6, "{} vs {}", a.at_s, b.at_s);
         }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v1_journals_load_with_zero_context() {
+        let path = std::env::temp_dir().join("fcmp_events_v1_compat_test.txt");
+        std::fs::write(
+            &path,
+            "# fcmp-events v1\n0.5 3 scale-out 1 2\n0.75 5 slo-adjust 0 1 8 1500417\n",
+        )
+        .unwrap();
+        let back = load_events(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].kind, ControlEventKind::ScaleOut { from: 1, to: 2 });
+        assert_eq!(back[0].ctx, SignalCtx::default());
+        assert_eq!(back[1].ctx, SignalCtx::default());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -91,9 +91,23 @@ pub struct Batch {
 /// closed and empty. A worker with batches in flight must not park here
 /// — it uses [`poll_batch`] so it can reap completions promptly.
 pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherConfig) -> Option<Batch> {
-    let first = rx.recv().ok()?;
+    next_batch_traced(rx, cfg, &mut |_| {})
+}
+
+/// [`next_batch`] with a per-request pull hook: `on_pull` runs the
+/// moment each request leaves the stage queue and joins the forming
+/// batch — the observability layer's Gather stamp site, so a span
+/// records the *individual* pull time (first-in requests wait out the
+/// straggler window; the hook is what makes that wait measurable).
+pub fn next_batch_traced(
+    rx: &Receiver<Request>,
+    cfg: &BatcherConfig,
+    on_pull: &mut dyn FnMut(&mut Request),
+) -> Option<Batch> {
+    let mut first = rx.recv().ok()?;
+    on_pull(&mut first);
     let deadline = Instant::now() + cfg.max_wait;
-    let requests = gather(rx, cfg, first, deadline);
+    let requests = gather(rx, cfg, first, deadline, on_pull);
     Some(Batch { requests, formed_at: Instant::now() })
 }
 
@@ -114,14 +128,26 @@ pub enum BatchPoll {
 /// oldest batch's expected completion so batch `N+1` forms while batch
 /// `N` executes without delaying its reap.
 pub fn poll_batch(rx: &Receiver<Request>, cfg: &BatcherConfig, limit: Duration) -> BatchPoll {
+    poll_batch_traced(rx, cfg, limit, &mut |_| {})
+}
+
+/// [`poll_batch`] with the same per-request pull hook as
+/// [`next_batch_traced`].
+pub fn poll_batch_traced(
+    rx: &Receiver<Request>,
+    cfg: &BatcherConfig,
+    limit: Duration,
+    on_pull: &mut dyn FnMut(&mut Request),
+) -> BatchPoll {
     let window_end = Instant::now() + limit;
-    let first = match rx.recv_timeout(limit) {
+    let mut first = match rx.recv_timeout(limit) {
         Ok(r) => r,
         Err(RecvTimeoutError::Timeout) => return BatchPoll::Idle,
         Err(RecvTimeoutError::Disconnected) => return BatchPoll::Closed,
     };
+    on_pull(&mut first);
     let deadline = (Instant::now() + cfg.max_wait).min(window_end);
-    let requests = gather(rx, cfg, first, deadline);
+    let requests = gather(rx, cfg, first, deadline, on_pull);
     BatchPoll::Batch(Batch { requests, formed_at: Instant::now() })
 }
 
@@ -132,6 +158,7 @@ fn gather(
     cfg: &BatcherConfig,
     first: Request,
     deadline: Instant,
+    on_pull: &mut dyn FnMut(&mut Request),
 ) -> Vec<Request> {
     let mut requests = vec![first];
     while requests.len() < cfg.max_batch {
@@ -140,7 +167,10 @@ fn gather(
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(r) => requests.push(r),
+            Ok(mut r) => {
+                on_pull(&mut r);
+                requests.push(r);
+            }
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
@@ -260,6 +290,20 @@ mod tests {
             _ => panic!("queued request must form a batch"),
         }
         assert!(t0.elapsed() < Duration::from_secs(1), "gather ignored the window cap");
+        drop(tx);
+    }
+
+    #[test]
+    fn traced_pull_hook_sees_every_request_once() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..5 {
+            tx.send(req(i)).unwrap();
+        }
+        let cfg = BatcherConfig { max_batch: 5, max_wait: Duration::from_millis(1) };
+        let mut pulled = Vec::new();
+        let b = next_batch_traced(&rx, &cfg, &mut |r| pulled.push(r.id)).unwrap();
+        assert_eq!(b.requests.len(), 5);
+        assert_eq!(pulled, vec![0, 1, 2, 3, 4]);
         drop(tx);
     }
 

@@ -56,7 +56,9 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Mark the start of the measurement window.
+    /// Mark the start of the measurement window. Never clobbers a
+    /// virtual-time span set with [`Metrics::set_span_s`], so the two
+    /// calls compose in either order.
     pub fn start(&mut self) {
         self.started = Some(std::time::Instant::now());
     }
@@ -72,11 +74,17 @@ impl Metrics {
     }
 
     /// Record one completion: two array writes into the histogram plus
-    /// counter bumps — no allocation, no growth.
+    /// counter bumps — no allocation, no growth. A collector that was
+    /// never [`Metrics::start`]ed anchors its window at the first
+    /// recorded completion, so summaries stay finite in any call order.
     pub fn record(&mut self, latency: Duration, batch_size: usize) {
         self.hist.record(latency.as_secs_f64() * 1e3);
         self.batch_sum += batch_size as u64;
-        self.finished = Some(std::time::Instant::now());
+        let now = std::time::Instant::now();
+        if self.started.is_none() {
+            self.started = Some(now);
+        }
+        self.finished = Some(now);
     }
 
     /// Completions recorded so far.
@@ -112,6 +120,22 @@ impl Metrics {
             Some(self.summary())
         }
     }
+
+    /// Fold another collector into this one: bucket-exact histogram
+    /// aggregation via [`LogHistogram::merge`], summed batch mass, and
+    /// the widest `started..finished` window covering both.
+    fn absorb(&mut self, other: &Metrics) {
+        self.hist.merge(&other.hist);
+        self.batch_sum += other.batch_sum;
+        self.started = match (self.started, other.started) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.finished = match (self.finished, other.finished) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+    }
 }
 
 impl std::fmt::Display for ServeSummary {
@@ -135,8 +159,16 @@ impl std::fmt::Display for ServeSummary {
 /// one per chain group (end-to-end), one for the whole fleet, and the
 /// admission-control counters.
 pub struct FleetMetrics {
+    /// Window anchor for the derived fleet view (`start` /
+    /// `set_span_s`); completions themselves land in `per_group` or
+    /// `orphans` and the fleet summary merges their histograms, so
+    /// fleet percentiles keep full bucket precision with no
+    /// double-recording.
     fleet: Metrics,
     per_group: Vec<Metrics>,
+    /// Completions from outside the configured shape (unknown group):
+    /// counted fleet-wide, attributed to no group or worker.
+    orphans: Metrics,
     per_replica: Vec<Metrics>,
     /// Flat worker offset of each group (`per_replica[offsets[g] + s]` is
     /// stage `s` of group `g`).
@@ -191,6 +223,7 @@ impl FleetMetrics {
         FleetMetrics {
             fleet: Metrics::new(),
             per_group: group_sizes.iter().map(|_| Metrics::new()).collect(),
+            orphans: Metrics::new(),
             per_replica: (0..total).map(|_| Metrics::new()).collect(),
             offsets,
             sizes: group_sizes.iter().map(|&k| k.max(1)).collect(),
@@ -208,6 +241,7 @@ impl FleetMetrics {
     /// Mark the start of the measurement window on every collector.
     pub fn start(&mut self) {
         self.fleet.start();
+        self.orphans.start();
         for m in &mut self.per_group {
             m.start();
         }
@@ -222,6 +256,7 @@ impl FleetMetrics {
     /// host, time.
     pub fn set_span_s(&mut self, span_s: f64) {
         self.fleet.set_span_s(span_s);
+        self.orphans.set_span_s(span_s);
         for m in &mut self.per_group {
             m.set_span_s(span_s);
         }
@@ -233,18 +268,25 @@ impl FleetMetrics {
     /// Record a completion against the fleet, its chain group and its
     /// serving worker(s).
     ///
-    /// The fleet and group collectors always see the end-to-end latency.
-    /// Chain completions (non-empty [`Completion::stage_latencies`])
-    /// split the worker view differently: each stage's collector sees
-    /// that *stage's* transit latency, so per-worker percentiles localize
-    /// the slow stage. Completions from outside the configured shape —
-    /// an unknown group, or stages beyond the group's configured depth —
-    /// are counted fleet-wide only (never attributed to a neighbouring
+    /// The group collector sees the end-to-end latency; the fleet view
+    /// is *derived* at summary time by merging every group histogram
+    /// (plus the orphan bucket) via [`LogHistogram::merge`], so nothing
+    /// is recorded twice and fleet percentiles keep full bucket
+    /// precision. Chain completions (non-empty
+    /// [`Completion::stage_latencies`]) split the worker view
+    /// differently: each stage's collector sees that *stage's* transit
+    /// latency, so per-worker percentiles localize the slow stage.
+    /// Completions from outside the configured shape — an unknown
+    /// group, or stages beyond the group's configured depth — are
+    /// counted fleet-wide only (never attributed to a neighbouring
     /// group's worker slots).
     pub fn record(&mut self, c: &Completion) {
-        self.fleet.record(c.latency, c.batch_size);
-        if let Some(m) = self.per_group.get_mut(c.group) {
-            m.record(c.latency, c.batch_size);
+        match self.per_group.get_mut(c.group) {
+            Some(m) => m.record(c.latency, c.batch_size),
+            None => {
+                self.orphans.record(c.latency, c.batch_size);
+                return;
+            }
         }
         let Some(&base) = self.offsets.get(c.group) else { return };
         let size = self.sizes[c.group];
@@ -274,9 +316,10 @@ impl FleetMetrics {
         self.shed += 1;
     }
 
-    /// Completions recorded so far.
+    /// Completions recorded so far (every group plus out-of-shape
+    /// orphans).
     pub fn completed(&self) -> usize {
-        self.fleet.count()
+        self.per_group.iter().map(Metrics::count).sum::<usize>() + self.orphans.count()
     }
 
     /// Accepted submissions so far.
@@ -296,10 +339,22 @@ impl FleetMetrics {
         self.hot = hot;
     }
 
-    /// Summarize fleet, groups and workers.
+    /// Summarize fleet, groups and workers. The fleet view is built
+    /// here by folding every per-group histogram (and the orphan
+    /// bucket) into one collector with [`LogHistogram::merge`] — same
+    /// buckets, element-wise counts, exact moment sums — anchored to
+    /// the window marked on the fleet collector by
+    /// [`FleetMetrics::start`] / [`FleetMetrics::set_span_s`].
     pub fn summary(&self) -> FleetSummary {
+        let mut fleet = Metrics::new();
+        fleet.started = self.fleet.started;
+        fleet.span_override = self.fleet.span_override;
+        for m in &self.per_group {
+            fleet.absorb(m);
+        }
+        fleet.absorb(&self.orphans);
         FleetSummary {
-            fleet: self.fleet.try_summary(),
+            fleet: fleet.try_summary(),
             per_group: self.per_group.iter().map(Metrics::try_summary).collect(),
             per_replica: self.per_replica.iter().map(Metrics::try_summary).collect(),
             submitted: self.submitted,
@@ -403,6 +458,7 @@ mod tests {
             stage: 0,
             stage_latencies: Vec::new(),
             stage_batches: Vec::new(),
+            span: None,
         }
     }
 
@@ -554,6 +610,65 @@ mod tests {
         assert!(close(got.median, exact.median), "{} vs {}", got.median, exact.median);
         assert!(close(got.p95, exact.p95), "{} vs {}", got.p95, exact.p95);
         assert!(close(got.p99, exact.p99), "{} vs {}", got.p99, exact.p99);
+    }
+
+    #[test]
+    fn fleet_view_is_the_bucket_exact_merge_of_group_histograms() {
+        // two groups with disjoint latency ranges plus one orphan; the
+        // fleet percentiles must match recording the same values into a
+        // single collector (merge is element-wise on identical buckets)
+        let mut fm = FleetMetrics::flat(2);
+        let mut whole = Metrics::new();
+        fm.start();
+        whole.start();
+        for i in 0..40u64 {
+            let ms = 5 + (i % 20) * 7;
+            fm.record(&completion(i, (i % 2) as usize, ms, 1));
+            whole.record(Duration::from_millis(ms), 1);
+        }
+        fm.record(&completion(99, 9, 250, 1)); // unknown group → orphan
+        whole.record(Duration::from_millis(250), 1);
+        assert_eq!(fm.completed(), 41);
+        let got = fm.summary().fleet.unwrap().latency_ms;
+        let want = whole.summary().latency_ms;
+        assert_eq!(got.median, want.median);
+        assert_eq!(got.p99, want.p99);
+        assert_eq!(got.min, want.min);
+        assert_eq!(got.max, want.max);
+    }
+
+    #[test]
+    fn span_override_survives_any_call_order() {
+        // set_span_s before start (the sim configures its virtual span
+        // up front, then the driver calls start) must behave exactly
+        // like the reverse order: the virtual span wins
+        let mut a = FleetMetrics::flat(1);
+        a.set_span_s(2.0);
+        a.start();
+        a.record(&completion(0, 0, 5, 1));
+        let mut b = FleetMetrics::flat(1);
+        b.start();
+        b.set_span_s(2.0);
+        b.record(&completion(0, 0, 5, 1));
+        let (sa, sb) = (a.summary().fleet.unwrap(), b.summary().fleet.unwrap());
+        assert_eq!(sa.wall_s, 2.0);
+        assert_eq!(sb.wall_s, 2.0);
+        assert_eq!(sa.throughput_fps, sb.throughput_fps);
+    }
+
+    #[test]
+    fn record_without_start_anchors_the_window_and_stays_finite() {
+        let mut m = Metrics::new();
+        m.record(Duration::from_millis(5), 1);
+        std::thread::sleep(Duration::from_millis(2));
+        m.record(Duration::from_millis(5), 1);
+        let s = m.summary();
+        assert!(s.wall_s > 0.0, "window anchored at first record");
+        assert!(s.throughput_fps.is_finite());
+        // the fleet aggregate inherits the same ordering independence
+        let mut fm = FleetMetrics::flat(1);
+        fm.record(&completion(0, 0, 5, 1));
+        assert!(fm.summary().fleet.unwrap().throughput_fps.is_finite());
     }
 
     #[test]

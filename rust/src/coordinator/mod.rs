@@ -104,6 +104,9 @@ pub struct Request {
     /// Batch size the frame rode in at each traversed stage (parallel to
     /// `stage_latencies`).
     pub stage_batches: Vec<usize>,
+    /// Flight-recorder span when this request was sampled for tracing
+    /// (`None` for the unsampled majority — one branch per stamp site).
+    pub span: Option<Box<crate::obs::RequestSpan>>,
 }
 
 impl Request {
@@ -117,6 +120,7 @@ impl Request {
             stage_arrival: now,
             stage_latencies: Vec::new(),
             stage_batches: Vec::new(),
+            span: None,
         }
     }
 }
@@ -146,4 +150,7 @@ pub struct Completion {
     /// Per-stage batch sizes, parallel to `stage_latencies` (each stage
     /// batches independently).
     pub stage_batches: Vec<usize>,
+    /// The request's flight-recorder span, terminal-stamped; recycle it
+    /// via [`crate::obs::Obs::recycle`] after consuming the completion.
+    pub span: Option<Box<crate::obs::RequestSpan>>,
 }

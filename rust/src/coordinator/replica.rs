@@ -20,11 +20,12 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::batcher::{next_batch, poll_batch, BatchPoll, BatcherConfig, SharedBatcher};
+use super::batcher::{next_batch_traced, poll_batch_traced, BatchPoll, BatcherConfig, SharedBatcher};
 use super::deployment::WorkerId;
 use super::hotpath::BufferPool;
 use super::server::{BatchHandle, InferBackend};
 use super::{Completion, Request};
+use crate::obs::{Obs, SpanEvent, SpanRing};
 
 /// Where a replica's outputs go.
 pub(crate) enum Sink {
@@ -89,6 +90,8 @@ impl Replica {
         window: usize,
         sink: Sink,
         pool: Arc<BufferPool>,
+        obs: Arc<Obs>,
+        ring: Arc<SpanRing>,
     ) -> Replica
     where
         B: InferBackend,
@@ -104,24 +107,36 @@ impl Replica {
             .name(format!("fcmp-g{}-s{}", id.group, id.stage))
             .spawn(move || {
                 let backend = make_backend();
+                let (g, s) = (id.group as u16, id.stage as u16);
                 let mut inflight: VecDeque<Inflight> = VecDeque::with_capacity(window);
+                // Gather stamp at the moment each request leaves the stage
+                // queue; a no-op hook when tracing is off keeps the formed
+                // batch path identical
+                let mut on_pull: Box<dyn FnMut(&mut Request)> = if obs.active() {
+                    let obs = Arc::clone(&obs);
+                    Box::new(move |r: &mut Request| {
+                        obs.stamp(&mut r.span, SpanEvent::Gather, g, s);
+                    })
+                } else {
+                    Box::new(|_| {})
+                };
                 loop {
                     // reap everything already done, oldest first
                     while inflight.front().is_some_and(|fl| fl.handle.is_ready()) {
                         let fl = inflight.pop_front().expect("non-empty front");
-                        reap(fl, &sink, id, &counter, &pool);
+                        reap(fl, &sink, id, &counter, &pool, &obs, &ring);
                     }
                     // window full: the oldest batch gates further submits
                     if inflight.len() >= window {
                         if let Some(fl) = inflight.pop_front() {
-                            reap(fl, &sink, id, &counter, &pool);
+                            reap(fl, &sink, id, &counter, &pool, &obs, &ring);
                         }
                         continue;
                     }
                     let cfg = shared_worker.load();
                     let batch = if inflight.is_empty() {
                         // idle: park on the channel, zero CPU
-                        match next_batch(&rx, &cfg) {
+                        match next_batch_traced(&rx, &cfg, &mut on_pull) {
                             Some(b) => b,
                             None => break,
                         }
@@ -133,13 +148,18 @@ impl Replica {
                             .and_then(|fl| fl.handle.eta())
                             .unwrap_or(cfg.max_wait)
                             .max(MIN_POLL);
-                        match poll_batch(&rx, &cfg, limit) {
+                        match poll_batch_traced(&rx, &cfg, limit, &mut on_pull) {
                             BatchPoll::Batch(b) => b,
                             BatchPoll::Idle => continue,
                             BatchPoll::Closed => break,
                         }
                     };
                     let mut batch = batch;
+                    if obs.active() {
+                        for r in &mut batch.requests {
+                            obs.stamp(&mut r.span, SpanEvent::Dispatch, g, s);
+                        }
+                    }
                     // move inputs out (no per-request copy on the hot path)
                     let inputs: Vec<Vec<f32>> = batch
                         .requests
@@ -158,6 +178,9 @@ impl Replica {
                                 id.group, id.stage
                             );
                             counter.fetch_sub(batch.requests.len(), Ordering::SeqCst);
+                            for mut r in batch.requests {
+                                obs.recycle(r.span.take());
+                            }
                             for input in inputs {
                                 pool.put(input);
                             }
@@ -166,7 +189,7 @@ impl Replica {
                 }
                 // drain barrier: reap every submitted batch in FIFO order
                 for fl in inflight {
-                    reap(fl, &sink, id, &counter, &pool);
+                    reap(fl, &sink, id, &counter, &pool, &obs, &ring);
                 }
             })
             .expect("spawn replica worker");
@@ -227,52 +250,79 @@ impl Replica {
 /// sink, recycle the input buffers, and release the outstanding count.
 /// The counter is decremented *after* emission (same ordering as the old
 /// synchronous loop), so JSQ never undercounts work still being routed.
-fn reap(fl: Inflight, sink: &Sink, id: WorkerId, counter: &AtomicUsize, pool: &BufferPool) {
-    let Inflight { requests, inputs, handle } = fl;
+fn reap(
+    fl: Inflight,
+    sink: &Sink,
+    id: WorkerId,
+    counter: &AtomicUsize,
+    pool: &BufferPool,
+    obs: &Obs,
+    ring: &SpanRing,
+) {
+    let Inflight { mut requests, inputs, handle } = fl;
     let n = requests.len();
+    let (g, s) = (id.group as u16, id.stage as u16);
     match handle.wait() {
-        Ok(outputs) => match sink {
-            Sink::Complete { tx, group } => {
-                for (req, output) in requests.into_iter().zip(outputs) {
-                    let mut stage_latencies = req.stage_latencies;
-                    let mut stage_batches = req.stage_batches;
-                    // chain frames log the final hop too, so len == chain
-                    // length; 1-stage-group completions keep the empty
-                    // marker
-                    if !stage_latencies.is_empty() {
-                        stage_latencies.push(req.stage_arrival.elapsed());
-                        stage_batches.push(n);
-                    }
-                    let _ = tx.send(Completion {
-                        id: req.id,
-                        output,
-                        latency: req.arrival.elapsed(),
-                        batch_size: n,
-                        group: group.load(Ordering::SeqCst),
-                        stage: id.stage,
-                        stage_latencies,
-                        stage_batches,
-                    });
+        Ok(outputs) => {
+            if obs.active() {
+                for r in &mut requests {
+                    obs.stamp(&mut r.span, SpanEvent::Reap, g, s);
                 }
             }
-            Sink::Forward { next, next_outstanding } => {
-                for (mut req, output) in requests.into_iter().zip(outputs) {
-                    req.stage_latencies.push(req.stage_arrival.elapsed());
-                    req.stage_batches.push(n);
-                    req.input = output;
-                    req.stage_arrival = Instant::now();
-                    next_outstanding.fetch_add(1, Ordering::SeqCst);
-                    // blocking send: the bounded downstream queue is the
-                    // inter-stage FIFO, so a full next stage
-                    // backpressures this one
-                    if next.send(req).is_err() {
-                        next_outstanding.fetch_sub(1, Ordering::SeqCst);
+            match sink {
+                Sink::Complete { tx, group } => {
+                    for (mut req, output) in requests.into_iter().zip(outputs) {
+                        let mut stage_latencies = req.stage_latencies;
+                        let mut stage_batches = req.stage_batches;
+                        // chain frames log the final hop too, so len == chain
+                        // length; 1-stage-group completions keep the empty
+                        // marker
+                        if !stage_latencies.is_empty() {
+                            stage_latencies.push(req.stage_arrival.elapsed());
+                            stage_batches.push(n);
+                        }
+                        obs.complete(&mut req.span, ring, g, s);
+                        let _ = tx.send(Completion {
+                            id: req.id,
+                            output,
+                            latency: req.arrival.elapsed(),
+                            batch_size: n,
+                            group: group.load(Ordering::SeqCst),
+                            stage: id.stage,
+                            stage_latencies,
+                            stage_batches,
+                            span: req.span,
+                        });
+                    }
+                }
+                Sink::Forward { next, next_outstanding } => {
+                    for (mut req, output) in requests.into_iter().zip(outputs) {
+                        req.stage_latencies.push(req.stage_arrival.elapsed());
+                        req.stage_batches.push(n);
+                        req.input = output;
+                        req.stage_arrival = Instant::now();
+                        // stamped at the *sending* stage as the frame is
+                        // handed to the link; when the send below blocks
+                        // on a full downstream queue, the wait lands in
+                        // the next stage's queue segment (and in the link
+                        // segment of this batch's trailing frames)
+                        obs.stamp(&mut req.span, SpanEvent::LinkHop, g, s);
+                        next_outstanding.fetch_add(1, Ordering::SeqCst);
+                        // blocking send: the bounded downstream queue is the
+                        // inter-stage FIFO, so a full next stage
+                        // backpressures this one
+                        if next.send(req).is_err() {
+                            next_outstanding.fetch_sub(1, Ordering::SeqCst);
+                        }
                     }
                 }
             }
-        },
+        }
         Err(e) => {
             eprintln!("worker g{}.s{}: batch failed: {e:#}", id.group, id.stage);
+            for mut req in requests {
+                obs.recycle(req.span.take());
+            }
         }
     }
     for input in inputs {

@@ -53,6 +53,7 @@ use super::policy::{Policy, Scheduler};
 use super::replica::{Replica, Sink};
 use super::workload::Trace;
 use super::{Completion, Request};
+use crate::obs::{Exposition, Obs, ObsConfig, SpanEvent};
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -398,6 +399,10 @@ struct RouterCore {
     entries: Vec<GroupEntry>,
     scheduler: Scheduler,
     counters: Arc<HotCounters>,
+    /// Observability hub: head-based sampling happens at dispatch, the
+    /// Enqueue stamp right before the entry `try_send`. A disabled hub
+    /// costs one branch per dispatch.
+    obs: Arc<Obs>,
 }
 
 /// Exponential-backoff bounds for blocking/deadline submits parked-out on
@@ -409,15 +414,19 @@ impl RouterCore {
     /// A router with no entries: every dispatch reports `Closed`. Swapped
     /// in *before* a shutdown/reshape closes worker queues, so the old
     /// core's entry senders drop and the workers' channels can disconnect.
-    fn detached(policy: Policy, counters: Arc<HotCounters>) -> RouterCore {
-        RouterCore { entries: Vec::new(), scheduler: Scheduler::new(policy, 1), counters }
+    fn detached(policy: Policy, counters: Arc<HotCounters>, obs: Arc<Obs>) -> RouterCore {
+        RouterCore { entries: Vec::new(), scheduler: Scheduler::new(policy, 1), counters, obs }
     }
 
     /// Non-blocking entry submit with increment-before-send counter
     /// discipline (a decrement-first interleaving could wrap the counter
     /// and corrupt the JSQ load signal; the transient +1 on failure is
     /// harmless).
-    fn try_entry(&self, g: usize, req: Request) -> std::result::Result<(), (Request, bool)> {
+    fn try_entry(&self, g: usize, mut req: Request) -> std::result::Result<(), (Request, bool)> {
+        // stamped before the send (the request is gone on success); a
+        // shed-and-retried request re-stamps and the analyzer keeps the
+        // last Enqueue — the one that actually landed
+        self.obs.stamp(&mut req.span, SpanEvent::Enqueue, g as u16, 0);
         let e = &self.entries[g];
         e.entry_outstanding.fetch_add(1, Ordering::SeqCst);
         match e.tx.try_send(req) {
@@ -442,8 +451,14 @@ impl RouterCore {
     /// `Vec`). A single-group deployment has no siblings, so a full entry
     /// queue sheds immediately — frames can never enter a chain
     /// mid-pipeline.
-    fn dispatch(&self, req: Request) -> std::result::Result<usize, SubmitError> {
+    fn dispatch(&self, mut req: Request) -> std::result::Result<usize, SubmitError> {
         self.counters.submits.fetch_add(1, Ordering::Relaxed);
+        // head-based sampling: decided once per request id (idempotent
+        // across the blocking-submit retry loop — the span survives in
+        // the returned request)
+        if self.obs.active() && req.span.is_none() {
+            req.span = self.obs.sample(req.id);
+        }
         if self.entries.is_empty() {
             return Err(SubmitError::Closed(req));
         }
@@ -485,7 +500,8 @@ impl RouterCore {
 
     /// Blocking entry submit (parks on the bounded queue); fails only on
     /// a disconnected (dead) worker.
-    fn wait_entry(&self, g: usize, req: Request) -> std::result::Result<(), Request> {
+    fn wait_entry(&self, g: usize, mut req: Request) -> std::result::Result<(), Request> {
+        self.obs.stamp(&mut req.span, SpanEvent::Enqueue, g as u16, 0);
         let e = &self.entries[g];
         e.entry_outstanding.fetch_add(1, Ordering::SeqCst);
         match e.tx.send(req) {
@@ -623,17 +639,37 @@ pub struct Server {
     router: Arc<RouterCore>,
     pool: Arc<BufferPool>,
     counters: Arc<HotCounters>,
+    obs: Arc<Obs>,
+    exposition: Option<Exposition>,
+    /// Sheds since the last anomaly observation (replay's shed-burst
+    /// window).
+    shed_window: u64,
 }
 
 impl Server {
     /// Spawn the fleet described by `plan`. `make_backend(id)` runs on
     /// worker `id`'s own thread (PJRT engines are thread-affine) and a
-    /// panic there surfaces on first use of that worker.
+    /// panic there surfaces on first use of that worker. Tracing is off;
+    /// use [`Server::deploy_with_obs`] to sample request spans.
     pub fn deploy<B, F>(make_backend: F, plan: Deployment) -> Server
     where
         B: InferBackend,
         F: Fn(WorkerId) -> B + Send + Sync + 'static,
     {
+        Self::deploy_with_obs(make_backend, plan, &ObsConfig::default())
+    }
+
+    /// [`Server::deploy`] with flight-recorder tracing: requests are
+    /// head-sampled per `cfg`, stamped through the monotonic clock at
+    /// every lifecycle point, and terminal spans land in per-worker
+    /// recorder rings (flushed to `cfg.trace_out` on anomalies and at
+    /// shutdown).
+    pub fn deploy_with_obs<B, F>(make_backend: F, plan: Deployment, cfg: &ObsConfig) -> Server
+    where
+        B: InferBackend,
+        F: Fn(WorkerId) -> B + Send + Sync + 'static,
+    {
+        let obs = Obs::new(cfg, Arc::new(crate::obs::MonotonicClock::new()));
         let plan = plan.normalized();
         // completions are unbounded: backpressure belongs on the *request*
         // queues; a bounded completion channel can deadlock shutdown (worker
@@ -643,9 +679,13 @@ impl Server {
         let pool = Arc::new(BufferPool::new(Self::pool_capacity(&plan)));
         let factory = Arc::new(make_backend);
         let groups: Vec<Group> = (0..plan.groups.len())
-            .map(|g| Self::spawn_group(&factory, &plan, g, &ctx, &pool))
+            .map(|g| Self::spawn_group(&factory, &plan, g, &ctx, &pool, &obs))
             .collect();
-        let router = Arc::new(RouterCore::detached(plan.policy.clone(), Arc::clone(&counters)));
+        let router = Arc::new(RouterCore::detached(
+            plan.policy.clone(),
+            Arc::clone(&counters),
+            Arc::clone(&obs),
+        ));
         let mut srv = Server {
             groups,
             plan,
@@ -654,6 +694,9 @@ impl Server {
             router,
             pool,
             counters,
+            obs,
+            exposition: None,
+            shed_window: 0,
         };
         srv.rebuild_router();
         srv
@@ -704,8 +747,11 @@ impl Server {
         // detach the router first: the old core holds clones of every
         // entry sender, and leaving groups can only drain once those
         // drop. Outstanding SubmitHandles go Closed here by design.
-        self.router =
-            Arc::new(RouterCore::detached(plan.policy.clone(), Arc::clone(&self.counters)));
+        self.router = Arc::new(RouterCore::detached(
+            plan.policy.clone(),
+            Arc::clone(&self.counters),
+            Arc::clone(&self.obs),
+        ));
         // match running groups to new slots by key: first unused match, in
         // plan order, so N identical untagged groups keep min(old, new).
         // A group with any dead worker never matches — re-applying the
@@ -742,7 +788,7 @@ impl Server {
                     grp.pos.store(g, Ordering::SeqCst);
                     grp
                 }
-                None => Self::spawn_group(&factory, &plan, g, &ctx, &self.pool),
+                None => Self::spawn_group(&factory, &plan, g, &ctx, &self.pool, &self.obs),
             })
             .collect();
         self.plan = plan;
@@ -768,6 +814,7 @@ impl Server {
             entries,
             scheduler: Scheduler::new(self.plan.policy.clone(), self.groups.len().max(1)),
             counters: Arc::clone(&self.counters),
+            obs: Arc::clone(&self.obs),
         });
     }
 
@@ -780,6 +827,7 @@ impl Server {
         g: usize,
         ctx: &Sender<Completion>,
         pool: &Arc<BufferPool>,
+        obs: &Arc<Obs>,
     ) -> Group
     where
         B: InferBackend,
@@ -805,6 +853,8 @@ impl Server {
                 plan.window,
                 sink,
                 Arc::clone(pool),
+                Arc::clone(obs),
+                obs.recorder().register(),
             );
             downstream =
                 Some((r.sender().expect("fresh replica is open"), r.outstanding_handle()));
@@ -945,6 +995,24 @@ impl Server {
         &self.pool
     }
 
+    /// The observability hub (sampler, span pool, flight recorder) this
+    /// fleet stamps through.
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
+    }
+
+    /// Attach a live metrics emitter: [`Server::replay`] drives it on
+    /// the arrival loop's clock, and the final snapshot is emitted when
+    /// the replay drains.
+    pub fn set_exposition(&mut self, e: Exposition) {
+        self.exposition = Some(e);
+    }
+
+    /// The attached metrics emitter, if any.
+    pub fn exposition(&self) -> Option<&Exposition> {
+        self.exposition.as_ref()
+    }
+
     /// Receive the next completion (blocks until one arrives, or returns
     /// `None` once the fleet has shut down and the stream is drained).
     /// The stream only terminates after [`Server::shutdown`] — a fleet
@@ -995,8 +1063,9 @@ impl Server {
                 }
                 let wait = Duration::from_secs_f64((due - now).min(0.005));
                 match self.completions.recv_timeout(wait) {
-                    Ok(c) => {
+                    Ok(mut c) => {
                         fm.record(&c);
+                        self.obs.recycle(c.span.take());
                         self.pool.put(c.output);
                     }
                     // every worker died (panicked backend): nothing will
@@ -1013,26 +1082,36 @@ impl Server {
             input.extend((0..input_len).map(|_| rng.below(256) as f32));
             match self.submit(i as u64, input) {
                 Ok(_) => fm.record_submitted(),
-                Err(SubmitError::QueueFull(r)) | Err(SubmitError::Timeout(r)) => {
+                Err(SubmitError::QueueFull(mut r)) | Err(SubmitError::Timeout(mut r)) => {
                     fm.record_shed();
+                    self.shed_window += 1;
+                    // a shed request never reached a group; its span (if
+                    // sampled) is finalized into the shed ring under the
+                    // router's view (group 0)
+                    self.obs.shed(r.span.take(), 0);
                     // the shed request's buffer goes straight back
                     self.pool.put(r.input);
                 }
                 Err(SubmitError::Closed(_)) => return fm,
             }
+            self.observe_anomalies();
+            self.emit_snapshot(&fm, t0.elapsed().as_secs_f64(), false);
         }
         // drain: every accepted request completes unless a backend fails its
         // batch (never on the mock/PJRT paths), so guard with a stall timeout
         let mut last_progress = Instant::now();
         while fm.completed() < fm.submitted() {
             match self.completions.recv_timeout(Duration::from_millis(50)) {
-                Ok(c) => {
+                Ok(mut c) => {
                     fm.record(&c);
+                    self.obs.recycle(c.span.take());
                     self.pool.put(c.output);
                     last_progress = Instant::now();
                 }
                 Err(RecvTimeoutError::Disconnected) => break,
                 Err(RecvTimeoutError::Timeout) => {
+                    self.observe_anomalies();
+                    self.emit_snapshot(&fm, t0.elapsed().as_secs_f64(), false);
                     if self.all_workers_dead()
                         || last_progress.elapsed() > Duration::from_secs(10)
                     {
@@ -1041,7 +1120,42 @@ impl Server {
                 }
             }
         }
+        // final snapshot: the drained end state, emitted unconditionally
+        self.emit_snapshot(&fm, t0.elapsed().as_secs_f64(), true);
         fm
+    }
+
+    /// Feed the flight recorder's anomaly detector from replay-loop
+    /// state: sheds since the last anomaly flush plus dead chain groups.
+    /// The shed window resets whenever a flush fires, so one sustained
+    /// overload burst triggers one capture, not one per arrival.
+    fn observe_anomalies(&mut self) {
+        if !self.obs.active() {
+            return;
+        }
+        let before = self.obs.recorder().flush_count();
+        self.obs.recorder().observe(None, self.shed_window, self.dead_groups());
+        if self.obs.recorder().flush_count() != before {
+            self.shed_window = 0;
+        }
+    }
+
+    /// Emit a live metrics snapshot when an emitter is attached and its
+    /// interval has elapsed (or `force`d, for the final end-of-replay
+    /// state). Gated on [`Exposition::due`] first so the steady-state
+    /// arrival path never pays for histogram-merging summary
+    /// construction between intervals.
+    fn emit_snapshot(&mut self, fm: &FleetMetrics, now_s: f64, force: bool) {
+        if !self.exposition.as_ref().is_some_and(|e| force || e.due(now_s)) {
+            return;
+        }
+        let mut hot = self.counters.snapshot();
+        self.pool.merge_into(&mut hot);
+        let mut s = fm.summary();
+        s.hot = hot;
+        if let Some(e) = self.exposition.as_mut() {
+            e.emit(now_s, &s, None);
+        }
     }
 
     /// Stop accepting requests and wait for every group to drain its
@@ -1049,6 +1163,7 @@ impl Server {
     /// are drained the completion stream terminates (and no further plan
     /// can be [`Server::apply`]d).
     pub fn shutdown(&mut self) {
+        let was_open = self.completion_tx.is_some();
         // the router holds clones of every entry sender: swap in a
         // detached core first so the worker channels can actually
         // disconnect once the groups close (outstanding SubmitHandles go
@@ -1056,6 +1171,7 @@ impl Server {
         self.router = Arc::new(RouterCore::detached(
             self.plan.policy.clone(),
             Arc::clone(&self.counters),
+            Arc::clone(&self.obs),
         ));
         for g in &mut self.groups {
             g.close();
@@ -1064,6 +1180,11 @@ impl Server {
             g.join();
         }
         self.completion_tx = None;
+        // final flight-recorder flush: whatever the rings still hold is
+        // appended once (Drop re-enters shutdown, hence the gate)
+        if was_open && self.obs.active() {
+            let _ = self.obs.recorder().flush("shutdown");
+        }
     }
 }
 

@@ -31,7 +31,12 @@
 //! overlap batch formation and transfer with compute, recycled request
 //! buffers and histogram-backed metrics for an allocation-free steady
 //! state (see the hot-path profile in
-//! [`coordinator::HotPathStats`]).
+//! [`coordinator::HotPathStats`]). An observability layer ([`obs`])
+//! rides the same path: pooled flight-recorder request spans sampled at
+//! the head, stamped through one clock seam in real (server) and
+//! virtual (sim) time, flushed to JSONL on anomaly triggers, plus live
+//! Prometheus-text/JSONL metrics exposition and a `tracereport`
+//! critical-path breakdown.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -43,6 +48,7 @@ pub mod folding;
 pub mod gals;
 pub mod memory;
 pub mod nn;
+pub mod obs;
 pub mod packing;
 pub mod report;
 pub mod runtime;

@@ -36,6 +36,11 @@
 //!               [--p99-out MS] [--util-in 0.25] [--cooldown 3] [--step 1]
 //!               [--tick-ms 25] [--signal-window 3] [--slo-p99 MS]
 //!               [--trailing 8] [--events-out PATH] [--require-scale-cycle]
+//!               (serve + simulate also take the tracing/metrics flags:
+//!               [--trace-sample P] [--trace-seed S] [--trace-ring N]
+//!               [--spans-out PATH] [--p99-budget MS] [--shed-burst N]
+//!               [--metrics-out PATH] [--metrics-interval S])
+//! fcmp tracereport --spans PATH (critical-path breakdown of a span file)
 //! fcmp dse      --network ... --device ... [--budget 0.85]
 //! ```
 
@@ -52,12 +57,13 @@ use fcmp::coordinator::{
 use fcmp::device;
 use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
 use fcmp::nn::{cnv, resnet50, CnvVariant, Network};
+use fcmp::obs::{tracereport, AnomalyConfig, Exposition, ObsConfig};
 use fcmp::packing::{anneal::Anneal, ffd::Ffd, Packer};
 use fcmp::sharding::{self, LinkSpec, PartitionConfig};
 use fcmp::sim::{FleetSim, SimBackend, SimConfig, SimControl};
 use fcmp::util::args::Args;
 use fcmp::{folding, report, runtime, sim};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 fn network_by_name(name: &str) -> Option<Network> {
@@ -316,6 +322,50 @@ fn trace_by_name(name: &str, n: usize, rate: f64, seed: u64) -> anyhow::Result<T
             )
         }
     })
+}
+
+/// Span-tracing knobs shared by the serving drivers: `--trace-sample P`
+/// samples that fraction of requests into pooled spans, `--spans-out
+/// PATH` is the JSONL flight-recorder sink (distinct from `--trace-out`,
+/// which records the *arrival* trace), `--p99-budget MS` and
+/// `--shed-burst N` arm the anomaly flush triggers.
+fn obs_by_args(a: &Args) -> ObsConfig {
+    ObsConfig {
+        sample: a.get_f64("trace-sample", 0.0).clamp(0.0, 1.0),
+        seed: a.get_usize("trace-seed", 0x5eed) as u64,
+        ring: a.get_usize("trace-ring", 256).max(1),
+        trace_out: a.get("spans-out").map(PathBuf::from),
+        anomaly: AnomalyConfig {
+            p99_budget_ms: a.get_f64("p99-budget", f64::INFINITY),
+            shed_burst: a.get_usize("shed-burst", usize::MAX) as u64,
+            ..AnomalyConfig::default()
+        },
+    }
+}
+
+/// Live metrics exposition: `--metrics-out PATH` rewrites a Prometheus
+/// text file (and appends JSONL snapshots next to it) every
+/// `--metrics-interval` seconds of driver time.
+fn exposition_by_args(a: &Args) -> Option<Exposition> {
+    a.get("metrics-out")
+        .map(|p| Exposition::new(p, a.get_f64("metrics-interval", 0.25).max(1e-6)))
+}
+
+/// One-line tracing epilogue: pool health and flush count, printed by
+/// the drivers so CI smokes can grep for the zero-miss invariant.
+fn print_obs_summary(obs: &fcmp::obs::Obs) {
+    if !obs.active() {
+        return;
+    }
+    let (hits, misses) = obs.span_pool_stats();
+    let sink = match obs.recorder().out_path() {
+        Some(p) => format!(" -> {}", p.display()),
+        None => String::new(),
+    };
+    println!(
+        "tracing: {hits} span(s) sampled ({misses} pool miss(es)), {} recorder flush(es){sink}",
+        obs.recorder().flush_count()
+    );
 }
 
 /// Parse a failure-injection schedule: `T:G[,T:G...]` (at `T` seconds,
@@ -583,14 +633,23 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         }
     }
 
+    // span tracing + live exposition (no-ops unless --trace-sample /
+    // --metrics-out are given); the exposition moves into whichever
+    // backend arm runs
+    let ocfg = obs_by_args(a);
+    let expo = exposition_by_args(a);
     let (mut srv, fm) = match backend {
         "mock" => {
-            let mut srv = Server::deploy(
+            let mut srv = Server::deploy_with_obs(
                 move |id: WorkerId| {
                     MockBackend::with_service(Duration::ZERO, svc[id.group][id.stage])
                 },
                 plan,
+                &ocfg,
             );
+            if let Some(e) = expo {
+                srv.set_exposition(e);
+            }
             let fm = srv.replay(&trace, 8, seed);
             (srv, fm)
         }
@@ -606,7 +665,7 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
                 100.0 * xfer_frac,
                 100.0 * (1.0 - xfer_frac)
             );
-            let mut srv = Server::deploy(
+            let mut srv = Server::deploy_with_obs(
                 move |id: WorkerId| {
                     let s = svc[id.group][id.stage];
                     PipelinedMockBackend::overlapped(
@@ -615,7 +674,11 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
                     )
                 },
                 plan,
+                &ocfg,
             );
+            if let Some(e) = expo {
+                srv.set_exposition(e);
+            }
             let fm = srv.replay(&trace, 8, seed);
             (srv, fm)
         }
@@ -629,10 +692,14 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
             let probe = runtime::Engine::load(&arts, model)?;
             let per = probe.manifest.input_elements_per_sample() as usize;
             drop(probe);
-            let mut srv = Server::deploy(
+            let mut srv = Server::deploy_with_obs(
                 move |_| runtime::Engine::load(&arts, model).expect("engine"),
                 plan,
+                &ocfg,
             );
+            if let Some(e) = expo {
+                srv.set_exposition(e);
+            }
             let fm = srv.replay(&trace, per, seed);
             (srv, fm)
         }
@@ -644,6 +711,10 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         trace.offered_rate()
     );
     println!("{}", fm.summary());
+    print_obs_summary(srv.obs());
+    if let Some(e) = srv.exposition() {
+        println!("metrics: {} snapshot(s) to {}", e.emits(), e.path().display());
+    }
     Ok(())
 }
 
@@ -910,15 +981,26 @@ fn cmd_simulate(a: &Args) -> anyhow::Result<()> {
         None
     };
     let standby = max_groups.saturating_sub(chains);
-    let cfg = SimConfig { input_len: a.get_usize("input-len", 8), seed, control };
+    let cfg = SimConfig {
+        input_len: a.get_usize("input-len", 8),
+        seed,
+        control,
+        obs: obs_by_args(a),
+    };
 
     println!(
         "simulate: {chains} chain group(s) x {stages} stage(s) (+{standby} standby), \
          policy {policy_name}, trace {trace_name} ({:.0} req/s offered), window {window}",
         trace.offered_rate()
     );
+    let mut fleet_sim = FleetSim::uniform_with_standby(plan, backend, standby, cfg);
+    if let Some(e) = exposition_by_args(a) {
+        fleet_sim.set_exposition(e);
+    }
+    // run() consumes the sim; keep the obs hub for the epilogue
+    let sim_obs = fleet_sim.obs().clone();
     let t0 = std::time::Instant::now();
-    let rep = FleetSim::uniform_with_standby(plan, backend, standby, cfg).run(&trace);
+    let rep = fleet_sim.run(&trace);
     let wall = t0.elapsed();
 
     if !rep.events.is_empty() {
@@ -950,6 +1032,10 @@ fn cmd_simulate(a: &Args) -> anyhow::Result<()> {
         rep.submitted as f64 / wall.as_secs_f64().max(1e-9)
     );
     println!("{}", rep.summary);
+    print_obs_summary(&sim_obs);
+    if let Some(p) = a.get("metrics-out") {
+        println!("metrics: snapshots to {p}");
+    }
 
     if a.has_flag("require-scale-cycle") {
         let first_out = rep.events.iter().find_map(|e| match e.kind {
@@ -970,6 +1056,30 @@ fn cmd_simulate(a: &Args) -> anyhow::Result<()> {
         );
         println!("scale cycle OK: out at tick {out_tick}, in at tick {in_tick}");
     }
+    Ok(())
+}
+
+/// `fcmp tracereport`: critical-path breakdown of a span trace file —
+/// where each sampled request's latency went (stage-queue wait, batch
+/// gather, backend compute, inter-stage link) per chain group and stage.
+fn cmd_tracereport(a: &Args) -> anyhow::Result<()> {
+    let path = a
+        .get("spans")
+        .ok_or_else(|| anyhow::anyhow!("--spans PATH required (a --spans-out JSONL file)"))?;
+    let spans = tracereport::load(Path::new(path))?;
+    anyhow::ensure!(!spans.is_empty(), "no spans in {path} (was --trace-sample > 0?)");
+    let rep = tracereport::analyze(&spans);
+    anyhow::ensure!(
+        !rep.stages.is_empty(),
+        "spans in {path} carry no stage stamps (all shed before admission?)"
+    );
+    println!(
+        "tracereport [{path}]: {} completed span(s), {} shed, {} (group, stage) cell(s)",
+        rep.completed,
+        rep.shed,
+        rep.stages.len()
+    );
+    println!("{}", tracereport::table(&rep).render());
     Ok(())
 }
 
@@ -1075,7 +1185,15 @@ subcommands:
           pool, --backend mock|pipelined [--xfer-frac], --service-us per
           request, --autoscale [--min/--shed-out/--p99-out/--util-in/
           --cooldown/--step], --slo-p99 MS, --tick-ms/--signal-window/
-          --trailing, --events-out PATH, --require-scale-cycle (CI smoke)
+          --trailing, --events-out PATH, --require-scale-cycle (CI smoke);
+          serve and simulate both take the observability flags:
+          --trace-sample P samples request spans (--trace-seed/--trace-ring),
+          --spans-out PATH flushes the flight recorder to JSONL (anomaly
+          triggers --p99-budget MS / --shed-burst N, plus shutdown), and
+          --metrics-out PATH [--metrics-interval S] exposes live
+          Prometheus-text + JSONL metric snapshots
+  tracereport  critical-path breakdown of a span trace (--spans PATH):
+          per-(group, stage) queue / gather / compute / link time table
   dse     folding design-space exploration (--network, --device, --budget)
   floorplan  SLR floorplan of a network on a multi-die device (Fig. 5)";
 
@@ -1091,6 +1209,7 @@ fn main() {
         Some("shard") => cmd_shard(&args),
         Some("autoscale") => cmd_autoscale(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("tracereport") => cmd_tracereport(&args),
         Some("dse") => cmd_dse(&args),
         Some("floorplan") => cmd_floorplan(&args),
         _ => {

@@ -1,0 +1,291 @@
+//! Live metrics exposition: periodic snapshots of the serving fleet
+//! rendered two ways from one source —
+//!
+//! * **Prometheus text** (`--metrics-out PATH`): the whole current
+//!   [`crate::coordinator::FleetSummary`] (+ the latest windowed
+//!   [`crate::control::ControlSignals`], when a control plane runs) as
+//!   `# HELP`/`# TYPE`/sample lines, rewritten atomically each interval
+//!   like a node-exporter textfile. `ci/check_exposition.py` validates
+//!   the grammar in CI.
+//! * **JSONL** (`PATH.jsonl`): one appended object per emission, the
+//!   machine-readable trajectory of the same snapshot for plotting.
+//!
+//! Emission is driven by whatever loop the driver already runs — the
+//! trace-replay arrival loop in real time, the control tick in virtual
+//! time — through [`Exposition::maybe_emit`] with the driver's own
+//! clock, so the emitter works unchanged in both time domains.
+
+use std::path::{Path, PathBuf};
+
+use crate::control::ControlSignals;
+use crate::coordinator::{FleetSummary, ServeSummary};
+
+/// Render a fleet summary (+ optional control signals) as Prometheus
+/// exposition text.
+pub fn prometheus_text(s: &FleetSummary, signals: Option<&ControlSignals>) -> String {
+    let mut out = String::with_capacity(2048);
+    let mut counter = |name: &str, help: &str, v: f64| {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+        ));
+    };
+    counter("fcmp_submitted_total", "Requests accepted by admission control", s.submitted as f64);
+    counter("fcmp_shed_total", "Requests shed by admission control", s.shed as f64);
+    let completed = s.fleet.as_ref().map_or(0, |f| f.requests);
+    counter("fcmp_completed_total", "Completions recorded", completed as f64);
+    counter("fcmp_hot_submits_total", "Submit fast-path entries", s.hot.submits as f64);
+    counter(
+        "fcmp_hot_fallback_scans_total",
+        "Submits that scanned fallback groups",
+        s.hot.fallback_scans as f64,
+    );
+    counter("fcmp_pool_hits_total", "Request buffers served from the pool", s.hot.pool_hits as f64);
+    counter(
+        "fcmp_pool_misses_total",
+        "Request buffers allocated cold (0 in steady state)",
+        s.hot.pool_misses as f64,
+    );
+
+    let mut gauge = |out: &mut String, name: &str, help: &str, labels: &str, v: f64| {
+        if v.is_finite() {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name}{labels} {v}\n"
+            ));
+        }
+    };
+    if let Some(f) = &s.fleet {
+        gauge(&mut out, "fcmp_throughput_fps", "Fleet throughput", "", f.throughput_fps);
+        gauge(&mut out, "fcmp_mean_batch", "Mean ridden batch size", "", f.mean_batch);
+        let mut q = String::new();
+        for (p, v) in
+            [("0.5", f.latency_ms.median), ("0.95", f.latency_ms.p95), ("0.99", f.latency_ms.p99)]
+        {
+            q.push_str(&format!("fcmp_latency_ms{{quantile=\"{p}\"}} {v}\n"));
+        }
+        out.push_str(&format!(
+            "# HELP fcmp_latency_ms Fleet end-to-end latency quantiles\n# TYPE fcmp_latency_ms gauge\n{q}"
+        ));
+    }
+
+    // per-group end-to-end views, labelled by router position
+    let mut grows = String::new();
+    let mut push_group = |g: usize, f: &ServeSummary| {
+        grows.push_str(&format!("fcmp_group_requests{{group=\"{g}\"}} {}\n", f.requests));
+        grows.push_str(&format!(
+            "fcmp_group_p99_ms{{group=\"{g}\"}} {}\n",
+            f.latency_ms.p99
+        ));
+    };
+    for (g, f) in s.per_group.iter().enumerate() {
+        if let Some(f) = f {
+            push_group(g, f);
+        }
+    }
+    if !grows.is_empty() {
+        out.push_str(
+            "# HELP fcmp_group_requests Completions per chain group\n# TYPE fcmp_group_requests gauge\n",
+        );
+        out.push_str(
+            "# HELP fcmp_group_p99_ms Per-group end-to-end p99\n# TYPE fcmp_group_p99_ms gauge\n",
+        );
+        out.push_str(&grows);
+    }
+
+    if let Some(sig) = signals {
+        gauge(&mut out, "fcmp_control_shed_rate", "Windowed shed rate", "", sig.shed_rate);
+        gauge(
+            &mut out,
+            "fcmp_control_util_max",
+            "Windowed max replica utilization",
+            "",
+            sig.max_utilization,
+        );
+        if let Some(p99) = sig.p99_ms {
+            gauge(&mut out, "fcmp_control_p99_ms", "Windowed latency p99", "", p99);
+        }
+        gauge(&mut out, "fcmp_control_tick", "Last closed control tick", "", sig.tick as f64);
+    }
+    out
+}
+
+/// Render the same snapshot as one JSON object (a JSONL line).
+pub fn json_snapshot(now_s: f64, s: &FleetSummary, signals: Option<&ControlSignals>) -> String {
+    let (completed, fps, p50, p99) = match &s.fleet {
+        Some(f) => (f.requests, f.throughput_fps, f.latency_ms.median, f.latency_ms.p99),
+        None => (0, 0.0, 0.0, 0.0),
+    };
+    let mut out = format!(
+        "{{\"t_s\":{:.6},\"submitted\":{},\"shed\":{},\"completed\":{},\"throughput_fps\":{:.3},\
+         \"p50_ms\":{:.4},\"p99_ms\":{:.4},\"pool_misses\":{}",
+        now_s, s.submitted, s.shed, completed, fps, p50, p99, s.hot.pool_misses
+    );
+    if let Some(sig) = signals {
+        out.push_str(&format!(
+            ",\"control\":{{\"tick\":{},\"shed_rate\":{:.6},\"util_max\":{:.6}",
+            sig.tick, sig.shed_rate, sig.max_utilization
+        ));
+        match sig.p99_ms {
+            Some(p) => out.push_str(&format!(",\"p99_ms\":{p:.4}}}")),
+            None => out.push_str(",\"p99_ms\":null}"),
+        }
+    }
+    out.push('}');
+    out
+}
+
+/// Periodic snapshot emitter. `maybe_emit` is cheap when the interval
+/// has not elapsed (one float compare), so drivers call it from their
+/// existing loops without pacing logic of their own.
+#[derive(Debug)]
+pub struct Exposition {
+    path: PathBuf,
+    interval_s: f64,
+    last_emit_s: Option<f64>,
+    emits: usize,
+}
+
+impl Exposition {
+    /// Emit to `path` (Prometheus text; JSONL goes to `path` + `.jsonl`)
+    /// at most every `interval_s` driver-clock seconds.
+    pub fn new(path: impl Into<PathBuf>, interval_s: f64) -> Exposition {
+        Exposition {
+            path: path.into(),
+            interval_s: interval_s.max(0.0),
+            last_emit_s: None,
+            emits: 0,
+        }
+    }
+
+    /// The Prometheus text path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Snapshots written so far.
+    pub fn emits(&self) -> usize {
+        self.emits
+    }
+
+    /// Whether a `maybe_emit` at `now_s` would write a snapshot — lets
+    /// drivers skip building the (histogram-merging) summary entirely
+    /// between intervals.
+    pub fn due(&self, now_s: f64) -> bool {
+        match self.last_emit_s {
+            None => true,
+            Some(last) => now_s - last >= self.interval_s,
+        }
+    }
+
+    /// Emit if the interval has elapsed since the last emission (the
+    /// first call always emits). Returns whether a snapshot was written.
+    pub fn maybe_emit(
+        &mut self,
+        now_s: f64,
+        s: &FleetSummary,
+        signals: Option<&ControlSignals>,
+    ) -> bool {
+        if !self.due(now_s) {
+            return false;
+        }
+        self.emit(now_s, s, signals);
+        true
+    }
+
+    /// Unconditional emission (the final snapshot at shutdown).
+    pub fn emit(&mut self, now_s: f64, s: &FleetSummary, signals: Option<&ControlSignals>) {
+        self.last_emit_s = Some(now_s);
+        self.emits += 1;
+        // the .prom file is a rewrite (current state), the .jsonl an append
+        // (trajectory); IO errors are reported once on stderr, not fatal —
+        // observability must never take the serving path down
+        if let Err(e) = std::fs::write(&self.path, prometheus_text(s, signals)) {
+            eprintln!("metrics exposition: writing {}: {e}", self.path.display());
+        }
+        let jsonl = self.path.with_extension(format!(
+            "{}jsonl",
+            self.path
+                .extension()
+                .map(|e| format!("{}.", e.to_string_lossy()))
+                .unwrap_or_default()
+        ));
+        let line = json_snapshot(now_s, s, signals) + "\n";
+        let r = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&jsonl)
+            .and_then(|mut f| std::io::Write::write_all(&mut f, line.as_bytes()));
+        if let Err(e) = r {
+            eprintln!("metrics exposition: appending {}: {e}", jsonl.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FleetMetrics;
+    use std::time::Duration;
+
+    fn sample_summary() -> FleetSummary {
+        let mut fm = FleetMetrics::new(&[2, 2]);
+        fm.start();
+        fm.record_submitted();
+        fm.record_submitted();
+        fm.record_shed();
+        fm.record(&crate::coordinator::Completion {
+            id: 0,
+            output: vec![0.0],
+            latency: Duration::from_millis(12),
+            batch_size: 2,
+            group: 0,
+            stage: 1,
+            stage_latencies: vec![Duration::from_millis(6), Duration::from_millis(6)],
+            stage_batches: vec![2, 2],
+            span: None,
+        });
+        fm.summary()
+    }
+
+    #[test]
+    fn prometheus_text_has_required_families_and_parses_shape() {
+        let text = prometheus_text(&sample_summary(), None);
+        for name in [
+            "fcmp_submitted_total",
+            "fcmp_shed_total",
+            "fcmp_completed_total",
+            "fcmp_latency_ms{quantile=\"0.99\"}",
+            "fcmp_group_p99_ms{group=\"0\"}",
+            "fcmp_pool_misses_total",
+        ] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        // every non-comment line is `name[{labels}] value` with a finite value
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (_, v) = line.rsplit_once(' ').expect("sample line shape");
+            let v: f64 = v.parse().expect("numeric sample value");
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
+    fn exposition_paces_and_writes_both_files() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("fcmp-expose-{}.prom", std::process::id()));
+        let jsonl = dir.join(format!("fcmp-expose-{}.prom.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&jsonl);
+        let s = sample_summary();
+        let mut e = Exposition::new(&path, 1.0);
+        assert!(e.maybe_emit(0.0, &s, None), "first call must emit");
+        assert!(!e.maybe_emit(0.5, &s, None), "inside the interval");
+        assert!(e.maybe_emit(1.2, &s, None));
+        assert_eq!(e.emits(), 2);
+        let prom = std::fs::read_to_string(&path).unwrap();
+        assert!(prom.contains("fcmp_submitted_total 2"));
+        let lines = std::fs::read_to_string(&jsonl).unwrap();
+        assert_eq!(lines.lines().count(), 2, "one JSONL line per emission");
+        assert!(lines.lines().all(|l| l.starts_with("{\"t_s\":")));
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&jsonl).unwrap();
+    }
+}

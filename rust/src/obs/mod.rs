@@ -1,0 +1,247 @@
+//! Observability layer: span tracing, the flight recorder, and live
+//! metrics exposition — one seam that holds in real time (the threaded
+//! [`crate::coordinator::Server`]) and in virtual time (the
+//! discrete-event [`crate::sim::FleetSim`]).
+//!
+//! ```text
+//!   submit ──sampled?──> RequestSpan (pooled, fixed-size)
+//!      │ enqueue          │ rides Request through the chain
+//!      v                  v
+//!   stage worker: gather → dispatch → reap → link-hop ...
+//!      │                                        │
+//!      v  complete / shed (terminal)            v
+//!   per-worker SpanRing (lock-free, last N) ──flush──> JSONL trace
+//!                         ^
+//!        anomaly triggers: p99 budget breach, shed burst, worker death
+//! ```
+//!
+//! Module map: [`clock`] (the real/virtual time seam), [`span`]
+//! (pooled spans + head-based sampling), [`recorder`] (seqlock rings +
+//! anomaly flushes), [`expose`] (Prometheus-text / JSONL snapshot
+//! emission), [`tracereport`] (trace file → critical-path breakdown).
+//!
+//! The hot-path contract: with tracing off, the cost is one branch per
+//! stamp site; with tracing on, only sampled requests touch the span
+//! pool, and the pool + rings are pre-sized, so the asserted
+//! zero-allocation steady state of the serving path still holds
+//! (`pool_misses == 0` with tracing at 1 % is part of the test suite).
+
+pub mod clock;
+pub mod expose;
+pub mod recorder;
+pub mod span;
+pub mod tracereport;
+
+pub use clock::{Clock, MonotonicClock, VirtualClock};
+pub use expose::Exposition;
+pub use recorder::{AnomalyConfig, FlightRecorder, SpanRing};
+pub use span::{RequestSpan, Sampler, SpanEvent, SpanPool, SpanStamp, MAX_EVENTS};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Tracing configuration a driver hands to [`Obs::new`].
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Head-based sampling probability in [0, 1]; 0 disables tracing.
+    pub sample: f64,
+    /// Sampling seed: the same seed samples the same request ids in
+    /// every driver (the differential-check property).
+    pub seed: u64,
+    /// Spans each per-worker ring retains.
+    pub ring: usize,
+    /// JSONL trace sink; `None` keeps spans in the rings only.
+    pub trace_out: Option<PathBuf>,
+    /// When to flush the rings before shutdown.
+    pub anomaly: AnomalyConfig,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            sample: 0.0,
+            seed: 0x5eed,
+            ring: 256,
+            trace_out: None,
+            anomaly: AnomalyConfig::default(),
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Convenience: trace `sample` of requests to `path`.
+    pub fn sampled(sample: f64, path: impl Into<PathBuf>) -> ObsConfig {
+        ObsConfig { sample, trace_out: Some(path.into()), ..ObsConfig::default() }
+    }
+}
+
+/// The per-driver observability hub: clock, sampler, span pool and
+/// recorder. Cheap to share (`Arc`) and a no-op when `sample == 0`.
+pub struct Obs {
+    clock: Arc<dyn Clock>,
+    sampler: Sampler,
+    pool: SpanPool,
+    recorder: Arc<FlightRecorder>,
+    /// Terminal ring for spans shed at admission (they never reach a
+    /// worker ring). Multi-producer: cloned submit handles share it.
+    shed_ring: Arc<SpanRing>,
+}
+
+impl Obs {
+    /// A hub stamping through `clock`. Primes the span pool to the ring
+    /// size so steady-state sampling allocates nothing.
+    pub fn new(cfg: &ObsConfig, clock: Arc<dyn Clock>) -> Arc<Obs> {
+        let recorder =
+            Arc::new(FlightRecorder::new(cfg.ring, cfg.trace_out.clone(), cfg.anomaly));
+        let shed_ring = recorder.register();
+        let pool = SpanPool::new();
+        if cfg.sample > 0.0 {
+            pool.prime(cfg.ring.max(64));
+        }
+        Arc::new(Obs {
+            clock,
+            sampler: Sampler::new(cfg.sample, cfg.seed),
+            pool,
+            recorder,
+            shed_ring,
+        })
+    }
+
+    /// A disabled hub (samples nothing, records nothing) on a real
+    /// clock; the default for drivers without tracing flags.
+    pub fn disabled() -> Arc<Obs> {
+        Obs::new(&ObsConfig::default(), Arc::new(MonotonicClock::new()))
+    }
+
+    /// Whether any request can be sampled.
+    pub fn active(&self) -> bool {
+        self.sampler.active()
+    }
+
+    /// Current time on this driver's clock.
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// The recorder (for flushes and anomaly observation).
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
+    }
+
+    /// `(pool hits, pool misses)` of the span pool.
+    pub fn span_pool_stats(&self) -> (u64, u64) {
+        self.pool.stats()
+    }
+
+    /// Head-based sampling decision for request `id`: a Submit-stamped
+    /// span from the pool when sampled, `None` otherwise.
+    pub fn sample(&self, id: u64) -> Option<Box<RequestSpan>> {
+        if !self.sampler.decide(id) {
+            return None;
+        }
+        let mut span = self.pool.get(id);
+        span.push(SpanEvent::Submit, self.clock.now_ns(), 0, 0);
+        Some(span)
+    }
+
+    /// Stamp an event on a maybe-absent span (the universal stamp site:
+    /// one branch when the request is unsampled).
+    pub fn stamp(
+        &self,
+        span: &mut Option<Box<RequestSpan>>,
+        kind: SpanEvent,
+        group: u16,
+        stage: u16,
+    ) {
+        if let Some(s) = span.as_deref_mut() {
+            s.push(kind, self.clock.now_ns(), group, stage);
+        }
+    }
+
+    /// Terminal shed: stamp, record in the shed ring, recycle the box.
+    pub fn shed(&self, span: Option<Box<RequestSpan>>, group: u16) {
+        if let Some(mut s) = span {
+            s.push(SpanEvent::Shed, self.clock.now_ns(), group, 0);
+            self.shed_ring.push(&s);
+            self.pool.put(s);
+        }
+    }
+
+    /// Terminal completion: stamp Complete and record in `ring`. The
+    /// span box stays with the caller (it rides the
+    /// [`crate::coordinator::Completion`] out) — recycle it with
+    /// [`Obs::recycle`] once the completion is consumed.
+    pub fn complete(
+        &self,
+        span: &mut Option<Box<RequestSpan>>,
+        ring: &SpanRing,
+        group: u16,
+        stage: u16,
+    ) {
+        if let Some(s) = span.as_deref_mut() {
+            s.push(SpanEvent::Complete, self.clock.now_ns(), group, stage);
+            ring.push(s);
+        }
+    }
+
+    /// Return a consumed span box to the pool.
+    pub fn recycle(&self, span: Option<Box<RequestSpan>>) {
+        if let Some(s) = span {
+            self.pool.put(s);
+        }
+    }
+}
+
+impl std::fmt::Debug for Obs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Obs").field("sampler", &self.sampler).finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_hub_samples_nothing() {
+        let obs = Obs::disabled();
+        assert!(!obs.active());
+        for i in 0..50 {
+            assert!(obs.sample(i).is_none());
+        }
+    }
+
+    #[test]
+    fn full_lifecycle_lands_in_ring_and_recycles() {
+        let cfg = ObsConfig { sample: 1.0, ..ObsConfig::default() };
+        let obs = Obs::new(&cfg, Arc::new(MonotonicClock::new()));
+        let ring = obs.recorder().register();
+        let mut span = obs.sample(9);
+        assert!(span.is_some());
+        obs.stamp(&mut span, SpanEvent::Enqueue, 1, 0);
+        obs.stamp(&mut span, SpanEvent::Gather, 1, 0);
+        obs.complete(&mut span, &ring, 1, 0);
+        let got = ring.snapshot();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 9);
+        assert!(got[0].is_terminal());
+        obs.recycle(span);
+        let (_, misses_before) = obs.span_pool_stats();
+        let again = obs.sample(9);
+        let (_, misses_after) = obs.span_pool_stats();
+        assert_eq!(misses_before, misses_after, "recycled span must be reused");
+        obs.recycle(again);
+    }
+
+    #[test]
+    fn shed_spans_reach_the_shed_ring() {
+        let cfg = ObsConfig { sample: 1.0, ..ObsConfig::default() };
+        let obs = Obs::new(&cfg, Arc::new(MonotonicClock::new()));
+        let span = obs.sample(3);
+        obs.shed(span, 2);
+        let all = obs.recorder().snapshot_all();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].stamps().last().unwrap().kind, SpanEvent::Shed);
+        assert_eq!(all[0].stamps().last().unwrap().group, 2);
+    }
+}

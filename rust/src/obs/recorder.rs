@@ -1,0 +1,337 @@
+//! The flight recorder: lock-free per-worker span rings plus
+//! anomaly-triggered JSONL flushes.
+//!
+//! Every worker thread owns one [`SpanRing`] it pushes terminal spans
+//! into; the rings continuously hold the **last N** spans per worker, so
+//! when something goes wrong — a p99 budget breach, a shed burst, a dead
+//! worker — the recorder can dump the recent history that *led up to*
+//! the anomaly, not just what happened after a logger was turned on.
+//!
+//! A ring slot is a block of `AtomicU64` words guarded by a per-slot
+//! sequence counter (a seqlock built entirely from atomics, so it is
+//! safe Rust with no locks on the writer path): the single-producer
+//! worker bumps the sequence odd, writes the span words, bumps it even;
+//! a concurrent snapshot re-checks the sequence and simply skips slots
+//! that were mid-write. Readers never block writers, writers never wait.
+//!
+//! Flushes append to one JSONL file: a `{"flush":...}` marker line with
+//! the trigger reason, then the snapshot spans. The same span can appear
+//! in multiple flushes (rings are not drained); readers dedupe by id,
+//! keeping the last occurrence ([`crate::obs::tracereport`]).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::span::{RequestSpan, SpanEvent, MAX_EVENTS};
+
+/// `u64` words per encoded span: id, len, then `(t_ns, packed loc)` per
+/// stamp.
+const WORDS_PER_SPAN: usize = 2 + 2 * MAX_EVENTS;
+
+/// Single-producer, concurrently-snapshotable bounded span ring.
+#[derive(Debug)]
+pub struct SpanRing {
+    /// Per-slot seqlock counters (odd = write in progress).
+    seqs: Vec<AtomicU64>,
+    /// Slot payload words, `WORDS_PER_SPAN` per slot.
+    words: Vec<AtomicU64>,
+    /// Total pushes ever (monotone; slot = `head % cap`).
+    head: AtomicU64,
+    cap: usize,
+}
+
+impl SpanRing {
+    /// A ring holding the last `cap` spans (clamped to at least 1).
+    pub fn new(cap: usize) -> SpanRing {
+        let cap = cap.max(1);
+        SpanRing {
+            seqs: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            words: (0..cap * WORDS_PER_SPAN).map(|_| AtomicU64::new(0)).collect(),
+            head: AtomicU64::new(0),
+            cap,
+        }
+    }
+
+    /// Push a span (overwrites the oldest slot once full).
+    /// Allocation-free: encodes into pre-sized atomic words. Concurrent
+    /// pushers claim distinct slots up front, so even the shared shed
+    /// ring never interleaves two writers in one slot (they could only
+    /// collide after lapping the whole ring mid-write, which the seqlock
+    /// check catches on the reader side).
+    pub fn push(&self, span: &RequestSpan) {
+        let slot = (self.head.fetch_add(1, Ordering::Release) % self.cap as u64) as usize;
+        let base = slot * WORDS_PER_SPAN;
+        self.seqs[slot].fetch_add(1, Ordering::AcqRel); // odd: in progress
+        let stamps = span.stamps();
+        self.words[base].store(span.id, Ordering::Relaxed);
+        self.words[base + 1].store(stamps.len() as u64, Ordering::Relaxed);
+        for (i, s) in stamps.iter().enumerate() {
+            self.words[base + 2 + 2 * i].store(s.t_ns, Ordering::Relaxed);
+            let packed =
+                (s.kind as u64) | ((s.group as u64) << 16) | ((s.stage as u64) << 32);
+            self.words[base + 3 + 2 * i].store(packed, Ordering::Relaxed);
+        }
+        self.seqs[slot].fetch_add(1, Ordering::Release); // even: committed
+    }
+
+    /// Spans ever pushed (not capped at the ring size).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Copy out the most recent spans, oldest first. Slots mid-write (or
+    /// torn by a concurrent overwrite) are skipped rather than returned
+    /// corrupt.
+    pub fn snapshot(&self) -> Vec<RequestSpan> {
+        let head = self.head.load(Ordering::Acquire);
+        let n = head.min(self.cap as u64);
+        let mut out = Vec::with_capacity(n as usize);
+        for k in (head - n)..head {
+            let slot = (k % self.cap as u64) as usize;
+            if let Some(span) = self.read_slot(slot) {
+                out.push(span);
+            }
+        }
+        out
+    }
+
+    fn read_slot(&self, slot: usize) -> Option<RequestSpan> {
+        let before = self.seqs[slot].load(Ordering::Acquire);
+        if before == 0 || before % 2 == 1 {
+            return None; // never written, or write in progress
+        }
+        let base = slot * WORDS_PER_SPAN;
+        let id = self.words[base].load(Ordering::Relaxed);
+        let len = self.words[base + 1].load(Ordering::Relaxed) as usize;
+        if len > MAX_EVENTS {
+            return None;
+        }
+        let mut span = RequestSpan::new(id);
+        for i in 0..len {
+            let t_ns = self.words[base + 2 + 2 * i].load(Ordering::Relaxed);
+            let packed = self.words[base + 3 + 2 * i].load(Ordering::Relaxed);
+            let kind = SpanEvent::from_u8((packed & 0xff) as u8)?;
+            span.push(kind, t_ns, (packed >> 16) as u16, (packed >> 32) as u16);
+        }
+        let after = self.seqs[slot].load(Ordering::Acquire);
+        if after != before {
+            return None; // torn by a concurrent overwrite
+        }
+        Some(span)
+    }
+}
+
+/// When the recorder dumps its rings. Defaults disable every threshold
+/// (flush only at shutdown); the control plane and the CLI tighten them.
+#[derive(Clone, Copy, Debug)]
+pub struct AnomalyConfig {
+    /// Flush when an observed p99 exceeds this budget (ms).
+    pub p99_budget_ms: f64,
+    /// Flush when a signal window sheds at least this many requests.
+    pub shed_burst: u64,
+    /// Hard cap on anomaly-triggered flushes per recorder (the shutdown
+    /// flush is always allowed) so a persistent breach cannot grow the
+    /// trace file without bound.
+    pub max_flushes: usize,
+}
+
+impl Default for AnomalyConfig {
+    fn default() -> Self {
+        AnomalyConfig { p99_budget_ms: f64::INFINITY, shed_burst: u64::MAX, max_flushes: 16 }
+    }
+}
+
+/// The fleet-wide recorder: owns the per-worker rings, the anomaly
+/// policy and the JSONL sink.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    rings: Mutex<Vec<Arc<SpanRing>>>,
+    ring_cap: usize,
+    out: Option<PathBuf>,
+    anomaly: AnomalyConfig,
+    flushes: AtomicUsize,
+    /// Dead workers already accounted for (each new death triggers one
+    /// flush, not one per observation).
+    deaths_seen: AtomicUsize,
+}
+
+impl FlightRecorder {
+    /// A recorder whose rings hold `ring_cap` spans each, flushing to
+    /// `out` (`None` = rings only, nothing ever written).
+    pub fn new(ring_cap: usize, out: Option<PathBuf>, anomaly: AnomalyConfig) -> FlightRecorder {
+        FlightRecorder {
+            rings: Mutex::new(Vec::new()),
+            ring_cap: ring_cap.max(1),
+            out,
+            anomaly,
+            flushes: AtomicUsize::new(0),
+            deaths_seen: AtomicUsize::new(0),
+        }
+    }
+
+    /// Allocate and register a fresh ring for one worker (called at
+    /// spawn, off the hot path). Rings of retired workers stay
+    /// registered so their final spans survive into later flushes.
+    pub fn register(&self) -> Arc<SpanRing> {
+        let ring = Arc::new(SpanRing::new(self.ring_cap));
+        self.rings.lock().unwrap().push(ring.clone());
+        ring
+    }
+
+    /// Where flushes go, if anywhere.
+    pub fn out_path(&self) -> Option<&Path> {
+        self.out.as_deref()
+    }
+
+    /// Anomaly-trigger evaluation: call with whatever the driver can
+    /// observe (a control tick's signals, a replay loop's counters).
+    /// `p99_ms` is the latest windowed p99, `shed_window` the sheds in
+    /// that window, `dead_workers` the current
+    /// [`crate::coordinator::Server::dead_groups`] count. Flushes at
+    /// most once per call, and never past `max_flushes`.
+    pub fn observe(&self, p99_ms: Option<f64>, shed_window: u64, dead_workers: usize) {
+        let prev_deaths = self.deaths_seen.swap(dead_workers, Ordering::Relaxed);
+        let reason = if dead_workers > prev_deaths {
+            Some("worker-death")
+        } else if shed_window >= self.anomaly.shed_burst {
+            Some("shed-burst")
+        } else if p99_ms.is_some_and(|p| p > self.anomaly.p99_budget_ms) {
+            Some("p99-breach")
+        } else {
+            None
+        };
+        if let Some(reason) = reason {
+            if self.flushes.load(Ordering::Relaxed) < self.anomaly.max_flushes {
+                let _ = self.flush(reason);
+            }
+        }
+    }
+
+    /// Dump every ring's recent spans to the JSONL sink, preceded by a
+    /// `{"flush":reason}` marker. Returns the number of spans written
+    /// (0 with no sink). Terminal spans only — half-built spans still
+    /// riding requests are not in any ring yet.
+    pub fn flush(&self, reason: &str) -> std::io::Result<usize> {
+        self.flushes.fetch_add(1, Ordering::Relaxed);
+        let Some(path) = &self.out else { return Ok(0) };
+        let spans = self.snapshot_all();
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        let mut buf = format!("{{\"flush\":{:?},\"spans\":{}}}\n", reason, spans.len());
+        for s in &spans {
+            buf.push_str(&s.to_json());
+            buf.push('\n');
+        }
+        f.write_all(buf.as_bytes())?;
+        Ok(spans.len())
+    }
+
+    /// Every ring's snapshot, concatenated in worker order.
+    pub fn snapshot_all(&self) -> Vec<RequestSpan> {
+        let rings = self.rings.lock().unwrap();
+        rings.iter().flat_map(|r| r.snapshot()).collect()
+    }
+
+    /// Flushes performed so far (anomaly + explicit).
+    pub fn flush_count(&self) -> usize {
+        self.flushes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64, t: u64) -> RequestSpan {
+        let mut s = RequestSpan::new(id);
+        s.push(SpanEvent::Submit, t, 0, 0);
+        s.push(SpanEvent::Complete, t + 5, 0, 0);
+        s
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_the_most_recent() {
+        let r = SpanRing::new(4);
+        for i in 0..10u64 {
+            r.push(&span(i, i * 100));
+        }
+        let got = r.snapshot();
+        let ids: Vec<u64> = got.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "ring must keep the newest spans in order");
+        assert_eq!(r.pushed(), 10);
+        assert_eq!(got[0].stamps()[0].t_ns, 600);
+    }
+
+    #[test]
+    fn ring_snapshot_under_concurrent_pushes_never_corrupts() {
+        let r = Arc::new(SpanRing::new(8));
+        let w = r.clone();
+        let writer = std::thread::spawn(move || {
+            for i in 0..50_000u64 {
+                w.push(&span(i, i));
+            }
+        });
+        let mut seen = 0usize;
+        while seen < 200 {
+            for s in r.snapshot() {
+                // every decoded span must be internally consistent
+                assert_eq!(s.stamps().len(), 2, "torn span leaked: {s:?}");
+                assert_eq!(s.stamps()[0].t_ns, s.id);
+                assert_eq!(s.stamps()[1].t_ns, s.id + 5);
+                seen += 1;
+            }
+        }
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn recorder_flushes_to_jsonl_with_marker() {
+        let path = std::env::temp_dir().join(format!("fcmp-rec-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let rec =
+            FlightRecorder::new(16, Some(path.clone()), AnomalyConfig::default());
+        let ring = rec.register();
+        for i in 0..3 {
+            ring.push(&span(i, i * 10));
+        }
+        let n = rec.flush("shutdown").unwrap();
+        assert_eq!(n, 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("{\"flush\":\"shutdown\",\"spans\":3}"), "{text}");
+        let parsed: Vec<_> =
+            text.lines().filter_map(RequestSpan::parse_json).collect();
+        assert_eq!(parsed.len(), 3);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn anomaly_triggers_and_flush_cap() {
+        let rec = FlightRecorder::new(
+            4,
+            None,
+            AnomalyConfig { p99_budget_ms: 10.0, shed_burst: 5, max_flushes: 2 },
+        );
+        rec.observe(Some(5.0), 0, 0); // healthy: no flush
+        assert_eq!(rec.flush_count(), 0);
+        rec.observe(Some(50.0), 0, 0); // p99 breach
+        assert_eq!(rec.flush_count(), 1);
+        rec.observe(None, 9, 0); // shed burst
+        assert_eq!(rec.flush_count(), 2);
+        rec.observe(Some(50.0), 9, 0); // capped
+        assert_eq!(rec.flush_count(), 2);
+    }
+
+    #[test]
+    fn each_worker_death_flushes_once() {
+        let rec = FlightRecorder::new(4, None, AnomalyConfig::default());
+        rec.observe(None, 0, 0);
+        assert_eq!(rec.flush_count(), 0);
+        rec.observe(None, 0, 1); // first death
+        assert_eq!(rec.flush_count(), 1);
+        rec.observe(None, 0, 1); // same death observed again: no re-flush
+        assert_eq!(rec.flush_count(), 1);
+        rec.observe(None, 0, 2); // a second death
+        assert_eq!(rec.flush_count(), 2);
+    }
+}

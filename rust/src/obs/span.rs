@@ -1,0 +1,382 @@
+//! Request spans: a fixed-size, pooled per-request event timeline.
+//!
+//! A [`RequestSpan`] is a flat `Copy` struct — an id plus a bounded array
+//! of [`SpanStamp`]s — so recording an event is two field writes, copying
+//! a span into a flight-recorder ring is a memcpy, and the steady state
+//! allocates nothing: spans recycle through a [`SpanPool`] primed at
+//! deploy, exactly like the request payload buffers in
+//! [`crate::coordinator::BufferPool`].
+//!
+//! Sampling is **head-based**: [`Sampler::decide`] hashes the request id
+//! once at submit, so every stage of the pipeline (and the shed path)
+//! agrees on whether a request is traced without coordination, and the
+//! same seed reproduces the same sampled set — in the threaded server and
+//! in the simulator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Maximum stamps per span. A k-stage chain writes `2 + 4k` stamps
+/// (submit, enqueue, then gather/dispatch/reap/link per stage, complete
+/// replacing the last link); 32 covers chains up to 7 stages with room
+/// to spare, and deeper chains saturate gracefully (extra stamps drop).
+pub const MAX_EVENTS: usize = 32;
+
+/// One lifecycle event of a request's journey through the fleet.
+#[repr(u8)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanEvent {
+    /// Accepted by the submit path (sampling decided here).
+    Submit = 0,
+    /// Entered a chain group's stage-0 queue (router dispatch landed).
+    Enqueue = 1,
+    /// Pulled from a stage queue into a forming batch.
+    Gather = 2,
+    /// Batch handed to the backend (`submit_batch`).
+    Dispatch = 3,
+    /// Batch outputs reaped from the in-flight window.
+    Reap = 4,
+    /// Forwarded across the inter-stage link into the next stage's queue
+    /// (stamped at the *sending* stage; backpressure shows up here).
+    LinkHop = 5,
+    /// Final-stage completion emitted.
+    Complete = 6,
+    /// Shed by admission control (terminal; no further stamps).
+    Shed = 7,
+}
+
+impl SpanEvent {
+    /// Stable lowercase name (the JSONL wire form).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanEvent::Submit => "submit",
+            SpanEvent::Enqueue => "enqueue",
+            SpanEvent::Gather => "gather",
+            SpanEvent::Dispatch => "dispatch",
+            SpanEvent::Reap => "reap",
+            SpanEvent::LinkHop => "link",
+            SpanEvent::Complete => "complete",
+            SpanEvent::Shed => "shed",
+        }
+    }
+
+    /// Inverse of [`SpanEvent::name`].
+    pub fn from_name(s: &str) -> Option<SpanEvent> {
+        Some(match s {
+            "submit" => SpanEvent::Submit,
+            "enqueue" => SpanEvent::Enqueue,
+            "gather" => SpanEvent::Gather,
+            "dispatch" => SpanEvent::Dispatch,
+            "reap" => SpanEvent::Reap,
+            "link" => SpanEvent::LinkHop,
+            "complete" => SpanEvent::Complete,
+            "shed" => SpanEvent::Shed,
+            _ => return None,
+        })
+    }
+
+    /// Inverse of the `u8` discriminant (ring-buffer decode).
+    pub fn from_u8(v: u8) -> Option<SpanEvent> {
+        Some(match v {
+            0 => SpanEvent::Submit,
+            1 => SpanEvent::Enqueue,
+            2 => SpanEvent::Gather,
+            3 => SpanEvent::Dispatch,
+            4 => SpanEvent::Reap,
+            5 => SpanEvent::LinkHop,
+            6 => SpanEvent::Complete,
+            7 => SpanEvent::Shed,
+            _ => return None,
+        })
+    }
+}
+
+/// One timestamped event: when, what, and where (group/stage).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanStamp {
+    /// Nanoseconds on the driver's [`crate::obs::Clock`].
+    pub t_ns: u64,
+    /// Event kind.
+    pub kind: SpanEvent,
+    /// Chain group the event happened in (router index at event time).
+    pub group: u16,
+    /// Stage within the group (0 for submit/enqueue/shed).
+    pub stage: u16,
+}
+
+const ZERO_STAMP: SpanStamp =
+    SpanStamp { t_ns: 0, kind: SpanEvent::Submit, group: 0, stage: 0 };
+
+/// The per-request event timeline. Fixed-size and `Copy` so it never
+/// allocates after construction and memcpys into recorder rings.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestSpan {
+    /// The request id ([`crate::coordinator::Request::id`]).
+    pub id: u64,
+    len: u16,
+    stamps: [SpanStamp; MAX_EVENTS],
+}
+
+impl RequestSpan {
+    /// An empty span for request `id`.
+    pub fn new(id: u64) -> RequestSpan {
+        RequestSpan { id, len: 0, stamps: [ZERO_STAMP; MAX_EVENTS] }
+    }
+
+    /// Reset in place for reuse under a new request id (pool recycling).
+    pub fn reset(&mut self, id: u64) {
+        self.id = id;
+        self.len = 0;
+    }
+
+    /// Append a stamp; silently drops past [`MAX_EVENTS`] (bounded by
+    /// construction — a runaway chain cannot grow the span).
+    pub fn push(&mut self, kind: SpanEvent, t_ns: u64, group: u16, stage: u16) {
+        if (self.len as usize) < MAX_EVENTS {
+            self.stamps[self.len as usize] = SpanStamp { t_ns, kind, group, stage };
+            self.len += 1;
+        }
+    }
+
+    /// The stamps recorded so far, in event order.
+    pub fn stamps(&self) -> &[SpanStamp] {
+        &self.stamps[..self.len as usize]
+    }
+
+    /// Whether the span reached a terminal event (complete or shed).
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self.stamps().last().map(|s| s.kind),
+            Some(SpanEvent::Complete) | Some(SpanEvent::Shed)
+        )
+    }
+
+    /// One JSONL line: `{"id":N,"ev":[["kind",t_ns,group,stage],...]}`.
+    pub fn to_json(&self) -> String {
+        let mut out = format!("{{\"id\":{},\"ev\":[", self.id);
+        for (i, s) in self.stamps().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "[\"{}\",{},{},{}]",
+                s.kind.name(),
+                s.t_ns,
+                s.group,
+                s.stage
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Parse a line written by [`RequestSpan::to_json`]. Returns `None`
+    /// on anything else (flush markers, truncated tails, foreign lines) —
+    /// trace readers skip those lines rather than failing the file.
+    pub fn parse_json(line: &str) -> Option<RequestSpan> {
+        let line = line.trim();
+        let rest = line.strip_prefix("{\"id\":")?;
+        let comma = rest.find(',')?;
+        let id: u64 = rest[..comma].parse().ok()?;
+        let rest = rest[comma..].strip_prefix(",\"ev\":[")?;
+        let body = rest.strip_suffix("]}")?;
+        let mut span = RequestSpan::new(id);
+        if body.is_empty() {
+            return Some(span);
+        }
+        for item in body.split("],") {
+            let item = item.trim_start_matches('[').trim_end_matches(']');
+            let mut parts = item.split(',');
+            let kind = parts.next()?.trim_matches('"');
+            let kind = SpanEvent::from_name(kind)?;
+            let t_ns: u64 = parts.next()?.parse().ok()?;
+            let group: u16 = parts.next()?.parse().ok()?;
+            let stage: u16 = parts.next()?.parse().ok()?;
+            if parts.next().is_some() {
+                return None;
+            }
+            span.push(kind, t_ns, group, stage);
+        }
+        Some(span)
+    }
+}
+
+/// Head-based sampling decision, derived deterministically from the
+/// request id and a seed: `P(sampled) ≈ rate`, and the same `(rate,
+/// seed)` samples the same id set in every driver.
+#[derive(Clone, Copy, Debug)]
+pub struct Sampler {
+    threshold: u64,
+    seed: u64,
+}
+
+/// `splitmix64` finalizer — uniform enough for a sampling hash.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+impl Sampler {
+    /// A sampler keeping roughly `rate` of requests (clamped to [0, 1]).
+    pub fn new(rate: f64, seed: u64) -> Sampler {
+        let threshold = if rate >= 1.0 {
+            u64::MAX
+        } else if rate <= 0.0 {
+            0
+        } else {
+            (rate * u64::MAX as f64) as u64
+        };
+        Sampler { threshold, seed }
+    }
+
+    /// Whether request `id` is traced.
+    pub fn decide(&self, id: u64) -> bool {
+        match self.threshold {
+            u64::MAX => true,
+            0 => false,
+            t => mix(id ^ self.seed) < t,
+        }
+    }
+
+    /// Whether any request can be sampled at all (tracing enabled).
+    pub fn active(&self) -> bool {
+        self.threshold > 0
+    }
+}
+
+/// Recycles span boxes so the sampled path stops allocating once the
+/// pool warms up (mirror of [`crate::coordinator::BufferPool`], but for
+/// spans). `misses` counts cold allocations — zero after priming.
+#[derive(Debug, Default)]
+pub struct SpanPool {
+    free: Mutex<Vec<Box<RequestSpan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SpanPool {
+    /// An empty pool.
+    pub fn new() -> SpanPool {
+        SpanPool::default()
+    }
+
+    /// Pre-allocate `n` spans (call before the measured window).
+    pub fn prime(&self, n: usize) {
+        let mut free = self.free.lock().unwrap();
+        while free.len() < n {
+            free.push(Box::new(RequestSpan::new(0)));
+        }
+    }
+
+    /// A reset span for request `id` — recycled when available,
+    /// freshly allocated (and counted as a miss) otherwise.
+    pub fn get(&self, id: u64) -> Box<RequestSpan> {
+        let recycled = self.free.lock().unwrap().pop();
+        match recycled {
+            Some(mut b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b.reset(id);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Box::new(RequestSpan::new(id))
+            }
+        }
+    }
+
+    /// Return a span box for reuse.
+    pub fn put(&self, span: Box<RequestSpan>) {
+        self.free.lock().unwrap().push(span);
+    }
+
+    /// `(hits, misses)` counters.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_json_roundtrips() {
+        let mut s = RequestSpan::new(42);
+        s.push(SpanEvent::Submit, 100, 0, 0);
+        s.push(SpanEvent::Enqueue, 150, 1, 0);
+        s.push(SpanEvent::Gather, 300, 1, 0);
+        s.push(SpanEvent::Complete, 900, 1, 0);
+        let line = s.to_json();
+        let back = RequestSpan::parse_json(&line).expect("parse back");
+        assert_eq!(back.id, 42);
+        assert_eq!(back.stamps(), s.stamps());
+        assert!(back.is_terminal());
+    }
+
+    #[test]
+    fn parse_rejects_foreign_lines() {
+        assert!(RequestSpan::parse_json("{\"flush\":\"shutdown\"}").is_none());
+        assert!(RequestSpan::parse_json("").is_none());
+        assert!(RequestSpan::parse_json("{\"id\":7,\"ev\":[[\"bogus\",1,0,0]]}").is_none());
+        // empty event list is a valid (submit-lost) span
+        let empty = RequestSpan::parse_json("{\"id\":7,\"ev\":[]}").unwrap();
+        assert_eq!(empty.stamps().len(), 0);
+    }
+
+    #[test]
+    fn push_saturates_at_max_events() {
+        let mut s = RequestSpan::new(1);
+        for i in 0..(MAX_EVENTS + 10) {
+            s.push(SpanEvent::Gather, i as u64, 0, 0);
+        }
+        assert_eq!(s.stamps().len(), MAX_EVENTS);
+        assert_eq!(s.stamps().last().unwrap().t_ns, MAX_EVENTS as u64 - 1);
+    }
+
+    #[test]
+    fn sampler_rate_is_roughly_respected_and_deterministic() {
+        let s = Sampler::new(0.1, 99);
+        let hits: Vec<u64> = (0..20_000).filter(|&i| s.decide(i)).collect();
+        let frac = hits.len() as f64 / 20_000.0;
+        assert!((0.07..0.13).contains(&frac), "sampled {frac}");
+        // same (rate, seed) ⇒ identical set
+        let s2 = Sampler::new(0.1, 99);
+        let hits2: Vec<u64> = (0..20_000).filter(|&i| s2.decide(i)).collect();
+        assert_eq!(hits, hits2);
+        // a different seed samples a different set
+        let s3 = Sampler::new(0.1, 100);
+        let hits3: Vec<u64> = (0..20_000).filter(|&i| s3.decide(i)).collect();
+        assert_ne!(hits, hits3);
+    }
+
+    #[test]
+    fn sampler_edges() {
+        let all = Sampler::new(1.0, 7);
+        let none = Sampler::new(0.0, 7);
+        assert!(all.active() && !none.active());
+        for i in 0..100 {
+            assert!(all.decide(i));
+            assert!(!none.decide(i));
+        }
+    }
+
+    #[test]
+    fn span_pool_recycles_after_priming() {
+        let p = SpanPool::new();
+        p.prime(4);
+        let a = p.get(1);
+        assert_eq!(a.id, 1);
+        p.put(a);
+        for i in 0..8 {
+            let b = p.get(i);
+            p.put(b);
+        }
+        let (hits, misses) = p.stats();
+        assert_eq!(misses, 0, "primed pool must never miss");
+        assert_eq!(hits, 9);
+    }
+}

@@ -1,0 +1,291 @@
+//! Critical-path breakdown of a span trace file: where did each
+//! request's latency actually go — stage-queue wait, batch-gather wait,
+//! backend compute, or inter-stage link (backpressure) — per chain group
+//! and stage. This is the serving-side analogue of the paper's per-layer
+//! II/occupancy analysis: the `fcmp tracereport` subcommand renders it
+//! as a table, and the server-vs-sim differential test compares the
+//! per-stage totals across time domains.
+//!
+//! Segment semantics per traversed stage, from the span's stamps:
+//!
+//! ```text
+//!   queue   = Gather   − (Enqueue | previous LinkHop)   stage-queue wait
+//!   gather  = Dispatch − Gather                         batch-formation wait
+//!   compute = Reap     − Dispatch                       backend execution
+//!   link    = LinkHop  − Reap                           forward backpressure
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::BufRead;
+use std::path::Path;
+
+use super::span::{RequestSpan, SpanEvent};
+use crate::util::bench::Table;
+
+/// Accumulated segment times for one (group, stage) cell.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageBreakdown {
+    /// Spans that traversed this cell.
+    pub n: u64,
+    /// Total stage-queue wait, ns.
+    pub queue_ns: u64,
+    /// Total batch-gather wait, ns.
+    pub gather_ns: u64,
+    /// Total backend compute, ns.
+    pub compute_ns: u64,
+    /// Total link/backpressure wait, ns (0 at terminal stages).
+    pub link_ns: u64,
+}
+
+impl StageBreakdown {
+    /// Everything accounted to this cell, ns.
+    pub fn total_ns(&self) -> u64 {
+        self.queue_ns + self.gather_ns + self.compute_ns + self.link_ns
+    }
+}
+
+/// The analyzed trace: per-(group, stage) breakdowns plus file-level
+/// counts.
+#[derive(Clone, Debug, Default)]
+pub struct TraceReport {
+    /// Breakdown cells keyed by (group, stage), in order.
+    pub stages: BTreeMap<(u16, u16), StageBreakdown>,
+    /// Distinct spans analyzed (completed requests).
+    pub completed: usize,
+    /// Distinct shed spans.
+    pub shed: usize,
+}
+
+impl TraceReport {
+    /// Sum of a segment across every cell, ns.
+    pub fn segment_total_ns(&self, seg: SpanEvent) -> u64 {
+        self.stages
+            .values()
+            .map(|b| match seg {
+                SpanEvent::Enqueue => b.queue_ns,
+                SpanEvent::Gather => b.gather_ns,
+                SpanEvent::Dispatch => b.compute_ns,
+                SpanEvent::LinkHop => b.link_ns,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Load a JSONL trace file, skipping flush markers and foreign lines,
+/// deduping spans by request id (flushes can repeat a span; the **last**
+/// occurrence wins — it is the most complete).
+pub fn load(path: &Path) -> std::io::Result<Vec<RequestSpan>> {
+    let f = std::fs::File::open(path)?;
+    let mut by_id: BTreeMap<u64, RequestSpan> = BTreeMap::new();
+    for line in std::io::BufReader::new(f).lines() {
+        let line = line?;
+        if let Some(span) = RequestSpan::parse_json(&line) {
+            by_id.insert(span.id, span);
+        }
+    }
+    Ok(by_id.into_values().collect())
+}
+
+/// Analyze spans into the per-(group, stage) critical-path breakdown.
+pub fn analyze(spans: &[RequestSpan]) -> TraceReport {
+    let mut rep = TraceReport::default();
+    for span in spans {
+        let stamps = span.stamps();
+        if stamps.last().map(|s| s.kind) == Some(SpanEvent::Shed) {
+            rep.shed += 1;
+            continue;
+        }
+        let mut arrive: Option<u64> = None; // entered current stage queue
+        let mut gather: Option<u64> = None;
+        let mut dispatch: Option<u64> = None;
+        let mut reap: Option<u64> = None;
+        let mut terminal = false;
+        let mut close = |cell: (u16, u16),
+                         arrive: &mut Option<u64>,
+                         gather: &mut Option<u64>,
+                         dispatch: &mut Option<u64>,
+                         reap: &mut Option<u64>,
+                         link_end: Option<u64>,
+                         rep: &mut TraceReport| {
+            let b = rep.stages.entry(cell).or_default();
+            b.n += 1;
+            if let (Some(a), Some(g)) = (*arrive, *gather) {
+                b.queue_ns += g.saturating_sub(a);
+            }
+            if let (Some(g), Some(d)) = (*gather, *dispatch) {
+                b.gather_ns += d.saturating_sub(g);
+            }
+            if let (Some(d), Some(r)) = (*dispatch, *reap) {
+                b.compute_ns += r.saturating_sub(d);
+            }
+            if let (Some(r), Some(l)) = (*reap, link_end) {
+                b.link_ns += l.saturating_sub(r);
+            }
+            *arrive = link_end;
+            *gather = None;
+            *dispatch = None;
+            *reap = None;
+        };
+        for s in stamps {
+            match s.kind {
+                SpanEvent::Submit => {}
+                SpanEvent::Enqueue => arrive = Some(s.t_ns),
+                SpanEvent::Gather => gather = Some(s.t_ns),
+                SpanEvent::Dispatch => dispatch = Some(s.t_ns),
+                SpanEvent::Reap => reap = Some(s.t_ns),
+                SpanEvent::LinkHop => close(
+                    (s.group, s.stage),
+                    &mut arrive,
+                    &mut gather,
+                    &mut dispatch,
+                    &mut reap,
+                    Some(s.t_ns),
+                    &mut rep,
+                ),
+                SpanEvent::Complete => {
+                    close(
+                        (s.group, s.stage),
+                        &mut arrive,
+                        &mut gather,
+                        &mut dispatch,
+                        &mut reap,
+                        None,
+                        &mut rep,
+                    );
+                    terminal = true;
+                }
+                SpanEvent::Shed => {}
+            }
+        }
+        if terminal {
+            rep.completed += 1;
+        }
+    }
+    rep
+}
+
+/// Render the breakdown as the `fcmp tracereport` table (per-cell means
+/// in ms plus a fleet totals row).
+pub fn table(rep: &TraceReport) -> Table {
+    let mut t = Table::new([
+        "group", "stage", "spans", "queue ms", "gather ms", "compute ms", "link ms", "total ms",
+    ]);
+    let ms = |ns: u64, n: u64| {
+        if n == 0 {
+            0.0
+        } else {
+            ns as f64 / n as f64 / 1e6
+        }
+    };
+    let mut fleet = StageBreakdown::default();
+    for ((g, s), b) in &rep.stages {
+        fleet.n += b.n;
+        fleet.queue_ns += b.queue_ns;
+        fleet.gather_ns += b.gather_ns;
+        fleet.compute_ns += b.compute_ns;
+        fleet.link_ns += b.link_ns;
+        t.row([
+            format!("{g}"),
+            format!("{s}"),
+            format!("{}", b.n),
+            format!("{:.3}", ms(b.queue_ns, b.n)),
+            format!("{:.3}", ms(b.gather_ns, b.n)),
+            format!("{:.3}", ms(b.compute_ns, b.n)),
+            format!("{:.3}", ms(b.link_ns, b.n)),
+            format!("{:.3}", ms(b.total_ns(), b.n)),
+        ]);
+    }
+    t.row([
+        "all".to_string(),
+        "-".to_string(),
+        format!("{}", fleet.n),
+        format!("{:.3}", ms(fleet.queue_ns, fleet.n)),
+        format!("{:.3}", ms(fleet.gather_ns, fleet.n)),
+        format!("{:.3}", ms(fleet.compute_ns, fleet.n)),
+        format!("{:.3}", ms(fleet.link_ns, fleet.n)),
+        format!("{:.3}", ms(fleet.total_ns(), fleet.n)),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_span(id: u64, base: u64) -> RequestSpan {
+        let mut s = RequestSpan::new(id);
+        s.push(SpanEvent::Submit, base, 0, 0);
+        s.push(SpanEvent::Enqueue, base + 10, 0, 0);
+        s.push(SpanEvent::Gather, base + 110, 0, 0); // queue 100
+        s.push(SpanEvent::Dispatch, base + 160, 0, 0); // gather 50
+        s.push(SpanEvent::Reap, base + 460, 0, 0); // compute 300
+        s.push(SpanEvent::LinkHop, base + 480, 0, 0); // link 20
+        s.push(SpanEvent::Gather, base + 530, 0, 1); // queue 50
+        s.push(SpanEvent::Dispatch, base + 550, 0, 1); // gather 20
+        s.push(SpanEvent::Reap, base + 950, 0, 1); // compute 400
+        s.push(SpanEvent::Complete, base + 960, 0, 1);
+        s
+    }
+
+    #[test]
+    fn analyze_splits_chain_segments_per_stage() {
+        let spans = vec![chain_span(1, 0), chain_span(2, 1000)];
+        let rep = analyze(&spans);
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.shed, 0);
+        let s0 = rep.stages[&(0, 0)];
+        assert_eq!(s0.n, 2);
+        assert_eq!(s0.queue_ns, 200);
+        assert_eq!(s0.gather_ns, 100);
+        assert_eq!(s0.compute_ns, 600);
+        assert_eq!(s0.link_ns, 40);
+        let s1 = rep.stages[&(0, 1)];
+        assert_eq!(s1.queue_ns, 100);
+        assert_eq!(s1.compute_ns, 800);
+        assert_eq!(s1.link_ns, 0, "terminal stage has no link segment");
+        assert_eq!(rep.segment_total_ns(SpanEvent::Dispatch), 1400);
+    }
+
+    #[test]
+    fn analyze_counts_sheds_separately() {
+        let mut shed = RequestSpan::new(9);
+        shed.push(SpanEvent::Submit, 0, 0, 0);
+        shed.push(SpanEvent::Shed, 5, 1, 0);
+        let rep = analyze(&[shed, chain_span(1, 0)]);
+        assert_eq!(rep.shed, 1);
+        assert_eq!(rep.completed, 1);
+    }
+
+    #[test]
+    fn load_dedupes_by_id_and_skips_markers() {
+        let path =
+            std::env::temp_dir().join(format!("fcmp-trrep-{}.jsonl", std::process::id()));
+        let partial = {
+            let mut s = RequestSpan::new(1);
+            s.push(SpanEvent::Submit, 0, 0, 0);
+            s
+        };
+        let full = chain_span(1, 0);
+        let text = format!(
+            "{}\n{}\n{}\n{}\n",
+            "{\"flush\":\"p99-breach\",\"spans\":1}",
+            partial.to_json(),
+            "{\"flush\":\"shutdown\",\"spans\":2}",
+            full.to_json()
+        );
+        std::fs::write(&path, text).unwrap();
+        let spans = load(&path).unwrap();
+        assert_eq!(spans.len(), 1, "duplicate ids must collapse");
+        assert_eq!(spans[0].stamps().len(), full.stamps().len(), "last occurrence wins");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn table_renders_per_cell_and_totals_rows() {
+        let rep = analyze(&[chain_span(1, 0)]);
+        let text = table(&rep).render();
+        assert!(text.contains("| all"), "{text}");
+        assert_eq!(text.lines().count(), 2 + 2 + 1, "{text}"); // header + sep + 2 cells + all
+    }
+}

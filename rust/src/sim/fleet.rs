@@ -40,17 +40,19 @@
 //! with differential runs on small fleets.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::control::{
     Autoscaler, AutoscalerConfig, ControlEvent, ControlEventKind, ScaleDecision, SignalConfig,
-    SignalTap, SloConfig, SloController,
+    SignalCtx, SignalTap, SloConfig, SloController,
 };
 use crate::coordinator::dispatch::{fallback_order, preferred_group};
 use crate::coordinator::{
     chain_fps, BatcherConfig, Completion, Deployment, FleetMetrics, FleetSummary, Policy,
     Scheduler, Trace,
 };
+use crate::obs::{Exposition, Obs, ObsConfig, RequestSpan, SpanEvent, SpanRing, VirtualClock};
 use crate::sim::event::EventQueue;
 use crate::util::rng::Rng;
 
@@ -135,11 +137,16 @@ pub struct SimConfig {
     pub seed: u64,
     /// Control plane on virtual ticks; `None` runs open-loop.
     pub control: Option<SimControl>,
+    /// Span tracing: the same head-based sampler and flight recorder
+    /// the threaded server uses, stamping through a [`VirtualClock`]
+    /// the event loop publishes before every handler — so trace files
+    /// from both drivers are directly comparable.
+    pub obs: ObsConfig,
 }
 
 impl Default for SimConfig {
     fn default() -> SimConfig {
-        SimConfig { input_len: 8, seed: 2020, control: None }
+        SimConfig { input_len: 8, seed: 2020, control: None, obs: ObsConfig::default() }
     }
 }
 
@@ -190,6 +197,8 @@ struct SimReq {
     stage_arrival: u64,
     stage_latencies: Vec<Duration>,
     stage_batches: Vec<usize>,
+    /// Flight-recorder span; `None` for the unsampled majority.
+    span: Option<Box<RequestSpan>>,
 }
 
 /// A submitted batch waiting on its virtual completion time.
@@ -306,6 +315,14 @@ pub struct FleetSim {
     trace: Vec<u64>,
     arrivals_done: bool,
 
+    /// Published before every event handler; span stamps read it.
+    clock: Arc<VirtualClock>,
+    obs: Arc<Obs>,
+    /// One span ring per worker, `rings[slot][stage]` — pre-registered
+    /// for every slot (standby included) so scale-out never allocates.
+    rings: Vec<Vec<Arc<SpanRing>>>,
+    exposition: Option<Exposition>,
+
     fm: FleetMetrics,
     tap: SignalTap,
     scaler: Option<Autoscaler>,
@@ -372,6 +389,12 @@ impl FleetSim {
             None => (SignalTap::new(SignalConfig::default()), None, None, 0, 0),
         };
         let initial = active.len();
+        let clock = Arc::new(VirtualClock::new());
+        let obs = Obs::new(&cfg.obs, Arc::clone(&clock) as Arc<dyn crate::obs::Clock>);
+        let rings: Vec<Vec<Arc<SpanRing>>> = groups
+            .iter()
+            .map(|g| g.workers.iter().map(|_| obs.recorder().register()).collect())
+            .collect();
         FleetSim {
             queue_depth: plan.queue_depth,
             window: plan.window,
@@ -386,6 +409,10 @@ impl FleetSim {
             now: 0,
             trace: Vec::new(),
             arrivals_done: false,
+            clock,
+            obs,
+            rings,
+            exposition: None,
             fm: FleetMetrics::new(&shape),
             tap,
             scaler,
@@ -432,6 +459,19 @@ impl FleetSim {
         FleetSim::new(plan, backends, cfg)
     }
 
+    /// The observability hub this simulator stamps through (virtual
+    /// clock, sampler, span pool, flight recorder).
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
+    }
+
+    /// Attach a live metrics emitter. It is driven on virtual control
+    /// ticks (so it needs [`SimConfig::control`] to emit mid-run) and
+    /// always emits a final snapshot when the run drains.
+    pub fn set_exposition(&mut self, e: Exposition) {
+        self.exposition = Some(e);
+    }
+
     fn build_scheduler(policy: &Policy, groups: &[SimGroup], active: &[usize]) -> Scheduler {
         let policy = match policy {
             Policy::Weighted(_) => {
@@ -459,6 +499,7 @@ impl FleetSim {
         }
         while let Some((t, seq, ev)) = self.q.pop() {
             self.now = t;
+            self.clock.set(t);
             self.events_processed += 1;
             match ev {
                 Ev::Arrival(idx) => {
@@ -481,8 +522,17 @@ impl FleetSim {
         );
         let span = secs(self.last_completion);
         self.fm.set_span_s(span);
+        let summary = self.fm.summary();
+        if let Some(e) = self.exposition.as_mut() {
+            e.emit(secs(self.now), &summary, None);
+        }
+        // end-of-run flush mirrors Server::shutdown: whatever spans the
+        // rings still hold are appended to the trace file once
+        if self.obs.active() {
+            let _ = self.obs.recorder().flush("shutdown");
+        }
         SimReport {
-            summary: self.fm.summary(),
+            summary,
             events: self.events,
             ticks: self.tap.ticks(),
             initial_groups: self.initial_groups,
@@ -522,12 +572,15 @@ impl FleetSim {
         for _ in 0..self.cfg.input_len {
             sum += self.rng.below(256) as f32;
         }
+        // head sampling at submit, same sampler + seed as the server:
+        // the same request ids are traced by both drivers
+        let mut span = self.obs.sample(idx as u64);
         let n = self.active.len();
         let first = preferred_group(&self.scheduler, n, |i| self.group_load(self.active[i]));
-        let mut placed = self.try_admit(self.active[first], idx as u64, sum);
+        let mut placed = self.try_admit(self.active[first], idx as u64, sum, &mut span);
         if placed.is_none() {
             for i in fallback_order(first, n, |i| self.group_load(self.active[i])) {
-                placed = self.try_admit(self.active[i], idx as u64, sum);
+                placed = self.try_admit(self.active[i], idx as u64, sum, &mut span);
                 if placed.is_some() {
                     break;
                 }
@@ -544,6 +597,7 @@ impl FleetSim {
                 self.shed += 1;
                 self.fm.record_shed();
                 self.tap.record_shed();
+                self.obs.shed(span.take(), 0);
             }
         }
         if idx + 1 < self.trace.len() {
@@ -555,9 +609,18 @@ impl FleetSim {
     }
 
     /// Mirror `RouterCore::try_entry`: admit into the group's stage-0
-    /// bounded queue, or report full.
-    fn try_admit(&mut self, gi: usize, id: u64, sum: f32) -> Option<usize> {
+    /// bounded queue, or report full. An admitted request carries its
+    /// span (Enqueue-stamped under the *slot* index, matching the
+    /// completion's group field) into the queue.
+    fn try_admit(
+        &mut self,
+        gi: usize,
+        id: u64,
+        sum: f32,
+        span: &mut Option<Box<RequestSpan>>,
+    ) -> Option<usize> {
         let depth = self.queue_depth;
+        self.obs.stamp(span, SpanEvent::Enqueue, gi as u16, 0);
         let w = &mut self.groups[gi].workers[0];
         if w.queue.len() >= depth {
             return None;
@@ -570,6 +633,7 @@ impl FleetSim {
             stage_arrival: self.now,
             stage_latencies: Vec::new(),
             stage_batches: Vec::new(),
+            span: span.take(),
         });
         self.max_queue_seen = self.max_queue_seen.max(w.queue.len());
         Some(gi)
@@ -645,7 +709,10 @@ impl FleetSim {
         if let Some(g) = w.gather.as_mut() {
             while g.reqs.len() < g.cap {
                 match w.queue.pop_front() {
-                    Some(r) => g.reqs.push(r),
+                    Some(mut r) => {
+                        self.obs.stamp(&mut r.span, SpanEvent::Gather, gi as u16, s as u16);
+                        g.reqs.push(r);
+                    }
                     None => break,
                 }
             }
@@ -686,7 +753,10 @@ impl FleetSim {
         let mut reqs = Vec::with_capacity(cfg.max_batch.min(w.queue.len()));
         while reqs.len() < cfg.max_batch {
             match w.queue.pop_front() {
-                Some(r) => reqs.push(r),
+                Some(mut r) => {
+                    self.obs.stamp(&mut r.span, SpanEvent::Gather, gi as u16, s as u16);
+                    reqs.push(r);
+                }
                 None => break,
             }
         }
@@ -706,7 +776,12 @@ impl FleetSim {
     /// Submit a formed batch to the worker's backend: store-and-forward
     /// occupies the worker for the whole service; overlapped transfer
     /// frees it after `xfer · k` while the device queue computes.
-    fn submit_batch(&mut self, gi: usize, s: usize, reqs: Vec<SimReq>) {
+    fn submit_batch(&mut self, gi: usize, s: usize, mut reqs: Vec<SimReq>) {
+        if self.obs.active() {
+            for r in &mut reqs {
+                self.obs.stamp(&mut r.span, SpanEvent::Dispatch, gi as u16, s as u16);
+            }
+        }
         let k = reqs.len() as u32;
         let w = &mut self.groups[gi].workers[s];
         match w.backend {
@@ -743,6 +818,11 @@ impl FleetSim {
                     req.stage_latencies.push(hop);
                     req.stage_batches.push(k);
                 }
+                if self.obs.active() {
+                    self.obs.stamp(&mut req.span, SpanEvent::Reap, gi as u16, s as u16);
+                    self.obs.complete(&mut req.span, &self.rings[gi][s], gi as u16, s as u16);
+                    self.obs.recycle(req.span.take());
+                }
                 let c = Completion {
                     id: req.id,
                     output: vec![req.sum, k as f32],
@@ -752,6 +832,7 @@ impl FleetSim {
                     stage: s,
                     stage_latencies: req.stage_latencies,
                     stage_batches: req.stage_batches,
+                    span: None,
                 };
                 self.fm.record(&c);
                 self.tap.record_completion(c.latency);
@@ -770,6 +851,12 @@ impl FleetSim {
                 req.stage_latencies.push(hop);
                 req.stage_batches.push(k);
                 req.stage_arrival = self.now;
+                if self.obs.active() {
+                    self.obs.stamp(&mut req.span, SpanEvent::Reap, gi as u16, s as u16);
+                    // stamped before the forward attempt, like the thread
+                    // Forward sink before its blocking send
+                    self.obs.stamp(&mut req.span, SpanEvent::LinkHop, gi as u16, s as u16);
+                }
                 // the stage's output row is [Σ inputs, k]; its sum —
                 // the next stage's input sum — is Σ + k
                 req.sum += k as f32;
@@ -807,6 +894,13 @@ impl FleetSim {
             .collect();
         self.tap.observe_utilization(&outstanding, self.queue_depth);
         let sig = self.tap.tick();
+        let ctx = SignalCtx::from_signals(&sig);
+        // anomaly triggers read the closed window: a shed burst or p99
+        // budget breach flushes the span rings to the trace file at the
+        // virtual instant it happened (the sim has no worker deaths)
+        if self.obs.active() {
+            self.obs.recorder().observe(sig.p99_ms, sig.shed, 0);
+        }
         let decision = self.scaler.as_mut().map(|sc| sc.decide(&sig, self.active.len()));
         match decision {
             Some(ScaleDecision::Out(k)) => {
@@ -818,6 +912,7 @@ impl FleetSim {
                         tick: sig.tick,
                         at_s,
                         kind: ControlEventKind::ScaleOut { from, to: from + added },
+                        ctx,
                     });
                 }
             }
@@ -830,6 +925,7 @@ impl FleetSim {
                         tick: sig.tick,
                         at_s,
                         kind: ControlEventKind::ScaleIn { from, to: from - removed },
+                        ctx,
                     });
                 }
             }
@@ -852,6 +948,7 @@ impl FleetSim {
                                 max_batch: next.max_batch,
                                 max_wait: next.max_wait,
                             },
+                            ctx,
                         });
                     }
                 } else {
@@ -873,12 +970,22 @@ impl FleetSim {
                                     max_batch: t.max_batch,
                                     max_wait: t.max_wait,
                                 },
+                                ctx,
                             });
                         }
                     }
                 }
             }
             self.slo = Some(sl);
+        }
+        // live exposition on the virtual clock: the due() gate keeps
+        // summary construction (histogram merging) off non-emitting ticks
+        if self.exposition.as_ref().is_some_and(|e| e.due(at_s)) {
+            self.fm.set_span_s(at_s);
+            let s = self.fm.summary();
+            if let Some(e) = self.exposition.as_mut() {
+                e.emit(at_s, &s, Some(&sig));
+            }
         }
         let drained = self.arrivals_done && self.completed == self.accepted;
         if !drained {

@@ -132,6 +132,28 @@ impl LogHistogram {
         (self.sumsq / self.total as f64 - mean * mean).max(0.0).sqrt()
     }
 
+    /// Merge another histogram into this one, bucket by bucket. Because
+    /// both sides share the same fixed geometric bucket edges, merging
+    /// loses **no** precision beyond what each histogram already had:
+    /// percentiles of the merged histogram are still within half a
+    /// bucket (±2.2 %) of the exact order statistic over the union of
+    /// samples, and the moments (count/mean/stddev) and min/max stay
+    /// exact. This is how per-group collectors aggregate into fleet-wide
+    /// percentiles without ever re-recording samples.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.total == 0 {
+            return;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.sumsq += other.sumsq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// Percentile `p` in `[0, 100]`: the representative of the bucket
     /// holding the `ceil(p/100 · n)`-th smallest sample, clamped to the
     /// exact observed `[min, max]` — within half a bucket width (±2.2 %)
@@ -274,6 +296,51 @@ mod tests {
         assert!((0.0..=1e12).contains(&p99));
         assert_eq!(h.percentile(100.0), 1e12, "p100 clamps up to the exact max");
         assert_eq!(h.percentile(0.0), 0.0, "p0 clamps down to the exact min");
+    }
+
+    #[test]
+    fn merge_equals_recording_everything_into_one() {
+        // splitting a sample stream across k histograms and merging must
+        // give bit-identical buckets and moments to one big histogram
+        let mut rng = Rng::new(7);
+        let mut parts = vec![LogHistogram::new(); 3];
+        let mut whole = LogHistogram::new();
+        for i in 0..3000 {
+            let u = rng.below(1_000_000) as f64 / 1_000_000.0;
+            let v = 0.05 * 10f64.powf(5.0 * u);
+            parts[i % 3].record(v);
+            whole.record(v);
+        }
+        let mut merged = LogHistogram::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.count(), whole.count());
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+        assert!((merged.mean() - whole.mean()).abs() < 1e-9);
+        assert!((merged.stddev() - whole.stddev()).abs() < 1e-9);
+        for p in [10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            assert_eq!(merged.percentile(p), whole.percentile(p), "p{p} diverged");
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity_both_ways() {
+        let mut h = LogHistogram::new();
+        h.record(3.0);
+        h.record(30.0);
+        let before = h.summary();
+        h.merge(&LogHistogram::new());
+        let after = h.summary();
+        assert_eq!(before.n, after.n);
+        assert_eq!(before.min, after.min);
+        assert_eq!(before.max, after.max);
+        let mut empty = LogHistogram::new();
+        empty.merge(&h);
+        assert_eq!(empty.count(), 2);
+        assert_eq!(empty.min(), 3.0);
+        assert_eq!(empty.max(), 30.0);
     }
 
     #[test]

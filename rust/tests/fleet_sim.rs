@@ -42,7 +42,7 @@ fn run_pair(plan: Deployment, per_item: Duration, trace: &Trace) -> (FleetSummar
         Server::deploy(move |_| MockBackend::with_service(Duration::ZERO, per_item), plan.clone());
     let fm = srv.replay(trace, 8, 77);
     srv.shutdown();
-    let cfg = SimConfig { input_len: 8, seed: 77, control: None };
+    let cfg = SimConfig { input_len: 8, seed: 77, ..SimConfig::default() };
     let rep = FleetSim::uniform(plan, mock_sim(per_item), cfg).run(trace);
     (fm.summary(), rep)
 }
@@ -188,7 +188,12 @@ fn same_seed_same_trace_is_bit_identical() {
                     slo: Some(SloConfig { p99_budget_ms: 8.0, ..SloConfig::default() }),
                     trailing_ticks: 6,
                 };
-                let cfg = SimConfig { input_len: 4, seed, control: Some(control) };
+                let cfg = SimConfig {
+                    input_len: 4,
+                    seed,
+                    control: Some(control),
+                    ..SimConfig::default()
+                };
                 let rep = FleetSim::uniform_with_standby(
                     plan,
                     mock_sim(Duration::from_micros(800)),
@@ -280,7 +285,7 @@ fn random_topologies_preserve_invariants() {
                 .with_batcher(BatcherConfig { max_batch, max_wait })
                 .with_queue_depth(queue_depth)
                 .with_window(window);
-            let cfg = SimConfig { input_len: 4, seed, control };
+            let cfg = SimConfig { input_len: 4, seed, control, ..SimConfig::default() };
             // timestamp monotonicity and exactly-once completion are
             // panics inside the sim; the checks below are the
             // conservation laws the report must satisfy

@@ -1,0 +1,198 @@
+//! Observability integration tests: the differential server-vs-sim span
+//! check (same seeded trace through the threaded `Server` and the
+//! discrete-event `FleetSim` at 100% sampling must produce agreeing
+//! per-stage critical-path breakdowns), the zero-allocation steady state
+//! with tracing enabled, head-sampling determinism at the driver level,
+//! and the anomaly flush capturing the offending span.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use fcmp::coordinator::{
+    poisson, uniform, BatcherConfig, Deployment, MockBackend, Policy, Server,
+};
+use fcmp::obs::{tracereport, AnomalyConfig, ObsConfig, SpanEvent};
+use fcmp::sim::{FleetSim, SimBackend, SimConfig};
+
+fn tmp(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("fcmp-obs-{tag}-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn chain_plan(groups: usize, stages: usize) -> Deployment {
+    Deployment::replicated_chains(groups, stages)
+        .with_policy(Policy::RoundRobin)
+        .with_batcher(BatcherConfig { max_batch: 2, max_wait: Duration::from_micros(500) })
+        .with_queue_depth(64)
+        .with_window(2)
+}
+
+/// The PR's acceptance check: one seeded trace, two time domains. The
+/// threaded server stamps spans on the monotonic clock, the sim on its
+/// virtual clock; with identical round-robin routing both must yield the
+/// same (group, stage) cells with the same traversal counts, and the
+/// per-span compute means must land in the same order of magnitude (the
+/// mock backends sleep/advance the same nominal service interval, but
+/// real sleeps overshoot under scheduler noise — hence the wide band).
+#[test]
+fn server_and_sim_span_breakdowns_agree() {
+    let srv_path = tmp("srv");
+    let sim_path = tmp("sim");
+    let n = 48;
+    let trace = poisson(n, 200.0, 7);
+    let per_item = Duration::from_micros(150);
+
+    let mut srv = Server::deploy_with_obs(
+        move |_| MockBackend::with_service(Duration::ZERO, per_item),
+        chain_plan(2, 2),
+        &ObsConfig::sampled(1.0, &srv_path),
+    );
+    let fm = srv.replay(&trace, 8, 7);
+    assert_eq!(fm.completed(), n, "no shedding expected at this rate");
+    srv.shutdown();
+
+    let cfg =
+        SimConfig { seed: 7, obs: ObsConfig::sampled(1.0, &sim_path), ..SimConfig::default() };
+    let rep = FleetSim::uniform_with_standby(
+        chain_plan(2, 2),
+        SimBackend::Mock { base: Duration::ZERO, per_item },
+        0,
+        cfg,
+    )
+    .run(&trace);
+    assert_eq!(rep.completed, n);
+    assert_eq!(rep.shed, 0);
+
+    let srv_rep = tracereport::analyze(&tracereport::load(&srv_path).unwrap());
+    let sim_rep = tracereport::analyze(&tracereport::load(&sim_path).unwrap());
+    assert_eq!(srv_rep.completed, n, "100% sampling must trace every completion");
+    assert_eq!(sim_rep.completed, n);
+    assert_eq!(srv_rep.shed, 0);
+    assert_eq!(sim_rep.shed, 0);
+
+    // identical routing: same cells, same traversal counts
+    let srv_cells: Vec<((u16, u16), u64)> =
+        srv_rep.stages.iter().map(|(k, b)| (*k, b.n)).collect();
+    let sim_cells: Vec<((u16, u16), u64)> =
+        sim_rep.stages.iter().map(|(k, b)| (*k, b.n)).collect();
+    assert_eq!(srv_cells, sim_cells, "drivers routed sampled spans differently");
+    assert_eq!(srv_cells.len(), 4, "2 groups x 2 stages must all serve");
+
+    // compute-segment agreement across time domains: the virtual driver
+    // charges the exact nominal batch service, the real driver at least
+    // that (sleeps only overshoot), bounded by a generous jitter factor
+    for (cell, b) in &srv_rep.stages {
+        let s = sim_rep.stages[cell];
+        let real = b.compute_ns as f64 / b.n as f64;
+        let virt = s.compute_ns as f64 / s.n as f64;
+        assert!(virt > 0.0, "virtual compute must be charged at {cell:?}");
+        assert!(
+            real >= 0.5 * virt && real <= 50.0 * virt,
+            "compute mean diverged at {cell:?}: real {real:.0} ns vs virtual {virt:.0} ns"
+        );
+    }
+
+    let _ = std::fs::remove_file(&srv_path);
+    let _ = std::fs::remove_file(&sim_path);
+}
+
+/// Tracing must not break the asserted zero-allocation steady state:
+/// same setup as `steady_state_submit_path_allocates_nothing`, but with
+/// the sampler armed at 1% (rings only). Both pools stay miss-free — the
+/// request buffer pool and the span pool (primed at hub construction).
+#[test]
+fn steady_state_stays_allocation_free_with_tracing() {
+    let input_len = 8;
+    let mut srv = Server::deploy_with_obs(
+        |_| MockBackend::instant(),
+        Deployment::replicated(2)
+            .with_policy(Policy::RoundRobin)
+            .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(200) })
+            .with_queue_depth(32),
+        &ObsConfig { sample: 0.01, ..ObsConfig::default() },
+    );
+    srv.buffer_pool().prime(64, input_len);
+    let fm = srv.replay(&uniform(300, 4000.0), input_len, 42);
+    assert_eq!(fm.completed(), 300);
+    let hot = fm.summary().hot;
+    assert_eq!(hot.submits, 300);
+    assert_eq!(hot.pool_misses, 0, "tracing at 1% allocated on the submit path: {hot:?}");
+    assert!(hot.pool_hits >= 300, "every request must draw from the pool: {hot:?}");
+    let (_, span_misses) = srv.obs().span_pool_stats();
+    assert_eq!(span_misses, 0, "span pool must be primed past steady-state concurrency");
+    srv.shutdown();
+}
+
+/// Head-based sampling is a pure function of (seed, id): two sim runs
+/// with the same trace and seed must flush byte-identical span id sets,
+/// and partial sampling must actually be partial.
+#[test]
+fn sampled_id_set_is_deterministic_for_a_seed() {
+    let run = |path: &Path| -> Vec<u64> {
+        let cfg = SimConfig {
+            seed: 11,
+            obs: ObsConfig { sample: 0.35, trace_out: Some(path.into()), ..ObsConfig::default() },
+            ..SimConfig::default()
+        };
+        let rep = FleetSim::uniform_with_standby(
+            chain_plan(2, 1),
+            SimBackend::Mock { base: Duration::ZERO, per_item: Duration::from_micros(100) },
+            0,
+            cfg,
+        )
+        .run(&poisson(200, 2000.0, 11));
+        assert_eq!(rep.completed, 200);
+        let mut ids: Vec<u64> = tracereport::load(path).unwrap().iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids
+    };
+    let p1 = tmp("det1");
+    let p2 = tmp("det2");
+    let a = run(&p1);
+    let b = run(&p2);
+    assert_eq!(a, b, "same seed must sample the same request ids");
+    assert!(!a.is_empty(), "35% sampling over 200 ids must catch some");
+    assert!(a.len() < 200, "35% sampling must not trace everything");
+    let _ = std::fs::remove_file(&p1);
+    let _ = std::fs::remove_file(&p2);
+}
+
+/// A shed burst must flush the recorder mid-run, and the flushed file
+/// must contain the span that was shed — terminal `Shed` stamp included
+/// — not just the healthy history around it.
+#[test]
+fn anomaly_flush_captures_the_offending_span() {
+    let path = tmp("anomaly");
+    let mut srv = Server::deploy_with_obs(
+        |_| MockBackend::with_service(Duration::from_millis(20), Duration::ZERO),
+        Deployment::replicated(1)
+            .with_policy(Policy::RoundRobin)
+            .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) })
+            .with_queue_depth(1),
+        &ObsConfig {
+            sample: 1.0,
+            trace_out: Some(path.clone()),
+            anomaly: AnomalyConfig { shed_burst: 1, ..AnomalyConfig::default() },
+            ..ObsConfig::default()
+        },
+    );
+    // 30 arrivals 0.1 ms apart into a depth-1 queue behind a 20 ms
+    // server: most of the burst sheds
+    let fm = srv.replay(&uniform(30, 10_000.0), 8, 3);
+    assert!(fm.summary().shed > 0, "the burst must overflow the depth-1 queue");
+    srv.shutdown();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"flush\":\"shed-burst\""), "no shed-burst flush marker:\n{text}");
+    let spans = tracereport::load(&path).unwrap();
+    let shed_spans = spans
+        .iter()
+        .filter(|s| s.stamps().last().map(|st| st.kind) == Some(SpanEvent::Shed))
+        .count();
+    assert!(shed_spans > 0, "flushed trace must contain the shed span(s)");
+    let rep = tracereport::analyze(&spans);
+    assert!(rep.shed > 0);
+    assert!(rep.completed > 0, "accepted requests must still trace to completion");
+    let _ = std::fs::remove_file(&path);
+}
