@@ -15,6 +15,14 @@ textfile grammar the way a node-exporter textfile collector would:
 * if the JSONL trajectory exists, every line parses as JSON and the
   snapshot timestamps never go backwards.
 
+``--health PATH`` additionally (or instead) validates a health journal
+written by ``--health-out``: a ``kind:"health"`` header, then downsampled
+``kind:"cell"`` lines (known series, one resolution per series, cell
+starts aligned to that resolution's grid and strictly increasing per
+series, finite min/mean/max ordered min <= mean <= max, positive count)
+and ``kind:"alert"`` transitions (known signal/severity, boolean firing,
+non-decreasing timestamps, finite burn rates).
+
 Exit 1 on any violation: an unparsable exposition means the observability
 surface itself broke, which is exactly what this step guards.
 """
@@ -111,30 +119,156 @@ def check_jsonl(path, errors):
         errors.append(f"{path}: no snapshots in trajectory")
 
 
+HEALTH_SERIES = ("offered", "shed", "completed", "late", "p99_ms")
+HEALTH_SIGNALS = ("shed_rate", "latency_p99")
+HEALTH_SEVERITIES = ("page", "ticket")
+
+
+def check_health(path, errors):
+    def finite(rec, key, ln):
+        v = rec.get(key)
+        if not isinstance(v, (int, float)) or isinstance(v, bool) or not math.isfinite(v):
+            errors.append(f"{path}:{ln}: {key} is not a finite number: {v!r}")
+            return None
+        return v
+
+    header = None
+    res_by_series = {}
+    last_t_by_series = {}
+    last_alert_t = None
+    cells = 0
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"{path}:{ln}: bad JSON ({e})")
+                continue
+            kind = rec.get("kind")
+            if kind == "health":
+                if header is not None:
+                    errors.append(f"{path}:{ln}: duplicate health header")
+                header = rec
+                if rec.get("version") != 1:
+                    errors.append(f"{path}:{ln}: unknown journal version {rec.get('version')!r}")
+                finite(rec, "shed_slo", ln)
+                finite(rec, "latency_slo", ln)
+                # p99_budget_ms is null when latency alerting is off
+            elif kind == "cell":
+                if header is None:
+                    errors.append(f"{path}:{ln}: cell before the health header")
+                cells += 1
+                series = rec.get("series")
+                if series not in HEALTH_SERIES:
+                    errors.append(f"{path}:{ln}: unknown series {series!r}")
+                    continue
+                res = finite(rec, "res_s", ln)
+                t = finite(rec, "t_s", ln)
+                if res is None or t is None:
+                    continue
+                if res <= 0:
+                    errors.append(f"{path}:{ln}: non-positive res_s {res}")
+                    continue
+                want = res_by_series.setdefault(series, res)
+                if res != want:
+                    errors.append(
+                        f"{path}:{ln}: series {series} changed resolution "
+                        f"({want} -> {res})"
+                    )
+                if abs(t / res - round(t / res)) > 1e-6:
+                    errors.append(
+                        f"{path}:{ln}: cell start {t} not aligned to the "
+                        f"{res} s grid"
+                    )
+                last_t = last_t_by_series.get(series)
+                if last_t is not None and t <= last_t:
+                    errors.append(
+                        f"{path}:{ln}: series {series} cell time not "
+                        f"increasing ({last_t} -> {t})"
+                    )
+                last_t_by_series[series] = t
+                lo = finite(rec, "min", ln)
+                mid = finite(rec, "mean", ln)
+                hi = finite(rec, "max", ln)
+                if None not in (lo, mid, hi) and not (lo <= mid + 1e-9 and mid <= hi + 1e-9):
+                    errors.append(
+                        f"{path}:{ln}: aggregates out of order "
+                        f"(min {lo}, mean {mid}, max {hi})"
+                    )
+                count = rec.get("count")
+                if not isinstance(count, int) or isinstance(count, bool) or count < 1:
+                    errors.append(f"{path}:{ln}: cell count must be a positive int: {count!r}")
+                finite(rec, "sum", ln)
+            elif kind == "alert":
+                if rec.get("signal") not in HEALTH_SIGNALS:
+                    errors.append(f"{path}:{ln}: unknown signal {rec.get('signal')!r}")
+                if rec.get("severity") not in HEALTH_SEVERITIES:
+                    errors.append(f"{path}:{ln}: unknown severity {rec.get('severity')!r}")
+                if not isinstance(rec.get("firing"), bool):
+                    errors.append(f"{path}:{ln}: firing must be a bool")
+                t = finite(rec, "at_s", ln)
+                if t is not None:
+                    if last_alert_t is not None and t < last_alert_t:
+                        errors.append(
+                            f"{path}:{ln}: alert time went backwards "
+                            f"({last_alert_t} -> {t})"
+                        )
+                    last_alert_t = t
+                for key in ("burn_long", "burn_short"):
+                    v = finite(rec, key, ln)
+                    if v is not None and v < 0:
+                        errors.append(f"{path}:{ln}: negative {key} {v}")
+            # foreign kinds are tolerated: journals may share a sink
+    if header is None:
+        errors.append(f"{path}: no health header line")
+    if cells == 0:
+        errors.append(f"{path}: no downsampled cells in journal")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("prom", help="Prometheus textfile written by --metrics-out")
+    ap.add_argument(
+        "prom",
+        nargs="?",
+        help="Prometheus textfile written by --metrics-out",
+    )
     ap.add_argument(
         "--jsonl",
         help="JSONL trajectory (default: PROM.jsonl, checked when present)",
     )
+    ap.add_argument(
+        "--health",
+        help="health journal written by --health-out (validated when given)",
+    )
     args = ap.parse_args(argv)
+    if not args.prom and not args.health:
+        ap.error("nothing to check: give PROM and/or --health")
 
     errors = []
-    if not os.path.exists(args.prom):
-        errors.append(f"{args.prom}: exposition file was never written")
-    else:
-        check_prom(args.prom, errors)
-        jsonl = args.jsonl or args.prom + ".jsonl"
-        if os.path.exists(jsonl):
-            check_jsonl(jsonl, errors)
-        elif args.jsonl:
-            errors.append(f"{jsonl}: trajectory file was never written")
+    if args.prom:
+        if not os.path.exists(args.prom):
+            errors.append(f"{args.prom}: exposition file was never written")
+        else:
+            check_prom(args.prom, errors)
+            jsonl = args.jsonl or args.prom + ".jsonl"
+            if os.path.exists(jsonl):
+                check_jsonl(jsonl, errors)
+            elif args.jsonl:
+                errors.append(f"{jsonl}: trajectory file was never written")
+    if args.health:
+        if not os.path.exists(args.health):
+            errors.append(f"{args.health}: health journal was never written")
+        else:
+            check_health(args.health, errors)
 
     for e in errors:
         print(f"::error::exposition: {e}")
     if not errors:
-        print(f"exposition OK: {args.prom} parses as Prometheus text")
+        checked = " and ".join(p for p in (args.prom, args.health) if p)
+        print(f"exposition OK: {checked}")
     return 1 if errors else 0
 
 

@@ -70,6 +70,7 @@ fn run_arm(
         seed: 42,
         control,
         obs: ObsConfig { sample: trace_sample, ..ObsConfig::default() },
+        health: None,
     };
     let t0 = std::time::Instant::now();
     let rep = FleetSim::uniform_with_standby(plan, backend, standby, cfg).run(trace);

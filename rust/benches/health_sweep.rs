@@ -1,0 +1,285 @@
+//! Bench: week-long diurnal fleet-health sweeps through the
+//! discrete-event simulator — the acceptance run of the long-horizon
+//! observability layer. 168 simulated hours of diurnal load, sampled
+//! every virtual minute into the fixed-memory time-series store, with
+//! the multiwindow SLO burn alerters firing/clearing across each daily
+//! peak and `obs::health::correlate` attributing every incident to the
+//! control plane's response (or flagging it unmitigated).
+//!
+//! Arms:
+//!
+//! * `week-diurnal-auto`   — 1 active + 2 standby chain groups with the
+//!   autoscaler on: each morning's peak overruns the active fleet, the
+//!   scaler steps out, the burn page fires while the wave still exceeds
+//!   max capacity and clears on the descent — incidents here must be
+//!   **mitigated** (a ScaleOut lands inside the breach window);
+//! * `week-diurnal-static` — the same week against a frozen 1-group
+//!   fleet: no control events, so every incident must come back
+//!   **unresponded** (the baseline an SRE dashboard shows without
+//!   autoscaling);
+//! * `day-diurnal-auto`    — a 24 h version with the alert windows
+//!   compressed 10× (`window_scale 0.1`), the CI smoke shape.
+//!
+//! The full week must finish in wall-clock seconds (warned loudly if it
+//! exceeds 60 s). `--smoke` shrinks the week arms to one day; `--json`
+//! writes `BENCH_health.json`.
+
+use std::path::Path;
+use std::time::Duration;
+
+use fcmp::control::{AutoscalerConfig, SignalConfig};
+use fcmp::coordinator::{diurnal, BatcherConfig, Deployment, Policy, Trace};
+use fcmp::obs::health::{correlate, stats};
+use fcmp::obs::HealthConfig;
+use fcmp::sim::{FleetSim, SimBackend, SimConfig, SimControl};
+use fcmp::util::args::Args;
+use fcmp::util::bench::Table;
+
+/// Per-group service: 1.8 s/item, so one single-stage group sustains
+/// ~0.55 req/s and the 3-group ceiling ~1.66 req/s — the diurnal peak
+/// (2.5 req/s) overruns even the fully scaled fleet, keeping the burn
+/// alert lit until the wave descends (mitigation != instant recovery).
+const PER_ITEM_S: f64 = 1.8;
+const BASE_RATE: f64 = 0.25;
+const PEAK_RATE: f64 = 2.5;
+const DAY_S: f64 = 86_400.0;
+
+struct Cell {
+    arm: &'static str,
+    policy: &'static str,
+    trace: &'static str,
+    chains: usize,
+    stages: usize,
+    window: usize,
+    requests: usize,
+    completed: usize,
+    shed: usize,
+    incidents: usize,
+    mitigated: usize,
+    unresponded: usize,
+    alerts: usize,
+    mean_ttd_s: f64,
+    mean_ttm_s: f64,
+    virtual_s: f64,
+    wall_s: f64,
+}
+
+fn run_arm(
+    arm: &'static str,
+    standby: usize,
+    control: Option<SimControl>,
+    trace: &Trace,
+    health: HealthConfig,
+) -> Cell {
+    let plan = Deployment::replicated(1)
+        .with_policy(Policy::RoundRobin)
+        .with_batcher(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(100) })
+        .with_queue_depth(64)
+        .with_window(1);
+    let chains = plan.groups.len();
+    let stages = plan.groups.first().map_or(1, |g| g.stages);
+    let window = plan.window;
+    let policy = plan.policy.name();
+    let backend =
+        SimBackend::Mock { base: Duration::ZERO, per_item: Duration::from_secs_f64(PER_ITEM_S) };
+    let cfg = SimConfig {
+        input_len: 4,
+        seed: 42,
+        control,
+        obs: fcmp::obs::ObsConfig::default(),
+        health: Some(health),
+    };
+    let t0 = std::time::Instant::now();
+    let rep = FleetSim::uniform_with_standby(plan, backend, standby, cfg).run(trace);
+    let wall = t0.elapsed().as_secs_f64();
+    let journal = rep.health.expect("health collection was configured");
+    let incidents = correlate(&journal, &rep.events);
+    let st = stats(&incidents);
+    Cell {
+        arm,
+        policy,
+        trace: "diurnal",
+        chains,
+        stages,
+        window,
+        requests: trace.arrivals_s.len(),
+        completed: rep.completed,
+        shed: rep.shed,
+        incidents: st.incidents,
+        mitigated: st.mitigated,
+        unresponded: st.unresponded,
+        alerts: journal.alerts.len(),
+        mean_ttd_s: st.mean_ttd_s,
+        mean_ttm_s: st.mean_ttm_s,
+        virtual_s: rep.sim_seconds,
+        wall_s: wall,
+    }
+}
+
+/// The virtual-tick control plane shared by the auto arms: one-minute
+/// ticks, scale-out on >2 % shed, scale-in below 25 % utilization. The
+/// four-hour cooldown is deliberately slower than the morning ramp: the
+/// second scale-out lands while the fleet is *still* shedding, inside
+/// the contiguous breach run the burn alert dates — a mitigated
+/// incident, not a response that predates the breach.
+fn auto_control() -> SimControl {
+    SimControl {
+        tick: Duration::from_secs(60),
+        signal: SignalConfig { window_ticks: 3 },
+        autoscaler: Some(AutoscalerConfig {
+            min_groups: 1,
+            max_groups: 3,
+            shed_out: 0.02,
+            p99_out_ms: f64::INFINITY,
+            util_in: 0.25,
+            cooldown_ticks: 240,
+            step: 1,
+        }),
+        slo: None,
+        trailing_ticks: 8,
+    }
+}
+
+/// Health collection at a one-minute cadence persisting one-minute
+/// cells — the default SRE windows (1 h/5 m page, 6 h/30 m ticket)
+/// scaled by `window_scale`.
+fn health_cfg(window_scale: f64) -> HealthConfig {
+    HealthConfig {
+        sample_s: 60.0,
+        p99_budget_ms: 30_000.0,
+        window_scale,
+        ..HealthConfig::default()
+    }
+}
+
+fn diurnal_trace(days: f64, seed: u64) -> Trace {
+    let n = ((BASE_RATE + PEAK_RATE) / 2.0 * days * DAY_S) as usize;
+    diurnal(n, BASE_RATE, PEAK_RATE, DAY_S, seed)
+}
+
+fn cells_json(cells: &[Cell]) -> String {
+    let mut out = String::from("[");
+    for (k, c) in cells.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"arm\":{:?},\"policy\":{:?},\"trace\":{:?},\"chains\":{},\"stages\":{},\
+             \"window\":{},\"requests\":{},\"completed\":{},\"shed\":{},\"incidents\":{},\
+             \"mitigated\":{},\"unresponded\":{},\"alerts\":{},\"mean_ttd_s\":{:.1},\
+             \"mean_ttm_s\":{:.1},\"virtual_s\":{:.1},\"wall_s\":{:.3}}}",
+            c.arm,
+            c.policy,
+            c.trace,
+            c.chains,
+            c.stages,
+            c.window,
+            c.requests,
+            c.completed,
+            c.shed,
+            c.incidents,
+            c.mitigated,
+            c.unresponded,
+            c.alerts,
+            c.mean_ttd_s,
+            c.mean_ttm_s,
+            c.virtual_s,
+            c.wall_s
+        ));
+    }
+    out.push(']');
+    out
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    // --smoke compresses the "week" arms to one day so CI stays fast;
+    // the alert windows compress with them
+    let (days, scale) = if smoke { (1.0, 0.1) } else { (7.0, 1.0) };
+    let trace = diurnal_trace(days, 42);
+
+    let auto = run_arm(
+        "week-diurnal-auto",
+        2,
+        Some(auto_control()),
+        &trace,
+        health_cfg(scale),
+    );
+    if auto.wall_s >= 60.0 {
+        eprintln!(
+            "WARNING week-diurnal-auto took {:.1} s wall for {:.0} virtual s — the \
+             week-long sweep is expected to finish in wall-clock seconds",
+            auto.wall_s, auto.virtual_s
+        );
+    }
+    if auto.incidents == 0 {
+        eprintln!(
+            "WARNING week-diurnal-auto produced no incidents — the diurnal peak \
+             should overrun even the scaled fleet and trip the burn alerts"
+        );
+    }
+    if auto.mitigated == 0 {
+        eprintln!(
+            "WARNING week-diurnal-auto has no mitigated incident — the autoscaler's \
+             ScaleOut should land inside every breach window"
+        );
+    }
+
+    // the baseline arm: same week, frozen fleet, no control plane — the
+    // health ticks still run (paced by the sample interval) and every
+    // incident must come back unresponded
+    let stat = run_arm("week-diurnal-static", 0, None, &trace, health_cfg(scale));
+    if stat.incidents == 0 || stat.unresponded != stat.incidents {
+        eprintln!(
+            "WARNING week-diurnal-static expected only unresponded incidents, got \
+             {} of {} unresponded",
+            stat.unresponded, stat.incidents
+        );
+    }
+
+    // the CI smoke shape at full size: one day, windows compressed 10x
+    let day_trace = diurnal_trace(1.0, 43);
+    let day = run_arm("day-diurnal-auto", 2, Some(auto_control()), &day_trace, health_cfg(0.1));
+
+    let cells = vec![auto, stat, day];
+
+    let mut t = Table::new([
+        "arm", "req", "completed", "shed", "incidents", "mitigated", "unresp", "alerts",
+        "ttd s", "ttm s", "virt s", "wall s",
+    ]);
+    for c in &cells {
+        t.row([
+            c.arm.to_string(),
+            format!("{}", c.requests),
+            format!("{}", c.completed),
+            format!("{}", c.shed),
+            format!("{}", c.incidents),
+            format!("{}", c.mitigated),
+            format!("{}", c.unresponded),
+            format!("{}", c.alerts),
+            format!("{:.0}", c.mean_ttd_s),
+            format!("{:.0}", c.mean_ttm_s),
+            format!("{:.0}", c.virtual_s),
+            format!("{:.2}", c.wall_s),
+        ]);
+    }
+    println!("== Fleet health sweep (long-horizon store + SLO burn alerts) ==");
+    println!("{}", t.render());
+    println!(
+        "headline: {:.0} simulated hours in {:.2} s wall — {} incident(s), \
+         {} mitigated, mean TTD {:.0} s, mean TTM {:.0} s",
+        cells[0].virtual_s / 3600.0,
+        cells[0].wall_s,
+        cells[0].incidents,
+        cells[0].mitigated,
+        cells[0].mean_ttd_s,
+        cells[0].mean_ttm_s
+    );
+
+    if args.has_flag("json") {
+        let path = Path::new("BENCH_health.json");
+        std::fs::write(path, cells_json(&cells)).expect("writing BENCH_health.json");
+        println!("wrote {} ({} cells)", path.display(), cells.len());
+    }
+}

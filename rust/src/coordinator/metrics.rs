@@ -332,6 +332,20 @@ impl FleetMetrics {
         self.shed
     }
 
+    /// The cumulative fleet-wide end-to-end latency histogram: every
+    /// per-group histogram plus the orphan bucket merged bucket-exactly
+    /// via [`LogHistogram::merge`]. Allocates one histogram per call, so
+    /// callers sample it on a snapshot cadence (the health monitor's
+    /// interval-percentile diffs), never per request.
+    pub fn latency_histogram(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for m in &self.per_group {
+            h.merge(&m.hist);
+        }
+        h.merge(&self.orphans.hist);
+        h
+    }
+
     /// Install a hot-path profile snapshot (typically
     /// [`crate::coordinator::Server::hot_stats`] taken at the end of the
     /// run) so it rides along in the [`FleetSummary`].

@@ -53,7 +53,9 @@ use super::policy::{Policy, Scheduler};
 use super::replica::{Replica, Sink};
 use super::workload::Trace;
 use super::{Completion, Request};
-use crate::obs::{Exposition, Obs, ObsConfig, SpanEvent};
+use crate::obs::{
+    Exposition, HealthConfig, HealthJournal, HealthMonitor, Obs, ObsConfig, SpanEvent,
+};
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -641,6 +643,9 @@ pub struct Server {
     counters: Arc<HotCounters>,
     obs: Arc<Obs>,
     exposition: Option<Exposition>,
+    /// Long-horizon health collection, fed on the snapshot cadence of
+    /// the replay loop (never per request).
+    health: Option<HealthMonitor>,
     /// Sheds since the last anomaly observation (replay's shed-burst
     /// window).
     shed_window: u64,
@@ -696,6 +701,7 @@ impl Server {
             counters,
             obs,
             exposition: None,
+            health: None,
             shed_window: 0,
         };
         srv.rebuild_router();
@@ -1013,6 +1019,22 @@ impl Server {
         self.exposition.as_ref()
     }
 
+    /// Attach long-horizon health collection: [`Server::replay`] feeds
+    /// the downsampling store and SLO burn alerters on its snapshot
+    /// cadence (all ring memory is allocated here, up front).
+    pub fn set_health(&mut self, cfg: HealthConfig) {
+        self.health = Some(HealthMonitor::new(cfg));
+    }
+
+    /// Detach the health monitor, flushing still-open cells, and yield
+    /// its journal (for `fcmp healthreport` correlation in-process).
+    pub fn take_health(&mut self) -> Option<HealthJournal> {
+        self.health.take().map(|mut h| {
+            h.finish();
+            h.into_journal()
+        })
+    }
+
     /// Receive the next completion (blocks until one arrives, or returns
     /// `None` once the fleet has shut down and the stream is drained).
     /// The stream only terminates after [`Server::shutdown`] — a fleet
@@ -1095,7 +1117,9 @@ impl Server {
                 Err(SubmitError::Closed(_)) => return fm,
             }
             self.observe_anomalies();
-            self.emit_snapshot(&fm, t0.elapsed().as_secs_f64(), false);
+            let now_s = t0.elapsed().as_secs_f64();
+            self.emit_snapshot(&fm, now_s, false);
+            self.observe_health(&fm, now_s);
         }
         // drain: every accepted request completes unless a backend fails its
         // batch (never on the mock/PJRT paths), so guard with a stall timeout
@@ -1111,7 +1135,9 @@ impl Server {
                 Err(RecvTimeoutError::Disconnected) => break,
                 Err(RecvTimeoutError::Timeout) => {
                     self.observe_anomalies();
-                    self.emit_snapshot(&fm, t0.elapsed().as_secs_f64(), false);
+                    let now_s = t0.elapsed().as_secs_f64();
+                    self.emit_snapshot(&fm, now_s, false);
+                    self.observe_health(&fm, now_s);
                     if self.all_workers_dead()
                         || last_progress.elapsed() > Duration::from_secs(10)
                     {
@@ -1121,7 +1147,9 @@ impl Server {
             }
         }
         // final snapshot: the drained end state, emitted unconditionally
-        self.emit_snapshot(&fm, t0.elapsed().as_secs_f64(), true);
+        let now_s = t0.elapsed().as_secs_f64();
+        self.emit_snapshot(&fm, now_s, true);
+        self.observe_health(&fm, now_s);
         fm
     }
 
@@ -1137,6 +1165,27 @@ impl Server {
         self.obs.recorder().observe(None, self.shed_window, self.dead_groups());
         if self.obs.recorder().flush_count() != before {
             self.shed_window = 0;
+        }
+    }
+
+    /// Feed the attached health monitor (when due) one snapshot of the
+    /// replay's cumulative counters + the merged fleet latency
+    /// histogram. The `due` gate keeps the histogram merge off the
+    /// steady-state arrival path between samples.
+    fn observe_health(&mut self, fm: &FleetMetrics, now_s: f64) {
+        let now_ns = (now_s * 1e9) as u64;
+        if !self.health.as_ref().is_some_and(|h| h.due(now_ns)) {
+            return;
+        }
+        let hist = fm.latency_histogram();
+        if let Some(h) = self.health.as_mut() {
+            h.observe(
+                now_ns,
+                fm.submitted() as u64,
+                fm.shed() as u64,
+                fm.completed() as u64,
+                &hist,
+            );
         }
     }
 

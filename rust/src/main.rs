@@ -41,12 +41,16 @@
 //!               [--spans-out PATH] [--p99-budget MS] [--shed-burst N]
 //!               [--metrics-out PATH] [--metrics-interval S])
 //! fcmp tracereport --spans PATH (critical-path breakdown of a span file)
+//! fcmp healthreport --health PATH [--events PATH] [--require-incidents]
+//!               (serve + simulate write the journal via [--health-out PATH]
+//!               [--health] [--shed-slo F] [--latency-slo F]
+//!               [--health-sample S] [--health-window-scale X])
 //! fcmp dse      --network ... --device ... [--budget 0.85]
 //! ```
 
 use fcmp::control::{
-    replan, run_loop, save_events, splice_mock_chain, AutoscalerConfig, ControlledFleet,
-    FailureEvent, LoopConfig, SignalConfig, SloConfig,
+    load_events, replan, run_loop, save_events, splice_mock_chain, AutoscalerConfig, ControlEvent,
+    ControlledFleet, FailureEvent, LoopConfig, SignalConfig, SloConfig,
 };
 use fcmp::coordinator::{
     bursty, chain_fps, diurnal, flash_crowd, group_weights, heavy_tail,
@@ -57,7 +61,9 @@ use fcmp::coordinator::{
 use fcmp::device;
 use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
 use fcmp::nn::{cnv, resnet50, CnvVariant, Network};
-use fcmp::obs::{tracereport, AnomalyConfig, Exposition, ObsConfig};
+use fcmp::obs::{
+    health, tracereport, AnomalyConfig, Exposition, HealthConfig, HealthJournal, ObsConfig,
+};
 use fcmp::packing::{anneal::Anneal, ffd::Ffd, Packer};
 use fcmp::sharding::{self, LinkSpec, PartitionConfig};
 use fcmp::sim::{FleetSim, SimBackend, SimConfig, SimControl};
@@ -351,6 +357,54 @@ fn exposition_by_args(a: &Args) -> Option<Exposition> {
         .map(|p| Exposition::new(p, a.get_f64("metrics-interval", 0.25).max(1e-6)))
 }
 
+/// Long-horizon fleet health: `--health-out PATH` (or bare `--health`)
+/// downsamples the fleet counters into the fixed-memory time-series
+/// store and evaluates multiwindow SLO burn-rate alerts on the snapshot
+/// cadence. `--shed-slo F` / `--latency-slo F` set the error budgets,
+/// `--p99-budget MS` (shared with the anomaly trigger) arms the latency
+/// signal, `--health-sample S` sets the cadence, and
+/// `--health-window-scale X` compresses the SRE alert windows for short
+/// runs (CI smokes).
+fn health_by_args(a: &Args) -> Option<HealthConfig> {
+    let out = a.get("health-out").map(PathBuf::from);
+    if out.is_none() && !a.has_flag("health") {
+        return None;
+    }
+    Some(HealthConfig {
+        sample_s: a.get_f64("health-sample", 1.0).max(1e-3),
+        shed_slo: a.get_f64("shed-slo", 0.02),
+        latency_slo: a.get_f64("latency-slo", 0.05),
+        p99_budget_ms: a.get_f64("p99-budget", f64::INFINITY),
+        window_scale: a.get_f64("health-window-scale", 1.0).max(1e-6),
+        out,
+        ..HealthConfig::default()
+    })
+}
+
+/// Shared epilogue for serve/simulate: incident attribution of the
+/// run's health journal against its control events, printed so smokes
+/// can grep for the incident count.
+fn print_health_summary(a: &Args, journal: Option<&HealthJournal>, events: &[ControlEvent]) {
+    let Some(j) = journal else { return };
+    let incidents = health::correlate(j, events);
+    let st = health::stats(&incidents);
+    println!(
+        "health: {} cell(s), {} alert transition(s) | {} incident(s): {} mitigated, \
+         {} unresponded",
+        j.cells.len(),
+        j.alerts.len(),
+        st.incidents,
+        st.mitigated,
+        st.unresponded
+    );
+    if !incidents.is_empty() {
+        println!("{}", health::table(&incidents).render());
+    }
+    if let Some(p) = a.get("health-out") {
+        println!("health: journal to {p}");
+    }
+}
+
 /// One-line tracing epilogue: pool health and flush count, printed by
 /// the drivers so CI smokes can grep for the zero-miss invariant.
 fn print_obs_summary(obs: &fcmp::obs::Obs) {
@@ -638,6 +692,7 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     // backend arm runs
     let ocfg = obs_by_args(a);
     let expo = exposition_by_args(a);
+    let hcfg = health_by_args(a);
     let (mut srv, fm) = match backend {
         "mock" => {
             let mut srv = Server::deploy_with_obs(
@@ -649,6 +704,9 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
             );
             if let Some(e) = expo {
                 srv.set_exposition(e);
+            }
+            if let Some(h) = hcfg {
+                srv.set_health(h);
             }
             let fm = srv.replay(&trace, 8, seed);
             (srv, fm)
@@ -679,6 +737,9 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
             if let Some(e) = expo {
                 srv.set_exposition(e);
             }
+            if let Some(h) = hcfg {
+                srv.set_health(h);
+            }
             let fm = srv.replay(&trace, 8, seed);
             (srv, fm)
         }
@@ -700,6 +761,9 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
             if let Some(e) = expo {
                 srv.set_exposition(e);
             }
+            if let Some(h) = hcfg {
+                srv.set_health(h);
+            }
             let fm = srv.replay(&trace, per, seed);
             (srv, fm)
         }
@@ -715,6 +779,10 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     if let Some(e) = srv.exposition() {
         println!("metrics: {} snapshot(s) to {}", e.emits(), e.path().display());
     }
+    // serve has no control plane, so incidents correlate against an
+    // empty event stream (every breach reports as unresponded)
+    let hj = srv.take_health();
+    print_health_summary(a, hj.as_ref(), &[]);
     Ok(())
 }
 
@@ -986,6 +1054,7 @@ fn cmd_simulate(a: &Args) -> anyhow::Result<()> {
         seed,
         control,
         obs: obs_by_args(a),
+        health: health_by_args(a),
     };
 
     println!(
@@ -1036,6 +1105,7 @@ fn cmd_simulate(a: &Args) -> anyhow::Result<()> {
     if let Some(p) = a.get("metrics-out") {
         println!("metrics: snapshots to {p}");
     }
+    print_health_summary(a, rep.health.as_ref(), &rep.events);
 
     if a.has_flag("require-scale-cycle") {
         let first_out = rep.events.iter().find_map(|e| match e.kind {
@@ -1080,6 +1150,51 @@ fn cmd_tracereport(a: &Args) -> anyhow::Result<()> {
         rep.stages.len()
     );
     println!("{}", tracereport::table(&rep).render());
+    Ok(())
+}
+
+/// `fcmp healthreport`: incident attribution over a health journal —
+/// join the burn-alert stream against the journaled control events,
+/// date each breach via the downsampled cells, and report time to
+/// detection / time to mitigation per incident.
+fn cmd_healthreport(a: &Args) -> anyhow::Result<()> {
+    let path = a
+        .get("health")
+        .ok_or_else(|| anyhow::anyhow!("--health PATH required (a --health-out JSONL journal)"))?;
+    let journal = HealthJournal::load(Path::new(path))?;
+    anyhow::ensure!(
+        !journal.cells.is_empty(),
+        "no health cells in {path} (was the run long enough to close a cell?)"
+    );
+    let events = match a.get("events") {
+        Some(p) => load_events(Path::new(p))?,
+        None => Vec::new(),
+    };
+    let incidents = health::correlate(&journal, &events);
+    let st = health::stats(&incidents);
+    println!(
+        "healthreport [{path}]: {} cell(s), {} alert transition(s), {} control event(s) | \
+         {} incident(s): {} mitigated, {} unresponded, mean ttd {:.1} s, mean ttm {:.1} s",
+        journal.cells.len(),
+        journal.alerts.len(),
+        events.len(),
+        st.incidents,
+        st.mitigated,
+        st.unresponded,
+        st.mean_ttd_s,
+        st.mean_ttm_s
+    );
+    if incidents.is_empty() {
+        println!("no incidents: no burn alert fired over the journal horizon");
+    } else {
+        println!("{}", health::table(&incidents).render());
+    }
+    if a.has_flag("require-incidents") {
+        anyhow::ensure!(
+            !incidents.is_empty(),
+            "--require-incidents: no SLO-breach incident in {path}"
+        );
+    }
     Ok(())
 }
 
@@ -1194,6 +1309,13 @@ subcommands:
           Prometheus-text + JSONL metric snapshots
   tracereport  critical-path breakdown of a span trace (--spans PATH):
           per-(group, stage) queue / gather / compute / link time table
+  healthreport  incident attribution over a health journal (--health PATH
+          [--events PATH] [--require-incidents]): joins SLO burn alerts
+          against the control-event journal, dates each breach from the
+          downsampled cells, and reports TTD/TTM per incident; serve and
+          simulate write the journal with --health-out PATH (or collect
+          in-memory with --health) [--shed-slo F] [--latency-slo F]
+          [--health-sample S] [--health-window-scale X]
   dse     folding design-space exploration (--network, --device, --budget)
   floorplan  SLR floorplan of a network on a multi-die device (Fig. 5)";
 
@@ -1210,6 +1332,7 @@ fn main() {
         Some("autoscale") => cmd_autoscale(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("tracereport") => cmd_tracereport(&args),
+        Some("healthreport") => cmd_healthreport(&args),
         Some("dse") => cmd_dse(&args),
         Some("floorplan") => cmd_floorplan(&args),
         _ => {

@@ -1,0 +1,336 @@
+//! Multi-window, multi-burn-rate SLO alerting over the downsampled
+//! series of [`crate::obs::timeseries`] — the Google-SRE error-budget
+//! construction, applied to the serving fleet's two user-facing SLOs:
+//!
+//! * **shed rate** — error = shed admissions, total = offered
+//!   admissions, budget = the allowed shed fraction;
+//! * **latency p99** — error = completions in intervals whose p99
+//!   exceeded the budget ("late"), total = completions, budget = the
+//!   allowed late fraction.
+//!
+//! The **burn rate** over a window is `(errors/total) / budget`: how
+//! many times faster than allowed the error budget is being consumed.
+//! Each severity pairs a **long** window (smooths noise, sets the
+//! detection floor) with a **short** window (resets fast once the
+//! breach ends); an alert fires only when *both* exceed the threshold,
+//! and clears when the short window falls below `clear_frac ×`
+//! threshold — the band between is hysteresis, holding state so a
+//! signal oscillating on the threshold cannot flap.
+//!
+//! Alerts are edge-triggered: [`BurnAlerter::eval`] emits one
+//! [`HealthAlert`] per transition (fired / cleared), never per tick.
+//! The stream is what [`crate::obs::health`] joins against the
+//! `ControlEvent` journal for incident attribution.
+
+use super::timeseries::{Series, SeriesStore};
+
+/// Which SLO a rule watches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloSignal {
+    /// Admission-control shed fraction.
+    ShedRate,
+    /// End-to-end p99 latency budget.
+    LatencyP99,
+}
+
+impl SloSignal {
+    /// Stable journal name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SloSignal::ShedRate => "shed_rate",
+            SloSignal::LatencyP99 => "latency_p99",
+        }
+    }
+
+    /// Inverse of [`SloSignal::name`].
+    pub fn from_name(s: &str) -> Option<SloSignal> {
+        [SloSignal::ShedRate, SloSignal::LatencyP99].into_iter().find(|x| x.name() == s)
+    }
+}
+
+/// Alert urgency tier, one per configured burn rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Fast-burn: budget gone in hours — wake someone.
+    Page,
+    /// Slow-burn: budget gone in days — file a ticket.
+    Ticket,
+}
+
+impl Severity {
+    /// Stable journal name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Page => "page",
+            Severity::Ticket => "ticket",
+        }
+    }
+
+    /// Inverse of [`Severity::name`].
+    pub fn from_name(s: &str) -> Option<Severity> {
+        [Severity::Page, Severity::Ticket].into_iter().find(|x| x.name() == s)
+    }
+}
+
+/// One multiwindow burn rule: fire when the burn rate exceeds
+/// `burn` over **both** windows.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BurnRule {
+    /// Alert tier this rule feeds.
+    pub severity: Severity,
+    /// Long (detection) window, seconds.
+    pub long_s: f64,
+    /// Short (reset) window, seconds.
+    pub short_s: f64,
+    /// Burn-rate threshold (1.0 = exactly on budget).
+    pub burn: f64,
+}
+
+impl BurnRule {
+    /// The classic fast-burn page: 14.4× over 1 h and 5 m (2 % of a
+    /// 30-day budget in one hour).
+    pub fn page() -> BurnRule {
+        BurnRule { severity: Severity::Page, long_s: 3600.0, short_s: 300.0, burn: 14.4 }
+    }
+
+    /// The slow-burn ticket: 6× over 6 h and 30 m.
+    pub fn ticket() -> BurnRule {
+        BurnRule { severity: Severity::Ticket, long_s: 21600.0, short_s: 1800.0, burn: 6.0 }
+    }
+
+    /// Both standard rules, with every window scaled by `scale` — the
+    /// same multiwindow construction evaluated on a compressed horizon
+    /// (short smokes and benches use `scale < 1`).
+    pub fn standard(scale: f64) -> Vec<BurnRule> {
+        let s = scale.max(1e-6);
+        [BurnRule::page(), BurnRule::ticket()]
+            .into_iter()
+            .map(|r| BurnRule { long_s: r.long_s * s, short_s: r.short_s * s, ..r })
+            .collect()
+    }
+}
+
+/// One edge of an alert's lifecycle, as journaled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HealthAlert {
+    /// Driver-clock time of the transition, seconds.
+    pub at_s: f64,
+    /// Which SLO.
+    pub signal: SloSignal,
+    /// Which rule tier.
+    pub severity: Severity,
+    /// `true` = fired, `false` = cleared.
+    pub firing: bool,
+    /// Burn rate over the rule's long window at the transition.
+    pub burn_long: f64,
+    /// Burn rate over the rule's short window at the transition.
+    pub burn_short: f64,
+}
+
+/// Evaluates one signal's burn rules against the store, holding per-rule
+/// firing state across evaluations.
+#[derive(Debug)]
+pub struct BurnAlerter {
+    signal: SloSignal,
+    err: Series,
+    total: Series,
+    /// Error-budget fraction (e.g. 0.02 = 2 % of requests may be shed).
+    budget: f64,
+    rules: Vec<BurnRule>,
+    firing: Vec<bool>,
+    /// Clear when the short-window burn drops below `clear_frac × burn`;
+    /// the band `[clear_frac·burn, burn)` is hysteresis.
+    clear_frac: f64,
+}
+
+impl BurnAlerter {
+    /// An alerter for `signal` reading `err`/`total` cells against
+    /// `budget`, evaluating `rules`.
+    pub fn new(
+        signal: SloSignal,
+        err: Series,
+        total: Series,
+        budget: f64,
+        rules: Vec<BurnRule>,
+    ) -> BurnAlerter {
+        let n = rules.len();
+        BurnAlerter {
+            signal,
+            err,
+            total,
+            budget: budget.max(1e-9),
+            rules,
+            firing: vec![false; n],
+            clear_frac: 0.9,
+        }
+    }
+
+    /// Burn rate of the trailing `span_s` window ending at `now_ns`:
+    /// `(err_sum / total_sum) / budget`; 0 when the window saw no
+    /// traffic (no traffic burns no budget).
+    pub fn burn_over(&self, store: &SeriesStore, now_ns: u64, span_s: f64) -> f64 {
+        let span_ns = (span_s * 1e9) as u64;
+        let (err, _) = store.window(self.err, now_ns, span_ns);
+        let (total, _) = store.window(self.total, now_ns, span_ns);
+        if total <= 0.0 {
+            return 0.0;
+        }
+        (err / total) / self.budget
+    }
+
+    /// Evaluate every rule at `now_ns`, appending one [`HealthAlert`]
+    /// per state transition to `out`.
+    pub fn eval(&mut self, store: &SeriesStore, now_ns: u64, out: &mut Vec<HealthAlert>) {
+        let at_s = now_ns as f64 / 1e9;
+        for (k, rule) in self.rules.iter().enumerate() {
+            let burn_long = self.burn_over(store, now_ns, rule.long_s);
+            let burn_short = self.burn_over(store, now_ns, rule.short_s);
+            let next = if self.firing[k] {
+                // hold through the hysteresis band; only a clean
+                // short-window recovery clears
+                burn_short >= self.clear_frac * rule.burn
+            } else {
+                burn_long >= rule.burn && burn_short >= rule.burn
+            };
+            if next != self.firing[k] {
+                self.firing[k] = next;
+                out.push(HealthAlert {
+                    at_s,
+                    signal: self.signal,
+                    severity: rule.severity,
+                    firing: next,
+                    burn_long,
+                    burn_short,
+                });
+            }
+        }
+    }
+
+    /// Whether any rule of this alerter is currently firing.
+    pub fn any_firing(&self) -> bool {
+        self.firing.iter().any(|&f| f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::timeseries::SeriesConfig;
+
+    const NS: u64 = 1_000_000_000;
+
+    fn store() -> SeriesStore {
+        SeriesStore::new(&SeriesConfig {
+            resolutions: vec![(1.0, 4096)],
+            persist_res_s: 1.0,
+        })
+    }
+
+    fn shed_alerter(rules: Vec<BurnRule>) -> BurnAlerter {
+        BurnAlerter::new(SloSignal::ShedRate, Series::Shed, Series::Offered, 0.02, rules)
+    }
+
+    /// Drive `secs` seconds of `rate` offered req/s shedding `frac`,
+    /// evaluating each second; returns the emitted transitions.
+    fn drive(
+        st: &mut SeriesStore,
+        al: &mut BurnAlerter,
+        t0: &mut u64,
+        secs: u64,
+        frac: f64,
+    ) -> Vec<HealthAlert> {
+        let mut out = Vec::new();
+        for _ in 0..secs {
+            let t = *t0 * NS;
+            st.record(Series::Offered, t, 100.0);
+            st.record(Series::Shed, t, 100.0 * frac);
+            al.eval(st, t, &mut out);
+            *t0 += 1;
+        }
+        out
+    }
+
+    #[test]
+    fn step_breach_trips_fast_window_then_recovery_clears() {
+        let rules = vec![BurnRule {
+            severity: Severity::Page,
+            long_s: 60.0,
+            short_s: 10.0,
+            burn: 14.4,
+        }];
+        let (mut st, mut al, mut t) = (store(), shed_alerter(rules), 0u64);
+        // healthy baseline: well under budget, nothing fires
+        assert!(drive(&mut st, &mut al, &mut t, 120, 0.001).is_empty());
+        // step to 50 % shed: burn = 25 ≫ 14.4 — must fire once the long
+        // window's average crosses, and exactly once
+        let fired = drive(&mut st, &mut al, &mut t, 120, 0.5);
+        assert_eq!(fired.len(), 1, "{fired:?}");
+        assert!(fired[0].firing);
+        assert_eq!(fired[0].severity, Severity::Page);
+        assert!(fired[0].burn_long >= 14.4 && fired[0].burn_short >= 14.4);
+        // recovery: short window drains fast, alert clears exactly once
+        let cleared = drive(&mut st, &mut al, &mut t, 60, 0.0);
+        assert_eq!(cleared.len(), 1, "{cleared:?}");
+        assert!(!cleared[0].firing);
+        assert!(!al.any_firing());
+    }
+
+    #[test]
+    fn slow_drift_trips_slow_window_only() {
+        // 8× burn: above the ticket threshold (6) but below the page
+        // threshold (14.4) — only the slow-burn rule may fire
+        let rules = vec![
+            BurnRule { severity: Severity::Page, long_s: 60.0, short_s: 10.0, burn: 14.4 },
+            BurnRule { severity: Severity::Ticket, long_s: 120.0, short_s: 30.0, burn: 6.0 },
+        ];
+        let (mut st, mut al, mut t) = (store(), shed_alerter(rules), 0u64);
+        let out = drive(&mut st, &mut al, &mut t, 600, 0.16); // burn 8.0
+        let severities: Vec<_> = out.iter().map(|a| a.severity).collect();
+        assert_eq!(severities, vec![Severity::Ticket], "{out:?}");
+        assert!(out[0].firing);
+    }
+
+    #[test]
+    fn no_flapping_inside_hysteresis_band() {
+        let rules = vec![BurnRule {
+            severity: Severity::Page,
+            long_s: 30.0,
+            short_s: 10.0,
+            burn: 10.0,
+        }];
+        let (mut st, mut al, mut t) = (store(), shed_alerter(rules), 0u64);
+        // fire cleanly at burn 25
+        let fired = drive(&mut st, &mut al, &mut t, 60, 0.5);
+        assert_eq!(fired.len(), 1);
+        // oscillate inside the band [0.9·10, 10) · budget = shed frac
+        // jittering around 19 % — held firing, zero transitions
+        let mut out = Vec::new();
+        for k in 0..120u64 {
+            let frac = if k % 2 == 0 { 0.185 } else { 0.198 }; // burn 9.25 / 9.9
+            out.extend(drive(&mut st, &mut al, &mut t, 1, frac));
+        }
+        assert!(out.is_empty(), "hysteresis must hold state: {out:?}");
+        assert!(al.any_firing());
+        // dropping below the clear fraction finally clears
+        let cleared = drive(&mut st, &mut al, &mut t, 30, 0.05);
+        assert_eq!(cleared.len(), 1);
+        assert!(!cleared[0].firing);
+    }
+
+    #[test]
+    fn no_traffic_burns_no_budget() {
+        let rules = vec![BurnRule {
+            severity: Severity::Page,
+            long_s: 30.0,
+            short_s: 10.0,
+            burn: 10.0,
+        }];
+        let (mut st, mut al) = (store(), shed_alerter(rules));
+        let mut out = Vec::new();
+        for t in 0..60u64 {
+            al.eval(&st, t * NS, &mut out); // nothing recorded at all
+        }
+        assert!(out.is_empty());
+        assert_eq!(al.burn_over(&st, 60 * NS, 30.0), 0.0);
+    }
+}

@@ -1,0 +1,723 @@
+//! Fleet health: long-horizon collection, SLO burn alerting, and
+//! incident attribution.
+//!
+//! [`HealthMonitor`] is the collection half: on the driver's snapshot
+//! cadence (never per request) it diffs the cumulative fleet counters
+//! and latency histogram into interval deltas, downsamples them into
+//! the fixed-memory [`SeriesStore`], evaluates the burn-rate rules of
+//! [`crate::obs::burn`], and streams closed cells + alert transitions
+//! as a JSONL **health journal** (`--health-out`).
+//!
+//! [`correlate`] is the attribution half: it joins the journal's alert
+//! stream against the journaled [`ControlEvent`] stream and answers,
+//! per incident, the questions an operator asks after the fact — when
+//! did the breach actually start (scanning the downsampled cells
+//! backwards from the alert), how long until detection (TTD), did the
+//! control plane respond and how long after the breach began (TTM),
+//! and did the alert clear. `fcmp healthreport` renders the result;
+//! week-long diurnal sweeps in the fleet simulator produce the inputs
+//! in wall-clock seconds.
+//!
+//! Attribution anchors time-to-mitigation at **breach start**, not at
+//! alert fire time: a healthy autoscaler often reacts to its own
+//! windowed signals before the (deliberately conservative) burn alert
+//! fires, and a mitigation that precedes detection is still a
+//! mitigation.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::burn::{BurnAlerter, BurnRule, HealthAlert, Severity, SloSignal};
+use super::timeseries::{CellRecord, Series, SeriesConfig, SeriesStore};
+use crate::control::{ControlEvent, ControlEventKind};
+use crate::util::bench::Table;
+use crate::util::hist::LogHistogram;
+
+/// Everything that parameterizes health collection.
+#[derive(Clone, Debug)]
+pub struct HealthConfig {
+    /// Minimum driver-clock seconds between observations.
+    pub sample_s: f64,
+    /// Shed SLO: allowed shed fraction of offered admissions.
+    pub shed_slo: f64,
+    /// Latency SLO: allowed fraction of completions landing in
+    /// intervals whose p99 exceeds the budget.
+    pub latency_slo: f64,
+    /// Interval-p99 budget, ms. Non-finite disables latency alerting
+    /// (the p99 series is still collected).
+    pub p99_budget_ms: f64,
+    /// Scale factor applied to every burn-rule window — the same
+    /// multiwindow construction on a compressed horizon for short runs.
+    pub window_scale: f64,
+    /// Downsampling ladder.
+    pub series: SeriesConfig,
+    /// JSONL journal path (`--health-out`); `None` keeps it in memory.
+    pub out: Option<PathBuf>,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            sample_s: 1.0,
+            shed_slo: 0.02,
+            latency_slo: 0.05,
+            p99_budget_ms: f64::INFINITY,
+            window_scale: 1.0,
+            series: SeriesConfig::default(),
+            out: None,
+        }
+    }
+}
+
+/// The journaled trajectory of one run's health: config, closed cells,
+/// alert transitions. Written as JSONL by [`HealthMonitor`], read back
+/// by [`HealthJournal::load`] for `fcmp healthreport`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HealthJournal {
+    /// Shed SLO the run alerted against.
+    pub shed_slo: f64,
+    /// Latency SLO fraction.
+    pub latency_slo: f64,
+    /// Interval-p99 budget, ms (infinite = latency alerting off).
+    pub p99_budget_ms: f64,
+    /// Closed downsampled cells, in close order.
+    pub cells: Vec<CellRecord>,
+    /// Alert transitions, in emit order.
+    pub alerts: Vec<HealthAlert>,
+}
+
+/// Collects health series + evaluates burn alerts on the snapshot path.
+#[derive(Debug)]
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    store: SeriesStore,
+    alerters: Vec<BurnAlerter>,
+    last_obs_ns: Option<u64>,
+    last_submitted: u64,
+    last_shed: u64,
+    last_completed: u64,
+    last_hist: LogHistogram,
+    journal: HealthJournal,
+    wrote_header: bool,
+    sink_err: bool,
+}
+
+impl HealthMonitor {
+    /// Build the store and alerters; all ring memory is allocated here.
+    pub fn new(cfg: HealthConfig) -> HealthMonitor {
+        let store = SeriesStore::new(&cfg.series);
+        let rules = BurnRule::standard(cfg.window_scale);
+        let mut alerters = vec![BurnAlerter::new(
+            SloSignal::ShedRate,
+            Series::Shed,
+            Series::Offered,
+            cfg.shed_slo,
+            rules.clone(),
+        )];
+        if cfg.p99_budget_ms.is_finite() {
+            alerters.push(BurnAlerter::new(
+                SloSignal::LatencyP99,
+                Series::Late,
+                Series::Completed,
+                cfg.latency_slo,
+                rules,
+            ));
+        }
+        let journal = HealthJournal {
+            shed_slo: cfg.shed_slo,
+            latency_slo: cfg.latency_slo,
+            p99_budget_ms: cfg.p99_budget_ms,
+            ..HealthJournal::default()
+        };
+        HealthMonitor {
+            cfg,
+            store,
+            alerters,
+            last_obs_ns: None,
+            last_submitted: 0,
+            last_shed: 0,
+            last_completed: 0,
+            last_hist: LogHistogram::new(),
+            journal,
+            wrote_header: false,
+            sink_err: false,
+        }
+    }
+
+    /// Whether an [`HealthMonitor::observe`] at `now_ns` would record —
+    /// lets drivers skip building the fleet histogram between samples.
+    pub fn due(&self, now_ns: u64) -> bool {
+        match self.last_obs_ns {
+            None => true,
+            Some(last) => now_ns.saturating_sub(last) >= (self.cfg.sample_s * 1e9) as u64,
+        }
+    }
+
+    /// Feed one snapshot of the cumulative fleet counters (`submitted`,
+    /// `shed`, `completed`) and the cumulative latency histogram.
+    /// Interval deltas are derived here; sub-interval calls are no-ops.
+    pub fn observe(
+        &mut self,
+        now_ns: u64,
+        submitted: u64,
+        shed: u64,
+        completed: u64,
+        hist: &LogHistogram,
+    ) {
+        if !self.due(now_ns) {
+            return;
+        }
+        self.last_obs_ns = Some(now_ns);
+        let d_sub = submitted.saturating_sub(self.last_submitted);
+        let d_shed = shed.saturating_sub(self.last_shed);
+        let d_comp = completed.saturating_sub(self.last_completed);
+        (self.last_submitted, self.last_shed, self.last_completed) = (submitted, shed, completed);
+        let interval = hist.diff(&self.last_hist);
+        self.last_hist = hist.snapshot();
+
+        self.store.record(Series::Offered, now_ns, (d_sub + d_shed) as f64);
+        self.store.record(Series::Shed, now_ns, d_shed as f64);
+        self.store.record(Series::Completed, now_ns, d_comp as f64);
+        let mut late = 0u64;
+        if interval.count() > 0 {
+            let p99 = interval.percentile(99.0);
+            self.store.record(Series::P99Ms, now_ns, p99);
+            if p99 > self.cfg.p99_budget_ms {
+                late = d_comp;
+            }
+        }
+        self.store.record(Series::Late, now_ns, late as f64);
+
+        let cells0 = self.journal.cells.len();
+        self.store.take_closed(&mut self.journal.cells);
+        let alerts0 = self.journal.alerts.len();
+        for a in &mut self.alerters {
+            a.eval(&self.store, now_ns, &mut self.journal.alerts);
+        }
+        self.stream(cells0, alerts0);
+    }
+
+    /// Flush still-open cells at end of run so the journal covers the
+    /// whole horizon.
+    pub fn finish(&mut self) {
+        let cells0 = self.journal.cells.len();
+        let mut tail = Vec::new();
+        self.store.flush_open(&mut tail);
+        self.journal.cells.append(&mut tail);
+        self.stream(cells0, self.journal.alerts.len());
+    }
+
+    /// Alert transitions so far.
+    pub fn alerts(&self) -> &[HealthAlert] {
+        &self.journal.alerts
+    }
+
+    /// Whether any burn rule is currently firing.
+    pub fn any_firing(&self) -> bool {
+        self.alerters.iter().any(|a| a.any_firing())
+    }
+
+    /// The in-memory journal.
+    pub fn journal(&self) -> &HealthJournal {
+        &self.journal
+    }
+
+    /// Consume the monitor, yielding its journal.
+    pub fn into_journal(self) -> HealthJournal {
+        self.journal
+    }
+
+    /// Append the journal lines produced since the given offsets to the
+    /// sink. IO errors are reported once on stderr and never fatal —
+    /// health collection must not take the serving path down.
+    fn stream(&mut self, cells0: usize, alerts0: usize) {
+        let Some(path) = self.cfg.out.clone() else { return };
+        let mut text = String::new();
+        if !self.wrote_header {
+            self.wrote_header = true;
+            text.push_str(&header_line(&self.cfg));
+            text.push('\n');
+        }
+        for c in &self.journal.cells[cells0..] {
+            text.push_str(&cell_line(c));
+            text.push('\n');
+        }
+        for a in &self.journal.alerts[alerts0..] {
+            text.push_str(&alert_line(a));
+            text.push('\n');
+        }
+        if text.is_empty() {
+            return;
+        }
+        let r = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .and_then(|mut f| std::io::Write::write_all(&mut f, text.as_bytes()));
+        if let Err(e) = r {
+            if !self.sink_err {
+                self.sink_err = true;
+                eprintln!("health journal: appending {}: {e}", path.display());
+            }
+        }
+    }
+}
+
+fn header_line(cfg: &HealthConfig) -> String {
+    let budget = if cfg.p99_budget_ms.is_finite() {
+        format!("{}", cfg.p99_budget_ms)
+    } else {
+        "null".to_string()
+    };
+    format!(
+        "{{\"kind\":\"health\",\"version\":1,\"shed_slo\":{},\"latency_slo\":{},\
+         \"p99_budget_ms\":{budget},\"sample_s\":{},\"window_scale\":{}}}",
+        cfg.shed_slo, cfg.latency_slo, cfg.sample_s, cfg.window_scale
+    )
+}
+
+fn cell_line(c: &CellRecord) -> String {
+    format!(
+        "{{\"kind\":\"cell\",\"series\":\"{}\",\"res_s\":{},\"t_s\":{},\"min\":{},\
+         \"mean\":{},\"max\":{},\"count\":{},\"sum\":{}}}",
+        c.series.name(),
+        c.res_s,
+        c.t_s,
+        c.min,
+        c.mean,
+        c.max,
+        c.count,
+        c.sum
+    )
+}
+
+fn alert_line(a: &HealthAlert) -> String {
+    format!(
+        "{{\"kind\":\"alert\",\"t_s\":{},\"signal\":\"{}\",\"severity\":\"{}\",\
+         \"state\":\"{}\",\"burn_long\":{},\"burn_short\":{}}}",
+        a.at_s,
+        a.signal.name(),
+        a.severity.name(),
+        if a.firing { "firing" } else { "cleared" },
+        a.burn_long,
+        a.burn_short
+    )
+}
+
+fn json_num(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let i = line.find(&pat)? + pat.len();
+    let rest = &line[i..];
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
+fn json_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":\"");
+    let i = line.find(&pat)? + pat.len();
+    let rest = &line[i..];
+    Some(&rest[..rest.find('"')?])
+}
+
+impl HealthJournal {
+    /// Parse a JSONL health journal back. Foreign lines are skipped;
+    /// malformed cell/alert lines are errors.
+    pub fn load(path: &Path) -> crate::Result<HealthJournal> {
+        let text = std::fs::read_to_string(path)?;
+        let mut j = HealthJournal { p99_budget_ms: f64::INFINITY, ..HealthJournal::default() };
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let bad = |what: &str| {
+                anyhow::anyhow!("{}:{}: {what} in {line:?}", path.display(), ln + 1)
+            };
+            match json_str(line, "kind") {
+                Some("health") => {
+                    j.shed_slo = json_num(line, "shed_slo").ok_or_else(|| bad("missing shed_slo"))?;
+                    j.latency_slo =
+                        json_num(line, "latency_slo").ok_or_else(|| bad("missing latency_slo"))?;
+                    j.p99_budget_ms = json_num(line, "p99_budget_ms").unwrap_or(f64::INFINITY);
+                }
+                Some("cell") => {
+                    let series = json_str(line, "series")
+                        .and_then(Series::from_name)
+                        .ok_or_else(|| bad("unknown series"))?;
+                    let f = |k: &str| json_num(line, k).ok_or_else(|| bad("missing cell field"));
+                    j.cells.push(CellRecord {
+                        series,
+                        res_s: f("res_s")?,
+                        t_s: f("t_s")?,
+                        min: f("min")?,
+                        mean: f("mean")?,
+                        max: f("max")?,
+                        count: f("count")? as u64,
+                        sum: f("sum")?,
+                    });
+                }
+                Some("alert") => {
+                    let signal = json_str(line, "signal")
+                        .and_then(SloSignal::from_name)
+                        .ok_or_else(|| bad("unknown signal"))?;
+                    let severity = json_str(line, "severity")
+                        .and_then(Severity::from_name)
+                        .ok_or_else(|| bad("unknown severity"))?;
+                    let firing = match json_str(line, "state") {
+                        Some("firing") => true,
+                        Some("cleared") => false,
+                        _ => return Err(bad("unknown alert state")),
+                    };
+                    let f = |k: &str| json_num(line, k).ok_or_else(|| bad("missing alert field"));
+                    j.alerts.push(HealthAlert {
+                        at_s: f("t_s")?,
+                        signal,
+                        severity,
+                        firing,
+                        burn_long: f("burn_long")?,
+                        burn_short: f("burn_short")?,
+                    });
+                }
+                _ => {} // foreign line (other exposition streams)
+            }
+        }
+        Ok(j)
+    }
+}
+
+/// One SLO-breach incident: an alert's fired→cleared lifetime joined
+/// with the control plane's response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Incident {
+    /// Which SLO breached.
+    pub signal: SloSignal,
+    /// Alert tier.
+    pub severity: Severity,
+    /// When the underlying series actually crossed the SLO (from the
+    /// backwards cell scan), seconds.
+    pub breach_start_s: f64,
+    /// When the burn alert fired, seconds.
+    pub fired_s: f64,
+    /// When it cleared (`None` = still firing at end of journal).
+    pub cleared_s: Option<f64>,
+    /// Time to detection: `fired − breach_start`.
+    pub ttd_s: f64,
+    /// When the first mitigating [`ControlEvent`] landed, seconds.
+    pub response_at_s: Option<f64>,
+    /// What that event was, rendered (e.g. `scale-out 1->2`).
+    pub response: Option<String>,
+    /// Time to mitigation: `response − breach_start`.
+    pub ttm_s: Option<f64>,
+    /// Responded **and** the alert cleared.
+    pub mitigated: bool,
+}
+
+/// Does `kind` plausibly mitigate a breach of `signal`? Scale-outs add
+/// capacity (both SLOs); SLO retunes trade batch latency (latency only).
+fn mitigates(signal: SloSignal, kind: &ControlEventKind) -> bool {
+    match signal {
+        SloSignal::ShedRate => matches!(kind, ControlEventKind::ScaleOut { .. }),
+        SloSignal::LatencyP99 => {
+            matches!(kind, ControlEventKind::ScaleOut { .. } | ControlEventKind::SloAdjust { .. })
+        }
+    }
+}
+
+fn render_kind(kind: &ControlEventKind) -> String {
+    match kind {
+        ControlEventKind::ScaleOut { from, to } => format!("scale-out {from}->{to}"),
+        ControlEventKind::ScaleIn { from, to } => format!("scale-in {from}->{to}"),
+        ControlEventKind::SloAdjust { group, stage, max_batch, .. } => {
+            format!("slo-adjust g{group}/s{stage} b{max_batch}")
+        }
+        ControlEventKind::Failure { group, survivors } => {
+            format!("failure g{group} ({survivors} left)")
+        }
+    }
+}
+
+/// Scan the journaled persist-resolution cells backwards from `fired_s`
+/// for the start of the contiguous over-SLO run that tripped the alert.
+/// Cells with no traffic neither extend nor break the run; if no cell
+/// at or before `fired_s` breaches, the fire time itself is returned.
+fn breach_start(j: &HealthJournal, signal: SloSignal, fired_s: f64) -> f64 {
+    // key cells on the millisecond grid so err/total rows of the same
+    // cell join exactly
+    let ms = |t: f64| (t * 1e3).round() as i64;
+    let mut by_t: BTreeMap<i64, (f64, f64, bool)> = BTreeMap::new(); // t -> (err, total, seen)
+    for c in &j.cells {
+        match signal {
+            SloSignal::ShedRate => match c.series {
+                Series::Shed => {
+                    let e = by_t.entry(ms(c.t_s)).or_default();
+                    e.0 += c.sum;
+                    e.2 = true;
+                }
+                Series::Offered => {
+                    let e = by_t.entry(ms(c.t_s)).or_default();
+                    e.1 += c.sum;
+                    e.2 = true;
+                }
+                _ => {}
+            },
+            SloSignal::LatencyP99 => {
+                if c.series == Series::P99Ms && c.count > 0 {
+                    // reuse (err, total) as (p99 mean, 1): breach when
+                    // the cell's mean interval-p99 exceeds the budget
+                    by_t.insert(ms(c.t_s), (c.mean, 1.0, true));
+                }
+            }
+        }
+    }
+    let breaching = |err: f64, total: f64| match signal {
+        SloSignal::ShedRate => total > 0.0 && err / total > j.shed_slo,
+        SloSignal::LatencyP99 => err > j.p99_budget_ms,
+    };
+    let mut start = None;
+    for (&t, &(err, total, _)) in by_t.range(..=ms(fired_s)).rev() {
+        if total <= 0.0 {
+            continue; // quiet cell: no evidence either way
+        }
+        if breaching(err, total) {
+            start = Some(t as f64 / 1e3);
+        } else if start.is_some() || t as f64 / 1e3 + 1e-9 < fired_s {
+            break; // healthy cell ends the contiguous run
+        }
+    }
+    start.unwrap_or(fired_s)
+}
+
+/// Join the journal's alert stream against the control-event journal
+/// into the per-incident attribution table.
+pub fn correlate(j: &HealthJournal, events: &[ControlEvent]) -> Vec<Incident> {
+    let mut open: BTreeMap<(SloSignal, Severity), HealthAlert> = BTreeMap::new();
+    let mut spans: Vec<(HealthAlert, Option<f64>)> = Vec::new();
+    for a in &j.alerts {
+        if a.firing {
+            open.entry((a.signal, a.severity)).or_insert(*a);
+        } else if let Some(fired) = open.remove(&(a.signal, a.severity)) {
+            spans.push((fired, Some(a.at_s)));
+        }
+    }
+    spans.extend(open.into_values().map(|a| (a, None)));
+    spans.sort_by(|a, b| a.0.at_s.partial_cmp(&b.0.at_s).unwrap_or(std::cmp::Ordering::Equal));
+
+    spans
+        .into_iter()
+        .map(|(fired, cleared_s)| {
+            let bs = breach_start(j, fired.signal, fired.at_s);
+            let horizon = cleared_s.unwrap_or(f64::INFINITY);
+            let response = events
+                .iter()
+                .filter(|e| e.at_s + 1e-9 >= bs && e.at_s <= horizon)
+                .find(|e| mitigates(fired.signal, &e.kind));
+            Incident {
+                signal: fired.signal,
+                severity: fired.severity,
+                breach_start_s: bs,
+                fired_s: fired.at_s,
+                cleared_s,
+                ttd_s: fired.at_s - bs,
+                response_at_s: response.map(|e| e.at_s),
+                response: response.map(|e| render_kind(&e.kind)),
+                ttm_s: response.map(|e| e.at_s - bs),
+                mitigated: response.is_some() && cleared_s.is_some(),
+            }
+        })
+        .collect()
+}
+
+/// Aggregate figures over an incident table.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HealthStats {
+    /// Incidents (fired alerts) in the journal.
+    pub incidents: usize,
+    /// Incidents with a response that also cleared.
+    pub mitigated: usize,
+    /// Incidents with no attributable control-plane response.
+    pub unresponded: usize,
+    /// Mean time to detection, seconds.
+    pub mean_ttd_s: f64,
+    /// Mean time to mitigation over responded incidents, seconds.
+    pub mean_ttm_s: f64,
+}
+
+/// Compute [`HealthStats`] from an incident table.
+pub fn stats(incidents: &[Incident]) -> HealthStats {
+    let mut s = HealthStats { incidents: incidents.len(), ..HealthStats::default() };
+    let (mut ttm_sum, mut ttm_n) = (0.0, 0usize);
+    let mut ttd_sum = 0.0;
+    for i in incidents {
+        ttd_sum += i.ttd_s;
+        if i.mitigated {
+            s.mitigated += 1;
+        }
+        match i.ttm_s {
+            Some(t) => {
+                ttm_sum += t;
+                ttm_n += 1;
+            }
+            None => s.unresponded += 1,
+        }
+    }
+    if s.incidents > 0 {
+        s.mean_ttd_s = ttd_sum / s.incidents as f64;
+    }
+    if ttm_n > 0 {
+        s.mean_ttm_s = ttm_sum / ttm_n as f64;
+    }
+    s
+}
+
+/// Render the incident table for `fcmp healthreport`.
+pub fn table(incidents: &[Incident]) -> Table {
+    let mut t = Table::new([
+        "signal", "sev", "breach s", "fired s", "ttd s", "response", "resp s", "ttm s",
+        "cleared s", "mitigated",
+    ]);
+    let opt = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.1}"));
+    for i in incidents {
+        t.row([
+            i.signal.name().to_string(),
+            i.severity.name().to_string(),
+            format!("{:.1}", i.breach_start_s),
+            format!("{:.1}", i.fired_s),
+            format!("{:.1}", i.ttd_s),
+            i.response.clone().unwrap_or_else(|| "none".to_string()),
+            opt(i.response_at_s),
+            opt(i.ttm_s),
+            opt(i.cleared_s),
+            if i.mitigated { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::SignalCtx;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("fcmp-health-{tag}-{}.jsonl", std::process::id()))
+    }
+
+    fn fast_cfg(out: Option<PathBuf>) -> HealthConfig {
+        HealthConfig {
+            sample_s: 1.0,
+            shed_slo: 0.02,
+            p99_budget_ms: 50.0,
+            window_scale: 0.01, // page 36 s / 3 s, ticket 216 s / 18 s
+            series: SeriesConfig {
+                resolutions: vec![(1.0, 600), (10.0, 600)],
+                persist_res_s: 10.0,
+            },
+            out,
+            ..HealthConfig::default()
+        }
+    }
+
+    /// Drive a synthetic breach through a monitor: healthy, overloaded
+    /// (40 % shed), healthy again.
+    fn drive_breach(mon: &mut HealthMonitor) {
+        let (mut sub, mut shed) = (0u64, 0u64);
+        let mut hist = LogHistogram::new();
+        for t in 0..240u64 {
+            let shedding = (60..120).contains(&t);
+            sub += if shedding { 60 } else { 100 };
+            shed += if shedding { 40 } else { 0 };
+            for _ in 0..5 {
+                hist.record(if shedding { 80.0 } else { 5.0 });
+            }
+            mon.observe(t * 1_000_000_000, sub, shed, sub, &hist);
+        }
+        mon.finish();
+    }
+
+    #[test]
+    fn monitor_journals_cells_and_alert_lifecycle() {
+        let mut mon = HealthMonitor::new(fast_cfg(None));
+        drive_breach(&mut mon);
+        let j = mon.journal();
+        assert!(!j.cells.is_empty());
+        // shed page must fire during the breach and clear after it
+        let shed_edges: Vec<bool> = j
+            .alerts
+            .iter()
+            .filter(|a| a.signal == SloSignal::ShedRate && a.severity == Severity::Page)
+            .map(|a| a.firing)
+            .collect();
+        assert_eq!(shed_edges, vec![true, false], "{:?}", j.alerts);
+        // latency page too: interval p99 jumps to ~80 ms against a 50 ms
+        // budget, making every completion in the breach "late"
+        assert!(j
+            .alerts
+            .iter()
+            .any(|a| a.signal == SloSignal::LatencyP99 && a.firing));
+    }
+
+    #[test]
+    fn journal_round_trips_through_jsonl() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let mut mon = HealthMonitor::new(fast_cfg(Some(path.clone())));
+        drive_breach(&mut mon);
+        let mem = mon.into_journal();
+        let loaded = HealthJournal::load(&path).unwrap();
+        assert_eq!(loaded, mem, "disk journal must equal the in-memory one");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    fn ev(at_s: f64, kind: ControlEventKind) -> ControlEvent {
+        ControlEvent { tick: 0, at_s, kind, ctx: SignalCtx::default() }
+    }
+
+    #[test]
+    fn correlate_attributes_and_flags_unmitigated() {
+        let mut mon = HealthMonitor::new(fast_cfg(None));
+        drive_breach(&mut mon);
+        let j = mon.into_journal();
+
+        // with a scale-out inside the breach: mitigated, TTM from breach start
+        let events = vec![
+            ev(30.0, ControlEventKind::ScaleIn { from: 2, to: 1 }), // pre-breach, wrong kind
+            ev(75.0, ControlEventKind::ScaleOut { from: 1, to: 2 }),
+        ];
+        let incidents = correlate(&j, &events);
+        assert!(!incidents.is_empty());
+        let shed = incidents.iter().find(|i| i.signal == SloSignal::ShedRate).unwrap();
+        assert!(shed.mitigated, "{shed:?}");
+        assert_eq!(shed.response_at_s, Some(75.0));
+        assert!(shed.breach_start_s >= 50.0 && shed.breach_start_s <= 75.0, "{shed:?}");
+        let ttm = shed.ttm_s.unwrap();
+        assert!((ttm - (75.0 - shed.breach_start_s)).abs() < 1e-9);
+        assert!(shed.ttd_s >= 0.0);
+        let st = stats(&incidents);
+        assert_eq!(st.incidents, incidents.len());
+        assert!(st.mitigated >= 1);
+
+        // with no events at all: every incident is unmitigated
+        let none = correlate(&j, &[]);
+        assert!(none.iter().all(|i| !i.mitigated && i.response.is_none()));
+        assert_eq!(stats(&none).unresponded, none.len());
+
+        // rendering holds both outcomes
+        let text = table(&incidents).render();
+        assert!(text.contains("scale-out 1->2"), "{text}");
+    }
+
+    #[test]
+    fn correlation_is_deterministic() {
+        let run = || {
+            let mut mon = HealthMonitor::new(fast_cfg(None));
+            drive_breach(&mut mon);
+            let j = mon.into_journal();
+            let events = vec![ev(70.0, ControlEventKind::ScaleOut { from: 1, to: 2 })];
+            (correlate(&j, &events), j)
+        };
+        let (a, ja) = run();
+        let (b, jb) = run();
+        assert_eq!(ja, jb);
+        assert_eq!(a, b);
+    }
+}

@@ -18,7 +18,12 @@
 //! Module map: [`clock`] (the real/virtual time seam), [`span`]
 //! (pooled spans + head-based sampling), [`recorder`] (seqlock rings +
 //! anomaly flushes), [`expose`] (Prometheus-text / JSONL snapshot
-//! emission), [`tracereport`] (trace file → critical-path breakdown).
+//! emission), [`tracereport`] (trace file → critical-path breakdown) —
+//! plus the long-horizon fleet-health layer: [`timeseries`]
+//! (fixed-memory multi-resolution downsampling store), [`burn`]
+//! (multiwindow SLO burn-rate alerting) and [`health`] (collection,
+//! the JSONL health journal, and alert↔`ControlEvent` incident
+//! attribution for `fcmp healthreport`).
 //!
 //! The hot-path contract: with tracing off, the cost is one branch per
 //! stamp site; with tracing on, only sampled requests touch the span
@@ -26,16 +31,22 @@
 //! zero-allocation steady state of the serving path still holds
 //! (`pool_misses == 0` with tracing at 1 % is part of the test suite).
 
+pub mod burn;
 pub mod clock;
 pub mod expose;
+pub mod health;
 pub mod recorder;
 pub mod span;
+pub mod timeseries;
 pub mod tracereport;
 
+pub use burn::{BurnAlerter, BurnRule, HealthAlert, Severity, SloSignal};
 pub use clock::{Clock, MonotonicClock, VirtualClock};
 pub use expose::Exposition;
+pub use health::{HealthConfig, HealthJournal, HealthMonitor, Incident};
 pub use recorder::{AnomalyConfig, FlightRecorder, SpanRing};
 pub use span::{RequestSpan, Sampler, SpanEvent, SpanPool, SpanStamp, MAX_EVENTS};
+pub use timeseries::{CellRecord, Series, SeriesConfig, SeriesStore};
 
 use std::path::PathBuf;
 use std::sync::Arc;

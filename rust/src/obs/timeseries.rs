@@ -1,0 +1,406 @@
+//! Fixed-memory multi-resolution time-series store — the RRD-style
+//! long-horizon memory behind fleet-health alerting.
+//!
+//! Every health signal (offered/shed/completed counts, interval p99)
+//! is downsampled into pre-allocated rings of aggregate cells, one ring
+//! per (series, resolution). The default ladder keeps **1 s cells for
+//! an hour, 1 m cells for a day, 1 h cells for two weeks** — enough to
+//! evaluate both the fast (minutes) and slow (hours) burn-rate windows
+//! of [`crate::obs::burn`] over a 168-hour diurnal sweep without the
+//! store ever growing: memory is fixed at construction and recording a
+//! sample is a handful of array writes, no allocation.
+//!
+//! Cells hold `min/max/sum/count`, so a window query returns exact
+//! sums/counts (what burn rates need) and the journal rows carry the
+//! min/mean/max envelope (what the health report's breach scan needs).
+//! Cells at one **persist resolution** (1 m by default) are streamed
+//! out as they close — the JSONL journal `--health-out` writes and
+//! `ci/check_exposition.py` validates.
+//!
+//! The store is fed from the same snapshot path as
+//! [`crate::obs::Exposition`], in whichever time domain the driver
+//! runs: timestamps are plain `t_ns` from the [`crate::obs::Clock`]
+//! seam, so the server's monotonic nanoseconds and the simulator's
+//! virtual nanoseconds downsample identically.
+
+/// The health series tracked by a [`SeriesStore`]. Counts are recorded
+/// as per-interval deltas (so cell sums are true totals over the cell);
+/// `P99Ms` is a gauge sampled from the interval histogram diff.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Series {
+    /// Admission attempts (accepted + shed) in the interval.
+    Offered,
+    /// Requests shed by admission control in the interval.
+    Shed,
+    /// Completions in the interval.
+    Completed,
+    /// Completions that landed in an interval whose p99 exceeded the
+    /// latency budget — the error count of the latency SLO.
+    Late,
+    /// Interval end-to-end p99, milliseconds (gauge).
+    P99Ms,
+}
+
+impl Series {
+    /// Every series, in journal order.
+    pub const ALL: [Series; 5] =
+        [Series::Offered, Series::Shed, Series::Completed, Series::Late, Series::P99Ms];
+
+    /// Stable journal name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Series::Offered => "offered",
+            Series::Shed => "shed",
+            Series::Completed => "completed",
+            Series::Late => "late",
+            Series::P99Ms => "p99_ms",
+        }
+    }
+
+    /// Inverse of [`Series::name`].
+    pub fn from_name(s: &str) -> Option<Series> {
+        Series::ALL.into_iter().find(|x| x.name() == s)
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// One downsampled aggregate cell as it appears in the health journal.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellRecord {
+    /// Which signal the cell belongs to.
+    pub series: Series,
+    /// Cell width, seconds.
+    pub res_s: f64,
+    /// Cell start (aligned to `res_s`), seconds.
+    pub t_s: f64,
+    /// Smallest sample in the cell.
+    pub min: f64,
+    /// Mean of the cell's samples.
+    pub mean: f64,
+    /// Largest sample in the cell.
+    pub max: f64,
+    /// Samples aggregated into the cell.
+    pub count: u64,
+    /// Sum of the cell's samples (what count-series window math uses).
+    pub sum: f64,
+}
+
+/// The resolution ladder: `(cell width seconds, ring capacity in cells)`
+/// from finest to coarsest, plus which rung streams closed cells to the
+/// journal.
+#[derive(Clone, Debug)]
+pub struct SeriesConfig {
+    /// Resolutions, finest first. Width must be strictly increasing.
+    pub resolutions: Vec<(f64, usize)>,
+    /// Cell width (seconds) of the rung whose closed cells are
+    /// journaled. Must match one of `resolutions`.
+    pub persist_res_s: f64,
+}
+
+impl Default for SeriesConfig {
+    fn default() -> Self {
+        SeriesConfig {
+            // 1 s × 1 h, 1 m × 1 day, 1 h × 2 weeks
+            resolutions: vec![(1.0, 3600), (60.0, 1440), (3600.0, 336)],
+            persist_res_s: 60.0,
+        }
+    }
+}
+
+/// In-place aggregate for one open cell.
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    /// Absolute cell index (`t_ns / width_ns`); `u64::MAX` = empty.
+    idx: u64,
+    min: f64,
+    max: f64,
+    sum: f64,
+    count: u64,
+}
+
+impl Slot {
+    const EMPTY: Slot = Slot { idx: u64::MAX, min: 0.0, max: 0.0, sum: 0.0, count: 0 };
+}
+
+/// One fixed ring of cells at a single resolution.
+#[derive(Clone, Debug)]
+struct Ring {
+    width_ns: u64,
+    slots: Vec<Slot>,
+    /// Highest cell index written so far (`u64::MAX` before any write).
+    head: u64,
+}
+
+impl Ring {
+    fn new(width_s: f64, cap: usize) -> Ring {
+        Ring {
+            width_ns: (width_s * 1e9).round().max(1.0) as u64,
+            slots: vec![Slot::EMPTY; cap.max(1)],
+            head: u64::MAX,
+        }
+    }
+
+    fn slot_of(&self, idx: u64) -> usize {
+        (idx % self.slots.len() as u64) as usize
+    }
+
+    /// Record a sample; when the head cell advances, return the cell it
+    /// closed (the caller journals it at the persist rung only).
+    fn record(&mut self, t_ns: u64, v: f64) -> Option<(u64, Slot)> {
+        let idx = t_ns / self.width_ns;
+        let mut closed = None;
+        if self.head == u64::MAX || idx > self.head {
+            if self.head != u64::MAX {
+                let old = self.slots[self.slot_of(self.head)];
+                if old.idx == self.head && old.count > 0 {
+                    closed = Some((self.head, old));
+                }
+            }
+            self.head = idx;
+            self.slots[self.slot_of(idx)] = Slot::EMPTY;
+        } else if idx < self.head {
+            // time went backwards past the open cell: fold into an older
+            // cell if it is still resident, else drop (never reorder)
+            let s = self.slots[self.slot_of(idx)];
+            if s.idx != idx {
+                return None;
+            }
+        }
+        let at = self.slot_of(idx);
+        let s = &mut self.slots[at];
+        if s.idx != idx {
+            *s = Slot { idx, min: v, max: v, sum: v, count: 1 };
+        } else {
+            s.min = s.min.min(v);
+            s.max = s.max.max(v);
+            s.sum += v;
+            s.count += 1;
+        }
+        closed
+    }
+
+    /// The still-open head cell, if any.
+    fn open(&self) -> Option<(u64, Slot)> {
+        if self.head == u64::MAX {
+            return None;
+        }
+        let s = self.slots[self.slot_of(self.head)];
+        (s.idx == self.head && s.count > 0).then_some((self.head, s))
+    }
+
+    /// Sum/count over cells intersecting `[now_ns - span_ns, now_ns]`.
+    fn window(&self, now_ns: u64, span_ns: u64) -> (f64, u64) {
+        if self.head == u64::MAX {
+            return (0.0, 0);
+        }
+        let last = now_ns / self.width_ns;
+        let first = now_ns.saturating_sub(span_ns) / self.width_ns;
+        // clamp to what the ring can still hold
+        let first = first.max(last.saturating_sub(self.slots.len() as u64 - 1));
+        let (mut sum, mut count) = (0.0, 0u64);
+        for idx in first..=last {
+            let s = self.slots[self.slot_of(idx)];
+            if s.idx == idx {
+                sum += s.sum;
+                count += s.count;
+            }
+        }
+        (sum, count)
+    }
+}
+
+/// The fixed-memory store: one [`Ring`] per (series, resolution).
+#[derive(Debug)]
+pub struct SeriesStore {
+    widths_ns: Vec<u64>,
+    persist_rung: usize,
+    rings: Vec<Vec<Ring>>, // [series][resolution]
+    closed: Vec<CellRecord>,
+}
+
+impl SeriesStore {
+    /// Build the rings; this is the only allocation the store makes.
+    pub fn new(cfg: &SeriesConfig) -> SeriesStore {
+        assert!(!cfg.resolutions.is_empty(), "at least one resolution");
+        let persist_rung = cfg
+            .resolutions
+            .iter()
+            .position(|&(w, _)| (w - cfg.persist_res_s).abs() < 1e-9)
+            .expect("persist_res_s must name a configured resolution");
+        let widths_ns =
+            cfg.resolutions.iter().map(|&(w, _)| (w * 1e9).round().max(1.0) as u64).collect();
+        let rings = Series::ALL
+            .iter()
+            .map(|_| cfg.resolutions.iter().map(|&(w, cap)| Ring::new(w, cap)).collect())
+            .collect();
+        SeriesStore { widths_ns, persist_rung, rings, closed: Vec::new() }
+    }
+
+    /// Total pre-allocated cell slots (fixed for the store's lifetime).
+    pub fn capacity_cells(&self) -> usize {
+        self.rings.iter().flatten().map(|r| r.slots.len()).sum()
+    }
+
+    /// Record one sample into every resolution rung of `series`. Closed
+    /// persist-rung cells are buffered for [`SeriesStore::take_closed`].
+    pub fn record(&mut self, series: Series, t_ns: u64, v: f64) {
+        let si = series.index();
+        for (rung, ring) in self.rings[si].iter_mut().enumerate() {
+            let closed = ring.record(t_ns, v);
+            if rung == self.persist_rung {
+                if let Some((idx, s)) = closed {
+                    self.closed.push(cell_record(series, ring.width_ns, idx, s));
+                }
+            }
+        }
+    }
+
+    /// `(sum, count)` of `series` over the trailing `span_ns` window
+    /// ending at `now_ns`, read from the coarsest rung that still gives
+    /// ≥ 32 cells of detail (falling back to the finest). The current
+    /// partial cell is included — burn rates must see the breach as it
+    /// happens, not one cell late.
+    pub fn window(&self, series: Series, now_ns: u64, span_ns: u64) -> (f64, u64) {
+        let mut rung = 0;
+        for (i, &w) in self.widths_ns.iter().enumerate() {
+            if span_ns / w >= 32 {
+                rung = i;
+            }
+        }
+        self.rings[series.index()][rung].window(now_ns, span_ns)
+    }
+
+    /// Drain closed persist-rung cells (journal order: close time, then
+    /// series) into `out`.
+    pub fn take_closed(&mut self, out: &mut Vec<CellRecord>) {
+        out.append(&mut self.closed);
+    }
+
+    /// Flush the still-open persist-rung cells at end of run so the last
+    /// partial minute of a sweep is journaled too.
+    pub fn flush_open(&mut self, out: &mut Vec<CellRecord>) {
+        out.append(&mut self.closed);
+        let mut last: Vec<CellRecord> = Vec::new();
+        for (si, rings) in self.rings.iter().enumerate() {
+            let ring = &rings[self.persist_rung];
+            if let Some((idx, s)) = ring.open() {
+                last.push(cell_record(Series::ALL[si], ring.width_ns, idx, s));
+            }
+        }
+        last.sort_by(|a, b| a.series.cmp(&b.series));
+        out.append(&mut last);
+    }
+}
+
+fn cell_record(series: Series, width_ns: u64, idx: u64, s: Slot) -> CellRecord {
+    CellRecord {
+        series,
+        res_s: width_ns as f64 / 1e9,
+        t_s: (idx * width_ns) as f64 / 1e9,
+        min: s.min,
+        mean: if s.count == 0 { 0.0 } else { s.sum / s.count as f64 },
+        max: s.max,
+        count: s.count,
+        sum: s.sum,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NS: u64 = 1_000_000_000;
+
+    fn small() -> SeriesStore {
+        SeriesStore::new(&SeriesConfig {
+            resolutions: vec![(1.0, 60), (10.0, 30)],
+            persist_res_s: 10.0,
+        })
+    }
+
+    #[test]
+    fn window_sums_are_exact_over_counts() {
+        let mut st = small();
+        for t in 0..50u64 {
+            st.record(Series::Shed, t * NS, 2.0);
+        }
+        let (sum, count) = st.window(Series::Shed, 49 * NS, 49 * NS);
+        assert_eq!(count, 50);
+        assert_eq!(sum, 100.0);
+        let (sum5, _) = st.window(Series::Shed, 49 * NS, 4 * NS);
+        assert_eq!(sum5, 10.0, "trailing 5 cells at 1 s resolution");
+    }
+
+    #[test]
+    fn coarse_rung_serves_long_windows() {
+        let mut st = small();
+        // 600 s of data overruns the 60-cell 1 s ring but not the 10 s one
+        for t in 0..600u64 {
+            st.record(Series::Offered, t * NS, 1.0);
+        }
+        let (sum, count) = st.window(Series::Offered, 599 * NS, 599 * NS);
+        assert_eq!(count, 600, "10 s rung covers the whole span");
+        assert_eq!(sum, 600.0);
+    }
+
+    #[test]
+    fn closed_cells_stream_in_order_with_consistent_widths() {
+        let mut st = small();
+        for t in 0..35u64 {
+            st.record(Series::P99Ms, t * NS, t as f64);
+        }
+        let mut cells = Vec::new();
+        st.take_closed(&mut cells);
+        assert_eq!(cells.len(), 3, "three 10 s cells closed in 35 s");
+        let mut last = f64::NEG_INFINITY;
+        for c in &cells {
+            assert_eq!(c.res_s, 10.0);
+            assert_eq!(c.t_s % c.res_s, 0.0, "cell start aligned");
+            assert!(c.t_s > last, "monotone close order");
+            assert_eq!(c.count, 10);
+            assert!(c.min <= c.mean && c.mean <= c.max);
+            last = c.t_s;
+        }
+        let mut tail = Vec::new();
+        st.flush_open(&mut tail);
+        assert_eq!(tail.len(), 1, "the partial 4th cell flushes at end");
+        assert_eq!(tail[0].count, 5);
+    }
+
+    #[test]
+    fn memory_is_fixed_after_construction() {
+        let mut st = small();
+        let cap = st.capacity_cells();
+        for t in 0..100_000u64 {
+            st.record(Series::Completed, t * NS, 1.0);
+            if t % 1000 == 0 {
+                let mut sink = Vec::new();
+                st.take_closed(&mut sink); // journal drained on cadence
+            }
+        }
+        assert_eq!(st.capacity_cells(), cap, "rings never grow");
+    }
+
+    #[test]
+    fn sparse_samples_skip_cells_without_interpolating() {
+        let mut st = small();
+        st.record(Series::Shed, 0, 5.0);
+        st.record(Series::Shed, 40 * NS, 7.0);
+        let (sum, count) = st.window(Series::Shed, 40 * NS, 40 * NS);
+        assert_eq!(count, 2);
+        assert_eq!(sum, 12.0);
+        let (gap, n) = st.window(Series::Shed, 30 * NS, 20 * NS);
+        assert_eq!((gap, n), (0.0, 0), "empty cells stay empty");
+    }
+
+    #[test]
+    fn series_names_round_trip() {
+        for s in Series::ALL {
+            assert_eq!(Series::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Series::from_name("nope"), None);
+    }
+}

@@ -52,7 +52,10 @@ use crate::coordinator::{
     chain_fps, BatcherConfig, Completion, Deployment, FleetMetrics, FleetSummary, Policy,
     Scheduler, Trace,
 };
-use crate::obs::{Exposition, Obs, ObsConfig, RequestSpan, SpanEvent, SpanRing, VirtualClock};
+use crate::obs::{
+    Exposition, HealthConfig, HealthJournal, HealthMonitor, Obs, ObsConfig, RequestSpan,
+    SpanEvent, SpanRing, VirtualClock,
+};
 use crate::sim::event::EventQueue;
 use crate::util::rng::Rng;
 
@@ -142,11 +145,21 @@ pub struct SimConfig {
     /// the event loop publishes before every handler — so trace files
     /// from both drivers are directly comparable.
     pub obs: ObsConfig,
+    /// Long-horizon health collection (downsampled series + burn-rate
+    /// alerts), observed on control ticks in virtual time; `None`
+    /// disables it.
+    pub health: Option<HealthConfig>,
 }
 
 impl Default for SimConfig {
     fn default() -> SimConfig {
-        SimConfig { input_len: 8, seed: 2020, control: None, obs: ObsConfig::default() }
+        SimConfig {
+            input_len: 8,
+            seed: 2020,
+            control: None,
+            obs: ObsConfig::default(),
+            health: None,
+        }
     }
 }
 
@@ -179,6 +192,9 @@ pub struct SimReport {
     pub sim_seconds: f64,
     /// Events processed by the loop.
     pub events_processed: u64,
+    /// Health journal (downsampled cells + alert transitions) when
+    /// [`SimConfig::health`] was set; `None` otherwise.
+    pub health: Option<HealthJournal>,
     /// FNV-1a hash over the processed `(time, seq, kind)` stream — a
     /// fingerprint of the exact event ordering for determinism tests.
     pub order_hash: u64,
@@ -322,6 +338,7 @@ pub struct FleetSim {
     /// for every slot (standby included) so scale-out never allocates.
     rings: Vec<Vec<Arc<SpanRing>>>,
     exposition: Option<Exposition>,
+    health: Option<HealthMonitor>,
 
     fm: FleetMetrics,
     tap: SignalTap,
@@ -389,6 +406,16 @@ impl FleetSim {
             None => (SignalTap::new(SignalConfig::default()), None, None, 0, 0),
         };
         let initial = active.len();
+        let health = cfg.health.clone().map(HealthMonitor::new);
+        // health collection rides the tick cadence; without a control
+        // plane (static/baseline arms) ticks still run, paced by the
+        // health sample interval, so the monitor sees mid-run snapshots
+        let tick_ns = if tick_ns == 0 && cfg.health.is_some() {
+            let sample_s = cfg.health.as_ref().map_or(1.0, |h| h.sample_s);
+            ((sample_s.max(1e-3)) * 1e9) as u64
+        } else {
+            tick_ns
+        };
         let clock = Arc::new(VirtualClock::new());
         let obs = Obs::new(&cfg.obs, Arc::clone(&clock) as Arc<dyn crate::obs::Clock>);
         let rings: Vec<Vec<Arc<SpanRing>>> = groups
@@ -413,6 +440,7 @@ impl FleetSim {
             obs,
             rings,
             exposition: None,
+            health,
             fm: FleetMetrics::new(&shape),
             tap,
             scaler,
@@ -494,7 +522,7 @@ impl FleetSim {
         if let Some(&t0) = self.trace.first() {
             self.q.schedule(t0, Ev::Arrival(0));
         }
-        if self.cfg.control.is_some() {
+        if self.tick_ns > 0 {
             self.q.schedule(self.tick_ns, Ev::Tick);
         }
         while let Some((t, seq, ev)) = self.q.pop() {
@@ -526,6 +554,13 @@ impl FleetSim {
         if let Some(e) = self.exposition.as_mut() {
             e.emit(secs(self.now), &summary, None);
         }
+        // final health observation at the drain instant, then flush the
+        // still-open cells so the journal covers the whole horizon
+        self.observe_health();
+        if let Some(h) = self.health.as_mut() {
+            h.finish();
+        }
+        let health = self.health.take().map(HealthMonitor::into_journal);
         // end-of-run flush mirrors Server::shutdown: whatever spans the
         // rings still hold are appended to the trace file once
         if self.obs.active() {
@@ -543,9 +578,28 @@ impl FleetSim {
             completed: self.completed,
             sim_seconds: secs(self.now),
             events_processed: self.events_processed,
+            health,
             order_hash: self.order_hash,
             max_queue_seen: self.max_queue_seen,
         }
+    }
+
+    /// Feed the health monitor one snapshot of the cumulative fleet
+    /// counters + latency histogram. Gated on the monitor's own sample
+    /// interval so the histogram merge stays off non-sampling ticks.
+    fn observe_health(&mut self) {
+        let Some(h) = self.health.as_mut() else { return };
+        if !h.due(self.now) {
+            return;
+        }
+        let hist = self.fm.latency_histogram();
+        h.observe(
+            self.now,
+            self.fm.submitted() as u64,
+            self.fm.shed() as u64,
+            self.fm.completed() as u64,
+            &hist,
+        );
     }
 
     fn hash_event(&mut self, t: u64, seq: u64, kind: u64, payload: u64) {
@@ -901,6 +955,8 @@ impl FleetSim {
         if self.obs.active() {
             self.obs.recorder().observe(sig.p99_ms, sig.shed, 0);
         }
+        // long-horizon health collection rides the same tick cadence
+        self.observe_health();
         let decision = self.scaler.as_mut().map(|sc| sc.decide(&sig, self.active.len()));
         match decision {
             Some(ScaleDecision::Out(k)) => {

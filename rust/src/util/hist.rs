@@ -154,6 +154,47 @@ impl LogHistogram {
         self.max = self.max.max(other.max);
     }
 
+    /// Cheap copy of the current state, for later [`LogHistogram::diff`].
+    /// One 512-slot bucket copy — interval bookkeeping on a snapshot
+    /// cadence, never per sample.
+    pub fn snapshot(&self) -> LogHistogram {
+        self.clone()
+    }
+
+    /// The histogram of samples recorded **since** `baseline` was
+    /// snapshotted from this same stream: bucket-wise and moment-wise
+    /// subtraction. `baseline` must be an earlier snapshot of this
+    /// histogram (counts can only have grown); anything else is a logic
+    /// error and the subtraction saturates at zero rather than wrapping.
+    ///
+    /// The interval's exact min/max are unknowable from cumulative state,
+    /// so they are bounded by the edges of the first and last occupied
+    /// diff bucket (bucket 0's lower edge is 0). Percentiles therefore
+    /// stay within one bucket width, as ever; `mean`/`stddev` stay exact.
+    pub fn diff(&self, baseline: &LogHistogram) -> LogHistogram {
+        let mut out = LogHistogram::new();
+        debug_assert!(self.total >= baseline.total, "diff against a non-prefix baseline");
+        for (o, (a, b)) in out.counts.iter_mut().zip(self.counts.iter().zip(&baseline.counts)) {
+            *o = a.saturating_sub(*b);
+        }
+        out.total = self.total.saturating_sub(baseline.total);
+        if out.total == 0 {
+            return out; // empty interval: keep the pristine zero moments
+        }
+        out.sum = (self.sum - baseline.sum).max(0.0);
+        out.sumsq = (self.sumsq - baseline.sumsq).max(0.0);
+        let first = out.counts.iter().position(|&c| c > 0).unwrap_or(0);
+        let last = out.counts.iter().rposition(|&c| c > 0).unwrap_or(0);
+        out.min = if first == 0 {
+            0.0
+        } else {
+            (MIN_TRACKED * (first as f64 / BUCKETS_PER_OCTAVE as f64).exp2()).min(self.max)
+        };
+        out.max =
+            (MIN_TRACKED * ((last as f64 + 1.0) / BUCKETS_PER_OCTAVE as f64).exp2()).min(self.max);
+        out
+    }
+
     /// Percentile `p` in `[0, 100]`: the representative of the bucket
     /// holding the `ceil(p/100 · n)`-th smallest sample, clamped to the
     /// exact observed `[min, max]` — within half a bucket width (±2.2 %)
@@ -341,6 +382,72 @@ mod tests {
         assert_eq!(empty.count(), 2);
         assert_eq!(empty.min(), 3.0);
         assert_eq!(empty.max(), 30.0);
+    }
+
+    #[test]
+    fn diff_of_identical_snapshots_is_empty() {
+        let mut h = LogHistogram::new();
+        for v in [1.0, 5.0, 25.0] {
+            h.record(v);
+        }
+        let base = h.snapshot();
+        let d = h.diff(&base);
+        assert_eq!(d.count(), 0, "no samples between snapshot and diff");
+        assert_eq!(d.mean(), 0.0);
+        assert_eq!(d.percentile(99.0), 0.0);
+        assert_eq!(d.min(), 0.0);
+        assert_eq!(d.max(), 0.0);
+        // and a fresh histogram diffed against a fresh baseline is empty too
+        let empty = LogHistogram::new();
+        assert_eq!(empty.diff(&LogHistogram::new()).count(), 0);
+    }
+
+    #[test]
+    fn diff_single_bucket_interval_reports_that_bucket() {
+        let mut h = LogHistogram::new();
+        for _ in 0..50 {
+            h.record(100.0); // lifetime history far above the interval
+        }
+        let base = h.snapshot();
+        for _ in 0..7 {
+            h.record(2.0); // the whole interval lands in one bucket
+        }
+        let d = h.diff(&base);
+        assert_eq!(d.count(), 7);
+        assert!((d.mean() - 2.0).abs() < 1e-9, "interval mean is exact");
+        for p in [1.0, 50.0, 99.0] {
+            let got = d.percentile(p);
+            assert!(close(got, 2.0), "p{p} of single-bucket interval: {got}");
+        }
+        assert!(d.max() < 100.0, "interval max bound excludes lifetime samples");
+        assert!(d.min() > 0.0 && d.min() <= 2.0);
+    }
+
+    #[test]
+    fn diff_interval_percentiles_ignore_lifetime_history() {
+        // lifetime: 5000 fast samples, then an interval of 500 slow ones;
+        // the interval p99 must reflect the slow regime, which the
+        // cumulative histogram's p99 hides
+        let mut rng = Rng::new(11);
+        let mut h = LogHistogram::new();
+        for _ in 0..5000 {
+            h.record(1.0 + rng.below(100) as f64 / 1000.0);
+        }
+        let base = h.snapshot();
+        let mut exact = Vec::new();
+        for _ in 0..500 {
+            let v = 50.0 + rng.below(10_000) as f64 / 1000.0;
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let d = h.diff(&base);
+        assert_eq!(d.count(), 500);
+        let want = percentile(&exact, 99.0);
+        let got = d.percentile(99.0);
+        assert!(close(got, want), "interval p99 {got} vs exact {want}");
+        assert!(h.percentile(50.0) < 2.0, "cumulative p50 still fast");
+        assert!(d.percentile(50.0) > 45.0, "interval p50 is slow");
     }
 
     #[test]

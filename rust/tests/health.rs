@@ -1,0 +1,209 @@
+//! Fleet-health integration tests: long-sweep determinism (same seed ⇒
+//! identical event order, health journal, and incident table), incident
+//! attribution against the control-event journal in both the static and
+//! autoscaled regimes, journal persistence round-tripping through the
+//! JSONL sink, and the zero-allocation steady state with health
+//! collection enabled on the threaded server.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use fcmp::control::{AutoscalerConfig, ControlEventKind, SignalConfig};
+use fcmp::coordinator::{uniform, BatcherConfig, Deployment, MockBackend, Policy, Server};
+use fcmp::obs::health::{correlate, stats};
+use fcmp::obs::{HealthConfig, HealthJournal, ObsConfig, SeriesConfig};
+use fcmp::sim::{FleetSim, SimBackend, SimConfig, SimControl, SimReport};
+
+/// One chain group serves 50 req/s (20 ms/item, service is
+/// batch-size-invariant with `base = 0`), so 125 req/s offered overruns
+/// one group 2.5x but fits under the 3-group ceiling (150 req/s).
+const PER_ITEM: Duration = Duration::from_millis(20);
+const OFFERED_HZ: f64 = 125.0;
+const HORIZON_REQS: usize = 7_500; // 60 virtual seconds at 125 req/s
+
+fn tmp(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("fcmp-health-{tag}-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Second-resolution cells persisted every second, burn windows
+/// compressed 100x (page 36 s / 3 s, ticket 216 s / 18 s) so the whole
+/// alert lifecycle fits in a 60-second virtual horizon.
+fn fast_health(out: Option<PathBuf>) -> HealthConfig {
+    HealthConfig {
+        sample_s: 1.0,
+        window_scale: 0.01,
+        series: SeriesConfig { resolutions: vec![(1.0, 600)], persist_res_s: 1.0 },
+        out,
+        ..HealthConfig::default()
+    }
+}
+
+/// One-second control ticks. The 20-tick cooldown holds the second
+/// scale-out back until t ≈ 23 s, so the fleet sheds 20% for most of the
+/// ticket alert's life — mitigation lands *inside* the breach window.
+/// `util_in = 0` disables scale-in: the capacity story stays monotone.
+fn auto_control() -> SimControl {
+    SimControl {
+        tick: Duration::from_secs(1),
+        signal: SignalConfig { window_ticks: 3 },
+        autoscaler: Some(AutoscalerConfig {
+            min_groups: 1,
+            max_groups: 3,
+            shed_out: 0.02,
+            p99_out_ms: f64::INFINITY,
+            util_in: 0.0,
+            cooldown_ticks: 20,
+            step: 1,
+        }),
+        slo: None,
+        trailing_ticks: 8,
+    }
+}
+
+fn run_overload(control: Option<SimControl>, standby: usize, out: Option<PathBuf>) -> SimReport {
+    let plan = Deployment::replicated(1)
+        .with_policy(Policy::RoundRobin)
+        .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(10) })
+        .with_queue_depth(16)
+        .with_window(1);
+    let cfg = SimConfig {
+        seed: 9,
+        control,
+        health: Some(fast_health(out)),
+        ..SimConfig::default()
+    };
+    FleetSim::uniform_with_standby(
+        plan,
+        SimBackend::Mock { base: Duration::ZERO, per_item: PER_ITEM },
+        standby,
+        cfg,
+    )
+    .run(&uniform(HORIZON_REQS, OFFERED_HZ))
+}
+
+/// The long-sweep determinism contract: two runs of the same seeded
+/// overload through the autoscaled fleet must agree on the event-order
+/// fingerprint, the entire health journal (every downsampled cell and
+/// alert transition), and the derived incident table.
+#[test]
+fn seeded_health_sweep_is_deterministic() {
+    let a = run_overload(Some(auto_control()), 2, None);
+    let b = run_overload(Some(auto_control()), 2, None);
+    assert_eq!(a.order_hash, b.order_hash, "event order diverged across identical runs");
+
+    let ja = a.health.expect("health was configured");
+    let jb = b.health.expect("health was configured");
+    assert!(!ja.cells.is_empty(), "a 60 s overload must journal downsampled cells");
+    assert!(!ja.alerts.is_empty(), "a 2.5x overload must trip the burn alerts");
+    assert_eq!(ja, jb, "health journals diverged across identical runs");
+
+    let ia = correlate(&ja, &a.events);
+    let ib = correlate(&jb, &b.events);
+    assert!(!ia.is_empty());
+    assert_eq!(ia, ib, "incident tables diverged across identical runs");
+}
+
+/// A frozen 1-group fleet under the same overload: no control plane, so
+/// every incident must come back unresponded and still firing, and the
+/// shed burn alert must have both tiers open. The health ticks here are
+/// paced by the sample interval alone (no control tick to ride).
+#[test]
+fn static_fleet_incidents_are_unresponded() {
+    let out = tmp("static");
+    let rep = run_overload(None, 0, Some(out.clone()));
+    assert!(rep.shed > 0, "2.5x overload of a frozen fleet must shed");
+    assert!(rep.events.is_empty(), "no control plane, no control events");
+
+    let j = rep.health.expect("health was configured");
+    let shed_cells = j.cells.iter().filter(|c| c.series.name() == "shed").count();
+    assert!(shed_cells >= 30, "60 s at 1 s persist cells must journal a shed series");
+
+    let incidents = correlate(&j, &rep.events);
+    let st = stats(&incidents);
+    assert_eq!(st.incidents, 2, "shed page + shed ticket must both fire once: {incidents:?}");
+    assert_eq!(st.unresponded, st.incidents);
+    assert_eq!(st.mitigated, 0);
+    for i in &incidents {
+        assert!(i.cleared_s.is_none(), "sustained overload must never clear: {i:?}");
+        assert!(i.response.is_none() && i.ttm_s.is_none() && !i.mitigated);
+        assert!(i.fired_s >= i.breach_start_s && i.ttd_s >= 0.0);
+    }
+
+    // the streamed JSONL journal must round-trip to the in-memory one
+    let loaded = HealthJournal::load(&out).expect("journal must parse back");
+    assert_eq!(loaded, j, "JSONL round-trip lost or mangled journal lines");
+    let _ = std::fs::remove_file(&out);
+}
+
+/// The autoscaled fleet under the same overload: the scaler steps
+/// 1 → 2 → 3 groups (the cooldown delaying the second step), the burn
+/// alerts fire during the breach and clear once capacity covers the
+/// offered load, and every incident is attributed to a scale-out that
+/// landed inside its breach window.
+#[test]
+fn autoscaler_response_lands_inside_breach_window() {
+    let rep = run_overload(Some(auto_control()), 2, None);
+    assert_eq!(rep.max_groups_seen, 3, "the scaler must step out to the 3-group ceiling");
+    assert!(
+        rep.events.iter().any(|e| matches!(e.kind, ControlEventKind::ScaleOut { .. })),
+        "no scale-out in the control journal: {:?}",
+        rep.events
+    );
+
+    let j = rep.health.expect("health was configured");
+    let incidents = correlate(&j, &rep.events);
+    let st = stats(&incidents);
+    assert!(st.incidents >= 2, "shed page + ticket must both fire: {incidents:?}");
+    assert_eq!(st.mitigated, st.incidents, "every incident must be mitigated: {incidents:?}");
+    assert_eq!(st.unresponded, 0);
+    assert!(st.mean_ttd_s >= 0.0 && st.mean_ttm_s >= 0.0);
+    for i in &incidents {
+        assert!(i.cleared_s.is_some(), "scaled capacity must clear the alert: {i:?}");
+        let resp = i.response_at_s.expect("every incident must have a response");
+        assert!(
+            resp + 1e-9 >= i.breach_start_s && resp <= i.cleared_s.unwrap(),
+            "response must land inside the breach window: {i:?}"
+        );
+        assert!(i.response.as_deref().unwrap().starts_with("scale-out"), "{i:?}");
+        assert!(i.ttm_s.unwrap() >= 0.0);
+    }
+}
+
+/// Health collection must not break the asserted zero-allocation steady
+/// state: the monitor samples on the snapshot path (building the merged
+/// fleet histogram between samples only), never on the per-request hot
+/// path. Same setup as the tracing variant in `tests/obs.rs`, with the
+/// health monitor armed at a 5 ms cadence.
+#[test]
+fn steady_state_stays_allocation_free_with_health() {
+    let input_len = 8;
+    let mut srv = Server::deploy_with_obs(
+        |_| MockBackend::instant(),
+        Deployment::replicated(2)
+            .with_policy(Policy::RoundRobin)
+            .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(200) })
+            .with_queue_depth(32),
+        &ObsConfig { sample: 0.01, ..ObsConfig::default() },
+    );
+    srv.set_health(HealthConfig {
+        sample_s: 0.005,
+        series: SeriesConfig { resolutions: vec![(0.01, 1024)], persist_res_s: 0.01 },
+        ..HealthConfig::default()
+    });
+    srv.buffer_pool().prime(64, input_len);
+    let fm = srv.replay(&uniform(300, 4000.0), input_len, 42);
+    assert_eq!(fm.completed(), 300);
+    let hot = fm.summary().hot;
+    assert_eq!(hot.submits, 300);
+    assert_eq!(hot.pool_misses, 0, "health sampling allocated on the submit path: {hot:?}");
+    assert!(hot.pool_hits >= 300, "every request must draw from the pool: {hot:?}");
+    let (_, span_misses) = srv.obs().span_pool_stats();
+    assert_eq!(span_misses, 0, "span pool must be primed past steady-state concurrency");
+
+    let j = srv.take_health().expect("health was configured");
+    assert!(!j.cells.is_empty(), "the monitor must observe the replay");
+    assert!(j.alerts.is_empty(), "an unloaded fleet must not trip burn alerts");
+    srv.shutdown();
+}
