@@ -28,10 +28,10 @@ import sys
 LATENCY_SUFFIXES = ("_ms",)
 THROUGHPUT_FIELDS = {
     "throughput_fps", "sim_fps", "analytic_fps", "completed", "chain_completed",
-    "fps", "vs_analytic",
+    "fps", "vs_analytic", "goodput",
 }
 SKIP_FIELDS = {"partition_ms"}  # machine-speed dependent, not a serving metric
-INT_IDENTITY = ("replicas", "shards", "chains", "stages", "window")
+INT_IDENTITY = ("replicas", "shards", "chains", "stages", "window", "tenants")
 
 
 def identity_fields(row):

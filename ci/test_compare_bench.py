@@ -116,6 +116,27 @@ def test_corrupt_current_fails():
         assert "::error::" in buf.getvalue()
 
 
+def test_tenants_is_identity_not_metric():
+    # `tenants` is a structural cardinality like `chains`: two rows that
+    # differ only in tenant count must NOT join (no bogus comparison),
+    # and a goodput collapse within the same tenant count must warn
+    prev = [
+        {"arm": "zoo", "tenants": 1, "goodput": 900},
+        {"arm": "zoo", "tenants": 2, "goodput": 400},
+    ]
+    curr = [
+        {"arm": "zoo", "tenants": 1, "goodput": 900},
+        {"arm": "zoo", "tenants": 2, "goodput": 100},
+        {"arm": "zoo", "tenants": 3, "goodput": 50},
+    ]
+    code, out = _run(prev, curr)
+    assert code == 0
+    assert "schema changed" not in out
+    assert "::warning::t regression" in out and "tenants=2" in out
+    assert "tenants=1" not in out.split("regression")[1].splitlines()[0]
+    assert "new row" in out and "tenants=3" in out
+
+
 def test_bool_outcome_flip_warns_despite_schema_change():
     prev = [{"arm": "a", "feasible": True, "fps": 5.0}]
     curr = [{"arm": "a", "mode": "packed", "feasible": False, "fps": 5.0}]

@@ -79,6 +79,7 @@ fn main() {
             width_bits: 36,
             depth: 24 + rng.below(480),
             slr: 0,
+            tenant: 0,
         })
         .collect();
     let c12 = Constraints::new(4, false);

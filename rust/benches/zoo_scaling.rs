@@ -1,0 +1,241 @@
+//! Bench: the multi-tenant model zoo's two headline claims.
+//!
+//! **Device cost**: the witness catalog (CNV-W2A2 + SFC) on a Zynq 7020
+//! — co-packed it fits one board, unpacked it overflows, and a
+//! dedicated per-tenant fleet needs a board per tenant. Arms:
+//!
+//! * `copack`    — one FCMP run over the union item set (FFD-seeded GA);
+//! * `direct`    — the same catalog without packing;
+//! * `dedicated` — each tenant packs alone on its own board(s).
+//!
+//! **Shed goodput**: tenant 0 rides a flash crowd 8x over its group's
+//! capacity while tenant 1 stays healthy, replayed on the DES's virtual
+//! clock (deterministic, so the arms differ only in admission policy):
+//!
+//! * `flash-deadline` — admission sheds by deadline feasibility against
+//!   each tenant's SLO budget;
+//! * `flash-fifo`     — the keep-everything baseline (zero service
+//!   estimate: nothing is ever projected to miss, so nothing sheds).
+//!
+//! The deadline arm must show strictly higher goodput (completions
+//! inside the tenant's SLO) — warned loudly if it does not, same
+//! philosophy as health_sweep. `--smoke` shrinks the traces and the GA
+//! budget; `--json` writes `BENCH_tenancy.json` (row identity carries
+//! the `tenants` cardinality for ci/compare_bench.py).
+
+use std::path::Path;
+use std::time::Duration;
+
+use fcmp::coordinator::{flash_crowd, poisson, BatcherConfig, ChainGroup, Deployment, Policy, Trace};
+use fcmp::device::zynq_7020;
+use fcmp::nn::{cnv, sfc_w1a1, CnvVariant, Network};
+use fcmp::sim::{FleetSim, SimBackend, SimConfig};
+use fcmp::tenancy::{co_pack, dedicated_devices};
+use fcmp::util::args::Args;
+use fcmp::util::bench::Table;
+use fcmp::util::ceil_div;
+
+struct Cell {
+    arm: &'static str,
+    device: &'static str,
+    trace: &'static str,
+    tenants: usize,
+    devices: usize,
+    brams: u64,
+    fits: bool,
+    requests: usize,
+    completed: usize,
+    shed: usize,
+    deadline_shed: usize,
+    goodput: usize,
+    wall_s: f64,
+}
+
+impl Cell {
+    fn packing(arm: &'static str, devices: usize, brams: u64, fits: bool) -> Cell {
+        Cell {
+            arm,
+            device: "7020",
+            trace: "none",
+            tenants: 2,
+            devices,
+            brams,
+            fits,
+            requests: 0,
+            completed: 0,
+            shed: 0,
+            deadline_shed: 0,
+            goodput: 0,
+            wall_s: 0.0,
+        }
+    }
+}
+
+/// The three device-cost arms over the witness catalog.
+fn packing_cells(generations: usize) -> Vec<Cell> {
+    let cnv22 = cnv(CnvVariant::W2A2);
+    let sfc = sfc_w1a1();
+    let nets: Vec<&Network> = vec![&cnv22, &sfc];
+    let dev = zynq_7020();
+    let cap = dev.bram18.max(1);
+
+    let cp = co_pack(&nets, &dev, 4, generations, 7);
+    let dedicated = dedicated_devices(&nets, &dev, 4, generations, 7);
+    let dedicated_brams: u64 =
+        nets.iter().map(|n| co_pack(&[n], &dev, 4, generations, 7).total_brams()).sum();
+
+    if !cp.fits() || dedicated < 2 {
+        eprintln!(
+            "WARNING witness catalog should co-pack onto one {} ({} of {} BRAM18) \
+             while the dedicated fleet needs {} board(s)",
+            cp.device,
+            cp.total_brams(),
+            cp.device_brams,
+            dedicated
+        );
+    }
+    if cp.fits_direct() {
+        eprintln!(
+            "WARNING unpacked catalog should overflow the {} ({} of {} BRAM18) — \
+             consolidation is supposed to be packing-enabled",
+            cp.device,
+            cp.total_direct_brams(),
+            cp.device_brams
+        );
+    }
+
+    let copack_devices = ceil_div(cp.total_brams(), cap) as usize;
+    let direct_devices = ceil_div(cp.total_direct_brams(), cap) as usize;
+    vec![
+        Cell::packing("copack", copack_devices, cp.total_brams(), cp.fits()),
+        Cell::packing("direct", direct_devices, cp.total_direct_brams(), cp.fits_direct()),
+        Cell::packing("dedicated", dedicated, dedicated_brams, true),
+    ]
+}
+
+/// One flash-crowd serving arm on the DES: tenant 0 bursts 8x over a
+/// ~500 req/s group, tenant 1 offers steady in-budget traffic.
+fn flash_arm(arm: &'static str, n: usize, est_zero: bool) -> Cell {
+    let t0 = flash_crowd(n, 300.0, 8.0, 0.2, n as f64 / 2400.0, 41);
+    let t1 = poisson(n / 2, 300.0, 42);
+    let (trace, tags) = Trace::merge(&[(0, &t0), (1, &t1)]);
+    let per_item = Duration::from_millis(2);
+    let budgets = vec![Some(Duration::from_millis(40)), Some(Duration::from_millis(100))];
+    let groups = vec![ChainGroup::new(1).for_tenant(0), ChainGroup::new(1).for_tenant(1)];
+    let plan = Deployment { groups, ..Deployment::default() }
+        .with_policy(Policy::RoundRobin)
+        .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::ZERO })
+        .with_queue_depth(32)
+        .with_window(2);
+    let est = if est_zero { vec![Duration::ZERO; 2] } else { vec![per_item; 2] };
+
+    let cfg = SimConfig { input_len: 8, seed: 9, ..SimConfig::default() };
+    let backend = SimBackend::Mock { base: Duration::ZERO, per_item };
+    let start = std::time::Instant::now();
+    let mut sim = FleetSim::uniform(plan, backend, cfg);
+    sim.set_tenancy(budgets, est);
+    let rep = sim.run_tagged(&trace, &tags);
+    let wall = start.elapsed().as_secs_f64();
+    let goodput: usize = rep.summary.per_tenant.iter().map(|t| t.goodput).sum();
+    Cell {
+        arm,
+        device: "mock",
+        trace: "flash",
+        tenants: 2,
+        devices: 1,
+        brams: 0,
+        fits: true,
+        requests: trace.len(),
+        completed: rep.completed,
+        shed: rep.shed,
+        deadline_shed: rep.deadline_shed,
+        goodput,
+        wall_s: wall,
+    }
+}
+
+fn cells_json(cells: &[Cell]) -> String {
+    let mut out = String::from("[");
+    for (k, c) in cells.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"arm\":{:?},\"device\":{:?},\"trace\":{:?},\"tenants\":{},\"devices\":{},\
+             \"brams\":{},\"fits\":{},\"requests\":{},\"completed\":{},\"shed\":{},\
+             \"deadline_shed\":{},\"goodput\":{},\"wall_s\":{:.3}}}",
+            c.arm,
+            c.device,
+            c.trace,
+            c.tenants,
+            c.devices,
+            c.brams,
+            c.fits,
+            c.requests,
+            c.completed,
+            c.shed,
+            c.deadline_shed,
+            c.goodput,
+            c.wall_s
+        ));
+    }
+    out.push(']');
+    out
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has_flag("smoke");
+    let (generations, n) = if smoke { (8, 600) } else { (40, 3000) };
+
+    let mut cells = packing_cells(generations);
+
+    let fifo = flash_arm("flash-fifo", n, true);
+    let dl = flash_arm("flash-deadline", n, false);
+    if dl.goodput <= fifo.goodput {
+        eprintln!(
+            "WARNING deadline-aware shedding should strictly beat FIFO goodput \
+             under the flash crowd (deadline {} vs fifo {})",
+            dl.goodput, fifo.goodput
+        );
+    }
+    cells.push(fifo);
+    cells.push(dl);
+
+    let mut t = Table::new([
+        "arm", "tenants", "devices", "brams", "fits", "req", "completed", "shed", "dl-shed",
+        "goodput", "wall s",
+    ]);
+    for c in &cells {
+        t.row([
+            c.arm.to_string(),
+            format!("{}", c.tenants),
+            format!("{}", c.devices),
+            format!("{}", c.brams),
+            format!("{}", c.fits),
+            format!("{}", c.requests),
+            format!("{}", c.completed),
+            format!("{}", c.shed),
+            format!("{}", c.deadline_shed),
+            format!("{}", c.goodput),
+            format!("{:.3}", c.wall_s),
+        ]);
+    }
+    println!("== Multi-tenant model zoo (co-packed consolidation + deadline goodput) ==");
+    println!("{}", t.render());
+    println!(
+        "headline: catalog needs {} board(s) co-packed vs {} dedicated; \
+         deadline goodput {} vs FIFO {} ({} deadline sheds)",
+        cells[0].devices,
+        cells[2].devices,
+        cells[4].goodput,
+        cells[3].goodput,
+        cells[4].deadline_shed
+    );
+
+    if args.has_flag("json") {
+        let path = Path::new("BENCH_tenancy.json");
+        std::fs::write(path, cells_json(&cells)).expect("writing BENCH_tenancy.json");
+        println!("wrote {} ({} cells)", path.display(), cells.len());
+    }
+}

@@ -923,6 +923,12 @@ pub fn run_loop(fleet: &mut ControlledFleet, trace: &Trace, cfg: &LoopConfig) ->
                 fm.record_shed();
                 tap.record_shed();
             }
+            // untenanted control replay never stamps deadlines, but keep
+            // the accounting honest if a caller wires one in
+            Err(SubmitError::DeadlineInfeasible(_)) => {
+                fm.record_deadline_shed(0);
+                tap.record_shed();
+            }
             Err(SubmitError::Closed(_)) => break 'arrivals,
         }
     }

@@ -53,17 +53,28 @@ pub struct ChainGroup {
     /// only when their tags are equal alongside the rest of the spec.
     /// `None` groups match each other by shape alone.
     pub tag: Option<String>,
+    /// Tenant this group serves ([`crate::tenancy`]): the router routes a
+    /// tenant's traffic only to groups carrying its id, and metrics /
+    /// control signals split on it. Single-tenant plans leave every group
+    /// at tenant `0` — the default — and behave exactly as before.
+    pub tenant: usize,
 }
 
 impl ChainGroup {
     /// A `stages`-deep chain group inheriting the deployment's batcher.
     pub fn new(stages: usize) -> ChainGroup {
-        ChainGroup { stages, batcher: None, tag: None }
+        ChainGroup { stages, batcher: None, tag: None, tenant: 0 }
     }
 
     /// Same group with an identity tag (see [`ChainGroup::tag`]).
     pub fn tagged(stages: usize, tag: impl Into<String>) -> ChainGroup {
-        ChainGroup { stages, batcher: None, tag: Some(tag.into()) }
+        ChainGroup { stages, batcher: None, tag: Some(tag.into()), tenant: 0 }
+    }
+
+    /// Same group owned by `tenant` (builder style).
+    pub fn for_tenant(mut self, tenant: usize) -> ChainGroup {
+        self.tenant = tenant;
+        self
     }
 }
 
@@ -173,6 +184,25 @@ impl Deployment {
         self.groups.get(g).and_then(|grp| grp.batcher).unwrap_or(self.batcher)
     }
 
+    /// Tenant owning group `g` (out-of-range groups read as tenant 0).
+    pub fn tenant_of(&self, g: usize) -> usize {
+        self.groups.get(g).map(|grp| grp.tenant).unwrap_or(0)
+    }
+
+    /// Group index → owning tenant, in plan order.
+    pub fn group_tenants(&self) -> Vec<usize> {
+        if self.groups.is_empty() {
+            return vec![0];
+        }
+        self.groups.iter().map(|g| g.tenant).collect()
+    }
+
+    /// Number of tenants the plan serves: `max(tenant) + 1` (tenant ids
+    /// are dense by convention; the zoo assigns them in catalog order).
+    pub fn tenant_count(&self) -> usize {
+        self.groups.iter().map(|g| g.tenant).max().unwrap_or(0) + 1
+    }
+
     /// Clamp the plan into a servable shape: at least one group, every
     /// group at least one stage, queue depth at least 1.
     pub(crate) fn normalized(mut self) -> Deployment {
@@ -196,6 +226,7 @@ impl Deployment {
             batcher: self.group_batcher(g),
             queue_depth: self.queue_depth.max(1),
             window: self.window.max(1),
+            tenant: self.tenant_of(g),
         }
     }
 }
@@ -209,6 +240,7 @@ pub(crate) struct GroupKey {
     pub(crate) batcher: BatcherConfig,
     pub(crate) queue_depth: usize,
     pub(crate) window: usize,
+    pub(crate) tenant: usize,
 }
 
 #[cfg(test)]
@@ -265,6 +297,19 @@ mod tests {
         // so does an in-flight-window change (workers must respawn)
         let wider = base.clone().with_window(base.window + 2);
         assert_ne!(base.group_key(0), wider.group_key(0));
+    }
+
+    #[test]
+    fn tenant_splits_group_keys_and_maps() {
+        let mut d = Deployment::replicated(3);
+        d.groups[2] = d.groups[2].clone().for_tenant(1);
+        assert_eq!(d.group_tenants(), vec![0, 0, 1]);
+        assert_eq!(d.tenant_count(), 2);
+        assert_eq!(d.tenant_of(2), 1);
+        assert_eq!(d.tenant_of(99), 0);
+        // groups differing only in tenant must not match on apply
+        assert_ne!(d.group_key(0), d.group_key(2));
+        assert_eq!(d.group_key(0), d.group_key(1));
     }
 
     #[test]

@@ -49,6 +49,19 @@ pub fn fallback_order(first: usize, groups: usize, load: impl Fn(usize) -> usize
     rest
 }
 
+/// Deadline-feasibility admission rule shared by the router and the
+/// simulator ([`crate::tenancy`]): a request with `remaining_ns` of its
+/// tenant SLO budget left is admitted only if the *best* group available
+/// to its tenant can plausibly serve it in time — estimated sojourn =
+/// `(queued_ahead + 1) × est_service` for the least-loaded candidate.
+/// Both time domains evaluate this identical integer expression, so
+/// differential tests line up shed counts exactly. A zero `est_service`
+/// degenerates to "shed only if the deadline already passed".
+pub fn deadline_feasible(remaining_ns: i64, min_load: usize, est_service_ns: u64) -> bool {
+    let est = (min_load as u64 + 1).saturating_mul(est_service_ns);
+    remaining_ns >= 0 && est <= remaining_ns as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +93,19 @@ mod tests {
     fn fallback_excludes_first_even_when_least_loaded() {
         let loads = [0usize, 9, 9];
         assert_eq!(fallback_order(0, 3, |g| loads[g]), vec![1, 2]);
+    }
+
+    #[test]
+    fn deadline_rule_boundaries() {
+        // expired budget always sheds, even with instant service
+        assert!(!deadline_feasible(-1, 0, 0));
+        // zero est_service admits anything still inside its budget
+        assert!(deadline_feasible(0, 100, 0));
+        // exact fit admits (<=), one ns short sheds
+        assert!(deadline_feasible(3_000, 2, 1_000));
+        assert!(!deadline_feasible(2_999, 2, 1_000));
+        // queue ahead scales the estimate linearly
+        assert!(deadline_feasible(1_000, 0, 1_000));
+        assert!(!deadline_feasible(1_000, 1, 1_000));
     }
 }

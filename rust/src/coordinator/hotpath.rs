@@ -37,6 +37,12 @@ pub struct HotPathStats {
     /// Backoff sleeps taken by blocking/deadline submits while every
     /// entry queue stayed full.
     pub backoff_sleeps: u64,
+    /// Dispatches shed by the deadline-feasibility admission rule
+    /// ([`crate::coordinator::SubmitError::DeadlineInfeasible`]):
+    /// the tenant's SLO budget could not cover the estimated sojourn, so
+    /// the router refused the request *before* it occupied a queue slot.
+    /// Disjoint from queue-full sheds.
+    pub deadline_sheds: u64,
     /// Pool `get`s served from a recycled buffer.
     pub pool_hits: u64,
     /// Pool `get`s that had to allocate fresh (cold pool, or more buffers
@@ -60,6 +66,7 @@ pub(crate) struct HotCounters {
     pub(crate) accepted_first_try: AtomicU64,
     pub(crate) fallback_scans: AtomicU64,
     pub(crate) backoff_sleeps: AtomicU64,
+    pub(crate) deadline_sheds: AtomicU64,
 }
 
 impl HotCounters {
@@ -71,6 +78,7 @@ impl HotCounters {
             accepted_first_try: self.accepted_first_try.load(Ordering::Relaxed),
             fallback_scans: self.fallback_scans.load(Ordering::Relaxed),
             backoff_sleeps: self.backoff_sleeps.load(Ordering::Relaxed),
+            deadline_sheds: self.deadline_sheds.load(Ordering::Relaxed),
             ..HotPathStats::default()
         }
     }

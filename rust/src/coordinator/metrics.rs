@@ -179,7 +179,50 @@ pub struct FleetMetrics {
     sizes: Vec<usize>,
     submitted: usize,
     shed: usize,
+    /// Sheds by the deadline-feasibility admission rule — disjoint from
+    /// the queue-full `shed` counter, so overload and infeasibility stay
+    /// distinguishable in the summary and the journal.
+    deadline_shed: usize,
     hot: HotPathStats,
+    /// Group → owning tenant ([`crate::tenancy`]); empty = single-tenant
+    /// (every per-tenant surface stays silent).
+    tenants: Vec<usize>,
+    /// Per-tenant end-to-end collectors (indexed by tenant id).
+    per_tenant: Vec<Metrics>,
+    /// Per-tenant admission counters, parallel to `per_tenant`.
+    t_submitted: Vec<usize>,
+    t_shed: Vec<usize>,
+    t_deadline_shed: Vec<usize>,
+    /// Completions inside the tenant's SLO budget (goodput numerator).
+    t_goodput: Vec<usize>,
+    /// Per-tenant SLO budget (ms) goodput is judged against; `NAN`
+    /// entries count every completion as good.
+    t_slo_ms: Vec<f64>,
+}
+
+/// Per-tenant slice of a [`FleetSummary`]: admission counters, the
+/// latency view over the tenant's own groups, and goodput — completions
+/// that landed inside the tenant's SLO budget.
+#[derive(Clone, Debug)]
+pub struct TenantSummary {
+    /// Tenant id (dense, catalog order).
+    pub tenant: usize,
+    /// Accepted submissions for this tenant.
+    pub submitted: usize,
+    /// Queue-full sheds for this tenant.
+    pub shed: usize,
+    /// Deadline-infeasible sheds for this tenant.
+    pub deadline_shed: usize,
+    /// Completions recorded against this tenant's groups.
+    pub completed: usize,
+    /// Completions whose end-to-end latency was within the tenant's SLO
+    /// budget — the goodput numerator (== `completed` when no budget was
+    /// configured).
+    pub goodput: usize,
+    /// The SLO budget (ms) goodput was judged against, if configured.
+    pub slo_ms: Option<f64>,
+    /// Latency/throughput view over the tenant's completions.
+    pub latency: Option<ServeSummary>,
 }
 
 /// Fleet summary: the fleet-wide view, the per-chain-group end-to-end
@@ -202,6 +245,12 @@ pub struct FleetSummary {
     pub submitted: usize,
     /// Requests shed because every group entry queue was full.
     pub shed: usize,
+    /// Requests shed by the deadline-feasibility rule (multi-tenant
+    /// admission; zero unless deadlines were configured).
+    pub deadline_shed: usize,
+    /// Per-tenant breakdown, indexed by tenant id; empty for
+    /// single-tenant runs that never called [`FleetMetrics::set_tenants`].
+    pub per_tenant: Vec<TenantSummary>,
     /// Hot-path profile: submit fast-path hit rate, fallback scans,
     /// backoff sleeps and buffer-pool recycling counters (see
     /// [`crate::coordinator::HotPathStats`]). All zero unless the driver
@@ -229,8 +278,47 @@ impl FleetMetrics {
             sizes: group_sizes.iter().map(|&k| k.max(1)).collect(),
             submitted: 0,
             shed: 0,
+            deadline_shed: 0,
             hot: HotPathStats::default(),
+            tenants: Vec::new(),
+            per_tenant: Vec::new(),
+            t_submitted: Vec::new(),
+            t_shed: Vec::new(),
+            t_deadline_shed: Vec::new(),
+            t_goodput: Vec::new(),
+            t_slo_ms: Vec::new(),
         }
+    }
+
+    /// Enable per-tenant accounting: `tenants[g]` is the tenant owning
+    /// group `g` (see [`crate::coordinator::Deployment::group_tenants`]).
+    /// Sizes every per-tenant surface to `max(tenant) + 1`.
+    pub fn set_tenants(&mut self, tenants: Vec<usize>) {
+        let n = tenants.iter().copied().max().unwrap_or(0) + 1;
+        self.tenants = tenants;
+        self.per_tenant = (0..n).map(|_| Metrics::new()).collect();
+        self.t_submitted = vec![0; n];
+        self.t_shed = vec![0; n];
+        self.t_deadline_shed = vec![0; n];
+        self.t_goodput = vec![0; n];
+        if self.t_slo_ms.len() != n {
+            self.t_slo_ms = vec![f64::NAN; n];
+        }
+    }
+
+    /// Per-tenant SLO budgets (ms) goodput is judged against; call after
+    /// [`FleetMetrics::set_tenants`]. Missing entries count everything
+    /// as good.
+    pub fn set_tenant_slos_ms(&mut self, slos: Vec<f64>) {
+        self.t_slo_ms = slos;
+        if self.t_slo_ms.len() < self.per_tenant.len() {
+            self.t_slo_ms.resize(self.per_tenant.len(), f64::NAN);
+        }
+    }
+
+    /// Tenant owning group `g` (0 when per-tenant accounting is off).
+    fn tenant_of(&self, g: usize) -> usize {
+        self.tenants.get(g).copied().unwrap_or(0)
     }
 
     /// Collectors for a flat fleet of `workers` 1-stage groups.
@@ -248,6 +336,9 @@ impl FleetMetrics {
         for m in &mut self.per_replica {
             m.start();
         }
+        for m in &mut self.per_tenant {
+            m.start();
+        }
     }
 
     /// Override the measurement span on every collector with `span_s`
@@ -261,6 +352,9 @@ impl FleetMetrics {
             m.set_span_s(span_s);
         }
         for m in &mut self.per_replica {
+            m.set_span_s(span_s);
+        }
+        for m in &mut self.per_tenant {
             m.set_span_s(span_s);
         }
     }
@@ -286,6 +380,17 @@ impl FleetMetrics {
             None => {
                 self.orphans.record(c.latency, c.batch_size);
                 return;
+            }
+        }
+        if !self.per_tenant.is_empty() {
+            let t = self.tenant_of(c.group);
+            if let Some(m) = self.per_tenant.get_mut(t) {
+                m.record(c.latency, c.batch_size);
+                let slo = self.t_slo_ms.get(t).copied().unwrap_or(f64::NAN);
+                // an unconfigured (NaN) budget counts everything as good
+                if slo.is_nan() || c.latency.as_secs_f64() * 1e3 <= slo {
+                    self.t_goodput[t] += 1;
+                }
             }
         }
         let Some(&base) = self.offsets.get(c.group) else { return };
@@ -314,6 +419,39 @@ impl FleetMetrics {
     /// Count one shed (admission-control rejected) submission.
     pub fn record_shed(&mut self) {
         self.shed += 1;
+    }
+
+    /// Count one accepted submission for `tenant` (also counts
+    /// fleet-wide).
+    pub fn record_submitted_for(&mut self, tenant: usize) {
+        self.submitted += 1;
+        if let Some(c) = self.t_submitted.get_mut(tenant) {
+            *c += 1;
+        }
+    }
+
+    /// Count one queue-full shed for `tenant` (also counts fleet-wide).
+    pub fn record_shed_for(&mut self, tenant: usize) {
+        self.shed += 1;
+        if let Some(c) = self.t_shed.get_mut(tenant) {
+            *c += 1;
+        }
+    }
+
+    /// Count one deadline-infeasible shed for `tenant`. Kept disjoint
+    /// from [`FleetMetrics::record_shed`] so the summary distinguishes
+    /// overload (queue full) from infeasibility (budget can't cover the
+    /// estimated sojourn).
+    pub fn record_deadline_shed(&mut self, tenant: usize) {
+        self.deadline_shed += 1;
+        if let Some(c) = self.t_deadline_shed.get_mut(tenant) {
+            *c += 1;
+        }
+    }
+
+    /// Deadline-infeasible sheds so far.
+    pub fn deadline_shed(&self) -> usize {
+        self.deadline_shed
     }
 
     /// Completions recorded so far (every group plus out-of-shape
@@ -367,12 +505,32 @@ impl FleetMetrics {
             fleet.absorb(m);
         }
         fleet.absorb(&self.orphans);
+        let per_tenant = self
+            .per_tenant
+            .iter()
+            .enumerate()
+            .map(|(t, m)| {
+                let slo = self.t_slo_ms.get(t).copied().unwrap_or(f64::NAN);
+                TenantSummary {
+                    tenant: t,
+                    submitted: self.t_submitted[t],
+                    shed: self.t_shed[t],
+                    deadline_shed: self.t_deadline_shed[t],
+                    completed: m.count(),
+                    goodput: self.t_goodput[t],
+                    slo_ms: if slo.is_finite() { Some(slo) } else { None },
+                    latency: m.try_summary(),
+                }
+            })
+            .collect();
         FleetSummary {
             fleet: fleet.try_summary(),
             per_group: self.per_group.iter().map(Metrics::try_summary).collect(),
             per_replica: self.per_replica.iter().map(Metrics::try_summary).collect(),
             submitted: self.submitted,
             shed: self.shed,
+            deadline_shed: self.deadline_shed,
+            per_tenant,
             hot: self.hot,
         }
     }
@@ -387,6 +545,22 @@ impl std::fmt::Display for FleetSummary {
                 "fleet: no completions | submitted {} shed {}",
                 self.submitted, self.shed
             )?,
+        }
+        if self.deadline_shed > 0 {
+            write!(f, " deadline-shed {}", self.deadline_shed)?;
+        }
+        for t in &self.per_tenant {
+            write!(
+                f,
+                "\n  tenant {}: submitted {} shed {} deadline-shed {} completed {} goodput {}",
+                t.tenant, t.submitted, t.shed, t.deadline_shed, t.completed, t.goodput
+            )?;
+            if let Some(slo) = t.slo_ms {
+                write!(f, " (slo {slo:.1} ms)")?;
+            }
+            if let Some(s) = &t.latency {
+                write!(f, "\n    {s}")?;
+            }
         }
         // the group view adds information only when groups are chains
         // (for flat fleets it would duplicate the per-worker lines)
@@ -683,6 +857,55 @@ mod tests {
         let mut fm = FleetMetrics::flat(1);
         fm.record(&completion(0, 0, 5, 1));
         assert!(fm.summary().fleet.unwrap().throughput_fps.is_finite());
+    }
+
+    #[test]
+    fn tenant_accounting_splits_counters_and_goodput() {
+        // groups 0,1 belong to tenant 0; group 2 to tenant 1
+        let mut fm = FleetMetrics::flat(3);
+        fm.set_tenants(vec![0, 0, 1]);
+        fm.set_tenant_slos_ms(vec![10.0, 25.0]);
+        fm.start();
+        // tenant 0: one fast (in SLO), one slow (out of SLO)
+        fm.record_submitted_for(0);
+        fm.record(&completion(0, 0, 5, 1));
+        fm.record_submitted_for(0);
+        fm.record(&completion(1, 1, 50, 1));
+        // tenant 1: one fast, plus one queue-full and one deadline shed
+        fm.record_submitted_for(1);
+        fm.record(&completion(2, 2, 20, 1));
+        fm.record_shed_for(1);
+        fm.record_deadline_shed(1);
+        assert_eq!(fm.submitted(), 3);
+        assert_eq!(fm.shed(), 1);
+        assert_eq!(fm.deadline_shed(), 1);
+        let s = fm.summary();
+        assert_eq!(s.per_tenant.len(), 2);
+        let (t0, t1) = (&s.per_tenant[0], &s.per_tenant[1]);
+        assert_eq!((t0.submitted, t0.completed, t0.goodput), (2, 2, 1));
+        assert_eq!((t0.shed, t0.deadline_shed), (0, 0));
+        assert_eq!((t1.submitted, t1.completed, t1.goodput), (1, 1, 1));
+        assert_eq!((t1.shed, t1.deadline_shed), (1, 1));
+        assert_eq!(t0.slo_ms, Some(10.0));
+        assert_eq!(t1.latency.as_ref().unwrap().requests, 1);
+        let text = format!("{s}");
+        assert!(text.contains("deadline-shed 1"), "{text}");
+        assert!(text.contains("tenant 0: submitted 2"), "{text}");
+        assert!(text.contains("tenant 1: submitted 1"), "{text}");
+    }
+
+    #[test]
+    fn single_tenant_summary_keeps_tenant_surfaces_silent() {
+        let mut fm = FleetMetrics::flat(2);
+        fm.start();
+        fm.record_submitted();
+        fm.record(&completion(0, 0, 5, 1));
+        let s = fm.summary();
+        assert!(s.per_tenant.is_empty());
+        assert_eq!(s.deadline_shed, 0);
+        let text = format!("{s}");
+        assert!(!text.contains("tenant"), "{text}");
+        assert!(!text.contains("deadline-shed"), "{text}");
     }
 
     #[test]

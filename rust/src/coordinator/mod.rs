@@ -76,7 +76,7 @@ pub use capacity::{
 };
 pub use deployment::{ChainGroup, Deployment, WorkerId};
 pub use hotpath::{BufferPool, HotPathStats};
-pub use metrics::{FleetMetrics, FleetSummary, Metrics, ServeSummary};
+pub use metrics::{FleetMetrics, FleetSummary, Metrics, ServeSummary, TenantSummary};
 pub use policy::{Policy, Scheduler};
 pub use server::{
     BatchHandle, InferBackend, MockBackend, PipelinedMockBackend, Server, SubmitError,
@@ -107,6 +107,11 @@ pub struct Request {
     /// Flight-recorder span when this request was sampled for tracing
     /// (`None` for the unsampled majority — one branch per stamp site).
     pub span: Option<Box<crate::obs::RequestSpan>>,
+    /// Completion deadline from the submitting tenant's SLO budget
+    /// (`None` = best-effort). The router's deadline-feasibility rule
+    /// ([`crate::coordinator::dispatch::deadline_feasible`]) sheds the
+    /// request up front when no group can plausibly meet it.
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
@@ -121,7 +126,14 @@ impl Request {
             stage_latencies: Vec::new(),
             stage_batches: Vec::new(),
             span: None,
+            deadline: None,
         }
+    }
+
+    /// Stamp a completion deadline `budget` past the arrival instant.
+    pub fn with_deadline(mut self, budget: Duration) -> Request {
+        self.deadline = Some(self.arrival + budget);
+        self
     }
 }
 

@@ -292,13 +292,23 @@ pub enum SubmitError {
     /// backoff budget with every entry queue still full. Retrying later
     /// can succeed — the fleet is overloaded, not gone.
     Timeout(Request),
+    /// The request's completion deadline cannot plausibly be met by any
+    /// of its tenant's groups
+    /// ([`crate::coordinator::dispatch::deadline_feasible`]), so
+    /// admission control refused it *before* it occupied a queue slot.
+    /// Disjoint from [`SubmitError::QueueFull`]: the fleet may have
+    /// room, but queued work ahead already spends the SLO budget.
+    DeadlineInfeasible(Request),
 }
 
 impl SubmitError {
     /// Recover the rejected request (e.g. to retry it later).
     pub fn into_request(self) -> Request {
         match self {
-            SubmitError::QueueFull(r) | SubmitError::Closed(r) | SubmitError::Timeout(r) => r,
+            SubmitError::QueueFull(r)
+            | SubmitError::Closed(r)
+            | SubmitError::Timeout(r)
+            | SubmitError::DeadlineInfeasible(r) => r,
         }
     }
 
@@ -319,6 +329,13 @@ impl std::fmt::Display for SubmitError {
             }
             SubmitError::Timeout(r) => {
                 write!(f, "request {} timed out: entry queues stayed full past the deadline", r.id)
+            }
+            SubmitError::DeadlineInfeasible(r) => {
+                write!(
+                    f,
+                    "request {} shed: no group of its tenant can meet its deadline",
+                    r.id
+                )
             }
         }
     }
@@ -400,6 +417,17 @@ impl GroupEntry {
 struct RouterCore {
     entries: Vec<GroupEntry>,
     scheduler: Scheduler,
+    /// Tenant → the groups carrying its networks (global indices,
+    /// ascending). One entry (holding every group) in single-tenant
+    /// plans, so untenanted and tenant-0 dispatch agree.
+    tenant_groups: Vec<Vec<usize>>,
+    /// Per-tenant schedulers over tenant-*local* index spaces — one
+    /// tenant's RR cursor / SWRR credits never move on another tenant's
+    /// traffic.
+    tenant_schedulers: Vec<Scheduler>,
+    /// Per-group service-time estimate (ns) for the deadline-feasibility
+    /// rule; zeros degrade the rule to "shed only if already expired".
+    est_service_ns: Vec<u64>,
     counters: Arc<HotCounters>,
     /// Observability hub: head-based sampling happens at dispatch, the
     /// Enqueue stamp right before the entry `try_send`. A disabled hub
@@ -417,7 +445,15 @@ impl RouterCore {
     /// in *before* a shutdown/reshape closes worker queues, so the old
     /// core's entry senders drop and the workers' channels can disconnect.
     fn detached(policy: Policy, counters: Arc<HotCounters>, obs: Arc<Obs>) -> RouterCore {
-        RouterCore { entries: Vec::new(), scheduler: Scheduler::new(policy, 1), counters, obs }
+        RouterCore {
+            entries: Vec::new(),
+            scheduler: Scheduler::new(policy, 1),
+            tenant_groups: Vec::new(),
+            tenant_schedulers: Vec::new(),
+            est_service_ns: Vec::new(),
+            counters,
+            obs,
+        }
     }
 
     /// Non-blocking entry submit with increment-before-send counter
@@ -500,6 +536,75 @@ impl RouterCore {
         }
     }
 
+    /// Route a request for `tenant`: the same preferred-then-fallback
+    /// order as [`RouterCore::dispatch`], but restricted to the tenant's
+    /// own groups — driven through the [`super::dispatch`] seam over the
+    /// tenant-*local* index space, so the discrete-event simulator can
+    /// mirror the order exactly. A deadline-carrying request is first
+    /// checked against [`super::dispatch::deadline_feasible`] on the
+    /// tenant's least-loaded group and shed with
+    /// [`SubmitError::DeadlineInfeasible`] when its SLO budget cannot
+    /// cover the estimated sojourn.
+    fn dispatch_tenant(
+        &self,
+        tenant: usize,
+        mut req: Request,
+    ) -> std::result::Result<usize, SubmitError> {
+        self.counters.submits.fetch_add(1, Ordering::Relaxed);
+        let members = match self.tenant_groups.get(tenant) {
+            Some(m) if !m.is_empty() => m,
+            _ => return Err(SubmitError::Closed(req)),
+        };
+        if let Some(deadline) = req.deadline {
+            let (min_load, best) = members
+                .iter()
+                .map(|&g| (self.entries[g].load(), g))
+                .min()
+                .expect("members is non-empty");
+            let remaining: i64 = match deadline.checked_duration_since(Instant::now()) {
+                Some(left) => left.as_nanos().min(i64::MAX as u128) as i64,
+                None => -1, // already expired
+            };
+            let est = self.est_service_ns.get(best).copied().unwrap_or(0);
+            if !super::dispatch::deadline_feasible(remaining, min_load, est) {
+                self.counters.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::DeadlineInfeasible(req));
+            }
+        }
+        if self.obs.active() && req.span.is_none() {
+            req.span = self.obs.sample(req.id);
+        }
+        let load = |i: usize| self.entries[members[i]].load();
+        let first =
+            super::dispatch::preferred_group(&self.tenant_schedulers[tenant], members.len(), load);
+        let mut saw_full = false;
+        let mut req = match self.try_entry(members[first], req) {
+            Ok(()) => {
+                self.counters.accepted_first_try.fetch_add(1, Ordering::Relaxed);
+                return Ok(members[first]);
+            }
+            Err((r, full)) => {
+                saw_full |= full;
+                r
+            }
+        };
+        self.counters.fallback_scans.fetch_add(1, Ordering::Relaxed);
+        for i in super::dispatch::fallback_order(first, members.len(), load) {
+            match self.try_entry(members[i], req) {
+                Ok(()) => return Ok(members[i]),
+                Err((r, full)) => {
+                    saw_full |= full;
+                    req = r;
+                }
+            }
+        }
+        if saw_full {
+            Err(SubmitError::QueueFull(req))
+        } else {
+            Err(SubmitError::Closed(req))
+        }
+    }
+
     /// Blocking entry submit (parks on the bounded queue); fails only on
     /// a disconnected (dead) worker.
     fn wait_entry(&self, g: usize, mut req: Request) -> std::result::Result<(), Request> {
@@ -534,6 +639,8 @@ impl RouterCore {
             req = match self.dispatch(req) {
                 Ok(g) => return Ok(g),
                 Err(SubmitError::Closed(r)) => return Err(SubmitError::Closed(r)),
+                // waiting cannot make an infeasible deadline feasible
+                Err(e @ SubmitError::DeadlineInfeasible(_)) => return Err(e),
                 Err(SubmitError::QueueFull(r)) | Err(SubmitError::Timeout(r)) => r,
             };
             match deadline {
@@ -649,6 +756,14 @@ pub struct Server {
     /// Sheds since the last anomaly observation (replay's shed-burst
     /// window).
     shed_window: u64,
+    /// Per-tenant SLO budgets ([`Server::set_tenancy`]): tenant `t`'s
+    /// requests carry `arrival + budgets[t]` as their deadline; `None`
+    /// entries submit best-effort. Persists across [`Server::apply`].
+    tenant_budgets: Vec<Option<Duration>>,
+    /// Per-group service-time estimates (ns) feeding the
+    /// deadline-feasibility rule; resized with zeros to the group count
+    /// on every router rebuild.
+    est_service_ns: Vec<u64>,
 }
 
 impl Server {
@@ -703,6 +818,8 @@ impl Server {
             exposition: None,
             health: None,
             shed_window: 0,
+            tenant_budgets: Vec::new(),
+            est_service_ns: Vec::new(),
         };
         srv.rebuild_router();
         srv
@@ -807,7 +924,7 @@ impl Server {
     /// deploy/apply; [`SubmitHandle`]s minted before this keep the old
     /// `Weak` and report `Closed`.
     fn rebuild_router(&mut self) {
-        let entries = self
+        let entries: Vec<GroupEntry> = self
             .groups
             .iter()
             .map(|g| GroupEntry {
@@ -816,9 +933,24 @@ impl Server {
                 stage_outstanding: g.replicas.iter().map(Replica::outstanding_handle).collect(),
             })
             .collect();
+        let tenants: Vec<usize> = (0..entries.len()).map(|g| self.plan.tenant_of(g)).collect();
+        let n_tenants = tenants.iter().copied().max().unwrap_or(0) + 1;
+        let mut tenant_groups = vec![Vec::new(); n_tenants];
+        for (g, &t) in tenants.iter().enumerate() {
+            tenant_groups[t].push(g);
+        }
+        let tenant_schedulers = tenant_groups
+            .iter()
+            .map(|m: &Vec<usize>| Scheduler::new(self.plan.policy.clone(), m.len().max(1)))
+            .collect();
+        let mut est_service_ns = self.est_service_ns.clone();
+        est_service_ns.resize(entries.len(), 0);
         self.router = Arc::new(RouterCore {
             entries,
             scheduler: Scheduler::new(self.plan.policy.clone(), self.groups.len().max(1)),
+            tenant_groups,
+            tenant_schedulers,
+            est_service_ns,
             counters: Arc::clone(&self.counters),
             obs: Arc::clone(&self.obs),
         });
@@ -952,6 +1084,42 @@ impl Server {
         self.router.dispatch(Request::new(id, input))
     }
 
+    /// Configure multi-tenant admission: `budgets[t]` is tenant `t`'s
+    /// SLO budget (requests carry `arrival + budget` as their deadline;
+    /// `None` = best-effort, no deadline sheds) and `est_service[g]` the
+    /// per-group service-time estimate the deadline-feasibility rule
+    /// multiplies by queue depth ahead (see
+    /// [`crate::coordinator::capacity::mock_chain_service_from_fps`] for
+    /// deriving it from the capacity model). Rebuilds the router, so
+    /// outstanding [`SubmitHandle`]s go stale; the config persists
+    /// across [`Server::apply`].
+    pub fn set_tenancy(&mut self, budgets: Vec<Option<Duration>>, est_service: Vec<Duration>) {
+        self.tenant_budgets = budgets;
+        self.est_service_ns = est_service
+            .iter()
+            .map(|d| d.as_nanos().min(u64::MAX as u128) as u64)
+            .collect();
+        self.rebuild_router();
+    }
+
+    /// Non-blocking submit on behalf of `tenant`: stamps the tenant's
+    /// SLO deadline (when configured via [`Server::set_tenancy`]) and
+    /// routes only to the groups carrying that tenant's networks. A
+    /// tenant with no groups in the current plan gets
+    /// [`SubmitError::Closed`].
+    pub fn submit_for(
+        &mut self,
+        tenant: usize,
+        id: u64,
+        input: Vec<f32>,
+    ) -> std::result::Result<usize, SubmitError> {
+        let mut req = Request::new(id, input);
+        if let Some(&Some(budget)) = self.tenant_budgets.get(tenant) {
+            req = req.with_deadline(budget);
+        }
+        self.router.dispatch_tenant(tenant, req)
+    }
+
     /// Blocking submit: when every group entry is full it parks on the
     /// least loaded group's bounded entry queue (the worker wakes it when
     /// a slot frees) instead of spin-retrying; only terminal shutdown
@@ -1061,7 +1229,25 @@ impl Server {
     /// percentiles alongside the per-stage breakdown. The server stays
     /// running; callers decide when to [`Server::shutdown`].
     pub fn replay(&mut self, trace: &Trace, input_len: usize, seed: u64) -> FleetMetrics {
-        let mut fm = self.replay_inner(trace, input_len, seed);
+        let mut fm = self.replay_inner(trace, None, input_len, seed);
+        fm.set_hot(self.hot_stats());
+        fm
+    }
+
+    /// [`Server::replay`] over a merged multi-tenant trace: `tags[i]` is
+    /// the tenant submitting arrival `i` (see [`Trace::merge`]; missing
+    /// tags default to tenant 0). Requests carry their tenant's SLO
+    /// deadline (when configured via [`Server::set_tenancy`]), route
+    /// only to that tenant's groups, and the returned metrics split the
+    /// admission counters, latency percentiles and goodput per tenant.
+    pub fn replay_tagged(
+        &mut self,
+        trace: &Trace,
+        tags: &[usize],
+        input_len: usize,
+        seed: u64,
+    ) -> FleetMetrics {
+        let mut fm = self.replay_inner(trace, Some(tags), input_len, seed);
         fm.set_hot(self.hot_stats());
         fm
     }
@@ -1072,9 +1258,24 @@ impl Server {
     /// completion outputs flow back too — so once the pool is warm the
     /// steady-state submit path allocates nothing per request (the
     /// pool-miss counter in [`Server::hot_stats`] is the proof).
-    fn replay_inner(&mut self, trace: &Trace, input_len: usize, seed: u64) -> FleetMetrics {
+    fn replay_inner(
+        &mut self,
+        trace: &Trace,
+        tags: Option<&[usize]>,
+        input_len: usize,
+        seed: u64,
+    ) -> FleetMetrics {
         let mut rng = Rng::new(seed);
         let mut fm = FleetMetrics::new(&self.group_sizes());
+        if tags.is_some() {
+            fm.set_tenants((0..self.groups.len()).map(|g| self.plan.tenant_of(g)).collect());
+            fm.set_tenant_slos_ms(
+                self.tenant_budgets
+                    .iter()
+                    .map(|b| b.map_or(f64::NAN, |d| d.as_secs_f64() * 1e3))
+                    .collect(),
+            );
+        }
         fm.start();
         let t0 = Instant::now();
         for (i, &due) in trace.arrivals_s.iter().enumerate() {
@@ -1102,16 +1303,33 @@ impl Server {
             }
             let mut input = self.pool.get(input_len);
             input.extend((0..input_len).map(|_| rng.below(256) as f32));
-            match self.submit(i as u64, input) {
-                Ok(_) => fm.record_submitted(),
+            let tenant = tags.map(|t| t.get(i).copied().unwrap_or(0));
+            let outcome = match tenant {
+                Some(t) => self.submit_for(t, i as u64, input),
+                None => self.submit(i as u64, input),
+            };
+            match outcome {
+                Ok(_) => match tenant {
+                    Some(t) => fm.record_submitted_for(t),
+                    None => fm.record_submitted(),
+                },
                 Err(SubmitError::QueueFull(mut r)) | Err(SubmitError::Timeout(mut r)) => {
-                    fm.record_shed();
+                    match tenant {
+                        Some(t) => fm.record_shed_for(t),
+                        None => fm.record_shed(),
+                    }
                     self.shed_window += 1;
                     // a shed request never reached a group; its span (if
                     // sampled) is finalized into the shed ring under the
                     // router's view (group 0)
                     self.obs.shed(r.span.take(), 0);
                     // the shed request's buffer goes straight back
+                    self.pool.put(r.input);
+                }
+                Err(SubmitError::DeadlineInfeasible(mut r)) => {
+                    fm.record_deadline_shed(tenant.unwrap_or(0));
+                    self.shed_window += 1;
+                    self.obs.shed(r.span.take(), 0);
                     self.pool.put(r.input);
                 }
                 Err(SubmitError::Closed(_)) => return fm,
@@ -1724,6 +1942,78 @@ mod tests {
         );
         let stats = srv.hot_stats();
         assert!(stats.backoff_sleeps > 0, "deadline path must back off, not spin");
+    }
+
+    #[test]
+    fn tenant_submits_route_only_to_their_own_groups() {
+        let mut plan = Deployment::replicated(2).with_queue_depth(64);
+        plan.groups[1].tenant = 1;
+        let mut srv = Server::deploy(|_| MockBackend::instant(), plan);
+        for i in 0..10 {
+            assert_eq!(srv.submit_for(0, i, vec![1.0]).unwrap(), 0);
+            assert_eq!(srv.submit_for(1, 100 + i, vec![1.0]).unwrap(), 1);
+        }
+        // a tenant with no groups in the plan is Closed, not shed
+        match srv.submit_for(7, 999, vec![1.0]) {
+            Err(SubmitError::Closed(r)) => assert_eq!(r.id, 999),
+            other => {
+                panic!("tenant without groups must be Closed, got ok={:?}", other.is_ok())
+            }
+        }
+        srv.shutdown();
+        let mut per_group = [0usize; 2];
+        while let Some(c) = srv.next_completion() {
+            per_group[c.group] += 1;
+        }
+        assert_eq!(per_group, [10, 10], "tenant traffic crossed group boundaries");
+    }
+
+    #[test]
+    fn infeasible_deadline_sheds_before_occupying_a_queue_slot() {
+        let mut plan = Deployment::replicated(2).with_queue_depth(64);
+        plan.groups[1].tenant = 1;
+        let mut srv = Server::deploy(|_| MockBackend::instant(), plan);
+        // tenant 1's 1ms budget cannot cover the estimated 50ms service;
+        // tenant 0 stays best-effort (no deadline)
+        srv.set_tenancy(
+            vec![None, Some(Duration::from_millis(1))],
+            vec![Duration::from_millis(50), Duration::from_millis(50)],
+        );
+        match srv.submit_for(1, 1, vec![1.0]) {
+            Err(SubmitError::DeadlineInfeasible(r)) => {
+                assert_eq!(r.id, 1);
+                assert!(!SubmitError::DeadlineInfeasible(r).is_closed());
+            }
+            other => panic!("want DeadlineInfeasible, got ok={:?}", other.is_ok()),
+        }
+        // one tenant's infeasibility never touches the other's admission
+        assert_eq!(srv.submit_for(0, 2, vec![1.0]).unwrap(), 0);
+        assert_eq!(srv.hot_stats().deadline_sheds, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn tagged_replay_splits_metrics_per_tenant() {
+        let mut plan = Deployment::replicated(2).with_queue_depth(256);
+        plan.groups[1].tenant = 1;
+        let mut srv = Server::deploy(|_| MockBackend::instant(), plan);
+        srv.set_tenancy(
+            vec![Some(Duration::from_millis(250)), Some(Duration::from_millis(250))],
+            vec![Duration::from_micros(10), Duration::from_micros(10)],
+        );
+        let a = crate::coordinator::workload::uniform(30, 2000.0);
+        let b = crate::coordinator::workload::uniform(20, 1500.0);
+        let (merged, tags) = Trace::merge(&[(0, &a), (1, &b)]);
+        let fm = srv.replay_tagged(&merged, &tags, 4, 7);
+        let s = fm.summary();
+        assert_eq!(s.per_tenant.len(), 2);
+        assert_eq!(s.per_tenant[0].submitted + s.per_tenant[0].shed, 30);
+        assert_eq!(s.per_tenant[1].submitted + s.per_tenant[1].shed, 20);
+        // generous budgets + instant mocks: everything lands in SLO
+        assert_eq!(s.per_tenant[0].goodput, s.per_tenant[0].completed);
+        assert_eq!(s.per_tenant[1].goodput, s.per_tenant[1].completed);
+        assert_eq!(s.per_tenant[0].slo_ms, Some(250.0));
+        srv.shutdown();
     }
 
     #[test]

@@ -78,6 +78,46 @@ impl Trace {
         );
         Ok(Trace { arrivals_s: arrivals })
     }
+
+    /// Deterministically interleave per-tenant traces into one merged
+    /// trace by timestamp, tagging every merged arrival with the tenant
+    /// it came from. Ties break by tenant id (stable), and each tenant's
+    /// own arrival order is preserved exactly — a k-way stable merge, so
+    /// the result is a pure function of the inputs (seed-reproducible
+    /// whenever the inputs are). Returns the merged trace plus a parallel
+    /// `tenant_of[i]` vector.
+    pub fn merge(parts: &[(usize, &Trace)]) -> (Trace, Vec<usize>) {
+        let total: usize = parts.iter().map(|(_, t)| t.len()).sum();
+        let mut arrivals = Vec::with_capacity(total);
+        let mut tenants = Vec::with_capacity(total);
+        // cursor per part; pick the (time, tenant, part-order) minimum
+        let mut cursors = vec![0usize; parts.len()];
+        for _ in 0..total {
+            let mut best: Option<usize> = None;
+            for (p, &(tenant, trace)) in parts.iter().enumerate() {
+                let c = cursors[p];
+                if c >= trace.len() {
+                    continue;
+                }
+                let t = trace.arrivals_s[c];
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        let (bt, btr) = (parts[b].1.arrivals_s[cursors[b]], parts[b].0);
+                        t < bt || (t == bt && tenant < btr)
+                    }
+                };
+                if better {
+                    best = Some(p);
+                }
+            }
+            let p = best.expect("total counted a remaining arrival");
+            arrivals.push(parts[p].1.arrivals_s[cursors[p]]);
+            tenants.push(parts[p].0);
+            cursors[p] += 1;
+        }
+        (Trace { arrivals_s: arrivals }, tenants)
+    }
 }
 
 /// Open-loop Poisson arrivals at `rate` req/s.
@@ -349,6 +389,46 @@ mod tests {
     fn flash_crowd_without_burst_is_plain_poisson_rate() {
         let t = flash_crowd(10_000, 200.0, 5.0, 1e9, 1.0, 21);
         assert!((t.offered_rate() - 200.0).abs() / 200.0 < 0.05, "{}", t.offered_rate());
+    }
+
+    #[test]
+    fn merge_is_sorted_reproducible_and_order_preserving_per_tenant() {
+        let a = poisson(400, 120.0, 11);
+        let b = diurnal(600, 40.0, 200.0, 5.0, 12);
+        let (m1, t1) = Trace::merge(&[(0, &a), (1, &b)]);
+        let (m2, t2) = Trace::merge(&[(0, &a), (1, &b)]);
+        // pure function of the inputs: same seeds => bit-identical merge
+        assert_eq!(m1.arrivals_s, m2.arrivals_s);
+        assert_eq!(t1, t2);
+        assert_eq!(m1.len(), a.len() + b.len());
+        assert_eq!(t1.len(), m1.len());
+        assert!(m1.arrivals_s.windows(2).all(|w| w[1] >= w[0]));
+        // each tenant's own arrivals come back in their original order
+        let back_a: Vec<f64> = m1
+            .arrivals_s
+            .iter()
+            .zip(&t1)
+            .filter(|(_, &t)| t == 0)
+            .map(|(&s, _)| s)
+            .collect();
+        let back_b: Vec<f64> = m1
+            .arrivals_s
+            .iter()
+            .zip(&t1)
+            .filter(|(_, &t)| t == 1)
+            .map(|(&s, _)| s)
+            .collect();
+        assert_eq!(back_a, a.arrivals_s);
+        assert_eq!(back_b, b.arrivals_s);
+    }
+
+    #[test]
+    fn merge_breaks_ties_by_tenant_id() {
+        let x = Trace { arrivals_s: vec![1.0, 2.0] };
+        let y = Trace { arrivals_s: vec![1.0, 2.0] };
+        // tenant 2 listed first, tenant 1 second: ties still order 1 < 2
+        let (_, tags) = Trace::merge(&[(2, &x), (1, &y)]);
+        assert_eq!(tags, vec![1, 2, 1, 2]);
     }
 
     #[test]

@@ -54,6 +54,7 @@ pub mod report;
 pub mod runtime;
 pub mod sharding;
 pub mod sim;
+pub mod tenancy;
 pub mod timing;
 pub mod util;
 

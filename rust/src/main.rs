@@ -40,6 +40,12 @@
 //!               [--trace-sample P] [--trace-seed S] [--trace-ring N]
 //!               [--spans-out PATH] [--p99-budget MS] [--shed-burst N]
 //!               [--metrics-out PATH] [--metrics-interval S])
+//! fcmp zoo      [--tenants NAME:NET:RATE:SLO_MS,...] [--device 7020]
+//!               [--hb 4] [--generations 40] [--chains-per-tenant 1]
+//!               [--policy jsq] [--trace poisson] [--requests 400]
+//!               [--queue 16] [--batch 4] [--wait-ms 1] [--service-us 400]
+//!               [--sim] [--fifo] [--require-consolidation]
+//!               [--require-goodput F] (+ the serve/simulate obs flags)
 //! fcmp tracereport --spans PATH (critical-path breakdown of a span file)
 //! fcmp healthreport --health PATH [--events PATH] [--require-incidents]
 //!               (serve + simulate write the journal via [--health-out PATH]
@@ -55,18 +61,19 @@ use fcmp::control::{
 use fcmp::coordinator::{
     bursty, chain_fps, diurnal, flash_crowd, group_weights, heavy_tail,
     mock_chain_service_from_fps, overlap_speedup, poisson, replica_fps, shard_service_times,
-    uniform, BatcherConfig, Deployment, MockBackend, PipelinedMockBackend, Policy, ReplicaSpec,
-    Server, Trace, WorkerId,
+    uniform, BatcherConfig, ChainGroup, Deployment, FleetSummary, MockBackend,
+    PipelinedMockBackend, Policy, ReplicaSpec, Server, Trace, WorkerId,
 };
 use fcmp::device;
 use fcmp::gals::{Ratio, StreamerConfig, StreamerSim};
-use fcmp::nn::{cnv, resnet50, CnvVariant, Network};
+use fcmp::nn::{cnv, lfc_w1a1, resnet50, sfc_w1a1, CnvVariant, Network};
 use fcmp::obs::{
     health, tracereport, AnomalyConfig, Exposition, HealthConfig, HealthJournal, ObsConfig,
 };
 use fcmp::packing::{anneal::Anneal, ffd::Ffd, Packer};
 use fcmp::sharding::{self, LinkSpec, PartitionConfig};
 use fcmp::sim::{FleetSim, SimBackend, SimConfig, SimControl};
+use fcmp::tenancy;
 use fcmp::util::args::Args;
 use fcmp::{folding, report, runtime, sim};
 use std::path::{Path, PathBuf};
@@ -1129,6 +1136,246 @@ fn cmd_simulate(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One tenant of the model zoo, parsed from `NAME:NET:RATE:SLO_MS`.
+struct ZooTenant {
+    name: String,
+    net: Network,
+    rate: f64,
+    slo_ms: f64,
+}
+
+/// Networks servable by the zoo: the CNV/RN50 catalog plus the small
+/// MLP-class nets whose memories co-pack into the headroom FCMP frees.
+fn zoo_network(name: &str) -> Option<Network> {
+    match name {
+        "sfc" | "sfc-w1a1" | "sfc_w1a1" => Some(sfc_w1a1()),
+        "lfc" | "lfc-w1a1" | "lfc_w1a1" => Some(lfc_w1a1()),
+        other => network_by_name(other),
+    }
+}
+
+fn parse_tenants(spec: &str) -> anyhow::Result<Vec<ZooTenant>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let f: Vec<&str> = part.split(':').collect();
+        anyhow::ensure!(f.len() == 4, "tenant wants NAME:NET:RATE:SLO_MS, got {part:?}");
+        let net = zoo_network(f[1])
+            .ok_or_else(|| anyhow::anyhow!("unknown network {:?} for tenant {:?}", f[1], f[0]))?;
+        let rate: f64 =
+            f[2].parse().map_err(|_| anyhow::anyhow!("bad rate {:?} for tenant {:?}", f[2], f[0]))?;
+        let slo_ms: f64 =
+            f[3].parse().map_err(|_| anyhow::anyhow!("bad SLO {:?} for tenant {:?}", f[3], f[0]))?;
+        anyhow::ensure!(
+            rate > 0.0 && slo_ms > 0.0,
+            "tenant {:?} wants positive rate and SLO",
+            f[0]
+        );
+        out.push(ZooTenant { name: f[0].to_string(), net, rate, slo_ms });
+    }
+    anyhow::ensure!(!out.is_empty(), "--tenants parsed to an empty catalog");
+    Ok(out)
+}
+
+/// Per-tenant goodput epilogue: completions inside the tenant's SLO over
+/// everything that tenant offered (accepted + shed + deadline-shed).
+fn print_zoo_goodput(tenants: &[ZooTenant], s: &FleetSummary) {
+    for ts in &s.per_tenant {
+        let name = tenants.get(ts.tenant).map(|t| t.name.as_str()).unwrap_or("?");
+        let offered = ts.submitted + ts.shed + ts.deadline_shed;
+        let frac = if offered == 0 { 1.0 } else { ts.goodput as f64 / offered as f64 };
+        println!(
+            "  goodput[{name}]: {}/{} offered inside {:.0} ms ({:.1}%)",
+            ts.goodput,
+            offered,
+            ts.slo_ms.unwrap_or(f64::INFINITY),
+            100.0 * frac
+        );
+    }
+}
+
+/// `fcmp zoo`: the multi-tenant model zoo end to end — co-pack a model
+/// catalog onto one device, deploy per-tenant chain groups behind the
+/// tenant-aware router, replay each tenant's trace merged onto the shared
+/// fleet (threaded server by default, `--sim` for the virtual clock), and
+/// report per-tenant SLO attainment. `--fifo` zeroes the service estimate
+/// so admission keeps every request a queue slot can hold (the
+/// deadline-aware arm's baseline).
+fn cmd_zoo(a: &Args) -> anyhow::Result<()> {
+    // default catalog: CNV-W2A2 + SFC on one 7020 — co-packed it fits
+    // (≈260/280 BRAM18), unpacked it overflows (≈309), and a dedicated
+    // fleet needs a board per tenant: packing-enabled consolidation
+    let tenants = parse_tenants(a.get_or("tenants", "cnv:cnv-w2a2:250:250,sfc:sfc-w1a1:400:100"))?;
+    let dev = device::by_name(a.get_or("device", "7020"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+    let seed = cfg_seed(a);
+
+    // layer 1: one packing run over the union of every tenant's columns
+    let nets: Vec<&Network> = tenants.iter().map(|t| &t.net).collect();
+    let hb = a.get_usize("hb", 4);
+    let generations = a.get_usize("generations", 40);
+    let cp = tenancy::co_pack(&nets, &dev, hb, generations, seed);
+    let dedicated = tenancy::dedicated_devices(&nets, &dev, hb, generations, seed);
+    println!(
+        "zoo catalog on {} ({} BRAM18), engine {}:",
+        cp.device, cp.device_brams, cp.report.engine
+    );
+    for (t, tn) in tenants.iter().enumerate() {
+        println!(
+            "  tenant {t} ({}): {} — {} column(s), {:.1} packed BRAM18 share, \
+             {:.0} req/s, SLO {:.0} ms",
+            tn.name,
+            tn.net.name,
+            cp.unpack_tenant(t).len(),
+            cp.tenant_brams(t),
+            tn.rate,
+            tn.slo_ms
+        );
+    }
+    println!(
+        "co-packed: {} weight + {} excluded + {} activation = {} BRAM18 ({}) | \
+         direct {} ({}) | dedicated fleet: {} device(s)",
+        cp.weight_brams,
+        cp.excluded_brams,
+        cp.activation_brams,
+        cp.total_brams(),
+        if cp.fits() { "fits" } else { "OVERFLOWS" },
+        cp.total_direct_brams(),
+        if cp.fits_direct() { "fits" } else { "overflows" },
+        dedicated
+    );
+    if a.has_flag("require-consolidation") {
+        anyhow::ensure!(
+            cp.fits(),
+            "--require-consolidation: co-packed catalog overflows {}",
+            cp.device
+        );
+        anyhow::ensure!(
+            dedicated > 1,
+            "--require-consolidation: the dedicated baseline also fits one device"
+        );
+    }
+
+    // layer 2: per-tenant chain groups behind one tenant-aware router
+    let chains = a.get_usize("chains-per-tenant", 1).max(1);
+    let mut groups = Vec::with_capacity(tenants.len() * chains);
+    for t in 0..tenants.len() {
+        for _ in 0..chains {
+            groups.push(ChainGroup::new(1).for_tenant(t));
+        }
+    }
+    let n_groups = groups.len();
+    let policy = Policy::by_name(a.get_or("policy", "jsq"), vec![1.0; n_groups])
+        .ok_or_else(|| anyhow::anyhow!("unknown policy (round-robin|jsq|weighted)"))?;
+    let policy_name = policy.name();
+    let plan = Deployment { groups, ..Deployment::default() }
+        .with_policy(policy)
+        .with_batcher(BatcherConfig {
+            max_batch: a.get_usize("batch", 4),
+            max_wait: Duration::from_secs_f64(a.get_f64("wait-ms", 1.0) * 1e-3),
+        })
+        .with_queue_depth(a.get_usize("queue", 16))
+        .with_window(a.get_usize("window", 2).max(1));
+
+    // flat mock service: the zoo measures routing/admission isolation,
+    // not device calibration (serve/shard own that)
+    let service = Duration::from_secs_f64(a.get_f64("service-us", 400.0) * 1e-6);
+    let group_svc: Vec<Duration> = vec![service; n_groups];
+
+    // layer 3: deadline admission from each tenant's SLO budget; --fifo
+    // zeroes the estimate, keeping only already-expired sheds
+    let budgets: Vec<Option<Duration>> =
+        tenants.iter().map(|t| Some(Duration::from_secs_f64(t.slo_ms * 1e-3))).collect();
+    let est: Vec<Duration> = if a.has_flag("fifo") {
+        vec![Duration::ZERO; n_groups]
+    } else {
+        group_svc.clone()
+    };
+
+    // one trace per tenant (per-tenant rate and seed), merged
+    // deterministically with per-arrival tenant tags
+    let n = a.get_usize("requests", 400);
+    let trace_name = a.get_or("trace", "poisson");
+    let mut parts: Vec<(usize, Trace)> = Vec::with_capacity(tenants.len());
+    for (t, tn) in tenants.iter().enumerate() {
+        parts.push((t, trace_by_name(trace_name, n, tn.rate, seed + t as u64)?));
+    }
+    let refs: Vec<(usize, &Trace)> = parts.iter().map(|(t, tr)| (*t, tr)).collect();
+    let (merged, tags) = Trace::merge(&refs);
+    println!(
+        "fleet: {} tenant(s) x {chains} group(s), policy {policy_name}, trace {trace_name}, \
+         {} merged arrival(s) ({:.0} req/s offered){}",
+        tenants.len(),
+        merged.len(),
+        merged.offered_rate(),
+        if a.has_flag("fifo") { ", fifo admission" } else { ", deadline admission" }
+    );
+
+    let ocfg = obs_by_args(a);
+    let hcfg = health_by_args(a);
+    let input_len = a.get_usize("input-len", 8);
+    let summary = if a.has_flag("sim") {
+        let cfg = SimConfig { input_len, seed, control: None, obs: ocfg, health: hcfg };
+        let backends: Vec<Vec<SimBackend>> = group_svc
+            .iter()
+            .map(|&s| vec![SimBackend::Mock { base: Duration::ZERO, per_item: s }])
+            .collect();
+        let mut fs = FleetSim::new(plan, backends, cfg);
+        fs.set_tenancy(budgets, est);
+        if let Some(e) = exposition_by_args(a) {
+            fs.set_exposition(e);
+        }
+        let sim_obs = fs.obs().clone();
+        let rep = fs.run_tagged(&merged, &tags);
+        println!(
+            "result: submitted {} shed {} deadline-shed {} completed {} in {:.3} simulated s",
+            rep.submitted, rep.shed, rep.deadline_shed, rep.completed, rep.sim_seconds
+        );
+        println!("{}", rep.summary);
+        print_obs_summary(&sim_obs);
+        print_health_summary(a, rep.health.as_ref(), &rep.events);
+        rep.summary
+    } else {
+        let gs = group_svc.clone();
+        let mut srv = Server::deploy_with_obs(
+            move |id: WorkerId| MockBackend::with_service(Duration::ZERO, gs[id.group]),
+            plan,
+            &ocfg,
+        );
+        if let Some(e) = exposition_by_args(a) {
+            srv.set_exposition(e);
+        }
+        if let Some(h) = hcfg {
+            srv.set_health(h);
+        }
+        srv.set_tenancy(budgets, est);
+        let fm = srv.replay_tagged(&merged, &tags, input_len, seed);
+        srv.shutdown();
+        let summary = fm.summary();
+        println!("{summary}");
+        print_obs_summary(srv.obs());
+        // zoo runs no control loop: breaches correlate as unresponded
+        let hj = srv.take_health();
+        print_health_summary(a, hj.as_ref(), &[]);
+        summary
+    };
+    print_zoo_goodput(&tenants, &summary);
+    if let Some(min) = a.get("require-goodput") {
+        let min: f64 = min.parse().map_err(|_| anyhow::anyhow!("bad --require-goodput {min:?}"))?;
+        for ts in &summary.per_tenant {
+            let offered = ts.submitted + ts.shed + ts.deadline_shed;
+            let frac = if offered == 0 { 1.0 } else { ts.goodput as f64 / offered as f64 };
+            anyhow::ensure!(
+                frac >= min,
+                "--require-goodput: tenant {} reached {:.3} < {min}",
+                ts.tenant,
+                frac
+            );
+        }
+        println!("goodput OK: every tenant >= {min}");
+    }
+    Ok(())
+}
+
 /// `fcmp tracereport`: critical-path breakdown of a span trace file —
 /// where each sampled request's latency went (stage-queue wait, batch
 /// gather, backend compute, inter-stage link) per chain group and stage.
@@ -1307,6 +1554,20 @@ subcommands:
           triggers --p99-budget MS / --shed-burst N, plus shutdown), and
           --metrics-out PATH [--metrics-interval S] exposes live
           Prometheus-text + JSONL metric snapshots
+  zoo     multi-tenant model zoo: co-pack a model catalog onto one device
+          (--tenants NAME:NET:RATE:SLO_MS,... --device 7020 [--hb 4]
+          [--generations 40]; --require-consolidation fails unless the
+          catalog fits co-packed while the dedicated baseline needs >1
+          device), then serve every tenant on one shared fleet with
+          per-tenant routing ([--chains-per-tenant N] [--policy jsq]),
+          deadline admission from each tenant's SLO budget (--fifo for
+          the keep-everything baseline), per-tenant traces merged
+          deterministically ([--trace poisson|...] [--requests N] per
+          tenant at its own rate) and per-tenant summary + goodput
+          ([--require-goodput F] gates CI); --sim runs the identical
+          semantics on the discrete-event virtual clock; takes the
+          serve/simulate observability flags (--health-out, --spans-out,
+          --metrics-out, ...)
   tracereport  critical-path breakdown of a span trace (--spans PATH):
           per-(group, stage) queue / gather / compute / link time table
   healthreport  incident attribution over a health journal (--health PATH
@@ -1331,6 +1592,7 @@ fn main() {
         Some("shard") => cmd_shard(&args),
         Some("autoscale") => cmd_autoscale(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("zoo") => cmd_zoo(&args),
         Some("tracereport") => cmd_tracereport(&args),
         Some("healthreport") => cmd_healthreport(&args),
         Some("dse") => cmd_dse(&args),

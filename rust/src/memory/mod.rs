@@ -64,6 +64,7 @@ impl WeightBuffer {
                     width_bits: w,
                     depth: self.depth,
                     slr: self.slr,
+                    tenant: 0,
                 }
             })
             .collect()
@@ -71,6 +72,12 @@ impl WeightBuffer {
 }
 
 /// A packable column slice (≤ 36 bits wide).
+///
+/// `tenant` tags which network of a co-packed catalog the slice belongs
+/// to ([`crate::tenancy`]). Bins don't care where a column came from, so
+/// every packing engine ignores the tag — single-tenant packings are
+/// bit-identical whatever the tag says — and it exists purely so a
+/// multi-network packing can be unpacked per tenant afterwards.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackItem {
     pub id: usize,
@@ -78,6 +85,7 @@ pub struct PackItem {
     pub width_bits: u64,
     pub depth: u64,
     pub slr: usize,
+    pub tenant: usize,
 }
 
 impl PackItem {
@@ -200,6 +208,7 @@ pub fn activation_items(net: &Network, n_slrs: usize) -> Vec<PackItem> {
                 width_bits: width,
                 depth,
                 slr: (si / per_slr).min(n_slrs - 1),
+                tenant: 0,
             });
         }
     }

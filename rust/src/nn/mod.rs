@@ -14,7 +14,7 @@ pub mod mlp;
 pub mod resnet;
 
 pub use cnv::{cnv, CnvVariant};
-pub use mlp::{lfc_w1a1, sfc_w1a1};
+pub use mlp::{lfc_w1a1, mlp, sfc_w1a1};
 pub use resnet::{resnet50, resnet50_scaled};
 
 /// Quantized-layer kind, for resource modelling.

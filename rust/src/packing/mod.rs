@@ -189,6 +189,7 @@ pub(crate) fn test_items(specs: &[(u64, u64)]) -> Vec<PackItem> {
             width_bits: w,
             depth: d,
             slr: 0,
+            tenant: 0,
         })
         .collect()
 }

@@ -47,7 +47,7 @@ use crate::control::{
     Autoscaler, AutoscalerConfig, ControlEvent, ControlEventKind, ScaleDecision, SignalConfig,
     SignalCtx, SignalTap, SloConfig, SloController,
 };
-use crate::coordinator::dispatch::{fallback_order, preferred_group};
+use crate::coordinator::dispatch::{deadline_feasible, fallback_order, preferred_group};
 use crate::coordinator::{
     chain_fps, BatcherConfig, Completion, Deployment, FleetMetrics, FleetSummary, Policy,
     Scheduler, Trace,
@@ -192,6 +192,9 @@ pub struct SimReport {
     pub sim_seconds: f64,
     /// Events processed by the loop.
     pub events_processed: u64,
+    /// Requests shed up front by the tenant deadline-feasibility rule
+    /// (disjoint from `shed`, which counts queue-full rejections).
+    pub deadline_shed: usize,
     /// Health journal (downsampled cells + alert transitions) when
     /// [`SimConfig::health`] was set; `None` otherwise.
     pub health: Option<HealthJournal>,
@@ -325,6 +328,24 @@ pub struct FleetSim {
     window: usize,
     cfg: SimConfig,
 
+    /// Per-slot tenant ids from the plan (standby slots join tenant 0).
+    slot_tenants: Vec<usize>,
+    /// Per-tenant completion budgets (index = tenant id, `None` =
+    /// best-effort), mirroring [`crate::coordinator::Server::set_tenancy`].
+    tenant_budgets: Vec<Option<Duration>>,
+    /// Per-slot estimated per-request service time (ns) feeding the
+    /// admission deadline rule; zero = shed only already-expired.
+    est_service_ns: Vec<u64>,
+    /// Per-tenant routable member slots, router order — rebuilt on every
+    /// scale event, like the threaded router's tenant tables.
+    tenant_members: Vec<Vec<usize>>,
+    tenant_schedulers: Vec<Scheduler>,
+    /// Tenant routing active (tagged run or `set_tenancy` called).
+    tenancy: bool,
+    /// Per-arrival tenant tags for the current run (empty = all tenant 0).
+    tags: Vec<usize>,
+    deadline_shed: usize,
+
     q: EventQueue<Ev>,
     now: u64,
     rng: Rng,
@@ -393,6 +414,9 @@ impl FleetSim {
         }
         let active: Vec<usize> = (0..plan.groups.len()).collect();
         let standby: Vec<usize> = (plan.groups.len()..groups.len()).collect();
+        let mut slot_tenants: Vec<usize> =
+            (0..plan.groups.len()).map(|g| plan.tenant_of(g)).collect();
+        slot_tenants.resize(groups.len(), 0);
         let shape: Vec<usize> = groups.iter().map(|g| g.workers.len()).collect();
         let scheduler = Self::build_scheduler(&plan.policy, &groups, &active);
         let (tap, scaler, slo, trailing, tick_ns) = match &cfg.control {
@@ -422,11 +446,20 @@ impl FleetSim {
             .iter()
             .map(|g| g.workers.iter().map(|_| obs.recorder().register()).collect())
             .collect();
+        let est_service_ns = vec![0; groups.len()];
         FleetSim {
             queue_depth: plan.queue_depth,
             window: plan.window,
             policy: plan.policy.clone(),
             scheduler,
+            slot_tenants,
+            tenant_budgets: Vec::new(),
+            est_service_ns,
+            tenant_members: Vec::new(),
+            tenant_schedulers: Vec::new(),
+            tenancy: false,
+            tags: Vec::new(),
+            deadline_shed: 0,
             groups,
             active,
             standby,
@@ -500,6 +533,42 @@ impl FleetSim {
         self.exposition = Some(e);
     }
 
+    /// Mirror of [`crate::coordinator::Server::set_tenancy`]: install
+    /// per-tenant completion budgets (index = tenant id; `None` =
+    /// best-effort) and a per-slot estimated service time driving the
+    /// [`deadline_feasible`] admission rule. Missing slots estimate
+    /// zero, which sheds only requests whose deadline already passed.
+    pub fn set_tenancy(&mut self, budgets: Vec<Option<Duration>>, est_service: Vec<Duration>) {
+        self.tenant_budgets = budgets;
+        self.est_service_ns = est_service.iter().map(|&d| ns(d)).collect();
+        self.est_service_ns.resize(self.groups.len(), 0);
+        self.tenancy = true;
+        self.rebuild_tenant_state();
+    }
+
+    /// Recompute per-tenant member lists and schedulers over the
+    /// routable set — the simulated analogue of the threaded router's
+    /// tenant-table rebuild. Tenants with no routable group keep an
+    /// empty member list and shed every arrival.
+    fn rebuild_tenant_state(&mut self) {
+        let n_tenants = self
+            .active
+            .iter()
+            .map(|&gi| self.slot_tenants[gi] + 1)
+            .max()
+            .unwrap_or(1)
+            .max(self.tenant_budgets.len());
+        let mut members = vec![Vec::new(); n_tenants];
+        for &gi in &self.active {
+            members[self.slot_tenants[gi]].push(gi);
+        }
+        self.tenant_schedulers = members
+            .iter()
+            .map(|m| Scheduler::new(self.policy.clone(), m.len().max(1)))
+            .collect();
+        self.tenant_members = members;
+    }
+
     fn build_scheduler(policy: &Policy, groups: &[SimGroup], active: &[usize]) -> Scheduler {
         let policy = match policy {
             Policy::Weighted(_) => {
@@ -514,7 +583,31 @@ impl FleetSim {
     /// `Server::replay`: one synthetic request per arrival, admission
     /// through the shared dispatch seam, then drain (control ticks keep
     /// firing) plus the configured trailing ticks.
-    pub fn run(mut self, trace: &Trace) -> SimReport {
+    pub fn run(self, trace: &Trace) -> SimReport {
+        self.run_tagged(trace, &[])
+    }
+
+    /// Run like [`FleetSim::run`], with `tags[i]` naming the tenant of
+    /// arrival `i` (missing tags default to tenant 0). A tagged run —
+    /// or any run after [`FleetSim::set_tenancy`] — routes each arrival
+    /// only to its tenant's groups, applies the deadline-feasibility
+    /// shed rule, and splits [`FleetMetrics`] per tenant, mirroring
+    /// `Server::replay_tagged`.
+    pub fn run_tagged(mut self, trace: &Trace, tags: &[usize]) -> SimReport {
+        if !tags.is_empty() {
+            self.tenancy = true;
+        }
+        if self.tenancy {
+            self.tags = tags.to_vec();
+            self.rebuild_tenant_state();
+            self.fm.set_tenants(self.slot_tenants.clone());
+            self.fm.set_tenant_slos_ms(
+                self.tenant_budgets
+                    .iter()
+                    .map(|b| b.map_or(f64::NAN, |d| d.as_secs_f64() * 1e3))
+                    .collect(),
+            );
+        }
         self.trace = trace.arrivals_s.iter().map(|&s| (s.max(0.0) * 1e9).round() as u64).collect();
         self.done = vec![false; self.trace.len()];
         self.fm.start();
@@ -575,6 +668,7 @@ impl FleetSim {
             max_groups_seen: self.max_groups_seen,
             submitted: self.accepted,
             shed: self.shed,
+            deadline_shed: self.deadline_shed,
             completed: self.completed,
             sim_seconds: secs(self.now),
             events_processed: self.events_processed,
@@ -628,7 +722,23 @@ impl FleetSim {
         }
         // head sampling at submit, same sampler + seed as the server:
         // the same request ids are traced by both drivers
-        let mut span = self.obs.sample(idx as u64);
+        let span = self.obs.sample(idx as u64);
+        if self.tenancy {
+            self.admit_tenant(idx, sum, span);
+        } else {
+            self.admit(idx, sum, span);
+        }
+        if idx + 1 < self.trace.len() {
+            let t = self.trace[idx + 1].max(self.now);
+            self.q.schedule(t, Ev::Arrival(idx + 1));
+        } else {
+            self.arrivals_done = true;
+        }
+    }
+
+    /// Untenanted admission over the whole routable set (the original
+    /// single-tenant path, untouched for bit-compatibility).
+    fn admit(&mut self, idx: usize, sum: f32, mut span: Option<Box<RequestSpan>>) {
         let n = self.active.len();
         let first = preferred_group(&self.scheduler, n, |i| self.group_load(self.active[i]));
         let mut placed = self.try_admit(self.active[first], idx as u64, sum, &mut span);
@@ -654,11 +764,70 @@ impl FleetSim {
                 self.obs.shed(span.take(), 0);
             }
         }
-        if idx + 1 < self.trace.len() {
-            let t = self.trace[idx + 1].max(self.now);
-            self.q.schedule(t, Ev::Arrival(idx + 1));
-        } else {
-            self.arrivals_done = true;
+    }
+
+    /// Tenant-scoped admission, mirroring `RouterCore::dispatch_tenant`
+    /// on the threaded server: route only over the arrival's tenant
+    /// groups, and shed up front — before touching any queue — when the
+    /// stamped deadline is infeasible even for the least-loaded member.
+    /// The feasibility test is the same integer expression
+    /// ([`deadline_feasible`]) in both time domains, so the two drivers
+    /// make identical shed decisions on identical load states.
+    fn admit_tenant(&mut self, idx: usize, sum: f32, mut span: Option<Box<RequestSpan>>) {
+        let tenant = self.tags.get(idx).copied().unwrap_or(0);
+        let members: Vec<usize> = self.tenant_members.get(tenant).cloned().unwrap_or_default();
+        if members.is_empty() {
+            // the threaded server reports Closed here; the sim has no
+            // error channel, so the arrival counts as a shed
+            self.shed += 1;
+            self.fm.record_shed_for(tenant);
+            self.tap.record_shed();
+            self.obs.shed(span.take(), 0);
+            return;
+        }
+        if let Some(budget) = self.tenant_budgets.get(tenant).copied().flatten() {
+            let (min_load, best) = members
+                .iter()
+                .map(|&g| (self.group_load(g), g))
+                .min()
+                .expect("members checked non-empty");
+            let est = self.est_service_ns.get(best).copied().unwrap_or(0);
+            // the deadline is arrival + budget and the check runs at the
+            // arrival instant, so the remaining slack is the full budget
+            let remaining = i64::try_from(ns(budget)).unwrap_or(i64::MAX);
+            if !deadline_feasible(remaining, min_load, est) {
+                self.deadline_shed += 1;
+                self.fm.record_deadline_shed(tenant);
+                self.tap.record_shed();
+                self.obs.shed(span.take(), 0);
+                return;
+            }
+        }
+        let n = members.len();
+        let first =
+            preferred_group(&self.tenant_schedulers[tenant], n, |i| self.group_load(members[i]));
+        let mut placed = self.try_admit(members[first], idx as u64, sum, &mut span);
+        if placed.is_none() {
+            for i in fallback_order(first, n, |i| self.group_load(members[i])) {
+                placed = self.try_admit(members[i], idx as u64, sum, &mut span);
+                if placed.is_some() {
+                    break;
+                }
+            }
+        }
+        match placed {
+            Some(gi) => {
+                self.accepted += 1;
+                self.fm.record_submitted_for(tenant);
+                self.tap.record_submitted();
+                self.advance(gi, 0);
+            }
+            None => {
+                self.shed += 1;
+                self.fm.record_shed_for(tenant);
+                self.tap.record_shed();
+                self.obs.shed(span.take(), 0);
+            }
         }
     }
 
@@ -1069,6 +1238,9 @@ impl FleetSim {
             self.active.push(gi);
         }
         self.scheduler = Self::build_scheduler(&self.policy, &self.groups, &self.active);
+        if self.tenancy {
+            self.rebuild_tenant_state();
+        }
         self.max_groups_seen = self.max_groups_seen.max(self.active.len());
         take
     }
@@ -1097,6 +1269,9 @@ impl FleetSim {
             self.standby.push(gi);
         }
         self.scheduler = Self::build_scheduler(&self.policy, &self.groups, &self.active);
+        if self.tenancy {
+            self.rebuild_tenant_state();
+        }
         take
     }
 }

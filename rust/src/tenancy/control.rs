@@ -1,0 +1,299 @@
+//! Per-tenant control-plane isolation: one [`SignalTap`], one
+//! [`SeriesStore`] and one pair of [`BurnAlerter`]s *per tenant*, so a
+//! flash crowd burning tenant A's error budget pages tenant A's
+//! on-call and nobody else's. The shared-fleet control loop keeps its
+//! single fleet-wide tap for actuation (autoscale, batching retune);
+//! this layer is the per-tenant *observability* split that the zoo's
+//! SLO accounting hangs off.
+
+use std::time::Duration;
+
+use crate::control::{ControlSignals, SignalConfig, SignalTap, SloController};
+use crate::obs::{
+    BurnAlerter, BurnRule, HealthAlert, Series, SeriesConfig, SeriesStore, Severity, SloSignal,
+};
+use crate::util::stats::percentile;
+
+/// One tenant's SLO contract, as the control plane sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantSlo {
+    /// End-to-end p99 latency budget, milliseconds.
+    pub slo_ms: f64,
+    /// Allowed shed fraction of offered traffic.
+    pub shed_budget: f64,
+    /// Allowed fraction of completions landing in late intervals.
+    pub late_budget: f64,
+}
+
+impl Default for TenantSlo {
+    fn default() -> TenantSlo {
+        TenantSlo { slo_ms: 50.0, shed_budget: 0.02, late_budget: 0.05 }
+    }
+}
+
+/// Raw per-tick counts for one tenant, reset at every tick close.
+#[derive(Default)]
+struct TickCounts {
+    submitted: u64,
+    shed: u64,
+    lat_ms: Vec<f64>,
+}
+
+/// An alert transition attributed to a tenant.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantAlert {
+    /// Which tenant's budget moved.
+    pub tenant: usize,
+    /// The underlying burn-rate transition.
+    pub alert: HealthAlert,
+}
+
+/// Per-tenant control surfaces over a shared fleet: each tenant gets
+/// its own signal window, downsampled series and burn-rate alerting,
+/// fed from that tenant's admission/completion stream only. Tenants
+/// cannot observe — or page on — each other's traffic.
+pub struct TenantControl {
+    slos: Vec<TenantSlo>,
+    taps: Vec<SignalTap>,
+    stores: Vec<SeriesStore>,
+    shed_alerters: Vec<BurnAlerter>,
+    late_alerters: Vec<BurnAlerter>,
+    cur: Vec<TickCounts>,
+    last: Vec<Option<ControlSignals>>,
+    alerts: Vec<TenantAlert>,
+}
+
+impl TenantControl {
+    /// Build one control surface per entry of `slos`, with every tenant
+    /// evaluating the same `rules` against its own budgets.
+    pub fn new(slos: &[TenantSlo], signal: SignalConfig, rules: &[BurnRule]) -> TenantControl {
+        // short sub-second cells: zoo runs are seconds long, and each
+        // tenant's store only has to cover the rules' longest window
+        let series = SeriesConfig { resolutions: vec![(0.05, 8192)], persist_res_s: 0.05 };
+        let n = slos.len();
+        TenantControl {
+            slos: slos.to_vec(),
+            taps: (0..n).map(|_| SignalTap::new(signal)).collect(),
+            stores: (0..n).map(|_| SeriesStore::new(&series)).collect(),
+            shed_alerters: slos
+                .iter()
+                .map(|s| {
+                    BurnAlerter::new(
+                        SloSignal::ShedRate,
+                        Series::Shed,
+                        Series::Offered,
+                        s.shed_budget,
+                        rules.to_vec(),
+                    )
+                })
+                .collect(),
+            late_alerters: slos
+                .iter()
+                .map(|s| {
+                    BurnAlerter::new(
+                        SloSignal::LatencyP99,
+                        Series::Late,
+                        Series::Completed,
+                        s.late_budget,
+                        rules.to_vec(),
+                    )
+                })
+                .collect(),
+            cur: (0..n).map(|_| TickCounts::default()).collect(),
+            last: vec![None; n],
+            alerts: Vec::new(),
+        }
+    }
+
+    /// Tenants under control.
+    pub fn len(&self) -> usize {
+        self.slos.len()
+    }
+
+    /// True when built over an empty catalog.
+    pub fn is_empty(&self) -> bool {
+        self.slos.is_empty()
+    }
+
+    /// Count one accepted submission for `tenant` in the open tick.
+    pub fn record_submitted(&mut self, tenant: usize) {
+        if let Some(c) = self.cur.get_mut(tenant) {
+            c.submitted += 1;
+            self.taps[tenant].record_submitted();
+        }
+    }
+
+    /// Count one shed (queue-full or deadline) for `tenant`.
+    pub fn record_shed(&mut self, tenant: usize) {
+        if let Some(c) = self.cur.get_mut(tenant) {
+            c.shed += 1;
+            self.taps[tenant].record_shed();
+        }
+    }
+
+    /// Record one completion latency for `tenant`.
+    pub fn record_completion(&mut self, tenant: usize, latency: Duration) {
+        if let Some(c) = self.cur.get_mut(tenant) {
+            c.lat_ms.push(latency.as_secs_f64() * 1e3);
+            self.taps[tenant].record_completion(latency);
+        }
+    }
+
+    /// Close every tenant's tick at `now_ns`: fold the tick's counts
+    /// into that tenant's series, evaluate its burn rules (appending
+    /// attributed transitions to the journal), and cache its windowed
+    /// signals. One tenant's counts never touch another's store.
+    pub fn tick(&mut self, now_ns: u64) {
+        for t in 0..self.slos.len() {
+            let counts = std::mem::take(&mut self.cur[t]);
+            let store = &mut self.stores[t];
+            store.record(Series::Offered, now_ns, (counts.submitted + counts.shed) as f64);
+            store.record(Series::Shed, now_ns, counts.shed as f64);
+            store.record(Series::Completed, now_ns, counts.lat_ms.len() as f64);
+            if !counts.lat_ms.is_empty() {
+                let mut lat = counts.lat_ms;
+                lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let p99 = percentile(&lat, 99.0);
+                store.record(Series::P99Ms, now_ns, p99);
+                let late = if p99 > self.slos[t].slo_ms { lat.len() } else { 0 };
+                store.record(Series::Late, now_ns, late as f64);
+            } else {
+                store.record(Series::Late, now_ns, 0.0);
+            }
+            let mut out = Vec::new();
+            self.shed_alerters[t].eval(store, now_ns, &mut out);
+            self.late_alerters[t].eval(store, now_ns, &mut out);
+            self.alerts.extend(out.into_iter().map(|alert| TenantAlert { tenant: t, alert }));
+            self.last[t] = Some(self.taps[t].tick());
+        }
+    }
+
+    /// The tenant's most recent windowed signals (`None` before the
+    /// first tick).
+    pub fn signals(&self, tenant: usize) -> Option<&ControlSignals> {
+        self.last.get(tenant).and_then(|s| s.as_ref())
+    }
+
+    /// Is any of `tenant`'s burn rules currently firing?
+    pub fn firing(&self, tenant: usize) -> bool {
+        self.shed_alerters.get(tenant).is_some_and(BurnAlerter::any_firing)
+            || self.late_alerters.get(tenant).is_some_and(BurnAlerter::any_firing)
+    }
+
+    /// Has `tenant` ever fired a page-severity alert?
+    pub fn paged(&self, tenant: usize) -> bool {
+        self.alerts
+            .iter()
+            .any(|a| a.tenant == tenant && a.alert.firing && a.alert.severity == Severity::Page)
+    }
+
+    /// The attributed alert journal, in transition order.
+    pub fn alerts(&self) -> &[TenantAlert] {
+        &self.alerts
+    }
+
+    /// Per-tenant batching retune: adjust `cur` against the tenant's own
+    /// windowed p99 with a [`SloController`] bound to that tenant's
+    /// latency budget — tenant A's congestion never shrinks tenant B's
+    /// batching window.
+    pub fn adjust_for(
+        &self,
+        tenant: usize,
+        slo: &SloController,
+        cur: crate::coordinator::BatcherConfig,
+    ) -> crate::coordinator::BatcherConfig {
+        match self.signals(tenant) {
+            Some(sig) => slo.adjust(sig.p99_ms, cur),
+            None => cur,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TICK_NS: u64 = 50_000_000; // 50 ms, matching the series cell
+
+    fn rules() -> Vec<BurnRule> {
+        // compressed multiwindow rules sized for second-scale tests
+        vec![
+            BurnRule { severity: Severity::Page, long_s: 1.0, short_s: 0.25, burn: 10.0 },
+            BurnRule { severity: Severity::Ticket, long_s: 2.0, short_s: 0.5, burn: 4.0 },
+        ]
+    }
+
+    #[test]
+    fn flash_crowd_pages_only_its_own_tenant() {
+        let slos = [TenantSlo::default(), TenantSlo::default()];
+        let mut tc = TenantControl::new(&slos, SignalConfig::default(), &rules());
+        // 3 s: tenant 0 sheds half its traffic (burn 25 ≫ 10), tenant 1
+        // is healthy the whole time
+        for k in 1..=60u64 {
+            for _ in 0..20 {
+                tc.record_submitted(0);
+            }
+            for _ in 0..20 {
+                tc.record_shed(0);
+            }
+            for _ in 0..20 {
+                tc.record_submitted(1);
+                tc.record_completion(1, Duration::from_millis(5));
+            }
+            tc.tick(k * TICK_NS);
+        }
+        assert!(tc.paged(0), "tenant 0's shed burn must page: {:?}", tc.alerts());
+        assert!(!tc.firing(1), "tenant 1 must stay quiet");
+        assert!(
+            tc.alerts().iter().all(|a| a.tenant == 0),
+            "no alert may attribute to the healthy tenant: {:?}",
+            tc.alerts()
+        );
+    }
+
+    #[test]
+    fn late_completions_burn_the_latency_budget_per_tenant() {
+        let slos = [
+            TenantSlo { slo_ms: 10.0, ..TenantSlo::default() },
+            TenantSlo { slo_ms: 200.0, ..TenantSlo::default() },
+        ];
+        let mut tc = TenantControl::new(&slos, SignalConfig::default(), &rules());
+        // both tenants complete everything at ~50 ms: late for tenant
+        // 0's 10 ms budget, comfortably inside tenant 1's 200 ms
+        for k in 1..=60u64 {
+            for _ in 0..20 {
+                tc.record_submitted(0);
+                tc.record_completion(0, Duration::from_millis(50));
+                tc.record_submitted(1);
+                tc.record_completion(1, Duration::from_millis(50));
+            }
+            tc.tick(k * TICK_NS);
+        }
+        assert!(
+            tc.alerts().iter().any(|a| a.tenant == 0
+                && a.alert.signal == SloSignal::LatencyP99
+                && a.alert.firing),
+            "tenant 0's latency budget must fire: {:?}",
+            tc.alerts()
+        );
+        assert!(!tc.firing(1), "tenant 1's larger budget absorbs 50 ms completions");
+    }
+
+    #[test]
+    fn windowed_signals_split_per_tenant() {
+        let slos = [TenantSlo::default(), TenantSlo::default()];
+        let mut tc = TenantControl::new(&slos, SignalConfig { window_ticks: 1 }, &rules());
+        for _ in 0..9 {
+            tc.record_submitted(0);
+        }
+        tc.record_shed(0);
+        tc.record_submitted(1);
+        tc.tick(TICK_NS);
+        let s0 = tc.signals(0).unwrap();
+        let s1 = tc.signals(1).unwrap();
+        assert_eq!(s0.offered, 10);
+        assert!((s0.shed_rate - 0.1).abs() < 1e-12);
+        assert_eq!(s1.offered, 1);
+        assert_eq!(s1.shed, 0);
+    }
+}

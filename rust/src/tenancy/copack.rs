@@ -1,0 +1,203 @@
+//! Multi-network co-packing: one FCMP run over a tagged item set.
+//!
+//! The grouping-GA formulation (Kroes et al., arXiv:2003.12449) does not
+//! care which network a memory partition came from — a bin is feasible or
+//! not purely on column widths, depths and SLR locality. Co-packing a
+//! model catalog is therefore *the same optimization* over the union of
+//! every tenant's column slices, each tagged with its tenant id so the
+//! shared packing can be unpacked per tenant afterwards. The payoff is
+//! the paper's headroom argument made concrete: FCMP frees OCM that the
+//! dataflow topology would otherwise waste, and the freed OCM is spent
+//! hosting a second tenant's network on the same device.
+
+use crate::device::Device;
+use crate::memory::{self, PackItem};
+use crate::nn::Network;
+use crate::packing::{self, Constraints, PackReport, Packer, Packing};
+
+/// Outcome of co-packing a catalog of networks onto one device.
+pub struct CoPack {
+    /// Tenant id → network name (catalog order).
+    pub names: Vec<String>,
+    /// The union item set: every tenant's weight columns, tenant-tagged,
+    /// with globally unique ids in catalog order.
+    pub items: Vec<PackItem>,
+    /// The shared packing over `items`.
+    pub packing: Packing,
+    /// Engine report for the shared packing.
+    pub report: PackReport,
+    /// Packed BRAM18 cost of all weight buffers (== `report.brams`).
+    pub weight_brams: u64,
+    /// Weights of packing-excluded layers (first/last — §V keeps them in
+    /// dedicated RAM), summed over the catalog.
+    pub excluded_brams: u64,
+    /// Activation + FIFO BRAM18 cost summed over the catalog, with the
+    /// conservative HLS FIFO allocation halved — the §V porting
+    /// convention, same as the sharding evaluator's.
+    pub activation_brams: u64,
+    /// Direct (unpacked) BRAM18 cost of the same catalog — what the
+    /// device would need without FCMP.
+    pub direct_brams: u64,
+    /// Device BRAM18 capacity the feasibility verdict is against.
+    pub device_brams: u64,
+    /// Device name (for reports).
+    pub device: &'static str,
+}
+
+impl CoPack {
+    /// Total BRAM18 demand of the co-packed catalog.
+    pub fn total_brams(&self) -> u64 {
+        self.weight_brams + self.excluded_brams + self.activation_brams
+    }
+
+    /// Total BRAM18 demand without packing (the consolidation baseline).
+    pub fn total_direct_brams(&self) -> u64 {
+        self.direct_brams + self.excluded_brams + self.activation_brams
+    }
+
+    /// Does the whole catalog fit the device co-packed?
+    pub fn fits(&self) -> bool {
+        self.total_brams() <= self.device_brams
+    }
+
+    /// Would the catalog fit the device *without* packing?
+    pub fn fits_direct(&self) -> bool {
+        self.total_direct_brams() <= self.device_brams
+    }
+
+    /// Item ids belonging to `tenant`, gathered from the shared bins in
+    /// bin order — the per-tenant unpack. Sorted by id, so it compares
+    /// directly against the tenant's slice of `items`.
+    pub fn unpack_tenant(&self, tenant: usize) -> Vec<usize> {
+        let mut ids: Vec<usize> = self
+            .packing
+            .bins
+            .iter()
+            .flat_map(|b| b.items.iter().copied())
+            .filter(|&i| self.items[i].tenant == tenant)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Packed BRAM18 attributable to `tenant`: each shared bin's cost is
+    /// split pro-rata by payload bits (a bin hosting two tenants' columns
+    /// bills each for its share of the physical RAMs).
+    pub fn tenant_brams(&self, tenant: usize) -> f64 {
+        let mut total = 0.0;
+        for bin in &self.packing.bins {
+            let cost = packing::bin_brams(&self.items, &bin.items) as f64;
+            let bits: u64 = bin.items.iter().map(|&i| self.items[i].bits()).sum();
+            if bits == 0 {
+                continue;
+            }
+            let mine: u64 = bin
+                .items
+                .iter()
+                .filter(|&&i| self.items[i].tenant == tenant)
+                .map(|&i| self.items[i].bits())
+                .sum();
+            total += cost * mine as f64 / bits as f64;
+        }
+        total
+    }
+}
+
+/// The union item set for a catalog: every network's weight columns
+/// tenant-tagged and re-id'd globally (catalog order, then column order —
+/// deterministic, so packings are reproducible per seed).
+pub fn catalog_items(nets: &[&Network], n_slrs: usize) -> Vec<PackItem> {
+    let mut out: Vec<PackItem> = Vec::new();
+    for (tenant, net) in nets.iter().enumerate() {
+        let bufs = memory::weight_buffers(net, n_slrs);
+        for mut it in memory::all_columns(&bufs) {
+            it.id = out.len();
+            it.tenant = tenant;
+            out.push(it);
+        }
+    }
+    out
+}
+
+/// Co-pack a catalog onto one device. `generations == 0` selects the
+/// deterministic FFD baseline; otherwise the island GA runs with that
+/// budget and `seed` (Table III CNV hyper-parameters — the zoo catalogs
+/// are CNV/MLP-class).
+pub fn co_pack(
+    nets: &[&Network],
+    dev: &Device,
+    bin_height: usize,
+    generations: usize,
+    seed: u64,
+) -> CoPack {
+    assert!(!nets.is_empty(), "co_pack needs at least one network");
+    let items = catalog_items(nets, dev.slrs.len());
+    let c = Constraints::new(bin_height, !dev.is_monolithic());
+    let (packing, report) = if items.is_empty() {
+        (
+            Packing::default(),
+            PackReport {
+                engine: "empty",
+                brams: 0,
+                efficiency: 1.0,
+                max_height: 0,
+                elapsed: std::time::Duration::ZERO,
+            },
+        )
+    } else if generations == 0 {
+        packing::run_packer(&packing::ffd::Ffd::new(), &items, &c)
+    } else {
+        let mut ga = packing::ga::Ga::new(packing::ga::GaParams::cnv());
+        ga.params.generations = generations;
+        ga.params.seed = seed;
+        packing::run_packer(&ga, &items, &c)
+    };
+    let direct: u64 = nets
+        .iter()
+        .map(|n| memory::direct_brams(&memory::weight_buffers(n, dev.slrs.len())))
+        .sum();
+    let excluded: u64 = nets
+        .iter()
+        .flat_map(|n| n.layers())
+        .filter(|l| l.exclude_from_packing)
+        .map(|l| memory::WeightBuffer::from_layer(l, 0).brams())
+        .sum();
+    // §V porting convention: HLS's conservative FIFO allocation is
+    // re-sized (halved) when porting — keep the same rule the sharding
+    // evaluator applies, so fit verdicts agree across subsystems
+    let activation: u64 = nets.iter().map(|n| memory::activation_brams(n) / 2).sum();
+    let weight_brams = report.brams;
+    CoPack {
+        names: nets.iter().map(|n| n.name.clone()).collect(),
+        items,
+        packing,
+        report,
+        weight_brams,
+        excluded_brams: excluded,
+        activation_brams: activation,
+        direct_brams: direct,
+        device_brams: dev.bram18,
+        device: dev.name,
+    }
+}
+
+/// Devices a *dedicated* per-tenant deployment needs: each tenant packs
+/// alone (same engine budget) and occupies its own device(s) — no bin is
+/// ever shared across tenants. This is the baseline the co-packed fleet
+/// cost compares against.
+pub fn dedicated_devices(
+    nets: &[&Network],
+    dev: &Device,
+    bin_height: usize,
+    generations: usize,
+    seed: u64,
+) -> usize {
+    nets.iter()
+        .map(|n| {
+            let solo = co_pack(&[n], dev, bin_height, generations, seed);
+            let need = solo.total_brams();
+            let cap = dev.bram18.max(1);
+            crate::util::ceil_div(need, cap).max(1) as usize
+        })
+        .sum()
+}

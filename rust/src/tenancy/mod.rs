@@ -1,0 +1,34 @@
+//! Multi-tenant model zoo: several networks co-resident on one shared
+//! FCMP fleet, with per-tenant routing, SLO accounting and control
+//! isolation.
+//!
+//! The paper's memory-packing headroom argument becomes a *consolidation*
+//! argument here: FCMP frees enough OCM that a second tenant's network
+//! fits the same device, so a two-model catalog that would need two
+//! dedicated boards co-packs onto one. The module stacks four layers on
+//! that observation:
+//!
+//! 1. **Co-packing** ([`copack`]): one packing run over the union of
+//!    every tenant's tenant-tagged column slices, per-tenant unpack, and
+//!    the dedicated-device baseline the consolidation is judged against.
+//! 2. **Topology**: [`crate::coordinator::ChainGroup`] carries a tenant
+//!    id; the threaded router and [`crate::sim::FleetSim`] route each
+//!    tenant's traffic only to that tenant's groups.
+//! 3. **Admission**: requests carry a deadline from the tenant's SLO
+//!    budget; the shared [`crate::coordinator::dispatch::deadline_feasible`]
+//!    rule sheds infeasible work up front
+//!    ([`crate::coordinator::SubmitError::DeadlineInfeasible`]) instead
+//!    of letting it rot in a queue past its deadline.
+//! 4. **Control** ([`control`]): per-tenant signal windows, series and
+//!    burn-rate alerting — one tenant's flash crowd pages that tenant
+//!    alone.
+//!
+//! The `fcmp zoo` subcommand drives all four layers end to end on
+//! either backend; `benches/zoo_scaling.rs` measures the co-packed
+//! device savings and the goodput edge of deadline-aware shedding.
+
+pub mod control;
+pub mod copack;
+
+pub use control::{TenantAlert, TenantControl, TenantSlo};
+pub use copack::{catalog_items, co_pack, dedicated_devices, CoPack};

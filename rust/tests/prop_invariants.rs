@@ -34,6 +34,7 @@ fn to_items(set: &ItemSet) -> Vec<PackItem> {
             width_bits: w,
             depth: d,
             slr: i % 2,
+            tenant: 0,
         })
         .collect()
 }

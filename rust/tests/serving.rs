@@ -103,6 +103,9 @@ fn overload_sheds_with_queue_full_and_recovers() {
                 shed += 1;
             }
             Err(SubmitError::Timeout(_)) => panic!("plain submit never waits, never times out"),
+            Err(SubmitError::DeadlineInfeasible(_)) => {
+                panic!("no deadline was stamped, nothing can be infeasible")
+            }
             Err(SubmitError::Closed(_)) => panic!("open server must never report Closed"),
         }
     }

@@ -228,6 +228,9 @@ fn chain_backpressure_sheds_at_stage_zero_only() {
                 shed += 1;
             }
             Err(SubmitError::Timeout(_)) => panic!("plain submit never waits, never times out"),
+            Err(SubmitError::DeadlineInfeasible(_)) => {
+                panic!("no deadline was stamped, nothing can be infeasible")
+            }
             Err(SubmitError::Closed(_)) => panic!("open chain must shed, not close"),
         }
     }

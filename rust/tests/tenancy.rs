@@ -1,0 +1,408 @@
+//! Multi-tenant model zoo: co-packing invariants, the consolidation
+//! witness, and the tenant-aware serving path.
+//!
+//! Four suites:
+//!
+//! * **Co-packing properties**: over random two-tenant MLP catalogs the
+//!   shared packing stays structurally valid (height / SLR caps, every
+//!   item placed exactly once), per-tenant unpack returns exactly that
+//!   tenant's input items, pro-rata BRAM attribution sums to the packed
+//!   total, and the tenant tag never perturbs the engine — single-tenant
+//!   packings are bit-identical to the pre-tenancy packer.
+//! * **Consolidation witness**: CNV-W2A2 + SFC co-pack onto one Zynq
+//!   7020 where the unpacked catalog overflows it and a dedicated
+//!   per-tenant fleet needs two boards.
+//! * **Differential**: tagged replay of a merged two-tenant trace
+//!   through the thread-backed server and the DES must agree exactly on
+//!   per-tenant accepted/shed/deadline-shed and (round-robin) per-group
+//!   dispatch counts in a no-overload configuration.
+//! * **Admission**: both tenants meet their p99 SLO under a merged
+//!   diurnal trace, and under a per-tenant flash crowd the
+//!   deadline-aware arm yields strictly higher goodput than the FIFO
+//!   baseline while the healthy tenant's trajectory is untouched.
+
+use std::time::Duration;
+
+use fcmp::coordinator::{
+    diurnal, flash_crowd, poisson, BatcherConfig, ChainGroup, Deployment, FleetSummary,
+    MockBackend, Policy, Server, Trace,
+};
+use fcmp::device::{zynq_7012s, zynq_7020};
+use fcmp::memory::{all_columns, weight_buffers};
+use fcmp::nn::{cnv, mlp, sfc_w1a1, CnvVariant, Network};
+use fcmp::packing::{ffd::Ffd, run_packer, Constraints, Packing};
+use fcmp::sim::{FleetSim, SimBackend, SimConfig, SimReport};
+use fcmp::tenancy::{co_pack, dedicated_devices};
+use fcmp::util::prop::{check, Shrink};
+use fcmp::util::rng::Rng;
+
+// ---------------------------------------------------------------- packing
+
+/// A random two-tenant MLP catalog plus the bin-height constraint it is
+/// packed under: `(hidden, wbits, pe, simd)` per tenant.
+#[derive(Clone, Debug)]
+struct ZooCase {
+    specs: Vec<(u64, u64, u64, u64)>,
+    hb: usize,
+}
+
+impl Shrink for ZooCase {
+    fn shrink(&self) -> Vec<ZooCase> {
+        if self.specs.len() > 1 {
+            self.specs
+                .iter()
+                .map(|s| ZooCase { specs: vec![*s], hb: self.hb })
+                .collect()
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+fn gen_case(rng: &mut Rng) -> ZooCase {
+    let spec = |rng: &mut Rng| {
+        let hidden = [64u64, 128, 192, 256][rng.range(0, 4)];
+        let wbits = 1 + rng.below(2);
+        let pe = [4u64, 8, 16, 32][rng.range(0, 4)];
+        let simd = [4u64, 8, 16, 32][rng.range(0, 4)];
+        (hidden, wbits, pe, simd)
+    };
+    ZooCase { specs: vec![spec(rng), spec(rng)], hb: 2 + rng.range(0, 3) }
+}
+
+fn case_nets(case: &ZooCase) -> Vec<Network> {
+    case.specs
+        .iter()
+        .enumerate()
+        .map(|(i, &(h, w, pe, simd))| mlp(&format!("zoo-t{i}"), h, w, w, pe, simd))
+        .collect()
+}
+
+#[test]
+fn prop_copack_valid_unpack_exact_tag_invariant() {
+    check(42, 30, gen_case, |case| {
+        let nets = case_nets(case);
+        let refs: Vec<&Network> = nets.iter().collect();
+        let dev = zynq_7020();
+        let cp = co_pack(&refs, &dev, case.hb, 0, 11);
+        let c = Constraints::new(case.hb, false);
+        cp.packing.validate(&cp.items, &c).map_err(|e| format!("invalid packing: {e}"))?;
+
+        // never worse than placing every column alone (the device-cap
+        // soundness bound: packing can only reduce BRAM demand)
+        let single = Packing::singletons(cp.items.len()).total_brams(&cp.items);
+        if cp.weight_brams > single {
+            return Err(format!("packed {} > singleton {}", cp.weight_brams, single));
+        }
+
+        // per-tenant unpack returns exactly that tenant's input items,
+        // and the tenants partition the catalog
+        let mut all: Vec<usize> = Vec::new();
+        for t in 0..refs.len() {
+            let ids = cp.unpack_tenant(t);
+            let expect: Vec<usize> =
+                cp.items.iter().filter(|i| i.tenant == t).map(|i| i.id).collect();
+            if ids != expect {
+                return Err(format!("tenant {t} unpack {ids:?} != input {expect:?}"));
+            }
+            all.extend(ids);
+        }
+        all.sort_unstable();
+        if all != (0..cp.items.len()).collect::<Vec<_>>() {
+            return Err("tenant unpacks do not partition the item set".into());
+        }
+
+        // pro-rata attribution sums back to the packed total
+        let sum: f64 = (0..refs.len()).map(|t| cp.tenant_brams(t)).sum();
+        if (sum - cp.weight_brams as f64).abs() > 1e-6 {
+            return Err(format!("attribution {sum} != packed {}", cp.weight_brams));
+        }
+
+        // the tenant tag never perturbs the engine: retagging every item
+        // to tenant 0 repacks to bit-identical bins
+        let mut retag = cp.items.clone();
+        for it in &mut retag {
+            it.tenant = 0;
+        }
+        let (repacked, _) = run_packer(&Ffd::new(), &retag, &c);
+        if repacked != cp.packing {
+            return Err("retagged catalog packed differently".into());
+        }
+
+        // single-tenant co-pack is bit-identical to the pre-tenancy
+        // packer fed the network's raw column slices
+        let solo = co_pack(&[&nets[0]], &dev, case.hb, 0, 11);
+        let cols = all_columns(&weight_buffers(&nets[0], dev.slrs.len()));
+        if cols != solo.items {
+            return Err("single-tenant catalog items diverge from all_columns".into());
+        }
+        let (legacy, _) = run_packer(&Ffd::new(), &cols, &c);
+        if legacy != solo.packing {
+            return Err("single-tenant packing not bit-identical to pre-tenancy".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn co_packed_catalog_consolidates_two_boards_into_one() {
+    // the feasibility witness: CNV-W2A2 + SFC share one 7020 co-packed
+    // (~260/280 BRAM18), overflow it unpacked (~309), and a dedicated
+    // per-tenant fleet needs a board each — FFD already consolidates and
+    // the FFD-seeded GA can only improve on it
+    let cnv22 = cnv(CnvVariant::W2A2);
+    let sfc = sfc_w1a1();
+    let nets = [&cnv22, &sfc];
+    let dev = zynq_7020();
+    for generations in [0, 40] {
+        let cp = co_pack(&nets, &dev, 4, generations, 7);
+        assert!(
+            cp.fits(),
+            "co-packed catalog overflows ({} > {} BRAM18, generations {generations})",
+            cp.total_brams(),
+            cp.device_brams
+        );
+        assert!(
+            !cp.fits_direct(),
+            "unpacked catalog must overflow ({} <= {} BRAM18)",
+            cp.total_direct_brams(),
+            cp.device_brams
+        );
+        assert_eq!(
+            dedicated_devices(&nets, &dev, 4, generations, 7),
+            2,
+            "dedicated per-tenant packing must need one board per tenant"
+        );
+    }
+}
+
+#[test]
+fn second_tenant_overflows_the_paper_port_device() {
+    // CNV-W1A1 packed fits the 7012S (the paper's §V porting point) but
+    // the embedded part has no headroom for even the small MLP tenant —
+    // consolidation needs the 7020-class device the witness uses
+    let cnv11 = cnv(CnvVariant::W1A1);
+    let sfc = sfc_w1a1();
+    let dev = zynq_7012s();
+    let solo = co_pack(&[&cnv11], &dev, 4, 0, 7);
+    assert!(solo.fits(), "CNV-W1A1 packed must fit one 7012S ({})", solo.total_brams());
+    let pair = co_pack(&[&cnv11, &sfc], &dev, 4, 0, 7);
+    assert!(!pair.fits(), "7012S must lack headroom for a second tenant");
+}
+
+// ---------------------------------------------------------------- serving
+
+fn two_tenant_plan(chains_per_tenant: usize, queue: usize) -> Deployment {
+    let mut groups = Vec::new();
+    for t in 0..2 {
+        for _ in 0..chains_per_tenant {
+            groups.push(ChainGroup::new(1).for_tenant(t));
+        }
+    }
+    Deployment { groups, ..Deployment::default() }
+        .with_policy(Policy::RoundRobin)
+        .with_batcher(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) })
+        .with_queue_depth(queue)
+        .with_window(2)
+}
+
+fn merged_two_tenant(n: usize, rate: f64, seed: u64) -> (Trace, Vec<usize>) {
+    let t0 = poisson(n, rate, seed);
+    let t1 = poisson(n, rate, seed + 1);
+    Trace::merge(&[(0, &t0), (1, &t1)])
+}
+
+fn per_tenant_counts(s: &FleetSummary) -> Vec<(usize, usize, usize, usize)> {
+    s.per_tenant
+        .iter()
+        .map(|t| (t.submitted, t.shed, t.deadline_shed, t.completed))
+        .collect()
+}
+
+#[test]
+fn differential_two_tenant_routing() {
+    // 2 tenants x 2 groups at 300 µs/item: ~6.6k req/s capacity per
+    // tenant vs 800 offered, queue >= trace — admission outcomes are
+    // structurally determined, so server and DES must agree exactly
+    let n = 200;
+    let (trace, tags) = merged_two_tenant(n, 800.0, 21);
+    let total = trace.len();
+    let per_item = Duration::from_micros(300);
+    let budgets = vec![Some(Duration::from_secs(1)); 2];
+    let plan = two_tenant_plan(2, total);
+    let est = vec![per_item; 4];
+
+    let mut srv = Server::deploy(
+        move |_| MockBackend::with_service(Duration::ZERO, per_item),
+        plan.clone(),
+    );
+    srv.set_tenancy(budgets.clone(), est.clone());
+    let fm = srv.replay_tagged(&trace, &tags, 8, 77);
+    srv.shutdown();
+    let srv_sum = fm.summary();
+
+    let cfg = SimConfig { input_len: 8, seed: 77, ..SimConfig::default() };
+    let backend = SimBackend::Mock { base: Duration::ZERO, per_item };
+    let mut sim = FleetSim::uniform(plan, backend, cfg);
+    sim.set_tenancy(budgets, est);
+    let rep = sim.run_tagged(&trace, &tags);
+
+    assert_eq!(srv_sum.submitted, total, "server accepted");
+    assert_eq!(rep.submitted, total, "sim accepted");
+    assert_eq!(rep.completed, total, "sim completed");
+    assert_eq!((srv_sum.shed, srv_sum.deadline_shed), (0, 0), "server shed");
+    assert_eq!((rep.shed, rep.deadline_shed), (0, 0), "sim shed");
+
+    // per-tenant splits agree exactly, and each tenant saw its own n
+    let (sc, mc) = (per_tenant_counts(&srv_sum), per_tenant_counts(&rep.summary));
+    assert_eq!(sc, mc, "per-tenant counts diverged");
+    for (t, &(sub, shed, dshed, done)) in sc.iter().enumerate() {
+        assert_eq!((sub, shed, dshed, done), (n, 0, 0, n), "tenant {t}");
+    }
+
+    // round-robin inside each tenant's member list is a pure function of
+    // the tagged submit order: per-group dispatch counts match exactly
+    let per = |s: &FleetSummary| -> Vec<usize> {
+        s.per_group.iter().map(|g| g.as_ref().map_or(0, |x| x.requests)).collect()
+    };
+    assert_eq!(per(&srv_sum), per(&rep.summary), "per-group dispatch counts");
+}
+
+#[test]
+fn both_tenants_meet_slo_under_merged_diurnal() {
+    // each tenant rides its own diurnal trace on its own group: 5k req/s
+    // capacity vs <= 600 offered, so both must hold p99 inside budget
+    let t0 = diurnal(400, 300.0, 600.0, 2.0, 31);
+    let t1 = diurnal(400, 200.0, 500.0, 2.0, 32);
+    let (trace, tags) = Trace::merge(&[(0, &t0), (1, &t1)]);
+    let per_item = Duration::from_micros(200);
+    let slos_ms = [250.0, 100.0];
+    let budgets: Vec<Option<Duration>> =
+        slos_ms.iter().map(|&ms| Some(Duration::from_secs_f64(ms * 1e-3))).collect();
+    let plan = two_tenant_plan(1, 64);
+
+    let cfg = SimConfig { input_len: 8, seed: 5, ..SimConfig::default() };
+    let backend = SimBackend::Mock { base: Duration::ZERO, per_item };
+    let mut sim = FleetSim::uniform(plan, backend, cfg);
+    sim.set_tenancy(budgets, vec![per_item; 2]);
+    let rep = sim.run_tagged(&trace, &tags);
+
+    assert_eq!(rep.summary.per_tenant.len(), 2);
+    for (t, ts) in rep.summary.per_tenant.iter().enumerate() {
+        assert_eq!(ts.submitted, 400, "tenant {t} accepted everything");
+        assert_eq!((ts.shed, ts.deadline_shed), (0, 0), "tenant {t} shed nothing");
+        assert_eq!(ts.goodput, ts.completed, "tenant {t} completions all in budget");
+        assert_eq!(ts.slo_ms, Some(slos_ms[t]), "tenant {t} SLO plumbed");
+        let lat = ts.latency.as_ref().expect("tenant latency summary");
+        assert!(
+            lat.latency_ms.p99 <= slos_ms[t],
+            "tenant {t} p99 {:.2} ms over its {:.0} ms SLO",
+            lat.latency_ms.p99,
+            slos_ms[t]
+        );
+    }
+}
+
+/// One flash-crowd zoo arm on the DES: tenant 0 bursts to 8x its base
+/// rate against a group that serves ~500 req/s; `est_zero` selects the
+/// FIFO baseline (only already-expired requests shed).
+fn flash_arm(est_zero: bool) -> SimReport {
+    let t0 = flash_crowd(600, 300.0, 8.0, 0.2, 0.5, 41);
+    let t1 = poisson(300, 300.0, 42);
+    let (trace, tags) = Trace::merge(&[(0, &t0), (1, &t1)]);
+    let per_item = Duration::from_millis(2);
+    let budgets = vec![Some(Duration::from_millis(40)), Some(Duration::from_millis(100))];
+    let groups = vec![ChainGroup::new(1).for_tenant(0), ChainGroup::new(1).for_tenant(1)];
+    let plan = Deployment { groups, ..Deployment::default() }
+        .with_policy(Policy::RoundRobin)
+        .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::ZERO })
+        .with_queue_depth(32)
+        .with_window(2);
+    let est = if est_zero { vec![Duration::ZERO; 2] } else { vec![per_item; 2] };
+
+    let cfg = SimConfig { input_len: 8, seed: 9, ..SimConfig::default() };
+    let backend = SimBackend::Mock { base: Duration::ZERO, per_item };
+    let mut sim = FleetSim::uniform(plan, backend, cfg);
+    sim.set_tenancy(budgets, est);
+    sim.run_tagged(&trace, &tags)
+}
+
+#[test]
+fn deadline_admission_beats_fifo_under_flash_crowd() {
+    let fifo = flash_arm(true);
+    let dl = flash_arm(false);
+
+    // FIFO keeps everything a queue slot can hold — no deadline sheds —
+    // and lets queued work rot past its budget; the deadline arm sheds
+    // the infeasible tail up front and keeps accepted work inside it
+    let (f0, d0) = (&fifo.summary.per_tenant[0], &dl.summary.per_tenant[0]);
+    assert_eq!(fifo.deadline_shed, 0, "FIFO arm must not deadline-shed");
+    assert!(d0.deadline_shed > 0, "deadline arm must shed infeasible work");
+    assert!(
+        d0.goodput > f0.goodput,
+        "deadline arm goodput {} must beat FIFO {} for the bursting tenant",
+        d0.goodput,
+        f0.goodput
+    );
+    // deadline sheds are distinguishable from queue-full sheds
+    assert_eq!(
+        dl.summary.deadline_shed,
+        dl.summary.per_tenant.iter().map(|t| t.deadline_shed).sum::<usize>(),
+        "fleet deadline-shed must equal the per-tenant sum"
+    );
+
+    // the healthy tenant's trajectory is bit-identical across arms: its
+    // group, budget headroom and arrivals never interact with tenant 0
+    let (f1, d1) = (&fifo.summary.per_tenant[1], &dl.summary.per_tenant[1]);
+    assert_eq!(
+        (f1.submitted, f1.shed, f1.deadline_shed, f1.completed, f1.goodput),
+        (d1.submitted, d1.shed, d1.deadline_shed, d1.completed, d1.goodput),
+        "tenant 1 must be isolated from tenant 0's flash crowd"
+    );
+    assert_eq!(f1.shed + f1.deadline_shed, 0, "tenant 1 never sheds");
+}
+
+#[test]
+fn server_deadline_sheds_attribute_to_the_bursting_tenant() {
+    // the threaded counterpart of the flash-crowd arms: real clocks are
+    // too noisy for exact goodput equality, but the admission *mechanism*
+    // must behave identically — the deadline arm sheds infeasible work
+    // for the bursting tenant only, the FIFO arm never deadline-sheds
+    let t0 = flash_crowd(600, 300.0, 8.0, 0.2, 0.5, 41);
+    let t1 = poisson(300, 300.0, 42);
+    let (trace, tags) = Trace::merge(&[(0, &t0), (1, &t1)]);
+    let per_item = Duration::from_millis(2);
+    let budgets = vec![Some(Duration::from_millis(40)), Some(Duration::from_millis(100))];
+    let groups = vec![ChainGroup::new(1).for_tenant(0), ChainGroup::new(1).for_tenant(1)];
+    let plan = Deployment { groups, ..Deployment::default() }
+        .with_policy(Policy::RoundRobin)
+        .with_batcher(BatcherConfig { max_batch: 1, max_wait: Duration::ZERO })
+        .with_queue_depth(32)
+        .with_window(2);
+
+    let run = |est: Vec<Duration>| -> FleetSummary {
+        let mut srv = Server::deploy(
+            move |_| MockBackend::with_service(Duration::ZERO, per_item),
+            plan.clone(),
+        );
+        srv.set_tenancy(budgets.clone(), est);
+        let fm = srv.replay_tagged(&trace, &tags, 8, 77);
+        srv.shutdown();
+        fm.summary()
+    };
+
+    let fifo = run(vec![Duration::ZERO; 2]);
+    let dl = run(vec![per_item; 2]);
+
+    assert_eq!(fifo.deadline_shed, 0, "server FIFO arm must not deadline-shed");
+    assert!(
+        dl.per_tenant[0].deadline_shed > 0,
+        "server deadline arm must shed the bursting tenant's infeasible work"
+    );
+    assert_eq!(dl.per_tenant[1].deadline_shed, 0, "the healthy tenant must never deadline-shed");
+    assert_eq!(
+        dl.deadline_shed,
+        dl.per_tenant.iter().map(|t| t.deadline_shed).sum::<usize>(),
+        "fleet deadline-shed must equal the per-tenant sum"
+    );
+}
